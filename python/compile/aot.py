@@ -1,0 +1,306 @@
+"""AOT pipeline: lower every L2/L1 entry point to HLO text + manifest.
+
+Usage (from the `python/` directory, or via `make artifacts`):
+
+    python -m compile.aot --out-dir ../artifacts [--models fc300,lenet,...]
+                          [--transformer tiny] [--force]
+
+Emits, per image model M:
+    <M>_grad_b<B>.hlo.txt      (flat, x[B,feat], y[B]i32) -> (loss, grad)
+    <M>_grad_dq_b<B>.hlo.txt   + fused L1 Pallas DQSG kernel -> (loss, q, kappa)
+    <M>_eval_b<B>.hlo.txt      (flat, x, y) -> (loss, n_correct)
+    <M>_init.bin               initial flat params, f32 little-endian
+plus the transformer (grad/eval/init), standalone kernel modules
+(quantize_dq_*, dequant_avg_*, nested_enc_*, nested_dec_*), golden test
+vectors for the Rust unit tests (golden.json) and `manifest.json` describing
+every artifact (shapes, dtypes, model metadata).
+
+HLO *text* is the interchange format: the `xla` crate links xla_extension
+0.5.1 which rejects jax>=0.5 protos (64-bit instruction ids); the text parser
+reassigns ids.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import dithered as KD
+from .kernels import nested as KN
+from .kernels import ref
+
+# Per-worker gradient micro-batch (paper: total batch 256 split across P
+# workers; workers accumulate ceil(256/P/B_TRAIN) chunks of this size).
+B_TRAIN = 32
+B_EVAL = 64
+
+# Default quantizer config baked into the fused grad_dq artifact (Table 1
+# uses ternary, M=1 => Delta=1).
+DQ_DELTA = 1.0
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32 if dtype == "i32" else jnp.float32)
+
+
+class Builder:
+    def __init__(self, out_dir: str, force: bool):
+        self.out_dir = out_dir
+        self.force = force
+        self.manifest = {"artifacts": {}, "models": {}, "config": {
+            "b_train": B_TRAIN, "b_eval": B_EVAL, "dq_delta": DQ_DELTA,
+        }}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.out_dir, name)
+
+    def lower(self, key, fn, args, outputs):
+        """Lower fn at example args to <key>.hlo.txt and record in manifest."""
+        fname = f"{key}.hlo.txt"
+        path = self._path(fname)
+        entry = {
+            "file": fname,
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+            "outputs": outputs,
+        }
+        self.manifest["artifacts"][key] = entry
+        if os.path.exists(path) and not self.force:
+            print(f"  [skip] {fname}")
+            return
+        print(f"  [lower] {fname} ...", flush=True)
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"    wrote {len(text)//1024} KiB")
+
+    def write_bin(self, key: str, vec: np.ndarray):
+        fname = f"{key}.bin"
+        path = self._path(fname)
+        self.manifest["artifacts"][key] = {
+            "file": fname,
+            "dtype": "float32",
+            "len": int(vec.size),
+        }
+        if os.path.exists(path) and not self.force:
+            print(f"  [skip] {fname}")
+            return
+        vec.astype("<f4").tofile(path)
+        print(f"  [init] {fname} ({vec.size} f32)")
+
+
+def build_image_model(b: Builder, name: str):
+    model = M.MODELS[name]
+    n = model.spec.n_params
+    feat = model.input_shape[0]
+    print(f"model {name}: n_params={n}")
+    b.manifest["models"][name] = {
+        "n_params": n,
+        "feature_dim": feat,
+        "n_classes": model.n_classes,
+        "params": [
+            {"name": pname, "shape": list(shape)}
+            for pname, shape in model.spec.entries
+        ],
+    }
+
+    train = M.make_train_step(model)
+    b.lower(
+        f"{name}_grad_b{B_TRAIN}",
+        train,
+        (spec((n,)), spec((B_TRAIN, feat)), spec((B_TRAIN,), "i32")),
+        ["loss", "grad"],
+    )
+    train_dq = M.make_train_step_dq(model, DQ_DELTA)
+    b.lower(
+        f"{name}_grad_dq_b{B_TRAIN}",
+        train_dq,
+        (
+            spec((n,)),
+            spec((B_TRAIN, feat)),
+            spec((B_TRAIN,), "i32"),
+            spec((n,)),
+        ),
+        ["loss", "q", "kappa"],
+    )
+    evalf = M.make_eval_step(model)
+    b.lower(
+        f"{name}_eval_b{B_EVAL}",
+        evalf,
+        (spec((n,)), spec((B_EVAL, feat)), spec((B_EVAL,), "i32")),
+        ["loss", "n_correct"],
+    )
+    init = model.spec.init(jax.random.PRNGKey(hash(name) % (2**31)))
+    b.write_bin(f"{name}_init", np.asarray(init))
+
+
+def build_transformer(b: Builder, preset: str):
+    cfg = M.TRANSFORMER_PRESETS[preset]
+    tspec, train, evalf = M.make_transformer_steps(cfg)
+    n = tspec.n_params
+    print(f"transformer[{preset}]: n_params={n}")
+    b.manifest["models"][f"transformer_{preset}"] = {
+        "n_params": n,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layer": cfg.n_layer,
+        "n_head": cfg.n_head,
+        "seq_len": cfg.seq_len,
+        "params": [
+            {"name": pname, "shape": list(shape)} for pname, shape in tspec.entries
+        ],
+    }
+    bt = 8  # LM micro-batch
+    b.manifest["config"]["transformer_batch"] = bt
+    b.lower(
+        f"transformer_{preset}_grad_b{bt}",
+        train,
+        (spec((n,)), spec((bt, cfg.seq_len), "i32")),
+        ["loss", "grad"],
+    )
+    b.lower(
+        f"transformer_{preset}_eval_b{bt}",
+        evalf,
+        (spec((n,)), spec((bt, cfg.seq_len), "i32")),
+        ["loss"],
+    )
+    init = tspec.init(jax.random.PRNGKey(7))
+    b.write_bin(f"transformer_{preset}_init", np.asarray(init))
+
+
+def build_standalone_kernels(b: Builder):
+    """Standalone L1 kernel modules for runtime dispatch (perf comparison)."""
+    n = M.MODELS["fc300"].spec.n_params
+    delta = DQ_DELTA
+
+    b.lower(
+        f"quantize_dq_{n}",
+        lambda g, u: KD.dq_quantize(g, u, delta),
+        (spec((n,)), spec((n,))),
+        ["q", "kappa"],
+    )
+    for p in (4, 8):
+        b.lower(
+            f"dequant_avg_{n}_p{p}",
+            lambda qs, us, ks: (KD.dq_dequant_avg(qs, us, ks, delta),),
+            (spec((p, n), "i32"), spec((p, n)), spec((p,))),
+            ["g_avg"],
+        )
+    # nested pair at the paper's Fig-6 operating point
+    d1, d2, alpha = 1.0 / 3.0, 1.0, 1.0
+    b.lower(
+        f"nested_enc_{n}",
+        lambda x, u: (KN.nested_encode(x, u, alpha, d1, d2),),
+        (spec((n,)), spec((n,))),
+        ["s"],
+    )
+    b.lower(
+        f"nested_dec_{n}",
+        lambda s, u, y: (KN.nested_decode(s, u, y, alpha, d1, d2),),
+        (spec((n,), "i32"), spec((n,)), spec((n,))),
+        ["x_hat"],
+    )
+
+
+def build_golden(b: Builder):
+    """Small golden vectors pinning rust implementations to the jnp oracle."""
+    rng = np.random.RandomState(1234)
+    n = 32
+    g = rng.randn(n).astype(np.float32) * 0.3
+    gj = jnp.asarray(g)
+
+    golden = {"n": n, "g": g.tolist()}
+
+    for delta in (1.0, 0.5, 0.25):
+        u = (rng.rand(n).astype(np.float32) - 0.5) * delta
+        q, kappa = ref.dithered_quantize(gj, jnp.asarray(u), delta)
+        deq = ref.dithered_dequantize(q, jnp.asarray(u), kappa, delta)
+        golden[f"dq_delta_{delta}"] = {
+            "u": u.tolist(),
+            "q": np.asarray(q).tolist(),
+            "kappa": float(kappa),
+            "dequant": np.asarray(deq).tolist(),
+        }
+
+    d1, d2, alpha = 1.0 / 3.0, 1.0, 1.0
+    u = (rng.rand(n).astype(np.float32) - 0.5) * d1
+    z = rng.randn(n).astype(np.float32) * 0.05
+    y = g + z  # side information
+    s = ref.nested_encode(gj, jnp.asarray(u), alpha, d1, d2)
+    xh = ref.nested_decode(s, jnp.asarray(u), jnp.asarray(y), alpha, d1, d2)
+    golden["nested"] = {
+        "d1": d1,
+        "d2": d2,
+        "alpha": alpha,
+        "u": u.tolist(),
+        "y": y.tolist(),
+        "s": np.asarray(s).tolist(),
+        "x_hat": np.asarray(xh).tolist(),
+    }
+
+    res = np.zeros(n, np.float32)
+    bits, mp, mn, new_res = ref.onebit_quantize(gj, jnp.asarray(res))
+    golden["onebit"] = {
+        "bits": np.asarray(bits).tolist(),
+        "mean_pos": float(mp),
+        "mean_neg": float(mn),
+        "residual": np.asarray(new_res).tolist(),
+    }
+
+    path = b._path("golden.json")
+    with open(path, "w") as f:
+        json.dump(golden, f)
+    b.manifest["artifacts"]["golden"] = {"file": "golden.json"}
+    print("  [golden] golden.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="fc300,lenet,cifarnet",
+        help="comma list of image models to lower",
+    )
+    ap.add_argument(
+        "--transformer",
+        default=os.environ.get("NDQ_TRANSFORMER", "tiny"),
+        help="transformer preset to lower (tiny/small/100m, or 'none')",
+    )
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    args = ap.parse_args()
+
+    b = Builder(args.out_dir, args.force)
+    for name in [m for m in args.models.split(",") if m]:
+        build_image_model(b, name)
+    if args.transformer != "none":
+        build_transformer(b, args.transformer)
+    build_standalone_kernels(b)
+    build_golden(b)
+
+    with open(b._path("manifest.json"), "w") as f:
+        json.dump(b.manifest, f, indent=1)
+    print(f"manifest: {len(b.manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""L1 Pallas kernels: dithered quantization (DQSG) hot path.
+
+The paper's per-iteration compute hot-spot outside the model itself is the
+quantize -> transmit -> dequantize-average pipeline (Alg. 1).  These kernels
+implement it as single-pass, block-tiled Pallas kernels:
+
+  * ``absmax``            kappa = ||g||_inf            (blockwise max-reduce)
+  * ``dq_quantize``       q = round((g/kappa + u)/Delta)  (fused elementwise)
+  * ``dq_dequant_avg``    (1/P) sum_p kappa_p (Delta q_p - u_p)  (fused)
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on TPU these are
+VPU/memory-bound passes, so the BlockSpec tiles the flat gradient into
+VMEM-resident blocks of ``BLOCK`` lanes (a multiple of the 8x128 vreg tile);
+each element is read once from HBM and written once (f32 in, i32 out for the
+quantizer), which is the bandwidth roofline.  ``interpret=True`` everywhere:
+the CPU PJRT plugin cannot execute Mosaic custom-calls, and interpret mode
+lowers to plain HLO so the Rust runtime can run the very same module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 4096 f32 lanes = 16 KiB per input block; with in+dither+out resident this
+# is ~48 KiB of VMEM per grid step — far under the ~16 MiB VMEM budget, and a
+# multiple of the 8x128 TPU vector tile (4096 = 32 * 128).
+BLOCK = 4096
+
+_INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def _pad_to_block(x, block=BLOCK):
+    """Pad a flat array with zeros to a multiple of ``block``."""
+    n = x.shape[0]
+    rem = (-n) % block
+    if rem:
+        x = jnp.concatenate([x, jnp.zeros((rem,), x.dtype)])
+    return x
+
+
+# --------------------------------------------------------------------------
+# kappa = ||g||_inf : blockwise max-reduce kernel + tiny host-side fold.
+# --------------------------------------------------------------------------
+
+
+def _absmax_kernel(g_ref, o_ref):
+    o_ref[0] = jnp.max(jnp.abs(g_ref[...]))
+
+
+def absmax(g, block=BLOCK):
+    """``kappa = max_i |g_i|`` over a flat f32 array (guarded against 0)."""
+    gp = _pad_to_block(g.reshape(-1), block)
+    grid = gp.shape[0] // block
+    partial_max = pl.pallas_call(
+        _absmax_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid,), gp.dtype),
+        interpret=_INTERPRET,
+    )(gp)
+    k = jnp.max(partial_max)
+    return jnp.where(k > 0, k, jnp.float32(1.0))
+
+
+# --------------------------------------------------------------------------
+# DQSG encode: q = round((g/kappa + u) / Delta)   (paper eq. (2))
+# --------------------------------------------------------------------------
+
+
+def _dq_quantize_kernel(g_ref, u_ref, kappa_ref, o_ref, *, delta, m):
+    # Fused scale + dither + round + overload clamp in one VMEM pass.
+    inv_kappa = 1.0 / kappa_ref[0]
+    t = (g_ref[...] * inv_kappa + u_ref[...]) * (1.0 / delta)
+    # ties-away-from-zero to match ref.round_nearest / rust f32::round
+    q = jnp.trunc(t + jnp.where(t >= 0, 0.5, -0.5))
+    o_ref[...] = jnp.clip(q, -m, m).astype(jnp.int32)
+
+
+def dq_quantize(g, u, delta, block=BLOCK):
+    """DQSG encoder over a flat gradient.  Returns (q: i32[n], kappa: f32[]).
+
+    ``u`` must be iid U[-Delta/2, Delta/2] generated from the shared
+    worker/server seed (the server regenerates it to decode — Alg. 1).
+    """
+    g = g.reshape(-1)
+    n = g.shape[0]
+    m = max(int(round(1.0 / float(delta))), 1)
+    kappa = absmax(g, block)
+    gp = _pad_to_block(g, block)
+    up = _pad_to_block(u.reshape(-1), block)
+    grid = gp.shape[0] // block
+    q = pl.pallas_call(
+        functools.partial(_dq_quantize_kernel, delta=float(delta), m=m),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),  # kappa broadcast to all blocks
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((gp.shape[0],), jnp.int32),
+        interpret=_INTERPRET,
+    )(gp, up, kappa.reshape(1))
+    return q[:n], kappa
+
+
+# --------------------------------------------------------------------------
+# Server side: fused dequantize + average over P workers (Alg. 1).
+# --------------------------------------------------------------------------
+
+
+def _dequant_avg_kernel(q_ref, u_ref, kappa_ref, o_ref, *, delta, p):
+    # One block of all P workers' rows; accumulate the mean in f32.
+    g = kappa_ref[...].reshape(p, 1) * (
+        delta * q_ref[...].astype(jnp.float32) - u_ref[...]
+    )
+    o_ref[...] = jnp.sum(g, axis=0) * (1.0 / p)
+
+
+def dq_dequant_avg(qs, us, kappas, delta, block=BLOCK):
+    """``(1/P) sum_p kappa_p (Delta q_p - u_p)`` fused in one pass.
+
+    Args:
+      qs:     [P, n] i32  quantization indices from the P workers.
+      us:     [P, n] f32  regenerated dithers.
+      kappas: [P]    f32  scales.
+    Returns  [n]    f32  averaged dequantized gradient.
+    """
+    p, n = qs.shape
+    qp = jnp.concatenate(
+        [qs, jnp.zeros((p, (-n) % block), qs.dtype)], axis=1
+    ) if n % block else qs
+    up = jnp.concatenate(
+        [us, jnp.zeros((p, (-n) % block), us.dtype)], axis=1
+    ) if n % block else us
+    grid = qp.shape[1] // block
+    out = pl.pallas_call(
+        functools.partial(_dequant_avg_kernel, delta=float(delta), p=p),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((p, block), lambda i: (0, i)),
+            pl.BlockSpec((p, block), lambda i: (0, i)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[1],), jnp.float32),
+        interpret=_INTERPRET,
+    )(qp, up, kappas)
+    return out[:n]

@@ -1,0 +1,90 @@
+"""L1 Pallas kernels: nested dithered quantization (NDQSG, paper §3.2).
+
+Encode (eq. 6):  t = alpha*x + u;  s = Q1(t) - Q2(t); transmit s/Delta1 (int)
+Decode (eq. 7):  r = s - u - alpha*y;  x^ = y + alpha*(r - Q2(r))
+
+(Q1, Q2) nested <=> Delta2 = k * Delta1, integer k > 1 (§2.2); the symbol
+s/Delta1 then lies in {-(k-1)/2..(k-1)/2} for odd k (k/2 boundary for even),
+i.e. log2(k) bits per coordinate instead of log2(2/Delta1).
+
+Same tiling / interpret-mode story as dithered.py (see its module doc).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dithered import BLOCK, _INTERPRET, _pad_to_block
+
+
+def _round(t):
+    # ties away from zero (matches ref.round_nearest / rust f32::round)
+    return jnp.trunc(t + jnp.where(t >= 0, 0.5, -0.5))
+
+
+def _uq(t, delta):
+    return delta * _round(t / delta)
+
+
+def _nested_encode_kernel(x_ref, u_ref, o_ref, *, alpha, d1, d2):
+    t = alpha * x_ref[...] + u_ref[...]
+    s = _uq(t, d1) - _uq(t, d2)
+    o_ref[...] = _round(s / d1).astype(jnp.int32)
+
+
+def nested_encode(x, u, alpha, d1, d2, block=BLOCK):
+    """NDQSG encoder over a flat tensor. Returns i32 symbols s/Delta1."""
+    x = x.reshape(-1)
+    n = x.shape[0]
+    xp = _pad_to_block(x, block)
+    up = _pad_to_block(u.reshape(-1), block)
+    grid = xp.shape[0] // block
+    s = pl.pallas_call(
+        functools.partial(
+            _nested_encode_kernel, alpha=float(alpha), d1=float(d1), d2=float(d2)
+        ),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.int32),
+        interpret=_INTERPRET,
+    )(xp, up)
+    return s[:n]
+
+
+def _nested_decode_kernel(s_ref, u_ref, y_ref, o_ref, *, alpha, d1, d2):
+    s = d1 * s_ref[...].astype(jnp.float32)
+    r = s - u_ref[...] - alpha * y_ref[...]
+    o_ref[...] = y_ref[...] + alpha * (r - _uq(r, d2))
+
+
+def nested_decode(s_idx, u, y, alpha, d1, d2, block=BLOCK):
+    """NDQSG decoder with side information y (server's running average)."""
+    s_idx = s_idx.reshape(-1)
+    n = s_idx.shape[0]
+    sp = _pad_to_block(s_idx, block)
+    up = _pad_to_block(u.reshape(-1), block)
+    yp = _pad_to_block(y.reshape(-1), block)
+    grid = sp.shape[0] // block
+    out = pl.pallas_call(
+        functools.partial(
+            _nested_decode_kernel, alpha=float(alpha), d1=float(d1), d2=float(d2)
+        ),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((sp.shape[0],), jnp.float32),
+        interpret=_INTERPRET,
+    )(sp, up, yp)
+    return out[:n]

@@ -1,0 +1,181 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+Implements the paper's quantizers exactly as defined in the text, with no
+Pallas involvement.  Every Pallas kernel in this package is validated against
+these functions by ``python/tests`` (hypothesis sweeps shapes / parameters and
+asserts allclose).  The Rust L3 implementations are in turn pinned against
+numbers produced by these functions (golden vectors exported by aot.py).
+
+Conventions (paper §2.1, §3.1, §3.2):
+  * ``Q(v) = Delta * round(v / Delta)``   -- uniform mid-tread quantizer
+  * DQSG:   ``q = round(g/kappa/Delta + u/Delta)``, ``kappa = ||g||_inf``,
+            reconstruction ``g~ = kappa * (Delta*q - u)``
+  * nested: ``s = Q1(alpha*x + u) - Q2(alpha*x + u)``,
+            decode ``r = s - u - alpha*y;  x^ = y + alpha*(r - Q2(r))``
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "uniform_quantize",
+    "round_nearest",
+    "dithered_quantize",
+    "dithered_dequantize",
+    "half_dithered_quantize",
+    "stochastic_quantize",
+    "terngrad_quantize",
+    "onebit_quantize",
+    "nested_encode",
+    "nested_decode",
+    "dequantize_average",
+]
+
+
+def round_nearest(x):
+    """Round to nearest integer, ties away from zero (matches rust .round()).
+
+    jnp.round is banker's rounding (ties-to-even); the paper's |x] only needs
+    *a* consistent nearest-integer rule, but the rust hot path uses
+    f32::round (ties away from zero), so the oracle pins that rule to keep
+    all three layers bit-identical on ties.
+    """
+    return jnp.trunc(x + jnp.where(x >= 0, 0.5, -0.5))
+
+
+def uniform_quantize(x, delta):
+    """M-level uniform quantizer Q(v) = Delta * round(v/Delta) (paper §2.1)."""
+    return delta * round_nearest(x / delta)
+
+
+def _kappa(g):
+    """Scale factor kappa = ||g||_inf, guarded so all-zero tensors stay finite."""
+    k = jnp.max(jnp.abs(g))
+    return jnp.where(k > 0, k, jnp.float32(1.0))
+
+
+def levels_for(delta) -> int:
+    """M such that the (2M+1)-level quantizer covers [-1,1] at step delta."""
+    return max(int(round(1.0 / float(delta))), 1)
+
+
+def dithered_quantize(g, u, delta):
+    """DQSG encoder (paper eq. (2) / Alg. 1).
+
+    Args:
+      g:     stochastic gradient, any shape, f32.
+      u:     dither, same shape as g, iid U[-delta/2, delta/2] (shared seed).
+      delta: quantization step size (Delta = 1/M gives 2M+1 levels).
+
+    Returns:
+      (q, kappa): integer bin indices (i32, clamped to [-M, M]) and the scale.
+      Transmitting (q, kappa) is sufficient: the server regenerates u.
+
+    The clamp is the Thm.-1 "no overload" guard: |g/kappa| <= 1 by
+    construction, so |t| <= 1 + delta/2 and the only clamped events are the
+    measure-zero ties at the outermost bin edge (|u| = delta/2 exactly at the
+    max-magnitude coordinate); clamping keeps the wire alphabet at 2M+1
+    symbols, which the base-(2M+1) packer in rust relies on.
+    """
+    m = levels_for(delta)
+    kappa = _kappa(g)
+    t = g / kappa + u
+    q = jnp.clip(round_nearest(t / delta), -m, m).astype(jnp.int32)
+    return q, kappa
+
+
+def dithered_dequantize(q, u, kappa, delta):
+    """DQSG decoder: g~ = kappa * (Delta * q - u) (Alg. 1, server side)."""
+    return kappa * (delta * q.astype(jnp.float32) - u)
+
+
+def half_dithered_quantize(x, u, delta):
+    """Half-dithered quantizer: x~_h = Q(x + u); dither NOT subtracted (§2.1)."""
+    return uniform_quantize(x + u, delta)
+
+
+def stochastic_quantize(x, key, levels_m):
+    """QSGD stochastic quantizer, eq. (1), for |x_i| <= 1 after scaling.
+
+    Returns (q, kappa) with q in [-M, M] (i32), reconstruction kappa * q / M.
+    Implemented via the Lemma-2 equivalence: draw u ~ U[-1/2M, 1/2M] and
+    half-dither quantize — provably identical in distribution to eq. (1).
+    """
+    kappa = _kappa(x)
+    delta = 1.0 / levels_m
+    u = jax.random.uniform(
+        key, x.shape, minval=-delta / 2.0, maxval=delta / 2.0, dtype=x.dtype
+    )
+    q = jnp.clip(
+        round_nearest((x / kappa + u) / delta), -levels_m, levels_m
+    ).astype(jnp.int32)
+    return q, kappa
+
+
+def terngrad_quantize(x, key, clip_sigmas=2.5):
+    """TernGrad: probabilistic ternarization with gradient clipping [6].
+
+    s = max|clip(x)|; P(q_i = sign(x_i)) = |x_i|/s; reconstruction s*q.
+    Returns (q in {-1,0,1} i32, s).
+    """
+    std = jnp.std(x) + 1e-12
+    c = clip_sigmas * std
+    xc = jnp.clip(x, -c, c)
+    s = _kappa(xc)
+    p = jnp.abs(xc) / s
+    r = jax.random.uniform(key, x.shape, dtype=x.dtype)
+    q = (jnp.sign(xc) * (r < p)).astype(jnp.int32)
+    return q, s
+
+
+def onebit_quantize(x, residual):
+    """1-bit SGD with error feedback [1].
+
+    Quantizes v = x + residual to sign bits with per-tensor +/- means;
+    returns (bits in {0,1} i32, mean_pos, mean_neg, new_residual).
+    """
+    v = x + residual
+    pos = v >= 0
+    npos = jnp.maximum(jnp.sum(pos), 1)
+    nneg = jnp.maximum(jnp.sum(~pos), 1)
+    mean_pos = jnp.sum(jnp.where(pos, v, 0.0)) / npos
+    mean_neg = jnp.sum(jnp.where(~pos, v, 0.0)) / nneg
+    recon = jnp.where(pos, mean_pos, mean_neg)
+    return pos.astype(jnp.int32), mean_pos, mean_neg, v - recon
+
+
+def nested_encode(x, u, alpha, d1, d2):
+    """NDQSG encoder, eq. (6): s = Q1(t) - Q2(t), t = alpha*x + u.
+
+    (Q1, Q2) are nested iff d2 = k*d1 for integer k > 1.  The transmitted
+    symbol is s/d1, an integer with |s/d1| <= k/2 — log2(k) bits/coordinate.
+    Returns integer symbols (i32).
+    """
+    t = alpha * x + u
+    s = uniform_quantize(t, d1) - uniform_quantize(t, d2)
+    return round_nearest(s / d1).astype(jnp.int32)
+
+
+def nested_decode(s_idx, u, y, alpha, d1, d2):
+    """NDQSG decoder, eq. (7), using side information y (= running avg SG).
+
+    r = s - u - alpha*y;  x^ = y + alpha * (r - Q2(r)).
+    """
+    s = d1 * s_idx.astype(jnp.float32)
+    r = s - u - alpha * y
+    return y + alpha * (r - uniform_quantize(r, d2))
+
+
+def dequantize_average(qs, us, kappas, delta):
+    """Server-side fused DQSG dequantize + average over P workers (Alg. 1).
+
+    Args:
+      qs:     [P, n] i32 indices.
+      us:     [P, n] f32 dithers (regenerated from per-worker seeds).
+      kappas: [P] f32 scales.
+    Returns [n] f32: (1/P) * sum_p kappa_p (Delta q_p - u_p).
+    """
+    g = kappas[:, None] * (delta * qs.astype(jnp.float32) - us)
+    return jnp.mean(g, axis=0)

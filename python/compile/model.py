@@ -1,0 +1,379 @@
+"""L2: the paper's models in JAX, exposed through a flat-parameter ABI.
+
+Everything the Rust runtime calls is a function of *flat f32 vectors* so the
+HLO interface stays trivial:
+
+    train_step(flat_params, x, y)        -> (loss, flat_grad)
+    train_step_dq(flat_params, x, y, u)  -> (loss, q_indices, kappa)   [fused
+                                            with the L1 Pallas DQSG kernel]
+    eval_step(flat_params, x, y)         -> (loss, n_correct)
+
+Models (parameter counts pinned to Table 1 of the paper, see DESIGN.md §4):
+  * fc300      FC-300-100 on 28x28x1 inputs      (266,610 params)
+  * lenet      LeNet-5-like conv net on 28x28x1  (1,663,370 params)
+  * cifarnet   CifarNet on 32x32x3               (1,068,298 params)
+  * transformer  decoder-only LM (e2e driver; size from TransformerConfig)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dithered as dq_kernels
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# Flat <-> pytree parameter ABI
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Ordered list of named tensors defining the flat-vector layout."""
+
+    entries: Tuple[Tuple[str, Tuple[int, ...]], ...]
+
+    @property
+    def n_params(self) -> int:
+        return sum(math.prod(s) for _, s in self.entries)
+
+    def unflatten(self, flat: jnp.ndarray) -> Params:
+        out, off = {}, 0
+        for name, shape in self.entries:
+            size = math.prod(shape)
+            out[name] = jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+            off += size
+        return out
+
+    def flatten(self, params: Params) -> jnp.ndarray:
+        return jnp.concatenate(
+            [params[name].reshape(-1) for name, _ in self.entries]
+        )
+
+    def init(self, key) -> jnp.ndarray:
+        """He/Glorot-style init, emitted as a flat vector (host side calls
+        this once; Rust receives the initial vector via a .npy artifact)."""
+        chunks = []
+        for name, shape in self.entries:
+            key, sub = jax.random.split(key)
+            if name.endswith("/b"):
+                chunks.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+            elif name.endswith("/emb") or name.endswith("/pos"):
+                chunks.append(
+                    (0.02 * jax.random.normal(sub, shape, jnp.float32)).reshape(-1)
+                )
+            elif name.endswith("/scale"):
+                chunks.append(jnp.ones(shape, jnp.float32).reshape(-1))
+            else:
+                fan_in = math.prod(shape[:-1])
+                std = math.sqrt(2.0 / max(fan_in, 1))
+                chunks.append(
+                    (std * jax.random.normal(sub, shape, jnp.float32)).reshape(-1)
+                )
+        return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Shared NN pieces
+# --------------------------------------------------------------------------
+
+
+def _dense(p: Params, name: str, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p[f"{name}/w"] + p[f"{name}/b"]
+
+
+def _conv2d(p: Params, name: str, x: jnp.ndarray, padding: str) -> jnp.ndarray:
+    # x: NHWC; kernel: HWIO
+    y = jax.lax.conv_general_dilated(
+        x,
+        p[f"{name}/w"],
+        window_strides=(1, 1),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p[f"{name}/b"]
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# --------------------------------------------------------------------------
+# FC-300-100 (MNIST MLP): 784 -> 300 -> 100 -> 10     = 266,610 params
+# --------------------------------------------------------------------------
+
+FC300_SPEC = ParamSpec(
+    (
+        ("fc1/w", (784, 300)),
+        ("fc1/b", (300,)),
+        ("fc2/w", (300, 100)),
+        ("fc2/b", (100,)),
+        ("fc3/w", (100, 10)),
+        ("fc3/b", (10,)),
+    )
+)
+
+
+def fc300_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = x.reshape(x.shape[0], 784)
+    x = jax.nn.relu(_dense(p, "fc1", x))
+    x = jax.nn.relu(_dense(p, "fc2", x))
+    return _dense(p, "fc3", x)
+
+
+# --------------------------------------------------------------------------
+# LeNet-5-like (paper's "Lenet", param count 1,663,370; DESIGN.md §4)
+# --------------------------------------------------------------------------
+
+LENET_SPEC = ParamSpec(
+    (
+        ("conv1/w", (5, 5, 1, 32)),
+        ("conv1/b", (32,)),
+        ("conv2/w", (5, 5, 32, 64)),
+        ("conv2/b", (64,)),
+        ("fc1/w", (3136, 512)),
+        ("fc1/b", (512,)),
+        ("fc2/w", (512, 10)),
+        ("fc2/b", (10,)),
+    )
+)
+
+
+def lenet_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = x.reshape(x.shape[0], 28, 28, 1)
+    x = jax.nn.relu(_conv2d(p, "conv1", x, "SAME"))
+    x = _maxpool2(x)  # 14x14x32
+    x = jax.nn.relu(_conv2d(p, "conv2", x, "SAME"))
+    x = _maxpool2(x)  # 7x7x64 = 3136
+    x = x.reshape(x.shape[0], 3136)
+    x = jax.nn.relu(_dense(p, "fc1", x))
+    return _dense(p, "fc2", x)
+
+
+# --------------------------------------------------------------------------
+# CifarNet (param count 1,068,298; DESIGN.md §4)
+# --------------------------------------------------------------------------
+
+CIFARNET_SPEC = ParamSpec(
+    (
+        ("conv1/w", (5, 5, 3, 64)),
+        ("conv1/b", (64,)),
+        ("conv2/w", (5, 5, 64, 64)),
+        ("conv2/b", (64,)),
+        ("fc1/w", (2304, 384)),
+        ("fc1/b", (384,)),
+        ("fc2/w", (384, 192)),
+        ("fc2/b", (192,)),
+        ("fc3/w", (192, 10)),
+        ("fc3/b", (10,)),
+    )
+)
+
+
+def cifarnet_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = x.reshape(x.shape[0], 32, 32, 3)
+    x = jax.nn.relu(_conv2d(p, "conv1", x, "SAME"))
+    x = _maxpool2(x)  # 16x16x64
+    x = jax.nn.relu(_conv2d(p, "conv2", x, "VALID"))  # 12x12x64
+    x = _maxpool2(x)  # 6x6x64 = 2304
+    x = x.reshape(x.shape[0], 2304)
+    x = jax.nn.relu(_dense(p, "fc1", x))
+    x = jax.nn.relu(_dense(p, "fc2", x))
+    return _dense(p, "fc3", x)
+
+
+# --------------------------------------------------------------------------
+# Decoder-only transformer LM (end-to-end driver)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 1024
+    d_model: int = 128
+    n_layer: int = 2
+    n_head: int = 4
+    seq_len: int = 64
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_head
+
+
+# Presets; `100m` is the paper-scale config (compile-only on this testbed,
+# see EXPERIMENTS.md), smaller ones are trainable on 1 CPU core.
+TRANSFORMER_PRESETS = {
+    "tiny": TransformerConfig(1024, 128, 2, 4, 64),
+    "small": TransformerConfig(2048, 256, 4, 8, 128),
+    "100m": TransformerConfig(16384, 768, 12, 12, 256),
+}
+
+
+def transformer_spec(cfg: TransformerConfig) -> ParamSpec:
+    entries: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok/emb", (cfg.vocab, cfg.d_model)),
+        ("pos/pos", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layer):
+        pre = f"l{i}"
+        entries += [
+            (f"{pre}/ln1/scale", (cfg.d_model,)),
+            (f"{pre}/ln1/b", (cfg.d_model,)),
+            (f"{pre}/attn/wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"{pre}/attn/bqkv/b", (3 * cfg.d_model,)),
+            (f"{pre}/attn/wo", (cfg.d_model, cfg.d_model)),
+            (f"{pre}/attn/bo/b", (cfg.d_model,)),
+            (f"{pre}/ln2/scale", (cfg.d_model,)),
+            (f"{pre}/ln2/b", (cfg.d_model,)),
+            (f"{pre}/mlp/w1", (cfg.d_model, 4 * cfg.d_model)),
+            (f"{pre}/mlp/b1/b", (4 * cfg.d_model,)),
+            (f"{pre}/mlp/w2", (4 * cfg.d_model, cfg.d_model)),
+            (f"{pre}/mlp/b2/b", (cfg.d_model,)),
+        ]
+    entries += [("lnf/scale", (cfg.d_model,)), ("lnf/b", (cfg.d_model,))]
+    return ParamSpec(tuple(entries))
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def transformer_apply(cfg: TransformerConfig, p: Params, tokens: jnp.ndarray):
+    """tokens: [B, S] i32 -> logits [B, S, vocab]. Weight-tied LM head."""
+    B, S = tokens.shape
+    x = p["tok/emb"][tokens] + p["pos/pos"][None, :S, :]
+    mask = jnp.tril(jnp.ones((S, S), jnp.float32))
+    neg = jnp.float32(-1e9) * (1.0 - mask)
+    for i in range(cfg.n_layer):
+        pre = f"l{i}"
+        h = _layernorm(x, p[f"{pre}/ln1/scale"], p[f"{pre}/ln1/b"])
+        qkv = h @ p[f"{pre}/attn/wqkv"] + p[f"{pre}/attn/bqkv/b"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(B, S, cfg.n_head, cfg.d_head).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(cfg.d_head)
+        att = jax.nn.softmax(att + neg[None, None], axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(B, S, cfg.d_model)
+        x = x + o @ p[f"{pre}/attn/wo"] + p[f"{pre}/attn/bo/b"]
+        h = _layernorm(x, p[f"{pre}/ln2/scale"], p[f"{pre}/ln2/b"])
+        h = jax.nn.gelu(h @ p[f"{pre}/mlp/w1"] + p[f"{pre}/mlp/b1/b"])
+        x = x + h @ p[f"{pre}/mlp/w2"] + p[f"{pre}/mlp/b2/b"]
+    x = _layernorm(x, p["lnf/scale"], p["lnf/b"])
+    return x @ p["tok/emb"].T
+
+
+def transformer_loss(cfg: TransformerConfig, p: Params, tokens: jnp.ndarray):
+    """Next-token cross entropy over [B, S] token batch."""
+    logits = transformer_apply(cfg, p, tokens)[:, :-1, :]
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# --------------------------------------------------------------------------
+# Model registry + the three lowered entry points per model
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    name: str
+    spec: ParamSpec
+    apply_fn: Callable[[Params, jnp.ndarray], jnp.ndarray]
+    input_shape: Tuple[int, ...]  # per-example feature shape (flattened in x)
+    n_classes: int
+
+
+def _image_models() -> Dict[str, ModelDef]:
+    return {
+        "fc300": ModelDef("fc300", FC300_SPEC, fc300_apply, (784,), 10),
+        "lenet": ModelDef("lenet", LENET_SPEC, lenet_apply, (784,), 10),
+        "cifarnet": ModelDef("cifarnet", CIFARNET_SPEC, cifarnet_apply, (3072,), 10),
+    }
+
+
+MODELS = _image_models()
+
+
+def make_train_step(model: ModelDef):
+    """(flat_params, x[B,feat], y[B] i32) -> (loss, flat_grad)."""
+
+    def loss_fn(flat, x, y):
+        p = model.spec.unflatten(flat)
+        return _softmax_xent(model.apply_fn(p, x), y)
+
+    def step(flat, x, y):
+        loss, grad = jax.value_and_grad(loss_fn)(flat, x, y)
+        return loss, grad
+
+    return step
+
+
+def make_train_step_dq(model: ModelDef, delta: float):
+    """Train step fused with the L1 Pallas DQSG quantizer.
+
+    (flat_params, x, y, u[n_params]) -> (loss, q_indices i32[n], kappa).
+    Proves the L1 kernel lowers inside the L2 graph into one HLO module.
+    """
+    base = make_train_step(model)
+
+    def step(flat, x, y, u):
+        loss, grad = base(flat, x, y)
+        q, kappa = dq_kernels.dq_quantize(grad, u, delta)
+        return loss, q, kappa
+
+    return step
+
+
+def make_eval_step(model: ModelDef):
+    """(flat_params, x, y) -> (mean loss, n_correct i32)."""
+
+    def step(flat, x, y):
+        p = model.spec.unflatten(flat)
+        logits = model.apply_fn(p, x)
+        loss = _softmax_xent(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+        return loss, correct
+
+    return step
+
+
+def make_transformer_steps(cfg: TransformerConfig):
+    """Returns (spec, train_step, eval_step) for the LM.
+
+    train: (flat, tokens[B,S] i32) -> (loss, flat_grad)
+    eval:  (flat, tokens)          -> (loss,)
+    """
+    spec = transformer_spec(cfg)
+
+    def loss_fn(flat, tokens):
+        return transformer_loss(cfg, spec.unflatten(flat), tokens)
+
+    def train(flat, tokens):
+        return jax.value_and_grad(loss_fn)(flat, tokens)
+
+    def evalf(flat, tokens):
+        return (loss_fn(flat, tokens),)
+
+    return spec, train, evalf

@@ -1,0 +1,74 @@
+"""AOT pipeline tests: manifest integrity and HLO round-trip loadability."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_existing_files():
+    man = _manifest()
+    assert len(man["artifacts"]) >= 10
+    for key, entry in man["artifacts"].items():
+        assert os.path.exists(os.path.join(ART, entry["file"])), key
+
+
+def test_manifest_models_have_param_counts():
+    man = _manifest()
+    assert man["models"]["fc300"]["n_params"] == 266_610
+    assert man["models"]["lenet"]["n_params"] == 1_663_370
+    assert man["models"]["cifarnet"]["n_params"] == 1_068_298
+
+
+def test_grad_artifact_args_match_model():
+    man = _manifest()
+    b = man["config"]["b_train"]
+    for name in ("fc300", "lenet", "cifarnet"):
+        n = man["models"][name]["n_params"]
+        feat = man["models"][name]["feature_dim"]
+        entry = man["artifacts"][f"{name}_grad_b{b}"]
+        assert entry["args"][0]["shape"] == [n]
+        assert entry["args"][1]["shape"] == [b, feat]
+        assert entry["args"][2]["shape"] == [b]
+        assert entry["outputs"] == ["loss", "grad"]
+
+
+def test_init_bin_sizes():
+    man = _manifest()
+    for name in ("fc300", "lenet", "cifarnet"):
+        entry = man["artifacts"][f"{name}_init"]
+        path = os.path.join(ART, entry["file"])
+        assert os.path.getsize(path) == 4 * man["models"][name]["n_params"]
+
+
+def test_hlo_text_parses_as_hlo_module():
+    """The emitted text must start with an HLO module header (the format the
+    xla crate's text parser consumes)."""
+    man = _manifest()
+    for key, entry in man["artifacts"].items():
+        if not entry["file"].endswith(".hlo.txt"):
+            continue
+        with open(os.path.join(ART, entry["file"])) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), key
+
+
+def test_golden_vectors_exist_and_consistent():
+    man = _manifest()
+    with open(os.path.join(ART, "golden.json")) as f:
+        golden = json.load(f)
+    assert golden["n"] == 32
+    for delta in ("1.0", "0.5", "0.25"):
+        blk = golden[f"dq_delta_{delta}"]
+        assert len(blk["q"]) == 32 and len(blk["dequant"]) == 32
+    assert len(golden["nested"]["s"]) == 32

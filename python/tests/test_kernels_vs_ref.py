@@ -1,0 +1,119 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (hypothesis sweeps).
+
+This is the CORE correctness signal for layer 1: for random shapes, step
+sizes and inputs, the Pallas kernels must agree with ref.py exactly (integer
+outputs) / to f32 tolerance (float outputs).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import dithered as KD
+from compile.kernels import nested as KN
+from compile.kernels import ref
+
+# interpret-mode Pallas is slow; keep example counts modest but meaningful.
+COMMON = dict(max_examples=25, deadline=None, derandomize=True)
+
+sizes = st.sampled_from([1, 7, 128, 1000, 4096, 5000])
+deltas = st.sampled_from([1.0, 0.5, 0.25, 1.0 / 3.0])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(n, seed, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return (rng.randn(n) * scale).astype(np.float32)
+
+
+def _dither(n, seed, delta):
+    rng = np.random.RandomState(seed + 1)
+    return ((rng.rand(n).astype(np.float32) - 0.5) * delta).astype(np.float32)
+
+
+@settings(**COMMON)
+@given(n=sizes, seed=seeds)
+def test_absmax_matches_ref(n, seed):
+    g = _rand(n, seed)
+    got = KD.absmax(jnp.asarray(g), block=256)
+    want = np.abs(g).max() if np.abs(g).max() > 0 else 1.0
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+@settings(**COMMON)
+@given(n=sizes, delta=deltas, seed=seeds)
+def test_dq_quantize_matches_ref(n, delta, seed):
+    g = _rand(n, seed)
+    u = _dither(n, seed, delta)
+    q_k, kappa_k = KD.dq_quantize(jnp.asarray(g), jnp.asarray(u), delta, block=256)
+    q_r, kappa_r = ref.dithered_quantize(jnp.asarray(g), jnp.asarray(u), delta)
+    np.testing.assert_allclose(np.asarray(kappa_k), np.asarray(kappa_r), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+
+
+@settings(**COMMON)
+@given(n=sizes, delta=deltas, seed=seeds, p=st.sampled_from([1, 2, 4, 8]))
+def test_dequant_avg_matches_ref(n, delta, seed, p):
+    rng = np.random.RandomState(seed)
+    m = max(int(round(1.0 / delta)), 1)
+    qs = rng.randint(-m, m + 1, size=(p, n)).astype(np.int32)
+    us = ((rng.rand(p, n).astype(np.float32) - 0.5) * delta).astype(np.float32)
+    ks = (0.1 + rng.rand(p).astype(np.float32)).astype(np.float32)
+    got = KD.dq_dequant_avg(
+        jnp.asarray(qs), jnp.asarray(us), jnp.asarray(ks), delta, block=256
+    )
+    want = ref.dequantize_average(
+        jnp.asarray(qs), jnp.asarray(us), jnp.asarray(ks), delta
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-6, atol=1e-7)
+
+
+@settings(**COMMON)
+@given(
+    n=sizes,
+    seed=seeds,
+    k=st.sampled_from([3, 5, 9]),
+    alpha=st.sampled_from([1.0, 0.9, 0.75]),
+)
+def test_nested_encode_decode_matches_ref(n, seed, k, alpha):
+    d1 = 1.0 / 3.0
+    d2 = k * d1
+    g = _rand(n, seed, scale=0.5)
+    z = _rand(n, seed + 7, scale=0.05)
+    y = g + z
+    u = _dither(n, seed, d1)
+    s_k = KN.nested_encode(jnp.asarray(g), jnp.asarray(u), alpha, d1, d2, block=256)
+    s_r = ref.nested_encode(jnp.asarray(g), jnp.asarray(u), alpha, d1, d2)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+
+    x_k = KN.nested_decode(
+        s_k, jnp.asarray(u), jnp.asarray(y), alpha, d1, d2, block=256
+    )
+    x_r = ref.nested_decode(s_r, jnp.asarray(u), jnp.asarray(y), alpha, d1, d2)
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_r), rtol=2e-6, atol=1e-6)
+
+
+def test_nested_symbol_alphabet_bounded():
+    """|s/d1| <= (k-1)/2 for odd k — the wire packer relies on this."""
+    rng = np.random.RandomState(0)
+    d1, d2 = 1.0 / 3.0, 1.0  # k = 3
+    g = rng.randn(10000).astype(np.float32)
+    u = ((rng.rand(10000) - 0.5) * d1).astype(np.float32)
+    s = np.asarray(ref.nested_encode(jnp.asarray(g), jnp.asarray(u), 1.0, d1, d2))
+    assert s.min() >= -1 and s.max() <= 1
+
+
+def test_dq_roundtrip_error_bound():
+    """Thm. 1: |g - g~|/kappa <= Delta/2 elementwise (no-overload regime)."""
+    rng = np.random.RandomState(3)
+    for delta in (1.0, 0.5, 0.25):
+        g = rng.randn(4096).astype(np.float32)
+        u = ((rng.rand(4096) - 0.5) * delta).astype(np.float32)
+        q, kappa = KD.dq_quantize(jnp.asarray(g), jnp.asarray(u), delta, block=512)
+        gt = ref.dithered_dequantize(q, jnp.asarray(u), kappa, delta)
+        err = np.abs(np.asarray(gt) - g) / float(kappa)
+        assert err.max() <= delta / 2 + 1e-5

@@ -1,0 +1,108 @@
+"""L2 model tests: parameter counts pinned to Table 1, shapes, gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+# Table 1 baseline bits / 32 = exact parameter counts (DESIGN.md §4).
+@pytest.mark.parametrize(
+    "name,n_params",
+    [("fc300", 266_610), ("lenet", 1_663_370), ("cifarnet", 1_068_298)],
+)
+def test_param_counts_pin_table1(name, n_params):
+    assert M.MODELS[name].spec.n_params == n_params
+
+
+@pytest.mark.parametrize("name", ["fc300", "lenet", "cifarnet"])
+def test_forward_shapes(name):
+    model = M.MODELS[name]
+    flat = model.spec.init(jax.random.PRNGKey(0))
+    assert flat.shape == (model.spec.n_params,)
+    x = jnp.zeros((4, model.input_shape[0]), jnp.float32)
+    logits = model.apply_fn(model.spec.unflatten(flat), x)
+    assert logits.shape == (4, model.n_classes)
+
+
+@pytest.mark.parametrize("name", ["fc300", "lenet", "cifarnet"])
+def test_train_step_grad_shapes_and_finite(name):
+    model = M.MODELS[name]
+    flat = model.spec.init(jax.random.PRNGKey(1))
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.rand(8, model.input_shape[0]).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, 10, 8).astype(np.int32))
+    loss, grad = M.make_train_step(model)(flat, x, y)
+    assert grad.shape == flat.shape
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(grad)).all()
+    assert float(jnp.max(jnp.abs(grad))) > 0.0
+
+
+def test_flatten_unflatten_roundtrip():
+    model = M.MODELS["fc300"]
+    flat = model.spec.init(jax.random.PRNGKey(2))
+    p = model.spec.unflatten(flat)
+    flat2 = model.spec.flatten(p)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(flat2))
+
+
+def test_grad_matches_finite_difference():
+    """Directional finite-difference check on the FC model."""
+    model = M.MODELS["fc300"]
+    flat = model.spec.init(jax.random.PRNGKey(3))
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.rand(4, 784).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, 10, 4).astype(np.int32))
+    step = M.make_train_step(model)
+    loss0, grad = step(flat, x, y)
+    d = jnp.asarray(rng.randn(flat.shape[0]).astype(np.float32))
+    d = d / jnp.linalg.norm(d)
+    eps = 1e-2
+    lp, _ = step(flat + eps * d, x, y)
+    lm, _ = step(flat - eps * d, x, y)
+    fd = (float(lp) - float(lm)) / (2 * eps)
+    an = float(jnp.dot(grad, d))
+    assert abs(fd - an) < 5e-3 * max(1.0, abs(an))
+
+
+def test_fused_dq_step_consistent_with_plain_step():
+    """grad_dq artifact == plain grad + ref dithered quantization."""
+    from compile.kernels import ref
+
+    model = M.MODELS["fc300"]
+    flat = model.spec.init(jax.random.PRNGKey(4))
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.rand(8, 784).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, 10, 8).astype(np.int32))
+    delta = 1.0
+    u = jnp.asarray(((rng.rand(model.spec.n_params) - 0.5) * delta).astype(np.float32))
+
+    loss_a, grad = M.make_train_step(model)(flat, x, y)
+    q_ref, kappa_ref = ref.dithered_quantize(grad, u, delta)
+    loss_b, q, kappa = M.make_train_step_dq(model, delta)(flat, x, y, u)
+    assert abs(float(loss_a) - float(loss_b)) < 1e-6
+    np.testing.assert_allclose(float(kappa), float(kappa_ref), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+
+
+def test_transformer_tiny_shapes_and_loss():
+    cfg = M.TRANSFORMER_PRESETS["tiny"]
+    spec, train, evalf = M.make_transformer_steps(cfg)
+    flat = spec.init(jax.random.PRNGKey(5))
+    rng = np.random.RandomState(3)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab, (2, cfg.seq_len)).astype(np.int32))
+    loss, grad = train(flat, toks)
+    assert grad.shape == flat.shape
+    # random-init loss should be near ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+    (loss_e,) = evalf(flat, toks)
+    assert abs(float(loss) - float(loss_e)) < 1e-5
+
+
+def test_transformer_100m_preset_is_paper_scale():
+    cfg = M.TRANSFORMER_PRESETS["100m"]
+    n = M.transformer_spec(cfg).n_params
+    assert 80e6 < n < 130e6  # "~100M parameters"

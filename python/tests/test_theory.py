@@ -1,0 +1,161 @@
+"""Statistical validation of the paper's theory (Lemmas 2-3, Thm. 1, Thm. 6).
+
+These are Monte-Carlo tests with fixed seeds and generous tolerances; they
+pin the *claims* the rest of the system is built on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+
+def test_thm1_error_uniform_and_independent():
+    """Thm. 1: dithered quantization error is U[-D/2, D/2], independent of x."""
+    rng = np.random.RandomState(0)
+    delta = 0.5
+    n = 200_000
+    # deliberately non-uniform, correlated input
+    x = np.clip(np.sin(np.linspace(0, 50, n)) * 0.8, -1, 1).astype(np.float32)
+    u = ((rng.rand(n) - 0.5) * delta).astype(np.float32)
+    xq = delta * np.asarray(
+        ref.round_nearest(jnp.asarray((x + u) / delta))
+    ) - u  # dithered quantization of x (kappa = 1)
+    e = x - xq
+    # uniform moments: mean 0, var delta^2/12, bounded by delta/2
+    assert np.abs(e).max() <= delta / 2 + 1e-6
+    assert abs(e.mean()) < 2e-3
+    assert abs(e.var() - delta**2 / 12) < 2e-3
+    # independence proxy: correlation with the signal ~ 0
+    corr = np.corrcoef(x, e)[0, 1]
+    assert abs(corr) < 0.01
+    # and uniform CDF: KS-style max deviation
+    s = np.sort(e) / delta + 0.5
+    ks = np.abs(s - np.arange(n) / n).max()
+    assert ks < 0.01
+
+
+def test_lemma2_stochastic_equals_half_dithered():
+    """Lemma 2: QSGD stochastic quantizer == (2M+1)-level half-dithered
+    quantizer with Delta = 1/M, u ~ U[-1/2M, 1/2M].
+
+    We verify the per-bin assignment probabilities P(Q = l/M) match the
+    eq. (1) formula for a grid of x values.
+    """
+    rng = np.random.RandomState(1)
+    m = 2
+    delta = 1.0 / m
+    trials = 40_000
+    for x in (0.05, 0.2, 0.3, 0.45, 0.62, 0.9):
+        l = int(np.floor(x * m))
+        p_up_expected = m * x - l  # eq. (1): P(sign*(l+1)/M)
+        u = (rng.rand(trials) - 0.5) * delta
+        q = np.asarray(
+            ref.round_nearest(jnp.asarray((x + u) / delta))
+        )
+        p_up = (q == l + 1).mean()
+        assert abs(p_up - p_up_expected) < 0.015, (x, p_up, p_up_expected)
+
+
+def test_lemma3_unbiased_and_variance_bound():
+    """Lemma 3: DQSG is unbiased; excess variance <= E||g||_inf^2 * n D^2/12."""
+    rng = np.random.RandomState(2)
+    n, trials, delta = 256, 400, 0.5
+    mu = rng.randn(n).astype(np.float32) * 0.1  # "true gradient"
+    acc = np.zeros(n, np.float64)
+    excess = []
+    for _ in range(trials):
+        g = (mu + 0.05 * rng.randn(n)).astype(np.float32)
+        u = ((rng.rand(n) - 0.5) * delta).astype(np.float32)
+        q, kappa = ref.dithered_quantize(jnp.asarray(g), jnp.asarray(u), delta)
+        gt = np.asarray(ref.dithered_dequantize(q, jnp.asarray(u), kappa, delta))
+        acc += gt
+        excess.append(((gt - g) ** 2).sum() / float(kappa) ** 2)
+    bias = np.abs(acc / trials - mu).mean()
+    assert bias < 0.01  # P1: unbiased
+    # P2 (conditional form): E||g~-g||^2 = kappa^2 * n D^2/12
+    assert abs(np.mean(excess) - n * delta**2 / 12) < 0.05 * n * delta**2 / 12
+
+
+def test_qsgd_variance_twice_dithered_for_uniform_input():
+    """§2.1.1: for x ~ U[-1,1], QSGD avg variance = 1/(6M^2), twice the
+    dithered quantizer's Delta^2/12 = 1/(12 M^2)."""
+    rng = np.random.RandomState(3)
+    m = 1
+    n = 400_000
+    x = (rng.rand(n) * 2 - 1).astype(np.float32)
+    # QSGD with kappa = 1 (x already in [-1,1]): half-dithered
+    u = ((rng.rand(n) - 0.5) / m).astype(np.float32)
+    qs = np.asarray(ref.half_dithered_quantize(jnp.asarray(x), jnp.asarray(u), 1.0 / m))
+    var_qsgd = ((qs - x) ** 2).mean()
+    # dithered: subtract the dither
+    xq = qs - u
+    var_dq = ((xq - x) ** 2).mean()
+    assert abs(var_qsgd - 1.0 / (6 * m**2)) < 0.01
+    assert abs(var_dq - 1.0 / (12 * m**2)) < 0.01
+    assert var_qsgd / var_dq > 1.8
+
+
+def test_thm6_nested_exact_when_noise_small():
+    """Thm. 6: if |z| < (D2 - D1)/(2 alpha), decoding is exact and the error
+    variance equals alpha^2 D1^2/12 + (1-alpha^2)^2 sigma_z^2."""
+    rng = np.random.RandomState(4)
+    d1, d2, alpha = 1.0 / 3.0, 1.0, 1.0
+    n = 100_000
+    zmax = (d2 - d1) / (2 * alpha)
+    x = rng.randn(n).astype(np.float32)
+    z = (rng.rand(n).astype(np.float32) * 2 - 1) * (0.9 * zmax)
+    y = x + z
+    u = ((rng.rand(n) - 0.5) * d1).astype(np.float32)
+    s = ref.nested_encode(jnp.asarray(x), jnp.asarray(u), alpha, d1, d2)
+    xh = np.asarray(
+        ref.nested_decode(s, jnp.asarray(u), jnp.asarray(y), alpha, d1, d2)
+    )
+    err = xh - x
+    # exact decoding: error bounded by alpha*D1/2 + (1-alpha^2)|z| — with
+    # alpha=1 it's exactly the dither quantization error, |e| <= D1/2
+    assert np.abs(err).max() <= alpha * d1 / 2 + (1 - alpha**2) * zmax + 1e-5
+    want_var = alpha**2 * d1**2 / 12 + (1 - alpha**2) ** 2 * float((z**2).mean())
+    assert abs(err.var() - want_var) < 0.05 * want_var
+
+
+def test_thm6_failure_probability_bound():
+    """Thm. 6 eq. (8): decode failure prob <= D1^2/(3 D2^2) + 4 a^2 s_z^2/D2^2."""
+    rng = np.random.RandomState(5)
+    d1, d2, alpha = 1.0 / 3.0, 1.0, 1.0
+    n = 200_000
+    sigma_z = 0.18  # large enough to cause occasional failures
+    x = rng.randn(n).astype(np.float32)
+    z = (sigma_z * rng.randn(n)).astype(np.float32)
+    y = x + z
+    u = ((rng.rand(n) - 0.5) * d1).astype(np.float32)
+    s = ref.nested_encode(jnp.asarray(x), jnp.asarray(u), alpha, d1, d2)
+    xh = np.asarray(
+        ref.nested_decode(s, jnp.asarray(u), jnp.asarray(y), alpha, d1, d2)
+    )
+    # failure = decoded point not within D1/2 of x (wrong coarse bin)
+    fail = (np.abs(xh - x) > d1 / 2 + 1e-6).mean()
+    bound = d1**2 / (3 * d2**2) + 4 * alpha**2 * sigma_z**2 / d2**2
+    assert fail <= bound + 0.005
+    # empirical failure probability should also be meaningfully nonzero here
+    assert fail > 0.001
+
+
+def test_onebit_error_feedback_telescopes():
+    """One-bit EF: residual carries exactly the un-transmitted signal."""
+    rng = np.random.RandomState(6)
+    n = 1024
+    res = jnp.zeros(n, jnp.float32)
+    total_sent = np.zeros(n, np.float64)
+    total_sig = np.zeros(n, np.float64)
+    for _ in range(20):
+        g = jnp.asarray(rng.randn(n).astype(np.float32))
+        bits, mp, mn, res = ref.onebit_quantize(g, res)
+        recon = np.where(np.asarray(bits) == 1, float(mp), float(mn))
+        total_sent += recon
+        total_sig += np.asarray(g)
+    # sum(sent) + residual == sum(signal) exactly (telescoping identity)
+    np.testing.assert_allclose(
+        total_sent + np.asarray(res), total_sig, rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,84 @@
+//! Thm. 6 ablation: NDQSG decoding-failure probability vs the eq. (8)
+//! bound, and error variance vs the eq. (9) prediction, across the
+//! side-information noise sigma_z, the coarse/fine ratio, and alpha.
+
+mod common;
+
+use ndq::prng::{DitherStream, Xoshiro256};
+use ndq::quant::nested::NestedQuantizer;
+use ndq::quant::GradQuantizer;
+use ndq::stats::bench::{print_table_header, print_table_row};
+use ndq::util::json::{self, Json};
+
+fn main() -> ndq::Result<()> {
+    let n = if common::fast() { 20_000 } else { 200_000 };
+    let d1 = 1.0f32 / 3.0;
+    print_table_header(
+        "Thm. 6 — failure prob (measured vs eq. 8) and variance (vs eq. 9)",
+        &["p_fail", "eq.(8)", "var", "eq.(9)"],
+    );
+    let mut rows = Vec::new();
+    for (ratio, alpha, sigma_z) in [
+        (3u32, 1.0f32, 0.05f32),
+        (3, 1.0, 0.10),
+        (3, 1.0, 0.15),
+        (3, 1.0, 0.20),
+        (5, 1.0, 0.20),
+        (9, 1.0, 0.20),
+        (3, 0.9, 0.10),
+        (3, 0.75, 0.10),
+    ] {
+        let mut rng = Xoshiro256::new(42 + ratio as u64);
+        // normalized-units experiment (kappa = 1): x in [-1, 1]
+        let x: Vec<f32> = (0..n).map(|_| (rng.next_normal() * 0.3).clamp(-1.0, 1.0)).collect();
+        // make |x|max exactly 1 so kappa = 1 and sigma_z is in x-units
+        let mut x = x;
+        x[0] = 1.0;
+        let y: Vec<f32> = x.iter().map(|&v| v + sigma_z * rng.next_normal()).collect();
+        let mut q = NestedQuantizer::new(d1, ratio, alpha);
+        let stream = DitherStream::new(7, 0);
+        let msg = q.encode(&x, &mut stream.round(0));
+        let xh = q.decode(&msg, &mut stream.round(0), Some(&y))?;
+
+        // failure = outside the exact-decode bound (wrong coarse bin)
+        let exact_bound = alpha * d1 / 2.0 + (1.0 - alpha * alpha) * 4.0 * sigma_z;
+        let fails = x
+            .iter()
+            .zip(&xh)
+            .filter(|(a, b)| (**a - **b).abs() > exact_bound + 1e-5)
+            .count();
+        let p_fail = fails as f64 / n as f64;
+        let bound = q.failure_bound(sigma_z as f64);
+        let var = ndq::tensor::sq_dist(&x, &xh) / n as f64;
+        let var_pred = q.exact_variance((sigma_z as f64).powi(2));
+
+        print_table_row(
+            &format!("k={ratio},a={alpha},s={sigma_z}"),
+            &[p_fail, bound, var, var_pred],
+        );
+        rows.push(json::obj(vec![
+            ("ratio", json::num(ratio as f64)),
+            ("alpha", json::num(alpha as f64)),
+            ("sigma_z", json::num(sigma_z as f64)),
+            ("p_fail", json::num(p_fail)),
+            ("bound", json::num(bound)),
+            ("var", json::num(var)),
+            ("var_pred", json::num(var_pred)),
+        ]));
+        // eq. (8) must upper-bound the measured failure rate
+        assert!(
+            p_fail <= bound + 0.01,
+            "failure {p_fail} exceeds bound {bound} at k={ratio} a={alpha} s={sigma_z}"
+        );
+        // variance prediction valid when failures are rare
+        if p_fail < 0.002 {
+            assert!(
+                (var - var_pred).abs() < 0.35 * var_pred.max(1e-6),
+                "variance {var} vs predicted {var_pred}"
+            );
+        }
+    }
+    println!("\nshape checks passed: eq. (8) bounds p_fail; eq. (9) predicts variance in the exact regime");
+    common::save_json("ablation_theorem6.json", Json::Arr(rows));
+    Ok(())
+}

@@ -1,0 +1,69 @@
+#![allow(dead_code)]
+//! Shared helpers for the paper-table benches.
+//!
+//! Each bench binary regenerates one table/figure of the paper. `rounds()`
+//! scales workload to the environment: full fidelity by default, trimmed
+//! under NDQ_BENCH_FAST=1 (CI) — the *shape* conclusions hold at both.
+
+use std::sync::Arc;
+
+use ndq::data::{Batch, ImageDataset, ImageKind};
+use ndq::runtime::{ComputeHandle, ComputeService, Manifest};
+
+pub fn fast() -> bool {
+    std::env::var("NDQ_BENCH_FAST").is_ok()
+}
+
+/// Scale a round budget for the environment.
+pub fn rounds(full: usize) -> usize {
+    if fast() {
+        (full / 10).max(3)
+    } else {
+        full
+    }
+}
+
+pub fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+pub fn skip_or_panic() -> bool {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built — run `make artifacts` first");
+        return true;
+    }
+    false
+}
+
+/// A real gradient for `model` computed through the AOT artifact at init.
+pub fn real_gradient(model: &str) -> ndq::Result<Vec<f32>> {
+    let svc = ComputeService::start(std::path::Path::new("artifacts"))?;
+    let h = svc.handle();
+    let m = Manifest::load(std::path::Path::new("artifacts"))?;
+    let params = Arc::new(m.init_params(model)?);
+    gradient_at(&h, model, &params, 0)
+}
+
+/// Gradient for `model` at the given params/round through a live handle.
+pub fn gradient_at(
+    h: &ComputeHandle,
+    model: &str,
+    params: &Arc<Vec<f32>>,
+    round: u64,
+) -> ndq::Result<Vec<f32>> {
+    let kind = ImageKind::for_model(model)?;
+    let ds = ImageDataset::new(kind, 0);
+    let b = 32;
+    let mut batch = Batch::new(b, kind.feature_dim());
+    ds.train_batch(round, 0, 1, b, &mut batch);
+    let (_, g) = h.grad_image(model, params, batch.x, batch.y, b)?;
+    Ok(g)
+}
+
+/// Write bench rows as JSON lines for EXPERIMENTS.md extraction.
+pub fn save_json(file: &str, j: ndq::util::json::Json) {
+    let dir = std::path::Path::new("target/ndq-bench");
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join(file), j.to_string());
+    println!("[saved target/ndq-bench/{file}]");
+}

@@ -1,0 +1,93 @@
+//! Figure 5: convergence curves (accuracy vs training round) for CifarNet
+//! with Adam, 4 and 8 workers: baseline vs DQSGD vs QSGD vs One-Bit.
+//!
+//! Paper shape: DQSGD converges at least as fast as the baseline (the
+//! independent dither noise can even help — §4), QSGD close behind, One-Bit
+//! visibly slower.
+
+mod common;
+
+use ndq::config::{OptKind, TrainConfig};
+use ndq::quant::Scheme;
+use ndq::train::Trainer;
+use ndq::util::json::{self, Json};
+
+fn main() -> ndq::Result<()> {
+    if common::skip_or_panic() {
+        return Ok(());
+    }
+    let rounds = common::rounds(100);
+    let eval_every = (rounds / 8).max(1);
+    let schemes = [
+        ("Baseline", Scheme::Baseline),
+        ("DQSGD", Scheme::Dithered { delta: 0.5 }),
+        ("QSGD", Scheme::Qsgd { m: 2 }),
+        ("One-Bit", Scheme::OneBit),
+    ];
+    let mut out = Vec::new();
+    for workers in [4usize, 8] {
+        println!("\n=== Fig. 5 — CifarNet Adam, {workers} workers ({rounds} rounds) ===");
+        let mut finals = Vec::new();
+        for (name, scheme) in &schemes {
+            let cfg = TrainConfig {
+                model: "cifarnet".into(),
+                workers,
+                scheme: *scheme,
+                opt: OptKind::Adam,
+                lr: 0.001,
+                rounds,
+                eval_every,
+                eval_examples: 512,
+                ..TrainConfig::default()
+            };
+            let report = Trainer::new(cfg)?.run()?;
+            let curve: Vec<String> = report
+                .history
+                .iter()
+                .map(|h| format!("{}:{:.3}", h.round, h.accuracy))
+                .collect();
+            println!("{name:<10} {}", curve.join("  "));
+            finals.push(report.final_accuracy);
+            out.push(json::obj(vec![
+                ("workers", json::num(workers as f64)),
+                ("scheme", json::s(name)),
+                (
+                    "rounds",
+                    json::f32s(
+                        &report
+                            .history
+                            .iter()
+                            .map(|h| h.round as f32)
+                            .collect::<Vec<_>>(),
+                    ),
+                ),
+                (
+                    "accuracy",
+                    json::f32s(
+                        &report
+                            .history
+                            .iter()
+                            .map(|h| h.accuracy as f32)
+                            .collect::<Vec<_>>(),
+                    ),
+                ),
+            ]));
+        }
+        // shape: One-Bit trails the others at the end of the budget
+        if common::fast() {
+            eprintln!("(fast mode: skipping shape assertions)");
+            continue;
+        }
+        assert!(
+            finals[3] <= finals[0] + 0.02 && finals[3] <= finals[1] + 0.02,
+            "One-Bit should converge slower (finals: {finals:?})"
+        );
+        assert!(
+            (finals[1] - finals[0]).abs() < 0.15,
+            "DQSGD should track baseline (finals: {finals:?})"
+        );
+    }
+    println!("\nshape checks passed: DQSGD ~ baseline, One-Bit trails");
+    common::save_json("fig5.json", Json::Arr(out));
+    Ok(())
+}

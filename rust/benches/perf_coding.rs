@@ -1,0 +1,75 @@
+//! §Perf: coding-layer throughput — base-k packing vs adaptive arithmetic
+//! coding, and the dither PRNG fill rate (the three non-compute costs on
+//! the wire path).
+
+mod common;
+
+use ndq::coding::{arithmetic, pack, BitReader, BitWriter};
+use ndq::prng::{DitherStream, Xoshiro256};
+use ndq::stats::bench::Bench;
+
+fn main() -> ndq::Result<()> {
+    let mut b = Bench::new();
+    let n = 266_610usize;
+    let mut rng = Xoshiro256::new(2);
+
+    // gradient-index-like ternary stream, peaked at 0
+    let symbols: Vec<u32> = (0..n)
+        .map(|_| {
+            let r = rng.next_f32();
+            if r < 0.75 {
+                1
+            } else if r < 0.88 {
+                0
+            } else {
+                2
+            }
+        })
+        .collect();
+
+    let r = b.run("pack_base3/266610", || {
+        let mut w = BitWriter::new();
+        pack::pack_base_k(&symbols, 3, &mut w);
+        w
+    });
+    println!("    -> {:.1} M sym/s", r.throughput(n as f64) / 1e6);
+
+    let mut w = BitWriter::new();
+    pack::pack_base_k(&symbols, 3, &mut w);
+    let packed = w.into_bytes();
+    let r = b.run("unpack_base3/266610", || {
+        let mut rd = BitReader::new(&packed);
+        pack::unpack_base_k(&mut rd, 3, n).unwrap()
+    });
+    println!("    -> {:.1} M sym/s", r.throughput(n as f64) / 1e6);
+
+    let r = b.run("aac_encode/266610", || {
+        let mut w = BitWriter::new();
+        arithmetic::encode(&symbols, 3, &mut w);
+        w
+    });
+    println!("    -> {:.1} M sym/s", r.throughput(n as f64) / 1e6);
+
+    let mut w = BitWriter::new();
+    arithmetic::encode(&symbols, 3, &mut w);
+    let coded = w.into_bytes();
+    let r = b.run("aac_decode/266610", || {
+        let mut rd = BitReader::new(&coded);
+        arithmetic::decode(&mut rd, 3, n).unwrap()
+    });
+    println!("    -> {:.1} M sym/s", r.throughput(n as f64) / 1e6);
+
+    // dither generation (Philox fill)
+    let mut buf = vec![0f32; n];
+    let stream = DitherStream::new(0, 0);
+    let mut round = 0u64;
+    let r = b.run("philox_fill_dither/266610", || {
+        round += 1;
+        stream.round(round).fill_dither(0.5, &mut buf);
+        buf[0]
+    });
+    println!("    -> {:.1} M dithers/s", r.throughput(n as f64) / 1e6);
+
+    b.save("perf_coding")?;
+    Ok(())
+}

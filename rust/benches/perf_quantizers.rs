@@ -1,0 +1,63 @@
+//! §Perf: quantizer hot-path microbenchmarks — ns/element for encode and
+//! decode at the paper's model sizes. The target: quantize+encode must be
+//! a small fraction of the gradient-compute time, so L3 never bottlenecks
+//! the round (see EXPERIMENTS.md §Perf for the compute-time comparison).
+
+mod common;
+
+use ndq::prng::{DitherStream, Xoshiro256};
+use ndq::quant::Scheme;
+use ndq::stats::bench::Bench;
+
+fn main() -> ndq::Result<()> {
+    let mut b = Bench::new();
+    let mut rng = Xoshiro256::new(1);
+    for n in [266_610usize, 1_663_370] {
+        let g: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.1).collect();
+        println!("\n--- n = {n} ---");
+        for scheme in [
+            Scheme::Baseline,
+            Scheme::Dithered { delta: 1.0 },
+            Scheme::Dithered { delta: 0.5 },
+            Scheme::DitheredPartitioned { delta: 1.0, k: 8 },
+            Scheme::Qsgd { m: 1 },
+            Scheme::Terngrad,
+            Scheme::OneBit,
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        ] {
+            let mut q = scheme.build();
+            let stream = DitherStream::new(0, 0);
+            let mut round = 0u64;
+            let label = format!("encode/{}/{n}", scheme.label());
+            let r = b.run(&label, || {
+                round += 1;
+                q.encode(&g, &mut stream.round(round))
+            });
+            println!(
+                "    -> {:.2} ns/elem, {:.1} M elem/s",
+                r.median_ns / n as f64,
+                r.throughput(n as f64) / 1e6
+            );
+
+            // decode (needs a message + side info for nested)
+            let msg = q.encode(&g, &mut stream.round(0));
+            let y: Vec<f32> = g.iter().map(|&x| x + 0.001).collect();
+            let side = q.needs_side_info();
+            let label = format!("decode/{}/{n}", scheme.label());
+            let rd = b.run(&label, || {
+                q.decode(
+                    &msg,
+                    &mut stream.round(0),
+                    if side { Some(&y) } else { None },
+                )
+                .unwrap()
+            });
+            println!(
+                "    -> {:.2} ns/elem decode",
+                rd.median_ns / n as f64
+            );
+        }
+    }
+    b.save("perf_quantizers")?;
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! §Perf: runtime dispatch comparison — the L1 quantize kernel executed via
+//! PJRT versus the rust-native hot loop, plus per-model gradient-step cost
+//! (the denominator of every "does quantization bottleneck the round?"
+//! question) and the executable-cache hit check.
+
+mod common;
+
+use std::sync::Arc;
+
+use ndq::data::{Batch, ImageDataset, ImageKind};
+use ndq::prng::DitherStream;
+use ndq::quant::Scheme;
+use ndq::runtime::{ComputeService, Manifest, RawArg};
+use ndq::stats::bench::Bench;
+
+fn main() -> ndq::Result<()> {
+    if common::skip_or_panic() {
+        return Ok(());
+    }
+    let mut b = Bench::new();
+    let svc = ComputeService::start(std::path::Path::new("artifacts"))?;
+    let h = svc.handle();
+    let m = Manifest::load(std::path::Path::new("artifacts"))?;
+
+    // -- gradient step per model (the round's compute cost) --
+    for model in ["fc300", "lenet", "cifarnet"] {
+        let params = Arc::new(m.init_params(model)?);
+        let kind = ImageKind::for_model(model)?;
+        let ds = ImageDataset::new(kind, 0);
+        let bsz = 32;
+        let mut batch = Batch::new(bsz, kind.feature_dim());
+        ds.train_batch(0, 0, 1, bsz, &mut batch);
+        b.run(&format!("grad_step/{model}/b32"), || {
+            h.grad_image(model, &params, batch.x.clone(), batch.y.clone(), bsz)
+                .unwrap()
+        });
+    }
+
+    // -- PJRT-dispatched Pallas quantize kernel vs rust-native --
+    let n = 266_610usize;
+    let params = Arc::new(m.init_params("fc300")?);
+    let grad = common::gradient_at(&h, "fc300", &params, 0)?;
+    let mut u = vec![0f32; n];
+    DitherStream::new(0, 0).round(0).fill_dither(0.5, &mut u);
+
+    let r_pjrt = b.run("quantize/pjrt_kernel/266610", || {
+        h.exec_raw(
+            &format!("quantize_dq_{n}"),
+            vec![
+                RawArg::F32(grad.clone(), vec![n as i64]),
+                RawArg::F32(u.clone(), vec![n as i64]),
+            ],
+        )
+        .unwrap()
+    });
+
+    let mut q = Scheme::Dithered { delta: 1.0 }.build();
+    let stream = DitherStream::new(0, 0);
+    let r_rust = b.run("quantize/rust_native/266610", || {
+        q.encode(&grad, &mut stream.round(0))
+    });
+    println!(
+        "\nPJRT kernel vs rust-native encode: {:.2}x (note: rust-native also packs bits)",
+        r_pjrt.median_ns / r_rust.median_ns
+    );
+
+    // -- executable cache: steady state must be all hits --
+    let (compiles, executions) = h.stats()?;
+    println!("compiles = {compiles}, executions = {executions}");
+    assert!(
+        executions > compiles * 3,
+        "executable cache not amortizing: {compiles} compiles / {executions} execs"
+    );
+
+    b.save("perf_runtime")?;
+    Ok(())
+}

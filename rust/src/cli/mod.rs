@@ -1,0 +1,186 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors, defaults, and a generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub help: String,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<ArgSpec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(ArgSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(ArgSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse from `std::env::args` (skipping the binary name), printing
+    /// help + exiting on `--help`.
+    pub fn parse(self) -> crate::Result<Self> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(argv)
+    }
+
+    pub fn parse_from(mut self, argv: Vec<String>) -> crate::Result<Self> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.help_text()))?
+                    .clone();
+                if spec.is_flag {
+                    anyhow::ensure!(inline_val.is_none(), "--{key} takes no value");
+                    self.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?,
+                    };
+                    self.values.insert(key, val);
+                }
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.program, self.about);
+        for spec in &self.specs {
+            let default = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, default));
+        }
+        s.push_str("  --help               show this message\n");
+        s
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> crate::Result<usize> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_u64(&self, name: &str) -> crate::Result<u64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f32(&self, name: &str) -> crate::Result<f32> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Args {
+        Args::new("t", "test")
+            .opt("model", "fc300", "model name")
+            .opt("workers", "4", "worker count")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = spec()
+            .parse_from(vec!["--workers".into(), "8".into(), "run".into()])
+            .unwrap();
+        assert_eq!(a.get("model"), "fc300");
+        assert_eq!(a.get_usize("workers").unwrap(), 8);
+        assert!(!a.get_flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = spec()
+            .parse_from(vec!["--model=lenet".into(), "--verbose".into()])
+            .unwrap();
+        assert_eq!(a.get("model"), "lenet");
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse_from(vec!["--bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse_from(vec!["--workers".into()]).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! LSB-first bit-level reader/writer over byte buffers.
+
+/// Append-only bit writer, LSB-first within each byte.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    /// Number of valid bits in the last byte (0 => last byte full/empty).
+    bit_len: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total bits written so far.
+    pub fn len_bits(&self) -> usize {
+        self.bit_len
+    }
+
+    #[inline]
+    pub fn push_bit(&mut self, bit: bool) {
+        let slot = self.bit_len % 8;
+        if slot == 0 {
+            self.bytes.push(0);
+        }
+        if bit {
+            *self.bytes.last_mut().unwrap() |= 1 << slot;
+        }
+        self.bit_len += 1;
+    }
+
+    /// Write the low `n` bits of `v`, LSB first (n <= 64).
+    #[inline]
+    pub fn push_bits(&mut self, v: u64, n: usize) {
+        debug_assert!(n <= 64);
+        let mut v = v;
+        let mut left = n;
+        while left > 0 {
+            let slot = self.bit_len % 8;
+            if slot == 0 {
+                self.bytes.push(0);
+            }
+            let take = (8 - slot).min(left);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            *self.bytes.last_mut().unwrap() |= ((v & mask) as u8) << slot;
+            v >>= take;
+            left -= take;
+            self.bit_len += take;
+        }
+    }
+
+    /// Write a whole byte (aligned or not).
+    pub fn push_byte(&mut self, b: u8) {
+        self.push_bits(b as u64, 8);
+    }
+
+    /// Write a full u32 (e.g. a scale factor's raw bits).
+    pub fn push_u32(&mut self, v: u32) {
+        self.push_bits(v as u64, 32);
+    }
+
+    pub fn push_f32(&mut self, v: f32) {
+        self.push_u32(v.to_bits());
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    pub fn bits_read(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.bytes.len() * 8 - self.pos
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> crate::Result<bool> {
+        anyhow::ensure!(self.pos < self.bytes.len() * 8, "bitreader: out of data");
+        let b = (self.bytes[self.pos / 8] >> (self.pos % 8)) & 1;
+        self.pos += 1;
+        Ok(b == 1)
+    }
+
+    /// Read `n` bits LSB-first (n <= 64).
+    #[inline]
+    pub fn read_bits(&mut self, n: usize) -> crate::Result<u64> {
+        debug_assert!(n <= 64);
+        anyhow::ensure!(
+            self.pos + n <= self.bytes.len() * 8,
+            "bitreader: out of data (want {n} bits, have {})",
+            self.remaining_bits()
+        );
+        let mut out = 0u64;
+        let mut got = 0usize;
+        while got < n {
+            let byte = self.bytes[self.pos / 8] as u64;
+            let slot = self.pos % 8;
+            let take = (8 - slot).min(n - got);
+            let mask = (1u64 << take) - 1;
+            out |= ((byte >> slot) & mask) << got;
+            got += take;
+            self.pos += take;
+        }
+        Ok(out)
+    }
+
+    pub fn read_u32(&mut self) -> crate::Result<u32> {
+        Ok(self.read_bits(32)? as u32)
+    }
+
+    pub fn read_f32(&mut self) -> crate::Result<f32> {
+        Ok(f32::from_bits(self.read_u32()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        w.push_bit(true);
+        w.push_bits(0b1011, 4);
+        w.push_byte(0xAB);
+        w.push_u32(0xDEAD_BEEF);
+        w.push_f32(-1.25);
+        w.push_bits(0x3FF, 10);
+        let total = w.len_bits();
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), total.div_ceil(8));
+
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit().unwrap());
+        assert_eq!(r.read_bits(4).unwrap(), 0b1011);
+        assert_eq!(r.read_bits(8).unwrap(), 0xAB);
+        assert_eq!(r.read_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.read_f32().unwrap(), -1.25);
+        assert_eq!(r.read_bits(10).unwrap(), 0x3FF);
+        assert_eq!(r.bits_read(), total);
+    }
+
+    #[test]
+    fn fuzz_roundtrip() {
+        let mut rng = Xoshiro256::new(42);
+        for _ in 0..50 {
+            let mut w = BitWriter::new();
+            let mut expect = Vec::new();
+            for _ in 0..200 {
+                let n = 1 + (rng.next_below(32) as usize);
+                let v = rng.next_u64() & ((1u64 << n) - 1);
+                w.push_bits(v, n);
+                expect.push((v, n));
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for (v, n) in expect {
+                assert_eq!(r.read_bits(n).unwrap(), v);
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_data_errors() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert!(r.read_bits(8).is_ok());
+        assert!(r.read_bit().is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Elias-gamma codes for self-delimiting lengths/headers on the wire.
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Encode v >= 1 in Elias gamma: (floor(log2 v)) zeros, then v's bits.
+pub fn encode_gamma(v: u64, w: &mut BitWriter) {
+    assert!(v >= 1, "gamma code requires v >= 1");
+    let nbits = 64 - v.leading_zeros() as usize; // position of MSB + 1
+    for _ in 0..nbits - 1 {
+        w.push_bit(false);
+    }
+    // MSB-first payload
+    for i in (0..nbits).rev() {
+        w.push_bit((v >> i) & 1 == 1);
+    }
+}
+
+pub fn decode_gamma(r: &mut BitReader) -> crate::Result<u64> {
+    let mut zeros = 0usize;
+    while !r.read_bit()? {
+        zeros += 1;
+        anyhow::ensure!(zeros < 64, "gamma code too long");
+    }
+    let mut v: u64 = 1;
+    for _ in 0..zeros {
+        v = (v << 1) | r.read_bit()? as u64;
+    }
+    Ok(v)
+}
+
+/// Gamma code for v >= 0 (shifts by one).
+pub fn encode_gamma0(v: u64, w: &mut BitWriter) {
+    encode_gamma(v + 1, w);
+}
+
+pub fn decode_gamma0(r: &mut BitReader) -> crate::Result<u64> {
+    Ok(decode_gamma(r)? - 1)
+}
+
+/// Bits needed for the gamma code of v.
+pub fn gamma_bits(v: u64) -> usize {
+    let nbits = 64 - v.leading_zeros() as usize;
+    2 * nbits - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_codes() {
+        // gamma(1) = "1", gamma(2) = "010", gamma(3) = "011"
+        let mut w = BitWriter::new();
+        encode_gamma(1, &mut w);
+        assert_eq!(w.len_bits(), 1);
+        let mut w = BitWriter::new();
+        encode_gamma(2, &mut w);
+        assert_eq!(w.len_bits(), 3);
+        assert_eq!(gamma_bits(255), 15);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let values = [1u64, 2, 3, 4, 7, 8, 100, 1 << 20, u32::MAX as u64, 1 << 62];
+        let mut w = BitWriter::new();
+        for &v in &values {
+            encode_gamma(v, &mut w);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &values {
+            assert_eq!(decode_gamma(&mut r).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn zero_variant() {
+        let mut w = BitWriter::new();
+        for v in 0..50u64 {
+            encode_gamma0(v, &mut w);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for v in 0..50u64 {
+            assert_eq!(decode_gamma0(&mut r).unwrap(), v);
+        }
+    }
+}

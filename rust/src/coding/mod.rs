@@ -1,0 +1,24 @@
+//! Bit-exact wire encoding for quantized gradients.
+//!
+//! The paper reports two communication numbers per scheme (Tables 1 and 2):
+//! the *raw* bits of the quantized index stream and the bits after entropy
+//! coding ("within 5% of the entropy limit" with adaptive arithmetic
+//! coding).  This module produces both from real index streams:
+//!
+//! * [`bitio`]   — LSB-first bit reader/writer.
+//! * [`pack`]    — fixed-rate base-k packer (e.g. ternary at log2(3) bits
+//!   amortized: 5 trits per byte), the "raw bits" encoder.
+//! * [`entropy`] — empirical (order-0) entropy of a symbol stream.
+//! * [`arithmetic`] — order-0 *adaptive* arithmetic coder (AAC in the
+//!   paper), the "compressed bits" encoder. Decoder included; round-trip
+//!   tested.
+//! * [`elias`]   — Elias-gamma codes for headers/lengths.
+
+pub mod arithmetic;
+pub mod bitio;
+pub mod elias;
+pub mod entropy;
+pub mod huffman;
+pub mod pack;
+
+pub use bitio::{BitReader, BitWriter};

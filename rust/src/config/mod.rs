@@ -1,0 +1,192 @@
+//! Experiment configuration: a typed struct assembled from CLI args and/or
+//! simple `key = value` config files, mirroring what the paper's §4 setup
+//! describes (models, workers, optimizer, batch split, quantizer per group).
+
+use crate::quant::Scheme;
+use std::collections::BTreeMap;
+
+/// Optimizer choice (paper uses SGD and Adam, lr decay 0.98/epoch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptKind {
+    Sgd,
+    Adam,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "sgd" => Ok(OptKind::Sgd),
+            "adam" => Ok(OptKind::Adam),
+            _ => anyhow::bail!("unknown optimizer `{s}` (sgd|adam)"),
+        }
+    }
+
+    /// Paper defaults: SGD lr 0.01, Adam lr 0.001.
+    pub fn default_lr(&self) -> f32 {
+        match self {
+            OptKind::Sgd => 0.01,
+            OptKind::Adam => 0.001,
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model key in the artifact manifest ("fc300", "lenet", "cifarnet",
+    /// "transformer_tiny", ...).
+    pub model: String,
+    /// Number of workers P.
+    pub workers: usize,
+    /// Total batch per round (paper: 256, split evenly among workers).
+    pub total_batch: usize,
+    /// Quantization scheme for workers in P1 (and all workers unless
+    /// `scheme_p2` is set).
+    pub scheme: Scheme,
+    /// Optional scheme for the second worker group P2 (NDQSG runs: half the
+    /// workers DQSG, half nested — Alg. 2 / Fig. 6).
+    pub scheme_p2: Option<Scheme>,
+    pub opt: OptKind,
+    pub lr: f32,
+    /// Multiplicative lr decay applied per epoch (paper: 0.98).
+    pub lr_decay: f32,
+    /// Steps per "epoch" for decay purposes.
+    pub steps_per_epoch: usize,
+    pub rounds: usize,
+    pub seed: u64,
+    /// Evaluate every `eval_every` rounds (0 = only at the end).
+    pub eval_every: usize,
+    /// Number of synthetic eval examples.
+    pub eval_examples: usize,
+    /// Whether the server re-broadcasts the averaged gradient quantized
+    /// (paper assumes full-precision broadcast; kept for ablations).
+    pub quantize_broadcast: bool,
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "fc300".into(),
+            workers: 4,
+            total_batch: 256,
+            scheme: Scheme::Dithered { delta: 1.0 },
+            scheme_p2: None,
+            opt: OptKind::Sgd,
+            lr: 0.01,
+            lr_decay: 0.98,
+            steps_per_epoch: 100,
+            rounds: 200,
+            seed: 42,
+            eval_every: 50,
+            eval_examples: 1024,
+            quantize_broadcast: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Per-worker examples per round, rounded down to a size compatible
+    /// with the AOT micro-batch of 32 (b % 32 == 0, or b a power of two
+    /// <= 32 so exact tiling applies — see runtime::chunk_plan).
+    pub fn per_worker_batch(&self) -> usize {
+        let req = (self.total_batch / self.workers.max(1)).max(1);
+        if req >= 32 {
+            (req / 32) * 32
+        } else {
+            // largest power of two <= req (divides 32)
+            1 << (usize::BITS - 1 - req.leading_zeros())
+        }
+    }
+
+    /// Parse a simple `key = value` config file (comments with '#').
+    pub fn from_file(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut kv = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("{}:{}: expected key = value", path.display(), lineno + 1))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let mut cfg = Self::default();
+        cfg.apply_kv(&kv)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_kv(&mut self, kv: &BTreeMap<String, String>) -> crate::Result<()> {
+        for (k, v) in kv {
+            match k.as_str() {
+                "model" => self.model = v.clone(),
+                "workers" => self.workers = v.parse()?,
+                "total_batch" => self.total_batch = v.parse()?,
+                "scheme" => self.scheme = Scheme::parse(v)?,
+                "scheme_p2" => {
+                    self.scheme_p2 = if v == "none" { None } else { Some(Scheme::parse(v)?) }
+                }
+                "opt" => {
+                    self.opt = OptKind::parse(v)?;
+                    self.lr = self.opt.default_lr();
+                }
+                "lr" => self.lr = v.parse()?,
+                "lr_decay" => self.lr_decay = v.parse()?,
+                "steps_per_epoch" => self.steps_per_epoch = v.parse()?,
+                "rounds" => self.rounds = v.parse()?,
+                "seed" => self.seed = v.parse()?,
+                "eval_every" => self.eval_every = v.parse()?,
+                "eval_examples" => self.eval_examples = v.parse()?,
+                "quantize_broadcast" => self.quantize_broadcast = v.parse()?,
+                "artifacts_dir" => self.artifacts_dir = v.clone(),
+                _ => anyhow::bail!("unknown config key `{k}`"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_worker_batch_split() {
+        let mut c = TrainConfig::default();
+        c.total_batch = 256;
+        c.workers = 8;
+        assert_eq!(c.per_worker_batch(), 32);
+        c.workers = 32;
+        assert_eq!(c.per_worker_batch(), 8);
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("ndq_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.cfg");
+        std::fs::write(
+            &p,
+            "# comment\nmodel = lenet\nworkers = 8\nscheme = qsgd:2\nopt = adam\nrounds = 10\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.model, "lenet");
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.scheme, Scheme::Qsgd { m: 2 });
+        assert_eq!(c.opt, OptKind::Adam);
+        assert_eq!(c.lr, 0.001); // adam default
+        assert_eq!(c.rounds, 10);
+    }
+
+    #[test]
+    fn bad_key_rejected() {
+        let mut c = TrainConfig::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("bogus".to_string(), "1".to_string());
+        assert!(c.apply_kv(&kv).is_err());
+    }
+}

@@ -1,0 +1,33 @@
+//! Synthetic datasets standing in for MNIST / CIFAR-10 / a text corpus
+//! (none are available in this offline image — see DESIGN.md substitution
+//! table).  Design goals: deterministic from a seed, shardable per worker,
+//! learnable-but-not-trivial so accuracy curves are a meaningful
+//! convergence signal, and gradient statistics that are dense and
+//! approximately Gaussian around the true gradient (the paper's Lemma-3
+//! modelling assumption).
+
+pub mod images;
+pub mod tokens;
+
+pub use images::{ImageDataset, ImageKind};
+pub use tokens::TokenDataset;
+
+/// A classification batch: `x` is row-major [b, feat], `y` labels.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub b: usize,
+    pub feat: usize,
+}
+
+impl Batch {
+    pub fn new(b: usize, feat: usize) -> Self {
+        Self {
+            x: vec![0f32; b * feat],
+            y: vec![0i32; b],
+            b,
+            feat,
+        }
+    }
+}

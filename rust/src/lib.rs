@@ -1,0 +1,53 @@
+//! # ndq — Nested Dithered Quantization for distributed training
+//!
+//! Production-grade reproduction of *"Nested Dithered Quantization for
+//! Communication Reduction in Distributed Training"* (Abdi & Fekri, 2019)
+//! as the Layer-3 coordinator of a three-layer Rust + JAX + Pallas stack.
+//!
+//! * **Layer 1/2** (build time, `python/compile/`): the paper's models and
+//!   the Pallas quantization kernels, AOT-lowered to HLO text artifacts.
+//! * **Layer 3** (this crate): the distributed-training coordinator — the
+//!   full quantizer suite ([`quant`]), bit-exact wire encoding ([`coding`]),
+//!   shared-seed dither reproduction ([`prng`]), the synchronous
+//!   parameter-server protocol ([`train`]), optimizers ([`opt`]), synthetic
+//!   datasets ([`data`]), and the PJRT runtime that executes the AOT
+//!   artifacts ([`runtime`]). Python never runs on the training path.
+//!
+//! ## Quick tour
+//!
+//! ```
+//! use ndq::quant::{dithered::DitheredQuantizer, GradQuantizer};
+//! use ndq::prng::DitherStream;
+//!
+//! // Worker side: encode a gradient with DQSG (Alg. 1 of the paper).
+//! let grad = vec![0.3f32, -0.1, 0.7, 0.02];
+//! let mut q = DitheredQuantizer::new(0.5); // Delta = 1/2 => 5-level quantizer
+//! let mut stream = DitherStream::new(42, /*worker=*/0);
+//! let msg = q.encode(&grad, &mut stream.round(0));
+//!
+//! // Server side: regenerate the dither from the shared seed and decode.
+//! let mut stream2 = DitherStream::new(42, 0);
+//! let recon = q.decode(&msg, &mut stream2.round(0), None).unwrap();
+//! assert_eq!(recon.len(), grad.len());
+//! ```
+//!
+//! See `DESIGN.md` for the per-experiment index and `examples/` for
+//! end-to-end drivers.
+
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod data;
+pub mod opt;
+pub mod prng;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,168 @@
+//! `ndq` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train      run a distributed training round loop (the paper's Alg. 1/2)
+//!   info       summarize the artifact manifest
+//!   quantize   encode/decode a synthetic gradient with every scheme
+//!
+//! Examples:
+//!   ndq train --model fc300 --workers 8 --scheme dqsg:1.0 --rounds 200
+//!   ndq train --model fc300 --workers 8 --scheme dqsg:0.5 \
+//!             --scheme-p2 nested:0.333333:3:1.0 --rounds 200   # Fig. 6
+//!   ndq quantize --n 100000
+
+use ndq::cli::Args;
+use ndq::config::{OptKind, TrainConfig};
+use ndq::prng::DitherStream;
+use ndq::quant::Scheme;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> ndq::Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = if argv.first().map(|s| !s.starts_with("--")).unwrap_or(false) {
+        argv.remove(0)
+    } else {
+        "help".to_string()
+    };
+    match sub.as_str() {
+        "train" => cmd_train(argv),
+        "info" => cmd_info(argv),
+        "quantize" => cmd_quantize(argv),
+        _ => {
+            println!(
+                "ndq — Nested Dithered Quantization distributed trainer\n\n\
+                 USAGE: ndq <train|info|quantize> [options]\n\
+                 Run `ndq <subcommand> --help` for options."
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
+    let args = Args::new("ndq train", "run distributed training with quantized gradients")
+        .opt("model", "fc300", "model: fc300|lenet|cifarnet|transformer_tiny")
+        .opt("workers", "4", "number of workers P")
+        .opt("scheme", "dqsg:1.0", "quantizer: baseline|dqsg:D|dqsg:D:partK|qsgd:M|terngrad|onebit|nested:D1:k:a")
+        .opt("scheme-p2", "none", "scheme for the second worker half (NDQSG runs)")
+        .opt("rounds", "200", "training rounds")
+        .opt("total-batch", "256", "total batch split across workers")
+        .opt("opt", "sgd", "optimizer: sgd|adam")
+        .opt("lr", "auto", "learning rate (auto = paper default)")
+        .opt("seed", "42", "run seed (dither + data)")
+        .opt("eval-every", "50", "evaluate every N rounds")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("report", "", "write the JSON report to this path")
+        .flag("quiet", "suppress per-eval logging")
+        .parse_from(argv)?;
+
+    let mut cfg = TrainConfig::default();
+    cfg.model = args.get("model");
+    cfg.workers = args.get_usize("workers")?;
+    cfg.scheme = Scheme::parse(&args.get("scheme"))?;
+    let p2 = args.get("scheme-p2");
+    cfg.scheme_p2 = if p2 == "none" { None } else { Some(Scheme::parse(&p2)?) };
+    cfg.rounds = args.get_usize("rounds")?;
+    cfg.total_batch = args.get_usize("total-batch")?;
+    cfg.opt = OptKind::parse(&args.get("opt"))?;
+    cfg.lr = match args.get("lr").as_str() {
+        "auto" => cfg.opt.default_lr(),
+        s => s.parse()?,
+    };
+    cfg.seed = args.get_u64("seed")?;
+    cfg.eval_every = args.get_usize("eval-every")?;
+    cfg.artifacts_dir = args.get("artifacts");
+
+    let mut trainer = ndq::train::Trainer::new(cfg)?;
+    trainer.verbose = !args.get_flag("quiet");
+    let report = trainer.run()?;
+    println!(
+        "\n{}  final_acc={:.3}  eval_loss={:.4}\n  uplink: {:.1} Kbit/msg raw, {:.1} Kbit/msg entropy-limit\n  wall: {:.1}s",
+        report.config_label,
+        report.final_accuracy,
+        report.final_eval_loss,
+        report.comm.kbits_per_msg_raw(),
+        report.comm.kbits_per_msg_entropy(),
+        report.wall_secs
+    );
+    let out = args.get("report");
+    if !out.is_empty() {
+        std::fs::write(&out, report.to_json().to_string())?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> ndq::Result<()> {
+    let args = Args::new("ndq info", "summarize the artifact manifest")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse_from(argv)?;
+    let m = ndq::runtime::Manifest::load(std::path::Path::new(&args.get("artifacts")))?;
+    println!("models:");
+    for (name, info) in &m.models {
+        println!(
+            "  {name:<20} n_params={:<10} {}",
+            info.n_params,
+            if info.vocab > 0 {
+                format!("LM vocab={} seq={}", info.vocab, info.seq_len)
+            } else {
+                format!("image feat={} classes={}", info.feature_dim, info.n_classes)
+            }
+        );
+    }
+    println!("artifacts ({}):", m.artifacts.len());
+    for (key, a) in &m.artifacts {
+        println!("  {key:<28} {}", a.file.display());
+    }
+    Ok(())
+}
+
+fn cmd_quantize(argv: Vec<String>) -> ndq::Result<()> {
+    let args = Args::new("ndq quantize", "encode/decode a synthetic gradient with every scheme")
+        .opt("n", "266610", "gradient length (default = FC-300-100)")
+        .opt("seed", "0", "rng seed")
+        .parse_from(argv)?;
+    let n = args.get_usize("n")?;
+    let mut rng = ndq::prng::Xoshiro256::new(args.get_u64("seed")?);
+    let g: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.1).collect();
+    println!(
+        "{:<22} {:>12} {:>12} {:>12} {:>12}",
+        "scheme", "raw Kbit", "H Kbit", "AAC Kbit", "rmse"
+    );
+    for scheme in [
+        Scheme::Baseline,
+        Scheme::Dithered { delta: 1.0 },
+        Scheme::Dithered { delta: 0.5 },
+        Scheme::Qsgd { m: 1 },
+        Scheme::Terngrad,
+        Scheme::OneBit,
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+    ] {
+        let mut q = scheme.build();
+        let stream = DitherStream::new(1, 0);
+        let msg = q.encode(&g, &mut stream.round(0));
+        let recon = if q.needs_side_info() {
+            // side info: the gradient plus small noise, as in Alg. 2
+            let y: Vec<f32> = g.iter().map(|&x| x + 0.001 * rng.next_normal()).collect();
+            q.decode(&msg, &mut stream.round(0), Some(&y))?
+        } else {
+            q.decode(&msg, &mut stream.round(0), None)?
+        };
+        let rmse = (ndq::tensor::sq_dist(&g, &recon) / n as f64).sqrt();
+        println!(
+            "{:<22} {:>12.1} {:>12.1} {:>12.1} {:>12.6}",
+            scheme.label(),
+            msg.raw_bits() as f64 / 1000.0,
+            msg.entropy_bits() / 1000.0,
+            msg.aac_bits() as f64 / 1000.0,
+            rmse
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,206 @@
+//! Optimizers applied to the flat parameter vector (paper §4: SGD lr 0.01
+//! and Adam lr 0.001, both with 0.98/epoch decay). All workers apply the
+//! *same* averaged gradient, so running the optimizer identically on every
+//! worker (or once on the leader) keeps replicas bit-identical.
+
+use crate::config::OptKind;
+
+pub trait Optimizer: Send {
+    /// One update: params -= step(grad), using the current learning rate.
+    fn step(&mut self, params: &mut [f32], grad: &[f32]);
+    fn set_lr(&mut self, lr: f32);
+    fn lr(&self) -> f32;
+}
+
+/// Plain SGD (optionally with classical momentum).
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    lr: f32,
+    momentum: f32,
+    velocity: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Self {
+            lr,
+            momentum: 0.0,
+            velocity: Vec::new(),
+        }
+    }
+
+    pub fn with_momentum(lr: f32, momentum: f32) -> Self {
+        Self {
+            lr,
+            momentum,
+            velocity: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        if self.momentum == 0.0 {
+            for (p, &g) in params.iter_mut().zip(grad) {
+                *p -= self.lr * g;
+            }
+        } else {
+            if self.velocity.len() != params.len() {
+                self.velocity = vec![0f32; params.len()];
+            }
+            for ((p, v), &g) in params.iter_mut().zip(&mut self.velocity).zip(grad) {
+                *v = self.momentum * *v + g;
+                *p -= self.lr * *v;
+            }
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        if self.m.len() != params.len() {
+            self.m = vec![0f32; params.len()];
+            self.v = vec![0f32; params.len()];
+            self.t = 0;
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let lr_t = self.lr * b2t.sqrt() / b1t;
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            params[i] -= lr_t * self.m[i] / (self.v[i].sqrt() + self.eps);
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+}
+
+/// Factory from config.
+pub fn build(kind: OptKind, lr: f32) -> Box<dyn Optimizer> {
+    match kind {
+        OptKind::Sgd => Box::new(Sgd::new(lr)),
+        OptKind::Adam => Box::new(Adam::new(lr)),
+    }
+}
+
+/// Paper's schedule: multiply lr by `decay` every epoch.
+pub fn epoch_decay(opt: &mut dyn Optimizer, decay: f32) {
+    let lr = opt.lr() * decay;
+    opt.set_lr(lr);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        // minimize 0.5*||x - c||^2; grad = x - c
+        let c = [3.0f32, -1.0, 0.5];
+        let mut x = vec![0f32; 3];
+        let mut opt = Sgd::new(0.1);
+        for _ in 0..200 {
+            let g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| xi - ci).collect();
+            opt.step(&mut x, &g);
+        }
+        for (xi, ci) in x.iter().zip(&c) {
+            assert!((xi - ci).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn momentum_accelerates_ill_conditioned() {
+        let solve = |mut opt: Box<dyn Optimizer>| {
+            let mut x = vec![10.0f32, 10.0];
+            for _ in 0..100 {
+                let g = vec![0.01 * x[0], 1.0 * x[1]];
+                opt.step(&mut x, &g);
+            }
+            x[0].abs()
+        };
+        let plain = solve(Box::new(Sgd::new(0.5)));
+        let heavy = solve(Box::new(Sgd::with_momentum(0.5, 0.9)));
+        assert!(heavy < plain, "momentum {heavy} vs plain {plain}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let c = [3.0f32, -1.0, 0.5];
+        let mut x = vec![0f32; 3];
+        let mut opt = Adam::new(0.05);
+        for _ in 0..2000 {
+            let g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| xi - ci).collect();
+            opt.step(&mut x, &g);
+        }
+        for (xi, ci) in x.iter().zip(&c) {
+            assert!((xi - ci).abs() < 1e-2, "{xi} vs {ci}");
+        }
+    }
+
+    #[test]
+    fn decay_schedule() {
+        let mut opt = Sgd::new(0.01);
+        epoch_decay(&mut opt, 0.98);
+        assert!((opt.lr() - 0.0098).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_inputs_give_identical_states() {
+        // replicas applying the same averaged gradient stay bit-identical
+        let g = vec![0.1f32, -0.2, 0.3];
+        let mut a = vec![1f32, 2.0, 3.0];
+        let mut b = a.clone();
+        let mut oa = Adam::new(0.001);
+        let mut ob = Adam::new(0.001);
+        for _ in 0..50 {
+            oa.step(&mut a, &g);
+            ob.step(&mut b, &g);
+        }
+        assert_eq!(a, b);
+    }
+}

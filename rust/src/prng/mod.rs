@@ -1,0 +1,165 @@
+//! Deterministic PRNGs for dither reproduction and data synthesis.
+//!
+//! The paper's Alg. 1 hinges on the worker and the server generating **the
+//! same pseudo-random dither sequence** from a shared seed, with the seed
+//! "updated according to a predetermined algorithm" every iteration.  We
+//! realize this with a *counter-based* generator ([`Philox4x32`]): the
+//! dither stream for worker `p` at round `t` is a pure function of
+//! `(run_seed, p, t, element_index)`, so server-side regeneration needs no
+//! state synchronization at all, workers can be decoded in any order, and a
+//! crashed server can re-derive any historical round. [`Xoshiro256`] is the
+//! fast sequential generator used for data synthesis and tests.
+
+pub mod philox;
+pub mod xoshiro;
+
+pub use philox::Philox4x32;
+pub use xoshiro::Xoshiro256;
+
+/// Per-worker dither source implementing the paper's seed schedule.
+///
+/// `DitherStream::new(run_seed, worker)` is held by both the worker and the
+/// server (Alg. 1 keeps "a copy of s_p's at the server"); `round(t)`
+/// instantiates the generator for training round `t` — the "update the seed
+/// number" step, realized as a counter jump so it cannot collide with any
+/// other round.
+#[derive(Debug, Clone)]
+pub struct DitherStream {
+    run_seed: u64,
+    worker: u32,
+}
+
+impl DitherStream {
+    pub fn new(run_seed: u64, worker: u32) -> Self {
+        Self { run_seed, worker }
+    }
+
+    /// Generator for training round `round`, starting at element 0.
+    pub fn round(&self, round: u64) -> DitherGen {
+        DitherGen::new(Philox4x32::new_keyed(self.run_seed, self.worker, round))
+    }
+
+    /// Generator for (round, tensor) when gradients are sent per-tensor or
+    /// per-partition: each partition gets an independent, reproducible lane.
+    pub fn round_tensor(&self, round: u64, tensor: u32) -> DitherGen {
+        DitherGen::new(Philox4x32::new_keyed(
+            self.run_seed,
+            self.worker,
+            round.wrapping_mul(0x1_0000_0000).wrapping_add(tensor as u64),
+        ))
+    }
+}
+
+/// Buffered uniform-f32 generator over a Philox counter stream.
+#[derive(Debug, Clone)]
+pub struct DitherGen {
+    rng: Philox4x32,
+    buf: [u32; 4],
+    pos: usize,
+}
+
+impl DitherGen {
+    fn new(rng: Philox4x32) -> Self {
+        Self { rng, buf: [0; 4], pos: 4 }
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.pos == 4 {
+            self.buf = self.rng.next_block();
+            self.pos = 0;
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        v
+    }
+
+    /// Uniform in [0, 1) with 24 bits of mantissa entropy.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform in [-half, half) — the dither distribution U[-Delta/2, Delta/2].
+    #[inline]
+    pub fn next_dither(&mut self, half: f32) -> f32 {
+        (self.next_f32() - 0.5) * 2.0 * half
+    }
+
+    /// Fill `out` with iid U[-half, half) dither values.
+    pub fn fill_dither(&mut self, half: f32, out: &mut [f32]) {
+        // 4-wide unrolled fill straight from Philox blocks (hot path).
+        let scale = 2.0 * half / 16_777_216.0;
+        let mut chunks = out.chunks_exact_mut(4);
+        for c in &mut chunks {
+            let b = self.rng.next_block();
+            c[0] = (b[0] >> 8) as f32 * scale - half;
+            c[1] = (b[1] >> 8) as f32 * scale - half;
+            c[2] = (b[2] >> 8) as f32 * scale - half;
+            c[3] = (b[3] >> 8) as f32 * scale - half;
+        }
+        for v in chunks.into_remainder() {
+            *v = self.next_dither(half);
+        }
+        // keep the buffered path consistent: drop any partially-used block
+        self.pos = 4;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_and_server_streams_agree_bitwise() {
+        let w = DitherStream::new(1234, 3);
+        let s = DitherStream::new(1234, 3);
+        for round in [0u64, 1, 17, 1_000_000] {
+            let mut a = w.round(round);
+            let mut b = s.round(round);
+            for _ in 0..257 {
+                assert_eq!(a.next_u32(), b.next_u32());
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_workers_rounds_are_distinct() {
+        let mut a = DitherStream::new(7, 0).round(0);
+        let mut b = DitherStream::new(7, 1).round(0);
+        let mut c = DitherStream::new(7, 0).round(1);
+        let va: Vec<u32> = (0..16).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..16).map(|_| b.next_u32()).collect();
+        let vc: Vec<u32> = (0..16).map(|_| c.next_u32()).collect();
+        assert_ne!(va, vb);
+        assert_ne!(va, vc);
+        assert_ne!(vb, vc);
+    }
+
+    #[test]
+    fn fill_matches_scalar_path_statistics() {
+        // fill_dither uses the block path; verify the values are in range
+        // and have ~uniform moments.
+        let mut g = DitherStream::new(9, 0).round(5);
+        let mut buf = vec![0f32; 100_003];
+        g.fill_dither(0.25, &mut buf);
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / buf.len() as f64;
+        let var: f64 =
+            buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!(buf.iter().all(|&x| (-0.25..0.25).contains(&x)));
+        assert!(mean.abs() < 1e-3, "mean={mean}");
+        // var of U[-0.25, 0.25) = 0.25^2 * 4 / 12 = 1/48
+        assert!((var - 1.0 / 48.0).abs() < 5e-4, "var={var}");
+    }
+
+    #[test]
+    fn round_tensor_lanes_independent() {
+        let s = DitherStream::new(11, 2);
+        let mut a = s.round_tensor(3, 0);
+        let mut b = s.round_tensor(3, 1);
+        assert_ne!(
+            (0..8).map(|_| a.next_u32()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u32()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,197 @@
+//! Philox4x32-10 counter-based PRNG (Salmon et al., SC'11).
+//!
+//! Chosen for dither generation because it is *counter-based*: output block
+//! `i` of stream `(key)` is a pure function, so the server can regenerate
+//! any worker's dither for any round without replaying state — exactly the
+//! "same random number generator algorithm and seed number" contract of
+//! Alg. 1, but random-access. Passes BigCrush; 2^130 distinct streams.
+
+const PHILOX_M0: u32 = 0xD251_1F53;
+const PHILOX_M1: u32 = 0xCD9E_8D57;
+const PHILOX_W0: u32 = 0x9E37_79B9; // golden ratio
+const PHILOX_W1: u32 = 0xBB67_AE85; // sqrt(3) - 1
+
+/// A Philox4x32-10 stream: 128-bit counter, 64-bit key.
+#[derive(Debug, Clone)]
+pub struct Philox4x32 {
+    counter: [u32; 4],
+    key: [u32; 2],
+}
+
+#[inline(always)]
+fn mulhilo(a: u32, b: u32) -> (u32, u32) {
+    let p = (a as u64) * (b as u64);
+    ((p >> 32) as u32, p as u32)
+}
+
+#[inline(always)]
+fn philox_round(ctr: [u32; 4], key: [u32; 2]) -> [u32; 4] {
+    let (hi0, lo0) = mulhilo(PHILOX_M0, ctr[0]);
+    let (hi1, lo1) = mulhilo(PHILOX_M1, ctr[2]);
+    [hi1 ^ ctr[1] ^ key[0], lo1, hi0 ^ ctr[3] ^ key[1], lo0]
+}
+
+impl Philox4x32 {
+    /// Raw constructor from a 64-bit key and 128-bit starting counter.
+    pub fn new(key: u64, counter: u128) -> Self {
+        Self {
+            counter: [
+                counter as u32,
+                (counter >> 32) as u32,
+                (counter >> 64) as u32,
+                (counter >> 96) as u32,
+            ],
+            key: [key as u32, (key >> 32) as u32],
+        }
+    }
+
+    /// Domain-separated stream for (run_seed, worker, round): the key mixes
+    /// seed and worker; the round occupies the counter's high 64 bits so
+    /// that per-round streams can never overlap (low 64 bits = block index,
+    /// i.e. 2^66 bytes per round before wrap).
+    pub fn new_keyed(run_seed: u64, worker: u32, round: u64) -> Self {
+        // splitmix64 finalizer decorrelates adjacent (seed, worker) keys.
+        let mut k = run_seed ^ ((worker as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+        k = splitmix64(k);
+        Self::new(k, (round as u128) << 64)
+    }
+
+    /// Produce the next block of 4 u32s, advancing the counter.
+    #[inline]
+    pub fn next_block(&mut self) -> [u32; 4] {
+        let mut ctr = self.counter;
+        let mut key = self.key;
+        // 10 rounds, bumping the key by the Weyl constants each round.
+        for _ in 0..10 {
+            ctr = philox_round(ctr, key);
+            key[0] = key[0].wrapping_add(PHILOX_W0);
+            key[1] = key[1].wrapping_add(PHILOX_W1);
+        }
+        // 128-bit counter increment
+        let (c0, carry0) = self.counter[0].overflowing_add(1);
+        self.counter[0] = c0;
+        if carry0 {
+            let (c1, carry1) = self.counter[1].overflowing_add(1);
+            self.counter[1] = c1;
+            if carry1 {
+                let (c2, carry2) = self.counter[2].overflowing_add(1);
+                self.counter[2] = c2;
+                if carry2 {
+                    self.counter[3] = self.counter[3].wrapping_add(1);
+                }
+            }
+        }
+        ctr
+    }
+
+    /// Random access: the block at index `i` of this stream without
+    /// disturbing the sequential position.
+    pub fn block_at(&self, i: u64) -> [u32; 4] {
+        let base = ((self.counter[3] as u128) << 96) | ((self.counter[2] as u128) << 64);
+        let mut tmp = Self {
+            counter: [0; 4],
+            key: self.key,
+        };
+        let c = base + i as u128;
+        tmp.counter = [
+            c as u32,
+            (c >> 32) as u32,
+            (c >> 64) as u32,
+            (c >> 96) as u32,
+        ];
+        tmp.next_block()
+    }
+}
+
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answer_philox4x32_10() {
+        // Reference vector from the Random123 distribution (philox4x32-10):
+        // counter = {0,0,0,0}, key = {0,0}
+        let mut p = Philox4x32::new(0, 0);
+        assert_eq!(
+            p.next_block(),
+            [0x6627_e8d5, 0xe169_c58d, 0xbc57_ac4c, 0x9b00_dbd8]
+        );
+    }
+
+    #[test]
+    fn extreme_inputs_stable() {
+        // all-ones counter/key must produce a well-mixed block (not a KAT —
+        // the zero-vector KAT above pins the algorithm; this guards the
+        // carry/overflow paths at the extremes).
+        let mut p = Philox4x32 {
+            counter: [u32::MAX; 4],
+            key: [u32::MAX; 2],
+        };
+        let b = p.next_block();
+        assert_eq!(p.counter, [0, 0, 0, 0]); // full wraparound
+        assert_ne!(b, [0, 0, 0, 0]);
+        assert_ne!(b, [u32::MAX; 4]);
+        // deterministic: same extreme inputs, same block
+        let mut p2 = Philox4x32 {
+            counter: [u32::MAX; 4],
+            key: [u32::MAX; 2],
+        };
+        assert_eq!(p2.next_block(), b);
+    }
+
+    #[test]
+    fn counter_increments_produce_distinct_blocks() {
+        let mut p = Philox4x32::new(42, 0);
+        let a = p.next_block();
+        let b = p.next_block();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn counter_carry_chain() {
+        let mut p = Philox4x32::new(1, (1u128 << 32) - 1);
+        let _ = p.next_block();
+        assert_eq!(p.counter, [0, 1, 0, 0]);
+        let mut p = Philox4x32::new(1, (1u128 << 64) - 1);
+        let _ = p.next_block();
+        assert_eq!(p.counter, [0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn block_at_is_random_access_consistent() {
+        let mut seq = Philox4x32::new_keyed(99, 1, 7);
+        let ra = seq.clone();
+        let b0 = seq.next_block();
+        let b1 = seq.next_block();
+        let b2 = seq.next_block();
+        assert_eq!(ra.block_at(0), b0);
+        assert_eq!(ra.block_at(1), b1);
+        assert_eq!(ra.block_at(2), b2);
+    }
+
+    #[test]
+    fn uniformity_chi_square() {
+        // 16 bins over 64k samples: chi-square should be ~15 +/- wide margin
+        let mut p = Philox4x32::new(7, 0);
+        let mut bins = [0u32; 16];
+        for _ in 0..16_384 {
+            for v in p.next_block() {
+                bins[(v >> 28) as usize] += 1;
+            }
+        }
+        let expect = (16_384.0 * 4.0) / 16.0;
+        let chi2: f64 = bins
+            .iter()
+            .map(|&c| (c as f64 - expect).powi(2) / expect)
+            .sum();
+        assert!(chi2 < 50.0, "chi2={chi2}");
+    }
+}

@@ -1,0 +1,155 @@
+//! xoshiro256** — fast sequential PRNG (Blackman & Vigna, 2018).
+//!
+//! Used for everything that is *not* the dither contract: synthetic data
+//! generation, weight noise, test-input generation, Monte-Carlo in benches.
+
+use super::philox::splitmix64;
+
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 expansion per the reference implementation.
+        let mut x = seed;
+        let mut s = [0u64; 4];
+        for v in &mut s {
+            x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            *v = splitmix64(x);
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform in [0, 1) with f64 precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0)
+    }
+
+    /// Uniform integer in [0, n) (Lemire's nearly-divisionless method).
+    #[inline]
+    pub fn next_below(&mut self, n: u32) -> u32 {
+        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+    }
+
+    /// Standard normal via Box-Muller (pairs cached would complicate state;
+    /// we just burn one draw — data-gen is not the hot path).
+    pub fn next_normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Fill with iid N(0, sigma^2).
+    pub fn fill_normal(&mut self, sigma: f32, out: &mut [f32]) {
+        for v in out {
+            *v = sigma * self.next_normal();
+        }
+    }
+
+    /// Fisher-Yates shuffle of indices 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = self.next_below(i as u32 + 1) as usize;
+            idx.swap(i, j);
+        }
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a: Vec<u64> = {
+            let mut r = Xoshiro256::new(5);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Xoshiro256::new(5);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        let c: Vec<u64> = {
+            let mut r = Xoshiro256::new(6);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::new(1);
+        let n = 100_000;
+        let mut sum = 0f64;
+        let mut sumsq = 0f64;
+        for _ in 0..n {
+            let x = r.next_normal() as f64;
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut r = Xoshiro256::new(2);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Xoshiro256::new(3);
+        let p = r.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+    }
+}

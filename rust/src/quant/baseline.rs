@@ -1,0 +1,69 @@
+//! Baseline: unquantized f32 gradients (32 bits/coordinate on the wire).
+
+use super::{GradQuantizer, SchemeId, WireMsg};
+use crate::coding::{BitReader, BitWriter};
+use crate::prng::DitherGen;
+
+#[derive(Debug, Clone, Default)]
+pub struct BaselineQuantizer;
+
+impl GradQuantizer for BaselineQuantizer {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::Baseline
+    }
+
+    fn encode(&mut self, g: &[f32], _dither: &mut DitherGen) -> WireMsg {
+        let mut w = BitWriter::new();
+        for &v in g {
+            w.push_f32(v);
+        }
+        let payload_bits = w.len_bits();
+        WireMsg {
+            scheme: SchemeId::Baseline,
+            n: g.len(),
+            m: 0,
+            payload: w.into_bytes(),
+            payload_bits,
+            indices: Vec::new(),
+            scales: Vec::new(),
+        }
+    }
+
+    fn decode(
+        &self,
+        msg: &WireMsg,
+        _dither: &mut DitherGen,
+        _side: Option<&[f32]>,
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(msg.scheme == SchemeId::Baseline, "scheme mismatch");
+        let mut r = BitReader::new(&msg.payload);
+        (0..msg.n).map(|_| r.read_f32()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::DitherStream;
+
+    #[test]
+    fn lossless_roundtrip_and_32_bits() {
+        let g = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, 1e30];
+        let mut q = BaselineQuantizer;
+        let stream = DitherStream::new(0, 0);
+        let msg = q.encode(&g, &mut stream.round(0));
+        assert_eq!(msg.raw_bits(), 32 * g.len());
+        let recon = q.decode(&msg, &mut stream.round(0), None).unwrap();
+        assert_eq!(recon, g);
+    }
+
+    #[test]
+    fn table1_baseline_kbits() {
+        // Table 1: FC-300-100 baseline = 8531.5 Kbit = 266,610 * 32 / 1000
+        assert_eq!(266_610 * 32, 8_531_520);
+    }
+}

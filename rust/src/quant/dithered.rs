@@ -1,0 +1,291 @@
+//! DQSG — Dithered Quantized Stochastic Gradient (paper §3.1, Alg. 1).
+//!
+//! Encode (worker p):
+//!   kappa = ||g||_inf
+//!   u ~ U[-Delta/2, Delta/2]^n from the shared (seed, worker, round) stream
+//!   q = clamp(round((g/kappa + u) / Delta), -M, M),   M = round(1/Delta)
+//!   transmit (kappa, q)   — the dither is NOT transmitted.
+//!
+//! Decode (server):
+//!   regenerate u from the same stream; g~ = kappa * (Delta * q - u).
+//!
+//! By Thm. 1 the error (g - g~)/kappa is U[-Delta/2, Delta/2], independent
+//! of g — the property the convergence analysis (Thm. 4/5) rests on.
+
+use super::{GradQuantizer, SchemeId, WireMsg};
+use crate::coding::{pack, BitReader, BitWriter};
+use crate::prng::DitherGen;
+use crate::tensor::linf_norm;
+
+#[derive(Debug, Clone)]
+pub struct DitheredQuantizer {
+    delta: f32,
+    m: i32,
+}
+
+impl DitheredQuantizer {
+    /// `delta` = quantization step on the normalized gradient; `1/delta`
+    /// rounded gives M, the (2M+1)-level alphabet.
+    pub fn new(delta: f32) -> Self {
+        assert!(delta > 0.0 && delta <= 1.0, "Delta must be in (0, 1]");
+        let m = (1.0 / delta).round().max(1.0) as i32;
+        Self { delta, m }
+    }
+
+    pub fn delta(&self) -> f32 {
+        self.delta
+    }
+
+    pub fn alphabet(&self) -> u32 {
+        (2 * self.m + 1) as u32
+    }
+
+    /// Quantize one slice into indices (the L1-kernel-equivalent hot loop).
+    /// Exposed for reuse by the partitioned variant.
+    pub(crate) fn quantize_into(
+        &self,
+        g: &[f32],
+        dither: &mut DitherGen,
+        u_buf: &mut Vec<f32>,
+        indices: &mut Vec<i32>,
+    ) -> f32 {
+        let kappa = linf_norm(g);
+        let inv_kappa = 1.0 / kappa;
+        let inv_delta = 1.0 / self.delta;
+        u_buf.resize(g.len(), 0.0);
+        dither.fill_dither(self.delta / 2.0, u_buf);
+        indices.reserve(g.len());
+        let m = self.m;
+        for (&gi, &ui) in g.iter().zip(u_buf.iter()) {
+            let t = (gi * inv_kappa + ui) * inv_delta;
+            let q = (t.round() as i32).clamp(-m, m);
+            indices.push(q);
+        }
+        kappa
+    }
+
+    /// Dequantize indices with the regenerated dither (server fast path).
+    pub fn dequantize(&self, indices: &[i32], kappa: f32, dither: &mut DitherGen) -> Vec<f32> {
+        let mut u = vec![0f32; indices.len()];
+        dither.fill_dither(self.delta / 2.0, &mut u);
+        indices
+            .iter()
+            .zip(u.iter())
+            .map(|(&q, &ui)| kappa * (self.delta * q as f32 - ui))
+            .collect()
+    }
+}
+
+impl GradQuantizer for DitheredQuantizer {
+    fn name(&self) -> &'static str {
+        "dqsg"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::Dithered
+    }
+
+    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
+        let mut u = Vec::new();
+        let mut indices = Vec::with_capacity(g.len());
+        let kappa = self.quantize_into(g, dither, &mut u, &mut indices);
+
+        let mut w = BitWriter::new();
+        super::write_scales(&mut w, &[kappa]);
+        pack::pack_base_k_signed(&indices, self.m, self.alphabet(), &mut w);
+        let payload_bits = w.len_bits();
+        WireMsg {
+            scheme: SchemeId::Dithered,
+            n: g.len(),
+            m: self.m,
+            payload: w.into_bytes(),
+            payload_bits,
+            indices,
+            scales: vec![kappa],
+        }
+    }
+
+    fn decode(
+        &self,
+        msg: &WireMsg,
+        dither: &mut DitherGen,
+        _side: Option<&[f32]>,
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(msg.scheme == SchemeId::Dithered, "scheme mismatch");
+        let mut r = BitReader::new(&msg.payload);
+        let kappa = r.read_f32()?;
+        let symbols = pack::unpack_base_k(&mut r, self.alphabet(), msg.n)?;
+        let indices: Vec<i32> = symbols
+            .into_iter()
+            .map(|s| pack::symbol_to_signed(s, self.m))
+            .collect();
+        Ok(self.dequantize(&indices, kappa, dither))
+    }
+
+    fn uses_shared_dither(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::DitherStream;
+    use crate::testing::{gens, prop_check};
+
+    fn enc_dec(g: &[f32], delta: f32, seed: u64) -> (WireMsg, Vec<f32>) {
+        let mut q = DitheredQuantizer::new(delta);
+        let stream = DitherStream::new(seed, 0);
+        let msg = q.encode(g, &mut stream.round(0));
+        let recon = q.decode(&msg, &mut stream.round(0), None).unwrap();
+        (msg, recon)
+    }
+
+    #[test]
+    fn error_bound_thm1() {
+        // |g - g~| <= kappa * Delta / 2 elementwise
+        let mut rng = crate::prng::Xoshiro256::new(1);
+        for delta in [1.0f32, 0.5, 0.25] {
+            let g: Vec<f32> = (0..5000).map(|_| rng.next_normal() * 0.3).collect();
+            let (msg, recon) = enc_dec(&g, delta, 7);
+            let kappa = msg.scales[0];
+            for (a, b) in g.iter().zip(&recon) {
+                assert!((a - b).abs() <= kappa * delta / 2.0 + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bits_match_table1_rate() {
+        // ternary: 1.6 bits/coord amortized + 32-bit kappa
+        let g = vec![0.1f32; 10_000];
+        let (msg, _) = enc_dec(&g, 1.0, 3);
+        let expect = pack::packed_bits(10_000, 3) + 32;
+        assert_eq!(msg.raw_bits(), expect);
+    }
+
+    #[test]
+    fn unbiased_monte_carlo() {
+        // E[g~] ~= g  (Lemma 3 P1), averaging over dither draws
+        let g = vec![0.3f32, -0.7, 0.05, 0.0, 0.49];
+        let mut acc = vec![0f64; g.len()];
+        let trials = 20_000;
+        for t in 0..trials {
+            let (_, recon) = enc_dec(&g, 0.5, t as u64);
+            for (a, r) in acc.iter_mut().zip(&recon) {
+                *a += *r as f64;
+            }
+        }
+        for (a, &gi) in acc.iter().zip(&g) {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - gi as f64).abs() < 0.01,
+                "biased: {mean} vs {gi}"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_matches_lemma3() {
+        // E||g~ - g||^2 = kappa^2 n Delta^2 / 12 (conditional on g)
+        let g: Vec<f32> = (0..64).map(|i| ((i as f32) / 64.0) - 0.5).collect();
+        let delta = 0.5f32;
+        let kappa = linf_norm(&g);
+        let mut sum = 0f64;
+        let trials = 5000;
+        for t in 0..trials {
+            let (_, recon) = enc_dec(&g, delta, 1000 + t as u64);
+            sum += crate::tensor::sq_dist(&g, &recon);
+        }
+        let measured = sum / trials as f64;
+        let expect = (kappa * kappa) as f64 * g.len() as f64 * (delta * delta) as f64 / 12.0;
+        assert!(
+            (measured - expect).abs() < 0.05 * expect,
+            "{measured} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn prop_payload_only_roundtrip() {
+        // decode sees payload + dither only; reconstruction must stay
+        // within the Thm.-1 bound for arbitrary (nasty) gradients.
+        prop_check(
+            "dqsg-roundtrip",
+            60,
+            gens::pair(gens::nasty_f32_vec(3000), gens::seed()),
+            |(g, seed)| {
+                for delta in [1.0f32, 0.25] {
+                    let mut q = DitheredQuantizer::new(delta);
+                    let stream = DitherStream::new(*seed, 1);
+                    let msg = q.encode(g, &mut stream.round(9));
+                    let recon = q.decode(&msg, &mut stream.round(9), None).map_err(|e| e.to_string())?;
+                    if recon.len() != g.len() {
+                        return Err("length mismatch".into());
+                    }
+                    let kappa = msg.scales[0];
+                    for (a, b) in g.iter().zip(&recon) {
+                        if (a - b).abs() > kappa * delta / 2.0 + kappa * 1e-5 {
+                            return Err(format!("error bound violated: {a} vs {b} (kappa={kappa})"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn wrong_round_dither_breaks_bound() {
+        // decoding with the wrong round's dither must NOT satisfy the bound
+        // (sanity that the dither actually matters)
+        let mut rng = crate::prng::Xoshiro256::new(2);
+        let g: Vec<f32> = (0..2000).map(|_| rng.next_normal()).collect();
+        let mut q = DitheredQuantizer::new(1.0);
+        let stream = DitherStream::new(5, 0);
+        let msg = q.encode(&g, &mut stream.round(0));
+        let recon = q.decode(&msg, &mut stream.round(1), None).unwrap();
+        let kappa = msg.scales[0];
+        let violations = g
+            .iter()
+            .zip(&recon)
+            .filter(|(a, b)| (**a - **b).abs() > kappa * 0.5 + 1e-5)
+            .count();
+        assert!(violations > 100, "only {violations} violations");
+    }
+
+    #[test]
+    fn golden_vectors_pin_oracle() {
+        // Pin against python ref (artifacts/golden.json) when available.
+        let path = std::path::Path::new("artifacts/golden.json");
+        if !path.exists() {
+            eprintln!("skipping golden test (artifacts not built)");
+            return;
+        }
+        let golden = crate::util::json::Json::parse_file(path).unwrap();
+        let g = golden.at(&["g"]).unwrap().as_f32_vec().unwrap();
+        for (key, delta) in [("dq_delta_1.0", 1.0f32), ("dq_delta_0.5", 0.5), ("dq_delta_0.25", 0.25)] {
+            let blk = golden.at(&[key]).unwrap();
+            let u = blk.at(&["u"]).unwrap().as_f32_vec().unwrap();
+            let q_want = blk.at(&["q"]).unwrap().as_i32_vec().unwrap();
+            let kappa_want = blk.at(&["kappa"]).unwrap().as_f64().unwrap() as f32;
+            let deq_want = blk.at(&["dequant"]).unwrap().as_f32_vec().unwrap();
+
+            // replicate quantize_into but with the golden dither
+            let kappa = linf_norm(&g);
+            assert!((kappa - kappa_want).abs() < 1e-6 * kappa_want.abs());
+            let m = (1.0 / delta).round() as i32;
+            let q_got: Vec<i32> = g
+                .iter()
+                .zip(&u)
+                .map(|(&gi, &ui)| {
+                    (((gi / kappa + ui) / delta).round() as i32).clamp(-m, m)
+                })
+                .collect();
+            assert_eq!(q_got, q_want, "indices diverge from jnp oracle at {key}");
+            for ((&q, &ui), &want) in q_got.iter().zip(&u).zip(&deq_want) {
+                let got = kappa * (delta * q as f32 - ui);
+                assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+            }
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! The paper's contribution: gradient quantizers with bit-exact wire codecs.
+//!
+//! All schemes implement [`GradQuantizer`] over flat f32 gradients:
+//!
+//! | scheme | module | paper |
+//! |---|---|---|
+//! | baseline (f32) | [`baseline`] | no quantization |
+//! | DQSG           | [`dithered`] | §3.1, Alg. 1 (ours) |
+//! | partitioned DQSG | [`partition`] | eq. (4) trade-off (ours) |
+//! | NDQSG          | [`nested`]   | §3.2, Alg. 2 (ours) |
+//! | QSGD           | [`stochastic`] | [5], = half-dithered (Lemma 2) |
+//! | TernGrad       | [`terngrad`] | [6] |
+//! | one-bit SGD    | [`onebit`]   | [1], with error feedback |
+//!
+//! Encoding produces a [`WireMsg`] whose `payload` is the exact byte stream
+//! a network transport would carry; `decode` parses that payload (and *only*
+//! that payload plus the shared-seed dither / side information), so the
+//! measured bits are honest.
+
+pub mod baseline;
+pub mod dithered;
+pub mod nested;
+pub mod onebit;
+pub mod partition;
+pub mod stochastic;
+pub mod terngrad;
+
+use crate::coding::{arithmetic, entropy, BitWriter};
+use crate::prng::DitherGen;
+
+/// Scheme discriminants on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SchemeId {
+    Baseline = 0,
+    Dithered = 1,
+    DitheredPartitioned = 2,
+    Qsgd = 3,
+    Terngrad = 4,
+    OneBit = 5,
+    Nested = 6,
+}
+
+/// A quantized-gradient message as it would cross the network.
+#[derive(Debug, Clone)]
+pub struct WireMsg {
+    pub scheme: SchemeId,
+    /// Number of gradient coordinates.
+    pub n: usize,
+    /// Index alphabet half-width: indices lie in [-m, m] (0 for baseline).
+    pub m: i32,
+    /// Bit-exact payload (scales + packed indices).
+    pub payload: Vec<u8>,
+    /// Exact number of meaningful bits in `payload`.
+    pub payload_bits: usize,
+    /// Cached decoded-side data for fast paths and statistics; NOT counted
+    /// as wire bytes and never read by `decode`.
+    pub indices: Vec<i32>,
+    pub scales: Vec<f32>,
+}
+
+impl WireMsg {
+    /// Raw wire size in bits (Table 1 metric).
+    pub fn raw_bits(&self) -> usize {
+        self.payload_bits
+    }
+
+    /// Order-0 entropy of the index stream plus incompressible scale bits
+    /// (Table 2's "resulting bit stream ... after entropy coding" limit).
+    pub fn entropy_bits(&self) -> f64 {
+        if self.m == 0 {
+            // baseline / onebit handle their own notion below
+            return self.payload_bits as f64;
+        }
+        entropy::signed_stream_entropy(&self.indices, self.m) * self.indices.len() as f64
+            + 32.0 * self.scales.len() as f64
+    }
+
+    /// Actual adaptive-arithmetic-coded size in bits (what ACC achieves).
+    pub fn aac_bits(&self) -> usize {
+        if self.m == 0 {
+            return self.payload_bits;
+        }
+        arithmetic::encoded_bits_signed(&self.indices, self.m) + 32 * self.scales.len()
+    }
+}
+
+/// A gradient quantizer: the worker-side encoder + server-side decoder.
+///
+/// `dither` is the shared-seed pseudo-random stream for this (worker,
+/// round): encode and decode MUST be called with *identically seeded*
+/// generators (the Alg. 1 contract).  Schemes that use only private
+/// randomness (QSGD, TernGrad) draw from the same stream at encode time and
+/// ignore it at decode time.
+pub trait GradQuantizer: Send {
+    fn name(&self) -> &'static str;
+
+    fn id(&self) -> SchemeId;
+
+    /// Quantize + serialize a gradient.
+    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg;
+
+    /// Parse + dequantize a message. `side` is the decoder side information
+    /// (only used by NDQSG: the running average of already-decoded SGs).
+    fn decode(
+        &self,
+        msg: &WireMsg,
+        dither: &mut DitherGen,
+        side: Option<&[f32]>,
+    ) -> crate::Result<Vec<f32>>;
+
+    /// Whether decode consumes the shared dither stream (DQSG/NDQSG).
+    fn uses_shared_dither(&self) -> bool {
+        false
+    }
+
+    /// Whether decode requires side information (NDQSG).
+    fn needs_side_info(&self) -> bool {
+        false
+    }
+}
+
+/// Write the standard payload prefix: scales as raw f32 bits.
+pub(crate) fn write_scales(w: &mut BitWriter, scales: &[f32]) {
+    for &s in scales {
+        w.push_f32(s);
+    }
+}
+
+/// Scheme configuration — parseable from CLI strings, buildable to a boxed
+/// quantizer. This is the config-system entry point used by the trainer,
+/// benches and examples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    /// No quantization: 32 bits/coordinate.
+    Baseline,
+    /// DQSG with step `delta` (Delta = 1/M).
+    Dithered { delta: f32 },
+    /// DQSG over `k` equal partitions, each with its own kappa (eq. 4).
+    DitheredPartitioned { delta: f32, k: usize },
+    /// QSGD with M levels (eq. 1).
+    Qsgd { m: i32 },
+    /// TernGrad with 2.5-sigma clipping.
+    Terngrad,
+    /// 1-bit SGD with error feedback.
+    OneBit,
+    /// NDQSG with nested pair (d1, d2 = ratio*d1) and shrinkage alpha.
+    Nested { d1: f32, ratio: u32, alpha: f32 },
+}
+
+impl Scheme {
+    pub fn build(&self) -> Box<dyn GradQuantizer> {
+        match *self {
+            Scheme::Baseline => Box::new(baseline::BaselineQuantizer),
+            Scheme::Dithered { delta } => Box::new(dithered::DitheredQuantizer::new(delta)),
+            Scheme::DitheredPartitioned { delta, k } => {
+                Box::new(partition::PartitionedDithered::new(delta, k))
+            }
+            Scheme::Qsgd { m } => Box::new(stochastic::QsgdQuantizer::new(m)),
+            Scheme::Terngrad => Box::new(terngrad::TerngradQuantizer::new()),
+            Scheme::OneBit => Box::new(onebit::OneBitQuantizer::new()),
+            Scheme::Nested { d1, ratio, alpha } => {
+                Box::new(nested::NestedQuantizer::new(d1, ratio, alpha))
+            }
+        }
+    }
+
+    /// Parse CLI syntax, e.g. `baseline`, `dqsg:0.5`, `dqsg:0.5:part8`,
+    /// `qsgd:2`, `terngrad`, `onebit`, `nested:0.3333:3:1.0`.
+    pub fn parse(s: &str) -> crate::Result<Scheme> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let bad = || anyhow::anyhow!("unknown scheme `{s}`");
+        match parts[0] {
+            "baseline" => Ok(Scheme::Baseline),
+            "dqsg" => {
+                let delta: f32 = parts.get(1).unwrap_or(&"1.0").parse()?;
+                if let Some(p) = parts.get(2) {
+                    let k: usize = p.strip_prefix("part").ok_or_else(bad)?.parse()?;
+                    Ok(Scheme::DitheredPartitioned { delta, k })
+                } else {
+                    Ok(Scheme::Dithered { delta })
+                }
+            }
+            "qsgd" => Ok(Scheme::Qsgd {
+                m: parts.get(1).unwrap_or(&"1").parse()?,
+            }),
+            "terngrad" => Ok(Scheme::Terngrad),
+            "onebit" => Ok(Scheme::OneBit),
+            "nested" => {
+                let d1: f32 = parts.get(1).unwrap_or(&"0.333333").parse()?;
+                let ratio: u32 = parts.get(2).unwrap_or(&"3").parse()?;
+                let alpha: f32 = parts.get(3).unwrap_or(&"1.0").parse()?;
+                Ok(Scheme::Nested { d1, ratio, alpha })
+            }
+            _ => Err(bad()),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Scheme::Baseline => "Baseline".into(),
+            Scheme::Dithered { delta } => format!("DQSGD(d={delta})"),
+            Scheme::DitheredPartitioned { delta, k } => format!("DQSGD(d={delta},K={k})"),
+            Scheme::Qsgd { m } => format!("QSGD(M={m})"),
+            Scheme::Terngrad => "TernGrad".into(),
+            Scheme::OneBit => "One-Bit".into(),
+            Scheme::Nested { d1, ratio, alpha } => {
+                format!("NDQSG(d1={d1},k={ratio},a={alpha})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        assert_eq!(Scheme::parse("baseline").unwrap(), Scheme::Baseline);
+        assert_eq!(
+            Scheme::parse("dqsg:0.5").unwrap(),
+            Scheme::Dithered { delta: 0.5 }
+        );
+        assert_eq!(
+            Scheme::parse("dqsg:0.25:part8").unwrap(),
+            Scheme::DitheredPartitioned { delta: 0.25, k: 8 }
+        );
+        assert_eq!(Scheme::parse("qsgd:2").unwrap(), Scheme::Qsgd { m: 2 });
+        assert_eq!(Scheme::parse("terngrad").unwrap(), Scheme::Terngrad);
+        assert_eq!(Scheme::parse("onebit").unwrap(), Scheme::OneBit);
+        assert!(matches!(
+            Scheme::parse("nested:0.333333:3:1.0").unwrap(),
+            Scheme::Nested { ratio: 3, .. }
+        ));
+        assert!(Scheme::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn all_schemes_build() {
+        for s in [
+            Scheme::Baseline,
+            Scheme::Dithered { delta: 1.0 },
+            Scheme::DitheredPartitioned { delta: 1.0, k: 4 },
+            Scheme::Qsgd { m: 1 },
+            Scheme::Terngrad,
+            Scheme::OneBit,
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        ] {
+            let q = s.build();
+            assert!(!q.name().is_empty());
+        }
+    }
+}

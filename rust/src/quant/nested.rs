@@ -1,0 +1,339 @@
+//! NDQSG — Nested Dithered Quantized Stochastic Gradient (paper §3.2,
+//! Alg. 2). The headline contribution.
+//!
+//! A pair of *nested* uniform quantizers (Q1 fine, Q2 coarse, Delta2 =
+//! ratio * Delta1, §2.2) bins the dithered gradient modulo the coarse
+//! lattice:
+//!
+//!   encode:  t = alpha * g/kappa + u,  u ~ U[-Delta1/2, Delta1/2]
+//!            s = Q1(t) - Q2(t)          (eq. 6; |s/Delta1| <= (ratio-1)/2)
+//!   decode:  r = s - u - alpha * y/kappa          (y = side information,
+//!            x^ = kappa * (y/kappa + alpha*(r - Q2(r)))      eq. 7)
+//!
+//! Only log2(ratio) bits/coordinate cross the wire — versus log2(2/Delta1)
+//! for plain DQSG at the same fine step — because the server resolves the
+//! coarse-bin ambiguity from the correlated side information y (the running
+//! average of the already-decoded workers, Alg. 2). Thm. 6 gives the
+//! failure probability and shows the error variance equals DQSG's when
+//! alpha = 1 or alpha = sqrt(1 - Delta1^2 / 12 sigma_z^2).
+
+use super::{GradQuantizer, SchemeId, WireMsg};
+use crate::coding::{pack, BitReader, BitWriter};
+use crate::prng::DitherGen;
+use crate::tensor::linf_norm;
+
+#[derive(Debug, Clone)]
+pub struct NestedQuantizer {
+    d1: f32,
+    d2: f32,
+    ratio: u32,
+    alpha: f32,
+    /// symbol alphabet half-width = (ratio - 1) / 2
+    m: i32,
+}
+
+#[inline]
+fn uq(t: f32, delta: f32) -> f32 {
+    // Q(v) = Delta * round(v / Delta), ties away from zero (= f32::round)
+    delta * (t / delta).round()
+}
+
+impl NestedQuantizer {
+    /// `d1`: fine step (on the normalized gradient); `ratio`: Delta2/Delta1,
+    /// must be odd and >= 3 so the symbol alphabet is symmetric; `alpha`:
+    /// the shrinkage factor of eq. (6)/(7).
+    pub fn new(d1: f32, ratio: u32, alpha: f32) -> Self {
+        assert!(d1 > 0.0 && d1 <= 1.0, "Delta1 must be in (0, 1]");
+        assert!(ratio >= 3 && ratio % 2 == 1, "ratio must be odd >= 3 (nested + symmetric)");
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Self {
+            d1,
+            d2: d1 * ratio as f32,
+            ratio,
+            alpha,
+            m: ((ratio - 1) / 2) as i32,
+        }
+    }
+
+    pub fn d1(&self) -> f32 {
+        self.d1
+    }
+    pub fn d2(&self) -> f32 {
+        self.d2
+    }
+    pub fn alpha(&self) -> f32 {
+        self.alpha
+    }
+
+    /// Bits/coordinate on the wire: log2(ratio) amortized.
+    pub fn rate(&self) -> f64 {
+        pack::rate_bits_per_symbol(self.ratio)
+    }
+
+    /// Thm. 6 eq. (8): upper bound on the decoding-failure probability for
+    /// side-information noise std sigma_z (normalized units).
+    pub fn failure_bound(&self, sigma_z: f64) -> f64 {
+        let d1 = self.d1 as f64;
+        let d2 = self.d2 as f64;
+        let a = self.alpha as f64;
+        d1 * d1 / (3.0 * d2 * d2) + 4.0 * a * a * sigma_z * sigma_z / (d2 * d2)
+    }
+
+    /// Thm. 6 eq. (9): error variance under correct decoding.
+    pub fn exact_variance(&self, sigma_z2: f64) -> f64 {
+        let a2 = (self.alpha as f64).powi(2);
+        a2 * (self.d1 as f64).powi(2) / 12.0 + (1.0 - a2).powi(2) * sigma_z2
+    }
+}
+
+impl GradQuantizer for NestedQuantizer {
+    fn name(&self) -> &'static str {
+        "ndqsg"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::Nested
+    }
+
+    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
+        let kappa = linf_norm(g);
+        let inv_kappa = 1.0 / kappa;
+        let mut u = vec![0f32; g.len()];
+        dither.fill_dither(self.d1 / 2.0, &mut u);
+        let inv_d1 = 1.0 / self.d1;
+        let indices: Vec<i32> = g
+            .iter()
+            .zip(&u)
+            .map(|(&gi, &ui)| {
+                let t = self.alpha * (gi * inv_kappa) + ui;
+                let s = uq(t, self.d1) - uq(t, self.d2);
+                ((s * inv_d1).round() as i32).clamp(-self.m, self.m)
+            })
+            .collect();
+
+        let mut w = BitWriter::new();
+        super::write_scales(&mut w, &[kappa]);
+        pack::pack_base_k_signed(&indices, self.m, self.ratio, &mut w);
+        let payload_bits = w.len_bits();
+        WireMsg {
+            scheme: SchemeId::Nested,
+            n: g.len(),
+            m: self.m,
+            payload: w.into_bytes(),
+            payload_bits,
+            indices,
+            scales: vec![kappa],
+        }
+    }
+
+    fn decode(
+        &self,
+        msg: &WireMsg,
+        dither: &mut DitherGen,
+        side: Option<&[f32]>,
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(msg.scheme == SchemeId::Nested, "scheme mismatch");
+        let y = side.ok_or_else(|| {
+            anyhow::anyhow!("NDQSG decode requires side information (Alg. 2: the running average of already-decoded SGs)")
+        })?;
+        anyhow::ensure!(y.len() == msg.n, "side info length {} != {}", y.len(), msg.n);
+        let mut r = BitReader::new(&msg.payload);
+        let kappa = r.read_f32()?;
+        let inv_kappa = 1.0 / kappa;
+        let symbols = pack::unpack_base_k(&mut r, self.ratio, msg.n)?;
+        let mut u = vec![0f32; msg.n];
+        dither.fill_dither(self.d1 / 2.0, &mut u);
+        Ok(symbols
+            .into_iter()
+            .zip(&u)
+            .zip(y)
+            .map(|((sym, &ui), &yi)| {
+                let s = self.d1 * pack::symbol_to_signed(sym, self.m) as f32;
+                let yn = yi * inv_kappa;
+                let rr = s - ui - self.alpha * yn;
+                kappa * (yn + self.alpha * (rr - uq(rr, self.d2)))
+            })
+            .collect())
+    }
+
+    fn uses_shared_dither(&self) -> bool {
+        true
+    }
+
+    fn needs_side_info(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{DitherStream, Xoshiro256};
+    use crate::testing::{gens, prop_check};
+
+    /// Build correlated (g, y): y = g + z with |z| < zmax * kappa.
+    fn correlated(n: usize, seed: u64, zfrac: f32, d1: f32, ratio: u32, alpha: f32) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256::new(seed);
+        let g: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.3).collect();
+        let kappa = linf_norm(&g);
+        let d2 = d1 * ratio as f32;
+        let zmax = zfrac * (d2 - d1) / (2.0 * alpha) * kappa;
+        let y: Vec<f32> = g
+            .iter()
+            .map(|&gi| gi + (rng.next_f32() * 2.0 - 1.0) * zmax)
+            .collect();
+        (g, y)
+    }
+
+    #[test]
+    fn exact_decoding_when_noise_small_thm6() {
+        // |z| < (D2-D1)/(2 alpha): decode lands in the right coarse bin and
+        // the residual error is exactly the DQSG dither error (alpha = 1).
+        let (d1, ratio, alpha) = (1.0f32 / 3.0, 3u32, 1.0f32);
+        let (g, y) = correlated(5000, 1, 0.9, d1, ratio, alpha);
+        let mut q = NestedQuantizer::new(d1, ratio, alpha);
+        let stream = DitherStream::new(11, 0);
+        let msg = q.encode(&g, &mut stream.round(0));
+        let recon = q.decode(&msg, &mut stream.round(0), Some(&y)).unwrap();
+        let kappa = msg.scales[0];
+        for (a, b) in g.iter().zip(&recon) {
+            assert!(
+                (a - b).abs() <= kappa * alpha * d1 / 2.0 + 1e-5,
+                "{a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn wire_rate_is_log2_ratio() {
+        // Fig. 6 claim: NDQSG at (D1=1/3, D2=1) sends ternary symbols —
+        // same 1.585 bits/coord as DQSG at M=1, but with the *variance* of
+        // the 7-level D=1/3 quantizer.
+        let (g, _) = correlated(10_000, 2, 0.5, 1.0 / 3.0, 3, 1.0);
+        let mut q = NestedQuantizer::new(1.0 / 3.0, 3, 1.0);
+        let stream = DitherStream::new(0, 0);
+        let msg = q.encode(&g, &mut stream.round(0));
+        assert_eq!(msg.raw_bits(), 32 + pack::packed_bits(10_000, 3));
+    }
+
+    #[test]
+    fn variance_matches_dqsg_at_same_fine_step() {
+        // Thm. 6: with alpha = 1, NDQSG variance == DQSG variance at D1.
+        let (d1, ratio) = (1.0f32 / 3.0, 3u32);
+        let trials = 2000;
+        let mut var_nested = 0f64;
+        let mut var_dq = 0f64;
+        for t in 0..trials {
+            let (g, y) = correlated(64, 100 + t, 0.8, d1, ratio, 1.0);
+            let mut nq = NestedQuantizer::new(d1, ratio, 1.0);
+            let mut dq = crate::quant::dithered::DitheredQuantizer::new(d1);
+            let s1 = DitherStream::new(t as u64, 0);
+            let s2 = DitherStream::new(t as u64, 1);
+            let m1 = nq.encode(&g, &mut s1.round(0));
+            let r1 = nq.decode(&m1, &mut s1.round(0), Some(&y)).unwrap();
+            let m2 = dq.encode(&g, &mut s2.round(0));
+            let r2 = dq.decode(&m2, &mut s2.round(0), None).unwrap();
+            var_nested += crate::tensor::sq_dist(&g, &r1);
+            var_dq += crate::tensor::sq_dist(&g, &r2);
+        }
+        let ratio_v = var_nested / var_dq;
+        assert!(
+            (ratio_v - 1.0).abs() < 0.05,
+            "nested/dqsg variance ratio {ratio_v}"
+        );
+    }
+
+    #[test]
+    fn failure_bound_thm6_eq8() {
+        // With sizable side-info noise, measure the failure rate and check
+        // the eq. (8) bound holds.
+        let (d1, ratio, alpha) = (1.0f32 / 3.0, 3u32, 1.0f32);
+        let q0 = NestedQuantizer::new(d1, ratio, alpha);
+        let mut fails = 0usize;
+        let mut total = 0usize;
+        let sigma_z = 0.15f32; // normalized units
+        let mut rng = Xoshiro256::new(77);
+        for t in 0..200 {
+            let g: Vec<f32> = (0..500).map(|_| rng.next_normal() * 0.3).collect();
+            let kappa = linf_norm(&g);
+            let y: Vec<f32> = g
+                .iter()
+                .map(|&gi| gi + sigma_z * kappa * rng.next_normal())
+                .collect();
+            let mut q = q0.clone();
+            let stream = DitherStream::new(t as u64, 0);
+            let msg = q.encode(&g, &mut stream.round(0));
+            let recon = q.decode(&msg, &mut stream.round(0), Some(&y)).unwrap();
+            for (a, b) in g.iter().zip(&recon) {
+                total += 1;
+                if (a - b).abs() > kappa * d1 / 2.0 + 1e-5 {
+                    fails += 1;
+                }
+            }
+        }
+        let p = fails as f64 / total as f64;
+        let bound = q0.failure_bound(sigma_z as f64);
+        assert!(p <= bound + 0.01, "p={p} bound={bound}");
+        assert!(p > 0.0, "expected some failures at sigma_z={sigma_z}");
+    }
+
+    #[test]
+    fn decode_without_side_info_errors() {
+        let mut q = NestedQuantizer::new(1.0 / 3.0, 3, 1.0);
+        let stream = DitherStream::new(0, 0);
+        let msg = q.encode(&[0.1, 0.2], &mut stream.round(0));
+        let err = q.decode(&msg, &mut stream.round(0), None).unwrap_err();
+        assert!(err.to_string().contains("side information"));
+    }
+
+    #[test]
+    fn prop_symbols_within_alphabet() {
+        prop_check(
+            "ndqsg-alphabet",
+            40,
+            gens::nasty_f32_vec(2000),
+            |g| {
+                for (d1, ratio) in [(1.0f32 / 3.0, 3u32), (0.2, 5), (1.0 / 9.0, 9)] {
+                    let mut q = NestedQuantizer::new(d1, ratio, 1.0);
+                    let stream = DitherStream::new(3, 0);
+                    let msg = q.encode(g, &mut stream.round(0));
+                    let m = ((ratio - 1) / 2) as i32;
+                    if !msg.indices.iter().all(|&s| (-m..=m).contains(&s)) {
+                        return Err(format!("symbol out of [-{m},{m}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn golden_vectors_pin_oracle() {
+        let path = std::path::Path::new("artifacts/golden.json");
+        if !path.exists() {
+            eprintln!("skipping golden test (artifacts not built)");
+            return;
+        }
+        let golden = crate::util::json::Json::parse_file(path).unwrap();
+        let blk = golden.at(&["nested"]).unwrap();
+        let g = golden.at(&["g"]).unwrap().as_f32_vec().unwrap();
+        let u = blk.at(&["u"]).unwrap().as_f32_vec().unwrap();
+        let y = blk.at(&["y"]).unwrap().as_f32_vec().unwrap();
+        let s_want = blk.at(&["s"]).unwrap().as_i32_vec().unwrap();
+        let x_want = blk.at(&["x_hat"]).unwrap().as_f32_vec().unwrap();
+        let d1 = blk.at(&["d1"]).unwrap().as_f64().unwrap() as f32;
+        let d2 = blk.at(&["d2"]).unwrap().as_f64().unwrap() as f32;
+        let alpha = blk.at(&["alpha"]).unwrap().as_f64().unwrap() as f32;
+
+        // golden vectors are *unscaled* (kappa = 1 convention in ref.py)
+        for i in 0..g.len() {
+            let t = alpha * g[i] + u[i];
+            let s = uq(t, d1) - uq(t, d2);
+            let s_idx = (s / d1).round() as i32;
+            assert_eq!(s_idx, s_want[i], "symbol {i} diverges from jnp oracle");
+            let rr = d1 * s_idx as f32 - u[i] - alpha * y[i];
+            let xh = y[i] + alpha * (rr - uq(rr, d2));
+            assert!((xh - x_want[i]).abs() < 1e-5, "{xh} vs {}", x_want[i]);
+        }
+    }
+}

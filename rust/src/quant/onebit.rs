@@ -1,0 +1,162 @@
+//! 1-bit SGD (Seide et al. [1]): sign quantization with error feedback.
+//!
+//! The worker quantizes v = g + residual to sign bits and transmits the two
+//! per-tensor conditional means (mean of positives / negatives); the
+//! residual v - reconstruction is carried into the next round, so the
+//! un-transmitted error telescopes rather than accumulating.  The near-
+//! incompressible sign stream (Tables 1-2: one-bit entropy ~ raw) is why
+//! DQSGD beats it 6x after entropy coding despite more raw bits.
+
+use super::{GradQuantizer, SchemeId, WireMsg};
+use crate::coding::{BitReader, BitWriter};
+use crate::prng::DitherGen;
+
+#[derive(Debug, Clone, Default)]
+pub struct OneBitQuantizer {
+    residual: Vec<f32>,
+}
+
+impl OneBitQuantizer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Expose the residual for tests of the telescoping invariant.
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+}
+
+impl GradQuantizer for OneBitQuantizer {
+    fn name(&self) -> &'static str {
+        "onebit"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::OneBit
+    }
+
+    fn encode(&mut self, g: &[f32], _dither: &mut DitherGen) -> WireMsg {
+        if self.residual.len() != g.len() {
+            self.residual = vec![0f32; g.len()];
+        }
+        let mut sum_pos = 0f64;
+        let mut n_pos = 0u64;
+        let mut sum_neg = 0f64;
+        let mut n_neg = 0u64;
+        let v: Vec<f32> = g
+            .iter()
+            .zip(&self.residual)
+            .map(|(&gi, &ri)| {
+                let vi = gi + ri;
+                if vi >= 0.0 {
+                    sum_pos += vi as f64;
+                    n_pos += 1;
+                } else {
+                    sum_neg += vi as f64;
+                    n_neg += 1;
+                }
+                vi
+            })
+            .collect();
+        let mean_pos = if n_pos > 0 { (sum_pos / n_pos as f64) as f32 } else { 0.0 };
+        let mean_neg = if n_neg > 0 { (sum_neg / n_neg as f64) as f32 } else { 0.0 };
+
+        let mut w = BitWriter::new();
+        super::write_scales(&mut w, &[mean_pos, mean_neg]);
+        let mut indices = Vec::with_capacity(v.len());
+        for (i, &vi) in v.iter().enumerate() {
+            let bit = vi >= 0.0;
+            w.push_bit(bit);
+            indices.push(bit as i32);
+            // error feedback: residual carries what the bit didn't
+            self.residual[i] = vi - if bit { mean_pos } else { mean_neg };
+        }
+        let payload_bits = w.len_bits();
+        WireMsg {
+            scheme: SchemeId::OneBit,
+            n: g.len(),
+            m: 0, // sign stream: entropy handled via payload (1 bit/coord)
+            payload: w.into_bytes(),
+            payload_bits,
+            indices,
+            scales: vec![mean_pos, mean_neg],
+        }
+    }
+
+    fn decode(
+        &self,
+        msg: &WireMsg,
+        _dither: &mut DitherGen,
+        _side: Option<&[f32]>,
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(msg.scheme == SchemeId::OneBit, "scheme mismatch");
+        let mut r = BitReader::new(&msg.payload);
+        let mean_pos = r.read_f32()?;
+        let mean_neg = r.read_f32()?;
+        (0..msg.n)
+            .map(|_| Ok(if r.read_bit()? { mean_pos } else { mean_neg }))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{DitherStream, Xoshiro256};
+
+    #[test]
+    fn roundtrip_and_bit_count() {
+        let g = vec![0.5f32, -0.25, 0.1, -0.9];
+        let mut q = OneBitQuantizer::new();
+        let stream = DitherStream::new(0, 0);
+        let msg = q.encode(&g, &mut stream.round(0));
+        assert_eq!(msg.raw_bits(), 64 + 4);
+        let recon = q.decode(&msg, &mut stream.round(0), None).unwrap();
+        assert_eq!(recon.len(), 4);
+        // signs preserved
+        for (a, b) in g.iter().zip(&recon) {
+            assert_eq!(a.signum(), b.signum());
+        }
+    }
+
+    #[test]
+    fn error_feedback_telescopes() {
+        // sum of reconstructions + residual == sum of inputs exactly
+        let mut rng = Xoshiro256::new(7);
+        let n = 512;
+        let mut q = OneBitQuantizer::new();
+        let stream = DitherStream::new(0, 0);
+        let mut total_in = vec![0f64; n];
+        let mut total_out = vec![0f64; n];
+        for round in 0..30 {
+            let g: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let msg = q.encode(&g, &mut stream.round(round));
+            let recon = q.decode(&msg, &mut stream.round(round), None).unwrap();
+            for i in 0..n {
+                total_in[i] += g[i] as f64;
+                total_out[i] += recon[i] as f64;
+            }
+        }
+        for i in 0..n {
+            let telescoped = total_out[i] + q.residual()[i] as f64;
+            assert!(
+                (telescoped - total_in[i]).abs() < 1e-3,
+                "telescoping broken at {i}: {telescoped} vs {}",
+                total_in[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sign_stream_nearly_incompressible() {
+        // gradient-like input: sign bits ~ fair coin => entropy ~ 1 bit
+        let mut rng = Xoshiro256::new(8);
+        let g: Vec<f32> = (0..50_000).map(|_| rng.next_normal()).collect();
+        let mut q = OneBitQuantizer::new();
+        let stream = DitherStream::new(0, 0);
+        let msg = q.encode(&g, &mut stream.round(0));
+        let h = crate::coding::entropy::signed_stream_entropy(&msg.indices, 1);
+        assert!(h > 0.95, "sign entropy {h}");
+    }
+}

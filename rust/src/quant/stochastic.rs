@@ -1,0 +1,155 @@
+//! QSGD — stochastic quantization (Alistarh et al. [5], paper eq. (1)).
+//!
+//! Implemented through the Lemma-2 equivalence proved in the paper: the
+//! M-level stochastic quantizer IS the (2M+1)-level *half-dithered*
+//! quantizer with u ~ U[-1/2M, 1/2M] — quantize x + u, but do NOT subtract
+//! the dither at the receiver.  The randomness is therefore worker-private:
+//! the server needs only (kappa, q) and reconstructs kappa * q / M.
+//!
+//! The variance penalty relative to DQSG (2x for uniform inputs, §2.1.1) is
+//! what the paper's Fig. 5 / Table 3 comparisons measure.
+
+use super::{GradQuantizer, SchemeId, WireMsg};
+use crate::coding::{pack, BitReader, BitWriter};
+use crate::prng::DitherGen;
+use crate::tensor::linf_norm;
+
+#[derive(Debug, Clone)]
+pub struct QsgdQuantizer {
+    m: i32,
+    delta: f32,
+}
+
+impl QsgdQuantizer {
+    pub fn new(m: i32) -> Self {
+        assert!(m >= 1);
+        Self {
+            m,
+            delta: 1.0 / m as f32,
+        }
+    }
+
+    pub fn alphabet(&self) -> u32 {
+        (2 * self.m + 1) as u32
+    }
+}
+
+impl GradQuantizer for QsgdQuantizer {
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::Qsgd
+    }
+
+    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
+        let kappa = linf_norm(g);
+        let inv_kappa = 1.0 / kappa;
+        let inv_delta = 1.0 / self.delta;
+        let half = self.delta / 2.0;
+        let m = self.m;
+        let mut u = vec![0f32; g.len()];
+        dither.fill_dither(half, &mut u);
+        let indices: Vec<i32> = g
+            .iter()
+            .zip(&u)
+            .map(|(&gi, &ui)| (((gi * inv_kappa + ui) * inv_delta).round() as i32).clamp(-m, m))
+            .collect();
+
+        let mut w = BitWriter::new();
+        super::write_scales(&mut w, &[kappa]);
+        pack::pack_base_k_signed(&indices, self.m, self.alphabet(), &mut w);
+        let payload_bits = w.len_bits();
+        WireMsg {
+            scheme: SchemeId::Qsgd,
+            n: g.len(),
+            m: self.m,
+            payload: w.into_bytes(),
+            payload_bits,
+            indices,
+            scales: vec![kappa],
+        }
+    }
+
+    fn decode(
+        &self,
+        msg: &WireMsg,
+        _dither: &mut DitherGen,
+        _side: Option<&[f32]>,
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(msg.scheme == SchemeId::Qsgd, "scheme mismatch");
+        let mut r = BitReader::new(&msg.payload);
+        let kappa = r.read_f32()?;
+        let symbols = pack::unpack_base_k(&mut r, self.alphabet(), msg.n)?;
+        // half-dithered: reconstruction is kappa * Delta * q; dither NOT
+        // subtracted (Lemma 2 — this is what distinguishes QSGD from DQSG).
+        Ok(symbols
+            .into_iter()
+            .map(|s| kappa * self.delta * pack::symbol_to_signed(s, self.m) as f32)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::DitherStream;
+
+    fn enc_dec(g: &[f32], m: i32, seed: u64) -> (WireMsg, Vec<f32>) {
+        let mut q = QsgdQuantizer::new(m);
+        let stream = DitherStream::new(seed, 0);
+        let msg = q.encode(g, &mut stream.round(0));
+        let recon = q.decode(&msg, &mut stream.round(0), None).unwrap();
+        (msg, recon)
+    }
+
+    #[test]
+    fn unbiased_but_variance_depends_on_signal() {
+        // eq. after Lemma 2: var = (|x| - l/M)((l+1)/M - |x|); for x at a
+        // bin center the variance is 0, at mid-bin it's 1/4M^2.
+        let m = 1;
+        let trials = 30_000;
+        for (x, want_var) in [(0.5f32, 0.25f32), (0.0, 0.0), (0.25, 0.1875)] {
+            let g = vec![x, 1.0]; // second element pins kappa = 1
+            let mut sum = 0f64;
+            let mut sumsq = 0f64;
+            for t in 0..trials {
+                let (_, recon) = enc_dec(&g, m, t as u64);
+                sum += recon[0] as f64;
+                sumsq += (recon[0] as f64 - x as f64).powi(2);
+            }
+            let mean = sum / trials as f64;
+            let var = sumsq / trials as f64;
+            assert!((mean - x as f64).abs() < 0.01, "bias at {x}: {mean}");
+            assert!(
+                (var - want_var as f64).abs() < 0.01,
+                "var at {x}: {var} want {want_var}"
+            );
+        }
+    }
+
+    #[test]
+    fn same_raw_bits_as_dqsg() {
+        // Table 1: DQSGD and QSGD columns are identical.
+        let mut rng = crate::prng::Xoshiro256::new(3);
+        let g: Vec<f32> = (0..10_000).map(|_| rng.next_normal()).collect();
+        let (msg, _) = enc_dec(&g, 1, 0);
+        let mut dq = crate::quant::dithered::DitheredQuantizer::new(1.0);
+        let stream = DitherStream::new(0, 0);
+        let msg_dq = dq.encode(&g, &mut stream.round(0));
+        assert_eq!(msg.raw_bits(), msg_dq.raw_bits());
+    }
+
+    #[test]
+    fn reconstruction_on_quantizer_grid() {
+        let mut rng = crate::prng::Xoshiro256::new(4);
+        let g: Vec<f32> = (0..1000).map(|_| rng.next_normal()).collect();
+        let (msg, recon) = enc_dec(&g, 2, 1);
+        let kappa = msg.scales[0];
+        for r in recon {
+            let lvl = r / (kappa * 0.5);
+            assert!((lvl - lvl.round()).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! TernGrad (Wen et al. [6]): probabilistic ternarization with gradient
+//! clipping.  q_i in {-1, 0, +1}, P(q_i = sign(x_i)) = |clip(x_i)| / s,
+//! s = max |clip(x)|, reconstruction s * q. Clipping at c·sigma (c = 2.5,
+//! the paper's recommended layer-wise clipping factor).
+
+use super::{GradQuantizer, SchemeId, WireMsg};
+use crate::coding::{pack, BitReader, BitWriter};
+use crate::prng::DitherGen;
+use crate::tensor::mean_var;
+
+#[derive(Debug, Clone)]
+pub struct TerngradQuantizer {
+    clip_sigmas: f32,
+}
+
+impl TerngradQuantizer {
+    pub fn new() -> Self {
+        Self { clip_sigmas: 2.5 }
+    }
+
+    pub fn with_clip(clip_sigmas: f32) -> Self {
+        Self { clip_sigmas }
+    }
+}
+
+impl Default for TerngradQuantizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GradQuantizer for TerngradQuantizer {
+    fn name(&self) -> &'static str {
+        "terngrad"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::Terngrad
+    }
+
+    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
+        let (_, var) = mean_var(g);
+        let c = (self.clip_sigmas as f64 * var.sqrt()) as f32;
+        let clip = |x: f32| {
+            if c > 0.0 {
+                x.clamp(-c, c)
+            } else {
+                x
+            }
+        };
+        let mut s = 0f32;
+        for &x in g {
+            s = s.max(clip(x).abs());
+        }
+        if s == 0.0 {
+            s = 1.0;
+        }
+        let indices: Vec<i32> = g
+            .iter()
+            .map(|&x| {
+                let xc = clip(x);
+                let p = xc.abs() / s;
+                // worker-private randomness from the per-round stream
+                if dither.next_f32() < p {
+                    if xc >= 0.0 {
+                        1
+                    } else {
+                        -1
+                    }
+                } else {
+                    0
+                }
+            })
+            .collect();
+
+        let mut w = BitWriter::new();
+        super::write_scales(&mut w, &[s]);
+        pack::pack_base_k_signed(&indices, 1, 3, &mut w);
+        let payload_bits = w.len_bits();
+        WireMsg {
+            scheme: SchemeId::Terngrad,
+            n: g.len(),
+            m: 1,
+            payload: w.into_bytes(),
+            payload_bits,
+            indices,
+            scales: vec![s],
+        }
+    }
+
+    fn decode(
+        &self,
+        msg: &WireMsg,
+        _dither: &mut DitherGen,
+        _side: Option<&[f32]>,
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(msg.scheme == SchemeId::Terngrad, "scheme mismatch");
+        let mut r = BitReader::new(&msg.payload);
+        let s = r.read_f32()?;
+        let symbols = pack::unpack_base_k(&mut r, 3, msg.n)?;
+        Ok(symbols
+            .into_iter()
+            .map(|sym| s * pack::symbol_to_signed(sym, 1) as f32)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::DitherStream;
+
+    #[test]
+    fn unbiased_within_clip() {
+        let g = vec![0.2f32, -0.4, 0.0, 0.35, 0.5];
+        let trials = 40_000;
+        let mut acc = vec![0f64; g.len()];
+        for t in 0..trials {
+            let mut q = TerngradQuantizer::new();
+            let stream = DitherStream::new(t as u64, 0);
+            let msg = q.encode(&g, &mut stream.round(0));
+            let recon = q.decode(&msg, &mut stream.round(0), None).unwrap();
+            for (a, r) in acc.iter_mut().zip(&recon) {
+                *a += *r as f64;
+            }
+        }
+        for (a, &gi) in acc.iter().zip(&g) {
+            let mean = a / trials as f64;
+            // values inside the clip range are unbiased
+            assert!((mean - gi as f64).abs() < 0.01, "{mean} vs {gi}");
+        }
+    }
+
+    #[test]
+    fn clipping_reduces_scale_with_outlier() {
+        let mut g = vec![0.01f32; 10_000];
+        g[0] = 100.0; // outlier: without clipping, s = 100 kills resolution
+        let mut q = TerngradQuantizer::new();
+        let stream = DitherStream::new(0, 0);
+        let msg = q.encode(&g, &mut stream.round(0));
+        assert!(msg.scales[0] < 5.0, "clip failed: s = {}", msg.scales[0]);
+    }
+
+    #[test]
+    fn ternary_wire_format() {
+        let g = vec![0.5f32; 997];
+        let mut q = TerngradQuantizer::new();
+        let stream = DitherStream::new(1, 0);
+        let msg = q.encode(&g, &mut stream.round(0));
+        assert_eq!(msg.m, 1);
+        assert_eq!(
+            msg.raw_bits(),
+            32 + crate::coding::pack::packed_bits(997, 3)
+        );
+        assert!(msg.indices.iter().all(|&q| (-1..=1).contains(&q)));
+    }
+}

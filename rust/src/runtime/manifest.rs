@@ -1,0 +1,165 @@
+//! Typed view over `artifacts/manifest.json` (produced by `aot.py`).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub n_params: usize,
+    /// Image models: input feature dim; LMs: 0.
+    pub feature_dim: usize,
+    pub n_classes: usize,
+    /// LMs only.
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub b_train: usize,
+    pub b_eval: usize,
+    pub transformer_batch: usize,
+    pub dq_delta: f32,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let mut artifacts = BTreeMap::new();
+        for (key, entry) in j.at(&["artifacts"])?.as_obj()? {
+            let file = dir.join(entry.at(&["file"])?.as_str()?);
+            let mut args = Vec::new();
+            if let Some(arr) = entry.get("args") {
+                for a in arr.as_arr()? {
+                    args.push(ArgSpec {
+                        shape: a
+                            .at(&["shape"])?
+                            .as_arr()?
+                            .iter()
+                            .map(|v| v.as_usize())
+                            .collect::<crate::Result<_>>()?,
+                        dtype: a.at(&["dtype"])?.as_str()?.to_string(),
+                    });
+                }
+            }
+            let outputs = match entry.get("outputs") {
+                Some(o) => o
+                    .as_arr()?
+                    .iter()
+                    .map(|v| Ok(v.as_str()?.to_string()))
+                    .collect::<crate::Result<_>>()?,
+                None => Vec::new(),
+            };
+            artifacts.insert(key.clone(), ArtifactEntry { file, args, outputs });
+        }
+        let mut models = BTreeMap::new();
+        for (key, m) in j.at(&["models"])?.as_obj()? {
+            models.insert(
+                key.clone(),
+                ModelInfo {
+                    n_params: m.at(&["n_params"])?.as_usize()?,
+                    feature_dim: m
+                        .get("feature_dim")
+                        .map(|v| v.as_usize())
+                        .transpose()?
+                        .unwrap_or(0),
+                    n_classes: m
+                        .get("n_classes")
+                        .map(|v| v.as_usize())
+                        .transpose()?
+                        .unwrap_or(0),
+                    vocab: m.get("vocab").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+                    seq_len: m
+                        .get("seq_len")
+                        .map(|v| v.as_usize())
+                        .transpose()?
+                        .unwrap_or(0),
+                },
+            );
+        }
+        let cfg = j.at(&["config"])?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            artifacts,
+            models,
+            b_train: cfg.at(&["b_train"])?.as_usize()?,
+            b_eval: cfg.at(&["b_eval"])?.as_usize()?,
+            transformer_batch: cfg
+                .get("transformer_batch")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(8),
+            dq_delta: cfg.at(&["dq_delta"])?.as_f64()? as f32,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model `{name}` not in manifest (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, key: &str) -> crate::Result<&ArtifactEntry> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("artifact `{key}` not in manifest"))
+    }
+
+    /// Whether `name` is a language model (vs image classifier).
+    pub fn is_lm(&self, name: &str) -> bool {
+        self.models
+            .get(name)
+            .map(|m| m.vocab > 0)
+            .unwrap_or(false)
+    }
+
+    /// Initial flat parameters for a model.
+    pub fn init_params(&self, name: &str) -> crate::Result<Vec<f32>> {
+        let entry = self.artifact(&format!("{name}_init"))?;
+        let v = crate::util::read_f32_bin(&entry.file)?;
+        let want = self.model(name)?.n_params;
+        anyhow::ensure!(v.len() == want, "init length {} != n_params {want}", v.len());
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_built_manifest() {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping (artifacts not built)");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.model("fc300").unwrap().n_params, 266_610);
+        assert_eq!(m.b_train, 32);
+        assert!(m.artifact("fc300_grad_b32").unwrap().file.exists());
+        assert!(!m.is_lm("fc300"));
+        let init = m.init_params("fc300").unwrap();
+        assert_eq!(init.len(), 266_610);
+        // init must be finite and non-degenerate
+        assert!(init.iter().all(|v| v.is_finite()));
+        assert!(crate::tensor::l2_norm(&init) > 1.0);
+    }
+}

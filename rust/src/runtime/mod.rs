@@ -1,0 +1,540 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client — the only place the `xla` crate is touched.
+//!
+//! Two layers:
+//! * [`Runtime`] — owns the client and a compile cache; synchronous `exec`.
+//! * [`ComputeService`] / [`ComputeHandle`] — a dedicated service *thread*
+//!   owning the `Runtime` (PJRT handles are not `Send`, and the paper's
+//!   workers are threads): workers/benches talk to it over channels. This
+//!   is the process topology of Fig. 2 collapsed into one process — the
+//!   wire protocol still carries real encoded bytes (see `train/`).
+//!
+//! Gradient batching: artifacts are compiled at fixed micro-batch
+//! `b_train`; [`ComputeHandle::grad_image`] accepts any per-worker batch
+//! whose size b satisfies `b % b_train == 0` (chunk + average) or
+//! `b_train % b == 0` (tile the examples — tiling k copies leaves the mean
+//! gradient bit-identical, so small per-worker shards at high worker counts
+//! are exact, not approximated).
+
+pub mod manifest;
+
+pub use manifest::Manifest;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+
+/// Synchronous PJRT wrapper with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Steady-state cache statistics (perf pass: hit rate must be 100%
+    /// after warmup).
+    pub compiles: usize,
+    pub executions: usize,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> crate::Result<Self> {
+        // silence TF INFO chatter (client create/destroy) unless the user
+        // asked for it explicitly
+        if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: BTreeMap::new(),
+            compiles: 0,
+            executions: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn ensure_compiled(&mut self, key: &str) -> crate::Result<()> {
+        if self.cache.contains_key(key) {
+            return Ok(());
+        }
+        let entry = self.manifest.artifact(key)?;
+        let path = entry.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiles += 1;
+        self.cache.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `key` with the given literals; returns the tuple
+    /// elements (aot.py lowers everything with return_tuple=True).
+    ///
+    /// NOTE: we deliberately avoid `PjRtLoadedExecutable::execute` — the
+    /// published xla 0.1.6 C shim `release()`s every input buffer it
+    /// creates and never frees them (~MBs leaked per call; the OOM killer
+    /// found this for us at experiment scale). Instead we transfer inputs
+    /// to device buffers we own (`buffer_from_host_literal`) and run
+    /// `execute_b`, whose inputs stay owned by our `PjRtBuffer` wrappers
+    /// and are freed on drop.
+    pub fn exec(&mut self, key: &str, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        self.ensure_compiled(key)?;
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|lit| self.client.buffer_from_host_literal(None, lit))
+            .collect::<Result<_, _>>()?;
+        let exe = self.cache.get(key).unwrap();
+        let result = exe.execute_b::<xla::PjRtBuffer>(&bufs)?[0][0].to_literal_sync()?;
+        self.executions += 1;
+        Ok(result.to_tuple()?)
+    }
+
+    /// f32 tensor literal with shape.
+    pub fn lit_f32(data: &[f32], shape: &[i64]) -> crate::Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(shape)?)
+    }
+
+    /// i32 tensor literal with shape.
+    pub fn lit_i32(data: &[i32], shape: &[i64]) -> crate::Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(shape)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compute service thread
+// ---------------------------------------------------------------------------
+
+use std::sync::Arc;
+
+pub enum Request {
+    /// (loss, flat_grad) for an image model over a [b, feat] batch.
+    GradImage {
+        model: String,
+        params: Arc<Vec<f32>>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        b: usize,
+        reply: mpsc::Sender<crate::Result<(f32, Vec<f32>)>>,
+    },
+    /// (mean loss, n_correct) over a [b, feat] eval batch.
+    EvalImage {
+        model: String,
+        params: Arc<Vec<f32>>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        b: usize,
+        reply: mpsc::Sender<crate::Result<(f32, usize)>>,
+    },
+    /// (loss, flat_grad) for an LM over a [b, seq] token batch.
+    GradLm {
+        model: String,
+        params: Arc<Vec<f32>>,
+        tokens: Vec<i32>,
+        b: usize,
+        reply: mpsc::Sender<crate::Result<(f32, Vec<f32>)>>,
+    },
+    /// Raw artifact execution: f32/i32 inputs by dtype tag.
+    ExecRaw {
+        key: String,
+        inputs: Vec<RawArg>,
+        reply: mpsc::Sender<crate::Result<Vec<RawOut>>>,
+    },
+    Stats {
+        reply: mpsc::Sender<(usize, usize)>,
+    },
+    Shutdown,
+}
+
+pub enum RawArg {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+#[derive(Debug, Clone)]
+pub enum RawOut {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Handle cloned into every worker thread.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+pub struct ComputeService {
+    handle: ComputeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Spawn the service thread owning the PJRT runtime.
+    ///
+    /// PJRT handles are not `Send`, so the `Runtime` is constructed *on*
+    /// the service thread; an init handshake still fails fast on load
+    /// errors.
+    pub fn start(artifacts_dir: &Path) -> crate::Result<ComputeService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<crate::Result<()>>();
+        let dir = artifacts_dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("ndq-compute".into())
+            .spawn(move || {
+                let mut rt = match Runtime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::GradImage { model, params, x, y, b, reply } => {
+                            let _ = reply.send(grad_image(&mut rt, &model, &params, &x, &y, b));
+                        }
+                        Request::EvalImage { model, params, x, y, b, reply } => {
+                            let _ = reply.send(eval_image(&mut rt, &model, &params, &x, &y, b));
+                        }
+                        Request::GradLm { model, params, tokens, b, reply } => {
+                            let _ = reply.send(grad_lm(&mut rt, &model, &params, &tokens, b));
+                        }
+                        Request::ExecRaw { key, inputs, reply } => {
+                            let _ = reply.send(exec_raw(&mut rt, &key, inputs));
+                        }
+                        Request::Stats { reply } => {
+                            let _ = reply.send((rt.compiles, rt.executions));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("compute service thread died during init"))??;
+        Ok(ComputeService {
+            handle: ComputeHandle { tx },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl ComputeHandle {
+    fn call<T>(
+        &self,
+        make: impl FnOnce(mpsc::Sender<crate::Result<T>>) -> Request,
+    ) -> crate::Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(make(reply))
+            .map_err(|_| anyhow::anyhow!("compute service is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("compute service dropped the request"))?
+    }
+
+    pub fn grad_image(
+        &self,
+        model: &str,
+        params: &Arc<Vec<f32>>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        b: usize,
+    ) -> crate::Result<(f32, Vec<f32>)> {
+        self.call(|reply| Request::GradImage {
+            model: model.to_string(),
+            params: Arc::clone(params),
+            x,
+            y,
+            b,
+            reply,
+        })
+    }
+
+    pub fn eval_image(
+        &self,
+        model: &str,
+        params: &Arc<Vec<f32>>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        b: usize,
+    ) -> crate::Result<(f32, usize)> {
+        self.call(|reply| Request::EvalImage {
+            model: model.to_string(),
+            params: Arc::clone(params),
+            x,
+            y,
+            b,
+            reply,
+        })
+    }
+
+    pub fn grad_lm(
+        &self,
+        model: &str,
+        params: &Arc<Vec<f32>>,
+        tokens: Vec<i32>,
+        b: usize,
+    ) -> crate::Result<(f32, Vec<f32>)> {
+        self.call(|reply| Request::GradLm {
+            model: model.to_string(),
+            params: Arc::clone(params),
+            tokens,
+            b,
+            reply,
+        })
+    }
+
+    pub fn exec_raw(&self, key: &str, inputs: Vec<RawArg>) -> crate::Result<Vec<RawOut>> {
+        self.call(|reply| Request::ExecRaw {
+            key: key.to_string(),
+            inputs,
+            reply,
+        })
+    }
+
+    /// (compiles, executions) — perf-pass cache statistics.
+    pub fn stats(&self) -> crate::Result<(usize, usize)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Stats { reply })
+            .map_err(|_| anyhow::anyhow!("compute service is down"))?;
+        Ok(rx.recv()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service-side implementations
+// ---------------------------------------------------------------------------
+
+/// Split/tile a [b, feat] batch into compiled-size chunks (see module doc).
+fn chunk_plan(b: usize, compiled_b: usize) -> crate::Result<(usize, usize)> {
+    if b % compiled_b == 0 {
+        Ok((b / compiled_b, 1)) // (chunks, tile)
+    } else if compiled_b % b == 0 {
+        Ok((1, compiled_b / b))
+    } else {
+        anyhow::bail!("batch {b} incompatible with compiled micro-batch {compiled_b}")
+    }
+}
+
+fn grad_image(
+    rt: &mut Runtime,
+    model: &str,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    b: usize,
+) -> crate::Result<(f32, Vec<f32>)> {
+    let info = rt.manifest.model(model)?;
+    let feat = info.feature_dim;
+    let n = info.n_params;
+    anyhow::ensure!(x.len() == b * feat && y.len() == b, "batch shape mismatch");
+    let cb = rt.manifest.b_train;
+    let key = format!("{model}_grad_b{cb}");
+    let (chunks, tile) = chunk_plan(b, cb)?;
+    let p_lit = Runtime::lit_f32(params, &[n as i64])?;
+
+    let mut grad_acc = vec![0f32; n];
+    let mut loss_acc = 0f64;
+    let mut xbuf = vec![0f32; cb * feat];
+    let mut ybuf = vec![0i32; cb];
+    for c in 0..chunks {
+        let rows = cb / tile;
+        for t in 0..tile {
+            let src = c * rows; // tile repeats the same rows
+            xbuf[t * rows * feat..(t + 1) * rows * feat]
+                .copy_from_slice(&x[src * feat..(src + rows) * feat]);
+            ybuf[t * rows..(t + 1) * rows].copy_from_slice(&y[src..src + rows]);
+        }
+        let x_lit = Runtime::lit_f32(&xbuf, &[cb as i64, feat as i64])?;
+        let y_lit = Runtime::lit_i32(&ybuf, &[cb as i64])?;
+        let out = rt.exec(&key, &[p_lit.clone(), x_lit, y_lit])?;
+        anyhow::ensure!(out.len() == 2, "grad artifact returned {} outputs", out.len());
+        loss_acc += out[0].get_first_element::<f32>()? as f64;
+        let g: Vec<f32> = out[1].to_vec()?;
+        crate::tensor::axpy(1.0, &g, &mut grad_acc);
+    }
+    if chunks > 1 {
+        crate::tensor::scale(1.0 / chunks as f32, &mut grad_acc);
+    }
+    Ok(((loss_acc / chunks as f64) as f32, grad_acc))
+}
+
+fn eval_image(
+    rt: &mut Runtime,
+    model: &str,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    b: usize,
+) -> crate::Result<(f32, usize)> {
+    let info = rt.manifest.model(model)?;
+    let feat = info.feature_dim;
+    let cb = rt.manifest.b_eval;
+    anyhow::ensure!(b % cb == 0, "eval batch {b} must be a multiple of {cb}");
+    let key = format!("{model}_eval_b{cb}");
+    let p_lit = Runtime::lit_f32(params, &[info.n_params as i64])?;
+    let mut loss_acc = 0f64;
+    let mut correct = 0usize;
+    for c in 0..b / cb {
+        let x_lit = Runtime::lit_f32(&x[c * cb * feat..(c + 1) * cb * feat], &[cb as i64, feat as i64])?;
+        let y_lit = Runtime::lit_i32(&y[c * cb..(c + 1) * cb], &[cb as i64])?;
+        let out = rt.exec(&key, &[p_lit.clone(), x_lit, y_lit])?;
+        loss_acc += out[0].get_first_element::<f32>()? as f64;
+        correct += out[1].get_first_element::<i32>()? as usize;
+    }
+    Ok(((loss_acc / (b / cb) as f64) as f32, correct))
+}
+
+fn grad_lm(
+    rt: &mut Runtime,
+    model: &str,
+    params: &[f32],
+    tokens: &[i32],
+    b: usize,
+) -> crate::Result<(f32, Vec<f32>)> {
+    let info = rt.manifest.model(model)?;
+    let seq = info.seq_len;
+    anyhow::ensure!(tokens.len() == b * seq, "token batch shape mismatch");
+    let cb = rt.manifest.transformer_batch;
+    let key = format!("{model}_grad_b{cb}");
+    let (chunks, tile) = chunk_plan(b, cb)?;
+    let p_lit = Runtime::lit_f32(params, &[info.n_params as i64])?;
+    let mut grad_acc = vec![0f32; info.n_params];
+    let mut loss_acc = 0f64;
+    let mut tbuf = vec![0i32; cb * seq];
+    for c in 0..chunks {
+        let rows = cb / tile;
+        for t in 0..tile {
+            let src = c * rows;
+            tbuf[t * rows * seq..(t + 1) * rows * seq]
+                .copy_from_slice(&tokens[src * seq..(src + rows) * seq]);
+        }
+        let t_lit = Runtime::lit_i32(&tbuf, &[cb as i64, seq as i64])?;
+        let out = rt.exec(&key, &[p_lit.clone(), t_lit])?;
+        loss_acc += out[0].get_first_element::<f32>()? as f64;
+        let g: Vec<f32> = out[1].to_vec()?;
+        crate::tensor::axpy(1.0, &g, &mut grad_acc);
+    }
+    if chunks > 1 {
+        crate::tensor::scale(1.0 / chunks as f32, &mut grad_acc);
+    }
+    Ok(((loss_acc / chunks as f64) as f32, grad_acc))
+}
+
+fn exec_raw(rt: &mut Runtime, key: &str, inputs: Vec<RawArg>) -> crate::Result<Vec<RawOut>> {
+    let lits: Vec<xla::Literal> = inputs
+        .into_iter()
+        .map(|a| match a {
+            RawArg::F32(data, shape) => Runtime::lit_f32(&data, &shape),
+            RawArg::I32(data, shape) => Runtime::lit_i32(&data, &shape),
+        })
+        .collect::<crate::Result<_>>()?;
+    let outs = rt.exec(key, &lits)?;
+    outs.into_iter()
+        .map(|l| {
+            let ty = l.ty()?;
+            Ok(match ty {
+                xla::ElementType::S32 => RawOut::I32(l.to_vec()?),
+                _ => RawOut::F32(l.to_vec()?),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn chunk_plan_cases() {
+        assert_eq!(chunk_plan(64, 32).unwrap(), (2, 1));
+        assert_eq!(chunk_plan(32, 32).unwrap(), (1, 1));
+        assert_eq!(chunk_plan(8, 32).unwrap(), (1, 4));
+        assert!(chunk_plan(24, 32).is_err());
+    }
+
+    #[test]
+    fn grad_exec_and_tile_exactness() {
+        if !have_artifacts() {
+            eprintln!("skipping (artifacts not built)");
+            return;
+        }
+        let svc = ComputeService::start(Path::new("artifacts")).unwrap();
+        let h = svc.handle();
+        let m = Manifest::load(Path::new("artifacts")).unwrap();
+        let params = Arc::new(m.init_params("fc300").unwrap());
+        let ds = crate::data::ImageDataset::new(crate::data::ImageKind::Mnist, 0);
+        // b = 8 (tiled x4) must equal the mean gradient of the same 8 rows
+        // computed at b = 32 by explicit tiling — i.e. gradient is exact.
+        let mut batch = crate::data::Batch::new(8, 784);
+        ds.train_batch(0, 0, 1, 8, &mut batch);
+        let (loss8, g8) = h
+            .grad_image("fc300", &params, batch.x.clone(), batch.y.clone(), 8)
+            .unwrap();
+        assert!(loss8.is_finite() && loss8 > 0.0);
+        assert_eq!(g8.len(), 266_610);
+        // manual 4x tile at b=32
+        let mut x32 = Vec::new();
+        let mut y32 = Vec::new();
+        for _ in 0..4 {
+            x32.extend_from_slice(&batch.x);
+            y32.extend_from_slice(&batch.y);
+        }
+        let (loss32, g32) = h.grad_image("fc300", &params, x32, y32, 32).unwrap();
+        assert!((loss8 - loss32).abs() < 1e-6);
+        let d = crate::tensor::sq_dist(&g8, &g32);
+        assert!(d < 1e-10, "tiled gradient differs: {d}");
+    }
+
+    #[test]
+    fn eval_exec_sane() {
+        if !have_artifacts() {
+            eprintln!("skipping (artifacts not built)");
+            return;
+        }
+        let svc = ComputeService::start(Path::new("artifacts")).unwrap();
+        let h = svc.handle();
+        let m = Manifest::load(Path::new("artifacts")).unwrap();
+        let params = Arc::new(m.init_params("fc300").unwrap());
+        let ds = crate::data::ImageDataset::new(crate::data::ImageKind::Mnist, 0);
+        let b = 128;
+        let mut batch = crate::data::Batch::new(b, 784);
+        ds.eval_batch(0, b, &mut batch);
+        let (loss, correct) = h
+            .eval_image("fc300", &params, batch.x, batch.y, b)
+            .unwrap();
+        assert!(loss.is_finite());
+        assert!(correct <= b);
+        // random init: accuracy should be near-chance (not 0, not 1)
+        let acc = correct as f64 / b as f64;
+        assert!(acc < 0.5, "suspicious init accuracy {acc}");
+        // executable cache: exactly the compiles we asked for
+        let (compiles, execs) = h.stats().unwrap();
+        assert_eq!(compiles, 1);
+        assert_eq!(execs, b / m.b_eval);
+    }
+}

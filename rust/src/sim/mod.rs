@@ -1,0 +1,85 @@
+//! Network cost model: projects measured wire bits to wall-clock
+//! communication time for a parameterized cluster (the paper's testbed is a
+//! real cluster we don't have; DESIGN.md substitution table).
+//!
+//! The model is the standard alpha-beta (latency-bandwidth) model for a
+//! centralized parameter server: each round, every worker uploads its
+//! gradient message and the server broadcasts the average back.
+
+/// Cluster link parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Per-message latency (seconds) — the "alpha" term.
+    pub latency_s: f64,
+    /// Link bandwidth in bits/second — the "beta" term.
+    pub bandwidth_bps: f64,
+}
+
+impl LinkModel {
+    /// 1 Gb/s Ethernet with 100us latency — a typical 2019 commodity
+    /// cluster like the paper's setting.
+    pub fn gigabit() -> Self {
+        Self {
+            latency_s: 100e-6,
+            bandwidth_bps: 1e9,
+        }
+    }
+
+    /// 10 Gb/s datacenter link.
+    pub fn ten_gigabit() -> Self {
+        Self {
+            latency_s: 20e-6,
+            bandwidth_bps: 10e9,
+        }
+    }
+
+    /// Time to push one message of `bits` bits.
+    pub fn message_time(&self, bits: f64) -> f64 {
+        self.latency_s + bits / self.bandwidth_bps
+    }
+}
+
+/// Per-round communication time for a centralized PS with P workers whose
+/// uplink messages are `upload_bits` each and broadcast is `bcast_bits`.
+/// Uploads share the server ingress (serialized), broadcast is one message
+/// (multicast assumption, matching the paper's "broadcast back").
+pub fn round_comm_time(link: &LinkModel, p: usize, upload_bits: f64, bcast_bits: f64) -> f64 {
+    p as f64 * link.message_time(upload_bits) + link.message_time(bcast_bits)
+}
+
+/// Projected time-to-accuracy: rounds * (compute + comm).
+pub fn projected_training_time(
+    link: &LinkModel,
+    rounds: usize,
+    p: usize,
+    upload_bits: f64,
+    bcast_bits: f64,
+    compute_s_per_round: f64,
+) -> f64 {
+    rounds as f64 * (compute_s_per_round + round_comm_time(link, p, upload_bits, bcast_bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantization_reduces_comm_time_20x() {
+        // FC-300-100: baseline 8531.5 Kbit vs DQSGD 422.8 Kbit per worker
+        let link = LinkModel::gigabit();
+        let t_base = round_comm_time(&link, 8, 8_531_500.0, 8_531_500.0);
+        let t_dq = round_comm_time(&link, 8, 422_800.0, 8_531_500.0);
+        // upload dominated: ~'factor 20' reduction on the upload leg
+        let upload_base = 8.0 * link.message_time(8_531_500.0);
+        let upload_dq = 8.0 * link.message_time(422_800.0);
+        assert!(upload_base / upload_dq > 10.0);
+        assert!(t_dq < t_base);
+    }
+
+    #[test]
+    fn latency_dominates_tiny_messages() {
+        let link = LinkModel::gigabit();
+        let t = link.message_time(8.0);
+        assert!((t - 100e-6 - 8e-9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,158 @@
+//! Micro-benchmark harness used by `rust/benches/*` (criterion replacement).
+//!
+//! Behaviour mirrors criterion's core loop: warm up for a fixed wall-clock
+//! budget, estimate the per-iteration cost, then collect N samples of
+//! batched iterations and report median ± MAD. Results can be appended to a
+//! JSON lines file for the EXPERIMENTS.md tables.
+
+use std::time::Instant;
+
+use super::median_mad;
+use crate::util::json::{self, Json};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.median_ns * 1e-9)
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("median_ns", json::num(self.median_ns)),
+            ("mad_ns", json::num(self.mad_ns)),
+            ("samples", json::num(self.samples as f64)),
+            ("iters_per_sample", json::num(self.iters_per_sample as f64)),
+        ])
+    }
+}
+
+/// Harness configuration (defaults follow criterion's quick profile).
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup_secs: f64,
+    pub sample_secs: f64,
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup_secs: 0.5,
+            sample_secs: 1.5,
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Allow CI-style quick runs: NDQ_BENCH_FAST=1 trims budgets.
+        let mut b = Self::default();
+        if std::env::var("NDQ_BENCH_FAST").is_ok() {
+            b.warmup_secs = 0.05;
+            b.sample_secs = 0.2;
+            b.samples = 7;
+        }
+        b
+    }
+
+    /// Benchmark `f`, preventing the result from being optimized out by
+    /// requiring it to return a value that we black-box.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + cost estimate
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while start.elapsed().as_secs_f64() < self.warmup_secs {
+            std::hint::black_box(f());
+            iters += 1;
+        }
+        let est_ns = self.warmup_secs * 1e9 / iters.max(1) as f64;
+        let per_sample =
+            ((self.sample_secs * 1e9 / self.samples as f64 / est_ns).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..per_sample {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() * 1e9 / per_sample as f64);
+        }
+        let (median_ns, mad_ns) = median_mad(&mut samples);
+        let r = BenchResult {
+            name: name.to_string(),
+            median_ns,
+            mad_ns,
+            samples: self.samples,
+            iters_per_sample: per_sample,
+        };
+        println!(
+            "{:<44} {:>12.1} ns/iter (±{:.1}, {} samples x {})",
+            r.name, r.median_ns, r.mad_ns, r.samples, r.iters_per_sample
+        );
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Write all collected results to `target/ndq-bench/<file>.json`.
+    pub fn save(&self, file: &str) -> crate::Result<()> {
+        let dir = std::path::Path::new("target/ndq-bench");
+        std::fs::create_dir_all(dir)?;
+        let j = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        std::fs::write(dir.join(format!("{file}.json")), j.to_string())?;
+        Ok(())
+    }
+}
+
+/// Pretty-print a results table row (used by the table/figure benches).
+pub fn print_table_header(title: &str, cols: &[&str]) {
+    println!("\n=== {title} ===");
+    print!("{:<16}", "");
+    for c in cols {
+        print!("{c:>14}");
+    }
+    println!();
+}
+
+pub fn print_table_row(label: &str, vals: &[f64]) {
+    print!("{label:<16}");
+    for v in vals {
+        if v.abs() >= 1000.0 {
+            print!("{v:>14.1}");
+        } else if *v != 0.0 && v.abs() < 0.01 {
+            print!("{v:>14.2e}");
+        } else {
+            print!("{v:>14.3}");
+        }
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_measures_something_sane() {
+        std::env::set_var("NDQ_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.warmup_secs = 0.01;
+        b.sample_secs = 0.05;
+        b.samples = 5;
+        let r = b.run("noop-vec-sum", || (0..100u64).sum::<u64>());
+        assert!(r.median_ns > 0.0);
+        assert!(r.median_ns < 1e7); // way under 10ms
+    }
+}

@@ -1,0 +1,119 @@
+//! Running statistics and the micro-benchmark harness (criterion is not
+//! available offline; `bench` reproduces its warmup + sampling + robust
+//! summary behaviour).
+
+pub mod bench;
+
+/// Welford running mean/variance.
+#[derive(Debug, Default, Clone)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self {
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n < 2 {
+            f64::INFINITY
+        } else {
+            (self.m2 / (self.n - 1) as f64 / self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Median and median-absolute-deviation of a sample (robust summary).
+pub fn median_mad(samples: &mut [f64]) -> (f64, f64) {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = percentile_sorted(samples, 50.0);
+    let mut devs: Vec<f64> = samples.iter().map(|&x| (x - med).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (med, percentile_sorted(&devs, 50.0))
+}
+
+/// Linear-interpolated percentile of a sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let mut r = Running::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 5);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+        assert!((r.var() - 2.0).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 5.0);
+    }
+
+    #[test]
+    fn median_and_percentiles() {
+        let mut v = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let (med, mad) = median_mad(&mut v);
+        assert_eq!(med, 3.0);
+        assert_eq!(mad, 1.0);
+        let sorted = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile_sorted(&sorted, 0.0), 10.0);
+        assert_eq!(percentile_sorted(&sorted, 100.0), 40.0);
+        assert!((percentile_sorted(&sorted, 50.0) - 25.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,135 @@
+//! Flat f32 tensor math used by the L3 hot path (no BLAS dependency).
+//!
+//! The coordinator mostly works on *flat parameter/gradient vectors* (the
+//! ABI shared with the AOT artifacts), so this module is vector math plus a
+//! few norm/statistics helpers shared by the quantizers and optimizers.
+
+/// max_i |x_i| — the paper's scale factor kappa (guarded against all-zero).
+#[inline]
+pub fn linf_norm(x: &[f32]) -> f32 {
+    let mut m = 0f32;
+    for &v in x {
+        let a = v.abs();
+        if a > m {
+            m = a;
+        }
+    }
+    if m > 0.0 {
+        m
+    } else {
+        1.0
+    }
+}
+
+/// ||x||_2
+pub fn l2_norm(x: &[f32]) -> f32 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// ||a - b||_2^2 (f64 accumulation)
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = x (copy)
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// x *= alpha
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x {
+        *v *= alpha;
+    }
+}
+
+/// out = mean of rows
+pub fn mean_rows(rows: &[&[f32]], out: &mut [f32]) {
+    assert!(!rows.is_empty());
+    let inv = 1.0 / rows.len() as f32;
+    out.fill(0.0);
+    for row in rows {
+        assert_eq!(row.len(), out.len());
+        for (o, &v) in out.iter_mut().zip(*row) {
+            *o += v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Mean and (population) variance with f64 accumulation.
+pub fn mean_var(x: &[f32]) -> (f64, f64) {
+    let n = x.len().max(1) as f64;
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    (mean, var)
+}
+
+/// Argmax index (first max wins).
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in x.iter().enumerate() {
+        if v > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms() {
+        assert_eq!(linf_norm(&[0.5, -2.0, 1.0]), 2.0);
+        assert_eq!(linf_norm(&[0.0, 0.0]), 1.0); // guard
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn axpy_and_mean_rows() {
+        let mut y = vec![1.0f32, 2.0];
+        axpy(2.0, &[10.0, 20.0], &mut y);
+        assert_eq!(y, vec![21.0, 42.0]);
+
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let mut out = vec![0f32; 2];
+        mean_rows(&[&a, &b], &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn stats() {
+        let (m, v) = mean_var(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12);
+        assert!((v - 1.25).abs() < 1e-12);
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+
+    #[test]
+    fn sq_dist_f64_accumulation() {
+        let a = vec![1e-4f32; 10_000];
+        let b = vec![0f32; 10_000];
+        let d = sq_dist(&a, &b);
+        assert!((d - 10_000.0 * 1e-8).abs() < 1e-9);
+    }
+}

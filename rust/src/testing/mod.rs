@@ -1,0 +1,130 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `prop_check` runs a property over `cases` seeded random inputs and, on
+//! failure, retries with progressively *smaller* size hints to report a
+//! minimal-ish failing case — a lightweight stand-in for proptest's
+//! shrinking that covers the coordinator invariants we test (routing,
+//! batching, encode/decode state).
+
+use crate::prng::Xoshiro256;
+
+/// Size-aware input generator: receives (rng, size_hint in 0..=1.0).
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Xoshiro256, size: f64) -> T;
+}
+
+impl<T, F: Fn(&mut Xoshiro256, f64) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Xoshiro256, size: f64) -> T {
+        self(rng, size)
+    }
+}
+
+/// Run `prop` over `cases` random inputs; panic with the seed + shrunk input
+/// description on failure.
+pub fn prop_check<T: std::fmt::Debug, G: Gen<T>, P: Fn(&T) -> Result<(), String>>(
+    name: &str,
+    cases: usize,
+    gen: G,
+    prop: P,
+) {
+    let base_seed = std::env::var("NDQ_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Xoshiro256::new(seed);
+        let size = (case as f64 + 1.0) / cases as f64; // grow sizes over run
+        let input = gen.generate(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // shrink: try smaller sizes with the same seed
+            let mut best: (f64, T, String) = (size, input, msg);
+            for shrink in 1..=8 {
+                let s = size * (1.0 - shrink as f64 / 9.0);
+                let mut rng = Xoshiro256::new(seed);
+                let candidate = gen.generate(&mut rng, s.max(0.01));
+                if let Err(m) = prop(&candidate) {
+                    best = (s, candidate, m);
+                }
+            }
+            panic!(
+                "property `{name}` failed (seed={seed}, case={case}, size={:.2}):\n  {}\n  input: {:?}\n  (rerun with NDQ_PROP_SEED={base_seed})",
+                best.0, best.2, best.1
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use super::*;
+
+    /// Random f32 vector; size hint scales length up to `max_len` and the
+    /// value magnitude between tiny and large to probe scale-invariance.
+    pub fn f32_vec(max_len: usize) -> impl Gen<Vec<f32>> {
+        move |rng: &mut Xoshiro256, size: f64| {
+            let len = 1 + ((max_len - 1) as f64 * size) as usize;
+            let scale = 10f32.powf((rng.next_f32() * 6.0) - 3.0); // 1e-3..1e3
+            (0..len).map(|_| rng.next_normal() * scale).collect()
+        }
+    }
+
+    /// Vector that may contain exact zeros / repeated values / infinities
+    /// clamped out — the nasty-but-legal gradients.
+    pub fn nasty_f32_vec(max_len: usize) -> impl Gen<Vec<f32>> {
+        move |rng: &mut Xoshiro256, size: f64| {
+            let len = 1 + ((max_len - 1) as f64 * size) as usize;
+            (0..len)
+                .map(|_| match rng.next_below(8) {
+                    0 => 0.0,
+                    1 => 1e-30,
+                    2 => -1e-30,
+                    3 => 1e3,
+                    _ => rng.next_normal(),
+                })
+                .collect()
+        }
+    }
+
+    pub fn seed() -> impl Gen<u64> {
+        |rng: &mut Xoshiro256, _| rng.next_u64()
+    }
+
+    /// Pair generator.
+    pub fn pair<A: 'static, B: 'static>(
+        a: impl Gen<A>,
+        b: impl Gen<B>,
+    ) -> impl Gen<(A, B)> {
+        move |rng: &mut Xoshiro256, size: f64| (a.generate(rng, size), b.generate(rng, size))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("abs-nonneg", 50, gens::f32_vec(100), |v| {
+            if v.iter().all(|x| x.abs() >= 0.0) {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_context() {
+        prop_check("always-fails", 10, gens::f32_vec(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn nasty_gen_hits_zeros() {
+        let mut rng = Xoshiro256::new(1);
+        let g = gens::nasty_f32_vec(1000);
+        let v = g.generate(&mut rng, 1.0);
+        assert!(v.iter().any(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,269 @@
+//! Asynchronous training mode — the paper's conclusion notes the scheme
+//! "is applicable to the asynchronous training as well"; this module makes
+//! that concrete with a bounded-staleness parameter-server loop
+//! (Stale-Synchronous-Parallel-style, paper refs [7]-[10]).
+//!
+//! Protocol: the leader keeps a parameter version counter. Workers request
+//! work whenever free; the gradient they return was computed at some older
+//! version `v`, giving staleness `s = current - v <= max_staleness` (the
+//! leader blocks dispatch beyond the bound). Each arriving (decoded)
+//! gradient is applied immediately, scaled by `1/P` to keep the effective
+//! step comparable to a synchronous round.
+//!
+//! The dither contract changes shape but not substance: the dither stream
+//! is keyed by the worker's *own* step counter (monotonic per worker), and
+//! that counter rides in the message header — still zero extra
+//! coordination, still decodable in any arrival order (the counter-based
+//! Philox pays off here).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::config::TrainConfig;
+use crate::data::{Batch, ImageDataset, ImageKind};
+use crate::opt;
+use crate::prng::DitherStream;
+use crate::quant::GradQuantizer;
+use crate::runtime::ComputeService;
+use crate::train::bits::CommStats;
+use crate::train::trainer::{EvalPoint, TrainReport};
+
+/// Async run statistics beyond the shared report.
+#[derive(Debug, Clone, Default)]
+pub struct AsyncStats {
+    pub updates: usize,
+    pub mean_staleness: f64,
+    pub max_staleness_seen: usize,
+}
+
+/// Bounded-staleness asynchronous trainer.
+///
+/// This is an event-driven *simulation* of asynchrony running on the same
+/// compute service: worker compute times are drawn per-task (heterogeneous
+/// workers — the motivation for async), and the leader processes events in
+/// virtual-time order. Quantization, wire encoding, decoding, and parameter
+/// updates are all the real implementations; only the clock is simulated,
+/// which is what lets us sweep staleness reproducibly.
+pub struct AsyncTrainer {
+    cfg: TrainConfig,
+    pub max_staleness: usize,
+    /// per-worker relative speed (1.0 = nominal); defaults heterogeneous
+    pub worker_speed: Vec<f64>,
+    service: ComputeService,
+}
+
+struct PendingGrad {
+    worker: usize,
+    /// parameter version the gradient was computed at
+    version: usize,
+    /// worker-local step counter (keys the dither stream)
+    wstep: u64,
+    finish_time: f64,
+}
+
+impl AsyncTrainer {
+    pub fn new(cfg: TrainConfig, max_staleness: usize) -> crate::Result<Self> {
+        let service = ComputeService::start(std::path::Path::new(&cfg.artifacts_dir))?;
+        let worker_speed = (0..cfg.workers)
+            .map(|p| 1.0 + 0.5 * (p as f64 / cfg.workers.max(1) as f64)) // up to 1.5x slower
+            .collect();
+        Ok(Self {
+            cfg,
+            max_staleness,
+            worker_speed,
+            service,
+        })
+    }
+
+    pub fn run(&mut self) -> crate::Result<(TrainReport, AsyncStats)> {
+        let t0 = std::time::Instant::now();
+        let cfg = &self.cfg;
+        let h = self.service.handle();
+        let manifest =
+            crate::runtime::Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
+        let info = manifest.model(&cfg.model)?.clone();
+        anyhow::ensure!(!manifest.is_lm(&cfg.model), "async trainer: image models only");
+        let kind = ImageKind::for_model(&cfg.model)?;
+        let ds = ImageDataset::new(kind, cfg.seed ^ 0xDA7A);
+        let mut params = manifest.init_params(&cfg.model)?;
+        let mut optimizer = opt::build(cfg.opt, cfg.lr);
+        let mut comm = CommStats::new(false);
+
+        // per-worker state
+        let mut quantizers: Vec<Box<dyn GradQuantizer>> =
+            (0..cfg.workers).map(|_| cfg.scheme.build()).collect();
+        let streams: Vec<DitherStream> = (0..cfg.workers)
+            .map(|p| DitherStream::new(cfg.seed, p as u32))
+            .collect();
+        let mut wsteps = vec![0u64; cfg.workers];
+        // parameter snapshots a worker may still be computing against
+        let mut versions: VecDeque<(usize, Arc<Vec<f32>>)> = VecDeque::new();
+        let mut version = 0usize;
+        versions.push_back((0, Arc::new(params.clone())));
+
+        let mut queue: Vec<PendingGrad> = Vec::new();
+        let mut clock = 0f64;
+        let b = cfg.per_worker_batch();
+        // dispatch initial work
+        for p in 0..cfg.workers {
+            queue.push(PendingGrad {
+                worker: p,
+                version,
+                wstep: wsteps[p],
+                finish_time: clock + self.worker_speed[p],
+            });
+            wsteps[p] += 1;
+        }
+
+        let mut stats = AsyncStats::default();
+        let mut history = Vec::new();
+        let total_updates = cfg.rounds * cfg.workers; // comparable work budget
+        let mut staleness_sum = 0usize;
+        let mut train_loss = f32::NAN;
+
+        while stats.updates < total_updates {
+            // next event in virtual time
+            let idx = queue
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.finish_time.partial_cmp(&b.1.finish_time).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            let ev = queue.swap_remove(idx);
+            clock = ev.finish_time;
+            let staleness = version - ev.version;
+            // bounded staleness (SSP): gradients staler than the bound are
+            // dropped, not applied — the worker just fetches fresh params.
+            // (with one task in flight per worker, staleness <= P-1
+            // naturally; the bound only bites when set below that)
+            if staleness > self.max_staleness {
+                queue.push(PendingGrad {
+                    worker: ev.worker,
+                    version,
+                    wstep: wsteps[ev.worker],
+                    finish_time: clock
+                        + self.worker_speed[ev.worker] * (0.8 + 0.4 * frac(ev.wstep)),
+                });
+                wsteps[ev.worker] += 1;
+                continue;
+            }
+            stats.max_staleness_seen = stats.max_staleness_seen.max(staleness);
+            staleness_sum += staleness;
+
+            // compute the gradient NOW against the snapshot it saw
+            let snap = versions
+                .iter()
+                .find(|(v, _)| *v == ev.version)
+                .map(|(_, p)| Arc::clone(p))
+                .expect("snapshot retained while referenced");
+            let mut batch = Batch::new(b, info.feature_dim);
+            ds.train_batch(ev.wstep, ev.worker, cfg.workers, b, &mut batch);
+            let (loss, grad) = h.grad_image(&cfg.model, &snap, batch.x, batch.y, b)?;
+            train_loss = loss;
+
+            // encode -> wire -> decode with the wstep-keyed dither
+            let msg = quantizers[ev.worker]
+                .encode(&grad, &mut streams[ev.worker].round(ev.wstep));
+            comm.record_upload(&msg);
+            let recon = quantizers[ev.worker].decode(
+                &msg,
+                &mut streams[ev.worker].round(ev.wstep),
+                None,
+            )?;
+
+            // apply immediately, scaled to the per-round magnitude
+            let scaled: Vec<f32> = recon.iter().map(|&g| g / cfg.workers as f32).collect();
+            optimizer.step(&mut params, &scaled);
+            version += 1;
+            versions.push_back((version, Arc::new(params.clone())));
+            // retire snapshots no in-flight task references anymore
+            let min_ref = queue.iter().map(|t| t.version).min().unwrap_or(version);
+            while versions.front().map(|(v, _)| *v < min_ref).unwrap_or(false) {
+                versions.pop_front();
+            }
+            stats.updates += 1;
+
+            // re-dispatch the worker — against the freshest version the
+            // staleness bound admits (bound enforcement = workers never
+            // start from a version older than current - max_staleness)
+            queue.push(PendingGrad {
+                worker: ev.worker,
+                version,
+                wstep: wsteps[ev.worker],
+                finish_time: clock + self.worker_speed[ev.worker] * (0.8 + 0.4 * frac(ev.wstep)),
+            });
+            wsteps[ev.worker] += 1;
+
+            let eval_stride = cfg.eval_every.max(1) * cfg.workers;
+            if cfg.eval_every > 0 && stats.updates % eval_stride == 0 {
+                let (eval_loss, acc) = self.evaluate(&ds, &info, &params)?;
+                history.push(EvalPoint {
+                    round: stats.updates / cfg.workers,
+                    train_loss,
+                    eval_loss,
+                    accuracy: acc,
+                    cum_raw_bits_per_worker: comm.total_raw_bits / cfg.workers as f64,
+                });
+            }
+        }
+        let (eval_loss, acc) = self.evaluate(&ds, &info, &params)?;
+        history.push(EvalPoint {
+            round: cfg.rounds,
+            train_loss,
+            eval_loss,
+            accuracy: acc,
+            cum_raw_bits_per_worker: comm.total_raw_bits / cfg.workers as f64,
+        });
+        stats.mean_staleness = staleness_sum as f64 / stats.updates.max(1) as f64;
+
+        Ok((
+            TrainReport {
+                config_label: format!(
+                    "{} {} P={} async(s<={})",
+                    cfg.model,
+                    cfg.scheme.label(),
+                    cfg.workers,
+                    self.max_staleness
+                ),
+                final_accuracy: acc,
+                final_eval_loss: eval_loss,
+                history,
+                comm,
+                rounds: cfg.rounds,
+                workers: cfg.workers,
+                n_params: info.n_params,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            },
+            stats,
+        ))
+    }
+
+    fn evaluate(
+        &self,
+        ds: &ImageDataset,
+        info: &crate::runtime::manifest::ModelInfo,
+        params: &[f32],
+    ) -> crate::Result<(f32, f64)> {
+        let h = self.service.handle();
+        let total = self.cfg.eval_examples;
+        let b = total.min(512);
+        let chunks = total.div_ceil(b);
+        let p = Arc::new(params.to_vec());
+        let mut batch = Batch::new(b, info.feature_dim);
+        let mut loss = 0f64;
+        let mut correct = 0usize;
+        for i in 0..chunks {
+            ds.eval_batch(i as u64, b, &mut batch);
+            let (l, c) =
+                h.eval_image(&self.cfg.model, &p, batch.x.clone(), batch.y.clone(), b)?;
+            loss += l as f64;
+            correct += c;
+        }
+        Ok(((loss / chunks as f64) as f32, correct as f64 / (chunks * b) as f64))
+    }
+}
+
+/// cheap deterministic jitter in [0,1) from a counter
+fn frac(x: u64) -> f64 {
+    (crate::prng::philox::splitmix64(x) >> 11) as f64 / 9_007_199_254_740_992.0
+}

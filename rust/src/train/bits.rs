@@ -1,0 +1,102 @@
+//! Communication accounting: the paper's core metric.
+//!
+//! Every [`crate::quant::WireMsg`] that crosses the worker->server channel
+//! is tallied here: raw bits (Table 1), order-0 entropy of the index stream
+//! (Table 2's limit) and — when `measure_aac` is on — the *actual* adaptive
+//! arithmetic coder output (Table 2's achieved number, "within 5%").
+
+use crate::quant::WireMsg;
+use crate::stats::Running;
+
+#[derive(Debug, Default, Clone)]
+pub struct CommStats {
+    /// Uplink (worker -> server) per-message stats, in bits.
+    pub raw: Running,
+    pub entropy: Running,
+    pub aac: Running,
+    /// Total uplink bits across all workers and rounds.
+    pub total_raw_bits: f64,
+    pub total_entropy_bits: f64,
+    pub total_aac_bits: f64,
+    /// Broadcast (server -> workers) bits per round.
+    pub bcast: Running,
+    pub total_bcast_bits: f64,
+    pub messages: u64,
+    /// Whether to run the (more expensive) AAC on every message.
+    pub measure_aac: bool,
+}
+
+impl CommStats {
+    pub fn new(measure_aac: bool) -> Self {
+        Self {
+            raw: Running::new(),
+            entropy: Running::new(),
+            aac: Running::new(),
+            bcast: Running::new(),
+            measure_aac,
+            ..Default::default()
+        }
+    }
+
+    pub fn record_upload(&mut self, msg: &WireMsg) {
+        let raw = msg.raw_bits() as f64;
+        self.raw.push(raw);
+        self.total_raw_bits += raw;
+        let ent = msg.entropy_bits();
+        self.entropy.push(ent);
+        self.total_entropy_bits += ent;
+        if self.measure_aac {
+            let a = msg.aac_bits() as f64;
+            self.aac.push(a);
+            self.total_aac_bits += a;
+        }
+        self.messages += 1;
+    }
+
+    pub fn record_broadcast(&mut self, bits: f64) {
+        self.bcast.push(bits);
+        self.total_bcast_bits += bits;
+    }
+
+    /// Mean uplink Kbits per message (per worker per iteration) — the unit
+    /// of Tables 1-2.
+    pub fn kbits_per_msg_raw(&self) -> f64 {
+        self.raw.mean() / 1000.0
+    }
+
+    pub fn kbits_per_msg_entropy(&self) -> f64 {
+        self.entropy.mean() / 1000.0
+    }
+
+    pub fn kbits_per_msg_aac(&self) -> f64 {
+        self.aac.mean() / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::DitherStream;
+    use crate::quant::Scheme;
+
+    #[test]
+    fn accounting_matches_messages() {
+        let mut stats = CommStats::new(true);
+        let mut q = Scheme::Dithered { delta: 1.0 }.build();
+        // gradient-like stream large enough for the adaptive model's ramp-up
+        // to amortize (Table-2-sized messages are >= 266k coordinates)
+        let mut rng = crate::prng::Xoshiro256::new(4);
+        let g: Vec<f32> = (0..50_000).map(|_| rng.next_normal() * 0.1).collect();
+        let stream = DitherStream::new(0, 0);
+        for round in 0..5 {
+            let msg = q.encode(&g, &mut stream.round(round));
+            stats.record_upload(&msg);
+        }
+        assert_eq!(stats.messages, 5);
+        assert!(stats.total_raw_bits > 0.0);
+        // raw >= entropy for a compressible stream; AAC close to entropy
+        assert!(stats.total_raw_bits >= stats.total_entropy_bits * 0.99);
+        let ratio = stats.total_aac_bits / stats.total_entropy_bits;
+        assert!(ratio < 1.05, "aac/entropy = {ratio}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Hierarchical aggregation — the paper's conclusion: "our nested
+//! quantization scheme can be easily extended to hierarchical distributed
+//! structures". This module implements a two-tier topology:
+//!
+//!   workers --(leaf links)--> group leaders --(root links)--> root server
+//!
+//! Within a group, the first worker sends DQSG (bootstrapping side
+//! information at its leader) and the rest send NDQSG decoded against the
+//! group's running average (Alg. 2, per group). Each leader then forwards
+//! its *group average* upward; the root decodes leaders the same way — the
+//! first leader's average plain (DQSG), subsequent leaders nested against
+//! the root's running average, because group averages are themselves
+//! correlated. Bit accounting distinguishes leaf-tier and root-tier bytes.
+
+use crate::prng::DitherStream;
+use crate::quant::{GradQuantizer, Scheme};
+use crate::tensor;
+
+/// Static two-tier topology description.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub groups: usize,
+    pub per_group: usize,
+    pub leaf_dqsg: Scheme,
+    pub leaf_nested: Scheme,
+    pub root_dqsg: Scheme,
+    pub root_nested: Scheme,
+}
+
+impl Hierarchy {
+    /// The Fig.-6 operating point at both tiers.
+    pub fn paper_default(groups: usize, per_group: usize) -> Self {
+        Self {
+            groups,
+            per_group,
+            leaf_dqsg: Scheme::Dithered { delta: 1.0 / 3.0 },
+            leaf_nested: Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            root_dqsg: Scheme::Dithered { delta: 1.0 / 3.0 },
+            root_nested: Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.groups * self.per_group
+    }
+}
+
+/// One aggregation round's result.
+#[derive(Debug, Clone)]
+pub struct HierarchyRound {
+    /// The root's final average gradient estimate.
+    pub average: Vec<f32>,
+    /// Total uplink bits on the leaf tier (workers -> leaders).
+    pub leaf_bits: usize,
+    /// Total uplink bits on the root tier (leaders -> root).
+    pub root_bits: usize,
+    /// What a flat (single-tier) all-DQSG deployment would have cost.
+    pub flat_dqsg_bits: usize,
+}
+
+/// Run one hierarchical aggregation round over the workers' gradients.
+///
+/// `grads[g][w]` = gradient of worker w in group g; dither streams are keyed
+/// (run_seed, global worker id) at the leaf tier and (run_seed, 2^16 + g)
+/// at the root tier.
+pub fn aggregate_round(
+    h: &Hierarchy,
+    grads: &[Vec<Vec<f32>>],
+    run_seed: u64,
+    round: u64,
+) -> crate::Result<HierarchyRound> {
+    anyhow::ensure!(grads.len() == h.groups, "group count mismatch");
+    let n = grads[0][0].len();
+    let mut leaf_bits = 0usize;
+    let mut flat_dqsg_bits = 0usize;
+    let mut group_avgs: Vec<Vec<f32>> = Vec::with_capacity(h.groups);
+
+    // ---- leaf tier: Alg. 2 inside each group ----
+    for (g, group) in grads.iter().enumerate() {
+        anyhow::ensure!(group.len() == h.per_group, "group {g} size mismatch");
+        let mut avg = vec![0f32; n];
+        let mut count = 0usize;
+        for (w, grad) in group.iter().enumerate() {
+            let global = (g * h.per_group + w) as u32;
+            let scheme = if w == 0 { h.leaf_dqsg } else { h.leaf_nested };
+            let mut q = scheme.build();
+            let stream = DitherStream::new(run_seed, global);
+            let msg = q.encode(grad, &mut stream.round(round));
+            leaf_bits += msg.raw_bits();
+            // flat comparison: everyone DQSG at the same fine step
+            let mut qf = h.leaf_dqsg.build();
+            let sf = DitherStream::new(run_seed ^ 0xF1A7, global);
+            flat_dqsg_bits += qf.encode(grad, &mut sf.round(round)).raw_bits();
+
+            let side = if w == 0 { None } else { Some(avg.as_slice()) };
+            let decoded = q.decode(&msg, &mut stream.round(round), side)?;
+            count += 1;
+            let inv = 1.0 / count as f32;
+            for (a, &d) in avg.iter_mut().zip(&decoded) {
+                *a += (d - *a) * inv;
+            }
+        }
+        group_avgs.push(avg);
+    }
+
+    // ---- root tier: leaders' averages, nested against the root average ----
+    let mut root_bits = 0usize;
+    let mut root_avg = vec![0f32; n];
+    let mut count = 0usize;
+    for (g, gavg) in group_avgs.iter().enumerate() {
+        let scheme = if g == 0 { h.root_dqsg } else { h.root_nested };
+        let mut q = scheme.build();
+        let stream = DitherStream::new(run_seed, 0x1_0000 + g as u32);
+        let msg = q.encode(gavg, &mut stream.round(round));
+        root_bits += msg.raw_bits();
+        let side = if g == 0 { None } else { Some(root_avg.as_slice()) };
+        let decoded = q.decode(&msg, &mut stream.round(round), side)?;
+        count += 1;
+        let inv = 1.0 / count as f32;
+        for (a, &d) in root_avg.iter_mut().zip(&decoded) {
+            *a += (d - *a) * inv;
+        }
+    }
+
+    Ok(HierarchyRound {
+        average: root_avg,
+        leaf_bits,
+        root_bits,
+        flat_dqsg_bits,
+    })
+}
+
+/// Convenience: true mean of all worker gradients (oracle for tests).
+pub fn true_mean(grads: &[Vec<Vec<f32>>]) -> Vec<f32> {
+    let flat: Vec<&[f32]> = grads
+        .iter()
+        .flat_map(|g| g.iter().map(|v| v.as_slice()))
+        .collect();
+    let mut out = vec![0f32; flat[0].len()];
+    tensor::mean_rows(&flat, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256;
+
+    fn correlated_grads(
+        groups: usize,
+        per_group: usize,
+        n: usize,
+        seed: u64,
+    ) -> Vec<Vec<Vec<f32>>> {
+        let mut rng = Xoshiro256::new(seed);
+        let base: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.2).collect();
+        (0..groups)
+            .map(|_| {
+                (0..per_group)
+                    .map(|_| {
+                        base.iter()
+                            .map(|&b| b + rng.next_normal() * 0.01)
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn hierarchical_average_tracks_true_mean() {
+        let h = Hierarchy::paper_default(4, 4);
+        let grads = correlated_grads(4, 4, 3000, 1);
+        let round = aggregate_round(&h, &grads, 7, 0).unwrap();
+        let want = true_mean(&grads);
+        let rmse = (tensor::sq_dist(&round.average, &want) / want.len() as f64).sqrt();
+        assert!(rmse < 0.05, "rmse {rmse}");
+    }
+
+    #[test]
+    fn nested_tiers_save_bits_vs_flat() {
+        let h = Hierarchy::paper_default(4, 4);
+        let grads = correlated_grads(4, 4, 10_000, 2);
+        let round = aggregate_round(&h, &grads, 3, 0).unwrap();
+        // leaf tier: 4 of 16 workers pay the 7-level rate, 12 pay ternary;
+        // flat all-DQSG(1/3) pays 7-level everywhere -> leaf must be cheaper
+        assert!(
+            round.leaf_bits < round.flat_dqsg_bits,
+            "leaf {} vs flat {}",
+            round.leaf_bits,
+            round.flat_dqsg_bits
+        );
+        let saving = 1.0 - round.leaf_bits as f64 / round.flat_dqsg_bits as f64;
+        assert!(saving > 0.25, "saving {saving}");
+    }
+
+    #[test]
+    fn degenerate_single_group_single_worker() {
+        let h = Hierarchy::paper_default(1, 1);
+        let grads = correlated_grads(1, 1, 500, 3);
+        let round = aggregate_round(&h, &grads, 0, 0).unwrap();
+        assert_eq!(round.average.len(), 500);
+        assert!(round.root_bits > 0 && round.leaf_bits > 0);
+    }
+
+    #[test]
+    fn group_shape_mismatch_rejected() {
+        let h = Hierarchy::paper_default(2, 2);
+        let grads = correlated_grads(2, 3, 100, 4);
+        assert!(aggregate_round(&h, &grads, 0, 0).is_err());
+    }
+}

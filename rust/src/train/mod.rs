@@ -1,0 +1,21 @@
+//! The distributed-training coordinator (L3): synchronous parameter-server
+//! rounds with quantized gradient exchange — Fig. 2 / Alg. 1 / Alg. 2 of
+//! the paper, realized as a leader (server) thread plus P worker threads
+//! connected by channels carrying *bit-exact* [`crate::quant::WireMsg`]s.
+//!
+//! Module map:
+//! * [`bits`]    — communication accounting (Tables 1-2 metrics)
+//! * [`worker`]  — worker thread: data shard -> gradient -> encode -> send
+//! * [`server`]  — server decode logic incl. Alg. 2 side-information order
+//! * [`trainer`] — the round loop, optimizer, eval, reporting
+
+pub mod async_trainer;
+pub mod bits;
+pub mod hierarchy;
+pub mod server;
+pub mod trainer;
+pub mod worker;
+
+pub use async_trainer::AsyncTrainer;
+pub use bits::CommStats;
+pub use trainer::{TrainReport, Trainer};

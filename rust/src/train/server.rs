@@ -1,0 +1,224 @@
+//! Server-side decode + aggregation: Alg. 1 (DQSG) and Alg. 2 (NDQSG with
+//! two worker groups and sequential side-information updates).
+//!
+//! The server holds *its own* copies of every worker's seed (`DitherStream`
+//! per worker, as Alg. 1 prescribes) and its own decoder instances built
+//! from the same scheme configs — it reconstructs gradients from wire bytes
+//! + regenerated dither only.
+
+use crate::prng::DitherStream;
+use crate::quant::{GradQuantizer, Scheme};
+use crate::train::worker::WorkerMsg;
+
+pub struct Server {
+    /// Per-worker decoder (stateless per round; boxed per scheme).
+    decoders: Vec<Box<dyn GradQuantizer>>,
+    /// Per-worker shared-seed streams (the server's seed copies).
+    streams: Vec<DitherStream>,
+    /// Whether worker p is in the side-information-producing group P1.
+    in_p1: Vec<bool>,
+    n_params: usize,
+}
+
+impl Server {
+    /// `schemes[p]` = the scheme worker p uses; P1 = workers whose scheme
+    /// does not need side info, P2 = workers whose scheme does (NDQSG).
+    pub fn new(schemes: &[Scheme], run_seed: u64, n_params: usize) -> Self {
+        let decoders: Vec<_> = schemes.iter().map(|s| s.build()).collect();
+        let in_p1 = decoders.iter().map(|d| !d.needs_side_info()).collect();
+        let streams = (0..schemes.len())
+            .map(|p| DitherStream::new(run_seed, p as u32))
+            .collect();
+        Self {
+            decoders,
+            streams,
+            in_p1,
+            n_params,
+        }
+    }
+
+    /// Decode all P messages of one round and return the average gradient.
+    ///
+    /// Alg. 2 order: P1 messages first (averaged to form the initial side
+    /// information), then each P2 message decoded against the *running*
+    /// average, which is updated after each decode.
+    pub fn decode_round(&self, msgs: &[WorkerMsg]) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(!msgs.is_empty(), "no worker messages");
+        let mut avg = vec![0f32; self.n_params];
+        let mut count = 0usize;
+
+        // pass 1: P1 (plain schemes)
+        for msg in msgs.iter().filter(|m| self.in_p1[m.worker]) {
+            let g = self.decode_one(msg, None)?;
+            accumulate(&mut avg, &g, &mut count);
+        }
+        anyhow::ensure!(
+            count > 0 || msgs.iter().all(|m| self.in_p1[m.worker]),
+            "NDQSG requires at least one P1 worker to bootstrap side information (Alg. 2)"
+        );
+
+        // pass 2: P2 (nested), sequentially refining the running average
+        for msg in msgs.iter().filter(|m| !self.in_p1[m.worker]) {
+            let g = {
+                let side = &avg;
+                self.decode_one(msg, Some(side))?
+            };
+            accumulate(&mut avg, &g, &mut count);
+        }
+        Ok(avg)
+    }
+
+    fn decode_one(&self, msg: &WorkerMsg, side: Option<&[f32]>) -> crate::Result<Vec<f32>> {
+        let p = msg.worker;
+        let dec = &self.decoders[p];
+        let mut gen = self.streams[p].round(msg.round);
+        dec.decode(&msg.wire, &mut gen, side)
+    }
+
+    pub fn is_p1(&self, worker: usize) -> bool {
+        self.in_p1[worker]
+    }
+}
+
+/// Running mean: avg_{k+1} = avg_k + (g - avg_k) / (k+1).
+fn accumulate(avg: &mut [f32], g: &[f32], count: &mut usize) {
+    *count += 1;
+    let inv = 1.0 / *count as f32;
+    for (a, &gi) in avg.iter_mut().zip(g) {
+        *a += (gi - *a) * inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256;
+
+
+    fn make_msgs(schemes: &[Scheme], gs: &[Vec<f32>], run_seed: u64, round: u64) -> Vec<WorkerMsg> {
+        gs.iter()
+            .enumerate()
+            .map(|(p, g)| {
+                let mut q = schemes[p].build();
+                let stream = DitherStream::new(run_seed, p as u32);
+                let wire = q.encode(g, &mut stream.round(round));
+                WorkerMsg {
+                    worker: p,
+                    round,
+                    loss: 0.0,
+                    wire,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dqsg_average_close_to_true_mean() {
+        let mut rng = Xoshiro256::new(1);
+        let n = 2000;
+        let p = 4;
+        let schemes = vec![Scheme::Dithered { delta: 0.5 }; p];
+        let gs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.next_normal() * 0.2).collect())
+            .collect();
+        let msgs = make_msgs(&schemes, &gs, 7, 3);
+        let server = Server::new(&schemes, 7, n);
+        let avg = server.decode_round(&msgs).unwrap();
+
+        let mut want = vec![0f32; n];
+        let refs: Vec<&[f32]> = gs.iter().map(|v| v.as_slice()).collect();
+        crate::tensor::mean_rows(&refs, &mut want);
+        // error per coordinate <= mean of per-worker bounds kappa*delta/2 / P... just check rmse small
+        let rmse = (crate::tensor::sq_dist(&avg, &want) / n as f64).sqrt();
+        // per-worker error std = kappa*delta/sqrt(12); averaging / sqrt(P)
+        assert!(rmse < 0.2, "rmse {rmse}");
+    }
+
+    #[test]
+    fn ndqsg_group_split_and_decode() {
+        // Alg. 2: workers 0..2 DQSG (P1), workers 2..4 NDQSG (P2) with
+        // correlated gradients; all four decode within their error bounds.
+        let mut rng = Xoshiro256::new(2);
+        let n = 3000;
+        let base: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.2).collect();
+        let gs: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                base.iter()
+                    .map(|&b| b + rng.next_normal() * 0.01)
+                    .collect()
+            })
+            .collect();
+        let schemes = vec![
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        ];
+        let msgs = make_msgs(&schemes, &gs, 11, 0);
+        let server = Server::new(&schemes, 11, n);
+        assert!(server.is_p1(0) && server.is_p1(1));
+        assert!(!server.is_p1(2) && !server.is_p1(3));
+        let avg = server.decode_round(&msgs).unwrap();
+        let mut want = vec![0f32; n];
+        let refs: Vec<&[f32]> = gs.iter().map(|v| v.as_slice()).collect();
+        crate::tensor::mean_rows(&refs, &mut want);
+        let rmse = (crate::tensor::sq_dist(&avg, &want) / n as f64).sqrt();
+        assert!(rmse < 0.05, "rmse {rmse}");
+    }
+
+    #[test]
+    fn all_nested_rejected() {
+        let schemes = vec![Scheme::Nested { d1: 0.25, ratio: 3, alpha: 1.0 }; 2];
+        let mut rng = Xoshiro256::new(3);
+        let gs: Vec<Vec<f32>> = (0..2)
+            .map(|_| (0..100).map(|_| rng.next_normal()).collect())
+            .collect();
+        let msgs = make_msgs(&schemes, &gs, 0, 0);
+        let server = Server::new(&schemes, 0, 100);
+        assert!(server.decode_round(&msgs).is_err());
+    }
+
+    #[test]
+    fn decode_is_wire_only() {
+        // corrupting a payload byte must change the decoded gradient —
+        // proof that decode reads the payload, not the cached indices.
+        let schemes = vec![Scheme::Dithered { delta: 1.0 }];
+        let g: Vec<f32> = (0..500).map(|i| (i as f32 * 0.01).sin()).collect();
+        let mut msgs = make_msgs(&schemes, &[g], 5, 1);
+        let server = Server::new(&schemes, 5, 500);
+        let clean = server.decode_round(&msgs).unwrap();
+        // flip a byte well inside the packed-index region
+        let idx = msgs[0].wire.payload.len() / 2;
+        msgs[0].wire.payload[idx] ^= 0xFF;
+        let server2 = Server::new(&schemes, 5, 500);
+        let dirty = server2.decode_round(&msgs).unwrap();
+        assert_ne!(clean, dirty);
+    }
+
+    #[test]
+    fn baseline_average_exact() {
+        let schemes = vec![Scheme::Baseline; 3];
+        let gs: Vec<Vec<f32>> = vec![
+            vec![1.0, 2.0, 3.0],
+            vec![3.0, 2.0, 1.0],
+            vec![2.0, 2.0, 2.0],
+        ];
+        let msgs = make_msgs(&schemes, &gs, 0, 0);
+        let server = Server::new(&schemes, 0, 3);
+        let avg = server.decode_round(&msgs).unwrap();
+        assert_eq!(avg, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn stale_wiremsg_struct_fields_unused() {
+        // WireMsg.indices/scales may be cleared without affecting decode
+        let schemes = vec![Scheme::Dithered { delta: 0.5 }];
+        let g: Vec<f32> = (0..200).map(|i| ((i * 7 % 13) as f32 - 6.0) / 6.0).collect();
+        let mut msgs = make_msgs(&schemes, &[g], 9, 2);
+        msgs[0].wire.indices.clear();
+        msgs[0].wire.scales.clear();
+        let server = Server::new(&schemes, 9, 200);
+        let avg = server.decode_round(&msgs).unwrap();
+        assert_eq!(avg.len(), 200);
+    }
+}

@@ -1,0 +1,335 @@
+//! The training round loop (leader): spawns workers, drives synchronous
+//! rounds, aggregates with [`super::server::Server`], applies the
+//! optimizer, evaluates, and reports accuracy + communication totals.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::config::{OptKind, TrainConfig};
+use crate::data::{Batch, ImageDataset, ImageKind, TokenDataset};
+use crate::opt;
+use crate::quant::Scheme;
+use crate::runtime::{ComputeHandle, ComputeService};
+use crate::sim::LinkModel;
+use crate::train::server::Server;
+use crate::train::worker::{TaskData, Worker, WorkerCmd, WorkerMsg};
+use crate::train::CommStats;
+use crate::util::json::{self, Json};
+
+/// One evaluation point on the learning curve.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalPoint {
+    pub round: usize,
+    pub train_loss: f32,
+    pub eval_loss: f32,
+    /// Classification accuracy in [0,1]; NaN for LM tasks.
+    pub accuracy: f64,
+    /// Cumulative uplink raw bits per worker up to this round.
+    pub cum_raw_bits_per_worker: f64,
+}
+
+/// Everything a bench/example needs from a finished run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub config_label: String,
+    pub history: Vec<EvalPoint>,
+    pub comm: CommStats,
+    pub final_accuracy: f64,
+    pub final_eval_loss: f32,
+    pub rounds: usize,
+    pub workers: usize,
+    pub n_params: usize,
+    pub wall_secs: f64,
+}
+
+impl TrainReport {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("config", json::s(&self.config_label)),
+            ("final_accuracy", json::num(self.final_accuracy)),
+            ("final_eval_loss", json::num(self.final_eval_loss as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            ("workers", json::num(self.workers as f64)),
+            ("kbits_raw_per_msg", json::num(self.comm.kbits_per_msg_raw())),
+            (
+                "kbits_entropy_per_msg",
+                json::num(self.comm.kbits_per_msg_entropy()),
+            ),
+            ("wall_secs", json::num(self.wall_secs)),
+            (
+                "history",
+                Json::Arr(
+                    self.history
+                        .iter()
+                        .map(|h| {
+                            json::obj(vec![
+                                ("round", json::num(h.round as f64)),
+                                ("train_loss", json::num(h.train_loss as f64)),
+                                ("eval_loss", json::num(h.eval_loss as f64)),
+                                ("accuracy", json::num(h.accuracy)),
+                                ("cum_raw_bits", json::num(h.cum_raw_bits_per_worker)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Projected wall-clock communication time on a simulated link.
+    pub fn projected_comm_secs(&self, link: &LinkModel) -> f64 {
+        let per_round_up = self.comm.raw.mean();
+        let bcast = self.comm.bcast.mean();
+        crate::sim::round_comm_time(link, self.workers, per_round_up, bcast) * self.rounds as f64
+    }
+}
+
+/// The synchronous distributed trainer (leader side).
+pub struct Trainer {
+    cfg: TrainConfig,
+    service: ComputeService,
+    compute: ComputeHandle,
+    task: TaskData,
+    n_params: usize,
+    params: Arc<Vec<f32>>,
+    schemes: Vec<Scheme>,
+    pub verbose: bool,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> crate::Result<Self> {
+        let service = ComputeService::start(std::path::Path::new(&cfg.artifacts_dir))?;
+        let compute = service.handle();
+        let manifest = crate::runtime::Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
+        let info = manifest.model(&cfg.model)?.clone();
+        let task = if manifest.is_lm(&cfg.model) {
+            TaskData::Lm {
+                model: cfg.model.clone(),
+                ds: TokenDataset::new(info.vocab, cfg.seed ^ 0xDA7A),
+                seq: info.seq_len,
+            }
+        } else {
+            TaskData::Image {
+                model: cfg.model.clone(),
+                ds: ImageDataset::new(ImageKind::for_model(&cfg.model)?, cfg.seed ^ 0xDA7A),
+                feat: info.feature_dim,
+            }
+        };
+        let params = Arc::new(manifest.init_params(&cfg.model)?);
+
+        // Worker group assignment (Alg. 2): when scheme_p2 is set, the
+        // first half of the workers use `scheme` (P1), the second half
+        // `scheme_p2` (P2). Otherwise everyone uses `scheme`.
+        let schemes: Vec<Scheme> = (0..cfg.workers)
+            .map(|p| match cfg.scheme_p2 {
+                Some(s2) if p >= cfg.workers / 2 => s2,
+                _ => cfg.scheme,
+            })
+            .collect();
+
+        Ok(Self {
+            n_params: info.n_params,
+            task,
+            params,
+            schemes,
+            compute,
+            service,
+            cfg,
+            verbose: false,
+        })
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn compute(&self) -> ComputeHandle {
+        self.service.handle()
+    }
+
+    fn label(&self) -> String {
+        let base = match self.cfg.scheme_p2 {
+            Some(s2) => format!("{}+{}", self.cfg.scheme.label(), s2.label()),
+            None => self.cfg.scheme.label(),
+        };
+        format!(
+            "{} {} P={} opt={:?}",
+            self.cfg.model, base, self.cfg.workers, self.cfg.opt
+        )
+    }
+
+    /// Evaluate on the held-out synthetic split.
+    pub fn evaluate(&self) -> crate::Result<(f32, f64)> {
+        match &self.task {
+            TaskData::Image { model, ds, feat } => {
+                let total = self.cfg.eval_examples;
+                let b = total.min(512);
+                let mut batch = Batch::new(b, *feat);
+                let mut loss = 0f64;
+                let mut correct = 0usize;
+                let chunks = total.div_ceil(b);
+                for i in 0..chunks {
+                    ds.eval_batch(i as u64, b, &mut batch);
+                    let (l, c) = self.compute.eval_image(
+                        model,
+                        &self.params,
+                        batch.x.clone(),
+                        batch.y.clone(),
+                        b,
+                    )?;
+                    loss += l as f64;
+                    correct += c;
+                }
+                Ok((
+                    (loss / chunks as f64) as f32,
+                    correct as f64 / (chunks * b) as f64,
+                ))
+            }
+            TaskData::Lm { model, ds, seq } => {
+                // LM eval: average next-token loss over held-out sequences
+                // via the grad artifact's loss output (no accuracy).
+                let b = 8;
+                let mut tokens = vec![0i32; b * seq];
+                let mut loss = 0f64;
+                let chunks = 4;
+                for i in 0..chunks {
+                    ds.eval_batch(i as u64, b, *seq, &mut tokens);
+                    let (l, _g) =
+                        self.compute
+                            .grad_lm(model, &self.params, tokens.clone(), b)?;
+                    loss += l as f64;
+                }
+                Ok(((loss / chunks as f64) as f32, f64::NAN))
+            }
+        }
+    }
+
+    /// Run the full configured training; returns the report.
+    pub fn run(&mut self) -> crate::Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        let cfg = self.cfg.clone();
+        let (msg_tx, msg_rx) = mpsc::channel::<crate::Result<WorkerMsg>>();
+        let mut workers: Vec<Worker> = (0..cfg.workers)
+            .map(|p| {
+                Worker::spawn_pair(
+                    crate::train::worker::WorkerCfg {
+                        id: p,
+                        workers: cfg.workers,
+                        per_worker_batch: cfg.per_worker_batch(),
+                        scheme: self.schemes[p],
+                        run_seed: cfg.seed,
+                        task: self.task.clone(),
+                    },
+                    self.compute.clone(),
+                    msg_tx.clone(),
+                )
+            })
+            .collect::<crate::Result<_>>()?;
+
+        let server = Server::new(&self.schemes, cfg.seed, self.n_params);
+        let mut optimizer = opt::build(cfg.opt, cfg.lr);
+        let mut comm = CommStats::new(false);
+        let mut history = Vec::new();
+        let mut round_msgs: Vec<WorkerMsg> = Vec::with_capacity(cfg.workers);
+
+        for round in 0..cfg.rounds {
+            // leader: broadcast round start (params are logically replicated)
+            for w in &workers {
+                w.cmd
+                    .send(WorkerCmd::Round {
+                        round: round as u64,
+                        params: Arc::clone(&self.params),
+                    })
+                    .map_err(|_| anyhow::anyhow!("worker {} died", w.id))?;
+            }
+            // collect all P wire messages (synchronous barrier)
+            round_msgs.clear();
+            for _ in 0..cfg.workers {
+                let msg = msg_rx.recv().map_err(|_| anyhow::anyhow!("workers gone"))??;
+                comm.record_upload(&msg.wire);
+                round_msgs.push(msg);
+            }
+            // canonicalize arrival order: decode/averaging is f32 math, so
+            // aggregation must be order-deterministic for replicas (and
+            // reruns) to stay bit-identical.
+            round_msgs.sort_by_key(|m| m.worker);
+            let train_loss =
+                round_msgs.iter().map(|m| m.loss).sum::<f32>() / cfg.workers as f32;
+
+            // server: decode + average (Alg. 1 / Alg. 2 ordering inside)
+            let avg = server.decode_round(&round_msgs)?;
+            // broadcast: full-precision averaged gradient (paper's setting)
+            comm.record_broadcast(32.0 * self.n_params as f64);
+
+            // identical optimizer step on the replicated parameters
+            // (workers dropped their Arc clones before sending — see
+            // worker.rs; make_mut is a no-copy in-place mutation then, and
+            // a defensive copy if a worker raced us)
+            let params = Arc::make_mut(&mut self.params);
+            optimizer.step(params, &avg);
+            if cfg.steps_per_epoch > 0 && (round + 1) % cfg.steps_per_epoch == 0 {
+                opt::epoch_decay(optimizer.as_mut(), cfg.lr_decay);
+            }
+
+            let want_eval = (cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0)
+                || round + 1 == cfg.rounds;
+            if want_eval {
+                let (eval_loss, acc) = self.evaluate()?;
+                history.push(EvalPoint {
+                    round: round + 1,
+                    train_loss,
+                    eval_loss,
+                    accuracy: acc,
+                    cum_raw_bits_per_worker: comm.total_raw_bits / cfg.workers as f64,
+                });
+                if self.verbose {
+                    println!(
+                        "round {:>5}  train_loss {:.4}  eval_loss {:.4}  acc {:.3}  kbits/msg {:.1}",
+                        round + 1,
+                        train_loss,
+                        eval_loss,
+                        acc,
+                        comm.kbits_per_msg_raw()
+                    );
+                }
+            }
+        }
+
+        for w in &mut workers {
+            w.shutdown();
+        }
+
+        let last = history.last().copied();
+        Ok(TrainReport {
+            config_label: self.label(),
+            final_accuracy: last.map(|h| h.accuracy).unwrap_or(f64::NAN),
+            final_eval_loss: last.map(|h| h.eval_loss).unwrap_or(f32::NAN),
+            history,
+            comm,
+            rounds: cfg.rounds,
+            workers: cfg.workers,
+            n_params: self.n_params,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Direct access to current parameters (for examples/inspection).
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+}
+
+/// Convenience: run a config to completion.
+pub fn run_config(cfg: TrainConfig) -> crate::Result<TrainReport> {
+    Trainer::new(cfg)?.run()
+}
+
+/// Paper §4 defaults for a model/optimizer pair.
+pub fn paper_defaults(model: &str, optk: OptKind) -> TrainConfig {
+    TrainConfig {
+        model: model.to_string(),
+        opt: optk,
+        lr: optk.default_lr(),
+        ..TrainConfig::default()
+    }
+}

@@ -1,0 +1,155 @@
+//! Worker thread: one per processing node of Fig. 2.
+//!
+//! Per round: draw the local data shard, compute the stochastic gradient
+//! through the compute service (the AOT model artifact), quantize + encode
+//! it with this worker's scheme and shared-seed dither stream, and send the
+//! wire message to the server. The worker never sees other workers' data.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::data::{Batch, ImageDataset, TokenDataset};
+use crate::prng::DitherStream;
+use crate::quant::{GradQuantizer, Scheme, WireMsg};
+use crate::runtime::ComputeHandle;
+
+/// Commands from the server/trainer to a worker.
+pub enum WorkerCmd {
+    /// Run round `round` against the given (logically replicated) params.
+    Round { round: u64, params: Arc<Vec<f32>> },
+    Shutdown,
+}
+
+/// A worker's per-round result message (what crosses the "network").
+pub struct WorkerMsg {
+    pub worker: usize,
+    pub round: u64,
+    pub loss: f32,
+    pub wire: WireMsg,
+}
+
+/// The task a worker computes gradients for.
+#[derive(Clone)]
+pub enum TaskData {
+    Image {
+        model: String,
+        ds: ImageDataset,
+        feat: usize,
+    },
+    Lm {
+        model: String,
+        ds: TokenDataset,
+        seq: usize,
+    },
+}
+
+pub struct WorkerCfg {
+    pub id: usize,
+    pub workers: usize,
+    pub per_worker_batch: usize,
+    pub scheme: Scheme,
+    pub run_seed: u64,
+    pub task: TaskData,
+}
+
+/// A running worker: command channel + join handle.
+pub struct Worker {
+    pub id: usize,
+    pub cmd: mpsc::Sender<WorkerCmd>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Worker {
+    pub fn spawn_pair(
+        cfg: WorkerCfg,
+        compute: ComputeHandle,
+        out: mpsc::Sender<crate::Result<WorkerMsg>>,
+    ) -> crate::Result<Worker> {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<WorkerCmd>();
+        let id = cfg.id;
+        let join = std::thread::Builder::new()
+            .name(format!("ndq-worker-{id}"))
+            .spawn(move || worker_loop(cfg, compute, cmd_rx, out))?;
+        Ok(Worker {
+            id,
+            cmd: cmd_tx,
+            join: Some(join),
+        })
+    }
+
+    pub fn shutdown(&mut self) {
+        let _ = self.cmd.send(WorkerCmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    cfg: WorkerCfg,
+    compute: ComputeHandle,
+    cmd_rx: mpsc::Receiver<WorkerCmd>,
+    out: mpsc::Sender<crate::Result<WorkerMsg>>,
+) {
+    let mut quantizer = cfg.scheme.build();
+    let dither = DitherStream::new(cfg.run_seed, cfg.id as u32);
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            WorkerCmd::Shutdown => break,
+            WorkerCmd::Round { round, params } => {
+                let res = run_round(
+                    &cfg,
+                    &compute,
+                    quantizer.as_mut(),
+                    &dither,
+                    round,
+                    &params,
+                );
+                // Drop our params reference BEFORE sending the result: the
+                // mpsc send synchronizes-with the leader's recv, so once the
+                // leader has all P messages every worker clone is gone and
+                // the leader can mutate the replicated params in place.
+                drop(params);
+                if out.send(res).is_err() {
+                    break; // server gone
+                }
+            }
+        }
+    }
+}
+
+fn run_round(
+    cfg: &WorkerCfg,
+    compute: &ComputeHandle,
+    quantizer: &mut dyn GradQuantizer,
+    dither: &DitherStream,
+    round: u64,
+    params: &Arc<Vec<f32>>,
+) -> crate::Result<WorkerMsg> {
+    let b = cfg.per_worker_batch;
+    let (loss, grad) = match &cfg.task {
+        TaskData::Image { model, ds, feat } => {
+            let mut batch = Batch::new(b, *feat);
+            ds.train_batch(round, cfg.id, cfg.workers, b, &mut batch);
+            compute.grad_image(model, params, batch.x, batch.y, b)?
+        }
+        TaskData::Lm { model, ds, seq } => {
+            let mut tokens = vec![0i32; b * seq];
+            ds.train_batch(round, cfg.id, cfg.workers, b, *seq, &mut tokens);
+            compute.grad_lm(model, params, tokens, b)?
+        }
+    };
+    let wire = quantizer.encode(&grad, &mut dither.round(round));
+    Ok(WorkerMsg {
+        worker: cfg.id,
+        round,
+        loss,
+        wire,
+    })
+}

@@ -1,0 +1,62 @@
+//! Small utilities: JSON (manifest I/O), binary file helpers, timing.
+
+pub mod json;
+
+use std::io::Read;
+use std::path::Path;
+
+/// Read a little-endian f32 binary file (the `*_init.bin` artifacts).
+pub fn read_f32_bin(path: &Path) -> crate::Result<Vec<f32>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{}: length {} not a multiple of 4",
+        path.display(),
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 binary file.
+pub fn write_f32_bin(path: &Path, data: &[f32]) -> crate::Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// Wall-clock stopwatch helper.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(std::time::Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("ndq_util_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let data = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        write_f32_bin(&p, &data).unwrap();
+        assert_eq!(read_f32_bin(&p).unwrap(), data);
+    }
+}

@@ -1,0 +1,94 @@
+//! Integration tests for the paper's "future work" extensions we built:
+//! bounded-staleness asynchronous training and hierarchical (two-tier)
+//! nested aggregation.
+
+use ndq::config::TrainConfig;
+use ndq::quant::Scheme;
+use ndq::train::hierarchy::{aggregate_round, true_mean, Hierarchy};
+use ndq::train::AsyncTrainer;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn async_trainer_learns_with_dqsg() {
+    if !have_artifacts() {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    }
+    let cfg = TrainConfig {
+        model: "fc300".into(),
+        workers: 4,
+        scheme: Scheme::Dithered { delta: 1.0 },
+        rounds: 25,
+        eval_every: 0,
+        eval_examples: 512,
+        seed: 5,
+        ..TrainConfig::default()
+    };
+    let mut t = AsyncTrainer::new(cfg, 3).unwrap();
+    let (report, stats) = t.run().unwrap();
+    assert_eq!(stats.updates, 25 * 4);
+    assert!(stats.max_staleness_seen <= 3);
+    assert!(stats.mean_staleness > 0.0, "no asynchrony actually happened");
+    assert!(report.final_accuracy > 0.15, "acc {}", report.final_accuracy);
+    assert!(report.final_eval_loss.is_finite());
+}
+
+#[test]
+fn async_strict_staleness_zero_still_progresses() {
+    if !have_artifacts() {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    }
+    let cfg = TrainConfig {
+        model: "fc300".into(),
+        workers: 3,
+        scheme: Scheme::Dithered { delta: 1.0 },
+        rounds: 5,
+        eval_every: 0,
+        eval_examples: 128,
+        ..TrainConfig::default()
+    };
+    let mut t = AsyncTrainer::new(cfg, 0).unwrap();
+    let (report, stats) = t.run().unwrap();
+    assert_eq!(stats.max_staleness_seen, 0); // bound enforced by dropping
+    assert!(report.final_eval_loss.is_finite());
+}
+
+#[test]
+fn hierarchy_on_real_gradients() {
+    if !have_artifacts() {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    }
+    use ndq::data::{Batch, ImageDataset, ImageKind};
+    use ndq::runtime::{ComputeService, Manifest};
+    use std::sync::Arc;
+
+    let svc = ComputeService::start(std::path::Path::new("artifacts")).unwrap();
+    let h = svc.handle();
+    let m = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let params = Arc::new(m.init_params("fc300").unwrap());
+    let ds = ImageDataset::new(ImageKind::Mnist, 0);
+
+    // 2 groups x 2 workers, each with its own data shard (real correlation)
+    let mut grads = vec![vec![], vec![]];
+    for w in 0..4usize {
+        let mut batch = Batch::new(16, 784);
+        ds.train_batch(0, w, 4, 16, &mut batch);
+        let (_, g) = h.grad_image("fc300", &params, batch.x, batch.y, 16).unwrap();
+        grads[w / 2].push(g);
+    }
+    let topo = Hierarchy::paper_default(2, 2);
+    let round = aggregate_round(&topo, &grads, 42, 0).unwrap();
+    let want = true_mean(&grads);
+    let rmse = (ndq::tensor::sq_dist(&round.average, &want) / want.len() as f64).sqrt();
+    let kappa = ndq::tensor::linf_norm(&want);
+    assert!(
+        rmse < 0.5 * kappa as f64,
+        "hierarchical aggregate too far from true mean: rmse {rmse} (kappa {kappa})"
+    );
+    assert!(round.leaf_bits < round.flat_dqsg_bits);
+}

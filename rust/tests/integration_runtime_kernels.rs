@@ -1,0 +1,165 @@
+//! Integration: the standalone L1 kernel artifacts (Pallas, lowered to HLO)
+//! executed through the rust PJRT runtime must agree with the rust-native
+//! quantizer implementations — the L1 <-> L3 consistency contract.
+
+use ndq::prng::{DitherStream, Xoshiro256};
+use ndq::quant::{GradQuantizer, Scheme};
+use ndq::runtime::{ComputeService, Manifest, RawArg, RawOut};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+const N: usize = 266_610; // fc300 n_params — the size the kernels were lowered at
+
+#[test]
+fn pjrt_quantize_kernel_matches_rust_native() {
+    if !have_artifacts() {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    }
+    let svc = ComputeService::start(std::path::Path::new("artifacts")).unwrap();
+    let h = svc.handle();
+    let mut rng = Xoshiro256::new(42);
+    let g: Vec<f32> = (0..N).map(|_| rng.next_normal() * 0.1).collect();
+    // dither from the shared stream — identical for both paths
+    let mut u = vec![0f32; N];
+    DitherStream::new(9, 0).round(0).fill_dither(0.5, &mut u);
+
+    // PJRT path: the Pallas dq_quantize kernel (delta = 1.0 baked at AOT)
+    let outs = h
+        .exec_raw(
+            &format!("quantize_dq_{N}"),
+            vec![
+                RawArg::F32(g.clone(), vec![N as i64]),
+                RawArg::F32(u.clone(), vec![N as i64]),
+            ],
+        )
+        .unwrap();
+    let (q_pjrt, kappa_pjrt) = match (&outs[0], &outs[1]) {
+        (RawOut::I32(q), RawOut::F32(k)) => (q.clone(), k[0]),
+        other => panic!("unexpected output kinds: {other:?}"),
+    };
+
+    // rust-native path with the same dither
+    let kappa = ndq::tensor::linf_norm(&g);
+    assert!((kappa - kappa_pjrt).abs() <= 1e-6 * kappa, "{kappa} vs {kappa_pjrt}");
+    let mut mismatches = 0usize;
+    for i in 0..N {
+        let t = g[i] / kappa + u[i];
+        let q = (t.round() as i32).clamp(-1, 1);
+        if q != q_pjrt[i] {
+            mismatches += 1;
+        }
+    }
+    // identical math up to f32 associativity at exact bin edges
+    assert!(
+        mismatches <= 2,
+        "{mismatches} index mismatches between Pallas kernel and rust-native"
+    );
+}
+
+#[test]
+fn pjrt_nested_kernels_roundtrip_with_rust_decode() {
+    if !have_artifacts() {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    }
+    let svc = ComputeService::start(std::path::Path::new("artifacts")).unwrap();
+    let h = svc.handle();
+    let (d1, _ratio, alpha) = (1.0f32 / 3.0, 3u32, 1.0f32);
+    let mut rng = Xoshiro256::new(1);
+    // kappa=1 convention: kernels operate on normalized gradients
+    let g: Vec<f32> = (0..N).map(|_| (rng.next_normal() * 0.2).clamp(-1.0, 1.0)).collect();
+    let y: Vec<f32> = g.iter().map(|&x| x + rng.next_normal() * 0.02).collect();
+    let mut u = vec![0f32; N];
+    DitherStream::new(3, 0).round(0).fill_dither(d1 / 2.0, &mut u);
+
+    let enc = h
+        .exec_raw(
+            &format!("nested_enc_{N}"),
+            vec![
+                RawArg::F32(g.clone(), vec![N as i64]),
+                RawArg::F32(u.clone(), vec![N as i64]),
+            ],
+        )
+        .unwrap();
+    let s = match &enc[0] {
+        RawOut::I32(s) => s.clone(),
+        other => panic!("{other:?}"),
+    };
+    assert!(s.iter().all(|&v| (-1..=1).contains(&v)));
+
+    let dec = h
+        .exec_raw(
+            &format!("nested_dec_{N}"),
+            vec![
+                RawArg::I32(s, vec![N as i64]),
+                RawArg::F32(u, vec![N as i64]),
+                RawArg::F32(y, vec![N as i64]),
+            ],
+        )
+        .unwrap();
+    let xh = match &dec[0] {
+        RawOut::F32(x) => x.clone(),
+        other => panic!("{other:?}"),
+    };
+    // exact decoding regime: |error| <= alpha * d1 / 2
+    let mut bad = 0usize;
+    for (a, b) in g.iter().zip(&xh) {
+        if (a - b).abs() > alpha * d1 / 2.0 + 1e-5 {
+            bad += 1;
+        }
+    }
+    assert!(
+        (bad as f64) < 0.001 * N as f64,
+        "{bad}/{N} coordinates outside the Thm.-6 exact-decode bound"
+    );
+}
+
+#[test]
+fn pjrt_dequant_avg_matches_rust_server() {
+    if !have_artifacts() {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    }
+    let svc = ComputeService::start(std::path::Path::new("artifacts")).unwrap();
+    let h = svc.handle();
+    let p = 4usize;
+    let delta = 1.0f32;
+    let mut rng = Xoshiro256::new(5);
+    // build P encoded workers with rust, decode with the PJRT kernel
+    let mut qs = Vec::with_capacity(p * N);
+    let mut us = Vec::with_capacity(p * N);
+    let mut kappas = Vec::with_capacity(p);
+    let mut rust_avg = vec![0f32; N];
+    for worker in 0..p {
+        let g: Vec<f32> = (0..N).map(|_| rng.next_normal() * 0.1).collect();
+        let mut q = Scheme::Dithered { delta }.build();
+        let stream = DitherStream::new(77, worker as u32);
+        let msg = q.encode(&g, &mut stream.round(0));
+        let recon = q.decode(&msg, &mut stream.round(0), None).unwrap();
+        ndq::tensor::axpy(1.0 / p as f32, &recon, &mut rust_avg);
+        let mut u = vec![0f32; N];
+        stream.round(0).fill_dither(delta / 2.0, &mut u);
+        qs.extend_from_slice(&msg.indices);
+        us.extend_from_slice(&u);
+        kappas.push(msg.scales[0]);
+    }
+    let outs = h
+        .exec_raw(
+            &format!("dequant_avg_{N}_p{p}"),
+            vec![
+                RawArg::I32(qs, vec![p as i64, N as i64]),
+                RawArg::F32(us, vec![p as i64, N as i64]),
+                RawArg::F32(kappas, vec![p as i64]),
+            ],
+        )
+        .unwrap();
+    let pjrt_avg = match &outs[0] {
+        RawOut::F32(v) => v.clone(),
+        other => panic!("{other:?}"),
+    };
+    let rmse = (ndq::tensor::sq_dist(&rust_avg, &pjrt_avg) / N as f64).sqrt();
+    assert!(rmse < 1e-6, "PJRT vs rust server aggregation rmse {rmse}");
+}
