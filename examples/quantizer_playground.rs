@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use ndq::data::{Batch, ImageDataset, ImageKind};
 use ndq::prng::DitherStream;
-use ndq::quant::Scheme;
+use ndq::quant::{GradQuantizer, Scheme};
 use ndq::runtime::{ComputeService, Manifest};
 use ndq::sim::LinkModel;
 

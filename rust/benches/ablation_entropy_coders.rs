@@ -49,16 +49,17 @@ fn main() -> ndq::Result<()> {
         let stream = DitherStream::new(5, 0);
         let msg = q.encode(&grad, &mut stream.round(0));
 
+        let indices = msg.indices()?; // stats accessor: re-derived from payload
         let h_bits = msg.entropy_bits() - 32.0; // exclude the scale
-        let aac = arithmetic::encoded_bits_signed(&msg.indices, 1) as f64;
-        let huff = huffman::encoded_bits_signed(&msg.indices, 1) as f64;
-        let packed = pack::packed_bits(msg.indices.len(), 3) as f64;
+        let aac = arithmetic::encoded_bits_signed(&indices, 1) as f64;
+        let huff = huffman::encoded_bits_signed(&indices, 1) as f64;
+        let packed = pack::packed_bits(indices.len(), 3) as f64;
         print_table_row(
             label,
             &[h_bits / 1000.0, aac / 1000.0, huff / 1000.0, packed / 1000.0],
         );
         assert!(aac / h_bits < 1.05, "{label}: AAC off entropy by {}", aac / h_bits);
-        assert!(huff >= msg.indices.len() as f64, "{label}: Huffman below 1 bit/sym?");
+        assert!(huff >= indices.len() as f64, "{label}: Huffman below 1 bit/sym?");
         rows.push(json::obj(vec![
             ("stage", json::s(label)),
             ("entropy_bits", json::num(h_bits)),

@@ -6,7 +6,7 @@
 mod common;
 
 use ndq::prng::{DitherStream, Xoshiro256};
-use ndq::quant::Scheme;
+use ndq::quant::{GradQuantizer, Scheme};
 use ndq::stats::bench::Bench;
 
 fn main() -> ndq::Result<()> {

@@ -11,7 +11,7 @@
 mod common;
 
 use ndq::prng::DitherStream;
-use ndq::quant::Scheme;
+use ndq::quant::{GradQuantizer, Scheme};
 use ndq::stats::bench::{print_table_header, print_table_row};
 use ndq::util::json::{self, Json};
 

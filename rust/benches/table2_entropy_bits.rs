@@ -15,7 +15,7 @@ mod common;
 
 use ndq::config::TrainConfig;
 use ndq::prng::DitherStream;
-use ndq::quant::Scheme;
+use ndq::quant::{GradQuantizer, Scheme};
 use ndq::stats::bench::{print_table_header, print_table_row};
 use ndq::train::Trainer;
 use ndq::util::json::{self, Json};

@@ -1,0 +1,77 @@
+//! CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) — the wire-protocol v2
+//! trailing checksum. Compatible with zlib's `crc32()` so fixtures can be
+//! generated and checked by any standard tool.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const TABLE: [u32; 256] = build_table();
+
+/// Continue a CRC over more bytes (zlib convention: pass the previous
+/// return value, starting from 0).
+pub fn update(crc: u32, bytes: &[u8]) -> u32 {
+    let mut c = crc ^ 0xFFFF_FFFF;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    update(0, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answer_vectors() {
+        // The canonical check value for CRC-32/ISO-HDLC.
+        assert_eq!(checksum(b"123456789"), 0xCBF4_3926);
+        assert_eq!(checksum(b""), 0);
+        assert_eq!(checksum(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data = b"wire protocol v2 framed transport";
+        let whole = checksum(data);
+        let mut c = 0;
+        for chunk in data.chunks(5) {
+            c = update(c, chunk);
+        }
+        assert_eq!(c, whole);
+    }
+
+    #[test]
+    fn single_bit_flip_changes_crc() {
+        let mut data = vec![0u8; 64];
+        let clean = checksum(&data);
+        for byte in 0..64 {
+            for bit in 0..8 {
+                data[byte] ^= 1 << bit;
+                assert_ne!(checksum(&data), clean, "flip at {byte}:{bit} undetected");
+                data[byte] ^= 1 << bit;
+            }
+        }
+    }
+}

@@ -13,9 +13,11 @@
 //!   paper), the "compressed bits" encoder. Decoder included; round-trip
 //!   tested.
 //! * [`elias`]   — Elias-gamma codes for headers/lengths.
+//! * [`crc`]     — CRC-32 (zlib-compatible), the wire-v2 frame checksum.
 
 pub mod arithmetic;
 pub mod bitio;
+pub mod crc;
 pub mod elias;
 pub mod entropy;
 pub mod huffman;

@@ -61,6 +61,10 @@ pub struct TrainConfig {
     /// Whether the server re-broadcasts the averaged gradient quantized
     /// (paper assumes full-precision broadcast; kept for ablations).
     pub quantize_broadcast: bool,
+    /// Wire-v2 framing: per-tensor frames per uplink message (1 = the
+    /// classic single-blob layout; >1 splits the flat gradient into that
+    /// many framed tensors, each with its own scale).
+    pub tensor_frames: usize,
     pub artifacts_dir: String,
 }
 
@@ -81,6 +85,7 @@ impl Default for TrainConfig {
             eval_every: 50,
             eval_examples: 1024,
             quantize_broadcast: false,
+            tensor_frames: 1,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -141,6 +146,10 @@ impl TrainConfig {
                 "eval_every" => self.eval_every = v.parse()?,
                 "eval_examples" => self.eval_examples = v.parse()?,
                 "quantize_broadcast" => self.quantize_broadcast = v.parse()?,
+                "tensor_frames" => {
+                    self.tensor_frames = v.parse()?;
+                    anyhow::ensure!(self.tensor_frames >= 1, "tensor_frames must be >= 1");
+                }
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
                 _ => anyhow::bail!("unknown config key `{k}`"),
             }
@@ -180,6 +189,18 @@ mod tests {
         assert_eq!(c.opt, OptKind::Adam);
         assert_eq!(c.lr, 0.001); // adam default
         assert_eq!(c.rounds, 10);
+    }
+
+    #[test]
+    fn tensor_frames_key() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.tensor_frames, 1);
+        let mut kv = BTreeMap::new();
+        kv.insert("tensor_frames".to_string(), "4".to_string());
+        c.apply_kv(&kv).unwrap();
+        assert_eq!(c.tensor_frames, 4);
+        kv.insert("tensor_frames".to_string(), "0".to_string());
+        assert!(c.apply_kv(&kv).is_err());
     }
 
     #[test]

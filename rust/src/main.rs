@@ -11,10 +11,13 @@
 //!             --scheme-p2 nested:0.333333:3:1.0 --rounds 200   # Fig. 6
 //!   ndq quantize --n 100000
 
+// Config assembly is deliberately field-by-field from parsed CLI args.
+#![allow(clippy::field_reassign_with_default)]
+
 use ndq::cli::Args;
 use ndq::config::{OptKind, TrainConfig};
 use ndq::prng::DitherStream;
-use ndq::quant::Scheme;
+use ndq::quant::{frame_slices, GradQuantizer, Scheme};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -57,6 +60,7 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
         .opt("lr", "auto", "learning rate (auto = paper default)")
         .opt("seed", "42", "run seed (dither + data)")
         .opt("eval-every", "50", "evaluate every N rounds")
+        .opt("tensor-frames", "1", "wire-v2 per-tensor frames per uplink message")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("report", "", "write the JSON report to this path")
         .flag("quiet", "suppress per-eval logging")
@@ -77,6 +81,8 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
     };
     cfg.seed = args.get_u64("seed")?;
     cfg.eval_every = args.get_usize("eval-every")?;
+    cfg.tensor_frames = args.get_usize("tensor-frames")?;
+    anyhow::ensure!(cfg.tensor_frames >= 1, "--tensor-frames must be >= 1");
     cfg.artifacts_dir = args.get("artifacts");
 
     let mut trainer = ndq::train::Trainer::new(cfg)?;
@@ -127,13 +133,16 @@ fn cmd_quantize(argv: Vec<String>) -> ndq::Result<()> {
     let args = Args::new("ndq quantize", "encode/decode a synthetic gradient with every scheme")
         .opt("n", "266610", "gradient length (default = FC-300-100)")
         .opt("seed", "0", "rng seed")
+        .opt("frames", "1", "wire-v2 per-tensor frames per message")
         .parse_from(argv)?;
     let n = args.get_usize("n")?;
+    let frames = args.get_usize("frames")?;
+    anyhow::ensure!(frames >= 1, "--frames must be >= 1");
     let mut rng = ndq::prng::Xoshiro256::new(args.get_u64("seed")?);
     let g: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.1).collect();
     println!(
-        "{:<22} {:>12} {:>12} {:>12} {:>12}",
-        "scheme", "raw Kbit", "H Kbit", "AAC Kbit", "rmse"
+        "{:<22} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "scheme", "raw Kbit", "framed Kbit", "H Kbit", "AAC Kbit", "rmse"
     );
     for scheme in [
         Scheme::Baseline,
@@ -146,7 +155,8 @@ fn cmd_quantize(argv: Vec<String>) -> ndq::Result<()> {
     ] {
         let mut q = scheme.build();
         let stream = DitherStream::new(1, 0);
-        let msg = q.encode(&g, &mut stream.round(0));
+        let slices = frame_slices(&g, frames);
+        let msg = q.encode_tensors(&slices, &mut stream.round(0));
         let recon = if q.needs_side_info() {
             // side info: the gradient plus small noise, as in Alg. 2
             let y: Vec<f32> = g.iter().map(|&x| x + 0.001 * rng.next_normal()).collect();
@@ -156,9 +166,10 @@ fn cmd_quantize(argv: Vec<String>) -> ndq::Result<()> {
         };
         let rmse = (ndq::tensor::sq_dist(&g, &recon) / n as f64).sqrt();
         println!(
-            "{:<22} {:>12.1} {:>12.1} {:>12.1} {:>12.6}",
+            "{:<22} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.6}",
             scheme.label(),
             msg.raw_bits() as f64 / 1000.0,
+            msg.framed_bits() as f64 / 1000.0,
             msg.entropy_bits() / 1000.0,
             msg.aac_bits() as f64 / 1000.0,
             rmse

@@ -1,6 +1,6 @@
 //! Baseline: unquantized f32 gradients (32 bits/coordinate on the wire).
 
-use super::{GradQuantizer, SchemeId, WireMsg};
+use super::{Frame, GradQuantizer, SchemeId};
 use crate::coding::{BitReader, BitWriter};
 use crate::prng::DitherGen;
 
@@ -16,32 +16,39 @@ impl GradQuantizer for BaselineQuantizer {
         SchemeId::Baseline
     }
 
-    fn encode(&mut self, g: &[f32], _dither: &mut DitherGen) -> WireMsg {
-        let mut w = BitWriter::new();
+    fn encode_frame(
+        &mut self,
+        g: &[f32],
+        _dither: &mut DitherGen,
+        w: &mut BitWriter,
+    ) -> (i32, usize) {
         for &v in g {
             w.push_f32(v);
         }
-        let payload_bits = w.len_bits();
-        WireMsg {
-            scheme: SchemeId::Baseline,
-            n: g.len(),
-            m: 0,
-            payload: w.into_bytes(),
-            payload_bits,
-            indices: Vec::new(),
-            scales: Vec::new(),
-        }
+        (0, 0)
     }
 
-    fn decode(
+    fn decode_frame(
         &self,
-        msg: &WireMsg,
+        frame: &Frame,
+        payload: &[u8],
         _dither: &mut DitherGen,
         _side: Option<&[f32]>,
     ) -> crate::Result<Vec<f32>> {
-        anyhow::ensure!(msg.scheme == SchemeId::Baseline, "scheme mismatch");
-        let mut r = BitReader::new(&msg.payload);
-        (0..msg.n).map(|_| r.read_f32()).collect()
+        anyhow::ensure!(
+            frame.m == 0 && frame.n_scales == 0,
+            "malformed baseline frame header (m={}, n_scales={})",
+            frame.m,
+            frame.n_scales
+        );
+        anyhow::ensure!(
+            frame.payload_bits == frame.n * 32,
+            "baseline frame payload is {} bits for {} coordinates",
+            frame.payload_bits,
+            frame.n
+        );
+        let mut r = BitReader::new(payload);
+        (0..frame.n).map(|_| r.read_f32()).collect()
     }
 }
 
@@ -49,6 +56,7 @@ impl GradQuantizer for BaselineQuantizer {
 mod tests {
     use super::*;
     use crate::prng::DitherStream;
+    use crate::quant::WireMsg;
 
     #[test]
     fn lossless_roundtrip_and_32_bits() {
@@ -59,6 +67,10 @@ mod tests {
         assert_eq!(msg.raw_bits(), 32 * g.len());
         let recon = q.decode(&msg, &mut stream.round(0), None).unwrap();
         assert_eq!(recon, g);
+        // and from re-parsed transport bytes only
+        let reparsed = WireMsg::parse(msg.bytes().to_vec()).unwrap();
+        let recon2 = q.decode(&reparsed, &mut stream.round(0), None).unwrap();
+        assert_eq!(recon2, g);
     }
 
     #[test]

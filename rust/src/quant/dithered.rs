@@ -12,7 +12,7 @@
 //! By Thm. 1 the error (g - g~)/kappa is U[-Delta/2, Delta/2], independent
 //! of g — the property the convergence analysis (Thm. 4/5) rests on.
 
-use super::{GradQuantizer, SchemeId, WireMsg};
+use super::{Frame, GradQuantizer, SchemeId};
 use crate::coding::{pack, BitReader, BitWriter};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
@@ -34,6 +34,10 @@ impl DitheredQuantizer {
 
     pub fn delta(&self) -> f32 {
         self.delta
+    }
+
+    pub fn m(&self) -> i32 {
+        self.m
     }
 
     pub fn alphabet(&self) -> u32 {
@@ -85,36 +89,37 @@ impl GradQuantizer for DitheredQuantizer {
         SchemeId::Dithered
     }
 
-    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
+    fn encode_frame(
+        &mut self,
+        g: &[f32],
+        dither: &mut DitherGen,
+        w: &mut BitWriter,
+    ) -> (i32, usize) {
         let mut u = Vec::new();
         let mut indices = Vec::with_capacity(g.len());
         let kappa = self.quantize_into(g, dither, &mut u, &mut indices);
-
-        let mut w = BitWriter::new();
-        super::write_scales(&mut w, &[kappa]);
-        pack::pack_base_k_signed(&indices, self.m, self.alphabet(), &mut w);
-        let payload_bits = w.len_bits();
-        WireMsg {
-            scheme: SchemeId::Dithered,
-            n: g.len(),
-            m: self.m,
-            payload: w.into_bytes(),
-            payload_bits,
-            indices,
-            scales: vec![kappa],
-        }
+        super::write_scales(w, &[kappa]);
+        pack::pack_base_k_signed(&indices, self.m, self.alphabet(), w);
+        (self.m, 1)
     }
 
-    fn decode(
+    fn decode_frame(
         &self,
-        msg: &WireMsg,
+        frame: &Frame,
+        payload: &[u8],
         dither: &mut DitherGen,
         _side: Option<&[f32]>,
     ) -> crate::Result<Vec<f32>> {
-        anyhow::ensure!(msg.scheme == SchemeId::Dithered, "scheme mismatch");
-        let mut r = BitReader::new(&msg.payload);
+        anyhow::ensure!(
+            frame.m == self.m && frame.n_scales == 1,
+            "DQSG frame header (m={}, n_scales={}) does not match decoder config (m={})",
+            frame.m,
+            frame.n_scales,
+            self.m
+        );
+        let mut r = BitReader::new(payload);
         let kappa = r.read_f32()?;
-        let symbols = pack::unpack_base_k(&mut r, self.alphabet(), msg.n)?;
+        let symbols = pack::unpack_base_k(&mut r, self.alphabet(), frame.n)?;
         let indices: Vec<i32> = symbols
             .into_iter()
             .map(|s| pack::symbol_to_signed(s, self.m))
@@ -131,6 +136,7 @@ impl GradQuantizer for DitheredQuantizer {
 mod tests {
     use super::*;
     use crate::prng::DitherStream;
+    use crate::quant::WireMsg;
     use crate::testing::{gens, prop_check};
 
     fn enc_dec(g: &[f32], delta: f32, seed: u64) -> (WireMsg, Vec<f32>) {
@@ -148,7 +154,7 @@ mod tests {
         for delta in [1.0f32, 0.5, 0.25] {
             let g: Vec<f32> = (0..5000).map(|_| rng.next_normal() * 0.3).collect();
             let (msg, recon) = enc_dec(&g, delta, 7);
-            let kappa = msg.scales[0];
+            let kappa = msg.scales().unwrap()[0];
             for (a, b) in g.iter().zip(&recon) {
                 assert!((a - b).abs() <= kappa * delta / 2.0 + 1e-5);
             }
@@ -162,6 +168,12 @@ mod tests {
         let (msg, _) = enc_dec(&g, 1.0, 3);
         let expect = pack::packed_bits(10_000, 3) + 32;
         assert_eq!(msg.raw_bits(), expect);
+        // framing adds a fixed, small overhead: msg + frame header + crc
+        let overhead =
+            8 * (crate::quant::MSG_HEADER_BYTES
+                + crate::quant::FRAME_HEADER_BYTES
+                + crate::quant::CHECKSUM_BYTES);
+        assert_eq!(msg.framed_bits(), expect.div_ceil(8) * 8 + overhead);
     }
 
     #[test]
@@ -207,8 +219,9 @@ mod tests {
 
     #[test]
     fn prop_payload_only_roundtrip() {
-        // decode sees payload + dither only; reconstruction must stay
-        // within the Thm.-1 bound for arbitrary (nasty) gradients.
+        // decode sees wire bytes + dither only; reconstruction must stay
+        // within the Thm.-1 bound for arbitrary (nasty) gradients, and the
+        // re-parsed message must decode bit-identically.
         prop_check(
             "dqsg-roundtrip",
             60,
@@ -218,14 +231,26 @@ mod tests {
                     let mut q = DitheredQuantizer::new(delta);
                     let stream = DitherStream::new(*seed, 1);
                     let msg = q.encode(g, &mut stream.round(9));
-                    let recon = q.decode(&msg, &mut stream.round(9), None).map_err(|e| e.to_string())?;
+                    let recon = q
+                        .decode(&msg, &mut stream.round(9), None)
+                        .map_err(|e| e.to_string())?;
                     if recon.len() != g.len() {
                         return Err("length mismatch".into());
                     }
-                    let kappa = msg.scales[0];
+                    let reparsed =
+                        WireMsg::parse(msg.bytes().to_vec()).map_err(|e| e.to_string())?;
+                    let recon2 = q
+                        .decode(&reparsed, &mut stream.round(9), None)
+                        .map_err(|e| e.to_string())?;
+                    if recon != recon2 {
+                        return Err("re-parsed decode differs".into());
+                    }
+                    let kappa = msg.scales().map_err(|e| e.to_string())?[0];
                     for (a, b) in g.iter().zip(&recon) {
                         if (a - b).abs() > kappa * delta / 2.0 + kappa * 1e-5 {
-                            return Err(format!("error bound violated: {a} vs {b} (kappa={kappa})"));
+                            return Err(format!(
+                                "error bound violated: {a} vs {b} (kappa={kappa})"
+                            ));
                         }
                     }
                 }
@@ -244,13 +269,29 @@ mod tests {
         let stream = DitherStream::new(5, 0);
         let msg = q.encode(&g, &mut stream.round(0));
         let recon = q.decode(&msg, &mut stream.round(1), None).unwrap();
-        let kappa = msg.scales[0];
+        let kappa = msg.scales().unwrap()[0];
         let violations = g
             .iter()
             .zip(&recon)
             .filter(|(a, b)| (**a - **b).abs() > kappa * 0.5 + 1e-5)
             .count();
         assert!(violations > 100, "only {violations} violations");
+    }
+
+    #[test]
+    fn frame_header_mismatch_rejected() {
+        // a 5-level decoder must refuse a ternary frame instead of
+        // silently misinterpreting the packed stream
+        let g = vec![0.4f32, -0.2, 1.0];
+        let stream = DitherStream::new(1, 0);
+        let mut enc = DitheredQuantizer::new(1.0); // m = 1
+        let msg = enc.encode(&g, &mut stream.round(0));
+        let dec = DitheredQuantizer::new(0.5); // m = 2
+        let err = dec
+            .decode(&msg, &mut stream.round(0), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not match decoder config"), "{err}");
     }
 
     #[test]

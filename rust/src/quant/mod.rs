@@ -12,10 +12,59 @@
 //! | TernGrad       | [`terngrad`] | [6] |
 //! | one-bit SGD    | [`onebit`]   | [1], with error feedback |
 //!
-//! Encoding produces a [`WireMsg`] whose `payload` is the exact byte stream
-//! a network transport would carry; `decode` parses that payload (and *only*
-//! that payload plus the shared-seed dither / side information), so the
-//! measured bits are honest.
+//! # Wire format v2
+//!
+//! A [`WireMsg`] is the exact byte sequence a network transport would
+//! carry. It is framed: one message holds one or more per-tensor frames so
+//! layer gradients no longer have to be flattened into a single blob, and
+//! the decoder works from **payload bytes only** (plus the shared-seed
+//! dither and, for NDQSG, the Alg.-2 side information) — decoded values are
+//! never smuggled next to the payload.
+//!
+//! Message layout (all multi-byte integers little-endian, byte-aligned):
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------------
+//!      0     2  magic  0x4E 0x51  ("NQ")
+//!      2     1  version (currently 2)
+//!      3     1  scheme id (see `SchemeId`; validated by the receiver)
+//!      4     4  frame count (u32)
+//!      8     …  frames, back to back (see below)
+//!   last     4  CRC-32 (IEEE/zlib) over every preceding byte
+//! ```
+//!
+//! Each frame:
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------------
+//!      0     8  n            (u64)  gradient coordinates in this tensor
+//!      8     4  m            (i32)  index alphabet half-width; indices lie
+//!                                   in [-m, m]; 0 for baseline / one-bit
+//!     12     4  n_scales     (u32)  f32 scale factors at the payload head
+//!     16     8  payload_bits (u64)  meaningful bits in the payload
+//!     24     …  payload: ceil(payload_bits / 8) bytes —
+//!                 n_scales × 32-bit raw-f32 scales, then the index stream
+//!                 (base-(2m+1) packed for m ≥ 1; sign bits for one-bit;
+//!                 raw f32 coordinates for baseline), LSB-first bit order
+//! ```
+//!
+//! The receiver ([`WireMsg::parse`]) validates magic, version, scheme id,
+//! frame bounds and the trailing checksum before any codec runs; codecs
+//! additionally validate the frame header against their configuration, so a
+//! sender cannot steer the server onto a different decode path than the one
+//! negotiated (see [`SchemeRegistry`]).
+//!
+//! ## Bit accounting
+//!
+//! * [`WireMsg::raw_bits`] — sum of frame `payload_bits`: scales + packed
+//!   indices, the Table-1 metric (framing headers excluded so the numbers
+//!   stay comparable with the paper's ideal-rate accounting).
+//! * [`WireMsg::framed_bits`] — total message size including headers and
+//!   checksum: what the socket would actually carry.
+//! * [`WireMsg::entropy_bits`] / [`WireMsg::aac_bits`] — Table-2 metrics,
+//!   re-derived from the payload on request (see `indices()` / `scales()`).
 
 pub mod baseline;
 pub mod dithered;
@@ -25,8 +74,26 @@ pub mod partition;
 pub mod stochastic;
 pub mod terngrad;
 
-use crate::coding::{arithmetic, entropy, BitWriter};
+use std::collections::BTreeMap;
+
+use crate::coding::{arithmetic, crc, entropy, pack, BitReader, BitWriter};
 use crate::prng::DitherGen;
+
+/// Wire magic: `"NQ"`.
+pub const WIRE_MAGIC: [u8; 2] = *b"NQ";
+/// Current wire protocol version.
+pub const WIRE_VERSION: u8 = 2;
+/// Message header size: magic(2) + version(1) + scheme(1) + frame count(4).
+pub const MSG_HEADER_BYTES: usize = 8;
+/// Frame header size: n(8) + m(4) + n_scales(4) + payload_bits(8).
+pub const FRAME_HEADER_BYTES: usize = 24;
+/// Trailing CRC-32 size.
+pub const CHECKSUM_BYTES: usize = 4;
+/// Upper bound on a frame's index alphabet half-width accepted at parse
+/// time: no scheme in this crate goes beyond a few thousand levels, and the
+/// bound keeps hostile headers from driving `2 * m + 1` arithmetic or
+/// alphabet-sized allocations anywhere near overflow.
+pub const MAX_FRAME_M: i32 = 1 << 20;
 
 /// Scheme discriminants on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,73 +108,446 @@ pub enum SchemeId {
     Nested = 6,
 }
 
-/// A quantized-gradient message as it would cross the network.
+impl SchemeId {
+    /// Parse a wire discriminant; unknown ids are a protocol error.
+    pub fn from_u8(v: u8) -> crate::Result<SchemeId> {
+        Ok(match v {
+            0 => SchemeId::Baseline,
+            1 => SchemeId::Dithered,
+            2 => SchemeId::DitheredPartitioned,
+            3 => SchemeId::Qsgd,
+            4 => SchemeId::Terngrad,
+            5 => SchemeId::OneBit,
+            6 => SchemeId::Nested,
+            _ => anyhow::bail!("unknown scheme id {v} on the wire"),
+        })
+    }
+}
+
+/// Directory entry for one per-tensor frame inside a [`WireMsg`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Frame {
+    /// Gradient coordinates in this tensor.
+    pub n: usize,
+    /// Index alphabet half-width (0 for baseline / one-bit).
+    pub m: i32,
+    /// f32 scale factors at the head of the payload.
+    pub n_scales: usize,
+    /// Meaningful bits in the payload.
+    pub payload_bits: usize,
+    /// Byte offset of the payload within `WireMsg::bytes`.
+    payload_off: usize,
+}
+
+impl Frame {
+    /// Payload size in whole bytes.
+    pub fn payload_bytes(&self) -> usize {
+        self.payload_bits.div_ceil(8)
+    }
+}
+
+/// A quantized-gradient message exactly as it crosses the network: framed
+/// wire bytes plus a parsed frame directory. Encoders produce it through
+/// [`WireMsgBuilder`]; receivers reconstruct it with [`WireMsg::parse`],
+/// which validates framing and checksum. There is deliberately no decoded
+/// side data here — `indices()`/`scales()` re-derive from the payload.
 #[derive(Debug, Clone)]
 pub struct WireMsg {
+    /// Scheme id from the message header.
     pub scheme: SchemeId,
-    /// Number of gradient coordinates.
-    pub n: usize,
-    /// Index alphabet half-width: indices lie in [-m, m] (0 for baseline).
-    pub m: i32,
-    /// Bit-exact payload (scales + packed indices).
-    pub payload: Vec<u8>,
-    /// Exact number of meaningful bits in `payload`.
-    pub payload_bits: usize,
-    /// Cached decoded-side data for fast paths and statistics; NOT counted
-    /// as wire bytes and never read by `decode`.
-    pub indices: Vec<i32>,
-    pub scales: Vec<f32>,
+    bytes: Vec<u8>,
+    frames: Vec<Frame>,
 }
 
 impl WireMsg {
-    /// Raw wire size in bits (Table 1 metric).
+    /// Parse + validate a framed message from raw transport bytes.
+    pub fn parse(bytes: Vec<u8>) -> crate::Result<WireMsg> {
+        anyhow::ensure!(
+            bytes.len() >= MSG_HEADER_BYTES + CHECKSUM_BYTES,
+            "wire message truncated: {} bytes",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            bytes[0..2] == WIRE_MAGIC,
+            "bad magic {:#04x}{:02x} (want \"NQ\")",
+            bytes[0],
+            bytes[1]
+        );
+        anyhow::ensure!(
+            bytes[2] == WIRE_VERSION,
+            "unsupported wire version {} (this build speaks {WIRE_VERSION})",
+            bytes[2]
+        );
+        let scheme = SchemeId::from_u8(bytes[3])?;
+        let body_len = bytes.len() - CHECKSUM_BYTES;
+        let want = u32::from_le_bytes([
+            bytes[body_len],
+            bytes[body_len + 1],
+            bytes[body_len + 2],
+            bytes[body_len + 3],
+        ]);
+        let got = crc::checksum(&bytes[..body_len]);
+        anyhow::ensure!(
+            want == got,
+            "checksum mismatch: trailer says {want:#010x}, bytes hash to {got:#010x}"
+        );
+        let n_frames = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let mut frames = Vec::with_capacity(n_frames.min(4096));
+        let mut off = MSG_HEADER_BYTES;
+        for f in 0..n_frames {
+            anyhow::ensure!(
+                off + FRAME_HEADER_BYTES <= body_len,
+                "frame {f} header truncated"
+            );
+            let n = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+            let m = i32::from_le_bytes(bytes[off + 8..off + 12].try_into().unwrap());
+            let n_scales =
+                u32::from_le_bytes(bytes[off + 12..off + 16].try_into().unwrap()) as usize;
+            let payload_bits =
+                u64::from_le_bytes(bytes[off + 16..off + 24].try_into().unwrap()) as usize;
+            let payload_off = off + FRAME_HEADER_BYTES;
+            let payload_len = payload_bits.div_ceil(8);
+            anyhow::ensure!(
+                payload_len <= body_len && payload_off <= body_len - payload_len,
+                "frame {f} payload truncated (want {payload_len} bytes)"
+            );
+            // Structural sanity on attacker-controlled header fields: every
+            // scheme spends >= 1 payload bit per coordinate and 32 bits per
+            // scale, and m is bounded — so header-driven allocations in the
+            // codecs/stats accessors stay linear in the actual message size
+            // (and sum(n) over frames can never overflow a usize).
+            anyhow::ensure!(
+                n <= payload_bits,
+                "frame {f} claims {n} coordinates in {payload_bits} payload bits"
+            );
+            anyhow::ensure!(
+                n_scales.checked_mul(32).is_some_and(|b| b <= payload_bits),
+                "frame {f} claims {n_scales} scales in {payload_bits} payload bits"
+            );
+            anyhow::ensure!(
+                (0..=MAX_FRAME_M).contains(&m),
+                "frame {f} alphabet half-width {m} outside [0, {MAX_FRAME_M}]"
+            );
+            frames.push(Frame {
+                n,
+                m,
+                n_scales,
+                payload_bits,
+                payload_off,
+            });
+            off = payload_off + payload_len;
+        }
+        anyhow::ensure!(
+            off == body_len,
+            "{} trailing bytes after the last frame",
+            body_len - off
+        );
+        Ok(WireMsg {
+            scheme,
+            bytes,
+            frames,
+        })
+    }
+
+    /// The framed wire bytes (header + frames + checksum).
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Consume into the framed wire bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    /// Parsed frame directory.
+    pub fn frames(&self) -> &[Frame] {
+        &self.frames
+    }
+
+    /// Payload byte slice of frame `i` (always starts byte-aligned).
+    pub fn frame_payload(&self, i: usize) -> &[u8] {
+        let f = &self.frames[i];
+        &self.bytes[f.payload_off..f.payload_off + f.payload_bytes()]
+    }
+
+    /// Total gradient coordinates across all frames.
+    pub fn n(&self) -> usize {
+        self.frames.iter().map(|f| f.n).sum()
+    }
+
+    /// Raw wire size in bits (Table 1 metric): scale + index payload bits,
+    /// framing excluded. See the module docs for the rationale.
     pub fn raw_bits(&self) -> usize {
-        self.payload_bits
+        self.frames.iter().map(|f| f.payload_bits).sum()
+    }
+
+    /// Full framed size in bits — what a socket would carry, including
+    /// message/frame headers and the trailing checksum.
+    pub fn framed_bits(&self) -> usize {
+        self.bytes.len() * 8
+    }
+
+    /// Debug/stats accessor: the signed index stream, re-derived from the
+    /// payload alone (never cached at encode time). One-bit frames yield
+    /// their sign bits as 0/1; baseline frames contribute nothing.
+    pub fn indices(&self) -> crate::Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(self.n());
+        for i in 0..self.frames.len() {
+            self.frame_indices(i, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    fn frame_indices(&self, i: usize, out: &mut Vec<i32>) -> crate::Result<()> {
+        let f = self.frames[i];
+        let mut r = BitReader::new(self.frame_payload(i));
+        for _ in 0..f.n_scales {
+            r.read_f32()?;
+        }
+        if f.m >= 1 {
+            let k = (2 * f.m + 1) as u32;
+            let syms = pack::unpack_base_k(&mut r, k, f.n)?;
+            out.extend(syms.into_iter().map(|s| pack::symbol_to_signed(s, f.m)));
+        } else if self.scheme == SchemeId::OneBit {
+            for _ in 0..f.n {
+                out.push(r.read_bit()? as i32);
+            }
+        }
+        Ok(())
+    }
+
+    /// Debug/stats accessor: the f32 scale factors, re-derived from the
+    /// payload alone.
+    pub fn scales(&self) -> crate::Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for (i, f) in self.frames.iter().enumerate() {
+            let mut r = BitReader::new(self.frame_payload(i));
+            for _ in 0..f.n_scales {
+                out.push(r.read_f32()?);
+            }
+        }
+        Ok(out)
     }
 
     /// Order-0 entropy of the index stream plus incompressible scale bits
-    /// (Table 2's "resulting bit stream ... after entropy coding" limit).
+    /// (Table 2's "resulting bit stream … after entropy coding" limit).
+    /// Frames with no index alphabet (baseline, one-bit) count at their raw
+    /// payload size, as in the paper's accounting.
     pub fn entropy_bits(&self) -> f64 {
-        if self.m == 0 {
-            // baseline / onebit handle their own notion below
-            return self.payload_bits as f64;
+        let mut total = 0f64;
+        for (i, f) in self.frames.iter().enumerate() {
+            if f.m == 0 {
+                total += f.payload_bits as f64;
+                continue;
+            }
+            let mut idx = Vec::with_capacity(f.n);
+            match self.frame_indices(i, &mut idx) {
+                Ok(()) => {
+                    total += entropy::signed_stream_entropy(&idx, f.m) * idx.len() as f64
+                        + 32.0 * f.n_scales as f64;
+                }
+                Err(_) => total += f.payload_bits as f64,
+            }
         }
-        entropy::signed_stream_entropy(&self.indices, self.m) * self.indices.len() as f64
-            + 32.0 * self.scales.len() as f64
+        total
     }
 
     /// Actual adaptive-arithmetic-coded size in bits (what ACC achieves).
     pub fn aac_bits(&self) -> usize {
-        if self.m == 0 {
-            return self.payload_bits;
+        let mut total = 0usize;
+        for (i, f) in self.frames.iter().enumerate() {
+            if f.m == 0 {
+                total += f.payload_bits;
+                continue;
+            }
+            let mut idx = Vec::with_capacity(f.n);
+            match self.frame_indices(i, &mut idx) {
+                Ok(()) => {
+                    total += arithmetic::encoded_bits_signed(&idx, f.m) + 32 * f.n_scales;
+                }
+                Err(_) => total += f.payload_bits,
+            }
         }
-        arithmetic::encoded_bits_signed(&self.indices, self.m) + 32 * self.scales.len()
+        total
     }
+}
+
+/// Incremental encoder for a framed [`WireMsg`].
+pub struct WireMsgBuilder {
+    scheme: SchemeId,
+    bytes: Vec<u8>,
+    frames: Vec<Frame>,
+}
+
+impl WireMsgBuilder {
+    pub fn new(scheme: SchemeId) -> Self {
+        let mut bytes = Vec::with_capacity(64);
+        bytes.extend_from_slice(&WIRE_MAGIC);
+        bytes.push(WIRE_VERSION);
+        bytes.push(scheme as u8);
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // frame count, patched in finish()
+        Self {
+            scheme,
+            bytes,
+            frames: Vec::new(),
+        }
+    }
+
+    /// Append one per-tensor frame whose payload was written through `w`.
+    pub fn push_frame(&mut self, n: usize, m: i32, n_scales: usize, w: BitWriter) {
+        let payload_bits = w.len_bits();
+        let payload = w.into_bytes();
+        debug_assert_eq!(payload.len(), payload_bits.div_ceil(8));
+        self.bytes.extend_from_slice(&(n as u64).to_le_bytes());
+        self.bytes.extend_from_slice(&m.to_le_bytes());
+        self.bytes.extend_from_slice(&(n_scales as u32).to_le_bytes());
+        self.bytes
+            .extend_from_slice(&(payload_bits as u64).to_le_bytes());
+        let payload_off = self.bytes.len();
+        self.bytes.extend_from_slice(&payload);
+        self.frames.push(Frame {
+            n,
+            m,
+            n_scales,
+            payload_bits,
+            payload_off,
+        });
+    }
+
+    /// Patch the frame count, append the checksum, and seal the message.
+    pub fn finish(mut self) -> WireMsg {
+        let count = self.frames.len() as u32;
+        self.bytes[4..8].copy_from_slice(&count.to_le_bytes());
+        let crc = crc::checksum(&self.bytes);
+        self.bytes.extend_from_slice(&crc.to_le_bytes());
+        WireMsg {
+            scheme: self.scheme,
+            bytes: self.bytes,
+            frames: self.frames,
+        }
+    }
+}
+
+/// Split a flat gradient into `frames` near-equal tensor slices (the first
+/// `len % frames` get one extra element) — how the trainer maps "layer
+/// tensors" onto wire-v2 frames when the model ships a single flat vector.
+pub fn frame_slices(g: &[f32], frames: usize) -> Vec<&[f32]> {
+    let k = frames.clamp(1, g.len().max(1));
+    let base = g.len() / k;
+    let rem = g.len() % k;
+    let mut out = Vec::with_capacity(k);
+    let mut off = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push(&g[off..off + len]);
+        off += len;
+    }
+    out
 }
 
 /// A gradient quantizer: the worker-side encoder + server-side decoder.
 ///
 /// `dither` is the shared-seed pseudo-random stream for this (worker,
 /// round): encode and decode MUST be called with *identically seeded*
-/// generators (the Alg. 1 contract).  Schemes that use only private
+/// generators (the Alg. 1 contract). Schemes that use only private
 /// randomness (QSGD, TernGrad) draw from the same stream at encode time and
-/// ignore it at decode time.
+/// ignore it at decode time. Multi-frame messages consume the stream
+/// contiguously in frame order on both sides.
 pub trait GradQuantizer: Send {
     fn name(&self) -> &'static str;
 
     fn id(&self) -> SchemeId;
 
-    /// Quantize + serialize a gradient.
-    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg;
+    /// Quantize + serialize one tensor into one frame: write the payload
+    /// through `w`, return `(m, n_scales)` for the frame header.
+    fn encode_frame(&mut self, g: &[f32], dither: &mut DitherGen, w: &mut BitWriter)
+        -> (i32, usize);
 
-    /// Parse + dequantize a message. `side` is the decoder side information
+    /// Parse + dequantize one frame from its payload bytes alone. `side` is
+    /// the decoder side information slice covering this frame's coordinates
     /// (only used by NDQSG: the running average of already-decoded SGs).
+    fn decode_frame(
+        &self,
+        frame: &Frame,
+        payload: &[u8],
+        dither: &mut DitherGen,
+        side: Option<&[f32]>,
+    ) -> crate::Result<Vec<f32>>;
+
+    /// Called once at the start of every message encode, before the first
+    /// `encode_frame` — stateful schemes (one-bit error feedback) reset
+    /// their per-message frame cursor here.
+    fn begin_message(&mut self) {}
+
+    /// Quantize + serialize a flat gradient as a single-frame message.
+    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
+        self.encode_tensors(&[g], dither)
+    }
+
+    /// Quantize + serialize per-tensor gradients as one framed message.
+    fn encode_tensors(&mut self, tensors: &[&[f32]], dither: &mut DitherGen) -> WireMsg {
+        self.begin_message();
+        let mut b = WireMsgBuilder::new(self.id());
+        for g in tensors {
+            let mut w = BitWriter::new();
+            let (m, n_scales) = self.encode_frame(g, dither, &mut w);
+            b.push_frame(g.len(), m, n_scales, w);
+        }
+        b.finish()
+    }
+
+    /// Parse + dequantize a message, concatenating all frames.
     fn decode(
         &self,
         msg: &WireMsg,
         dither: &mut DitherGen,
         side: Option<&[f32]>,
-    ) -> crate::Result<Vec<f32>>;
+    ) -> crate::Result<Vec<f32>> {
+        let parts = self.decode_tensors(msg, dither, side)?;
+        let mut out = Vec::with_capacity(msg.n());
+        for p in parts {
+            out.extend(p);
+        }
+        Ok(out)
+    }
+
+    /// Parse + dequantize a message frame by frame.
+    fn decode_tensors(
+        &self,
+        msg: &WireMsg,
+        dither: &mut DitherGen,
+        side: Option<&[f32]>,
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            msg.scheme == self.id(),
+            "scheme mismatch: message header says {:?}, decoder is {:?}",
+            msg.scheme,
+            self.id()
+        );
+        if let Some(s) = side {
+            anyhow::ensure!(
+                s.len() == msg.n(),
+                "side info length {} != {}",
+                s.len(),
+                msg.n()
+            );
+        }
+        let mut out = Vec::with_capacity(msg.frames().len());
+        let mut off = 0usize;
+        for (i, f) in msg.frames().iter().enumerate() {
+            let frame_side = side.map(|s| &s[off..off + f.n]);
+            let decoded = self.decode_frame(f, msg.frame_payload(i), dither, frame_side)?;
+            anyhow::ensure!(
+                decoded.len() == f.n,
+                "frame {i}: decoded {} coordinates, header says {}",
+                decoded.len(),
+                f.n
+            );
+            off += f.n;
+            out.push(decoded);
+        }
+        Ok(out)
+    }
 
     /// Whether decode consumes the shared dither stream (DQSG/NDQSG).
     fn uses_shared_dither(&self) -> bool {
@@ -165,6 +605,24 @@ impl Scheme {
         }
     }
 
+    /// The wire discriminant this scheme encodes as.
+    pub fn id(&self) -> SchemeId {
+        match self {
+            Scheme::Baseline => SchemeId::Baseline,
+            Scheme::Dithered { .. } => SchemeId::Dithered,
+            Scheme::DitheredPartitioned { .. } => SchemeId::DitheredPartitioned,
+            Scheme::Qsgd { .. } => SchemeId::Qsgd,
+            Scheme::Terngrad => SchemeId::Terngrad,
+            Scheme::OneBit => SchemeId::OneBit,
+            Scheme::Nested { .. } => SchemeId::Nested,
+        }
+    }
+
+    /// Whether this scheme's decoder needs Alg.-2 side information.
+    pub fn needs_side_info(&self) -> bool {
+        matches!(self, Scheme::Nested { .. })
+    }
+
     /// Parse CLI syntax, e.g. `baseline`, `dqsg:0.5`, `dqsg:0.5:part8`,
     /// `qsgd:2`, `terngrad`, `onebit`, `nested:0.3333:3:1.0`.
     pub fn parse(s: &str) -> crate::Result<Scheme> {
@@ -211,9 +669,76 @@ impl Scheme {
     }
 }
 
+/// Maps wire [`SchemeId`]s to codecs so receivers dispatch on the message
+/// header instead of trusting the sender's claimed configuration.
+///
+/// Registration is by [`Scheme`]; registering two *different* configs under
+/// the same wire id is rejected (the receiver would have no way to tell the
+/// frames apart), while re-registering an identical config is a no-op.
+#[derive(Default)]
+pub struct SchemeRegistry {
+    entries: BTreeMap<u8, (Scheme, Box<dyn GradQuantizer>)>,
+}
+
+impl SchemeRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register the decoder for `scheme`'s wire id.
+    pub fn register(&mut self, scheme: Scheme) -> crate::Result<()> {
+        let id = scheme.id() as u8;
+        if let Some((existing, _)) = self.entries.get(&id) {
+            anyhow::ensure!(
+                *existing == scheme,
+                "scheme id {id} already registered with a conflicting config \
+                 ({existing:?} vs {scheme:?})"
+            );
+            return Ok(());
+        }
+        self.entries.insert(id, (scheme, scheme.build()));
+        Ok(())
+    }
+
+    /// Build a registry covering every scheme in `schemes`.
+    pub fn from_schemes(schemes: &[Scheme]) -> crate::Result<Self> {
+        let mut reg = Self::new();
+        for s in schemes {
+            reg.register(*s)?;
+        }
+        Ok(reg)
+    }
+
+    /// Whether a codec is registered for `id`.
+    pub fn contains(&self, id: SchemeId) -> bool {
+        self.entries.contains_key(&(id as u8))
+    }
+
+    /// Look up the codec for a wire id.
+    pub fn decoder(&self, id: SchemeId) -> crate::Result<&dyn GradQuantizer> {
+        self.entries
+            .get(&(id as u8))
+            .map(|(_, q)| q.as_ref())
+            .ok_or_else(|| {
+                anyhow::anyhow!("no codec registered for wire scheme {id:?} — refusing to decode")
+            })
+    }
+
+    /// Decode a message by dispatching on its wire header.
+    pub fn decode(
+        &self,
+        msg: &WireMsg,
+        dither: &mut DitherGen,
+        side: Option<&[f32]>,
+    ) -> crate::Result<Vec<f32>> {
+        self.decoder(msg.scheme)?.decode(msg, dither, side)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prng::DitherStream;
 
     #[test]
     fn scheme_parse_roundtrip() {
@@ -237,7 +762,7 @@ mod tests {
     }
 
     #[test]
-    fn all_schemes_build() {
+    fn all_schemes_build_with_matching_ids() {
         for s in [
             Scheme::Baseline,
             Scheme::Dithered { delta: 1.0 },
@@ -249,6 +774,225 @@ mod tests {
         ] {
             let q = s.build();
             assert!(!q.name().is_empty());
+            assert_eq!(q.id(), s.id());
+            assert_eq!(q.needs_side_info(), s.needs_side_info());
+        }
+    }
+
+    #[test]
+    fn scheme_id_u8_roundtrip() {
+        for id in [
+            SchemeId::Baseline,
+            SchemeId::Dithered,
+            SchemeId::DitheredPartitioned,
+            SchemeId::Qsgd,
+            SchemeId::Terngrad,
+            SchemeId::OneBit,
+            SchemeId::Nested,
+        ] {
+            assert_eq!(SchemeId::from_u8(id as u8).unwrap(), id);
+        }
+        assert!(SchemeId::from_u8(7).is_err());
+        assert!(SchemeId::from_u8(255).is_err());
+    }
+
+    #[test]
+    fn builder_parse_roundtrip_preserves_frames() {
+        let mut b = WireMsgBuilder::new(SchemeId::Dithered);
+        let mut w1 = BitWriter::new();
+        w1.push_f32(2.5);
+        w1.push_bits(0b1011_0110_1, 9);
+        b.push_frame(5, 1, 1, w1);
+        let mut w2 = BitWriter::new();
+        w2.push_f32(-0.5);
+        b.push_frame(3, 1, 1, w2);
+        let msg = b.finish();
+        assert_eq!(msg.frames().len(), 2);
+        assert_eq!(msg.n(), 8);
+        assert_eq!(msg.raw_bits(), 32 + 9 + 32);
+
+        let parsed = WireMsg::parse(msg.bytes().to_vec()).unwrap();
+        assert_eq!(parsed.scheme, SchemeId::Dithered);
+        assert_eq!(parsed.frames(), msg.frames());
+        assert_eq!(parsed.bytes(), msg.bytes());
+        assert_eq!(parsed.scales().unwrap(), vec![2.5, -0.5]);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_messages() {
+        let mut b = WireMsgBuilder::new(SchemeId::Qsgd);
+        let mut w = BitWriter::new();
+        w.push_f32(1.0);
+        b.push_frame(0, 1, 1, w);
+        let good = b.finish().into_bytes();
+        assert!(WireMsg::parse(good.clone()).is_ok());
+
+        // truncated
+        assert!(WireMsg::parse(good[..good.len() - 1].to_vec()).is_err());
+        assert!(WireMsg::parse(Vec::new()).is_err());
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(WireMsg::parse(bad).is_err());
+        // wrong version
+        let mut bad = good.clone();
+        bad[2] = 1;
+        assert!(WireMsg::parse(bad).is_err());
+        // unknown scheme id (also breaks the checksum, but id is checked first)
+        let mut bad = good.clone();
+        bad[3] = 200;
+        assert!(WireMsg::parse(bad).is_err());
+        // flipped payload byte -> checksum mismatch
+        let mut bad = good.clone();
+        let mid = MSG_HEADER_BYTES + FRAME_HEADER_BYTES;
+        bad[mid] ^= 0xFF;
+        let err = WireMsg::parse(bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // flipped checksum byte
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert!(WireMsg::parse(bad).is_err());
+    }
+
+    /// Repatch the trailing CRC so structural (non-checksum) validation is
+    /// what gets exercised.
+    fn repatch_crc(bytes: &mut [u8]) {
+        let body = bytes.len() - CHECKSUM_BYTES;
+        let crc = crc::checksum(&bytes[..body]).to_le_bytes();
+        bytes[body..].copy_from_slice(&crc);
+    }
+
+    #[test]
+    fn parse_rejects_hostile_frame_headers() {
+        let mut b = WireMsgBuilder::new(SchemeId::Dithered);
+        let mut w = BitWriter::new();
+        w.push_f32(1.0);
+        w.push_bits(0x2A, 40); // 72-bit payload
+        b.push_frame(8, 1, 1, w);
+        let good = b.finish().into_bytes();
+        assert!(WireMsg::parse(good.clone()).is_ok());
+
+        // n larger than the payload could possibly carry (1 bit/coordinate
+        // minimum) — would otherwise drive huge allocations in codecs/stats
+        let mut bad = good.clone();
+        bad[MSG_HEADER_BYTES..MSG_HEADER_BYTES + 8]
+            .copy_from_slice(&(u64::MAX >> 1).to_le_bytes());
+        repatch_crc(&mut bad);
+        let err = WireMsg::parse(bad).unwrap_err().to_string();
+        assert!(err.contains("coordinates"), "{err}");
+
+        // negative m
+        let mut bad = good.clone();
+        bad[MSG_HEADER_BYTES + 8..MSG_HEADER_BYTES + 12]
+            .copy_from_slice(&(-1i32).to_le_bytes());
+        repatch_crc(&mut bad);
+        assert!(WireMsg::parse(bad).is_err());
+
+        // absurd m
+        let mut bad = good.clone();
+        bad[MSG_HEADER_BYTES + 8..MSG_HEADER_BYTES + 12]
+            .copy_from_slice(&i32::MAX.to_le_bytes());
+        repatch_crc(&mut bad);
+        assert!(WireMsg::parse(bad).is_err());
+
+        // more scales than the payload holds
+        let mut bad = good.clone();
+        bad[MSG_HEADER_BYTES + 12..MSG_HEADER_BYTES + 16]
+            .copy_from_slice(&1000u32.to_le_bytes());
+        repatch_crc(&mut bad);
+        let err = WireMsg::parse(bad).unwrap_err().to_string();
+        assert!(err.contains("scales"), "{err}");
+    }
+
+    #[test]
+    fn frame_slices_cover_exactly() {
+        let g: Vec<f32> = (0..11).map(|i| i as f32).collect();
+        for k in [1usize, 2, 3, 11, 50] {
+            let slices = frame_slices(&g, k);
+            assert_eq!(slices.len(), k.min(11));
+            let total: usize = slices.iter().map(|s| s.len()).sum();
+            assert_eq!(total, g.len());
+            let flat: Vec<f32> = slices.iter().flat_map(|s| s.iter().copied()).collect();
+            assert_eq!(flat, g);
+            // near-equal: sizes differ by at most one
+            let min = slices.iter().map(|s| s.len()).min().unwrap();
+            let max = slices.iter().map(|s| s.len()).max().unwrap();
+            assert!(max - min <= 1);
+        }
+        assert_eq!(frame_slices(&[], 4).len(), 1);
+    }
+
+    #[test]
+    fn registry_dispatches_on_header_and_rejects_unknown() {
+        let reg = SchemeRegistry::from_schemes(&[
+            Scheme::Dithered { delta: 1.0 },
+            Scheme::OneBit,
+        ])
+        .unwrap();
+        assert!(reg.contains(SchemeId::Dithered));
+        assert!(reg.contains(SchemeId::OneBit));
+        assert!(!reg.contains(SchemeId::Terngrad));
+
+        let g = vec![0.5f32, -0.25, 0.75, -1.0];
+        let stream = DitherStream::new(3, 0);
+        let mut q = Scheme::Dithered { delta: 1.0 }.build();
+        let msg = q.encode(&g, &mut stream.round(0));
+        let via_registry = reg.decode(&msg, &mut stream.round(0), None).unwrap();
+        let direct = q.decode(&msg, &mut stream.round(0), None).unwrap();
+        assert_eq!(via_registry, direct);
+
+        let mut t = Scheme::Terngrad.build();
+        let tmsg = t.encode(&g, &mut stream.round(1));
+        let err = reg
+            .decode(&tmsg, &mut stream.round(1), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no codec registered"), "{err}");
+    }
+
+    #[test]
+    fn registry_rejects_conflicting_configs() {
+        let mut reg = SchemeRegistry::new();
+        reg.register(Scheme::Dithered { delta: 1.0 }).unwrap();
+        // identical re-registration is fine
+        reg.register(Scheme::Dithered { delta: 1.0 }).unwrap();
+        // same wire id, different config: ambiguous on the receive path
+        assert!(reg.register(Scheme::Dithered { delta: 0.5 }).is_err());
+        // different id: fine
+        reg.register(Scheme::Qsgd { m: 1 }).unwrap();
+    }
+
+    #[test]
+    fn multi_tensor_roundtrip_matches_flat_reconstruction() {
+        // Framing must not change the math: a 3-frame message decodes to the
+        // same coordinates as running the three tensors through one stream.
+        let g: Vec<f32> = (0..1000).map(|i| ((i as f32) * 0.013).sin()).collect();
+        let slices = frame_slices(&g, 3);
+        let mut q = Scheme::Dithered { delta: 0.5 }.build();
+        let stream = DitherStream::new(9, 2);
+        let msg = q.encode_tensors(&slices, &mut stream.round(4));
+        assert_eq!(msg.frames().len(), 3);
+        assert_eq!(msg.n(), g.len());
+        // one kappa per frame
+        assert_eq!(msg.scales().unwrap().len(), 3);
+
+        let parts = q.decode_tensors(&msg, &mut stream.round(4), None).unwrap();
+        assert_eq!(parts.len(), 3);
+        let flat_len: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(flat_len, g.len());
+        let flat = q.decode(&msg, &mut stream.round(4), None).unwrap();
+        let concat: Vec<f32> = parts.into_iter().flatten().collect();
+        assert_eq!(flat, concat);
+        // per-frame error bound with per-frame kappa
+        let scales = msg.scales().unwrap();
+        let mut off = 0usize;
+        for (fi, s) in slices.iter().enumerate() {
+            let kappa = scales[fi];
+            for (a, b) in s.iter().zip(&flat[off..off + s.len()]) {
+                assert!((a - b).abs() <= kappa * 0.25 + 1e-5);
+            }
+            off += s.len();
         }
     }
 }

@@ -17,7 +17,7 @@
 //! failure probability and shows the error variance equals DQSG's when
 //! alpha = 1 or alpha = sqrt(1 - Delta1^2 / 12 sigma_z^2).
 
-use super::{GradQuantizer, SchemeId, WireMsg};
+use super::{Frame, GradQuantizer, SchemeId};
 use crate::coding::{pack, BitReader, BitWriter};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
@@ -95,7 +95,12 @@ impl GradQuantizer for NestedQuantizer {
         SchemeId::Nested
     }
 
-    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
+    fn encode_frame(
+        &mut self,
+        g: &[f32],
+        dither: &mut DitherGen,
+        w: &mut BitWriter,
+    ) -> (i32, usize) {
         let kappa = linf_norm(g);
         let inv_kappa = 1.0 / kappa;
         let mut u = vec![0f32; g.len()];
@@ -110,38 +115,35 @@ impl GradQuantizer for NestedQuantizer {
                 ((s * inv_d1).round() as i32).clamp(-self.m, self.m)
             })
             .collect();
-
-        let mut w = BitWriter::new();
-        super::write_scales(&mut w, &[kappa]);
-        pack::pack_base_k_signed(&indices, self.m, self.ratio, &mut w);
-        let payload_bits = w.len_bits();
-        WireMsg {
-            scheme: SchemeId::Nested,
-            n: g.len(),
-            m: self.m,
-            payload: w.into_bytes(),
-            payload_bits,
-            indices,
-            scales: vec![kappa],
-        }
+        super::write_scales(w, &[kappa]);
+        pack::pack_base_k_signed(&indices, self.m, self.ratio, w);
+        (self.m, 1)
     }
 
-    fn decode(
+    fn decode_frame(
         &self,
-        msg: &WireMsg,
+        frame: &Frame,
+        payload: &[u8],
         dither: &mut DitherGen,
         side: Option<&[f32]>,
     ) -> crate::Result<Vec<f32>> {
-        anyhow::ensure!(msg.scheme == SchemeId::Nested, "scheme mismatch");
+        anyhow::ensure!(
+            frame.m == self.m && frame.n_scales == 1,
+            "NDQSG frame header (m={}, n_scales={}) does not match decoder \
+             config (ratio={})",
+            frame.m,
+            frame.n_scales,
+            self.ratio
+        );
         let y = side.ok_or_else(|| {
             anyhow::anyhow!("NDQSG decode requires side information (Alg. 2: the running average of already-decoded SGs)")
         })?;
-        anyhow::ensure!(y.len() == msg.n, "side info length {} != {}", y.len(), msg.n);
-        let mut r = BitReader::new(&msg.payload);
+        anyhow::ensure!(y.len() == frame.n, "side info length {} != {}", y.len(), frame.n);
+        let mut r = BitReader::new(payload);
         let kappa = r.read_f32()?;
         let inv_kappa = 1.0 / kappa;
-        let symbols = pack::unpack_base_k(&mut r, self.ratio, msg.n)?;
-        let mut u = vec![0f32; msg.n];
+        let symbols = pack::unpack_base_k(&mut r, self.ratio, frame.n)?;
+        let mut u = vec![0f32; frame.n];
         dither.fill_dither(self.d1 / 2.0, &mut u);
         Ok(symbols
             .into_iter()
@@ -180,7 +182,7 @@ mod tests {
         let zmax = zfrac * (d2 - d1) / (2.0 * alpha) * kappa;
         let y: Vec<f32> = g
             .iter()
-            .map(|&gi| gi + (rng.next_f32() * 2.0 - 1.0) * zmax)
+            .map(|&b| b + (rng.next_f32() * 2.0 - 1.0) * zmax)
             .collect();
         (g, y)
     }
@@ -195,7 +197,7 @@ mod tests {
         let stream = DitherStream::new(11, 0);
         let msg = q.encode(&g, &mut stream.round(0));
         let recon = q.decode(&msg, &mut stream.round(0), Some(&y)).unwrap();
-        let kappa = msg.scales[0];
+        let kappa = msg.scales().unwrap()[0];
         for (a, b) in g.iter().zip(&recon) {
             assert!(
                 (a - b).abs() <= kappa * alpha * d1 / 2.0 + 1e-5,
@@ -298,7 +300,8 @@ mod tests {
                     let stream = DitherStream::new(3, 0);
                     let msg = q.encode(g, &mut stream.round(0));
                     let m = ((ratio - 1) / 2) as i32;
-                    if !msg.indices.iter().all(|&s| (-m..=m).contains(&s)) {
+                    let idx = msg.indices().map_err(|e| e.to_string())?;
+                    if !idx.iter().all(|&s| (-m..=m).contains(&s)) {
                         return Err(format!("symbol out of [-{m},{m}]"));
                     }
                 }

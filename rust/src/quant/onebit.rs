@@ -6,14 +6,22 @@
 //! un-transmitted error telescopes rather than accumulating.  The near-
 //! incompressible sign stream (Tables 1-2: one-bit entropy ~ raw) is why
 //! DQSGD beats it 6x after entropy coding despite more raw bits.
+//!
+//! Error feedback is tracked *per frame position*: when a worker sends
+//! multi-tensor messages, each tensor keeps its own residual lane, indexed
+//! by its position in the message (tensor order must stay stable across
+//! rounds — it does: layer order is fixed).
 
-use super::{GradQuantizer, SchemeId, WireMsg};
+use super::{Frame, GradQuantizer, SchemeId};
 use crate::coding::{BitReader, BitWriter};
 use crate::prng::DitherGen;
 
 #[derive(Debug, Clone, Default)]
 pub struct OneBitQuantizer {
-    residual: Vec<f32>,
+    /// One residual lane per frame position.
+    residuals: Vec<Vec<f32>>,
+    /// Which lane the next `encode_frame` call uses.
+    cursor: usize,
 }
 
 impl OneBitQuantizer {
@@ -21,9 +29,10 @@ impl OneBitQuantizer {
         Self::default()
     }
 
-    /// Expose the residual for tests of the telescoping invariant.
+    /// Expose the first frame's residual for tests of the telescoping
+    /// invariant (single-tensor messages use only lane 0).
     pub fn residual(&self) -> &[f32] {
-        &self.residual
+        self.residuals.first().map(|v| v.as_slice()).unwrap_or(&[])
     }
 }
 
@@ -36,17 +45,34 @@ impl GradQuantizer for OneBitQuantizer {
         SchemeId::OneBit
     }
 
-    fn encode(&mut self, g: &[f32], _dither: &mut DitherGen) -> WireMsg {
-        if self.residual.len() != g.len() {
-            self.residual = vec![0f32; g.len()];
+    fn begin_message(&mut self) {
+        // reset the residual cursor so lane i always belongs to tensor i
+        self.cursor = 0;
+    }
+
+    fn encode_frame(
+        &mut self,
+        g: &[f32],
+        _dither: &mut DitherGen,
+        w: &mut BitWriter,
+    ) -> (i32, usize) {
+        let lane = self.cursor;
+        self.cursor += 1;
+        if lane >= self.residuals.len() {
+            self.residuals.push(vec![0f32; g.len()]);
         }
+        let residual = &mut self.residuals[lane];
+        if residual.len() != g.len() {
+            *residual = vec![0f32; g.len()];
+        }
+
         let mut sum_pos = 0f64;
         let mut n_pos = 0u64;
         let mut sum_neg = 0f64;
         let mut n_neg = 0u64;
         let v: Vec<f32> = g
             .iter()
-            .zip(&self.residual)
+            .zip(residual.iter())
             .map(|(&gi, &ri)| {
                 let vi = gi + ri;
                 if vi >= 0.0 {
@@ -62,39 +88,33 @@ impl GradQuantizer for OneBitQuantizer {
         let mean_pos = if n_pos > 0 { (sum_pos / n_pos as f64) as f32 } else { 0.0 };
         let mean_neg = if n_neg > 0 { (sum_neg / n_neg as f64) as f32 } else { 0.0 };
 
-        let mut w = BitWriter::new();
-        super::write_scales(&mut w, &[mean_pos, mean_neg]);
-        let mut indices = Vec::with_capacity(v.len());
+        super::write_scales(w, &[mean_pos, mean_neg]);
         for (i, &vi) in v.iter().enumerate() {
             let bit = vi >= 0.0;
             w.push_bit(bit);
-            indices.push(bit as i32);
             // error feedback: residual carries what the bit didn't
-            self.residual[i] = vi - if bit { mean_pos } else { mean_neg };
+            residual[i] = vi - if bit { mean_pos } else { mean_neg };
         }
-        let payload_bits = w.len_bits();
-        WireMsg {
-            scheme: SchemeId::OneBit,
-            n: g.len(),
-            m: 0, // sign stream: entropy handled via payload (1 bit/coord)
-            payload: w.into_bytes(),
-            payload_bits,
-            indices,
-            scales: vec![mean_pos, mean_neg],
-        }
+        (0, 2)
     }
 
-    fn decode(
+    fn decode_frame(
         &self,
-        msg: &WireMsg,
+        frame: &Frame,
+        payload: &[u8],
         _dither: &mut DitherGen,
         _side: Option<&[f32]>,
     ) -> crate::Result<Vec<f32>> {
-        anyhow::ensure!(msg.scheme == SchemeId::OneBit, "scheme mismatch");
-        let mut r = BitReader::new(&msg.payload);
+        anyhow::ensure!(
+            frame.m == 0 && frame.n_scales == 2,
+            "malformed one-bit frame header (m={}, n_scales={})",
+            frame.m,
+            frame.n_scales
+        );
+        let mut r = BitReader::new(payload);
         let mean_pos = r.read_f32()?;
         let mean_neg = r.read_f32()?;
-        (0..msg.n)
+        (0..frame.n)
             .map(|_| Ok(if r.read_bit()? { mean_pos } else { mean_neg }))
             .collect()
     }
@@ -104,6 +124,7 @@ impl GradQuantizer for OneBitQuantizer {
 mod tests {
     use super::*;
     use crate::prng::{DitherStream, Xoshiro256};
+    use crate::quant::frame_slices;
 
     #[test]
     fn roundtrip_and_bit_count() {
@@ -149,6 +170,38 @@ mod tests {
     }
 
     #[test]
+    fn per_frame_residual_lanes_telescope_independently() {
+        // multi-tensor messages: each frame's error feedback must telescope
+        // over rounds without cross-talk between lanes
+        let mut rng = Xoshiro256::new(9);
+        let n = 300;
+        let mut q = OneBitQuantizer::new();
+        let stream = DitherStream::new(0, 0);
+        let mut total_in = vec![0f64; n];
+        let mut total_out = vec![0f64; n];
+        for round in 0..20 {
+            let g: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let slices = frame_slices(&g, 3);
+            let msg = q.encode_tensors(&slices, &mut stream.round(round));
+            assert_eq!(msg.frames().len(), 3);
+            let recon = q.decode(&msg, &mut stream.round(round), None).unwrap();
+            for i in 0..n {
+                total_in[i] += g[i] as f64;
+                total_out[i] += recon[i] as f64;
+            }
+        }
+        let flat_residual: Vec<f32> = q.residuals.iter().flatten().copied().collect();
+        assert_eq!(flat_residual.len(), n);
+        for i in 0..n {
+            let telescoped = total_out[i] + flat_residual[i] as f64;
+            assert!(
+                (telescoped - total_in[i]).abs() < 1e-3,
+                "lane telescoping broken at {i}"
+            );
+        }
+    }
+
+    #[test]
     fn sign_stream_nearly_incompressible() {
         // gradient-like input: sign bits ~ fair coin => entropy ~ 1 bit
         let mut rng = Xoshiro256::new(8);
@@ -156,7 +209,7 @@ mod tests {
         let mut q = OneBitQuantizer::new();
         let stream = DitherStream::new(0, 0);
         let msg = q.encode(&g, &mut stream.round(0));
-        let h = crate::coding::entropy::signed_stream_entropy(&msg.indices, 1);
+        let h = crate::coding::entropy::signed_stream_entropy(&msg.indices().unwrap(), 1);
         assert!(h > 0.95, "sign entropy {h}");
     }
 }

@@ -2,9 +2,13 @@
 //! quantized with its own scale kappa_k.  The excess-variance term falls
 //! logarithmically in K while the scale overhead grows linearly (K * 32
 //! bits) — the trade-off the `ablation_partition` bench sweeps.
+//!
+//! On the wire each tensor frame carries its K scales at the payload head
+//! (`n_scales = K` in the frame header), so the decoder recovers the
+//! partition count from the header instead of trusting out-of-band config.
 
 use super::dithered::DitheredQuantizer;
-use super::{GradQuantizer, SchemeId, WireMsg};
+use super::{Frame, GradQuantizer, SchemeId};
 use crate::coding::{pack, BitReader, BitWriter};
 use crate::prng::DitherGen;
 
@@ -37,6 +41,11 @@ impl PartitionedDithered {
         }
         out
     }
+
+    #[cfg(test)]
+    pub(crate) fn bounds_for_test(&self, n: usize) -> Vec<(usize, usize)> {
+        self.bounds(n)
+    }
 }
 
 impl GradQuantizer for PartitionedDithered {
@@ -48,7 +57,12 @@ impl GradQuantizer for PartitionedDithered {
         SchemeId::DitheredPartitioned
     }
 
-    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
+    fn encode_frame(
+        &mut self,
+        g: &[f32],
+        dither: &mut DitherGen,
+        w: &mut BitWriter,
+    ) -> (i32, usize) {
         let bounds = self.bounds(g.len());
         let mut u_buf = Vec::new();
         let mut indices = Vec::with_capacity(g.len());
@@ -61,45 +75,40 @@ impl GradQuantizer for PartitionedDithered {
                 .quantize_into(&g[lo..hi], dither, &mut u_buf, &mut indices);
             scales.push(kappa);
         }
-        let m = (1.0 / self.inner.delta()).round() as i32;
-        let mut w = BitWriter::new();
-        super::write_scales(&mut w, &scales);
-        pack::pack_base_k_signed(&indices, m, self.inner.alphabet(), &mut w);
-        let payload_bits = w.len_bits();
-        WireMsg {
-            scheme: SchemeId::DitheredPartitioned,
-            n: g.len(),
-            m,
-            payload: w.into_bytes(),
-            payload_bits,
-            indices,
-            scales,
-        }
+        super::write_scales(w, &scales);
+        pack::pack_base_k_signed(&indices, self.inner.m(), self.inner.alphabet(), w);
+        (self.inner.m(), scales.len())
     }
 
-    fn decode(
+    fn decode_frame(
         &self,
-        msg: &WireMsg,
+        frame: &Frame,
+        payload: &[u8],
         dither: &mut DitherGen,
         _side: Option<&[f32]>,
     ) -> crate::Result<Vec<f32>> {
+        let bounds = self.bounds(frame.n);
         anyhow::ensure!(
-            msg.scheme == SchemeId::DitheredPartitioned,
-            "scheme mismatch"
+            frame.m == self.inner.m() && frame.n_scales == bounds.len(),
+            "partitioned frame header (m={}, n_scales={}) does not match decoder \
+             config (m={}, K={})",
+            frame.m,
+            frame.n_scales,
+            self.inner.m(),
+            bounds.len()
         );
-        let bounds = self.bounds(msg.n);
-        let mut r = BitReader::new(&msg.payload);
+        let mut r = BitReader::new(payload);
         let mut scales = Vec::with_capacity(bounds.len());
         for _ in 0..bounds.len() {
             scales.push(r.read_f32()?);
         }
-        let symbols = pack::unpack_base_k(&mut r, self.inner.alphabet(), msg.n)?;
-        let m = (1.0 / self.inner.delta()).round() as i32;
+        let symbols = pack::unpack_base_k(&mut r, self.inner.alphabet(), frame.n)?;
+        let m = self.inner.m();
         let indices: Vec<i32> = symbols
             .into_iter()
             .map(|s| pack::symbol_to_signed(s, m))
             .collect();
-        let mut out = Vec::with_capacity(msg.n);
+        let mut out = Vec::with_capacity(frame.n);
         for (part, &(lo, hi)) in bounds.iter().enumerate() {
             out.extend(self.inner.dequantize(&indices[lo..hi], scales[part], dither));
         }
@@ -126,7 +135,8 @@ mod tests {
             let mut q = PartitionedDithered::new(0.5, k);
             let stream = DitherStream::new(2, 0);
             let msg = q.encode(&g, &mut stream.round(0));
-            assert_eq!(msg.scales.len(), k);
+            assert_eq!(msg.scales().unwrap().len(), k);
+            assert_eq!(msg.frames()[0].n_scales, k);
             // raw bits = K * 32 + packed indices
             assert_eq!(
                 msg.raw_bits(),
@@ -135,9 +145,10 @@ mod tests {
             let recon = q.decode(&msg, &mut stream.round(0), None).unwrap();
             assert_eq!(recon.len(), g.len());
             // per-partition error bound with per-partition kappa
-            let bounds = q.bounds(g.len());
+            let bounds = q.bounds_for_test(g.len());
+            let scales = msg.scales().unwrap();
             for (part, &(lo, hi)) in bounds.iter().enumerate() {
-                let kappa = msg.scales[part];
+                let kappa = scales[part];
                 for i in lo..hi {
                     assert!((g[i] - recon[i]).abs() <= kappa * 0.25 + 1e-5);
                 }
@@ -181,8 +192,8 @@ mod tests {
         let s2 = DitherStream::new(9, 0);
         let mp = qp.encode(&g, &mut s1.round(0));
         let md = qd.encode(&g, &mut s2.round(0));
-        assert_eq!(mp.indices, md.indices);
-        assert_eq!(mp.scales, md.scales);
+        assert_eq!(mp.indices().unwrap(), md.indices().unwrap());
+        assert_eq!(mp.scales().unwrap(), md.scales().unwrap());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! The variance penalty relative to DQSG (2x for uniform inputs, §2.1.1) is
 //! what the paper's Fig. 5 / Table 3 comparisons measure.
 
-use super::{GradQuantizer, SchemeId, WireMsg};
+use super::{Frame, GradQuantizer, SchemeId};
 use crate::coding::{pack, BitReader, BitWriter};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
@@ -43,7 +43,12 @@ impl GradQuantizer for QsgdQuantizer {
         SchemeId::Qsgd
     }
 
-    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
+    fn encode_frame(
+        &mut self,
+        g: &[f32],
+        dither: &mut DitherGen,
+        w: &mut BitWriter,
+    ) -> (i32, usize) {
         let kappa = linf_norm(g);
         let inv_kappa = 1.0 / kappa;
         let inv_delta = 1.0 / self.delta;
@@ -56,32 +61,28 @@ impl GradQuantizer for QsgdQuantizer {
             .zip(&u)
             .map(|(&gi, &ui)| (((gi * inv_kappa + ui) * inv_delta).round() as i32).clamp(-m, m))
             .collect();
-
-        let mut w = BitWriter::new();
-        super::write_scales(&mut w, &[kappa]);
-        pack::pack_base_k_signed(&indices, self.m, self.alphabet(), &mut w);
-        let payload_bits = w.len_bits();
-        WireMsg {
-            scheme: SchemeId::Qsgd,
-            n: g.len(),
-            m: self.m,
-            payload: w.into_bytes(),
-            payload_bits,
-            indices,
-            scales: vec![kappa],
-        }
+        super::write_scales(w, &[kappa]);
+        pack::pack_base_k_signed(&indices, self.m, self.alphabet(), w);
+        (self.m, 1)
     }
 
-    fn decode(
+    fn decode_frame(
         &self,
-        msg: &WireMsg,
+        frame: &Frame,
+        payload: &[u8],
         _dither: &mut DitherGen,
         _side: Option<&[f32]>,
     ) -> crate::Result<Vec<f32>> {
-        anyhow::ensure!(msg.scheme == SchemeId::Qsgd, "scheme mismatch");
-        let mut r = BitReader::new(&msg.payload);
+        anyhow::ensure!(
+            frame.m == self.m && frame.n_scales == 1,
+            "QSGD frame header (m={}, n_scales={}) does not match decoder config (m={})",
+            frame.m,
+            frame.n_scales,
+            self.m
+        );
+        let mut r = BitReader::new(payload);
         let kappa = r.read_f32()?;
-        let symbols = pack::unpack_base_k(&mut r, self.alphabet(), msg.n)?;
+        let symbols = pack::unpack_base_k(&mut r, self.alphabet(), frame.n)?;
         // half-dithered: reconstruction is kappa * Delta * q; dither NOT
         // subtracted (Lemma 2 — this is what distinguishes QSGD from DQSG).
         Ok(symbols
@@ -95,6 +96,7 @@ impl GradQuantizer for QsgdQuantizer {
 mod tests {
     use super::*;
     use crate::prng::DitherStream;
+    use crate::quant::WireMsg;
 
     fn enc_dec(g: &[f32], m: i32, seed: u64) -> (WireMsg, Vec<f32>) {
         let mut q = QsgdQuantizer::new(m);
@@ -139,6 +141,8 @@ mod tests {
         let stream = DitherStream::new(0, 0);
         let msg_dq = dq.encode(&g, &mut stream.round(0));
         assert_eq!(msg.raw_bits(), msg_dq.raw_bits());
+        // identical framing overhead too
+        assert_eq!(msg.framed_bits(), msg_dq.framed_bits());
     }
 
     #[test]
@@ -146,7 +150,7 @@ mod tests {
         let mut rng = crate::prng::Xoshiro256::new(4);
         let g: Vec<f32> = (0..1000).map(|_| rng.next_normal()).collect();
         let (msg, recon) = enc_dec(&g, 2, 1);
-        let kappa = msg.scales[0];
+        let kappa = msg.scales().unwrap()[0];
         for r in recon {
             let lvl = r / (kappa * 0.5);
             assert!((lvl - lvl.round()).abs() < 1e-5);

@@ -3,7 +3,7 @@
 //! s = max |clip(x)|, reconstruction s * q. Clipping at c·sigma (c = 2.5,
 //! the paper's recommended layer-wise clipping factor).
 
-use super::{GradQuantizer, SchemeId, WireMsg};
+use super::{Frame, GradQuantizer, SchemeId};
 use crate::coding::{pack, BitReader, BitWriter};
 use crate::prng::DitherGen;
 use crate::tensor::mean_var;
@@ -38,7 +38,12 @@ impl GradQuantizer for TerngradQuantizer {
         SchemeId::Terngrad
     }
 
-    fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
+    fn encode_frame(
+        &mut self,
+        g: &[f32],
+        dither: &mut DitherGen,
+        w: &mut BitWriter,
+    ) -> (i32, usize) {
         let (_, var) = mean_var(g);
         let c = (self.clip_sigmas as f64 * var.sqrt()) as f32;
         let clip = |x: f32| {
@@ -72,32 +77,27 @@ impl GradQuantizer for TerngradQuantizer {
                 }
             })
             .collect();
-
-        let mut w = BitWriter::new();
-        super::write_scales(&mut w, &[s]);
-        pack::pack_base_k_signed(&indices, 1, 3, &mut w);
-        let payload_bits = w.len_bits();
-        WireMsg {
-            scheme: SchemeId::Terngrad,
-            n: g.len(),
-            m: 1,
-            payload: w.into_bytes(),
-            payload_bits,
-            indices,
-            scales: vec![s],
-        }
+        super::write_scales(w, &[s]);
+        pack::pack_base_k_signed(&indices, 1, 3, w);
+        (1, 1)
     }
 
-    fn decode(
+    fn decode_frame(
         &self,
-        msg: &WireMsg,
+        frame: &Frame,
+        payload: &[u8],
         _dither: &mut DitherGen,
         _side: Option<&[f32]>,
     ) -> crate::Result<Vec<f32>> {
-        anyhow::ensure!(msg.scheme == SchemeId::Terngrad, "scheme mismatch");
-        let mut r = BitReader::new(&msg.payload);
+        anyhow::ensure!(
+            frame.m == 1 && frame.n_scales == 1,
+            "TernGrad frame header (m={}, n_scales={}) is not ternary",
+            frame.m,
+            frame.n_scales
+        );
+        let mut r = BitReader::new(payload);
         let s = r.read_f32()?;
-        let symbols = pack::unpack_base_k(&mut r, 3, msg.n)?;
+        let symbols = pack::unpack_base_k(&mut r, 3, frame.n)?;
         Ok(symbols
             .into_iter()
             .map(|sym| s * pack::symbol_to_signed(sym, 1) as f32)
@@ -138,7 +138,7 @@ mod tests {
         let mut q = TerngradQuantizer::new();
         let stream = DitherStream::new(0, 0);
         let msg = q.encode(&g, &mut stream.round(0));
-        assert!(msg.scales[0] < 5.0, "clip failed: s = {}", msg.scales[0]);
+        assert!(msg.scales().unwrap()[0] < 5.0, "clip failed: s = {}", msg.scales().unwrap()[0]);
     }
 
     #[test]
@@ -147,11 +147,16 @@ mod tests {
         let mut q = TerngradQuantizer::new();
         let stream = DitherStream::new(1, 0);
         let msg = q.encode(&g, &mut stream.round(0));
-        assert_eq!(msg.m, 1);
+        assert_eq!(msg.frames().len(), 1);
+        assert_eq!(msg.frames()[0].m, 1);
         assert_eq!(
             msg.raw_bits(),
             32 + crate::coding::pack::packed_bits(997, 3)
         );
-        assert!(msg.indices.iter().all(|&q| (-1..=1).contains(&q)));
+        assert!(msg
+            .indices()
+            .unwrap()
+            .iter()
+            .all(|&q| (-1..=1).contains(&q)));
     }
 }

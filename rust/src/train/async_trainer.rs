@@ -23,7 +23,7 @@ use crate::config::TrainConfig;
 use crate::data::{Batch, ImageDataset, ImageKind};
 use crate::opt;
 use crate::prng::DitherStream;
-use crate::quant::GradQuantizer;
+use crate::quant::{GradQuantizer, SchemeRegistry};
 use crate::runtime::ComputeService;
 use crate::train::bits::CommStats;
 use crate::train::trainer::{EvalPoint, TrainReport};
@@ -89,7 +89,9 @@ impl AsyncTrainer {
         let mut optimizer = opt::build(cfg.opt, cfg.lr);
         let mut comm = CommStats::new(false);
 
-        // per-worker state
+        // per-worker state; the leader decodes through the scheme registry,
+        // dispatching on each message's wire header (wire-protocol v2)
+        let registry = SchemeRegistry::from_schemes(&[cfg.scheme])?;
         let mut quantizers: Vec<Box<dyn GradQuantizer>> =
             (0..cfg.workers).map(|_| cfg.scheme.build()).collect();
         let streams: Vec<DitherStream> = (0..cfg.workers)
@@ -165,7 +167,7 @@ impl AsyncTrainer {
             let msg = quantizers[ev.worker]
                 .encode(&grad, &mut streams[ev.worker].round(ev.wstep));
             comm.record_upload(&msg);
-            let recon = quantizers[ev.worker].decode(
+            let recon = registry.decode(
                 &msg,
                 &mut streams[ev.worker].round(ev.wstep),
                 None,

@@ -2,7 +2,8 @@
 //!
 //! Every [`crate::quant::WireMsg`] that crosses the worker->server channel
 //! is tallied here: raw bits (Table 1), order-0 entropy of the index stream
-//! (Table 2's limit) and — when `measure_aac` is on — the *actual* adaptive
+//! (Table 2's limit), the full framed wire size (v2 headers + checksum
+//! included), and — when `measure_aac` is on — the *actual* adaptive
 //! arithmetic coder output (Table 2's achieved number, "within 5%").
 
 use crate::quant::WireMsg;
@@ -14,10 +15,13 @@ pub struct CommStats {
     pub raw: Running,
     pub entropy: Running,
     pub aac: Running,
+    /// Full framed message size (headers + payload + checksum), in bits.
+    pub framed: Running,
     /// Total uplink bits across all workers and rounds.
     pub total_raw_bits: f64,
     pub total_entropy_bits: f64,
     pub total_aac_bits: f64,
+    pub total_framed_bits: f64,
     /// Broadcast (server -> workers) bits per round.
     pub bcast: Running,
     pub total_bcast_bits: f64,
@@ -32,6 +36,7 @@ impl CommStats {
             raw: Running::new(),
             entropy: Running::new(),
             aac: Running::new(),
+            framed: Running::new(),
             bcast: Running::new(),
             measure_aac,
             ..Default::default()
@@ -42,6 +47,9 @@ impl CommStats {
         let raw = msg.raw_bits() as f64;
         self.raw.push(raw);
         self.total_raw_bits += raw;
+        let framed = msg.framed_bits() as f64;
+        self.framed.push(framed);
+        self.total_framed_bits += framed;
         let ent = msg.entropy_bits();
         self.entropy.push(ent);
         self.total_entropy_bits += ent;
@@ -71,13 +79,18 @@ impl CommStats {
     pub fn kbits_per_msg_aac(&self) -> f64 {
         self.aac.mean() / 1000.0
     }
+
+    /// Mean full-frame Kbits per message (wire-v2 headers included).
+    pub fn kbits_per_msg_framed(&self) -> f64 {
+        self.framed.mean() / 1000.0
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::prng::DitherStream;
-    use crate::quant::Scheme;
+    use crate::quant::{GradQuantizer, Scheme};
 
     #[test]
     fn accounting_matches_messages() {
@@ -94,6 +107,11 @@ mod tests {
         }
         assert_eq!(stats.messages, 5);
         assert!(stats.total_raw_bits > 0.0);
+        // framed > raw (headers + checksum), but only by a fixed overhead
+        assert!(stats.total_framed_bits > stats.total_raw_bits);
+        let per_msg_overhead =
+            (stats.total_framed_bits - stats.total_raw_bits) / stats.messages as f64;
+        assert!(per_msg_overhead <= 8.0 * 64.0, "overhead {per_msg_overhead} bits");
         // raw >= entropy for a compressible stream; AAC close to entropy
         assert!(stats.total_raw_bits >= stats.total_entropy_bits * 0.99);
         let ratio = stats.total_aac_bits / stats.total_entropy_bits;

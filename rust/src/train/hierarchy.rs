@@ -13,7 +13,7 @@
 //! correlated. Bit accounting distinguishes leaf-tier and root-tier bytes.
 
 use crate::prng::DitherStream;
-use crate::quant::{GradQuantizer, Scheme};
+use crate::quant::{GradQuantizer, Scheme, SchemeRegistry};
 use crate::tensor;
 
 /// Static two-tier topology description.
@@ -74,6 +74,10 @@ pub fn aggregate_round(
     let mut leaf_bits = 0usize;
     let mut flat_dqsg_bits = 0usize;
     let mut group_avgs: Vec<Vec<f32>> = Vec::with_capacity(h.groups);
+    // wire-v2 dispatch: each tier decodes through a registry keyed by the
+    // message header's scheme id, not by which worker happens to send
+    let leaf_reg = SchemeRegistry::from_schemes(&[h.leaf_dqsg, h.leaf_nested])?;
+    let root_reg = SchemeRegistry::from_schemes(&[h.root_dqsg, h.root_nested])?;
 
     // ---- leaf tier: Alg. 2 inside each group ----
     for (g, group) in grads.iter().enumerate() {
@@ -93,7 +97,7 @@ pub fn aggregate_round(
             flat_dqsg_bits += qf.encode(grad, &mut sf.round(round)).raw_bits();
 
             let side = if w == 0 { None } else { Some(avg.as_slice()) };
-            let decoded = q.decode(&msg, &mut stream.round(round), side)?;
+            let decoded = leaf_reg.decode(&msg, &mut stream.round(round), side)?;
             count += 1;
             let inv = 1.0 / count as f32;
             for (a, &d) in avg.iter_mut().zip(&decoded) {
@@ -114,7 +118,7 @@ pub fn aggregate_round(
         let msg = q.encode(gavg, &mut stream.round(round));
         root_bits += msg.raw_bits();
         let side = if g == 0 { None } else { Some(root_avg.as_slice()) };
-        let decoded = q.decode(&msg, &mut stream.round(round), side)?;
+        let decoded = root_reg.decode(&msg, &mut stream.round(round), side)?;
         count += 1;
         let inv = 1.0 / count as f32;
         for (a, &d) in root_avg.iter_mut().zip(&decoded) {

@@ -2,17 +2,25 @@
 //! two worker groups and sequential side-information updates).
 //!
 //! The server holds *its own* copies of every worker's seed (`DitherStream`
-//! per worker, as Alg. 1 prescribes) and its own decoder instances built
-//! from the same scheme configs — it reconstructs gradients from wire bytes
-//! + regenerated dither only.
+//! per worker, as Alg. 1 prescribes) and a [`SchemeRegistry`] of codecs —
+//! it dispatches each message on its **wire header** (validated against the
+//! worker's negotiated scheme, so a sender cannot steer the decode path)
+//! and reconstructs gradients from wire bytes + regenerated dither only.
+//!
+//! Decode order is canonicalized (ascending worker id, P1 before P2):
+//! aggregation is f32 math, so the result must be a function of the message
+//! *set*, not of arrival order — Alg. 2's side information then refines the
+//! same running average no matter how the network reorders packets.
 
 use crate::prng::DitherStream;
-use crate::quant::{GradQuantizer, Scheme};
+use crate::quant::{Scheme, SchemeId, SchemeRegistry};
 use crate::train::worker::WorkerMsg;
 
 pub struct Server {
-    /// Per-worker decoder (stateless per round; boxed per scheme).
-    decoders: Vec<Box<dyn GradQuantizer>>,
+    /// Wire-id -> codec map shared by all workers.
+    registry: SchemeRegistry,
+    /// The scheme id worker p negotiated at setup; messages must match.
+    worker_ids: Vec<SchemeId>,
     /// Per-worker shared-seed streams (the server's seed copies).
     streams: Vec<DitherStream>,
     /// Whether worker p is in the side-information-producing group P1.
@@ -23,34 +31,59 @@ pub struct Server {
 impl Server {
     /// `schemes[p]` = the scheme worker p uses; P1 = workers whose scheme
     /// does not need side info, P2 = workers whose scheme does (NDQSG).
-    pub fn new(schemes: &[Scheme], run_seed: u64, n_params: usize) -> Self {
-        let decoders: Vec<_> = schemes.iter().map(|s| s.build()).collect();
-        let in_p1 = decoders.iter().map(|d| !d.needs_side_info()).collect();
+    ///
+    /// Wire-v2 negotiation: one codec config per wire scheme id for the
+    /// whole run. Two workers using the same scheme with *different*
+    /// parameters is rejected here (the registry could not tell their
+    /// frames apart from the header alone) — use distinct schemes per
+    /// group, as Alg. 2 does.
+    pub fn new(schemes: &[Scheme], run_seed: u64, n_params: usize) -> crate::Result<Self> {
+        let registry = SchemeRegistry::from_schemes(schemes)?;
+        let worker_ids: Vec<SchemeId> = schemes.iter().map(|s| s.id()).collect();
+        let in_p1: Vec<bool> = schemes.iter().map(|s| !s.needs_side_info()).collect();
         let streams = (0..schemes.len())
             .map(|p| DitherStream::new(run_seed, p as u32))
             .collect();
-        Self {
-            decoders,
+        Ok(Self {
+            registry,
+            worker_ids,
             streams,
             in_p1,
             n_params,
-        }
+        })
     }
 
     /// Decode all P messages of one round and return the average gradient.
     ///
     /// Alg. 2 order: P1 messages first (averaged to form the initial side
     /// information), then each P2 message decoded against the *running*
-    /// average, which is updated after each decode.
+    /// average, which is updated after each decode. Within each pass the
+    /// order is ascending worker id regardless of arrival order.
     pub fn decode_round(&self, msgs: &[WorkerMsg]) -> crate::Result<Vec<f32>> {
         anyhow::ensure!(!msgs.is_empty(), "no worker messages");
+        for msg in msgs {
+            self.validate(msg)?;
+        }
+        let mut order: Vec<usize> = (0..msgs.len()).collect();
+        order.sort_by_key(|&i| msgs[i].worker);
+        for w in order.windows(2) {
+            anyhow::ensure!(
+                msgs[w[0]].worker != msgs[w[1]].worker,
+                "duplicate message from worker {} in one round",
+                msgs[w[0]].worker
+            );
+        }
+
         let mut avg = vec![0f32; self.n_params];
         let mut count = 0usize;
 
-        // pass 1: P1 (plain schemes)
-        for msg in msgs.iter().filter(|m| self.in_p1[m.worker]) {
-            let g = self.decode_one(msg, None)?;
-            accumulate(&mut avg, &g, &mut count);
+        // pass 1: P1 (plain schemes), canonical order
+        for &i in &order {
+            let msg = &msgs[i];
+            if self.in_p1[msg.worker] {
+                let g = self.decode_one(msg, None)?;
+                accumulate(&mut avg, &g, &mut count);
+            }
         }
         anyhow::ensure!(
             count > 0 || msgs.iter().all(|m| self.in_p1[m.worker]),
@@ -58,21 +91,46 @@ impl Server {
         );
 
         // pass 2: P2 (nested), sequentially refining the running average
-        for msg in msgs.iter().filter(|m| !self.in_p1[m.worker]) {
-            let g = {
-                let side = &avg;
-                self.decode_one(msg, Some(side))?
-            };
-            accumulate(&mut avg, &g, &mut count);
+        for &i in &order {
+            let msg = &msgs[i];
+            if !self.in_p1[msg.worker] {
+                let g = {
+                    let side = &avg;
+                    self.decode_one(msg, Some(side))?
+                };
+                accumulate(&mut avg, &g, &mut count);
+            }
         }
         Ok(avg)
     }
 
+    fn validate(&self, msg: &WorkerMsg) -> crate::Result<()> {
+        anyhow::ensure!(
+            msg.worker < self.worker_ids.len(),
+            "message from unknown worker {}",
+            msg.worker
+        );
+        anyhow::ensure!(
+            msg.wire.scheme == self.worker_ids[msg.worker],
+            "worker {} sent wire scheme {:?} but negotiated {:?} — refusing to \
+             decode on sender say-so",
+            msg.worker,
+            msg.wire.scheme,
+            self.worker_ids[msg.worker]
+        );
+        anyhow::ensure!(
+            msg.wire.n() == self.n_params,
+            "worker {} message carries {} coordinates, expected {}",
+            msg.worker,
+            msg.wire.n(),
+            self.n_params
+        );
+        Ok(())
+    }
+
     fn decode_one(&self, msg: &WorkerMsg, side: Option<&[f32]>) -> crate::Result<Vec<f32>> {
-        let p = msg.worker;
-        let dec = &self.decoders[p];
-        let mut gen = self.streams[p].round(msg.round);
-        dec.decode(&msg.wire, &mut gen, side)
+        let mut gen = self.streams[msg.worker].round(msg.round);
+        self.registry.decode(&msg.wire, &mut gen, side)
     }
 
     pub fn is_p1(&self, worker: usize) -> bool {
@@ -92,8 +150,9 @@ fn accumulate(avg: &mut [f32], g: &[f32], count: &mut usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::crc;
     use crate::prng::Xoshiro256;
-
+    use crate::quant::{GradQuantizer, WireMsg, CHECKSUM_BYTES};
 
     fn make_msgs(schemes: &[Scheme], gs: &[Vec<f32>], run_seed: u64, round: u64) -> Vec<WorkerMsg> {
         gs.iter()
@@ -122,7 +181,7 @@ mod tests {
             .map(|_| (0..n).map(|_| rng.next_normal() * 0.2).collect())
             .collect();
         let msgs = make_msgs(&schemes, &gs, 7, 3);
-        let server = Server::new(&schemes, 7, n);
+        let server = Server::new(&schemes, 7, n).unwrap();
         let avg = server.decode_round(&msgs).unwrap();
 
         let mut want = vec![0f32; n];
@@ -155,7 +214,7 @@ mod tests {
             Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
         ];
         let msgs = make_msgs(&schemes, &gs, 11, 0);
-        let server = Server::new(&schemes, 11, n);
+        let server = Server::new(&schemes, 11, n).unwrap();
         assert!(server.is_p1(0) && server.is_p1(1));
         assert!(!server.is_p1(2) && !server.is_p1(3));
         let avg = server.decode_round(&msgs).unwrap();
@@ -167,6 +226,51 @@ mod tests {
     }
 
     #[test]
+    fn ndqsg_side_info_arrival_order_invariant() {
+        // Alg. 2 ordering contract: decoding the same message SET in any
+        // arrival order must yield a bit-identical aggregate, because the
+        // server canonicalizes decode order (P1 by worker id, then P2 by
+        // worker id) before building/consuming side information.
+        let mut rng = Xoshiro256::new(13);
+        let n = 2500;
+        let base: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.2).collect();
+        let gs: Vec<Vec<f32>> = (0..5)
+            .map(|_| base.iter().map(|&b| b + rng.next_normal() * 0.01).collect())
+            .collect();
+        let schemes = vec![
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        ];
+        let msgs = make_msgs(&schemes, &gs, 21, 4);
+        let server = Server::new(&schemes, 21, n).unwrap();
+        let reference = server.decode_round(&msgs).unwrap();
+
+        // several adversarial arrival orders, including P2-before-P1
+        let orders: Vec<Vec<usize>> = vec![
+            vec![4, 3, 2, 1, 0],
+            vec![2, 0, 4, 1, 3],
+            vec![3, 4, 0, 2, 1],
+        ];
+        for order in orders {
+            let shuffled: Vec<WorkerMsg> = order
+                .iter()
+                .map(|&i| WorkerMsg {
+                    worker: msgs[i].worker,
+                    round: msgs[i].round,
+                    loss: msgs[i].loss,
+                    wire: msgs[i].wire.clone(),
+                })
+                .collect();
+            let server2 = Server::new(&schemes, 21, n).unwrap();
+            let got = server2.decode_round(&shuffled).unwrap();
+            assert_eq!(got, reference, "aggregate depends on arrival order {order:?}");
+        }
+    }
+
+    #[test]
     fn all_nested_rejected() {
         let schemes = vec![Scheme::Nested { d1: 0.25, ratio: 3, alpha: 1.0 }; 2];
         let mut rng = Xoshiro256::new(3);
@@ -174,25 +278,80 @@ mod tests {
             .map(|_| (0..100).map(|_| rng.next_normal()).collect())
             .collect();
         let msgs = make_msgs(&schemes, &gs, 0, 0);
-        let server = Server::new(&schemes, 0, 100);
+        let server = Server::new(&schemes, 0, 100).unwrap();
         assert!(server.decode_round(&msgs).is_err());
     }
 
     #[test]
     fn decode_is_wire_only() {
-        // corrupting a payload byte must change the decoded gradient —
-        // proof that decode reads the payload, not the cached indices.
+        // Corrupting a payload byte must be *detected* (checksum) when the
+        // message is re-framed, and a checksum-patched corruption must
+        // change the decoded gradient — proof that decode reads the payload
+        // bytes, not any cached decode.
         let schemes = vec![Scheme::Dithered { delta: 1.0 }];
         let g: Vec<f32> = (0..500).map(|i| (i as f32 * 0.01).sin()).collect();
-        let mut msgs = make_msgs(&schemes, &[g], 5, 1);
-        let server = Server::new(&schemes, 5, 500);
+        let msgs = make_msgs(&schemes, &[g].to_vec(), 5, 1);
+        let server = Server::new(&schemes, 5, 500).unwrap();
         let clean = server.decode_round(&msgs).unwrap();
+
         // flip a byte well inside the packed-index region
-        let idx = msgs[0].wire.payload.len() / 2;
-        msgs[0].wire.payload[idx] ^= 0xFF;
-        let server2 = Server::new(&schemes, 5, 500);
-        let dirty = server2.decode_round(&msgs).unwrap();
+        let mut bytes = msgs[0].wire.bytes().to_vec();
+        let idx = bytes.len() / 2;
+        bytes[idx] ^= 0xFF;
+        assert!(
+            WireMsg::parse(bytes.clone()).is_err(),
+            "checksum failed to flag a payload flip"
+        );
+
+        // a tamperer who also fixes the checksum gets a different gradient
+        let body = bytes.len() - CHECKSUM_BYTES;
+        let patched_crc = crc::checksum(&bytes[..body]).to_le_bytes();
+        bytes[body..].copy_from_slice(&patched_crc);
+        let tampered = WireMsg::parse(bytes).unwrap();
+        let msgs2 = vec![WorkerMsg {
+            worker: 0,
+            round: 1,
+            loss: 0.0,
+            wire: tampered,
+        }];
+        let server2 = Server::new(&schemes, 5, 500).unwrap();
+        let dirty = server2.decode_round(&msgs2).unwrap();
         assert_ne!(clean, dirty);
+    }
+
+    #[test]
+    fn header_scheme_spoof_rejected() {
+        // a worker negotiated DQSG but ships a TernGrad-framed message:
+        // the server must refuse rather than decode on sender say-so
+        let schemes = vec![Scheme::Dithered { delta: 1.0 }];
+        let g: Vec<f32> = (0..64).map(|i| (i as f32 * 0.1).cos()).collect();
+        let stream = DitherStream::new(5, 0);
+        let mut evil = Scheme::Terngrad.build();
+        let wire = evil.encode(&g, &mut stream.round(0));
+        let msgs = vec![WorkerMsg {
+            worker: 0,
+            round: 0,
+            loss: 0.0,
+            wire,
+        }];
+        let server = Server::new(&schemes, 5, 64).unwrap();
+        let err = server.decode_round(&msgs).unwrap_err().to_string();
+        assert!(err.contains("negotiated"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_worker_rejected() {
+        let schemes = vec![Scheme::Dithered { delta: 1.0 }; 2];
+        let g: Vec<f32> = (0..32).map(|i| i as f32 * 0.01).collect();
+        let mut msgs = make_msgs(&schemes, &[g.clone(), g].to_vec(), 3, 0);
+        msgs[1].worker = 0; // same worker twice
+        // re-encode msg 1 under worker 0's stream so only the duplication is at fault
+        let stream = DitherStream::new(3, 0);
+        let mut q = schemes[0].build();
+        msgs[1].wire = q.encode(&[0.5f32; 32], &mut stream.round(0));
+        let server = Server::new(&schemes, 3, 32).unwrap();
+        let err = server.decode_round(&msgs).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
     }
 
     #[test]
@@ -204,21 +363,39 @@ mod tests {
             vec![2.0, 2.0, 2.0],
         ];
         let msgs = make_msgs(&schemes, &gs, 0, 0);
-        let server = Server::new(&schemes, 0, 3);
+        let server = Server::new(&schemes, 0, 3).unwrap();
         let avg = server.decode_round(&msgs).unwrap();
         assert_eq!(avg, vec![2.0, 2.0, 2.0]);
     }
 
     #[test]
-    fn stale_wiremsg_struct_fields_unused() {
-        // WireMsg.indices/scales may be cleared without affecting decode
-        let schemes = vec![Scheme::Dithered { delta: 0.5 }];
-        let g: Vec<f32> = (0..200).map(|i| ((i * 7 % 13) as f32 - 6.0) / 6.0).collect();
-        let mut msgs = make_msgs(&schemes, &[g], 9, 2);
-        msgs[0].wire.indices.clear();
-        msgs[0].wire.scales.clear();
-        let server = Server::new(&schemes, 9, 200);
-        let avg = server.decode_round(&msgs).unwrap();
-        assert_eq!(avg.len(), 200);
+    fn reparsed_transport_bytes_decode_identically() {
+        // The full payload-only contract at the server boundary: messages
+        // reconstructed from raw transport bytes alone aggregate to the
+        // bit-identical average.
+        let schemes = vec![
+            Scheme::Dithered { delta: 0.5 },
+            Scheme::Dithered { delta: 0.5 },
+        ];
+        let mut rng = Xoshiro256::new(17);
+        let gs: Vec<Vec<f32>> = (0..2)
+            .map(|_| (0..200).map(|_| rng.next_normal() * 0.1).collect())
+            .collect();
+        let msgs = make_msgs(&schemes, &gs, 9, 2);
+        let server = Server::new(&schemes, 9, 200).unwrap();
+        let direct = server.decode_round(&msgs).unwrap();
+
+        let reframed: Vec<WorkerMsg> = msgs
+            .iter()
+            .map(|m| WorkerMsg {
+                worker: m.worker,
+                round: m.round,
+                loss: m.loss,
+                wire: WireMsg::parse(m.wire.bytes().to_vec()).unwrap(),
+            })
+            .collect();
+        let server2 = Server::new(&schemes, 9, 200).unwrap();
+        let via_bytes = server2.decode_round(&reframed).unwrap();
+        assert_eq!(direct, via_bytes);
     }
 }

@@ -218,6 +218,7 @@ impl Trainer {
                         per_worker_batch: cfg.per_worker_batch(),
                         scheme: self.schemes[p],
                         run_seed: cfg.seed,
+                        tensor_frames: cfg.tensor_frames,
                         task: self.task.clone(),
                     },
                     self.compute.clone(),
@@ -226,7 +227,7 @@ impl Trainer {
             })
             .collect::<crate::Result<_>>()?;
 
-        let server = Server::new(&self.schemes, cfg.seed, self.n_params);
+        let server = Server::new(&self.schemes, cfg.seed, self.n_params)?;
         let mut optimizer = opt::build(cfg.opt, cfg.lr);
         let mut comm = CommStats::new(false);
         let mut history = Vec::new();

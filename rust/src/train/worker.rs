@@ -49,6 +49,9 @@ pub struct WorkerCfg {
     pub per_worker_batch: usize,
     pub scheme: Scheme,
     pub run_seed: u64,
+    /// Wire-v2 framing: split the flat gradient into this many per-tensor
+    /// frames per message (1 = single-frame, the classic layout).
+    pub tensor_frames: usize,
     pub task: TaskData,
 }
 
@@ -145,7 +148,8 @@ fn run_round(
             compute.grad_lm(model, params, tokens, b)?
         }
     };
-    let wire = quantizer.encode(&grad, &mut dither.round(round));
+    let slices = crate::quant::frame_slices(&grad, cfg.tensor_frames);
+    let wire = quantizer.encode_tensors(&slices, &mut dither.round(round));
     Ok(WorkerMsg {
         worker: cfg.id,
         round,

@@ -1,0 +1,337 @@
+#!/usr/bin/env python3
+"""Golden wire-v2 fixture generator.
+
+Bit-exact Python replica of the Rust encode pipeline (Philox4x32-10 dither,
+f32 quantization, base-k packing, wire-v2 framing, CRC-32) used to produce
+the checked-in `.hex` snapshots that `tests/wire_v2_conformance.rs` pins the
+byte layout against. Regenerate with:
+
+    python3 rust/tests/fixtures/wire_v2/generate.py
+
+Every fixture encodes the same 8-element gradient with run_seed=7, worker=0,
+round=0. Gradient values are chosen f32-exact with kappa = 1.0 so every
+scale/divide below is an exact power-of-two operation; the remaining f32
+adds/multiplies are IEEE-754 single ops replicated with numpy.float32.
+"""
+
+import binascii
+import math
+import struct
+from pathlib import Path
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+M32 = (1 << 32) - 1
+
+G = [0.25, -0.75, 0.5, -1.0, 0.0625, -0.125, 1.0, 0.375]
+RUN_SEED, WORKER, ROUND = 7, 0, 0
+OUT_DIR = Path(__file__).resolve().parent
+
+
+# --- prng/philox.rs ---------------------------------------------------------
+
+def splitmix64(x):
+    x = (x + 0x9E3779B97F4A7C15) & M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & M64
+    return x ^ (x >> 31)
+
+
+class Philox:
+    M0, M1 = 0xD2511F53, 0xCD9E8D57
+    W0, W1 = 0x9E3779B9, 0xBB67AE85
+
+    def __init__(self, run_seed, worker, rnd):
+        k = splitmix64((run_seed ^ ((worker * 0xA24BAED4963EE407) & M64)) & M64)
+        self.key = [k & M32, (k >> 32) & M32]
+        c = (rnd & M64) << 64
+        self.counter = [(c >> (32 * i)) & M32 for i in range(4)]
+
+    def next_block(self):
+        ctr, key = list(self.counter), list(self.key)
+        for _ in range(10):
+            p0 = self.M0 * ctr[0]
+            hi0, lo0 = (p0 >> 32) & M32, p0 & M32
+            p1 = self.M1 * ctr[2]
+            hi1, lo1 = (p1 >> 32) & M32, p1 & M32
+            ctr = [hi1 ^ ctr[1] ^ key[0], lo1, hi0 ^ ctr[3] ^ key[1], lo0]
+            key[0] = (key[0] + self.W0) & M32
+            key[1] = (key[1] + self.W1) & M32
+        # 128-bit counter increment
+        c = 0
+        for i in range(4):
+            c |= self.counter[i] << (32 * i)
+        c = (c + 1) & ((1 << 128) - 1)
+        self.counter = [(c >> (32 * i)) & M32 for i in range(4)]
+        return ctr
+
+
+class DitherGen:
+    """prng/mod.rs DitherGen: buffered words + block-wise fill_dither."""
+
+    def __init__(self):
+        self.rng = Philox(RUN_SEED, WORKER, ROUND)
+        self.buf, self.pos = [0, 0, 0, 0], 4
+
+    def next_u32(self):
+        if self.pos == 4:
+            self.buf = self.rng.next_block()
+            self.pos = 0
+        v = self.buf[self.pos]
+        self.pos += 1
+        return v
+
+    def next_f32(self):
+        return np.float32(self.next_u32() >> 8) * np.float32(1.0 / 16777216.0)
+
+    def fill_dither(self, half, n):
+        half = np.float32(half)
+        scale = np.float32(2.0) * half / np.float32(16777216.0)
+        out = []
+        for _ in range(n // 4):
+            b = self.rng.next_block()
+            for j in range(4):
+                out.append(np.float32(b[j] >> 8) * scale - half)
+        for _ in range(n % 4):
+            u = np.float32(self.next_u32() >> 8) * np.float32(1.0 / 16777216.0)
+            out.append((u - np.float32(0.5)) * np.float32(2.0) * half)
+        self.pos = 4
+        return out
+
+
+# --- coding/bitio.rs + pack.rs ---------------------------------------------
+
+class BitWriter:
+    def __init__(self):
+        self.bytes = bytearray()
+        self.bit_len = 0
+
+    def push_bits(self, v, n):
+        left = n
+        while left > 0:
+            slot = self.bit_len % 8
+            if slot == 0:
+                self.bytes.append(0)
+            take = min(8 - slot, left)
+            mask = (1 << take) - 1
+            self.bytes[-1] |= ((v & mask) << slot) & 0xFF
+            v >>= take
+            left -= take
+            self.bit_len += take
+
+    def push_bit(self, b):
+        self.push_bits(1 if b else 0, 1)
+
+    def push_f32(self, x):
+        self.push_bits(struct.unpack("<I", np.float32(x).tobytes())[0], 32)
+
+
+def group_params(k):
+    digits, value = 0, 1
+    while value * k <= (1 << 64):
+        value *= k
+        digits += 1
+    return digits, (value - 1).bit_length()
+
+
+def pack_base_k_signed(indices, m, k, w):
+    digits, bits = group_params(k)
+    for lo in range(0, len(indices), digits):
+        chunk = indices[lo:lo + digits]
+        v = 0
+        for q in reversed(chunk):
+            assert -m <= q <= m
+            v = v * k + (q + m)
+        w.push_bits(v, bits)
+
+
+# --- f32 helpers ------------------------------------------------------------
+
+def rha(x):
+    """f32::round — round half away from zero, on the exact f32 value."""
+    x = float(x)
+    return math.floor(x + 0.5) if x >= 0.0 else math.ceil(x - 0.5)
+
+
+def linf(g):
+    m = np.float32(0.0)
+    for v in g:
+        a = np.float32(abs(np.float32(v)))
+        if a > m:
+            m = a
+    return m if m > 0 else np.float32(1.0)
+
+
+def uq(t, delta):
+    return np.float32(delta) * np.float32(rha(np.float32(t) / np.float32(delta)))
+
+
+# --- quantizer encodes (mirroring src/quant/*.rs) ---------------------------
+
+def enc_baseline(g):
+    w = BitWriter()
+    for v in g:
+        w.push_f32(v)
+    return w, 0, 0
+
+
+def dq_indices(g, delta, m, dither):
+    kappa = linf(g)
+    inv_kappa = np.float32(1.0) / kappa
+    inv_delta = np.float32(1.0) / np.float32(delta)
+    u = dither.fill_dither(np.float32(delta) / np.float32(2.0), len(g))
+    idx = []
+    for gi, ui in zip(g, u):
+        t = (np.float32(gi) * inv_kappa + ui) * inv_delta
+        idx.append(max(-m, min(m, rha(t))))
+    return kappa, idx
+
+
+def enc_dithered(g, delta, m):
+    d = DitherGen()
+    kappa, idx = dq_indices(g, delta, m, d)
+    w = BitWriter()
+    w.push_f32(kappa)
+    pack_base_k_signed(idx, m, 2 * m + 1, w)
+    return w, m, 1
+
+
+def enc_partitioned(g, delta, m, k_parts):
+    d = DitherGen()
+    n = len(g)
+    base, rem = n // k_parts, n % k_parts
+    scales, idx = [], []
+    off = 0
+    for i in range(k_parts):
+        ln = base + (1 if i < rem else 0)
+        kappa, part_idx = dq_indices(g[off:off + ln], delta, m, d)
+        scales.append(kappa)
+        idx.extend(part_idx)
+        off += ln
+    w = BitWriter()
+    for s in scales:
+        w.push_f32(s)
+    pack_base_k_signed(idx, m, 2 * m + 1, w)
+    return w, m, k_parts
+
+
+def enc_terngrad(g):
+    d = DitherGen()
+    # tensor::mean_var in f64, left-to-right
+    mean = 0.0
+    for v in g:
+        mean += float(np.float32(v))
+    mean /= len(g)
+    var = 0.0
+    for v in g:
+        var += (float(np.float32(v)) - mean) ** 2
+    var /= len(g)
+    c = np.float32(2.5 * math.sqrt(var))
+
+    def clip(x):
+        x = np.float32(x)
+        if c > 0:
+            return np.float32(max(np.float32(-c), min(c, x)))
+        return x
+
+    s = np.float32(0.0)
+    for x in g:
+        a = np.float32(abs(clip(x)))
+        if a > s:
+            s = a
+    if s == 0:
+        s = np.float32(1.0)
+    idx = []
+    for x in g:
+        xc = clip(x)
+        p = np.float32(abs(xc)) / s
+        if float(d.next_f32()) < float(p):
+            idx.append(1 if xc >= 0 else -1)
+        else:
+            idx.append(0)
+    w = BitWriter()
+    w.push_f32(s)
+    pack_base_k_signed(idx, 1, 3, w)
+    return w, 1, 1
+
+
+def enc_onebit(g):
+    # first round: residual = 0, so v = g; means in f64
+    sum_pos = n_pos = sum_neg = n_neg = 0
+    for v in g:
+        if np.float32(v) >= 0:
+            sum_pos += float(np.float32(v))
+            n_pos += 1
+        else:
+            sum_neg += float(np.float32(v))
+            n_neg += 1
+    mean_pos = np.float32(sum_pos / n_pos) if n_pos else np.float32(0.0)
+    mean_neg = np.float32(sum_neg / n_neg) if n_neg else np.float32(0.0)
+    w = BitWriter()
+    w.push_f32(mean_pos)
+    w.push_f32(mean_neg)
+    for v in g:
+        w.push_bit(np.float32(v) >= 0)
+    return w, 0, 2
+
+
+def enc_nested(g, d1, ratio, alpha):
+    d = DitherGen()
+    m = (ratio - 1) // 2
+    kappa = linf(g)
+    inv_kappa = np.float32(1.0) / kappa
+    d1f = np.float32(d1)
+    d2f = d1f * np.float32(ratio)
+    u = d.fill_dither(d1f / np.float32(2.0), len(g))
+    inv_d1 = np.float32(1.0) / d1f
+    idx = []
+    for gi, ui in zip(g, u):
+        t = np.float32(alpha) * (np.float32(gi) * inv_kappa) + ui
+        s = uq(t, d1f) - uq(t, d2f)
+        idx.append(max(-m, min(m, rha(np.float32(s) * inv_d1))))
+    w = BitWriter()
+    w.push_f32(kappa)
+    pack_base_k_signed(idx, m, ratio, w)
+    return w, m, 1
+
+
+# --- wire-v2 framing (src/quant/mod.rs) -------------------------------------
+
+def frame_message(scheme_id, frames):
+    """frames: list of (n, m, n_scales, BitWriter)."""
+    out = bytearray(b"NQ")
+    out.append(2)              # version
+    out.append(scheme_id)
+    out += struct.pack("<I", len(frames))
+    for n, m, n_scales, w in frames:
+        out += struct.pack("<Q", n)
+        out += struct.pack("<i", m)
+        out += struct.pack("<I", n_scales)
+        out += struct.pack("<Q", w.bit_len)
+        out += bytes(w.bytes)
+        assert len(w.bytes) == (w.bit_len + 7) // 8
+    out += struct.pack("<I", binascii.crc32(bytes(out)) & 0xFFFFFFFF)
+    return bytes(out)
+
+
+def emit(name, scheme_id, enc):
+    w, m, n_scales = enc
+    msg = frame_message(scheme_id, [(len(G), m, n_scales, w)])
+    path = OUT_DIR / f"{name}.hex"
+    path.write_text(msg.hex() + "\n")
+    print(f"{name:10s} {len(msg):4d} bytes  {msg.hex()}")
+
+
+def main():
+    emit("baseline", 0, enc_baseline(G))
+    emit("dqsg", 1, enc_dithered(G, 1.0, 1))
+    emit("dqsg_part", 2, enc_partitioned(G, 0.5, 2, 2))
+    emit("qsgd", 3, enc_dithered(G, 1.0, 1))      # Lemma 2: same payload shape
+    emit("terngrad", 4, enc_terngrad(G))
+    emit("onebit", 5, enc_onebit(G))
+    emit("nested", 6, enc_nested(G, 0.25, 3, 1.0))
+
+
+if __name__ == "__main__":
+    main()

@@ -142,9 +142,9 @@ fn pjrt_dequant_avg_matches_rust_server() {
         ndq::tensor::axpy(1.0 / p as f32, &recon, &mut rust_avg);
         let mut u = vec![0f32; N];
         stream.round(0).fill_dither(delta / 2.0, &mut u);
-        qs.extend_from_slice(&msg.indices);
+        qs.extend_from_slice(&msg.indices().unwrap());
         us.extend_from_slice(&u);
-        kappas.push(msg.scales[0]);
+        kappas.push(msg.scales().unwrap()[0]);
     }
     let outs = h
         .exec_raw(

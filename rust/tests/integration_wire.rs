@@ -13,30 +13,12 @@ use ndq::quant::{GradQuantizer, Scheme, WireMsg};
 use ndq::runtime::{ComputeService, Manifest};
 use ndq::testing::{gens, prop_check};
 
-/// Simulate a real transport: serialize the message fields to bytes and
-/// parse them back (header + payload), as a TCP framing layer would.
+/// Simulate a real transport: ship the framed wire-v2 bytes and parse them
+/// back on the receiver side. The receiver reconstructs everything —
+/// scheme, frame directory, payload — from the byte stream alone.
 fn through_the_wire(msg: &WireMsg) -> WireMsg {
-    let mut frame = Vec::new();
-    frame.extend_from_slice(&(msg.scheme as u8).to_le_bytes());
-    frame.extend_from_slice(&(msg.n as u64).to_le_bytes());
-    frame.extend_from_slice(&(msg.m as i64).to_le_bytes());
-    frame.extend_from_slice(&(msg.payload_bits as u64).to_le_bytes());
-    frame.extend_from_slice(&msg.payload);
-    // --- receiver side ---
-    let scheme = msg.scheme; // discriminant validated by decode()
-    let n = u64::from_le_bytes(frame[1..9].try_into().unwrap()) as usize;
-    let m = i64::from_le_bytes(frame[9..17].try_into().unwrap()) as i32;
-    let payload_bits = u64::from_le_bytes(frame[17..25].try_into().unwrap()) as usize;
-    let payload = frame[25..].to_vec();
-    WireMsg {
-        scheme,
-        n,
-        m,
-        payload,
-        payload_bits,
-        indices: Vec::new(), // receiver never gets these
-        scales: Vec::new(),
-    }
+    let bytes = msg.bytes().to_vec(); // what the socket carries
+    WireMsg::parse(bytes).expect("framed message must re-parse")
 }
 
 #[test]
@@ -159,7 +141,12 @@ fn index_distribution_is_peaked_at_zero_on_real_gradients() {
     let mut q = Scheme::Dithered { delta: 1.0 }.build();
     let stream = DitherStream::new(0, 0);
     let msg = q.encode(&grad, &mut stream.round(0));
-    let sym: Vec<u32> = msg.indices.iter().map(|&v| (v + 1) as u32).collect();
+    let sym: Vec<u32> = msg
+        .indices()
+        .unwrap()
+        .iter()
+        .map(|&v| (v + 1) as u32)
+        .collect();
     let hist = Histogram::from_symbols(&sym, 3);
     assert!(hist.prob(1) > 0.5, "P(index=0) = {}", hist.prob(1));
     assert!(hist.entropy_bits() < 1.58);

@@ -1,0 +1,123 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This workspace builds in environments with no crates.io access, so the
+//! subset of `anyhow` it actually uses is vendored here:
+//!
+//! * [`Error`] — an opaque, `Send + Sync` error value built from a message
+//!   or from any `std::error::Error` (the `?` conversion).
+//! * [`Result`] — `Result<T, Error>` with the same default-parameter shape
+//!   as the real crate.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the three construction macros.
+//!
+//! Unlike the real crate this shim keeps only the rendered message (no
+//! source chain, no backtrace, no downcasting); nothing in this workspace
+//! relies on those. Swapping the real `anyhow` back in is a one-line change
+//! in the workspace `Cargo.toml`.
+
+use std::fmt;
+
+/// Opaque error type carrying a rendered message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// The `?`-conversion: any std error becomes an `Error`. `Error` itself does
+// NOT implement `std::error::Error`, which is exactly what keeps this
+// blanket impl coherent with `impl From<T> for T` (the same trick the real
+// anyhow uses).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `E` defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn conversions_and_macros() {
+        fn parse(s: &str) -> crate::Result<u32> {
+            let v: u32 = s.parse()?; // From<ParseIntError>
+            crate::ensure!(v < 100, "too big: {v}");
+            if v == 13 {
+                crate::bail!("unlucky");
+            }
+            Ok(v)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        assert_eq!(parse("400").unwrap_err().to_string(), "too big: 400");
+        assert_eq!(parse("13").unwrap_err().to_string(), "unlucky");
+        let e = crate::anyhow!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+        assert_eq!(format!("{e:?}"), "code 42");
+    }
+
+    #[test]
+    fn bare_ensure_reports_condition() {
+        fn check(x: i32) -> crate::Result<()> {
+            crate::ensure!(x > 0);
+            Ok(())
+        }
+        assert!(check(1).is_ok());
+        let msg = check(-1).unwrap_err().to_string();
+        assert!(msg.contains("x > 0"), "{msg}");
+    }
+}

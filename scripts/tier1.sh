@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Tier-1 gate: formatting, lints, and the full offline test suite.
+#
+#   scripts/tier1.sh            # everything (fmt + clippy + tests)
+#   scripts/tier1.sh --fast     # tests only
+#
+# fmt/clippy run only when the corresponding cargo component is installed,
+# so the gate degrades gracefully on minimal toolchains; the test step is
+# mandatory and mirrors the ROADMAP's tier-1 command exactly.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+FAST=0
+[[ "${1:-}" == "--fast" ]] && FAST=1
+
+if [[ "$FAST" -eq 0 ]]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "== cargo fmt --check =="
+        cargo fmt --all -- --check
+    else
+        echo "== cargo fmt unavailable; skipping format check =="
+    fi
+
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== cargo clippy (all targets, -D warnings) =="
+        cargo clippy --all-targets -- -D warnings
+    else
+        echo "== cargo clippy unavailable; skipping lint =="
+    fi
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "tier-1 gate passed"
