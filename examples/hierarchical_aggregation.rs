@@ -2,26 +2,31 @@
 //! runnable): workers -> group leaders -> root, with NDQSG at both tiers.
 //!
 //!     cargo run --release --example hierarchical_aggregation -- \
-//!         [--groups 4] [--per-group 8]
+//!         [--groups 4] [--per-group 8] [--rounds 3]
 //!
 //! Uses real FC-300-100 gradients (per-worker data shards through the AOT
 //! artifact) and prints the per-tier bit bill against a flat all-DQSG
-//! deployment, plus the fidelity of the final aggregate.
+//! deployment, plus the fidelity of the final aggregate. The
+//! `HierarchyAggregator` (per-group `comm::Session`s + root session) is
+//! constructed once and reused for every round — the session API's
+//! intended lifecycle.
 
 use std::sync::Arc;
 
 use ndq::cli::Args;
 use ndq::data::{Batch, ImageDataset, ImageKind};
 use ndq::runtime::{ComputeService, Manifest};
-use ndq::train::hierarchy::{aggregate_round, true_mean, Hierarchy};
+use ndq::train::hierarchy::{true_mean, Hierarchy, HierarchyAggregator};
 
 fn main() -> ndq::Result<()> {
     let args = Args::new("hierarchical_aggregation", "two-tier NDQSG aggregation")
         .opt("groups", "4", "number of worker groups")
         .opt("per-group", "4", "workers per group")
+        .opt("rounds", "3", "aggregation rounds to run through one engine")
         .parse()?;
     let groups = args.get_usize("groups")?;
     let per_group = args.get_usize("per-group")?;
+    let rounds = args.get_usize("rounds")?.max(1);
     let workers = groups * per_group;
 
     let svc = ComputeService::start(std::path::Path::new("artifacts"))?;
@@ -30,21 +35,34 @@ fn main() -> ndq::Result<()> {
     let params = Arc::new(m.init_params("fc300")?);
     let ds = ImageDataset::new(ImageKind::Mnist, 0);
 
-    println!("computing {workers} worker gradients ({groups} groups x {per_group})...");
-    let mut grads: Vec<Vec<Vec<f32>>> = vec![Vec::new(); groups];
-    for w in 0..workers {
-        let mut batch = Batch::new(16, 784);
-        ds.train_batch(0, w, workers, 16, &mut batch);
-        let (_, g) = h.grad_image("fc300", &params, batch.x, batch.y, 16)?;
-        grads[w / per_group].push(g);
-    }
-
+    // The aggregation engine is built ONCE: per-group leader sessions, the
+    // root session, and all encoder streams persist across rounds (the
+    // comm::Session buffer pool makes the steady-state decode path
+    // allocation-free per frame).
+    let n_params = params.len();
     let topo = Hierarchy::paper_default(groups, per_group);
-    let round = aggregate_round(&topo, &grads, 42, 0)?;
+    let mut engine = HierarchyAggregator::new(&topo, 42, n_params)?;
+
+    let mut round_result = None;
+    let mut grads: Vec<Vec<Vec<f32>>> = vec![Vec::new(); groups];
+    for r in 0..rounds as u64 {
+        println!("round {r}: computing {workers} worker gradients ({groups} groups x {per_group})...");
+        for g in grads.iter_mut() {
+            g.clear();
+        }
+        for w in 0..workers {
+            let mut batch = Batch::new(16, 784);
+            ds.train_batch(r, w, workers, 16, &mut batch);
+            let (_, g) = h.grad_image("fc300", &params, batch.x, batch.y, 16)?;
+            grads[w / per_group].push(g);
+        }
+        round_result = Some(engine.round(&grads, r)?);
+    }
+    let round = round_result.expect("at least one round ran");
     let want = true_mean(&grads);
     let rmse = (ndq::tensor::sq_dist(&round.average, &want) / want.len() as f64).sqrt();
 
-    println!("\ntier bit bill (one aggregation round):");
+    println!("\ntier bit bill (last aggregation round):");
     println!(
         "  leaf (workers->leaders): {:>10.1} Kbit   ({} messages)",
         round.leaf_bits as f64 / 1000.0,

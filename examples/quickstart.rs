@@ -1,18 +1,74 @@
-//! Quickstart: train FC-300-100 on synthetic MNIST with 4 workers using
-//! DQSG (the paper's Alg. 1), and compare the communication bill against
-//! the unquantized baseline.
+//! Quickstart: the gradient-exchange session API at wire level, then a
+//! full training run — FC-300-100 on synthetic MNIST with 4 workers using
+//! DQSG (the paper's Alg. 1) — compared against the unquantized baseline.
 //!
 //!     cargo run --release --example quickstart
 //!
 //! Expected output: both runs reach similar accuracy, DQSG using ~20x
 //! fewer uplink bits (Table 1's headline).
 
+use ndq::comm::{Session, WorkerMsg};
 use ndq::config::TrainConfig;
-use ndq::quant::Scheme;
+use ndq::prng::DitherStream;
+use ndq::quant::{GradQuantizer, Scheme};
 use ndq::sim::LinkModel;
 use ndq::train::Trainer;
 
+/// The receive-side lifecycle in miniature: one `Session` per run, one
+/// `RoundAggregator` per round, messages pushed in *arrival* order.
+fn session_tour() -> ndq::Result<()> {
+    // 3 workers: two DQSG (P1) and one NDQSG (P2, decoded against the
+    // running average the P1 workers bootstrap — Alg. 2)
+    let schemes = [
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+    ];
+    let n = 8;
+    let run_seed = 42;
+    let grad = [0.30f32, -0.10, 0.70, 0.02, -0.55, 0.21, 0.05, -0.33];
+
+    // worker side: encode with the shared-seed dither stream for (worker,
+    // round) — only the framed wire bytes cross the network
+    let round = 0u64;
+    let msgs: Vec<WorkerMsg> = schemes
+        .iter()
+        .enumerate()
+        .map(|(p, scheme)| {
+            let mut q = scheme.build();
+            let stream = DitherStream::new(run_seed, p as u32);
+            WorkerMsg {
+                worker: p,
+                round,
+                loss: 0.0,
+                wire: q.encode(&grad, &mut stream.round(round)),
+            }
+        })
+        .collect();
+
+    // server side: the session owns the codec registry, the seed copies,
+    // validation, and the bit ledger; pushes may arrive in ANY order — the
+    // NDQSG message below arrives first and simply queues until its side
+    // information exists
+    let mut session = Session::new(&schemes, run_seed, n)?;
+    let mut agg = session.begin_round();
+    agg.push(msgs[2].clone())?; // P2 before P1: fine
+    agg.push(msgs[1].clone())?;
+    agg.push(msgs[0].clone())?;
+    let avg = agg.finish()?;
+    println!(
+        "session tour: {} workers -> avg[0..4] = {:?} ({} uplink bits tallied)",
+        schemes.len(),
+        &avg[..4],
+        session.stats().total_raw_bits
+    );
+    session.recycle(avg); // hand the buffer back for the next round
+    Ok(())
+}
+
 fn main() -> ndq::Result<()> {
+    session_tour()?;
+
     let rounds = std::env::var("NDQ_ROUNDS")
         .ok()
         .and_then(|s| s.parse().ok())

@@ -61,19 +61,70 @@ pub fn pack_base_k_signed(indices: &[i32], m: i32, k: u32, w: &mut BitWriter) {
     }
 }
 
+/// Streaming reader for a base-k symbol stream written by [`pack_base_k`] /
+/// [`pack_base_k_signed`]: yields symbols one at a time without
+/// materializing the whole `Vec<u32>` — the allocation-free decode path
+/// (`decode_frame_into`) pulls from this while writing reconstructions
+/// straight into the caller's output slice.
+///
+/// Reads bit-identically to the batch [`unpack_base_k`]: whole groups of
+/// `bits` bits, little-endian digit order, with the final (short) group
+/// still occupying the full group width.
+pub struct SymbolUnpacker<'r, 'b> {
+    r: &'r mut BitReader<'b>,
+    k: u64,
+    digits: usize,
+    bits: usize,
+    /// Symbols not yet yielded (including those buffered in `group`).
+    remaining: usize,
+    /// Current group value, low digit next.
+    group: u64,
+    /// Digits still buffered in `group`.
+    in_group: usize,
+}
+
+impl<'r, 'b> SymbolUnpacker<'r, 'b> {
+    pub fn new(r: &'r mut BitReader<'b>, k: u32, n: usize) -> Self {
+        let (digits, bits) = group_params(k);
+        Self {
+            r,
+            k: k as u64,
+            digits,
+            bits,
+            remaining: n,
+            group: 0,
+            in_group: 0,
+        }
+    }
+
+    /// Symbols left to yield.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// Next symbol in [0, k); errors on underflow of the bit stream or when
+    /// all `n` symbols have been consumed.
+    #[inline]
+    pub fn next_symbol(&mut self) -> crate::Result<u32> {
+        anyhow::ensure!(self.remaining > 0, "symbol stream exhausted");
+        if self.in_group == 0 {
+            self.group = self.r.read_bits(self.bits)?;
+            self.in_group = self.remaining.min(self.digits);
+        }
+        let s = (self.group % self.k) as u32;
+        self.group /= self.k;
+        self.in_group -= 1;
+        self.remaining -= 1;
+        Ok(s)
+    }
+}
+
 /// Unpack `n` symbols written by [`pack_base_k`].
 pub fn unpack_base_k(r: &mut BitReader, k: u32, n: usize) -> crate::Result<Vec<u32>> {
-    let (digits, bits) = group_params(k);
+    let mut sy = SymbolUnpacker::new(r, k, n);
     let mut out = Vec::with_capacity(n);
-    let mut remaining = n;
-    while remaining > 0 {
-        let take = remaining.min(digits);
-        let mut v = r.read_bits(bits)?;
-        for _ in 0..take {
-            out.push((v % k as u64) as u32);
-            v /= k as u64;
-        }
-        remaining -= take;
+    for _ in 0..n {
+        out.push(sy.next_symbol()?);
     }
     Ok(out)
 }
@@ -138,6 +189,61 @@ mod tests {
                 assert_eq!(unpack_base_k(&mut r, k, n).unwrap(), sym);
             }
         }
+    }
+
+    #[test]
+    fn streaming_unpacker_matches_batch_and_guards_overrun() {
+        let mut rng = Xoshiro256::new(7);
+        for k in [2u32, 3, 5, 9, 255] {
+            for n in [0usize, 1, 39, 40, 41, 777] {
+                let sym: Vec<u32> = (0..n).map(|_| rng.next_below(k)).collect();
+                let mut w = BitWriter::new();
+                pack_base_k(&sym, k, &mut w);
+                let bytes = w.into_bytes();
+
+                let mut r1 = BitReader::new(&bytes);
+                let batch = unpack_base_k(&mut r1, k, n).unwrap();
+
+                let mut r2 = BitReader::new(&bytes);
+                let mut sy = SymbolUnpacker::new(&mut r2, k, n);
+                let mut streamed = Vec::with_capacity(n);
+                for i in 0..n {
+                    assert_eq!(sy.remaining(), n - i);
+                    streamed.push(sy.next_symbol().unwrap());
+                }
+                assert_eq!(streamed, batch);
+                assert_eq!(streamed, sym);
+                // both readers end at the same bit position
+                assert_eq!(r1.bits_read(), r2.bits_read());
+                // over-reading past n is an error, not garbage
+                let mut r3 = BitReader::new(&bytes);
+                let mut sy = SymbolUnpacker::new(&mut r3, k, n);
+                for _ in 0..n {
+                    sy.next_symbol().unwrap();
+                }
+                assert!(sy.next_symbol().is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_unpacker_errors_on_truncated_stream() {
+        let sym: Vec<u32> = vec![1; 100];
+        let mut w = BitWriter::new();
+        pack_base_k(&sym, 3, &mut w);
+        let bytes = w.into_bytes();
+        let short = &bytes[..bytes.len() / 2];
+        let mut r = BitReader::new(short);
+        let mut sy = SymbolUnpacker::new(&mut r, 3, 100);
+        let mut got = 0usize;
+        let err = loop {
+            match sy.next_symbol() {
+                Ok(_) => got += 1,
+                Err(e) => break e,
+            }
+        };
+        assert!(got < 100, "truncated stream decoded fully");
+        assert!(err.to_string().contains("out of data"), "{err}");
     }
 
     #[test]

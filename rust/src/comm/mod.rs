@@ -1,0 +1,51 @@
+//! The gradient-exchange subsystem: one place that owns the full lifecycle
+//! of quantized-gradient communication — scheme negotiation, per-worker
+//! shared-seed dither streams, wire validation, Alg.-1/Alg.-2 decode +
+//! aggregation, and bit accounting.
+//!
+//! Before this module existed, the Alg. 1/2 contract (shared-seed dither
+//! keyed by `(worker, round)`, P1 workers bootstrapping the side
+//! information that P2's nested decoders refine) was re-implemented with
+//! divergent details by the synchronous server, the async trainer, and the
+//! hierarchical aggregator. All three now drive a [`Session`]:
+//!
+//! * [`Session`] — constructed **once** per run from the negotiated
+//!   [`crate::quant::Scheme`] table and the run seed. Owns the
+//!   [`crate::quant::SchemeRegistry`] (wire-header dispatch), one
+//!   [`crate::prng::DitherStream`] per worker (the server's seed copies of
+//!   Alg. 1), all message validation, the reusable decode scratch, and the
+//!   [`CommStats`] bit ledger — callers can no longer forget to account a
+//!   message, because accounting happens inside the session.
+//! * [`RoundAggregator`] — a streaming state machine for one synchronous
+//!   round: [`RoundAggregator::push`] accepts [`WorkerMsg`]s in **arrival
+//!   order** and internally canonicalizes Alg. 2, so the finished average
+//!   is a pure function of the message *set* (bit-identical under any
+//!   network reordering).
+//! * [`CommStats`] — the Tables-1/2 communication metrics, recorded by the
+//!   session on every accepted upload.
+//!
+//! The decode hot path is allocation-free per frame: payloads decode
+//! through [`crate::quant::GradQuantizer::decode_frame_into`] into pooled
+//! buffers that the session reuses across messages *and* rounds.
+
+mod session;
+mod stats;
+
+pub use self::session::{RoundAggregator, Session};
+pub use self::stats::CommStats;
+
+use crate::quant::WireMsg;
+
+/// A worker's per-round result message — exactly what crosses the
+/// "network": the framed wire bytes plus the routing envelope (worker id +
+/// round counter, which key the shared-seed dither stream) and the scalar
+/// training loss piggybacked for reporting.
+#[derive(Debug, Clone)]
+pub struct WorkerMsg {
+    pub worker: usize,
+    /// Round (sync trainer) or worker-local step (async trainer): whatever
+    /// counter the *encoder* keyed its dither stream with.
+    pub round: u64,
+    pub loss: f32,
+    pub wire: WireMsg,
+}

@@ -1,0 +1,680 @@
+//! [`Session`] + [`RoundAggregator`]: the canonical implementation of the
+//! paper's Alg. 1 (shared-seed dithered decode) and Alg. 2 (nested decode
+//! against sequentially-refined side information).
+//!
+//! # Streaming Alg. 2 with a deterministic result
+//!
+//! Aggregation is f32 math, so the fold order must be canonical for the
+//! result to be a function of the message *set* rather than of packet
+//! arrival order. The canonical order (inherited from the original batch
+//! server, which sorted every round before decoding) is: P1 messages fold
+//! into the running average in ascending worker id, then P2 (NDQSG)
+//! messages decode against that running average — each refining it — in
+//! ascending worker id.
+//!
+//! [`RoundAggregator::push`] accepts messages in arrival order and does the
+//! expensive work (payload decode) at the earliest moment the canonical
+//! order permits:
+//!
+//! * **P1** messages decode immediately on arrival — decode only touches
+//!   the per-worker dither stream, so it is order-free — into a pooled
+//!   buffer. The contiguous run of decoded P1 workers starting at the
+//!   smallest id folds into the running average right away and the buffers
+//!   return to the pool; out-of-order arrivals wait, decoded, for the gap
+//!   to fill (or for [`RoundAggregator::finish`], which folds whatever
+//!   arrived, still in ascending order).
+//! * **P2** messages queue *undecoded* (their input — the side information
+//!   — does not exist yet) until the bootstrap is ready: every P1 worker of
+//!   the session folded and at least one P1 message seen. They then drain
+//!   in ascending worker id, each decoding against the current running
+//!   average through one reused scratch buffer.
+//!
+//! The running-average buffer, the P1 buffer pool, and the decode scratch
+//! all persist inside the [`Session`] across rounds: the steady-state
+//! decode path performs **zero per-frame heap allocations** (see
+//! [`crate::quant::GradQuantizer::decode_frame_into`]).
+
+use super::{CommStats, WorkerMsg};
+use crate::prng::DitherStream;
+use crate::quant::{GradQuantizer, Scheme, SchemeId, SchemeRegistry, WireMsg};
+
+/// A negotiated gradient-exchange endpoint (the receiver side of Fig. 2):
+/// one per training run, shared by every round.
+///
+/// `schemes[p]` is the scheme worker `p` negotiated at setup; P1 = workers
+/// whose scheme does not need side info, P2 = workers whose scheme does
+/// (NDQSG). Wire-v2 negotiation: one codec config per wire scheme id for
+/// the whole run — two workers using the same scheme with *different*
+/// parameters is rejected at construction (the registry could not tell
+/// their frames apart from the header alone); use distinct schemes per
+/// group, as Alg. 2 does.
+pub struct Session {
+    registry: SchemeRegistry,
+    /// The scheme id worker p negotiated; messages must match.
+    worker_ids: Vec<SchemeId>,
+    /// Whether worker p is in the side-information-producing group P1.
+    in_p1: Vec<bool>,
+    /// Per-worker shared-seed streams (the server's seed copies, Alg. 1).
+    streams: Vec<DitherStream>,
+    n_params: usize,
+    stats: CommStats,
+
+    // ---- per-round aggregation state, reset by `begin_round` ----
+    /// The running average (Alg. 2's side information once P1 folded).
+    avg: Vec<f32>,
+    /// Messages folded into `avg` so far.
+    count: usize,
+    /// Messages accepted this round (folded or still pending/queued).
+    msgs_seen: usize,
+    /// Per-worker duplicate guard.
+    seen: Vec<bool>,
+    /// Decoded-but-not-yet-folded P1 gradients (out-of-order arrivals).
+    pending_p1: Vec<Option<Vec<f32>>>,
+    /// Queued, still-undecoded P2 messages awaiting the bootstrap.
+    queued_p2: Vec<Option<WorkerMsg>>,
+    /// P1 worker ids, ascending; `next_p1` indexes the first unfolded one.
+    p1_workers: Vec<usize>,
+    next_p1: usize,
+    /// P2 worker ids, ascending; `next_p2` indexes the first undrained one.
+    p2_workers: Vec<usize>,
+    next_p2: usize,
+
+    // ---- reusable scratch (persists across rounds) ----
+    /// Pool of n_params-sized buffers for out-of-order P1 decodes.
+    buf_pool: Vec<Vec<f32>>,
+    /// Scratch for P2 and single-message decodes.
+    decode_buf: Vec<f32>,
+}
+
+impl Session {
+    /// Session with dither streams keyed `(run_seed, p)` for worker index
+    /// `p` — the flat-topology default shared with
+    /// [`crate::train::worker::Worker`].
+    pub fn new(schemes: &[Scheme], run_seed: u64, n_params: usize) -> crate::Result<Session> {
+        let keys: Vec<u32> = (0..schemes.len() as u32).collect();
+        Session::with_stream_keys(schemes, run_seed, n_params, &keys)
+    }
+
+    /// Session whose worker `p` regenerates dither from
+    /// `DitherStream::new(run_seed, keys[p])` — hierarchical tiers use this
+    /// to key leaf workers by *global* worker id and leaders by a disjoint
+    /// id range while keeping local worker indices dense.
+    pub fn with_stream_keys(
+        schemes: &[Scheme],
+        run_seed: u64,
+        n_params: usize,
+        keys: &[u32],
+    ) -> crate::Result<Session> {
+        anyhow::ensure!(
+            keys.len() == schemes.len(),
+            "{} stream keys for {} workers",
+            keys.len(),
+            schemes.len()
+        );
+        let registry = SchemeRegistry::from_schemes(schemes)?;
+        let worker_ids: Vec<SchemeId> = schemes.iter().map(|s| s.id()).collect();
+        let in_p1: Vec<bool> = schemes.iter().map(|s| !s.needs_side_info()).collect();
+        let streams: Vec<DitherStream> = keys
+            .iter()
+            .map(|&k| DitherStream::new(run_seed, k))
+            .collect();
+        let p1_workers: Vec<usize> = (0..schemes.len()).filter(|&p| in_p1[p]).collect();
+        let p2_workers: Vec<usize> = (0..schemes.len()).filter(|&p| !in_p1[p]).collect();
+        let workers = schemes.len();
+        Ok(Session {
+            registry,
+            worker_ids,
+            in_p1,
+            streams,
+            n_params,
+            stats: CommStats::new(false),
+            avg: vec![0f32; n_params],
+            count: 0,
+            msgs_seen: 0,
+            seen: vec![false; workers],
+            pending_p1: (0..workers).map(|_| None).collect(),
+            queued_p2: (0..workers).map(|_| None).collect(),
+            p1_workers,
+            next_p1: 0,
+            p2_workers,
+            next_p2: 0,
+            buf_pool: Vec::new(),
+            decode_buf: vec![0f32; n_params],
+        })
+    }
+
+    /// Number of negotiated workers.
+    pub fn workers(&self) -> usize {
+        self.worker_ids.len()
+    }
+
+    /// Gradient dimensionality every message must carry.
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// Whether worker p is in the side-information-producing group P1.
+    pub fn is_p1(&self, worker: usize) -> bool {
+        self.in_p1[worker]
+    }
+
+    /// The communication ledger (every accepted upload is recorded here).
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    /// Record one server -> workers broadcast (bits).
+    pub fn record_broadcast(&mut self, bits: f64) {
+        self.stats.record_broadcast(bits);
+    }
+
+    /// Turn the per-message AAC measurement on/off (Table-2 runs).
+    pub fn set_measure_aac(&mut self, on: bool) {
+        self.stats.measure_aac = on;
+    }
+
+    /// Hand a retired average buffer back for reuse (optional — the next
+    /// round allocates one otherwise).
+    pub fn recycle(&mut self, mut buf: Vec<f32>) {
+        buf.clear();
+        self.buf_pool.push(buf);
+    }
+
+    /// Start a synchronous round: resets any abandoned round state and
+    /// returns the streaming aggregator for this round's messages.
+    pub fn begin_round(&mut self) -> RoundAggregator<'_> {
+        if self.avg.capacity() == 0 {
+            if let Some(buf) = self.buf_pool.pop() {
+                self.avg = buf;
+            }
+        }
+        self.avg.clear();
+        self.avg.resize(self.n_params, 0.0);
+        self.count = 0;
+        self.msgs_seen = 0;
+        for s in self.seen.iter_mut() {
+            *s = false;
+        }
+        for p in 0..self.pending_p1.len() {
+            if let Some(buf) = self.pending_p1[p].take() {
+                self.buf_pool.push(buf);
+            }
+        }
+        for q in self.queued_p2.iter_mut() {
+            *q = None;
+        }
+        self.next_p1 = 0;
+        self.next_p2 = 0;
+        RoundAggregator { s: self }
+    }
+
+    /// Batch convenience (and the old `Server::decode_round` contract):
+    /// aggregate a whole round from a message slice. P1 messages decode
+    /// straight from the borrowed slice; only P2 messages that must wait
+    /// for their side information get their wire bytes cloned into the
+    /// queue. Streaming callers use [`Session::begin_round`] +
+    /// [`RoundAggregator::push`] and pay no clone at all.
+    pub fn decode_round(&mut self, msgs: &[WorkerMsg]) -> crate::Result<Vec<f32>> {
+        let mut agg = self.begin_round();
+        for m in msgs {
+            agg.s.push_ref(m)?;
+        }
+        agg.finish()
+    }
+
+    /// Decode one message outside any round (the async-trainer path): no
+    /// side information exists, so schemes that need it are rejected with a
+    /// clear error. Returns the session's reused decode buffer — valid
+    /// until the next session call — so the caller can scale it in place
+    /// without an allocation.
+    pub fn decode_message(
+        &mut self,
+        worker: usize,
+        round: u64,
+        wire: &WireMsg,
+    ) -> crate::Result<&mut [f32]> {
+        self.validate(worker, wire)?;
+        anyhow::ensure!(
+            !self.registry.decoder(wire.scheme)?.needs_side_info(),
+            "scheme {:?} needs Alg.-2 side information, which single-message \
+             decode cannot supply — use a synchronous round",
+            wire.scheme
+        );
+        self.stats.record_upload(wire);
+        let mut gen = self.streams[worker].round(round);
+        self.registry
+            .decode_into(wire, &mut gen, None, &mut self.decode_buf)?;
+        Ok(&mut self.decode_buf)
+    }
+
+    // ---- internals ----
+
+    fn validate(&self, worker: usize, wire: &WireMsg) -> crate::Result<()> {
+        anyhow::ensure!(
+            worker < self.worker_ids.len(),
+            "message from unknown worker {worker}"
+        );
+        anyhow::ensure!(
+            wire.scheme == self.worker_ids[worker],
+            "worker {} sent wire scheme {:?} but negotiated {:?} — refusing to \
+             decode on sender say-so",
+            worker,
+            wire.scheme,
+            self.worker_ids[worker]
+        );
+        anyhow::ensure!(
+            wire.n() == self.n_params,
+            "worker {} message carries {} coordinates, expected {}",
+            worker,
+            wire.n(),
+            self.n_params
+        );
+        Ok(())
+    }
+
+    fn push_msg(&mut self, msg: WorkerMsg) -> crate::Result<()> {
+        if self.accept(&msg)? {
+            // P2: park (taking ownership) until the bootstrap exists
+            let w = msg.worker;
+            self.queued_p2[w] = Some(msg);
+        }
+        if self.bootstrap_ready() {
+            self.advance_p2()?;
+        }
+        Ok(())
+    }
+
+    /// Borrowed-message variant for the batch slice API: identical to
+    /// [`Session::push_msg`] except a P2 message (which must outlive the
+    /// call while it waits for its side information) is cloned into the
+    /// queue — P1 messages decode from the borrow and cost nothing extra.
+    fn push_ref(&mut self, msg: &WorkerMsg) -> crate::Result<()> {
+        if self.accept(msg)? {
+            self.queued_p2[msg.worker] = Some(msg.clone());
+        }
+        if self.bootstrap_ready() {
+            self.advance_p2()?;
+        }
+        Ok(())
+    }
+
+    /// Shared push front half: validate, tally, and — for P1 — decode and
+    /// fold as far as the canonical order allows. Returns whether the
+    /// message is P2 and still needs to be queued by the caller.
+    fn accept(&mut self, msg: &WorkerMsg) -> crate::Result<bool> {
+        self.validate(msg.worker, &msg.wire)?;
+        anyhow::ensure!(
+            !self.seen[msg.worker],
+            "duplicate message from worker {} in one round",
+            msg.worker
+        );
+        self.seen[msg.worker] = true;
+        self.msgs_seen += 1;
+        self.stats.record_upload(&msg.wire);
+
+        if self.in_p1[msg.worker] {
+            // P1: decode now (order-free), fold as soon as canonical
+            let mut buf = self.buf_pool.pop().unwrap_or_default();
+            buf.resize(self.n_params, 0.0);
+            let mut gen = self.streams[msg.worker].round(msg.round);
+            self.registry.decode_into(&msg.wire, &mut gen, None, &mut buf)?;
+            self.pending_p1[msg.worker] = Some(buf);
+            self.advance_p1();
+            Ok(false)
+        } else {
+            Ok(true)
+        }
+    }
+
+    /// Fold the contiguous run of decoded P1 workers (ascending id).
+    fn advance_p1(&mut self) {
+        while self.next_p1 < self.p1_workers.len() {
+            let w = self.p1_workers[self.next_p1];
+            match self.pending_p1[w].take() {
+                Some(buf) => {
+                    accumulate(&mut self.avg, &buf, &mut self.count);
+                    self.buf_pool.push(buf);
+                    self.next_p1 += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Alg. 2 precondition for P2 decodes mid-round: every P1 worker of the
+    /// session folded, and at least one P1 message actually arrived.
+    fn bootstrap_ready(&self) -> bool {
+        self.next_p1 == self.p1_workers.len() && self.count > 0
+    }
+
+    /// Drain the contiguous run of queued P2 workers (ascending id), each
+    /// decoding against — then refining — the running average.
+    fn advance_p2(&mut self) -> crate::Result<()> {
+        while self.next_p2 < self.p2_workers.len() {
+            let w = self.p2_workers[self.next_p2];
+            match self.queued_p2[w].take() {
+                Some(msg) => {
+                    self.decode_p2_and_fold(&msg)?;
+                    self.next_p2 += 1;
+                }
+                None => break,
+            }
+        }
+        Ok(())
+    }
+
+    fn decode_p2_and_fold(&mut self, msg: &WorkerMsg) -> crate::Result<()> {
+        let mut gen = self.streams[msg.worker].round(msg.round);
+        self.registry.decode_into(
+            &msg.wire,
+            &mut gen,
+            Some(&self.avg),
+            &mut self.decode_buf,
+        )?;
+        accumulate(&mut self.avg, &self.decode_buf, &mut self.count);
+        Ok(())
+    }
+
+    fn finish_round(&mut self) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(self.msgs_seen > 0, "no worker messages");
+        // fold P1 stragglers past any absent-worker gap, still ascending
+        for i in self.next_p1..self.p1_workers.len() {
+            let w = self.p1_workers[i];
+            if let Some(buf) = self.pending_p1[w].take() {
+                accumulate(&mut self.avg, &buf, &mut self.count);
+                self.buf_pool.push(buf);
+            }
+        }
+        self.next_p1 = self.p1_workers.len();
+        // Alg. 2: a round with P2 messages but no P1 contribution has no
+        // side information to decode against — refuse
+        let any_p2 = (self.next_p2..self.p2_workers.len())
+            .any(|i| self.queued_p2[self.p2_workers[i]].is_some());
+        if any_p2 {
+            anyhow::ensure!(
+                self.count > 0,
+                "NDQSG requires at least one P1 worker to bootstrap side \
+                 information (Alg. 2)"
+            );
+        }
+        // drain queued P2 ascending, skipping absentees
+        for i in self.next_p2..self.p2_workers.len() {
+            let w = self.p2_workers[i];
+            if let Some(msg) = self.queued_p2[w].take() {
+                self.decode_p2_and_fold(&msg)?;
+            }
+        }
+        self.next_p2 = self.p2_workers.len();
+        self.msgs_seen = 0;
+        Ok(std::mem::take(&mut self.avg))
+    }
+}
+
+/// Streaming aggregator for one synchronous round, created by
+/// [`Session::begin_round`]. Push messages in any (arrival) order; the
+/// finished average is bit-identical to the canonical-order batch decode of
+/// the same message set. Dropping the aggregator without calling `finish`
+/// abandons the round; the next `begin_round` resets cleanly.
+pub struct RoundAggregator<'s> {
+    s: &'s mut Session,
+}
+
+impl RoundAggregator<'_> {
+    /// Accept one worker message: validates (worker identity, negotiated
+    /// scheme, dimensionality, duplicates), records its bits in the
+    /// session's [`CommStats`], and decodes/folds as far as the canonical
+    /// Alg.-2 order allows.
+    pub fn push(&mut self, msg: WorkerMsg) -> crate::Result<()> {
+        self.s.push_msg(msg)
+    }
+
+    /// Messages accepted so far this round.
+    pub fn pushed(&self) -> usize {
+        self.s.msgs_seen
+    }
+
+    /// Complete the round: fold everything still outstanding in canonical
+    /// order and return the average gradient. The returned buffer can be
+    /// handed back via [`Session::recycle`] to keep the round loop
+    /// allocation-free.
+    pub fn finish(self) -> crate::Result<Vec<f32>> {
+        self.s.finish_round()
+    }
+}
+
+/// Running mean: avg_{k+1} = avg_k + (g - avg_k) / (k+1).
+///
+/// This exact update (and the canonical fold order above) is what the
+/// arrival-order-invariance tests pin — change either and historical runs
+/// stop being reproducible.
+fn accumulate(avg: &mut [f32], g: &[f32], count: &mut usize) {
+    *count += 1;
+    let inv = 1.0 / *count as f32;
+    for (a, &gi) in avg.iter_mut().zip(g) {
+        *a += (gi - *a) * inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256;
+    use crate::quant::GradQuantizer;
+
+    fn make_msgs(
+        schemes: &[Scheme],
+        gs: &[Vec<f32>],
+        run_seed: u64,
+        round: u64,
+    ) -> Vec<WorkerMsg> {
+        gs.iter()
+            .enumerate()
+            .map(|(p, g)| {
+                let mut q = schemes[p].build();
+                let stream = DitherStream::new(run_seed, p as u32);
+                let wire = q.encode(g, &mut stream.round(round));
+                WorkerMsg {
+                    worker: p,
+                    round,
+                    loss: 0.0,
+                    wire,
+                }
+            })
+            .collect()
+    }
+
+    fn correlated(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Xoshiro256::new(seed);
+        let base: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.2).collect();
+        (0..p)
+            .map(|_| {
+                base.iter()
+                    .map(|&b| b + rng.next_normal() * 0.01)
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn mixed_schemes() -> Vec<Scheme> {
+        vec![
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        ]
+    }
+
+    #[test]
+    fn streaming_matches_batch_any_arrival_order() {
+        let n = 1200;
+        let schemes = mixed_schemes();
+        let gs = correlated(n, schemes.len(), 3);
+        let msgs = make_msgs(&schemes, &gs, 17, 2);
+        let mut session = Session::new(&schemes, 17, n).unwrap();
+        let reference = session.decode_round(&msgs).unwrap();
+
+        for order in [
+            vec![0usize, 1, 2, 3],
+            vec![3, 2, 1, 0],
+            vec![2, 0, 3, 1],
+            vec![1, 3, 0, 2],
+        ] {
+            let mut agg = session.begin_round();
+            for &i in &order {
+                agg.push(msgs[i].clone()).unwrap();
+            }
+            let got = agg.finish().unwrap();
+            assert_eq!(got, reference, "arrival order {order:?} changed the result");
+            session.recycle(got);
+        }
+    }
+
+    #[test]
+    fn rounds_reuse_scratch_and_stay_independent() {
+        let n = 600;
+        let schemes = mixed_schemes();
+        let mut session = Session::new(&schemes, 9, n).unwrap();
+        let mut per_round = Vec::new();
+        for round in 0..3u64 {
+            let gs = correlated(n, schemes.len(), 100 + round);
+            let msgs = make_msgs(&schemes, &gs, 9, round);
+            per_round.push(session.decode_round(&msgs).unwrap());
+        }
+        // same rounds through a fresh session decode identically: no state
+        // bleeds between rounds through the reused buffers
+        let mut fresh = Session::new(&schemes, 9, n).unwrap();
+        for round in 0..3u64 {
+            let gs = correlated(n, schemes.len(), 100 + round);
+            let msgs = make_msgs(&schemes, &gs, 9, round);
+            assert_eq!(fresh.decode_round(&msgs).unwrap(), per_round[round as usize]);
+        }
+        assert_eq!(session.stats().messages, 3 * schemes.len() as u64);
+    }
+
+    #[test]
+    fn all_p2_round_rejected_without_bootstrap() {
+        let schemes = vec![
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        ];
+        let gs = correlated(200, 2, 5);
+        let msgs = make_msgs(&schemes, &gs, 1, 0);
+        let mut session = Session::new(&schemes, 1, 200).unwrap();
+        // only the P2 message arrives: no side information to decode against
+        let mut agg = session.begin_round();
+        agg.push(msgs[1].clone()).unwrap();
+        let err = agg.finish().unwrap_err().to_string();
+        assert!(err.contains("bootstrap"), "{err}");
+        // the full set is fine afterwards (abandoned round resets cleanly)
+        assert!(session.decode_round(&msgs).is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_messages() {
+        let schemes = vec![Scheme::Dithered { delta: 1.0 }; 2];
+        let gs = correlated(64, 2, 8);
+        let msgs = make_msgs(&schemes, &gs, 4, 0);
+        let mut session = Session::new(&schemes, 4, 64).unwrap();
+
+        // duplicate worker
+        let mut agg = session.begin_round();
+        agg.push(msgs[0].clone()).unwrap();
+        let err = agg.push(msgs[0].clone()).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+
+        // unknown worker
+        let mut agg = session.begin_round();
+        let mut bad = msgs[0].clone();
+        bad.worker = 9;
+        let err = agg.push(bad).unwrap_err().to_string();
+        assert!(err.contains("unknown worker"), "{err}");
+
+        // spoofed scheme header
+        let mut evil = Scheme::Terngrad.build();
+        let wire = evil.encode(&gs[0], &mut DitherStream::new(4, 0).round(0));
+        let mut agg = session.begin_round();
+        let err = agg
+            .push(WorkerMsg {
+                worker: 0,
+                round: 0,
+                loss: 0.0,
+                wire,
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("negotiated"), "{err}");
+
+        // wrong dimensionality
+        let mut q = schemes[0].build();
+        let wire = q.encode(&[1.0f32; 32], &mut DitherStream::new(4, 0).round(0));
+        let mut agg = session.begin_round();
+        let err = agg
+            .push(WorkerMsg {
+                worker: 0,
+                round: 0,
+                loss: 0.0,
+                wire,
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected 64"), "{err}");
+
+        // empty round
+        let agg = session.begin_round();
+        assert!(agg.finish().is_err());
+    }
+
+    #[test]
+    fn decode_message_rejects_side_info_schemes() {
+        let schemes = vec![Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 }];
+        let gs = correlated(50, 1, 2);
+        let msgs = make_msgs(&schemes, &gs, 0, 0);
+        let mut session = Session::new(&schemes, 0, 50).unwrap();
+        let err = session
+            .decode_message(0, 0, &msgs[0].wire)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("side information"), "{err}");
+    }
+
+    #[test]
+    fn decode_message_matches_registry_decode() {
+        let schemes = vec![Scheme::Dithered { delta: 0.5 }];
+        let gs = correlated(300, 1, 6);
+        let msgs = make_msgs(&schemes, &gs, 11, 7);
+        let mut session = Session::new(&schemes, 11, 300).unwrap();
+        let via_session = session.decode_message(0, 7, &msgs[0].wire).unwrap().to_vec();
+        let reg = SchemeRegistry::from_schemes(&schemes).unwrap();
+        let direct = reg
+            .decode(&msgs[0].wire, &mut DitherStream::new(11, 0).round(7), None)
+            .unwrap();
+        assert_eq!(via_session, direct);
+        assert_eq!(session.stats().messages, 1);
+    }
+
+    #[test]
+    fn stream_keys_relocate_dither_lanes() {
+        // a session keyed by global worker ids decodes messages encoded
+        // under those ids, and NOT messages encoded under dense local ids
+        let scheme = [Scheme::Dithered { delta: 1.0 / 3.0 }];
+        let g = correlated(400, 1, 9).remove(0);
+        let mut q = scheme[0].build();
+        let global_id = 37u32;
+        let wire = q.encode(&g, &mut DitherStream::new(8, global_id).round(0));
+        let mut keyed = Session::with_stream_keys(&scheme, 8, 400, &[global_id]).unwrap();
+        let msg = WorkerMsg {
+            worker: 0,
+            round: 0,
+            loss: 0.0,
+            wire,
+        };
+        let good = keyed.decode_round(&[msg.clone()]).unwrap();
+        let kappa = crate::tensor::linf_norm(&g);
+        for (a, b) in g.iter().zip(&good) {
+            assert!((a - b).abs() <= kappa / 6.0 + 1e-5);
+        }
+        let mut dense = Session::new(&scheme, 8, 400).unwrap();
+        let bad = dense.decode_round(&[msg]).unwrap();
+        assert_ne!(good, bad, "wrong dither lane still reconstructed exactly");
+    }
+}

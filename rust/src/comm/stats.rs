@@ -5,6 +5,10 @@
 //! (Table 2's limit), the full framed wire size (v2 headers + checksum
 //! included), and — when `measure_aac` is on — the *actual* adaptive
 //! arithmetic coder output (Table 2's achieved number, "within 5%").
+//!
+//! Uplink recording is owned by [`super::Session`]: every message accepted
+//! by `push`/`decode_message` is tallied there, so the three aggregation
+//! paths cannot drift apart in what they count.
 
 use crate::quant::WireMsg;
 use crate::stats::Running;

@@ -8,10 +8,12 @@
 //!   the Pallas quantization kernels, AOT-lowered to HLO text artifacts.
 //! * **Layer 3** (this crate): the distributed-training coordinator — the
 //!   full quantizer suite ([`quant`]), bit-exact wire encoding ([`coding`]),
-//!   shared-seed dither reproduction ([`prng`]), the synchronous
-//!   parameter-server protocol ([`train`]), optimizers ([`opt`]), synthetic
-//!   datasets ([`data`]), and the PJRT runtime that executes the AOT
-//!   artifacts ([`runtime`]). Python never runs on the training path.
+//!   shared-seed dither reproduction ([`prng`]), the gradient-exchange
+//!   session layer ([`comm`]: streaming Alg.-2 aggregation + bit
+//!   accounting), the synchronous parameter-server protocol ([`train`]),
+//!   optimizers ([`opt`]), synthetic datasets ([`data`]), and the PJRT
+//!   runtime that executes the AOT artifacts ([`runtime`]). Python never
+//!   runs on the training path.
 //!
 //! ## Quick tour
 //!
@@ -43,6 +45,7 @@
 
 pub mod cli;
 pub mod coding;
+pub mod comm;
 pub mod config;
 pub mod data;
 pub mod opt;

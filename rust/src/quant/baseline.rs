@@ -28,13 +28,14 @@ impl GradQuantizer for BaselineQuantizer {
         (0, 0)
     }
 
-    fn decode_frame(
+    fn decode_frame_into(
         &self,
         frame: &Frame,
         payload: &[u8],
         _dither: &mut DitherGen,
         _side: Option<&[f32]>,
-    ) -> crate::Result<Vec<f32>> {
+        out: &mut [f32],
+    ) -> crate::Result<()> {
         anyhow::ensure!(
             frame.m == 0 && frame.n_scales == 0,
             "malformed baseline frame header (m={}, n_scales={})",
@@ -47,8 +48,17 @@ impl GradQuantizer for BaselineQuantizer {
             frame.payload_bits,
             frame.n
         );
+        anyhow::ensure!(
+            out.len() == frame.n,
+            "decode buffer holds {} coordinates, frame carries {}",
+            out.len(),
+            frame.n
+        );
         let mut r = BitReader::new(payload);
-        (0..frame.n).map(|_| r.read_f32()).collect()
+        for v in out.iter_mut() {
+            *v = r.read_f32()?;
+        }
+        Ok(())
     }
 }
 

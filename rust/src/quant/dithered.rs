@@ -103,13 +103,14 @@ impl GradQuantizer for DitheredQuantizer {
         (self.m, 1)
     }
 
-    fn decode_frame(
+    fn decode_frame_into(
         &self,
         frame: &Frame,
         payload: &[u8],
         dither: &mut DitherGen,
         _side: Option<&[f32]>,
-    ) -> crate::Result<Vec<f32>> {
+        out: &mut [f32],
+    ) -> crate::Result<()> {
         anyhow::ensure!(
             frame.m == self.m && frame.n_scales == 1,
             "DQSG frame header (m={}, n_scales={}) does not match decoder config (m={})",
@@ -117,14 +118,23 @@ impl GradQuantizer for DitheredQuantizer {
             frame.n_scales,
             self.m
         );
+        anyhow::ensure!(
+            out.len() == frame.n,
+            "decode buffer holds {} coordinates, frame carries {}",
+            out.len(),
+            frame.n
+        );
         let mut r = BitReader::new(payload);
         let kappa = r.read_f32()?;
-        let symbols = pack::unpack_base_k(&mut r, self.alphabet(), frame.n)?;
-        let indices: Vec<i32> = symbols
-            .into_iter()
-            .map(|s| pack::symbol_to_signed(s, self.m))
-            .collect();
-        Ok(self.dequantize(&indices, kappa, dither))
+        // regenerated dither lands in `out` first, then each element is
+        // combined in place (u_i -> kappa * (Delta q_i - u_i)): no scratch
+        dither.fill_dither(self.delta / 2.0, out);
+        let mut sy = pack::SymbolUnpacker::new(&mut r, self.alphabet(), frame.n);
+        for v in out.iter_mut() {
+            let q = pack::symbol_to_signed(sy.next_symbol()?, self.m);
+            *v = kappa * (self.delta * q as f32 - *v);
+        }
+        Ok(())
     }
 
     fn uses_shared_dither(&self) -> bool {

@@ -463,16 +463,43 @@ pub trait GradQuantizer: Send {
     fn encode_frame(&mut self, g: &[f32], dither: &mut DitherGen, w: &mut BitWriter)
         -> (i32, usize);
 
-    /// Parse + dequantize one frame from its payload bytes alone. `side` is
-    /// the decoder side information slice covering this frame's coordinates
-    /// (only used by NDQSG: the running average of already-decoded SGs).
+    /// The decode primitive: parse + dequantize one frame from its payload
+    /// bytes alone, writing the reconstruction into the caller-owned `out`
+    /// slice (`out.len() == frame.n`, guaranteed by the trait wrappers).
+    ///
+    /// `side` is the decoder side information slice covering this frame's
+    /// coordinates (only used by NDQSG: the running average of
+    /// already-decoded SGs).
+    ///
+    /// Buffer-reuse contract: implementations perform **no heap
+    /// allocation** — dither is generated directly into `out` (then
+    /// combined in place) and symbols are pulled from a streaming
+    /// [`pack::SymbolUnpacker`], so a server decoding millions of frames
+    /// reuses the same scratch for every message of every round. `out` may
+    /// hold garbage on entry and is fully overwritten on success; on error
+    /// its contents are unspecified.
+    fn decode_frame_into(
+        &self,
+        frame: &Frame,
+        payload: &[u8],
+        dither: &mut DitherGen,
+        side: Option<&[f32]>,
+        out: &mut [f32],
+    ) -> crate::Result<()>;
+
+    /// Convenience wrapper over [`Self::decode_frame_into`] that allocates
+    /// the output vector.
     fn decode_frame(
         &self,
         frame: &Frame,
         payload: &[u8],
         dither: &mut DitherGen,
         side: Option<&[f32]>,
-    ) -> crate::Result<Vec<f32>>;
+    ) -> crate::Result<Vec<f32>> {
+        let mut out = vec![0f32; frame.n];
+        self.decode_frame_into(frame, payload, dither, side, &mut out)?;
+        Ok(out)
+    }
 
     /// Called once at the start of every message encode, before the first
     /// `encode_frame` — stateful schemes (one-bit error feedback) reset
@@ -496,6 +523,52 @@ pub trait GradQuantizer: Send {
         b.finish()
     }
 
+    /// Parse + dequantize a whole message into a caller-owned flat buffer
+    /// (`out.len() == msg.n()`): the zero-allocation hot path the
+    /// [`crate::comm::Session`] aggregation loop runs on. Frames decode in
+    /// order, consuming the shared dither stream contiguously.
+    fn decode_into(
+        &self,
+        msg: &WireMsg,
+        dither: &mut DitherGen,
+        side: Option<&[f32]>,
+        out: &mut [f32],
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            msg.scheme == self.id(),
+            "scheme mismatch: message header says {:?}, decoder is {:?}",
+            msg.scheme,
+            self.id()
+        );
+        anyhow::ensure!(
+            out.len() == msg.n(),
+            "decode buffer holds {} coordinates, message carries {}",
+            out.len(),
+            msg.n()
+        );
+        if let Some(s) = side {
+            anyhow::ensure!(
+                s.len() == msg.n(),
+                "side info length {} != {}",
+                s.len(),
+                msg.n()
+            );
+        }
+        let mut off = 0usize;
+        for (i, f) in msg.frames().iter().enumerate() {
+            let frame_side = side.map(|s| &s[off..off + f.n]);
+            self.decode_frame_into(
+                f,
+                msg.frame_payload(i),
+                dither,
+                frame_side,
+                &mut out[off..off + f.n],
+            )?;
+            off += f.n;
+        }
+        Ok(())
+    }
+
     /// Parse + dequantize a message, concatenating all frames.
     fn decode(
         &self,
@@ -503,11 +576,8 @@ pub trait GradQuantizer: Send {
         dither: &mut DitherGen,
         side: Option<&[f32]>,
     ) -> crate::Result<Vec<f32>> {
-        let parts = self.decode_tensors(msg, dither, side)?;
-        let mut out = Vec::with_capacity(msg.n());
-        for p in parts {
-            out.extend(p);
-        }
+        let mut out = vec![0f32; msg.n()];
+        self.decode_into(msg, dither, side, &mut out)?;
         Ok(out)
     }
 
@@ -537,12 +607,6 @@ pub trait GradQuantizer: Send {
         for (i, f) in msg.frames().iter().enumerate() {
             let frame_side = side.map(|s| &s[off..off + f.n]);
             let decoded = self.decode_frame(f, msg.frame_payload(i), dither, frame_side)?;
-            anyhow::ensure!(
-                decoded.len() == f.n,
-                "frame {i}: decoded {} coordinates, header says {}",
-                decoded.len(),
-                f.n
-            );
             off += f.n;
             out.push(decoded);
         }
@@ -733,6 +797,18 @@ impl SchemeRegistry {
     ) -> crate::Result<Vec<f32>> {
         self.decoder(msg.scheme)?.decode(msg, dither, side)
     }
+
+    /// Decode a message into a caller-owned buffer, dispatching on its wire
+    /// header — the allocation-free path [`crate::comm::Session`] runs on.
+    pub fn decode_into(
+        &self,
+        msg: &WireMsg,
+        dither: &mut DitherGen,
+        side: Option<&[f32]>,
+        out: &mut [f32],
+    ) -> crate::Result<()> {
+        self.decoder(msg.scheme)?.decode_into(msg, dither, side, out)
+    }
 }
 
 #[cfg(test)]
@@ -921,6 +997,115 @@ mod tests {
             assert!(max - min <= 1);
         }
         assert_eq!(frame_slices(&[], 4).len(), 1);
+    }
+
+    #[test]
+    fn frame_slices_edge_cases() {
+        // n == 0: a single empty slice, regardless of the requested count
+        for k in [1usize, 4, 1000] {
+            let slices = frame_slices(&[], k);
+            assert_eq!(slices.len(), 1);
+            assert!(slices[0].is_empty());
+        }
+        // frames > n: clamp to n slices of exactly one element each
+        let g = vec![1.0f32, 2.0, 3.0];
+        let slices = frame_slices(&g, 7);
+        assert_eq!(slices.len(), 3);
+        assert!(slices.iter().all(|s| s.len() == 1));
+        // frames == n: same clamp boundary
+        let slices = frame_slices(&g, 3);
+        assert_eq!(slices.len(), 3);
+        assert!(slices.iter().all(|s| s.len() == 1));
+        // remainder distribution: the FIRST n % k slices get the extra
+        // element, later ones the base size (10 = 3 + 3 + 2 + 2)
+        let g: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let slices = frame_slices(&g, 4);
+        let lens: Vec<usize> = slices.iter().map(|s| s.len()).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+        // slices must tile the input contiguously, in order
+        assert_eq!(slices[0], &g[0..3]);
+        assert_eq!(slices[1], &g[3..6]);
+        assert_eq!(slices[2], &g[6..8]);
+        assert_eq!(slices[3], &g[8..10]);
+        // frames = 0 behaves as 1 (clamp floor)
+        let slices = frame_slices(&g, 0);
+        assert_eq!(slices.len(), 1);
+        assert_eq!(slices[0], &g[..]);
+    }
+
+    #[test]
+    fn registry_conflict_and_idempotency_across_schemes() {
+        // one wire id, two configs -> rejected for every parameterized
+        // scheme; identical re-registration is always a no-op
+        let conflicts: Vec<(Scheme, Scheme)> = vec![
+            (
+                Scheme::Dithered { delta: 1.0 },
+                Scheme::Dithered { delta: 0.25 },
+            ),
+            (
+                Scheme::DitheredPartitioned { delta: 0.5, k: 4 },
+                Scheme::DitheredPartitioned { delta: 0.5, k: 8 },
+            ),
+            (Scheme::Qsgd { m: 1 }, Scheme::Qsgd { m: 4 }),
+            (
+                Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+                Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 0.5 },
+            ),
+        ];
+        for (a, b) in conflicts {
+            let mut reg = SchemeRegistry::new();
+            reg.register(a).unwrap();
+            reg.register(a).unwrap(); // idempotent
+            let err = reg.register(b).unwrap_err().to_string();
+            assert!(err.contains("conflicting"), "{a:?} vs {b:?}: {err}");
+            // the original registration survives the rejected attempt
+            assert!(reg.contains(a.id()));
+        }
+        // parameter-free schemes can only ever re-register identically
+        let mut reg = SchemeRegistry::new();
+        for s in [Scheme::Baseline, Scheme::Terngrad, Scheme::OneBit] {
+            reg.register(s).unwrap();
+            reg.register(s).unwrap();
+        }
+        assert!(reg.contains(SchemeId::Baseline));
+        assert!(reg.contains(SchemeId::Terngrad));
+        assert!(reg.contains(SchemeId::OneBit));
+    }
+
+    #[test]
+    fn decode_into_matches_decode_for_all_schemes() {
+        // the Vec-returning wrappers and the _into primitive must be the
+        // same math: decode() is now a thin wrapper, so this pins the
+        // equivalence across every scheme and a multi-frame layout
+        let mut rng = crate::prng::Xoshiro256::new(21);
+        let g: Vec<f32> = (0..1013).map(|_| rng.next_normal() * 0.3).collect();
+        let y: Vec<f32> = g.iter().map(|&x| x + 0.002 * rng.next_normal()).collect();
+        for scheme in [
+            Scheme::Baseline,
+            Scheme::Dithered { delta: 0.5 },
+            Scheme::DitheredPartitioned { delta: 0.5, k: 7 },
+            Scheme::Qsgd { m: 2 },
+            Scheme::Terngrad,
+            Scheme::OneBit,
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        ] {
+            let mut q = scheme.build();
+            let stream = DitherStream::new(77, 4);
+            let slices = frame_slices(&g, 3);
+            let msg = q.encode_tensors(&slices, &mut stream.round(6));
+            let side = if q.needs_side_info() { Some(&y[..]) } else { None };
+            let via_vec = q.decode(&msg, &mut stream.round(6), side).unwrap();
+            // decode_into must fully overwrite garbage in the buffer
+            let mut buf = vec![f32::NAN; g.len()];
+            q.decode_into(&msg, &mut stream.round(6), side, &mut buf)
+                .unwrap();
+            assert_eq!(via_vec, buf, "{scheme:?} _into path diverges");
+            // wrong-size buffer is a hard error
+            let mut short = vec![0f32; g.len() - 1];
+            assert!(q
+                .decode_into(&msg, &mut stream.round(6), side, &mut short)
+                .is_err());
+        }
     }
 
     #[test]

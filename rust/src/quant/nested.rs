@@ -120,13 +120,14 @@ impl GradQuantizer for NestedQuantizer {
         (self.m, 1)
     }
 
-    fn decode_frame(
+    fn decode_frame_into(
         &self,
         frame: &Frame,
         payload: &[u8],
         dither: &mut DitherGen,
         side: Option<&[f32]>,
-    ) -> crate::Result<Vec<f32>> {
+        out: &mut [f32],
+    ) -> crate::Result<()> {
         anyhow::ensure!(
             frame.m == self.m && frame.n_scales == 1,
             "NDQSG frame header (m={}, n_scales={}) does not match decoder \
@@ -139,23 +140,26 @@ impl GradQuantizer for NestedQuantizer {
             anyhow::anyhow!("NDQSG decode requires side information (Alg. 2: the running average of already-decoded SGs)")
         })?;
         anyhow::ensure!(y.len() == frame.n, "side info length {} != {}", y.len(), frame.n);
+        anyhow::ensure!(
+            out.len() == frame.n,
+            "decode buffer holds {} coordinates, frame carries {}",
+            out.len(),
+            frame.n
+        );
         let mut r = BitReader::new(payload);
         let kappa = r.read_f32()?;
         let inv_kappa = 1.0 / kappa;
-        let symbols = pack::unpack_base_k(&mut r, self.ratio, frame.n)?;
-        let mut u = vec![0f32; frame.n];
-        dither.fill_dither(self.d1 / 2.0, &mut u);
-        Ok(symbols
-            .into_iter()
-            .zip(&u)
-            .zip(y)
-            .map(|((sym, &ui), &yi)| {
-                let s = self.d1 * pack::symbol_to_signed(sym, self.m) as f32;
-                let yn = yi * inv_kappa;
-                let rr = s - ui - self.alpha * yn;
-                kappa * (yn + self.alpha * (rr - uq(rr, self.d2)))
-            })
-            .collect())
+        // regenerated dither lands in `out`, then eq. (7) runs in place
+        // against the streamed symbols and the side information y
+        dither.fill_dither(self.d1 / 2.0, out);
+        let mut sy = pack::SymbolUnpacker::new(&mut r, self.ratio, frame.n);
+        for (v, &yi) in out.iter_mut().zip(y) {
+            let s = self.d1 * pack::symbol_to_signed(sy.next_symbol()?, self.m) as f32;
+            let yn = yi * inv_kappa;
+            let rr = s - *v - self.alpha * yn;
+            *v = kappa * (yn + self.alpha * (rr - uq(rr, self.d2)));
+        }
+        Ok(())
     }
 
     fn uses_shared_dither(&self) -> bool {

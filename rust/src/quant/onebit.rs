@@ -98,25 +98,33 @@ impl GradQuantizer for OneBitQuantizer {
         (0, 2)
     }
 
-    fn decode_frame(
+    fn decode_frame_into(
         &self,
         frame: &Frame,
         payload: &[u8],
         _dither: &mut DitherGen,
         _side: Option<&[f32]>,
-    ) -> crate::Result<Vec<f32>> {
+        out: &mut [f32],
+    ) -> crate::Result<()> {
         anyhow::ensure!(
             frame.m == 0 && frame.n_scales == 2,
             "malformed one-bit frame header (m={}, n_scales={})",
             frame.m,
             frame.n_scales
         );
+        anyhow::ensure!(
+            out.len() == frame.n,
+            "decode buffer holds {} coordinates, frame carries {}",
+            out.len(),
+            frame.n
+        );
         let mut r = BitReader::new(payload);
         let mean_pos = r.read_f32()?;
         let mean_neg = r.read_f32()?;
-        (0..frame.n)
-            .map(|_| Ok(if r.read_bit()? { mean_pos } else { mean_neg }))
-            .collect()
+        for v in out.iter_mut() {
+            *v = if r.read_bit()? { mean_pos } else { mean_neg };
+        }
+        Ok(())
     }
 }
 

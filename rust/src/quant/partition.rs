@@ -27,24 +27,28 @@ impl PartitionedDithered {
         }
     }
 
-    /// Partition bounds: K near-equal chunks (first `rem` get +1).
-    fn bounds(&self, n: usize) -> Vec<(usize, usize)> {
-        let k = self.k.min(n.max(1));
+    /// Effective partition count for an n-element tensor.
+    fn parts(&self, n: usize) -> usize {
+        self.k.min(n.max(1))
+    }
+
+    /// Partition bounds: K near-equal chunks (first `rem` get +1), yielded
+    /// lazily so the allocation-free decode path needs no bounds vector.
+    fn bounds_iter(&self, n: usize) -> impl Iterator<Item = (usize, usize)> {
+        let k = self.parts(n);
         let base = n / k;
         let rem = n % k;
-        let mut out = Vec::with_capacity(k);
-        let mut off = 0;
-        for i in 0..k {
+        (0..k).scan(0usize, move |off, i| {
             let len = base + usize::from(i < rem);
-            out.push((off, off + len));
-            off += len;
-        }
-        out
+            let lo = *off;
+            *off += len;
+            Some((lo, lo + len))
+        })
     }
 
     #[cfg(test)]
     pub(crate) fn bounds_for_test(&self, n: usize) -> Vec<(usize, usize)> {
-        self.bounds(n)
+        self.bounds_iter(n).collect()
     }
 }
 
@@ -63,13 +67,12 @@ impl GradQuantizer for PartitionedDithered {
         dither: &mut DitherGen,
         w: &mut BitWriter,
     ) -> (i32, usize) {
-        let bounds = self.bounds(g.len());
         let mut u_buf = Vec::new();
         let mut indices = Vec::with_capacity(g.len());
-        let mut scales = Vec::with_capacity(bounds.len());
+        let mut scales = Vec::with_capacity(self.parts(g.len()));
         // one contiguous dither stream across partitions: decode replays it
         // in the same order.
-        for &(lo, hi) in &bounds {
+        for (lo, hi) in self.bounds_iter(g.len()) {
             let kappa = self
                 .inner
                 .quantize_into(&g[lo..hi], dither, &mut u_buf, &mut indices);
@@ -80,39 +83,56 @@ impl GradQuantizer for PartitionedDithered {
         (self.inner.m(), scales.len())
     }
 
-    fn decode_frame(
+    fn decode_frame_into(
         &self,
         frame: &Frame,
         payload: &[u8],
         dither: &mut DitherGen,
         _side: Option<&[f32]>,
-    ) -> crate::Result<Vec<f32>> {
-        let bounds = self.bounds(frame.n);
+        out: &mut [f32],
+    ) -> crate::Result<()> {
+        let parts = self.parts(frame.n);
         anyhow::ensure!(
-            frame.m == self.inner.m() && frame.n_scales == bounds.len(),
+            frame.m == self.inner.m() && frame.n_scales == parts,
             "partitioned frame header (m={}, n_scales={}) does not match decoder \
              config (m={}, K={})",
             frame.m,
             frame.n_scales,
             self.inner.m(),
-            bounds.len()
+            parts
         );
+        anyhow::ensure!(
+            out.len() == frame.n,
+            "decode buffer holds {} coordinates, frame carries {}",
+            out.len(),
+            frame.n
+        );
+        // pass 1: regenerate the dither partition by partition straight into
+        // `out` — same per-partition fill sequence as the encoder, so the
+        // shared stream stays aligned
+        let half = self.inner.delta() / 2.0;
+        for (lo, hi) in self.bounds_iter(frame.n) {
+            dither.fill_dither(half, &mut out[lo..hi]);
+        }
+        // pass 2: two cursors over the payload — one at the scale block,
+        // one streaming the (partition-spanning) packed index stream — and
+        // the reconstruction happens in place
+        let mut scale_r = BitReader::new(payload);
         let mut r = BitReader::new(payload);
-        let mut scales = Vec::with_capacity(bounds.len());
-        for _ in 0..bounds.len() {
-            scales.push(r.read_f32()?);
+        for _ in 0..parts {
+            r.read_f32()?; // hop over the scale block
         }
-        let symbols = pack::unpack_base_k(&mut r, self.inner.alphabet(), frame.n)?;
+        let mut sy = pack::SymbolUnpacker::new(&mut r, self.inner.alphabet(), frame.n);
         let m = self.inner.m();
-        let indices: Vec<i32> = symbols
-            .into_iter()
-            .map(|s| pack::symbol_to_signed(s, m))
-            .collect();
-        let mut out = Vec::with_capacity(frame.n);
-        for (part, &(lo, hi)) in bounds.iter().enumerate() {
-            out.extend(self.inner.dequantize(&indices[lo..hi], scales[part], dither));
+        let delta = self.inner.delta();
+        for (lo, hi) in self.bounds_iter(frame.n) {
+            let kappa = scale_r.read_f32()?;
+            for v in out[lo..hi].iter_mut() {
+                let q = pack::symbol_to_signed(sy.next_symbol()?, m);
+                *v = kappa * (delta * q as f32 - *v);
+            }
         }
-        Ok(out)
+        Ok(())
     }
 
     fn uses_shared_dither(&self) -> bool {

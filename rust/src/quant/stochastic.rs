@@ -66,13 +66,14 @@ impl GradQuantizer for QsgdQuantizer {
         (self.m, 1)
     }
 
-    fn decode_frame(
+    fn decode_frame_into(
         &self,
         frame: &Frame,
         payload: &[u8],
         _dither: &mut DitherGen,
         _side: Option<&[f32]>,
-    ) -> crate::Result<Vec<f32>> {
+        out: &mut [f32],
+    ) -> crate::Result<()> {
         anyhow::ensure!(
             frame.m == self.m && frame.n_scales == 1,
             "QSGD frame header (m={}, n_scales={}) does not match decoder config (m={})",
@@ -80,15 +81,21 @@ impl GradQuantizer for QsgdQuantizer {
             frame.n_scales,
             self.m
         );
+        anyhow::ensure!(
+            out.len() == frame.n,
+            "decode buffer holds {} coordinates, frame carries {}",
+            out.len(),
+            frame.n
+        );
         let mut r = BitReader::new(payload);
         let kappa = r.read_f32()?;
-        let symbols = pack::unpack_base_k(&mut r, self.alphabet(), frame.n)?;
         // half-dithered: reconstruction is kappa * Delta * q; dither NOT
         // subtracted (Lemma 2 — this is what distinguishes QSGD from DQSG).
-        Ok(symbols
-            .into_iter()
-            .map(|s| kappa * self.delta * pack::symbol_to_signed(s, self.m) as f32)
-            .collect())
+        let mut sy = pack::SymbolUnpacker::new(&mut r, self.alphabet(), frame.n);
+        for v in out.iter_mut() {
+            *v = kappa * self.delta * pack::symbol_to_signed(sy.next_symbol()?, self.m) as f32;
+        }
+        Ok(())
     }
 }
 

@@ -82,26 +82,33 @@ impl GradQuantizer for TerngradQuantizer {
         (1, 1)
     }
 
-    fn decode_frame(
+    fn decode_frame_into(
         &self,
         frame: &Frame,
         payload: &[u8],
         _dither: &mut DitherGen,
         _side: Option<&[f32]>,
-    ) -> crate::Result<Vec<f32>> {
+        out: &mut [f32],
+    ) -> crate::Result<()> {
         anyhow::ensure!(
             frame.m == 1 && frame.n_scales == 1,
             "TernGrad frame header (m={}, n_scales={}) is not ternary",
             frame.m,
             frame.n_scales
         );
+        anyhow::ensure!(
+            out.len() == frame.n,
+            "decode buffer holds {} coordinates, frame carries {}",
+            out.len(),
+            frame.n
+        );
         let mut r = BitReader::new(payload);
         let s = r.read_f32()?;
-        let symbols = pack::unpack_base_k(&mut r, 3, frame.n)?;
-        Ok(symbols
-            .into_iter()
-            .map(|sym| s * pack::symbol_to_signed(sym, 1) as f32)
-            .collect())
+        let mut sy = pack::SymbolUnpacker::new(&mut r, 3, frame.n);
+        for v in out.iter_mut() {
+            *v = s * pack::symbol_to_signed(sy.next_symbol()?, 1) as f32;
+        }
+        Ok(())
     }
 }
 

@@ -19,13 +19,13 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use crate::comm::Session;
 use crate::config::TrainConfig;
 use crate::data::{Batch, ImageDataset, ImageKind};
 use crate::opt;
 use crate::prng::DitherStream;
-use crate::quant::{GradQuantizer, SchemeRegistry};
+use crate::quant::GradQuantizer;
 use crate::runtime::ComputeService;
-use crate::train::bits::CommStats;
 use crate::train::trainer::{EvalPoint, TrainReport};
 
 /// Async run statistics beyond the shared report.
@@ -63,6 +63,24 @@ struct PendingGrad {
 
 impl AsyncTrainer {
     pub fn new(cfg: TrainConfig, max_staleness: usize) -> crate::Result<Self> {
+        // NDQSG is explicitly rejected here rather than failing (or worse,
+        // silently mis-decoding with side = None) deep inside the run loop:
+        // Alg.-2 side information is the running average of the *other*
+        // workers' gradients in the same synchronous round, and the async
+        // protocol applies every gradient the moment it arrives — there is
+        // no round, hence no side information to decode against.
+        anyhow::ensure!(
+            !cfg.scheme.needs_side_info(),
+            "async trainer does not support {} — Alg.-2 side information needs \
+             a synchronous round to bootstrap; use the sync Trainer or the \
+             hierarchical aggregator",
+            cfg.scheme.label()
+        );
+        anyhow::ensure!(
+            cfg.scheme_p2.is_none(),
+            "async trainer runs a single scheme for all workers (scheme_p2 is \
+             a synchronous Alg.-2 group split)"
+        );
         let service = ComputeService::start(std::path::Path::new(&cfg.artifacts_dir))?;
         let worker_speed = (0..cfg.workers)
             .map(|p| 1.0 + 0.5 * (p as f64 / cfg.workers.max(1) as f64)) // up to 1.5x slower
@@ -87,11 +105,14 @@ impl AsyncTrainer {
         let ds = ImageDataset::new(kind, cfg.seed ^ 0xDA7A);
         let mut params = manifest.init_params(&cfg.model)?;
         let mut optimizer = opt::build(cfg.opt, cfg.lr);
-        let mut comm = CommStats::new(false);
 
-        // per-worker state; the leader decodes through the scheme registry,
-        // dispatching on each message's wire header (wire-protocol v2)
-        let registry = SchemeRegistry::from_schemes(&[cfg.scheme])?;
+        // the leader decodes through a comm::Session: wire-header dispatch,
+        // per-worker seed copies, validation, and bit accounting all live
+        // there — constructed once, scratch reused for every update
+        let schemes = vec![cfg.scheme; cfg.workers];
+        let mut session = Session::new(&schemes, cfg.seed, info.n_params)?;
+        // worker-side state: encoder quantizers + the workers' own copies
+        // of the shared-seed streams (Alg. 1's two-sided seed table)
         let mut quantizers: Vec<Box<dyn GradQuantizer>> =
             (0..cfg.workers).map(|_| cfg.scheme.build()).collect();
         let streams: Vec<DitherStream> = (0..cfg.workers)
@@ -124,11 +145,12 @@ impl AsyncTrainer {
         let mut train_loss = f32::NAN;
 
         while stats.updates < total_updates {
-            // next event in virtual time
+            // next event in virtual time (total_cmp: a NaN finish time must
+            // not panic the leader — IEEE total order sorts it last)
             let idx = queue
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.finish_time.partial_cmp(&b.1.finish_time).unwrap())
+                .min_by(|a, b| a.1.finish_time.total_cmp(&b.1.finish_time))
                 .map(|(i, _)| i)
                 .unwrap();
             let ev = queue.swap_remove(idx);
@@ -163,19 +185,21 @@ impl AsyncTrainer {
             let (loss, grad) = h.grad_image(&cfg.model, &snap, batch.x, batch.y, b)?;
             train_loss = loss;
 
-            // encode -> wire -> decode with the wstep-keyed dither
+            // encode -> wire -> decode with the wstep-keyed dither; the
+            // session records the bits, regenerates the dither from its own
+            // seed copy, and hands back its reused decode buffer
             let msg = quantizers[ev.worker]
                 .encode(&grad, &mut streams[ev.worker].round(ev.wstep));
-            comm.record_upload(&msg);
-            let recon = registry.decode(
-                &msg,
-                &mut streams[ev.worker].round(ev.wstep),
-                None,
-            )?;
+            let recon = session.decode_message(ev.worker, ev.wstep, &msg)?;
 
-            // apply immediately, scaled to the per-round magnitude
-            let scaled: Vec<f32> = recon.iter().map(|&g| g / cfg.workers as f32).collect();
-            optimizer.step(&mut params, &scaled);
+            // apply immediately, scaled (in place — the buffer is the
+            // session's scratch, no per-update allocation) to keep the
+            // effective step comparable to a synchronous round
+            let inv_p = 1.0 / cfg.workers as f32;
+            for v in recon.iter_mut() {
+                *v *= inv_p;
+            }
+            optimizer.step(&mut params, recon);
             version += 1;
             versions.push_back((version, Arc::new(params.clone())));
             // retire snapshots no in-flight task references anymore
@@ -204,7 +228,7 @@ impl AsyncTrainer {
                     train_loss,
                     eval_loss,
                     accuracy: acc,
-                    cum_raw_bits_per_worker: comm.total_raw_bits / cfg.workers as f64,
+                    cum_raw_bits_per_worker: session.stats().total_raw_bits / cfg.workers as f64,
                 });
             }
         }
@@ -214,7 +238,7 @@ impl AsyncTrainer {
             train_loss,
             eval_loss,
             accuracy: acc,
-            cum_raw_bits_per_worker: comm.total_raw_bits / cfg.workers as f64,
+            cum_raw_bits_per_worker: session.stats().total_raw_bits / cfg.workers as f64,
         });
         stats.mean_staleness = staleness_sum as f64 / stats.updates.max(1) as f64;
 
@@ -230,7 +254,7 @@ impl AsyncTrainer {
                 final_accuracy: acc,
                 final_eval_loss: eval_loss,
                 history,
-                comm,
+                comm: session.stats().clone(),
                 rounds: cfg.rounds,
                 workers: cfg.workers,
                 n_params: info.n_params,

@@ -11,9 +11,18 @@
 //! first leader's average plain (DQSG), subsequent leaders nested against
 //! the root's running average, because group averages are themselves
 //! correlated. Bit accounting distinguishes leaf-tier and root-tier bytes.
+//!
+//! Every tier decodes through a [`crate::comm::Session`]: one session per
+//! group leader (dither streams keyed by *global* worker id) plus one for
+//! the root (keyed in a disjoint id range). [`HierarchyAggregator`] builds
+//! the sessions and the encoder-side state **once** and reuses them — and
+//! the sessions' decode scratch — every round, where the previous
+//! implementation rebuilt quantizers, registries, and streams from scratch
+//! for every worker of every round.
 
+use crate::comm::{Session, WorkerMsg};
 use crate::prng::DitherStream;
-use crate::quant::{GradQuantizer, Scheme, SchemeRegistry};
+use crate::quant::{GradQuantizer, Scheme};
 use crate::tensor;
 
 /// Static two-tier topology description.
@@ -58,7 +67,165 @@ pub struct HierarchyRound {
     pub flat_dqsg_bits: usize,
 }
 
-/// Run one hierarchical aggregation round over the workers' gradients.
+/// Reusable two-tier aggregation engine: per-group leader sessions, the
+/// root session, and all encoder-side quantizers/streams are built once and
+/// shared by every [`HierarchyAggregator::round`] call.
+///
+/// Dither streams are keyed `(run_seed, global worker id)` at the leaf tier
+/// and `(run_seed, 2^16 + g)` at the root tier, so the two tiers can never
+/// collide in the counter space.
+pub struct HierarchyAggregator {
+    h: Hierarchy,
+    n: usize,
+    /// Group leader g decodes its workers through `leaf_sessions[g]`.
+    leaf_sessions: Vec<Session>,
+    root_session: Session,
+    /// Encoder state per global leaf worker (quantizer + seed stream).
+    leaf_encoders: Vec<(Box<dyn GradQuantizer>, DitherStream)>,
+    /// Encoder state per group leader's uplink.
+    root_encoders: Vec<(Box<dyn GradQuantizer>, DitherStream)>,
+    /// The flat all-DQSG comparison encoders (reference bit bill only).
+    flat_encoders: Vec<(Box<dyn GradQuantizer>, DitherStream)>,
+}
+
+impl HierarchyAggregator {
+    /// `n` = gradient dimensionality every worker ships.
+    pub fn new(h: &Hierarchy, run_seed: u64, n: usize) -> crate::Result<HierarchyAggregator> {
+        anyhow::ensure!(h.groups >= 1 && h.per_group >= 1, "empty topology");
+        // within a group: worker 0 bootstraps (DQSG), the rest are nested
+        let group_schemes: Vec<Scheme> = (0..h.per_group)
+            .map(|w| if w == 0 { h.leaf_dqsg } else { h.leaf_nested })
+            .collect();
+        let mut leaf_sessions = Vec::with_capacity(h.groups);
+        let mut leaf_encoders = Vec::with_capacity(h.workers());
+        let mut flat_encoders = Vec::with_capacity(h.workers());
+        for g in 0..h.groups {
+            let keys: Vec<u32> = (0..h.per_group)
+                .map(|w| (g * h.per_group + w) as u32)
+                .collect();
+            leaf_sessions.push(Session::with_stream_keys(&group_schemes, run_seed, n, &keys)?);
+            for (w, &key) in keys.iter().enumerate() {
+                leaf_encoders.push((
+                    group_schemes[w].build(),
+                    DitherStream::new(run_seed, key),
+                ));
+                // flat comparison: everyone DQSG at the same fine step
+                flat_encoders.push((
+                    h.leaf_dqsg.build(),
+                    DitherStream::new(run_seed ^ 0xF1A7, key),
+                ));
+            }
+        }
+        // root tier: leader 0 bootstraps, the rest nested against the
+        // root's running average (group averages are themselves correlated)
+        let root_schemes: Vec<Scheme> = (0..h.groups)
+            .map(|g| if g == 0 { h.root_dqsg } else { h.root_nested })
+            .collect();
+        let root_keys: Vec<u32> = (0..h.groups).map(|g| 0x1_0000 + g as u32).collect();
+        let root_session = Session::with_stream_keys(&root_schemes, run_seed, n, &root_keys)?;
+        let root_encoders = root_keys
+            .iter()
+            .enumerate()
+            .map(|(g, &key)| (root_schemes[g].build(), DitherStream::new(run_seed, key)))
+            .collect();
+        Ok(HierarchyAggregator {
+            h: h.clone(),
+            n,
+            leaf_sessions,
+            root_session,
+            leaf_encoders,
+            root_encoders,
+            flat_encoders,
+        })
+    }
+
+    /// Run one aggregation round: `grads[g][w]` = gradient of worker w in
+    /// group g.
+    pub fn round(
+        &mut self,
+        grads: &[Vec<Vec<f32>>],
+        round: u64,
+    ) -> crate::Result<HierarchyRound> {
+        anyhow::ensure!(grads.len() == self.h.groups, "group count mismatch");
+        let mut flat_dqsg_bits = 0usize;
+        let mut group_avgs: Vec<Vec<f32>> = Vec::with_capacity(self.h.groups);
+        // per-tier bits come from the sessions' own CommStats ledgers
+        // (recorded as each message is accepted — one source of truth);
+        // the per-round number is the delta across this round's pushes.
+        let leaf_before: f64 = self
+            .leaf_sessions
+            .iter()
+            .map(|s| s.stats().total_raw_bits)
+            .sum();
+
+        // ---- leaf tier: streaming Alg. 2 inside each group ----
+        for (g, group) in grads.iter().enumerate() {
+            anyhow::ensure!(group.len() == self.h.per_group, "group {g} size mismatch");
+            let session = &mut self.leaf_sessions[g];
+            let mut agg = session.begin_round();
+            for (w, grad) in group.iter().enumerate() {
+                let global = g * self.h.per_group + w;
+                let (q, stream) = &mut self.leaf_encoders[global];
+                let wire = q.encode(grad, &mut stream.round(round));
+                // flat comparison is a hypothetical deployment: it never
+                // crosses a session, so it is tallied by hand here
+                let (qf, sf) = &mut self.flat_encoders[global];
+                flat_dqsg_bits += qf.encode(grad, &mut sf.round(round)).raw_bits();
+                agg.push(WorkerMsg {
+                    worker: w,
+                    round,
+                    loss: 0.0,
+                    wire,
+                })?;
+            }
+            group_avgs.push(agg.finish()?);
+        }
+        let leaf_after: f64 = self
+            .leaf_sessions
+            .iter()
+            .map(|s| s.stats().total_raw_bits)
+            .sum();
+        let leaf_bits = (leaf_after - leaf_before) as usize;
+
+        // ---- root tier: leaders' averages, nested against the root ----
+        let root_before = self.root_session.stats().total_raw_bits;
+        let mut agg = self.root_session.begin_round();
+        for (g, gavg) in group_avgs.iter().enumerate() {
+            let (q, stream) = &mut self.root_encoders[g];
+            let wire = q.encode(gavg, &mut stream.round(round));
+            agg.push(WorkerMsg {
+                worker: g,
+                round,
+                loss: 0.0,
+                wire,
+            })?;
+        }
+        let root_avg = agg.finish()?;
+        let root_bits = (self.root_session.stats().total_raw_bits - root_before) as usize;
+
+        // hand the group buffers back to their sessions' scratch pools
+        for (g, avg) in group_avgs.into_iter().enumerate() {
+            self.leaf_sessions[g].recycle(avg);
+        }
+
+        Ok(HierarchyRound {
+            average: root_avg,
+            leaf_bits,
+            root_bits,
+            flat_dqsg_bits,
+        })
+    }
+
+    /// Gradient dimensionality this aggregator was built for.
+    pub fn n_params(&self) -> usize {
+        self.n
+    }
+}
+
+/// One-shot convenience: build a [`HierarchyAggregator`] and run a single
+/// round. Long-lived callers (the ablation benches, training loops) should
+/// construct the aggregator once and call [`HierarchyAggregator::round`]
+/// per round to reuse sessions and scratch.
 ///
 /// `grads[g][w]` = gradient of worker w in group g; dither streams are keyed
 /// (run_seed, global worker id) at the leaf tier and (run_seed, 2^16 + g)
@@ -71,67 +238,7 @@ pub fn aggregate_round(
 ) -> crate::Result<HierarchyRound> {
     anyhow::ensure!(grads.len() == h.groups, "group count mismatch");
     let n = grads[0][0].len();
-    let mut leaf_bits = 0usize;
-    let mut flat_dqsg_bits = 0usize;
-    let mut group_avgs: Vec<Vec<f32>> = Vec::with_capacity(h.groups);
-    // wire-v2 dispatch: each tier decodes through a registry keyed by the
-    // message header's scheme id, not by which worker happens to send
-    let leaf_reg = SchemeRegistry::from_schemes(&[h.leaf_dqsg, h.leaf_nested])?;
-    let root_reg = SchemeRegistry::from_schemes(&[h.root_dqsg, h.root_nested])?;
-
-    // ---- leaf tier: Alg. 2 inside each group ----
-    for (g, group) in grads.iter().enumerate() {
-        anyhow::ensure!(group.len() == h.per_group, "group {g} size mismatch");
-        let mut avg = vec![0f32; n];
-        let mut count = 0usize;
-        for (w, grad) in group.iter().enumerate() {
-            let global = (g * h.per_group + w) as u32;
-            let scheme = if w == 0 { h.leaf_dqsg } else { h.leaf_nested };
-            let mut q = scheme.build();
-            let stream = DitherStream::new(run_seed, global);
-            let msg = q.encode(grad, &mut stream.round(round));
-            leaf_bits += msg.raw_bits();
-            // flat comparison: everyone DQSG at the same fine step
-            let mut qf = h.leaf_dqsg.build();
-            let sf = DitherStream::new(run_seed ^ 0xF1A7, global);
-            flat_dqsg_bits += qf.encode(grad, &mut sf.round(round)).raw_bits();
-
-            let side = if w == 0 { None } else { Some(avg.as_slice()) };
-            let decoded = leaf_reg.decode(&msg, &mut stream.round(round), side)?;
-            count += 1;
-            let inv = 1.0 / count as f32;
-            for (a, &d) in avg.iter_mut().zip(&decoded) {
-                *a += (d - *a) * inv;
-            }
-        }
-        group_avgs.push(avg);
-    }
-
-    // ---- root tier: leaders' averages, nested against the root average ----
-    let mut root_bits = 0usize;
-    let mut root_avg = vec![0f32; n];
-    let mut count = 0usize;
-    for (g, gavg) in group_avgs.iter().enumerate() {
-        let scheme = if g == 0 { h.root_dqsg } else { h.root_nested };
-        let mut q = scheme.build();
-        let stream = DitherStream::new(run_seed, 0x1_0000 + g as u32);
-        let msg = q.encode(gavg, &mut stream.round(round));
-        root_bits += msg.raw_bits();
-        let side = if g == 0 { None } else { Some(root_avg.as_slice()) };
-        let decoded = root_reg.decode(&msg, &mut stream.round(round), side)?;
-        count += 1;
-        let inv = 1.0 / count as f32;
-        for (a, &d) in root_avg.iter_mut().zip(&decoded) {
-            *a += (d - *a) * inv;
-        }
-    }
-
-    Ok(HierarchyRound {
-        average: root_avg,
-        leaf_bits,
-        root_bits,
-        flat_dqsg_bits,
-    })
+    HierarchyAggregator::new(h, run_seed, n)?.round(grads, round)
 }
 
 /// Convenience: true mean of all worker gradients (oracle for tests).

@@ -4,18 +4,20 @@
 //! connected by channels carrying *bit-exact* [`crate::quant::WireMsg`]s.
 //!
 //! Module map:
-//! * [`bits`]    — communication accounting (Tables 1-2 metrics)
 //! * [`worker`]  — worker thread: data shard -> gradient -> encode -> send
-//! * [`server`]  — server decode logic incl. Alg. 2 side-information order
+//! * [`server`]  — thin facade over [`crate::comm::Session`] (the decode +
+//!   Alg.-2 aggregation logic itself lives in `comm`)
 //! * [`trainer`] — the round loop, optimizer, eval, reporting
+//!
+//! Communication accounting ([`CommStats`]) and the wire message type live
+//! in [`crate::comm`] and are re-exported here for convenience.
 
 pub mod async_trainer;
-pub mod bits;
 pub mod hierarchy;
 pub mod server;
 pub mod trainer;
 pub mod worker;
 
+pub use crate::comm::CommStats;
 pub use async_trainer::AsyncTrainer;
-pub use bits::CommStats;
 pub use trainer::{TrainReport, Trainer};

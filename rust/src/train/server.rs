@@ -1,31 +1,25 @@
-//! Server-side decode + aggregation: Alg. 1 (DQSG) and Alg. 2 (NDQSG with
-//! two worker groups and sequential side-information updates).
+//! Server-side decode + aggregation — now a thin facade over
+//! [`crate::comm::Session`], kept for API continuity (and as the seam the
+//! original Alg.-1/Alg.-2 batch tests exercise).
 //!
-//! The server holds *its own* copies of every worker's seed (`DitherStream`
-//! per worker, as Alg. 1 prescribes) and a [`SchemeRegistry`] of codecs —
-//! it dispatches each message on its **wire header** (validated against the
-//! worker's negotiated scheme, so a sender cannot steer the decode path)
-//! and reconstructs gradients from wire bytes + regenerated dither only.
+//! The session holds *its own* copies of every worker's seed (a
+//! `DitherStream` per worker, as Alg. 1 prescribes) and the
+//! [`crate::quant::SchemeRegistry`] of codecs — each message dispatches on
+//! its **wire header** (validated against the worker's negotiated scheme,
+//! so a sender cannot steer the decode path) and gradients are
+//! reconstructed from wire bytes + regenerated dither only.
 //!
 //! Decode order is canonicalized (ascending worker id, P1 before P2):
 //! aggregation is f32 math, so the result must be a function of the message
 //! *set*, not of arrival order — Alg. 2's side information then refines the
-//! same running average no matter how the network reorders packets.
+//! same running average no matter how the network reorders packets. The
+//! streaming version of the same contract is [`crate::comm::RoundAggregator`].
 
-use crate::prng::DitherStream;
-use crate::quant::{Scheme, SchemeId, SchemeRegistry};
-use crate::train::worker::WorkerMsg;
+use crate::comm::{Session, WorkerMsg};
+use crate::quant::Scheme;
 
 pub struct Server {
-    /// Wire-id -> codec map shared by all workers.
-    registry: SchemeRegistry,
-    /// The scheme id worker p negotiated at setup; messages must match.
-    worker_ids: Vec<SchemeId>,
-    /// Per-worker shared-seed streams (the server's seed copies).
-    streams: Vec<DitherStream>,
-    /// Whether worker p is in the side-information-producing group P1.
-    in_p1: Vec<bool>,
-    n_params: usize,
+    session: Session,
 }
 
 impl Server {
@@ -38,18 +32,8 @@ impl Server {
     /// frames apart from the header alone) — use distinct schemes per
     /// group, as Alg. 2 does.
     pub fn new(schemes: &[Scheme], run_seed: u64, n_params: usize) -> crate::Result<Self> {
-        let registry = SchemeRegistry::from_schemes(schemes)?;
-        let worker_ids: Vec<SchemeId> = schemes.iter().map(|s| s.id()).collect();
-        let in_p1: Vec<bool> = schemes.iter().map(|s| !s.needs_side_info()).collect();
-        let streams = (0..schemes.len())
-            .map(|p| DitherStream::new(run_seed, p as u32))
-            .collect();
         Ok(Self {
-            registry,
-            worker_ids,
-            streams,
-            in_p1,
-            n_params,
+            session: Session::new(schemes, run_seed, n_params)?,
         })
     }
 
@@ -59,91 +43,17 @@ impl Server {
     /// information), then each P2 message decoded against the *running*
     /// average, which is updated after each decode. Within each pass the
     /// order is ascending worker id regardless of arrival order.
-    pub fn decode_round(&self, msgs: &[WorkerMsg]) -> crate::Result<Vec<f32>> {
-        anyhow::ensure!(!msgs.is_empty(), "no worker messages");
-        for msg in msgs {
-            self.validate(msg)?;
-        }
-        let mut order: Vec<usize> = (0..msgs.len()).collect();
-        order.sort_by_key(|&i| msgs[i].worker);
-        for w in order.windows(2) {
-            anyhow::ensure!(
-                msgs[w[0]].worker != msgs[w[1]].worker,
-                "duplicate message from worker {} in one round",
-                msgs[w[0]].worker
-            );
-        }
-
-        let mut avg = vec![0f32; self.n_params];
-        let mut count = 0usize;
-
-        // pass 1: P1 (plain schemes), canonical order
-        for &i in &order {
-            let msg = &msgs[i];
-            if self.in_p1[msg.worker] {
-                let g = self.decode_one(msg, None)?;
-                accumulate(&mut avg, &g, &mut count);
-            }
-        }
-        anyhow::ensure!(
-            count > 0 || msgs.iter().all(|m| self.in_p1[m.worker]),
-            "NDQSG requires at least one P1 worker to bootstrap side information (Alg. 2)"
-        );
-
-        // pass 2: P2 (nested), sequentially refining the running average
-        for &i in &order {
-            let msg = &msgs[i];
-            if !self.in_p1[msg.worker] {
-                let g = {
-                    let side = &avg;
-                    self.decode_one(msg, Some(side))?
-                };
-                accumulate(&mut avg, &g, &mut count);
-            }
-        }
-        Ok(avg)
+    pub fn decode_round(&mut self, msgs: &[WorkerMsg]) -> crate::Result<Vec<f32>> {
+        self.session.decode_round(msgs)
     }
 
-    fn validate(&self, msg: &WorkerMsg) -> crate::Result<()> {
-        anyhow::ensure!(
-            msg.worker < self.worker_ids.len(),
-            "message from unknown worker {}",
-            msg.worker
-        );
-        anyhow::ensure!(
-            msg.wire.scheme == self.worker_ids[msg.worker],
-            "worker {} sent wire scheme {:?} but negotiated {:?} — refusing to \
-             decode on sender say-so",
-            msg.worker,
-            msg.wire.scheme,
-            self.worker_ids[msg.worker]
-        );
-        anyhow::ensure!(
-            msg.wire.n() == self.n_params,
-            "worker {} message carries {} coordinates, expected {}",
-            msg.worker,
-            msg.wire.n(),
-            self.n_params
-        );
-        Ok(())
-    }
-
-    fn decode_one(&self, msg: &WorkerMsg, side: Option<&[f32]>) -> crate::Result<Vec<f32>> {
-        let mut gen = self.streams[msg.worker].round(msg.round);
-        self.registry.decode(&msg.wire, &mut gen, side)
+    /// The underlying session (streaming API, stats, scratch recycling).
+    pub fn session_mut(&mut self) -> &mut Session {
+        &mut self.session
     }
 
     pub fn is_p1(&self, worker: usize) -> bool {
-        self.in_p1[worker]
-    }
-}
-
-/// Running mean: avg_{k+1} = avg_k + (g - avg_k) / (k+1).
-fn accumulate(avg: &mut [f32], g: &[f32], count: &mut usize) {
-    *count += 1;
-    let inv = 1.0 / *count as f32;
-    for (a, &gi) in avg.iter_mut().zip(g) {
-        *a += (gi - *a) * inv;
+        self.session.is_p1(worker)
     }
 }
 
@@ -151,7 +61,7 @@ fn accumulate(avg: &mut [f32], g: &[f32], count: &mut usize) {
 mod tests {
     use super::*;
     use crate::coding::crc;
-    use crate::prng::Xoshiro256;
+    use crate::prng::{DitherStream, Xoshiro256};
     use crate::quant::{GradQuantizer, WireMsg, CHECKSUM_BYTES};
 
     fn make_msgs(schemes: &[Scheme], gs: &[Vec<f32>], run_seed: u64, round: u64) -> Vec<WorkerMsg> {
@@ -181,7 +91,7 @@ mod tests {
             .map(|_| (0..n).map(|_| rng.next_normal() * 0.2).collect())
             .collect();
         let msgs = make_msgs(&schemes, &gs, 7, 3);
-        let server = Server::new(&schemes, 7, n).unwrap();
+        let mut server = Server::new(&schemes, 7, n).unwrap();
         let avg = server.decode_round(&msgs).unwrap();
 
         let mut want = vec![0f32; n];
@@ -214,7 +124,7 @@ mod tests {
             Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
         ];
         let msgs = make_msgs(&schemes, &gs, 11, 0);
-        let server = Server::new(&schemes, 11, n).unwrap();
+        let mut server = Server::new(&schemes, 11, n).unwrap();
         assert!(server.is_p1(0) && server.is_p1(1));
         assert!(!server.is_p1(2) && !server.is_p1(3));
         let avg = server.decode_round(&msgs).unwrap();
@@ -245,7 +155,7 @@ mod tests {
             Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
         ];
         let msgs = make_msgs(&schemes, &gs, 21, 4);
-        let server = Server::new(&schemes, 21, n).unwrap();
+        let mut server = Server::new(&schemes, 21, n).unwrap();
         let reference = server.decode_round(&msgs).unwrap();
 
         // several adversarial arrival orders, including P2-before-P1
@@ -264,7 +174,7 @@ mod tests {
                     wire: msgs[i].wire.clone(),
                 })
                 .collect();
-            let server2 = Server::new(&schemes, 21, n).unwrap();
+            let mut server2 = Server::new(&schemes, 21, n).unwrap();
             let got = server2.decode_round(&shuffled).unwrap();
             assert_eq!(got, reference, "aggregate depends on arrival order {order:?}");
         }
@@ -278,7 +188,7 @@ mod tests {
             .map(|_| (0..100).map(|_| rng.next_normal()).collect())
             .collect();
         let msgs = make_msgs(&schemes, &gs, 0, 0);
-        let server = Server::new(&schemes, 0, 100).unwrap();
+        let mut server = Server::new(&schemes, 0, 100).unwrap();
         assert!(server.decode_round(&msgs).is_err());
     }
 
@@ -291,7 +201,7 @@ mod tests {
         let schemes = vec![Scheme::Dithered { delta: 1.0 }];
         let g: Vec<f32> = (0..500).map(|i| (i as f32 * 0.01).sin()).collect();
         let msgs = make_msgs(&schemes, &[g].to_vec(), 5, 1);
-        let server = Server::new(&schemes, 5, 500).unwrap();
+        let mut server = Server::new(&schemes, 5, 500).unwrap();
         let clean = server.decode_round(&msgs).unwrap();
 
         // flip a byte well inside the packed-index region
@@ -314,7 +224,7 @@ mod tests {
             loss: 0.0,
             wire: tampered,
         }];
-        let server2 = Server::new(&schemes, 5, 500).unwrap();
+        let mut server2 = Server::new(&schemes, 5, 500).unwrap();
         let dirty = server2.decode_round(&msgs2).unwrap();
         assert_ne!(clean, dirty);
     }
@@ -334,7 +244,7 @@ mod tests {
             loss: 0.0,
             wire,
         }];
-        let server = Server::new(&schemes, 5, 64).unwrap();
+        let mut server = Server::new(&schemes, 5, 64).unwrap();
         let err = server.decode_round(&msgs).unwrap_err().to_string();
         assert!(err.contains("negotiated"), "{err}");
     }
@@ -349,7 +259,7 @@ mod tests {
         let stream = DitherStream::new(3, 0);
         let mut q = schemes[0].build();
         msgs[1].wire = q.encode(&[0.5f32; 32], &mut stream.round(0));
-        let server = Server::new(&schemes, 3, 32).unwrap();
+        let mut server = Server::new(&schemes, 3, 32).unwrap();
         let err = server.decode_round(&msgs).unwrap_err().to_string();
         assert!(err.contains("duplicate"), "{err}");
     }
@@ -363,7 +273,7 @@ mod tests {
             vec![2.0, 2.0, 2.0],
         ];
         let msgs = make_msgs(&schemes, &gs, 0, 0);
-        let server = Server::new(&schemes, 0, 3).unwrap();
+        let mut server = Server::new(&schemes, 0, 3).unwrap();
         let avg = server.decode_round(&msgs).unwrap();
         assert_eq!(avg, vec![2.0, 2.0, 2.0]);
     }
@@ -382,7 +292,7 @@ mod tests {
             .map(|_| (0..200).map(|_| rng.next_normal() * 0.1).collect())
             .collect();
         let msgs = make_msgs(&schemes, &gs, 9, 2);
-        let server = Server::new(&schemes, 9, 200).unwrap();
+        let mut server = Server::new(&schemes, 9, 200).unwrap();
         let direct = server.decode_round(&msgs).unwrap();
 
         let reframed: Vec<WorkerMsg> = msgs
@@ -394,7 +304,7 @@ mod tests {
                 wire: WireMsg::parse(m.wire.bytes().to_vec()).unwrap(),
             })
             .collect();
-        let server2 = Server::new(&schemes, 9, 200).unwrap();
+        let mut server2 = Server::new(&schemes, 9, 200).unwrap();
         let via_bytes = server2.decode_round(&reframed).unwrap();
         assert_eq!(direct, via_bytes);
     }

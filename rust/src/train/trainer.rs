@@ -1,17 +1,19 @@
 //! The training round loop (leader): spawns workers, drives synchronous
-//! rounds, aggregates with [`super::server::Server`], applies the
-//! optimizer, evaluates, and reports accuracy + communication totals.
+//! rounds, aggregates through a streaming [`crate::comm::Session`] round
+//! (messages decode in arrival order, fold in canonical Alg.-2 order),
+//! applies the optimizer, evaluates, and reports accuracy + communication
+//! totals.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 
+use crate::comm::Session;
 use crate::config::{OptKind, TrainConfig};
 use crate::data::{Batch, ImageDataset, ImageKind, TokenDataset};
 use crate::opt;
 use crate::quant::Scheme;
 use crate::runtime::{ComputeHandle, ComputeService};
 use crate::sim::LinkModel;
-use crate::train::server::Server;
 use crate::train::worker::{TaskData, Worker, WorkerCmd, WorkerMsg};
 use crate::train::CommStats;
 use crate::util::json::{self, Json};
@@ -227,11 +229,12 @@ impl Trainer {
             })
             .collect::<crate::Result<_>>()?;
 
-        let server = Server::new(&self.schemes, cfg.seed, self.n_params)?;
+        let mut session = Session::new(&self.schemes, cfg.seed, self.n_params)?;
         let mut optimizer = opt::build(cfg.opt, cfg.lr);
-        let mut comm = CommStats::new(false);
         let mut history = Vec::new();
-        let mut round_msgs: Vec<WorkerMsg> = Vec::with_capacity(cfg.workers);
+        // per-worker loss slots: summed in worker order so the reported
+        // train loss (like the aggregate itself) is arrival-order-invariant
+        let mut losses = vec![0f32; cfg.workers];
 
         for round in 0..cfg.rounds {
             // leader: broadcast round start (params are logically replicated)
@@ -243,24 +246,22 @@ impl Trainer {
                     })
                     .map_err(|_| anyhow::anyhow!("worker {} died", w.id))?;
             }
-            // collect all P wire messages (synchronous barrier)
-            round_msgs.clear();
+            // stream all P wire messages into the round aggregator as they
+            // arrive (synchronous barrier = the recv count): the session
+            // decodes in arrival order, folds in canonical Alg.-2 order, so
+            // replicas (and reruns) stay bit-identical under any reordering
+            // — and records every message's bits as it is accepted.
+            let mut agg = session.begin_round();
             for _ in 0..cfg.workers {
                 let msg = msg_rx.recv().map_err(|_| anyhow::anyhow!("workers gone"))??;
-                comm.record_upload(&msg.wire);
-                round_msgs.push(msg);
+                let (worker, loss) = (msg.worker, msg.loss);
+                agg.push(msg)?; // validates worker identity before we index
+                losses[worker] = loss;
             }
-            // canonicalize arrival order: decode/averaging is f32 math, so
-            // aggregation must be order-deterministic for replicas (and
-            // reruns) to stay bit-identical.
-            round_msgs.sort_by_key(|m| m.worker);
-            let train_loss =
-                round_msgs.iter().map(|m| m.loss).sum::<f32>() / cfg.workers as f32;
-
-            // server: decode + average (Alg. 1 / Alg. 2 ordering inside)
-            let avg = server.decode_round(&round_msgs)?;
+            let train_loss = losses.iter().sum::<f32>() / cfg.workers as f32;
+            let avg = agg.finish()?;
             // broadcast: full-precision averaged gradient (paper's setting)
-            comm.record_broadcast(32.0 * self.n_params as f64);
+            session.record_broadcast(32.0 * self.n_params as f64);
 
             // identical optimizer step on the replicated parameters
             // (workers dropped their Arc clones before sending — see
@@ -268,6 +269,8 @@ impl Trainer {
             // a defensive copy if a worker raced us)
             let params = Arc::make_mut(&mut self.params);
             optimizer.step(params, &avg);
+            // hand the round's average buffer back to the session scratch
+            session.recycle(avg);
             if cfg.steps_per_epoch > 0 && (round + 1) % cfg.steps_per_epoch == 0 {
                 opt::epoch_decay(optimizer.as_mut(), cfg.lr_decay);
             }
@@ -281,7 +284,7 @@ impl Trainer {
                     train_loss,
                     eval_loss,
                     accuracy: acc,
-                    cum_raw_bits_per_worker: comm.total_raw_bits / cfg.workers as f64,
+                    cum_raw_bits_per_worker: session.stats().total_raw_bits / cfg.workers as f64,
                 });
                 if self.verbose {
                     println!(
@@ -290,7 +293,7 @@ impl Trainer {
                         train_loss,
                         eval_loss,
                         acc,
-                        comm.kbits_per_msg_raw()
+                        session.stats().kbits_per_msg_raw()
                     );
                 }
             }
@@ -306,7 +309,7 @@ impl Trainer {
             final_accuracy: last.map(|h| h.accuracy).unwrap_or(f64::NAN),
             final_eval_loss: last.map(|h| h.eval_loss).unwrap_or(f32::NAN),
             history,
-            comm,
+            comm: session.stats().clone(),
             rounds: cfg.rounds,
             workers: cfg.workers,
             n_params: self.n_params,

@@ -10,22 +10,18 @@ use std::sync::Arc;
 
 use crate::data::{Batch, ImageDataset, TokenDataset};
 use crate::prng::DitherStream;
-use crate::quant::{GradQuantizer, Scheme, WireMsg};
+use crate::quant::{GradQuantizer, Scheme};
 use crate::runtime::ComputeHandle;
+
+// The message type lives with the rest of the exchange machinery in
+// `comm`; re-exported here because workers are its producers.
+pub use crate::comm::WorkerMsg;
 
 /// Commands from the server/trainer to a worker.
 pub enum WorkerCmd {
     /// Run round `round` against the given (logically replicated) params.
     Round { round: u64, params: Arc<Vec<f32>> },
     Shutdown,
-}
-
-/// A worker's per-round result message (what crosses the "network").
-pub struct WorkerMsg {
-    pub worker: usize,
-    pub round: u64,
-    pub loss: f32,
-    pub wire: WireMsg,
 }
 
 /// The task a worker computes gradients for.

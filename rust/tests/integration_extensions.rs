@@ -12,6 +12,38 @@ fn have_artifacts() -> bool {
 }
 
 #[test]
+fn async_trainer_rejects_ndqsg_at_construction() {
+    // needs no artifacts: the scheme check fires before the compute
+    // service starts. NDQSG decode needs Alg.-2 side information, which
+    // only a synchronous round can bootstrap — the async trainer must say
+    // so up front instead of mis-decoding with side = None at runtime.
+    let cfg = TrainConfig {
+        scheme: Scheme::Nested {
+            d1: 1.0 / 3.0,
+            ratio: 3,
+            alpha: 1.0,
+        },
+        ..TrainConfig::default()
+    };
+    let err = match AsyncTrainer::new(cfg, 2) {
+        Ok(_) => panic!("NDQSG must be rejected by the async trainer"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("side information"), "{err}");
+
+    // the P2 group split is a synchronous concept too
+    let cfg = TrainConfig {
+        scheme_p2: Some(Scheme::Dithered { delta: 0.5 }),
+        ..TrainConfig::default()
+    };
+    let err = match AsyncTrainer::new(cfg, 2) {
+        Ok(_) => panic!("scheme_p2 must be rejected by the async trainer"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("single scheme"), "{err}");
+}
+
+#[test]
 fn async_trainer_learns_with_dqsg() {
     if !have_artifacts() {
         eprintln!("skipping (run `make artifacts`)");

@@ -1,0 +1,285 @@
+//! The `comm::Session` / `RoundAggregator` contract, pinned against
+//! history: for every arrival permutation of a round's message set, the
+//! streaming aggregator must produce a **bit-identical** average to the
+//! original batch `Server::decode_round` (wire-protocol v2 era), whose
+//! exact math is kept below as `RefServer` — a verbatim reference
+//! implementation, deliberately duplicated here so refactors of the
+//! production path cannot silently move the goalposts.
+
+use ndq::comm::{Session, WorkerMsg};
+use ndq::prng::{DitherStream, Xoshiro256};
+use ndq::quant::{frame_slices, GradQuantizer, Scheme, SchemeId, SchemeRegistry};
+
+// ---------------------------------------------------------------------------
+// Reference implementation: the pre-session batch decoder.
+// ---------------------------------------------------------------------------
+
+struct RefServer {
+    registry: SchemeRegistry,
+    worker_ids: Vec<SchemeId>,
+    streams: Vec<DitherStream>,
+    in_p1: Vec<bool>,
+    n_params: usize,
+}
+
+impl RefServer {
+    fn new(schemes: &[Scheme], run_seed: u64, n_params: usize) -> RefServer {
+        RefServer {
+            registry: SchemeRegistry::from_schemes(schemes).unwrap(),
+            worker_ids: schemes.iter().map(|s| s.id()).collect(),
+            streams: (0..schemes.len())
+                .map(|p| DitherStream::new(run_seed, p as u32))
+                .collect(),
+            in_p1: schemes.iter().map(|s| !s.needs_side_info()).collect(),
+            n_params,
+        }
+    }
+
+    /// Verbatim port of the original `Server::decode_round`: sort by worker
+    /// id, P1 pass building the running average, then P2 pass decoding each
+    /// message against (and folding it into) that running average.
+    fn decode_round(&self, msgs: &[WorkerMsg]) -> ndq::Result<Vec<f32>> {
+        anyhow::ensure!(!msgs.is_empty(), "no worker messages");
+        for msg in msgs {
+            anyhow::ensure!(msg.worker < self.worker_ids.len(), "unknown worker");
+            anyhow::ensure!(msg.wire.scheme == self.worker_ids[msg.worker], "spoof");
+            anyhow::ensure!(msg.wire.n() == self.n_params, "bad n");
+        }
+        let mut order: Vec<usize> = (0..msgs.len()).collect();
+        order.sort_by_key(|&i| msgs[i].worker);
+        for w in order.windows(2) {
+            anyhow::ensure!(
+                msgs[w[0]].worker != msgs[w[1]].worker,
+                "duplicate worker"
+            );
+        }
+
+        let mut avg = vec![0f32; self.n_params];
+        let mut count = 0usize;
+        for &i in &order {
+            let msg = &msgs[i];
+            if self.in_p1[msg.worker] {
+                let g = self.decode_one(msg, None)?;
+                accumulate(&mut avg, &g, &mut count);
+            }
+        }
+        anyhow::ensure!(
+            count > 0 || msgs.iter().all(|m| self.in_p1[m.worker]),
+            "NDQSG requires at least one P1 worker"
+        );
+        for &i in &order {
+            let msg = &msgs[i];
+            if !self.in_p1[msg.worker] {
+                let g = self.decode_one(msg, Some(&avg))?;
+                accumulate(&mut avg, &g, &mut count);
+            }
+        }
+        Ok(avg)
+    }
+
+    fn decode_one(&self, msg: &WorkerMsg, side: Option<&[f32]>) -> ndq::Result<Vec<f32>> {
+        let mut gen = self.streams[msg.worker].round(msg.round);
+        self.registry.decode(&msg.wire, &mut gen, side)
+    }
+}
+
+fn accumulate(avg: &mut [f32], g: &[f32], count: &mut usize) {
+    *count += 1;
+    let inv = 1.0 / *count as f32;
+    for (a, &gi) in avg.iter_mut().zip(g) {
+        *a += (gi - *a) * inv;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+fn correlated_grads(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::new(seed);
+    let base: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.2).collect();
+    (0..p)
+        .map(|_| {
+            base.iter()
+                .map(|&b| b + rng.next_normal() * 0.01)
+                .collect()
+        })
+        .collect()
+}
+
+/// Encode each worker's gradient as a `tensor_frames`-frame wire message.
+fn make_msgs(
+    schemes: &[Scheme],
+    gs: &[Vec<f32>],
+    run_seed: u64,
+    round: u64,
+    tensor_frames: usize,
+) -> Vec<WorkerMsg> {
+    gs.iter()
+        .enumerate()
+        .map(|(p, g)| {
+            let mut q = schemes[p].build();
+            let stream = DitherStream::new(run_seed, p as u32);
+            let slices = frame_slices(g, tensor_frames);
+            let wire = q.encode_tensors(&slices, &mut stream.round(round));
+            WorkerMsg {
+                worker: p,
+                round,
+                loss: 0.0,
+                wire,
+            }
+        })
+        .collect()
+}
+
+fn shuffled(len: usize, rng: &mut Xoshiro256) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..len).collect();
+    for i in (1..len).rev() {
+        let j = rng.next_below(i as u32 + 1) as usize;
+        order.swap(i, j);
+    }
+    order
+}
+
+/// Stream the messages into `session` in the given arrival order and
+/// assert the finished average is bit-identical to `reference`.
+fn assert_permutation_matches(
+    session: &mut Session,
+    msgs: &[WorkerMsg],
+    order: &[usize],
+    reference: &[f32],
+) {
+    let mut agg = session.begin_round();
+    for &i in order {
+        agg.push(msgs[i].clone()).unwrap();
+    }
+    let got = agg.finish().unwrap();
+    assert_eq!(
+        got, reference,
+        "aggregate depends on arrival order {order:?}"
+    );
+    session.recycle(got);
+}
+
+// ---------------------------------------------------------------------------
+// The property tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_permutation_bit_identity_every_scheme_mix() {
+    // one worker per wire scheme id — the full codec zoo in one round,
+    // NDQSG included (worker 6 is the sole P2 member) — multi-frame
+    // messages, 24 random arrival permutations per round
+    let schemes = vec![
+        Scheme::Baseline,
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::DitheredPartitioned { delta: 0.5, k: 4 },
+        Scheme::Qsgd { m: 1 },
+        Scheme::Terngrad,
+        Scheme::OneBit,
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+    ];
+    let n = 1500;
+    let gs = correlated_grads(n, schemes.len(), 42);
+    let mut rng = Xoshiro256::new(0xA11);
+    let mut session = Session::new(&schemes, 7, n).unwrap();
+    for (round, frames) in [(0u64, 1usize), (1, 3), (2, 5)] {
+        let msgs = make_msgs(&schemes, &gs, 7, round, frames);
+        let reference = RefServer::new(&schemes, 7, n).decode_round(&msgs).unwrap();
+        // batch path through the same session
+        assert_eq!(session.decode_round(&msgs).unwrap(), reference);
+        // streaming path over random arrival orders, one shared session
+        // (proves scratch reuse across rounds cannot leak state)
+        for _ in 0..24 {
+            let order = shuffled(msgs.len(), &mut rng);
+            assert_permutation_matches(&mut session, &msgs, &order, &reference);
+        }
+    }
+}
+
+#[test]
+fn prop_permutation_bit_identity_ndqsg_group_split() {
+    // the Fig.-6 deployment: P1 = 2x DQSG, P2 = 3x NDQSG — side information
+    // is built from P1 and refined sequentially through P2, so this is the
+    // mix where arrival order would matter if canonicalization were broken
+    let schemes = vec![
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+    ];
+    let n = 2000;
+    let mut rng = Xoshiro256::new(0xB22);
+    let mut session = Session::new(&schemes, 21, n).unwrap();
+    for round in 0..4u64 {
+        let gs = correlated_grads(n, schemes.len(), 500 + round);
+        let msgs = make_msgs(&schemes, &gs, 21, round, 2);
+        let reference = RefServer::new(&schemes, 21, n)
+            .decode_round(&msgs)
+            .unwrap();
+        for _ in 0..30 {
+            let order = shuffled(msgs.len(), &mut rng);
+            assert_permutation_matches(&mut session, &msgs, &order, &reference);
+        }
+        // the P2-first worst case explicitly (all queued until bootstrap)
+        assert_permutation_matches(&mut session, &msgs, &[4, 3, 2, 1, 0], &reference);
+    }
+}
+
+#[test]
+fn prop_partial_round_matches_reference_subset_semantics() {
+    // rounds where some workers never report: the aggregator must fold the
+    // present subset exactly like the reference decodes that subset
+    let schemes = vec![
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+    ];
+    let n = 900;
+    let gs = correlated_grads(n, schemes.len(), 9);
+    let msgs = make_msgs(&schemes, &gs, 5, 0, 1);
+    let reference_server = RefServer::new(&schemes, 5, n);
+    let mut session = Session::new(&schemes, 5, n).unwrap();
+    let mut rng = Xoshiro256::new(0xC33);
+    // drop each worker in turn, and a couple of two-worker drops
+    let subsets: Vec<Vec<usize>> = vec![
+        vec![1, 2, 3, 4],
+        vec![0, 2, 3, 4],
+        vec![0, 1, 3, 4],
+        vec![0, 1, 2, 4],
+        vec![0, 1, 2, 3],
+        vec![0, 3, 4],
+        vec![1, 2],
+    ];
+    for subset in subsets {
+        let sub_msgs: Vec<WorkerMsg> = subset.iter().map(|&i| msgs[i].clone()).collect();
+        let reference = reference_server.decode_round(&sub_msgs).unwrap();
+        for _ in 0..10 {
+            let order = shuffled(sub_msgs.len(), &mut rng);
+            assert_permutation_matches(&mut session, &sub_msgs, &order, &reference);
+        }
+    }
+}
+
+#[test]
+fn aggregator_and_reference_agree_on_bootstrap_failure() {
+    // a round carrying only P2 messages must fail in both implementations
+    let schemes = vec![
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+    ];
+    let n = 300;
+    let gs = correlated_grads(n, schemes.len(), 4);
+    let msgs = make_msgs(&schemes, &gs, 2, 0, 1);
+    let p2_only: Vec<WorkerMsg> = msgs[1..].to_vec();
+    assert!(RefServer::new(&schemes, 2, n).decode_round(&p2_only).is_err());
+    let mut session = Session::new(&schemes, 2, n).unwrap();
+    assert!(session.decode_round(&p2_only).is_err());
+    // and the very next full round on the same session succeeds
+    let reference = RefServer::new(&schemes, 2, n).decode_round(&msgs).unwrap();
+    assert_eq!(session.decode_round(&msgs).unwrap(), reference);
+}

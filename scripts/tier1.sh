@@ -33,6 +33,12 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
+# Examples and benches are the exemplar code for the crate's public API —
+# build them too so API migrations can't silently rot them (they are not
+# compiled by `cargo build`/`cargo test` alone).
+echo "== cargo build --release --examples --benches =="
+cargo build --release --examples --benches
+
 echo "== cargo test -q =="
 cargo test -q
 
