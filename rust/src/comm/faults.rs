@@ -1,0 +1,597 @@
+//! Deterministic fault injection for the gradient exchange.
+//!
+//! The paper's robustness claims (DQSG behaves like unquantized SG plus
+//! *independent bounded* noise; NDQSG matches that bound at fewer bits) are
+//! only interesting if the exchange survives an imperfect network. This
+//! module provides the network: a [`FaultPlan`] describing *what goes
+//! wrong* (per worker × round), and a [`FaultChannel`] that sits between
+//! the worker senders and the server receiver and applies the plan —
+//! reproducibly, as a pure function of the plan seed, so two runs with the
+//! same seed see bit-identical fault sequences regardless of thread timing.
+//!
+//! Faults are expressed at the transport layer: what the server sees is a
+//! stream of [`ChannelEvent`]s carrying either the raw wire **bytes** that
+//! survived the link (possibly corrupted — the receiver must re-parse and
+//! CRC-check them, exactly as a socket reader would) or a `Lost` marker for
+//! a message the link swallowed. `Lost` markers are what keep the
+//! synchronous round loop deadlock-free under drops: the receiver learns
+//! the *fate* of every live worker each round without trusting a timeout.
+//!
+//! # Plan grammar
+//!
+//! A plan parses from a `;`-separated spec (the `--fault-plan` CLI flag and
+//! the `fault_plan` config key):
+//!
+//! ```text
+//! seed:S              override the fault-decision seed (default: run seed)
+//! drop:P              iid drop with probability P per (worker, round)
+//! corrupt:P           iid single-byte payload corruption with probability P
+//! drop:wW@rR          drop worker W's round-R message
+//! delay:wW@rR+K       deliver worker W's round-R message K rounds late
+//! dup:wW@rR           deliver worker W's round-R message twice
+//! corrupt:wW@rR       flip one payload byte of worker W's round-R message
+//! disconnect:wW@rR    worker W sends nothing from round R on
+//! straggle:wWxF       worker W's virtual link time is multiplied by F
+//! ```
+//!
+//! e.g. `--fault-plan "drop:0.1;straggle:w2x8;disconnect:w3@r40"`.
+//!
+//! Scripted `wW@rR` entries take precedence over the probabilistic
+//! channels; `disconnect` dominates everything from its round onward.
+
+use std::collections::BTreeMap;
+
+use super::WorkerMsg;
+use crate::prng::philox::splitmix64;
+use crate::sim::LinkModel;
+
+/// One injected fault, applied to a single (worker, round) message.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// The message never arrives.
+    Drop,
+    /// The message arrives `rounds` rounds late (stale on arrival).
+    Delay { rounds: u64 },
+    /// The message arrives twice.
+    Duplicate,
+    /// One payload byte is flipped (the CRC must catch it).
+    Corrupt,
+    /// The worker sends nothing from this round on.
+    Disconnect,
+}
+
+/// A deterministic per-(worker × round) fault schedule.
+///
+/// The empty plan (`FaultPlan::default()`) injects nothing; every decision
+/// is a pure function of `(seed, worker, round)`, so the plan can be
+/// consulted from any thread in any order without changing the outcome.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Explicit seed; `None` = derive from the run seed at channel build.
+    seed: Option<u64>,
+    /// iid drop probability per (worker, round).
+    drop_prob: f64,
+    /// iid single-byte corruption probability per (worker, round).
+    corrupt_prob: f64,
+    /// Scripted faults: (worker, round) -> fault (wins over probabilistic).
+    scripted: BTreeMap<(usize, u64), Fault>,
+    /// worker -> first round from which nothing is sent.
+    disconnect_at: BTreeMap<usize, u64>,
+    /// worker -> virtual link-time multiplier (permanent stragglers).
+    straggle: BTreeMap<usize, f64>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Whether the plan injects anything at all.
+    pub fn is_empty(&self) -> bool {
+        self.drop_prob == 0.0
+            && self.corrupt_prob == 0.0
+            && self.scripted.is_empty()
+            && self.disconnect_at.is_empty()
+            && self.straggle.is_empty()
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn drop_prob(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "drop probability in [0,1]");
+        self.drop_prob = p;
+        self
+    }
+
+    pub fn corrupt_prob(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "corrupt probability in [0,1]");
+        self.corrupt_prob = p;
+        self
+    }
+
+    pub fn drop_at(mut self, worker: usize, round: u64) -> Self {
+        self.scripted.insert((worker, round), Fault::Drop);
+        self
+    }
+
+    pub fn delay_at(mut self, worker: usize, round: u64, by: u64) -> Self {
+        assert!(by >= 1, "delay must be >= 1 round");
+        self.scripted.insert((worker, round), Fault::Delay { rounds: by });
+        self
+    }
+
+    pub fn duplicate_at(mut self, worker: usize, round: u64) -> Self {
+        self.scripted.insert((worker, round), Fault::Duplicate);
+        self
+    }
+
+    pub fn corrupt_at(mut self, worker: usize, round: u64) -> Self {
+        self.scripted.insert((worker, round), Fault::Corrupt);
+        self
+    }
+
+    pub fn disconnect_at(mut self, worker: usize, round: u64) -> Self {
+        self.disconnect_at.insert(worker, round);
+        self
+    }
+
+    /// Permanent straggler: worker's virtual message time × `factor`.
+    pub fn straggle(mut self, worker: usize, factor: f64) -> Self {
+        assert!(factor > 0.0, "straggle factor must be positive");
+        self.straggle.insert(worker, factor);
+        self
+    }
+
+    /// The fault (if any) for worker `worker`'s round-`round` message,
+    /// under fallback seed `seed` (used when the plan has no explicit one).
+    pub fn fault_for(&self, seed: u64, worker: usize, round: u64) -> Option<Fault> {
+        if let Some(&at) = self.disconnect_at.get(&worker) {
+            if round >= at {
+                return Some(Fault::Disconnect);
+            }
+        }
+        if let Some(&f) = self.scripted.get(&(worker, round)) {
+            return Some(f);
+        }
+        let s = self.seed.unwrap_or(seed);
+        if self.drop_prob > 0.0 && u01(mix(s, worker, round, 0xD20B)) < self.drop_prob {
+            return Some(Fault::Drop);
+        }
+        if self.corrupt_prob > 0.0 && u01(mix(s, worker, round, 0xC022)) < self.corrupt_prob {
+            return Some(Fault::Corrupt);
+        }
+        None
+    }
+
+    /// Virtual link-time multiplier for `worker` (1.0 = nominal).
+    pub fn straggle_factor(&self, worker: usize) -> f64 {
+        self.straggle.get(&worker).copied().unwrap_or(1.0)
+    }
+
+    /// Parse the `;`-separated plan grammar (see the module docs).
+    pub fn parse(spec: &str) -> crate::Result<FaultPlan> {
+        let mut plan = FaultPlan::new();
+        for directive in spec.split(';') {
+            let directive = directive.trim();
+            if directive.is_empty() {
+                continue;
+            }
+            let (kind, arg) = directive.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("fault directive `{directive}` needs a `kind:arg` form")
+            })?;
+            match kind {
+                "seed" => plan = plan.with_seed(arg.parse()?),
+                "drop" => {
+                    if let Some((w, r)) = parse_wr(arg)? {
+                        plan = plan.drop_at(w, r);
+                    } else {
+                        plan = plan.drop_prob(parse_prob(kind, arg)?);
+                    }
+                }
+                "corrupt" => {
+                    if let Some((w, r)) = parse_wr(arg)? {
+                        plan = plan.corrupt_at(w, r);
+                    } else {
+                        plan = plan.corrupt_prob(parse_prob(kind, arg)?);
+                    }
+                }
+                "delay" => {
+                    let (head, k) = arg.split_once('+').ok_or_else(|| {
+                        anyhow::anyhow!("delay needs `wW@rR+K`, got `{arg}`")
+                    })?;
+                    let (w, r) = parse_wr(head)?
+                        .ok_or_else(|| anyhow::anyhow!("delay needs `wW@rR+K`, got `{arg}`"))?;
+                    plan = plan.delay_at(w, r, k.parse()?);
+                }
+                "dup" => {
+                    let (w, r) = parse_wr(arg)?
+                        .ok_or_else(|| anyhow::anyhow!("dup needs `wW@rR`, got `{arg}`"))?;
+                    plan = plan.duplicate_at(w, r);
+                }
+                "disconnect" => {
+                    let (w, r) = parse_wr(arg)?
+                        .ok_or_else(|| anyhow::anyhow!("disconnect needs `wW@rR`, got `{arg}`"))?;
+                    plan = plan.disconnect_at(w, r);
+                }
+                "straggle" => {
+                    let body = arg
+                        .strip_prefix('w')
+                        .ok_or_else(|| anyhow::anyhow!("straggle needs `wWxF`, got `{arg}`"))?;
+                    let (w, f) = body
+                        .split_once('x')
+                        .ok_or_else(|| anyhow::anyhow!("straggle needs `wWxF`, got `{arg}`"))?;
+                    plan = plan.straggle(w.parse()?, f.parse()?);
+                }
+                _ => anyhow::bail!(
+                    "unknown fault directive `{kind}` \
+                     (seed|drop|corrupt|delay|dup|disconnect|straggle)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// `wW@rR` -> Some((W, R)); anything not starting with `w` -> None (so the
+/// caller can fall back to a probability argument).
+fn parse_wr(arg: &str) -> crate::Result<Option<(usize, u64)>> {
+    let Some(body) = arg.strip_prefix('w') else {
+        return Ok(None);
+    };
+    let (w, r) = body
+        .split_once("@r")
+        .ok_or_else(|| anyhow::anyhow!("expected `wW@rR`, got `{arg}`"))?;
+    Ok(Some((w.parse()?, r.parse()?)))
+}
+
+fn parse_prob(kind: &str, arg: &str) -> crate::Result<f64> {
+    let p: f64 = arg.parse()?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&p),
+        "{kind} probability {p} outside [0,1]"
+    );
+    Ok(p)
+}
+
+/// Deterministic per-(seed, worker, round, salt) decision word.
+fn mix(seed: u64, worker: usize, round: u64, salt: u64) -> u64 {
+    splitmix64(
+        seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (worker as u64).wrapping_mul(0xA24B_AED4_963E_E407)
+            ^ round.wrapping_mul(0x9FB2_1C65_1E98_DF25),
+    )
+}
+
+/// Uniform in [0,1) from a mixed word.
+fn u01(x: u64) -> f64 {
+    (x >> 11) as f64 / 9_007_199_254_740_992.0
+}
+
+/// What the link delivered (or didn't) for one sent message.
+#[derive(Debug, Clone)]
+pub enum Delivery {
+    /// Transport bytes as they left the channel — possibly corrupted; the
+    /// receiver must `WireMsg::parse` (CRC-check) them.
+    Bytes(Vec<u8>),
+    /// The link swallowed the message. `bits` = framed bits it carried.
+    Lost { bits: u64, fault: Fault },
+}
+
+/// One event on the server side of a [`FaultChannel`].
+#[derive(Debug, Clone)]
+pub struct ChannelEvent {
+    pub worker: usize,
+    /// The round the *encoder* keyed its dither with (stale if it no longer
+    /// matches the receiver's current round).
+    pub round: u64,
+    pub loss: f32,
+    /// Virtual arrival time within the round on the simulated link
+    /// (straggle factors and seeded jitter included) — what the `Deadline`
+    /// round policy compares against.
+    pub arrival_s: f64,
+    pub payload: Delivery,
+}
+
+/// The faulty link: feed worker messages in, get [`ChannelEvent`]s out.
+///
+/// One channel instance serves all workers of one receiver (per-message
+/// decisions are pure functions of the plan, so a single instance stays
+/// deterministic no matter which thread hands it messages). Delayed
+/// messages are parked inside the channel and released by
+/// [`FaultChannel::flush`] once their release round is reached.
+#[derive(Debug)]
+pub struct FaultChannel {
+    plan: FaultPlan,
+    /// Fallback decision seed (the run seed).
+    seed: u64,
+    link: LinkModel,
+    /// Delay-parked messages: (release round, message).
+    parked: Vec<(u64, WorkerMsg)>,
+    /// Workers the plan has permanently disconnected (tombstone sent once).
+    disconnected: Vec<bool>,
+}
+
+impl FaultChannel {
+    pub fn new(plan: FaultPlan, run_seed: u64, workers: usize, link: LinkModel) -> Self {
+        Self {
+            plan,
+            seed: run_seed,
+            link,
+            parked: Vec::new(),
+            disconnected: vec![false; workers],
+        }
+    }
+
+    /// The plan this channel applies.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Whether the plan has permanently disconnected `worker`.
+    pub fn is_disconnected(&self, worker: usize) -> bool {
+        self.disconnected.get(worker).copied().unwrap_or(false)
+    }
+
+    /// Virtual arrival time for a `bits`-bit message from `worker` in
+    /// `round`: link transfer time × straggle factor × seeded ±10% jitter.
+    fn arrival(&self, worker: usize, round: u64, bits: u64) -> f64 {
+        let jitter = 0.9 + 0.2 * u01(mix(self.seed, worker, round, 0x71E2));
+        self.link.message_time(bits as f64) * self.plan.straggle_factor(worker) * jitter
+    }
+
+    /// Push one worker message through the link. Returns the events the
+    /// receiver sees *now* (0, 1 or 2 — delay parks the message instead).
+    pub fn feed(&mut self, msg: WorkerMsg) -> Vec<ChannelEvent> {
+        let (worker, round, loss) = (msg.worker, msg.round, msg.loss);
+        let bits = msg.wire.framed_bits() as u64;
+        let arrival_s = self.arrival(worker, round, bits);
+        match self.plan.fault_for(self.seed, worker, round) {
+            Some(Fault::Disconnect) => {
+                if worker < self.disconnected.len() && !self.disconnected[worker] {
+                    self.disconnected[worker] = true;
+                    // one tombstone so the receiver learns the worker died;
+                    // everything after is swallowed silently
+                    vec![ChannelEvent {
+                        worker,
+                        round,
+                        loss,
+                        arrival_s,
+                        payload: Delivery::Lost { bits, fault: Fault::Disconnect },
+                    }]
+                } else {
+                    Vec::new()
+                }
+            }
+            Some(Fault::Drop) => vec![ChannelEvent {
+                worker,
+                round,
+                loss,
+                arrival_s,
+                payload: Delivery::Lost { bits, fault: Fault::Drop },
+            }],
+            Some(Fault::Delay { rounds }) => {
+                self.parked.push((round + rounds, msg));
+                // the receiver must not wait for this message this round
+                vec![ChannelEvent {
+                    worker,
+                    round,
+                    loss,
+                    arrival_s,
+                    payload: Delivery::Lost { bits, fault: Fault::Delay { rounds } },
+                }]
+            }
+            Some(Fault::Duplicate) => {
+                let bytes = msg.wire.into_bytes();
+                let dup = ChannelEvent {
+                    worker,
+                    round,
+                    loss,
+                    // the copy trails the original on the link
+                    arrival_s: arrival_s * 1.5,
+                    payload: Delivery::Bytes(bytes.clone()),
+                };
+                vec![
+                    ChannelEvent {
+                        worker,
+                        round,
+                        loss,
+                        arrival_s,
+                        payload: Delivery::Bytes(bytes),
+                    },
+                    dup,
+                ]
+            }
+            Some(Fault::Corrupt) => {
+                let mut bytes = msg.wire.into_bytes();
+                // flip one mid-payload byte, position seeded from the plan
+                let idx = crate::quant::MSG_HEADER_BYTES
+                    + (mix(self.seed, worker, round, 0xB17E) as usize)
+                        % (bytes.len() - crate::quant::MSG_HEADER_BYTES);
+                bytes[idx] ^= 0x5A;
+                vec![ChannelEvent {
+                    worker,
+                    round,
+                    loss,
+                    arrival_s,
+                    payload: Delivery::Bytes(bytes),
+                }]
+            }
+            None => vec![ChannelEvent {
+                worker,
+                round,
+                loss,
+                arrival_s,
+                payload: Delivery::Bytes(msg.wire.into_bytes()),
+            }],
+        }
+    }
+
+    /// Release every delay-parked message whose release round has been
+    /// reached. Call at the start of round `round` (or with `u64::MAX` at
+    /// shutdown). Released messages keep their *original* round number —
+    /// they arrive stale by construction.
+    pub fn flush(&mut self, round: u64) -> Vec<ChannelEvent> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.parked.len() {
+            if self.parked[i].0 <= round {
+                let (_, msg) = self.parked.swap_remove(i);
+                let bits = msg.wire.framed_bits() as u64;
+                out.push(ChannelEvent {
+                    worker: msg.worker,
+                    round: msg.round,
+                    loss: msg.loss,
+                    arrival_s: self.arrival(msg.worker, msg.round, bits),
+                    payload: Delivery::Bytes(msg.wire.into_bytes()),
+                });
+            } else {
+                i += 1;
+            }
+        }
+        // deterministic release order regardless of parking order
+        out.sort_by(|a, b| (a.worker, a.round).cmp(&(b.worker, b.round)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::DitherStream;
+    use crate::quant::{GradQuantizer, Scheme, WireMsg};
+
+    fn msg(worker: usize, round: u64) -> WorkerMsg {
+        let mut q = Scheme::Dithered { delta: 1.0 }.build();
+        let stream = DitherStream::new(3, worker as u32);
+        let g: Vec<f32> = (0..64).map(|i| (i as f32 * 0.1).sin()).collect();
+        WorkerMsg {
+            worker,
+            round,
+            loss: 0.5,
+            wire: q.encode(&g, &mut stream.round(round)),
+        }
+    }
+
+    #[test]
+    fn grammar_roundtrip() {
+        let plan = FaultPlan::parse(
+            "seed:9;drop:0.25;corrupt:0.1;drop:w1@r3;delay:w0@r2+4;dup:w2@r5;\
+             corrupt:w3@r7;disconnect:w4@r10;straggle:w2x8.5",
+        )
+        .unwrap();
+        assert_eq!(
+            plan,
+            FaultPlan::new()
+                .with_seed(9)
+                .drop_prob(0.25)
+                .corrupt_prob(0.1)
+                .drop_at(1, 3)
+                .delay_at(0, 2, 4)
+                .duplicate_at(2, 5)
+                .corrupt_at(3, 7)
+                .disconnect_at(4, 10)
+                .straggle(2, 8.5)
+        );
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("bogus:1").is_err());
+        assert!(FaultPlan::parse("drop:1.5").is_err());
+        assert!(FaultPlan::parse("delay:w1@r2").is_err());
+        assert!(FaultPlan::parse("straggle:w1").is_err());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_seed_sensitive() {
+        let plan = FaultPlan::new().drop_prob(0.3).corrupt_prob(0.1);
+        let a: Vec<Option<Fault>> = (0..200)
+            .map(|r| plan.fault_for(7, r as usize % 4, r))
+            .collect();
+        let b: Vec<Option<Fault>> = (0..200)
+            .map(|r| plan.fault_for(7, r as usize % 4, r))
+            .collect();
+        assert_eq!(a, b, "same seed must give the same fault sequence");
+        let c: Vec<Option<Fault>> = (0..200)
+            .map(|r| plan.fault_for(8, r as usize % 4, r))
+            .collect();
+        assert_ne!(a, c, "different seed should change the sequence");
+        let drops = a.iter().filter(|f| **f == Some(Fault::Drop)).count();
+        assert!((30..90).contains(&drops), "drop rate off: {drops}/200");
+        // an explicit plan seed makes the fallback seed irrelevant
+        let pinned = plan.clone().with_seed(42);
+        assert_eq!(pinned.fault_for(1, 2, 3), pinned.fault_for(99, 2, 3));
+    }
+
+    #[test]
+    fn scripted_faults_beat_probabilistic_and_disconnect_dominates() {
+        let plan = FaultPlan::new()
+            .drop_prob(1.0)
+            .duplicate_at(0, 5)
+            .disconnect_at(0, 8);
+        assert_eq!(plan.fault_for(0, 0, 4), Some(Fault::Drop));
+        assert_eq!(plan.fault_for(0, 0, 5), Some(Fault::Duplicate));
+        assert_eq!(plan.fault_for(0, 0, 8), Some(Fault::Disconnect));
+        assert_eq!(plan.fault_for(0, 0, 100), Some(Fault::Disconnect));
+    }
+
+    #[test]
+    fn channel_applies_each_fault_kind() {
+        let plan = FaultPlan::new()
+            .drop_at(0, 0)
+            .corrupt_at(1, 0)
+            .duplicate_at(2, 0)
+            .delay_at(3, 0, 2)
+            .disconnect_at(4, 0);
+        let mut ch = FaultChannel::new(plan, 11, 6, LinkModel::gigabit());
+
+        let ev = ch.feed(msg(0, 0));
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(ev[0].payload, Delivery::Lost { fault: Fault::Drop, bits } if bits > 0));
+
+        let ev = ch.feed(msg(1, 0));
+        let Delivery::Bytes(b) = &ev[0].payload else {
+            panic!("corrupt must still deliver bytes")
+        };
+        assert!(WireMsg::parse(b.clone()).is_err(), "CRC must catch the flip");
+
+        let ev = ch.feed(msg(2, 0));
+        assert_eq!(ev.len(), 2, "duplicate delivers twice");
+        assert!(ev[1].arrival_s > ev[0].arrival_s);
+
+        let ev = ch.feed(msg(3, 0));
+        assert!(matches!(
+            ev[0].payload,
+            Delivery::Lost { fault: Fault::Delay { rounds: 2 }, .. }
+        ));
+        assert!(ch.flush(1).is_empty(), "released only at round 2");
+        let released = ch.flush(2);
+        assert_eq!(released.len(), 1);
+        assert_eq!(released[0].round, 0, "released message keeps its round");
+
+        let ev = ch.feed(msg(4, 0));
+        assert!(matches!(
+            ev[0].payload,
+            Delivery::Lost { fault: Fault::Disconnect, .. }
+        ));
+        assert!(ch.is_disconnected(4));
+        assert!(ch.feed(msg(4, 1)).is_empty(), "silent after the tombstone");
+
+        // untouched worker passes through byte-identical
+        let clean = msg(5, 0);
+        let want = clean.wire.bytes().to_vec();
+        let ev = ch.feed(clean);
+        let Delivery::Bytes(b) = &ev[0].payload else { panic!() };
+        assert_eq!(*b, want);
+    }
+
+    #[test]
+    fn straggler_arrival_times_scale() {
+        let plan = FaultPlan::new().straggle(1, 10.0);
+        let mut ch = FaultChannel::new(plan, 5, 2, LinkModel::gigabit());
+        let e0 = ch.feed(msg(0, 0)).remove(0);
+        let e1 = ch.feed(msg(1, 0)).remove(0);
+        // ±10% jitter cannot mask a 10x straggle factor
+        assert!(e1.arrival_s > 5.0 * e0.arrival_s);
+    }
+}

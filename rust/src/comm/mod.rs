@@ -22,16 +22,27 @@
 //!   is a pure function of the message *set* (bit-identical under any
 //!   network reordering).
 //! * [`CommStats`] — the Tables-1/2 communication metrics, recorded by the
-//!   session on every accepted upload.
+//!   session on every accepted upload — plus the fault ledger
+//!   (dropped/duplicate/rejected/late bits) for runs over an imperfect
+//!   link.
+//! * [`faults`] — the imperfect link itself: a seeded [`FaultPlan`]
+//!   (drop/delay/duplicate/corrupt/disconnect per worker × round) applied
+//!   by a [`FaultChannel`], and consumed by the policy-aware [`Exchange`]
+//!   round front end ([`Session::begin_exchange`]) under a [`RoundPolicy`]
+//!   (`WaitAll` / `Quorum(k)` / `Deadline(t)`).
 //!
 //! The decode hot path is allocation-free per frame: payloads decode
 //! through [`crate::quant::GradQuantizer::decode_frame_into`] into pooled
 //! buffers that the session reuses across messages *and* rounds.
 
+pub mod faults;
 mod session;
 mod stats;
 
-pub use self::session::{RoundAggregator, Session};
+pub use self::faults::{ChannelEvent, Delivery, Fault, FaultChannel, FaultPlan};
+pub use self::session::{
+    Exchange, ExchangeError, RoundAggregator, RoundOutcome, RoundPolicy, Session,
+};
 pub use self::stats::CommStats;
 
 use crate::quant::WireMsg;

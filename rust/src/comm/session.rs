@@ -34,9 +34,95 @@
 //! decode path performs **zero per-frame heap allocations** (see
 //! [`crate::quant::GradQuantizer::decode_frame_into`]).
 
+use super::faults::{ChannelEvent, Delivery, Fault};
 use super::{CommStats, WorkerMsg};
 use crate::prng::DitherStream;
 use crate::quant::{GradQuantizer, Scheme, SchemeId, SchemeRegistry, WireMsg};
+
+/// When a synchronous round is allowed to complete.
+///
+/// * `WaitAll` — the historical behaviour: wait until the fate of every
+///   live worker's message is known (delivered, lost, or rejected).
+/// * `Quorum(k)` — finish as soon as `k` *valid* messages folded. The fold
+///   is the running mean over the received set, so the aggregate is already
+///   scaled by `1/|received|`.
+/// * `Deadline(t)` — like `WaitAll`, but a message whose virtual arrival
+///   time (stamped by the [`super::faults::FaultChannel`] from the
+///   [`crate::sim::LinkModel`] message times) exceeds `t` seconds is
+///   rejected as late instead of folded. `Deadline(f64::INFINITY)` accepts
+///   everything `WaitAll` would.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RoundPolicy {
+    WaitAll,
+    Quorum(usize),
+    Deadline(f64),
+}
+
+impl RoundPolicy {
+    /// Parse CLI/config syntax: `waitall`, `quorum:K`, `deadline:SECS`
+    /// (`deadline:inf` accepted).
+    pub fn parse(s: &str) -> crate::Result<RoundPolicy> {
+        match s.split_once(':') {
+            None if s == "waitall" => Ok(RoundPolicy::WaitAll),
+            Some(("quorum", k)) => {
+                let k: usize = k.parse()?;
+                anyhow::ensure!(k >= 1, "quorum must be >= 1");
+                Ok(RoundPolicy::Quorum(k))
+            }
+            Some(("deadline", t)) => {
+                let t: f64 = t.parse()?;
+                anyhow::ensure!(t > 0.0, "deadline must be positive seconds");
+                Ok(RoundPolicy::Deadline(t))
+            }
+            _ => anyhow::bail!("unknown round policy `{s}` (waitall|quorum:K|deadline:SECS)"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            RoundPolicy::WaitAll => "waitall".into(),
+            RoundPolicy::Quorum(k) => format!("quorum:{k}"),
+            RoundPolicy::Deadline(t) => format!("deadline:{t}"),
+        }
+    }
+}
+
+/// Why a policy round could not produce an aggregate. Typed (not a rendered
+/// string) so drivers can tell a survivable degraded round from a protocol
+/// bug and react per variant.
+#[derive(Debug)]
+pub enum ExchangeError {
+    /// No valid message survived the round.
+    Empty { round: u64 },
+    /// NDQSG (P2) messages were queued but no P1 message arrived to
+    /// bootstrap the Alg.-2 side information — the queued messages are
+    /// discarded *undecoded* rather than mis-decoded against garbage.
+    NdqsgBootstrapMissing { round: u64, queued_p2: usize },
+    /// A message that passed validation failed during the canonical fold —
+    /// a protocol/codec bug, not a survivable network condition.
+    Decode { round: u64, message: String },
+}
+
+impl std::fmt::Display for ExchangeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExchangeError::Empty { round } => {
+                write!(f, "round {round}: no valid worker message survived the link")
+            }
+            ExchangeError::NdqsgBootstrapMissing { round, queued_p2 } => write!(
+                f,
+                "round {round}: {queued_p2} NDQSG message(s) queued but no P1 \
+                 message arrived to bootstrap side information (Alg. 2) — \
+                 round failed without decoding"
+            ),
+            ExchangeError::Decode { round, message } => {
+                write!(f, "round {round}: decode failed mid-fold: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExchangeError {}
 
 /// A negotiated gradient-exchange endpoint (the receiver side of Fig. 2):
 /// one per training run, shared by every round.
@@ -58,6 +144,9 @@ pub struct Session {
     streams: Vec<DitherStream>,
     n_params: usize,
     stats: CommStats,
+    /// Workers the fault channel has permanently disconnected: excluded
+    /// from every later round's `expected` count (persists across rounds).
+    dead: Vec<bool>,
 
     // ---- per-round aggregation state, reset by `begin_round` ----
     /// The running average (Alg. 2's side information once P1 folded).
@@ -128,6 +217,7 @@ impl Session {
             streams,
             n_params,
             stats: CommStats::new(false),
+            dead: vec![false; workers],
             avg: vec![0f32; n_params],
             count: 0,
             msgs_seen: 0,
@@ -163,6 +253,30 @@ impl Session {
         &self.stats
     }
 
+    /// Mutable ledger access for drivers that apply faults outside a policy
+    /// round (the async trainer's per-update path).
+    pub fn stats_mut(&mut self) -> &mut CommStats {
+        &mut self.stats
+    }
+
+    /// Whether `worker` has permanently disconnected.
+    pub fn is_dead(&self, worker: usize) -> bool {
+        self.dead.get(worker).copied().unwrap_or(false)
+    }
+
+    /// Workers still connected (what a policy round can expect to hear from).
+    pub fn live_workers(&self) -> usize {
+        self.dead.iter().filter(|d| !**d).count()
+    }
+
+    /// Mark `worker` permanently disconnected (also counted in the ledger).
+    pub fn mark_dead(&mut self, worker: usize) {
+        if worker < self.dead.len() && !self.dead[worker] {
+            self.dead[worker] = true;
+            self.stats.record_disconnect();
+        }
+    }
+
     /// Record one server -> workers broadcast (bits).
     pub fn record_broadcast(&mut self, bits: f64) {
         self.stats.record_broadcast(bits);
@@ -183,6 +297,29 @@ impl Session {
     /// Start a synchronous round: resets any abandoned round state and
     /// returns the streaming aggregator for this round's messages.
     pub fn begin_round(&mut self) -> RoundAggregator<'_> {
+        self.reset_round();
+        RoundAggregator { s: self }
+    }
+
+    /// Start a policy round at `round`: a fault-aware front end that
+    /// consumes [`ChannelEvent`]s (raw link bytes or loss tombstones)
+    /// instead of pre-validated messages. See [`Exchange`].
+    pub fn begin_exchange(&mut self, round: u64, policy: RoundPolicy) -> Exchange<'_> {
+        let expected = self.live_workers();
+        let workers = self.worker_ids.len();
+        Exchange {
+            s: self,
+            round,
+            policy,
+            accepted: Vec::new(),
+            accepted_from: vec![false; workers],
+            resolved: vec![false; workers],
+            n_resolved: 0,
+            expected,
+        }
+    }
+
+    fn reset_round(&mut self) {
         if self.avg.capacity() == 0 {
             if let Some(buf) = self.buf_pool.pop() {
                 self.avg = buf;
@@ -205,7 +342,6 @@ impl Session {
         }
         self.next_p1 = 0;
         self.next_p2 = 0;
-        RoundAggregator { s: self }
     }
 
     /// Batch convenience (and the old `Server::decode_round` contract):
@@ -439,6 +575,207 @@ impl RoundAggregator<'_> {
     /// allocation-free.
     pub fn finish(self) -> crate::Result<Vec<f32>> {
         self.s.finish_round()
+    }
+}
+
+/// The result of a completed policy round.
+#[derive(Debug)]
+pub struct RoundOutcome {
+    /// Mean gradient over the received set (already scaled by
+    /// `1/|received|` — the fold is a running mean).
+    pub average: Vec<f32>,
+    /// Valid messages folded into the average.
+    pub received: usize,
+    /// Live (non-disconnected) workers at round start.
+    pub expected: usize,
+    /// Mean training loss over the received messages.
+    pub mean_loss: f32,
+}
+
+/// Fault-aware front end for one synchronous round, created by
+/// [`Session::begin_exchange`].
+///
+/// Where [`RoundAggregator`] consumes pre-validated [`WorkerMsg`]s,
+/// `Exchange` consumes raw [`ChannelEvent`]s as a
+/// [`super::faults::FaultChannel`] emits them: transport bytes are
+/// re-parsed (CRC-checked), loss tombstones resolve a worker's fate
+/// without a timeout, stale/late/duplicate arrivals are attributed in the
+/// [`CommStats`] ledger, and the [`RoundPolicy`] decides when the round may
+/// complete.
+///
+/// Valid messages are buffered and folded at [`Exchange::finish`] in
+/// ascending worker order — the same canonical order as the streaming
+/// aggregator — so for any policy the aggregate (and the ledger) is a pure
+/// function of the event multiset: bit-identical across reruns and
+/// arrival permutations, and bit-identical to
+/// [`Session::decode_round`] when every message survives.
+pub struct Exchange<'s> {
+    s: &'s mut Session,
+    round: u64,
+    policy: RoundPolicy,
+    /// Valid, punctual messages awaiting the canonical fold.
+    accepted: Vec<WorkerMsg>,
+    /// Duplicate guard over `accepted`.
+    accepted_from: Vec<bool>,
+    /// Workers whose fate this round is known.
+    resolved: Vec<bool>,
+    n_resolved: usize,
+    expected: usize,
+}
+
+impl Exchange<'_> {
+    /// Feed one channel event. Never fails: malformed or ill-timed
+    /// arrivals are attributed in the ledger and discarded, exactly as a
+    /// server that must survive a hostile network would.
+    pub fn offer(&mut self, ev: ChannelEvent) {
+        let w = ev.worker;
+        match ev.payload {
+            Delivery::Lost { bits, fault } => {
+                self.s.stats.record_dropped(bits);
+                if let Fault::Disconnect = fault {
+                    self.s.mark_dead(w);
+                    self.resolve(w);
+                } else if ev.round == self.round {
+                    // this round's message will not arrive — don't wait
+                    self.resolve(w);
+                }
+            }
+            Delivery::Bytes(bytes) => {
+                let bits = bytes.len() as u64 * 8;
+                if w >= self.s.worker_ids.len() {
+                    self.s.stats.record_rejected(bits);
+                    return;
+                }
+                if ev.round != self.round {
+                    // stale: a delayed release (or post-quorum straggler
+                    // from an earlier round) — never folded, dither key no
+                    // longer matches the synchronous barrier
+                    self.s.stats.record_late(bits);
+                    return;
+                }
+                if self.accepted_from[w] {
+                    // redundant copy of an already-accepted message: billed
+                    // before the (whole-payload) CRC parse — its fate does
+                    // not depend on its bytes
+                    self.s.stats.record_duplicate(bits);
+                    return;
+                }
+                let wire = match WireMsg::parse(bytes) {
+                    Ok(wire) => wire,
+                    Err(_) => {
+                        // CRC/framing failure: reject, but the worker's
+                        // round message is spent — resolve it
+                        self.s.stats.record_rejected(bits);
+                        self.resolve(w);
+                        return;
+                    }
+                };
+                if let RoundPolicy::Deadline(t) = self.policy {
+                    if ev.arrival_s > t {
+                        self.s.stats.record_late(bits);
+                        self.resolve(w);
+                        return;
+                    }
+                }
+                if self.is_complete() {
+                    // the round already closed (quorum met): too late
+                    self.s.stats.record_late(bits);
+                    self.resolve(w);
+                    return;
+                }
+                if self.s.validate(w, &wire).is_err() {
+                    self.s.stats.record_rejected(bits);
+                    self.resolve(w);
+                    return;
+                }
+                self.accepted_from[w] = true;
+                self.accepted.push(WorkerMsg {
+                    worker: w,
+                    round: ev.round,
+                    loss: ev.loss,
+                    wire,
+                });
+                self.resolve(w);
+            }
+        }
+    }
+
+    fn resolve(&mut self, worker: usize) {
+        if worker < self.resolved.len() && !self.resolved[worker] {
+            self.resolved[worker] = true;
+            self.n_resolved += 1;
+        }
+    }
+
+    /// Whether the policy allows the round to complete now.
+    pub fn is_complete(&self) -> bool {
+        match self.policy {
+            RoundPolicy::Quorum(k) => {
+                self.accepted.len() >= k.min(self.expected).max(1)
+                    || self.n_resolved >= self.expected
+            }
+            RoundPolicy::WaitAll | RoundPolicy::Deadline(_) => {
+                self.n_resolved >= self.expected
+            }
+        }
+    }
+
+    /// Valid messages accepted so far.
+    pub fn received(&self) -> usize {
+        self.accepted.len()
+    }
+
+    /// Live workers this round could hear from.
+    pub fn expected(&self) -> usize {
+        self.expected
+    }
+
+    /// Complete the round: fold the accepted set in canonical ascending
+    /// worker order (P1 then P2, exactly as [`Session::decode_round`]) and
+    /// return the outcome, or a typed [`ExchangeError`] when no safe
+    /// aggregate exists.
+    pub fn finish(self) -> Result<RoundOutcome, ExchangeError> {
+        let Exchange { s, round, expected, mut accepted, .. } = self;
+        accepted.sort_by_key(|m| m.worker);
+        if accepted.is_empty() {
+            return Err(ExchangeError::Empty { round });
+        }
+        // NDQSG bootstrap precondition, checked *before* any P2 decode is
+        // attempted: queued P2 messages are discarded undecoded (their bits
+        // attributed as rejected), never decoded against garbage side info.
+        let has_p1 = accepted.iter().any(|m| s.in_p1[m.worker]);
+        if !has_p1 {
+            let queued_p2: Vec<&WorkerMsg> =
+                accepted.iter().filter(|m| !s.in_p1[m.worker]).collect();
+            if !queued_p2.is_empty() {
+                for m in &queued_p2 {
+                    s.stats.record_rejected(m.wire.framed_bits() as u64);
+                }
+                return Err(ExchangeError::NdqsgBootstrapMissing {
+                    round,
+                    queued_p2: queued_p2.len(),
+                });
+            }
+        }
+        let received = accepted.len();
+        let mean_loss = accepted.iter().map(|m| m.loss).sum::<f32>() / received as f32;
+        s.reset_round();
+        for m in accepted {
+            s.push_msg(m).map_err(|e| ExchangeError::Decode {
+                round,
+                message: e.to_string(),
+            })?;
+        }
+        let average = s.finish_round().map_err(|e| ExchangeError::Decode {
+            round,
+            message: e.to_string(),
+        })?;
+        Ok(RoundOutcome {
+            average,
+            received,
+            expected,
+            mean_loss,
+        })
     }
 }
 

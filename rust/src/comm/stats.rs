@@ -32,6 +32,27 @@ pub struct CommStats {
     pub messages: u64,
     /// Whether to run the (more expensive) AAC on every message.
     pub measure_aac: bool,
+
+    // ---- fault ledger -------------------------------------------------
+    // Messages that crossed (or tried to cross) the link but never folded
+    // into an aggregate. Bits are integer framed bits so every counter is
+    // an order-independent sum — two runs that see the same message
+    // multiset produce bit-identical ledgers no matter the arrival order.
+    /// Messages the link swallowed (drop / delay tombstones).
+    pub dropped_msgs: u64,
+    pub dropped_bits: u64,
+    /// Redundant copies of an already-accepted message.
+    pub duplicate_msgs: u64,
+    pub duplicate_bits: u64,
+    /// Messages rejected at the receiver (CRC/framing/validation failure).
+    pub rejected_msgs: u64,
+    pub rejected_bits: u64,
+    /// Messages that arrived after their round (deadline misses + stale
+    /// delay releases + post-quorum arrivals).
+    pub late_msgs: u64,
+    pub late_bits: u64,
+    /// Workers that disconnected permanently.
+    pub disconnects: u64,
 }
 
 impl CommStats {
@@ -68,6 +89,36 @@ impl CommStats {
     pub fn record_broadcast(&mut self, bits: f64) {
         self.bcast.push(bits);
         self.total_bcast_bits += bits;
+    }
+
+    pub fn record_dropped(&mut self, bits: u64) {
+        self.dropped_msgs += 1;
+        self.dropped_bits += bits;
+    }
+
+    pub fn record_duplicate(&mut self, bits: u64) {
+        self.duplicate_msgs += 1;
+        self.duplicate_bits += bits;
+    }
+
+    pub fn record_rejected(&mut self, bits: u64) {
+        self.rejected_msgs += 1;
+        self.rejected_bits += bits;
+    }
+
+    pub fn record_late(&mut self, bits: u64) {
+        self.late_msgs += 1;
+        self.late_bits += bits;
+    }
+
+    pub fn record_disconnect(&mut self) {
+        self.disconnects += 1;
+    }
+
+    /// Total messages that reached the link but never folded into an
+    /// aggregate (dropped + duplicate + rejected + late).
+    pub fn faulted_msgs(&self) -> u64 {
+        self.dropped_msgs + self.duplicate_msgs + self.rejected_msgs + self.late_msgs
     }
 
     /// Mean uplink Kbits per message (per worker per iteration) — the unit

@@ -2,7 +2,9 @@
 //! simple `key = value` config files, mirroring what the paper's §4 setup
 //! describes (models, workers, optimizer, batch split, quantizer per group).
 
+use crate::comm::{FaultPlan, RoundPolicy};
 use crate::quant::Scheme;
+use crate::sim::LinkModel;
 use std::collections::BTreeMap;
 
 /// Optimizer choice (paper uses SGD and Adam, lr decay 0.98/epoch).
@@ -65,6 +67,13 @@ pub struct TrainConfig {
     /// classic single-blob layout; >1 splits the flat gradient into that
     /// many framed tensors, each with its own scale).
     pub tensor_frames: usize,
+    /// Deterministic fault schedule applied between workers and server
+    /// (`None` = perfect network, the historical behaviour).
+    pub fault_plan: Option<FaultPlan>,
+    /// When a synchronous round may complete (WaitAll = historical).
+    pub round_policy: RoundPolicy,
+    /// Simulated link for virtual arrival times (Deadline policy).
+    pub link: LinkModel,
     pub artifacts_dir: String,
 }
 
@@ -86,6 +95,9 @@ impl Default for TrainConfig {
             eval_examples: 1024,
             quantize_broadcast: false,
             tensor_frames: 1,
+            fault_plan: None,
+            round_policy: RoundPolicy::WaitAll,
+            link: LinkModel::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -150,6 +162,15 @@ impl TrainConfig {
                     self.tensor_frames = v.parse()?;
                     anyhow::ensure!(self.tensor_frames >= 1, "tensor_frames must be >= 1");
                 }
+                "fault_plan" => {
+                    self.fault_plan = if v == "none" {
+                        None
+                    } else {
+                        Some(FaultPlan::parse(v)?)
+                    }
+                }
+                "round_policy" => self.round_policy = RoundPolicy::parse(v)?,
+                "link" => self.link = LinkModel::parse(v)?,
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
                 _ => anyhow::bail!("unknown config key `{k}`"),
             }
@@ -200,6 +221,31 @@ mod tests {
         c.apply_kv(&kv).unwrap();
         assert_eq!(c.tensor_frames, 4);
         kv.insert("tensor_frames".to_string(), "0".to_string());
+        assert!(c.apply_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn fault_and_policy_keys() {
+        let mut c = TrainConfig::default();
+        assert!(c.fault_plan.is_none());
+        assert_eq!(c.round_policy, RoundPolicy::WaitAll);
+        let mut kv = BTreeMap::new();
+        kv.insert("fault_plan".to_string(), "drop:0.1;straggle:w2x4".to_string());
+        kv.insert("round_policy".to_string(), "quorum:3".to_string());
+        kv.insert("link".to_string(), "10g".to_string());
+        c.apply_kv(&kv).unwrap();
+        assert_eq!(
+            c.fault_plan,
+            Some(FaultPlan::new().drop_prob(0.1).straggle(2, 4.0))
+        );
+        assert_eq!(c.round_policy, RoundPolicy::Quorum(3));
+        assert_eq!(c.link.bandwidth_bps, 10e9);
+        kv.insert("fault_plan".to_string(), "none".to_string());
+        kv.insert("round_policy".to_string(), "waitall".to_string());
+        c.apply_kv(&kv).unwrap();
+        assert!(c.fault_plan.is_none());
+        assert_eq!(c.round_policy, RoundPolicy::WaitAll);
+        kv.insert("round_policy".to_string(), "sometimes".to_string());
         assert!(c.apply_kv(&kv).is_err());
     }
 

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train      run a distributed training round loop (the paper's Alg. 1/2)
+//!   cluster    run the fault-injected scenario engine (no artifacts needed)
 //!   info       summarize the artifact manifest
 //!   quantize   encode/decode a synthetic gradient with every scheme
 //!
@@ -9,15 +10,22 @@
 //!   ndq train --model fc300 --workers 8 --scheme dqsg:1.0 --rounds 200
 //!   ndq train --model fc300 --workers 8 --scheme dqsg:0.5 \
 //!             --scheme-p2 nested:0.333333:3:1.0 --rounds 200   # Fig. 6
+//!   ndq train --model fc300 --workers 8 --scheme dqsg:1.0 \
+//!             --fault-plan "drop:0.1" --round-policy quorum:5
+//!   ndq cluster --workers 8 --fault-plan "drop:0.15;straggle:w2x6" \
+//!               --round-policy quorum:5
 //!   ndq quantize --n 100000
 
 // Config assembly is deliberately field-by-field from parsed CLI args.
 #![allow(clippy::field_reassign_with_default)]
 
 use ndq::cli::Args;
+use ndq::comm::{FaultPlan, RoundPolicy};
 use ndq::config::{OptKind, TrainConfig};
 use ndq::prng::DitherStream;
 use ndq::quant::{frame_slices, GradQuantizer, Scheme};
+use ndq::sim::LinkModel;
+use ndq::testing::cluster::{ClusterHarness, ClusterScenario};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -35,12 +43,13 @@ fn real_main() -> ndq::Result<()> {
     };
     match sub.as_str() {
         "train" => cmd_train(argv),
+        "cluster" => cmd_cluster(argv),
         "info" => cmd_info(argv),
         "quantize" => cmd_quantize(argv),
         _ => {
             println!(
                 "ndq — Nested Dithered Quantization distributed trainer\n\n\
-                 USAGE: ndq <train|info|quantize> [options]\n\
+                 USAGE: ndq <train|cluster|info|quantize> [options]\n\
                  Run `ndq <subcommand> --help` for options."
             );
             Ok(())
@@ -61,6 +70,9 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
         .opt("seed", "42", "run seed (dither + data)")
         .opt("eval-every", "50", "evaluate every N rounds")
         .opt("tensor-frames", "1", "wire-v2 per-tensor frames per uplink message")
+        .opt("fault-plan", "none", "fault spec, e.g. drop:0.1;straggle:w2x8 (none = perfect link)")
+        .opt("round-policy", "waitall", "waitall|quorum:K|deadline:SECS")
+        .opt("link", "gigabit", "simulated link: gigabit|10g|LAT_S:BW_BPS")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("report", "", "write the JSON report to this path")
         .flag("quiet", "suppress per-eval logging")
@@ -83,6 +95,14 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
     cfg.eval_every = args.get_usize("eval-every")?;
     cfg.tensor_frames = args.get_usize("tensor-frames")?;
     anyhow::ensure!(cfg.tensor_frames >= 1, "--tensor-frames must be >= 1");
+    let plan = args.get("fault-plan");
+    cfg.fault_plan = if plan == "none" {
+        None
+    } else {
+        Some(FaultPlan::parse(&plan)?)
+    };
+    cfg.round_policy = RoundPolicy::parse(&args.get("round-policy"))?;
+    cfg.link = LinkModel::parse(&args.get("link"))?;
     cfg.artifacts_dir = args.get("artifacts");
 
     let mut trainer = ndq::train::Trainer::new(cfg)?;
@@ -97,6 +117,83 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
         report.comm.kbits_per_msg_entropy(),
         report.wall_secs
     );
+    print_fault_summary(&report);
+    let out = args.get("report");
+    if !out.is_empty() {
+        std::fs::write(&out, report.to_json().to_string())?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn print_fault_summary(report: &ndq::train::TrainReport) {
+    let received: u64 = report.delivery.iter().map(|d| d.received as u64).sum();
+    let expected: u64 = report.delivery.iter().map(|d| d.expected as u64).sum();
+    if report.comm.faulted_msgs() == 0 && received == expected && report.rounds_failed == 0 {
+        return;
+    }
+    println!(
+        "  link: {received}/{expected} messages folded, {} rounds failed\n  \
+         faults: {} dropped, {} duplicate, {} rejected, {} late, {} disconnects",
+        report.rounds_failed,
+        report.comm.dropped_msgs,
+        report.comm.duplicate_msgs,
+        report.comm.rejected_msgs,
+        report.comm.late_msgs,
+        report.comm.disconnects,
+    );
+}
+
+fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
+    let args = Args::new(
+        "ndq cluster",
+        "fault-injected cluster scenario engine (synthetic task, no artifacts)",
+    )
+    .opt("workers", "4", "number of workers P")
+    .opt("n", "2000", "gradient dimensionality")
+    .opt("rounds", "30", "rounds to run")
+    .opt("scheme", "dqsg:0.333333", "P1 scheme (see `ndq train --help`)")
+    .opt("scheme-p2", "none", "scheme for the second worker half (NDQSG mixes)")
+    .opt("seed", "42", "scenario seed (gradients + dither + fault decisions)")
+    .opt("fault-plan", "none", "fault spec, e.g. drop:0.1;straggle:w2x8")
+    .opt("round-policy", "waitall", "waitall|quorum:K|deadline:SECS")
+    .opt("link", "gigabit", "simulated link: gigabit|10g|LAT_S:BW_BPS")
+    .opt("lr", "0.25", "step size on the synthetic quadratic")
+    .opt("report", "", "write the JSON report to this path")
+    .parse_from(argv)?;
+
+    let p2 = args.get("scheme-p2");
+    let plan = args.get("fault-plan");
+    let sc = ClusterScenario {
+        workers: args.get_usize("workers")?,
+        n_params: args.get_usize("n")?,
+        rounds: args.get_usize("rounds")?,
+        seed: args.get_u64("seed")?,
+        scheme: Scheme::parse(&args.get("scheme"))?,
+        scheme_p2: if p2 == "none" { None } else { Some(Scheme::parse(&p2)?) },
+        plan: if plan == "none" {
+            FaultPlan::default()
+        } else {
+            FaultPlan::parse(&plan)?
+        },
+        policy: RoundPolicy::parse(&args.get("round-policy"))?,
+        link: LinkModel::parse(&args.get("link"))?,
+        lr: args.get_f32("lr")?,
+        ..ClusterScenario::default()
+    };
+    let report = ClusterHarness::new(sc)?.run()?;
+    println!(
+        "{}\n  rounds: {} run, {} failed\n  final synthetic loss: {:.6}\n  \
+         uplink: {:.1} Kbit/msg raw ({} messages folded)\n  fingerprint: {:016x}",
+        report.config_label,
+        report.delivery.len(),
+        report.rounds_failed,
+        report.final_eval_loss,
+        report.comm.kbits_per_msg_raw(),
+        report.comm.messages,
+        report.fingerprint(),
+    );
+    print_fault_summary(&report);
     let out = args.get("report");
     if !out.is_empty() {
         std::fs::write(&out, report.to_json().to_string())?;

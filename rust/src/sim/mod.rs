@@ -37,6 +37,36 @@ impl LinkModel {
     pub fn message_time(&self, bits: f64) -> f64 {
         self.latency_s + bits / self.bandwidth_bps
     }
+
+    /// Parse CLI/config syntax: `gigabit`, `10g`, or `LATENCY_S:BANDWIDTH_BPS`
+    /// (e.g. `0.0001:1e9`).
+    pub fn parse(s: &str) -> crate::Result<LinkModel> {
+        match s {
+            "gigabit" | "1g" => Ok(LinkModel::gigabit()),
+            "10g" | "ten_gigabit" => Ok(LinkModel::ten_gigabit()),
+            other => {
+                let (lat, bw) = other.split_once(':').ok_or_else(|| {
+                    anyhow::anyhow!("unknown link `{other}` (gigabit|10g|LAT_S:BW_BPS)")
+                })?;
+                let link = LinkModel {
+                    latency_s: lat.parse()?,
+                    bandwidth_bps: bw.parse()?,
+                };
+                anyhow::ensure!(
+                    link.latency_s >= 0.0 && link.bandwidth_bps > 0.0,
+                    "link parameters must be positive"
+                );
+                Ok(link)
+            }
+        }
+    }
+}
+
+impl Default for LinkModel {
+    /// The paper's commodity-cluster setting.
+    fn default() -> Self {
+        LinkModel::gigabit()
+    }
 }
 
 /// Per-round communication time for a centralized PS with P workers whose
@@ -74,6 +104,19 @@ mod tests {
         let upload_dq = 8.0 * link.message_time(422_800.0);
         assert!(upload_base / upload_dq > 10.0);
         assert!(t_dq < t_base);
+    }
+
+    #[test]
+    fn link_parse_syntax() {
+        let g = LinkModel::parse("gigabit").unwrap();
+        assert_eq!(g.bandwidth_bps, 1e9);
+        let t = LinkModel::parse("10g").unwrap();
+        assert_eq!(t.bandwidth_bps, 10e9);
+        let c = LinkModel::parse("0.001:5e8").unwrap();
+        assert_eq!(c.latency_s, 0.001);
+        assert_eq!(c.bandwidth_bps, 5e8);
+        assert!(LinkModel::parse("warp").is_err());
+        assert!(LinkModel::parse("0.1:-2").is_err());
     }
 
     #[test]

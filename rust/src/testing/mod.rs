@@ -1,10 +1,22 @@
-//! Tiny property-testing harness (proptest is unavailable offline).
+//! Tiny property-testing harness (proptest is unavailable offline) plus
+//! the scripted fault-scenario engine ([`cluster::ClusterHarness`]) and the
+//! statistical assertions ([`ks_statistic_uniform`], [`pearson`]) the
+//! paper-claim tests are built on.
 //!
 //! `prop_check` runs a property over `cases` seeded random inputs and, on
 //! failure, retries with progressively *smaller* size hints to report a
 //! minimal-ish failing case — a lightweight stand-in for proptest's
 //! shrinking that covers the coordinator invariants we test (routing,
 //! batching, encode/decode state).
+//!
+//! Reproducing a CI failure: every failure panic quotes the exact
+//! `NDQ_PROP_SEED=… NDQ_PROP_CASE=…` pair verbatim; setting those two
+//! environment variables re-runs *only* the failing case with the same
+//! seed and the same size schedule. All size arithmetic is derived from
+//! integer ratios through IEEE-754 double operations, so the shrink loop
+//! visits identical candidates on every platform.
+
+pub mod cluster;
 
 use crate::prng::Xoshiro256;
 
@@ -19,19 +31,32 @@ impl<T, F: Fn(&mut Xoshiro256, f64) -> T> Gen<T> for F {
     }
 }
 
-/// Run `prop` over `cases` random inputs; panic with the seed + shrunk input
-/// description on failure.
+/// Run `prop` over `cases` seeded random inputs; panic with the exact
+/// reproduction command on failure.
+///
+/// `NDQ_PROP_SEED` overrides the base seed; `NDQ_PROP_CASE` restricts the
+/// run to a single case index (what a failure panic tells you to set).
+/// The shrink loop regenerates the failing case at a fixed ladder of
+/// smaller size hints (`size * (9-k)/9` for `k = 1..=8`, floored at 0.01)
+/// and reports the smallest still-failing candidate; the ladder is a pure
+/// function of `(seed, case, cases)`, deterministic across platforms.
 pub fn prop_check<T: std::fmt::Debug, G: Gen<T>, P: Fn(&T) -> Result<(), String>>(
     name: &str,
     cases: usize,
     gen: G,
     prop: P,
 ) {
-    let base_seed = std::env::var("NDQ_PROP_SEED")
+    let base_seed: u64 = std::env::var("NDQ_PROP_SEED")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0xC0FFEEu64);
+    let only_case: Option<usize> = std::env::var("NDQ_PROP_CASE")
+        .ok()
+        .and_then(|s| s.parse().ok());
     for case in 0..cases {
+        if only_case.is_some_and(|c| c != case) {
+            continue;
+        }
         let seed = base_seed.wrapping_add(case as u64);
         let mut rng = Xoshiro256::new(seed);
         let size = (case as f64 + 1.0) / cases as f64; // grow sizes over run
@@ -39,20 +64,60 @@ pub fn prop_check<T: std::fmt::Debug, G: Gen<T>, P: Fn(&T) -> Result<(), String>
         if let Err(msg) = prop(&input) {
             // shrink: try smaller sizes with the same seed
             let mut best: (f64, T, String) = (size, input, msg);
-            for shrink in 1..=8 {
-                let s = size * (1.0 - shrink as f64 / 9.0);
+            for shrink in 1..=8u32 {
+                let s = (size * (9 - shrink) as f64 / 9.0).max(0.01);
                 let mut rng = Xoshiro256::new(seed);
-                let candidate = gen.generate(&mut rng, s.max(0.01));
+                let candidate = gen.generate(&mut rng, s);
                 if let Err(m) = prop(&candidate) {
                     best = (s, candidate, m);
                 }
             }
             panic!(
-                "property `{name}` failed (seed={seed}, case={case}, size={:.2}):\n  {}\n  input: {:?}\n  (rerun with NDQ_PROP_SEED={base_seed})",
+                "property `{name}` failed (seed={seed}, case={case}, size={:.2}):\n  {}\n  input: {:?}\n  reproduce with: NDQ_PROP_SEED={base_seed} NDQ_PROP_CASE={case}",
                 best.0, best.2, best.1
             );
         }
     }
+}
+
+/// Two-sided Kolmogorov–Smirnov statistic of `samples` against the uniform
+/// distribution on `[lo, hi]`: `sup_x |F_n(x) - F(x)|`. Sorts in place.
+///
+/// For n iid uniform samples, `D_n < c(alpha)/sqrt(n)` with
+/// `c(0.01) ≈ 1.63`; the statistical-claims suite tests at n ≥ 10^5 where
+/// that bound is ≈ 0.005.
+pub fn ks_statistic_uniform(samples: &mut [f64], lo: f64, hi: f64) -> f64 {
+    assert!(!samples.is_empty() && hi > lo);
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("non-finite sample"));
+    let n = samples.len() as f64;
+    let width = hi - lo;
+    let mut d = 0f64;
+    for (i, &x) in samples.iter().enumerate() {
+        let f = ((x - lo) / width).clamp(0.0, 1.0);
+        d = d.max((f - i as f64 / n).abs());
+        d = d.max(((i + 1) as f64 / n - f).abs());
+    }
+    d
+}
+
+/// Sample Pearson correlation coefficient of two equal-length slices.
+/// Returns 0 when either side is (numerically) constant.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0f64, 0f64, 0f64);
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
 }
 
 /// Common generators.
@@ -126,5 +191,59 @@ mod tests {
         let g = gens::nasty_f32_vec(1000);
         let v = g.generate(&mut rng, 1.0);
         assert!(v.iter().any(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn failure_message_quotes_reproduction_env_verbatim() {
+        // the panic must contain the literal `NDQ_PROP_SEED=<base>
+        // NDQ_PROP_CASE=<case>` pair so CI output is copy-pasteable
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop_check("repro-msg", 7, gens::f32_vec(20), |v| {
+                if v.len() >= 10 {
+                    Err("too long".into())
+                } else {
+                    Ok(())
+                }
+            });
+        }))
+        .expect_err("property must fail");
+        let msg = caught
+            .downcast_ref::<String>()
+            .expect("panic payload is a String")
+            .clone();
+        assert!(
+            msg.contains("NDQ_PROP_SEED=12648430 NDQ_PROP_CASE="),
+            "no verbatim reproduction pair in:\n{msg}"
+        );
+        assert!(msg.contains("case="), "{msg}");
+    }
+
+    #[test]
+    fn ks_statistic_behaves() {
+        // a perfect uniform grid has vanishing D_n; a point mass does not
+        let n = 10_000;
+        let mut grid: Vec<f64> = (0..n).map(|i| (i as f64 + 0.5) / n as f64).collect();
+        assert!(ks_statistic_uniform(&mut grid, 0.0, 1.0) < 1e-3);
+        let mut mass = vec![0.5f64; n];
+        assert!(ks_statistic_uniform(&mut mass, 0.0, 1.0) > 0.49);
+        // seeded uniform draws stay under the alpha=0.01 band
+        let mut rng = Xoshiro256::new(3);
+        let mut u: Vec<f64> = (0..100_000).map(|_| rng.next_f32() as f64).collect();
+        let d = ks_statistic_uniform(&mut u, 0.0, 1.0);
+        assert!(d < 1.63 / (100_000f64).sqrt(), "D={d}");
+    }
+
+    #[test]
+    fn pearson_behaves() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let neg: Vec<f64> = xs.iter().map(|x| -2.0 * x + 3.0).collect();
+        assert!((pearson(&xs, &xs) - 1.0).abs() < 1e-12);
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+        let c = vec![4.0; 1000];
+        assert_eq!(pearson(&xs, &c), 0.0);
+        let mut rng = Xoshiro256::new(5);
+        let a: Vec<f64> = (0..50_000).map(|_| rng.next_normal() as f64).collect();
+        let b: Vec<f64> = (0..50_000).map(|_| rng.next_normal() as f64).collect();
+        assert!(pearson(&a, &b).abs() < 0.02);
     }
 }

@@ -19,8 +19,9 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::comm::Session;
+use crate::comm::{Fault, FaultPlan, Session};
 use crate::config::TrainConfig;
+use crate::quant::WireMsg;
 use crate::data::{Batch, ImageDataset, ImageKind};
 use crate::opt;
 use crate::prng::DitherStream;
@@ -124,16 +125,56 @@ impl AsyncTrainer {
         let mut version = 0usize;
         versions.push_back((0, Arc::new(params.clone())));
 
+        // Async fault model: no rounds, so faults key on the worker's own
+        // step counter. Drop/corrupt/disconnect apply as in the sync path;
+        // a Delay{k} fault adds k worker-periods of virtual latency (often
+        // pushing the gradient past the staleness bound — the SSP drop
+        // logic then rejects it, which is the async notion of "too late").
+        let plan: Option<FaultPlan> = cfg.fault_plan.clone();
+        let seed = cfg.seed;
+
         let mut queue: Vec<PendingGrad> = Vec::new();
         let mut clock = 0f64;
         let b = cfg.per_worker_batch();
-        // dispatch initial work
+        let speeds = self.worker_speed.clone();
+        // `jitter_key` = the just-completed step, matching the historical
+        // schedule exactly when no Delay fault applies.
+        let plan_ref = plan.clone();
+        let dispatch = move |queue: &mut Vec<PendingGrad>,
+                             wsteps: &mut [u64],
+                             worker: usize,
+                             version: usize,
+                             clock: f64,
+                             jitter_key: u64| {
+            let wstep = wsteps[worker];
+            let mut finish_time = clock + speeds[worker] * (0.8 + 0.4 * frac(jitter_key));
+            if let Some(Fault::Delay { rounds }) =
+                plan_ref.as_ref().and_then(|p| p.fault_for(seed, worker, wstep))
+            {
+                finish_time += rounds as f64 * speeds[worker];
+            }
+            queue.push(PendingGrad {
+                worker,
+                version,
+                wstep,
+                finish_time,
+            });
+            wsteps[worker] += 1;
+        };
+        // dispatch initial work (historical schedule: one nominal period,
+        // plus any Delay fault targeting a worker's step 0)
         for p in 0..cfg.workers {
+            let mut finish_time = clock + self.worker_speed[p];
+            if let Some(Fault::Delay { rounds }) =
+                plan.as_ref().and_then(|pl| pl.fault_for(seed, p, 0))
+            {
+                finish_time += rounds as f64 * self.worker_speed[p];
+            }
             queue.push(PendingGrad {
                 worker: p,
                 version,
                 wstep: wsteps[p],
-                finish_time: clock + self.worker_speed[p],
+                finish_time,
             });
             wsteps[p] += 1;
         }
@@ -145,6 +186,9 @@ impl AsyncTrainer {
         let mut train_loss = f32::NAN;
 
         while stats.updates < total_updates {
+            if queue.is_empty() {
+                break; // every worker disconnected mid-run
+            }
             // next event in virtual time (total_cmp: a NaN finish time must
             // not panic the leader — IEEE total order sorts it last)
             let idx = queue
@@ -161,14 +205,7 @@ impl AsyncTrainer {
             // (with one task in flight per worker, staleness <= P-1
             // naturally; the bound only bites when set below that)
             if staleness > self.max_staleness {
-                queue.push(PendingGrad {
-                    worker: ev.worker,
-                    version,
-                    wstep: wsteps[ev.worker],
-                    finish_time: clock
-                        + self.worker_speed[ev.worker] * (0.8 + 0.4 * frac(ev.wstep)),
-                });
-                wsteps[ev.worker] += 1;
+                dispatch(&mut queue, &mut wsteps, ev.worker, version, clock, ev.wstep);
                 continue;
             }
             stats.max_staleness_seen = stats.max_staleness_seen.max(staleness);
@@ -190,6 +227,39 @@ impl AsyncTrainer {
             // seed copy, and hands back its reused decode buffer
             let msg = quantizers[ev.worker]
                 .encode(&grad, &mut streams[ev.worker].round(ev.wstep));
+
+            // apply the fault plan to the uplink (keyed worker × wstep)
+            match plan.as_ref().and_then(|p| p.fault_for(seed, ev.worker, ev.wstep)) {
+                Some(Fault::Disconnect) => {
+                    session.mark_dead(ev.worker);
+                    continue; // never re-dispatched; the worker is gone
+                }
+                Some(Fault::Drop) => {
+                    session.stats_mut().record_dropped(msg.framed_bits() as u64);
+                    dispatch(&mut queue, &mut wsteps, ev.worker, version, clock, ev.wstep);
+                    continue;
+                }
+                Some(Fault::Corrupt) => {
+                    let mut bytes = msg.into_bytes();
+                    let bits = bytes.len() as u64 * 8;
+                    let mid = bytes.len() / 2;
+                    bytes[mid] ^= 0x5A;
+                    anyhow::ensure!(
+                        WireMsg::parse(bytes).is_err(),
+                        "corrupted async message slipped past the CRC"
+                    );
+                    session.stats_mut().record_rejected(bits);
+                    dispatch(&mut queue, &mut wsteps, ev.worker, version, clock, ev.wstep);
+                    continue;
+                }
+                Some(Fault::Duplicate) => {
+                    // a redundant copy crossed the link; applied once
+                    session
+                        .stats_mut()
+                        .record_duplicate(msg.framed_bits() as u64);
+                }
+                Some(Fault::Delay { .. }) | None => {} // latency added at dispatch
+            }
             let recon = session.decode_message(ev.worker, ev.wstep, &msg)?;
 
             // apply immediately, scaled (in place — the buffer is the
@@ -212,13 +282,7 @@ impl AsyncTrainer {
             // re-dispatch the worker — against the freshest version the
             // staleness bound admits (bound enforcement = workers never
             // start from a version older than current - max_staleness)
-            queue.push(PendingGrad {
-                worker: ev.worker,
-                version,
-                wstep: wsteps[ev.worker],
-                finish_time: clock + self.worker_speed[ev.worker] * (0.8 + 0.4 * frac(ev.wstep)),
-            });
-            wsteps[ev.worker] += 1;
+            dispatch(&mut queue, &mut wsteps, ev.worker, version, clock, ev.wstep);
 
             let eval_stride = cfg.eval_every.max(1) * cfg.workers;
             if cfg.eval_every > 0 && stats.updates % eval_stride == 0 {
@@ -256,6 +320,8 @@ impl AsyncTrainer {
                 history,
                 comm: session.stats().clone(),
                 rounds: cfg.rounds,
+                rounds_failed: 0,
+                delivery: Vec::new(),
                 workers: cfg.workers,
                 n_params: info.n_params,
                 wall_secs: t0.elapsed().as_secs_f64(),

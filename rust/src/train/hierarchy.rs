@@ -20,9 +20,10 @@
 //! implementation rebuilt quantizers, registries, and streams from scratch
 //! for every worker of every round.
 
-use crate::comm::{Session, WorkerMsg};
+use crate::comm::{FaultChannel, FaultPlan, RoundPolicy, Session, WorkerMsg};
 use crate::prng::DitherStream;
 use crate::quant::{GradQuantizer, Scheme};
+use crate::sim::LinkModel;
 use crate::tensor;
 
 /// Static two-tier topology description.
@@ -65,6 +66,12 @@ pub struct HierarchyRound {
     pub root_bits: usize,
     /// What a flat (single-tier) all-DQSG deployment would have cost.
     pub flat_dqsg_bits: usize,
+    /// Leaf messages folded / expected this round (equal on a clean link).
+    pub leaf_received: usize,
+    pub leaf_expected: usize,
+    /// Groups that produced no average this round (faulted out) and were
+    /// therefore absent from the root tier.
+    pub groups_failed: usize,
 }
 
 /// Reusable two-tier aggregation engine: per-group leader sessions, the
@@ -86,6 +93,14 @@ pub struct HierarchyAggregator {
     root_encoders: Vec<(Box<dyn GradQuantizer>, DitherStream)>,
     /// The flat all-DQSG comparison encoders (reference bit bill only).
     flat_encoders: Vec<(Box<dyn GradQuantizer>, DitherStream)>,
+    /// Optional leaf-tier fault injection (one channel per group; fault
+    /// decisions key on the worker's *local* index within its group).
+    leaf_faults: Option<LeafFaults>,
+}
+
+struct LeafFaults {
+    channels: Vec<FaultChannel>,
+    policy: RoundPolicy,
 }
 
 impl HierarchyAggregator {
@@ -136,7 +151,36 @@ impl HierarchyAggregator {
             leaf_encoders,
             root_encoders,
             flat_encoders,
+            leaf_faults: None,
         })
+    }
+
+    /// Inject faults on the leaf tier: the same `plan` is applied inside
+    /// every group (decisions key on the worker's local index), each group
+    /// leader aggregating under `policy`. A group whose round fails (e.g.
+    /// its DQSG bootstrap worker dropped under NDQSG) contributes nothing
+    /// to the root that round and is counted in
+    /// [`HierarchyRound::groups_failed`].
+    pub fn with_leaf_faults(
+        mut self,
+        plan: FaultPlan,
+        policy: RoundPolicy,
+        run_seed: u64,
+        link: LinkModel,
+    ) -> Self {
+        let channels = (0..self.h.groups)
+            .map(|g| {
+                FaultChannel::new(
+                    // decorrelate groups without changing the plan itself
+                    plan.clone(),
+                    run_seed ^ (0x9E37 + g as u64),
+                    self.h.per_group,
+                    link,
+                )
+            })
+            .collect();
+        self.leaf_faults = Some(LeafFaults { channels, policy });
+        self
     }
 
     /// Run one aggregation round: `grads[g][w]` = gradient of worker w in
@@ -148,7 +192,9 @@ impl HierarchyAggregator {
     ) -> crate::Result<HierarchyRound> {
         anyhow::ensure!(grads.len() == self.h.groups, "group count mismatch");
         let mut flat_dqsg_bits = 0usize;
-        let mut group_avgs: Vec<Vec<f32>> = Vec::with_capacity(self.h.groups);
+        let mut group_avgs: Vec<Option<Vec<f32>>> = Vec::with_capacity(self.h.groups);
+        let mut leaf_received = 0usize;
+        let mut leaf_expected = 0usize;
         // per-tier bits come from the sessions' own CommStats ledgers
         // (recorded as each message is accepted — one source of truth);
         // the per-round number is the delta across this round's pushes.
@@ -161,8 +207,8 @@ impl HierarchyAggregator {
         // ---- leaf tier: streaming Alg. 2 inside each group ----
         for (g, group) in grads.iter().enumerate() {
             anyhow::ensure!(group.len() == self.h.per_group, "group {g} size mismatch");
-            let session = &mut self.leaf_sessions[g];
-            let mut agg = session.begin_round();
+            // encode the group's uplinks (+ the flat reference bill)
+            let mut msgs = Vec::with_capacity(group.len());
             for (w, grad) in group.iter().enumerate() {
                 let global = g * self.h.per_group + w;
                 let (q, stream) = &mut self.leaf_encoders[global];
@@ -171,15 +217,53 @@ impl HierarchyAggregator {
                 // crosses a session, so it is tallied by hand here
                 let (qf, sf) = &mut self.flat_encoders[global];
                 flat_dqsg_bits += qf.encode(grad, &mut sf.round(round)).raw_bits();
-                agg.push(WorkerMsg {
+                msgs.push(WorkerMsg {
                     worker: w,
                     round,
                     loss: 0.0,
                     wire,
-                })?;
+                });
             }
-            group_avgs.push(agg.finish()?);
+            let session = &mut self.leaf_sessions[g];
+            match &mut self.leaf_faults {
+                None => {
+                    let mut agg = session.begin_round();
+                    for m in msgs {
+                        agg.push(m)?;
+                    }
+                    leaf_received += self.h.per_group;
+                    leaf_expected += self.h.per_group;
+                    group_avgs.push(Some(agg.finish()?));
+                }
+                Some(lf) => {
+                    // the group's uplinks cross the faulty link; the leader
+                    // aggregates whatever survives under the round policy
+                    let ch = &mut lf.channels[g];
+                    let mut events = ch.flush(round);
+                    for m in msgs {
+                        events.extend(ch.feed(m));
+                    }
+                    let mut ex = session.begin_exchange(round, lf.policy);
+                    for ev in events {
+                        ex.offer(ev);
+                    }
+                    leaf_expected += ex.expected();
+                    match ex.finish() {
+                        Ok(out) => {
+                            leaf_received += out.received;
+                            group_avgs.push(Some(out.average));
+                        }
+                        Err(e @ crate::comm::ExchangeError::Decode { .. }) => {
+                            anyhow::bail!("group {g}: {e}")
+                        }
+                        // survivable (empty / NDQSG bootstrap missing):
+                        // this leader contributes nothing to the root
+                        Err(_) => group_avgs.push(None),
+                    }
+                }
+            }
         }
+        let groups_failed = group_avgs.iter().filter(|a| a.is_none()).count();
         let leaf_after: f64 = self
             .leaf_sessions
             .iter()
@@ -191,6 +275,7 @@ impl HierarchyAggregator {
         let root_before = self.root_session.stats().total_raw_bits;
         let mut agg = self.root_session.begin_round();
         for (g, gavg) in group_avgs.iter().enumerate() {
+            let Some(gavg) = gavg else { continue };
             let (q, stream) = &mut self.root_encoders[g];
             let wire = q.encode(gavg, &mut stream.round(round));
             agg.push(WorkerMsg {
@@ -200,12 +285,16 @@ impl HierarchyAggregator {
                 wire,
             })?;
         }
-        let root_avg = agg.finish()?;
+        let root_avg = agg
+            .finish()
+            .map_err(|e| anyhow::anyhow!("root tier, round {round}: {e}"))?;
         let root_bits = (self.root_session.stats().total_raw_bits - root_before) as usize;
 
         // hand the group buffers back to their sessions' scratch pools
         for (g, avg) in group_avgs.into_iter().enumerate() {
-            self.leaf_sessions[g].recycle(avg);
+            if let Some(avg) = avg {
+                self.leaf_sessions[g].recycle(avg);
+            }
         }
 
         Ok(HierarchyRound {
@@ -213,6 +302,9 @@ impl HierarchyAggregator {
             leaf_bits,
             root_bits,
             flat_dqsg_bits,
+            leaf_received,
+            leaf_expected,
+            groups_failed,
         })
     }
 
@@ -319,5 +411,47 @@ mod tests {
         let h = Hierarchy::paper_default(2, 2);
         let grads = correlated_grads(2, 3, 100, 4);
         assert!(aggregate_round(&h, &grads, 0, 0).is_err());
+    }
+
+    #[test]
+    fn leaf_faults_drop_nested_worker_gracefully() {
+        // local worker 2 (an NDQSG sender) of every group is dropped in
+        // round 0: each leader folds 2 of 3, the root still aggregates
+        let h = Hierarchy::paper_default(3, 3);
+        let grads = correlated_grads(3, 3, 2000, 9);
+        let mut agg = HierarchyAggregator::new(&h, 5, 2000).unwrap().with_leaf_faults(
+            FaultPlan::new().drop_at(2, 0),
+            RoundPolicy::WaitAll,
+            5,
+            LinkModel::gigabit(),
+        );
+        let round = agg.round(&grads, 0).unwrap();
+        assert_eq!(round.leaf_expected, 9);
+        assert_eq!(round.leaf_received, 6);
+        assert_eq!(round.groups_failed, 0);
+        let want = true_mean(&grads);
+        let rmse = (tensor::sq_dist(&round.average, &want) / want.len() as f64).sqrt();
+        assert!(rmse < 0.05, "rmse {rmse}");
+    }
+
+    #[test]
+    fn leaf_bootstrap_drop_fails_groups_and_root_reports() {
+        // dropping every group's DQSG bootstrap (local worker 0) in round 0
+        // fails every group typed-and-undecoded; the root then has nothing
+        let h = Hierarchy::paper_default(2, 2);
+        let grads = correlated_grads(2, 2, 500, 4);
+        let mut agg = HierarchyAggregator::new(&h, 1, 500).unwrap().with_leaf_faults(
+            FaultPlan::new().drop_at(0, 0),
+            RoundPolicy::WaitAll,
+            1,
+            LinkModel::gigabit(),
+        );
+        let err = agg.round(&grads, 0).unwrap_err().to_string();
+        assert!(err.contains("root tier"), "{err}");
+        // the engine recovers: the next (clean) round aggregates fully
+        let round = agg.round(&grads, 1).unwrap();
+        assert_eq!(round.groups_failed, 0);
+        assert_eq!(round.leaf_received, 4);
+        assert_eq!(round.leaf_expected, 4);
     }
 }

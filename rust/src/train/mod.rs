@@ -20,4 +20,4 @@ pub mod worker;
 
 pub use crate::comm::CommStats;
 pub use async_trainer::AsyncTrainer;
-pub use trainer::{TrainReport, Trainer};
+pub use trainer::{RoundDelivery, TrainReport, Trainer};

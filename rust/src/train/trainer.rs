@@ -7,7 +7,7 @@
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use crate::comm::Session;
+use crate::comm::{ChannelEvent, ExchangeError, FaultChannel, RoundPolicy, Session};
 use crate::config::{OptKind, TrainConfig};
 use crate::data::{Batch, ImageDataset, ImageKind, TokenDataset};
 use crate::opt;
@@ -30,6 +30,15 @@ pub struct EvalPoint {
     pub cum_raw_bits_per_worker: f64,
 }
 
+/// How many messages a round actually heard vs. could have heard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundDelivery {
+    /// Valid messages folded into the round's aggregate.
+    pub received: u32,
+    /// Live (non-disconnected) workers at round start.
+    pub expected: u32,
+}
+
 /// Everything a bench/example needs from a finished run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -39,6 +48,11 @@ pub struct TrainReport {
     pub final_accuracy: f64,
     pub final_eval_loss: f32,
     pub rounds: usize,
+    /// Rounds that produced no aggregate (empty / NDQSG bootstrap missing);
+    /// the optimizer took no step in those rounds.
+    pub rounds_failed: usize,
+    /// Per-round received/expected message counts, in round order.
+    pub delivery: Vec<RoundDelivery>,
     pub workers: usize,
     pub n_params: usize,
     pub wall_secs: f64,
@@ -56,6 +70,29 @@ impl TrainReport {
             (
                 "kbits_entropy_per_msg",
                 json::num(self.comm.kbits_per_msg_entropy()),
+            ),
+            ("rounds_failed", json::num(self.rounds_failed as f64)),
+            (
+                "msgs_received",
+                json::num(self.delivery.iter().map(|d| d.received as f64).sum()),
+            ),
+            (
+                "msgs_expected",
+                json::num(self.delivery.iter().map(|d| d.expected as f64).sum()),
+            ),
+            (
+                "faults",
+                json::obj(vec![
+                    ("dropped", json::num(self.comm.dropped_msgs as f64)),
+                    ("duplicate", json::num(self.comm.duplicate_msgs as f64)),
+                    ("rejected", json::num(self.comm.rejected_msgs as f64)),
+                    ("late", json::num(self.comm.late_msgs as f64)),
+                    ("disconnects", json::num(self.comm.disconnects as f64)),
+                    ("dropped_bits", json::num(self.comm.dropped_bits as f64)),
+                    ("duplicate_bits", json::num(self.comm.duplicate_bits as f64)),
+                    ("rejected_bits", json::num(self.comm.rejected_bits as f64)),
+                    ("late_bits", json::num(self.comm.late_bits as f64)),
+                ]),
             ),
             ("wall_secs", json::num(self.wall_secs)),
             (
@@ -78,11 +115,81 @@ impl TrainReport {
         ])
     }
 
+    /// FNV-1a digest of every deterministic field (history, communication
+    /// ledger, delivery counts — everything except `wall_secs`). Two runs
+    /// with the same seed and fault plan must produce equal fingerprints;
+    /// the determinism test in `tests/fault_injection.rs` pins this.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.bytes(self.config_label.as_bytes());
+        for v in [
+            self.rounds as u64,
+            self.rounds_failed as u64,
+            self.workers as u64,
+            self.n_params as u64,
+            self.final_accuracy.to_bits(),
+            (self.final_eval_loss as f64).to_bits(),
+        ] {
+            h.u64(v);
+        }
+        for p in &self.history {
+            h.u64(p.round as u64);
+            h.u64((p.train_loss as f64).to_bits());
+            h.u64((p.eval_loss as f64).to_bits());
+            h.u64(p.accuracy.to_bits());
+            h.u64(p.cum_raw_bits_per_worker.to_bits());
+        }
+        for d in &self.delivery {
+            h.u64(d.received as u64);
+            h.u64(d.expected as u64);
+        }
+        for v in [
+            self.comm.messages,
+            self.comm.total_raw_bits.to_bits(),
+            self.comm.total_entropy_bits.to_bits(),
+            self.comm.total_framed_bits.to_bits(),
+            self.comm.total_bcast_bits.to_bits(),
+            self.comm.dropped_msgs,
+            self.comm.dropped_bits,
+            self.comm.duplicate_msgs,
+            self.comm.duplicate_bits,
+            self.comm.rejected_msgs,
+            self.comm.rejected_bits,
+            self.comm.late_msgs,
+            self.comm.late_bits,
+            self.comm.disconnects,
+        ] {
+            h.u64(v);
+        }
+        h.finish()
+    }
+
     /// Projected wall-clock communication time on a simulated link.
     pub fn projected_comm_secs(&self, link: &LinkModel) -> f64 {
         let per_round_up = self.comm.raw.mean();
         let bcast = self.comm.bcast.mean();
         crate::sim::round_comm_time(link, self.workers, per_round_up, bcast) * self.rounds as f64
+    }
+}
+
+/// FNV-1a, 64-bit — tiny deterministic digest for [`TrainReport::fingerprint`].
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn finish(&self) -> u64 {
+        self.0
     }
 }
 
@@ -154,10 +261,17 @@ impl Trainer {
             Some(s2) => format!("{}+{}", self.cfg.scheme.label(), s2.label()),
             None => self.cfg.scheme.label(),
         };
-        format!(
+        let mut label = format!(
             "{} {} P={} opt={:?}",
             self.cfg.model, base, self.cfg.workers, self.cfg.opt
-        )
+        );
+        if self.cfg.round_policy != crate::comm::RoundPolicy::WaitAll {
+            label.push_str(&format!(" policy={}", self.cfg.round_policy.label()));
+        }
+        if self.cfg.fault_plan.is_some() {
+            label.push_str(" faults=on");
+        }
+        label
     }
 
     /// Evaluate on the held-out synthetic split.
@@ -232,13 +346,69 @@ impl Trainer {
         let mut session = Session::new(&self.schemes, cfg.seed, self.n_params)?;
         let mut optimizer = opt::build(cfg.opt, cfg.lr);
         let mut history = Vec::new();
+        let mut delivery: Vec<RoundDelivery> = Vec::with_capacity(cfg.rounds);
+        let mut rounds_failed = 0usize;
         // per-worker loss slots: summed in worker order so the reported
         // train loss (like the aggregate itself) is arrival-order-invariant
         let mut losses = vec![0f32; cfg.workers];
 
+        // With a fault plan or a non-WaitAll policy, worker messages route
+        // through a FaultChannel interposer: the trainer then consumes
+        // ChannelEvents (bytes or loss tombstones) through the policy-aware
+        // Exchange. Fault decisions are pure functions of (seed, worker,
+        // round), so the *schedule* never depends on thread timing; under
+        // WaitAll/Deadline the folded message set (and hence aggregates and
+        // trained parameters) is therefore deterministic too. Quorum(k) is
+        // the exception by design: which k arrivals make the cut follows
+        // real arrival order. Fully bit-identical TrainReports live in the
+        // single-threaded testing::cluster::ClusterHarness.
+        let policy_mode =
+            cfg.fault_plan.is_some() || cfg.round_policy != RoundPolicy::WaitAll;
+        let mut msg_rx = Some(msg_rx);
+        let ev_rx: Option<mpsc::Receiver<crate::Result<ChannelEvent>>> = if policy_mode {
+            let (ev_tx, ev_rx) = mpsc::channel();
+            let mut channel = FaultChannel::new(
+                cfg.fault_plan.clone().unwrap_or_default(),
+                cfg.seed,
+                cfg.workers,
+                cfg.link,
+            );
+            let rx = msg_rx.take().expect("message receiver unclaimed");
+            std::thread::Builder::new()
+                .name("ndq-faultlink".into())
+                .spawn(move || {
+                    while let Ok(res) = rx.recv() {
+                        match res {
+                            Ok(msg) => {
+                                let mut evs = channel.flush(msg.round);
+                                evs.extend(channel.feed(msg));
+                                for ev in evs {
+                                    if ev_tx.send(Ok(ev)).is_err() {
+                                        return;
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                let _ = ev_tx.send(Err(e));
+                                return;
+                            }
+                        }
+                    }
+                })?;
+            Some(ev_rx)
+        } else {
+            None
+        };
+
         for round in 0..cfg.rounds {
+            if policy_mode && session.live_workers() == 0 {
+                break; // every worker disconnected: nothing left to train
+            }
             // leader: broadcast round start (params are logically replicated)
             for w in &workers {
+                if policy_mode && session.is_dead(w.id) {
+                    continue;
+                }
                 w.cmd
                     .send(WorkerCmd::Round {
                         round: round as u64,
@@ -246,20 +416,56 @@ impl Trainer {
                     })
                     .map_err(|_| anyhow::anyhow!("worker {} died", w.id))?;
             }
-            // stream all P wire messages into the round aggregator as they
-            // arrive (synchronous barrier = the recv count): the session
-            // decodes in arrival order, folds in canonical Alg.-2 order, so
-            // replicas (and reruns) stay bit-identical under any reordering
-            // — and records every message's bits as it is accepted.
-            let mut agg = session.begin_round();
-            for _ in 0..cfg.workers {
-                let msg = msg_rx.recv().map_err(|_| anyhow::anyhow!("workers gone"))??;
-                let (worker, loss) = (msg.worker, msg.loss);
-                agg.push(msg)?; // validates worker identity before we index
-                losses[worker] = loss;
-            }
-            let train_loss = losses.iter().sum::<f32>() / cfg.workers as f32;
-            let avg = agg.finish()?;
+
+            let (train_loss, avg) = if let Some(ev_rx) = &ev_rx {
+                // ---- policy round: events through the fault link ----
+                let mut ex = session.begin_exchange(round as u64, cfg.round_policy);
+                while !ex.is_complete() {
+                    let ev = ev_rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("fault link closed"))??;
+                    ex.offer(ev);
+                }
+                let expected = ex.expected() as u32;
+                match ex.finish() {
+                    Ok(out) => {
+                        delivery.push(RoundDelivery {
+                            received: out.received as u32,
+                            expected,
+                        });
+                        (out.mean_loss, out.average)
+                    }
+                    Err(e @ ExchangeError::Decode { .. }) => return Err(e.into()),
+                    Err(_) => {
+                        // survivable degraded round (nothing valid arrived /
+                        // NDQSG bootstrap missing): no step this round
+                        rounds_failed += 1;
+                        delivery.push(RoundDelivery { received: 0, expected });
+                        continue;
+                    }
+                }
+            } else {
+                // ---- fast path: perfect network, streaming aggregation ----
+                // synchronous barrier = the recv count: the session decodes
+                // in arrival order, folds in canonical Alg.-2 order, so
+                // replicas (and reruns) stay bit-identical under any
+                // reordering — and records every message's bits on accept.
+                let rx = msg_rx.as_ref().expect("fast path owns the receiver");
+                let mut agg = session.begin_round();
+                for _ in 0..cfg.workers {
+                    let msg = rx.recv().map_err(|_| anyhow::anyhow!("workers gone"))??;
+                    let (worker, loss) = (msg.worker, msg.loss);
+                    agg.push(msg)?; // validates worker identity before we index
+                    losses[worker] = loss;
+                }
+                let train_loss = losses.iter().sum::<f32>() / cfg.workers as f32;
+                let avg = agg.finish()?;
+                delivery.push(RoundDelivery {
+                    received: cfg.workers as u32,
+                    expected: cfg.workers as u32,
+                });
+                (train_loss, avg)
+            };
             // broadcast: full-precision averaged gradient (paper's setting)
             session.record_broadcast(32.0 * self.n_params as f64);
 
@@ -297,6 +503,16 @@ impl Trainer {
                     );
                 }
             }
+
+            if policy_mode {
+                // retire workers the plan disconnected so they stop burning
+                // compute (their messages are swallowed anyway)
+                for w in workers.iter_mut() {
+                    if session.is_dead(w.id) {
+                        w.shutdown();
+                    }
+                }
+            }
         }
 
         for w in &mut workers {
@@ -311,6 +527,8 @@ impl Trainer {
             history,
             comm: session.stats().clone(),
             rounds: cfg.rounds,
+            rounds_failed,
+            delivery,
             workers: cfg.workers,
             n_params: self.n_params,
             wall_secs: t0.elapsed().as_secs_f64(),

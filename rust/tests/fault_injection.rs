@@ -1,0 +1,386 @@
+//! Fault-injected exchange suite: determinism, no-fault policy
+//! equivalence, per-fault ledger attribution, and NDQSG degraded-round
+//! semantics — the acceptance criteria of the fault-channel layer, run
+//! entirely on the artifact-free scenario engine and raw sessions.
+
+use ndq::comm::{ExchangeError, FaultChannel, FaultPlan, RoundPolicy, Session, WorkerMsg};
+use ndq::prng::{DitherStream, Xoshiro256};
+use ndq::quant::{GradQuantizer, Scheme};
+use ndq::sim::LinkModel;
+use ndq::testing::cluster::{run_scenario, ClusterScenario};
+use ndq::testing::{gens, prop_check};
+
+fn correlated(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::new(seed);
+    let base: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.2).collect();
+    (0..p)
+        .map(|_| base.iter().map(|&b| b + rng.next_normal() * 0.01).collect())
+        .collect()
+}
+
+fn make_msgs(schemes: &[Scheme], gs: &[Vec<f32>], run_seed: u64, round: u64) -> Vec<WorkerMsg> {
+    gs.iter()
+        .enumerate()
+        .map(|(p, g)| {
+            let mut q = schemes[p].build();
+            let stream = DitherStream::new(run_seed, p as u32);
+            WorkerMsg {
+                worker: p,
+                round,
+                loss: 0.25,
+                wire: q.encode(g, &mut stream.round(round)),
+            }
+        })
+        .collect()
+}
+
+// ---- acceptance: determinism ------------------------------------------------
+
+#[test]
+fn same_seed_same_plan_bit_identical_report() {
+    let scenario = || ClusterScenario {
+        workers: 6,
+        rounds: 25,
+        seed: 99,
+        scheme: Scheme::Dithered { delta: 1.0 / 3.0 },
+        scheme_p2: Some(Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 }),
+        plan: FaultPlan::new()
+            .drop_prob(0.15)
+            .corrupt_prob(0.05)
+            .straggle(2, 50.0)
+            .delay_at(1, 3, 2)
+            .duplicate_at(0, 4)
+            .disconnect_at(5, 15),
+        policy: RoundPolicy::Quorum(3),
+        ..ClusterScenario::default()
+    };
+    let a = run_scenario(scenario()).unwrap();
+    let b = run_scenario(scenario()).unwrap();
+    assert_eq!(
+        a.fingerprint(),
+        b.fingerprint(),
+        "same seed + same plan must give a bit-identical TrainReport"
+    );
+    // spot-check the underlying fields too, not just the digest
+    assert_eq!(a.delivery, b.delivery);
+    assert_eq!(a.rounds_failed, b.rounds_failed);
+    assert_eq!(a.final_eval_loss.to_bits(), b.final_eval_loss.to_bits());
+    assert_eq!(a.comm.dropped_bits, b.comm.dropped_bits);
+    assert_eq!(a.comm.total_raw_bits.to_bits(), b.comm.total_raw_bits.to_bits());
+    // and the faults actually fired
+    assert!(a.comm.dropped_msgs > 0, "plan injected no drops?");
+    assert_eq!(a.comm.disconnects, 1);
+
+    // a different seed changes the fault schedule and the trajectory
+    let mut other = scenario();
+    other.seed = 100;
+    let c = run_scenario(other).unwrap();
+    assert_ne!(a.fingerprint(), c.fingerprint());
+}
+
+// ---- acceptance: no-fault equivalence ---------------------------------------
+
+#[test]
+fn prop_policies_equal_waitall_on_clean_link() {
+    // Quorum(P) and Deadline(inf) with an empty fault plan must produce
+    // bit-identical aggregates to WaitAll — over scheme mixes including
+    // NDQSG, and under reversed arrival order.
+    prop_check(
+        "no-fault-policy-equivalence",
+        12,
+        gens::pair(gens::f32_vec(900), gens::seed()),
+        |(base, seed)| {
+            let n = base.len().max(8);
+            let mixes: Vec<Vec<Scheme>> = vec![
+                vec![Scheme::Dithered { delta: 0.5 }; 4],
+                vec![
+                    Scheme::Dithered { delta: 1.0 / 3.0 },
+                    Scheme::Dithered { delta: 1.0 / 3.0 },
+                    Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+                    Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+                ],
+                vec![
+                    Scheme::Qsgd { m: 2 },
+                    Scheme::Terngrad,
+                    Scheme::Dithered { delta: 0.5 },
+                    Scheme::Nested { d1: 0.25, ratio: 3, alpha: 1.0 },
+                ],
+            ];
+            for schemes in mixes {
+                let gs = correlated(n, schemes.len(), *seed);
+                let msgs = make_msgs(&schemes, &gs, *seed, 1);
+                let mut reference = Session::new(&schemes, *seed, n)
+                    .map_err(|e| e.to_string())?;
+                let want = reference.decode_round(&msgs).map_err(|e| e.to_string())?;
+
+                let p = schemes.len();
+                for policy in [
+                    RoundPolicy::WaitAll,
+                    RoundPolicy::Quorum(p),
+                    RoundPolicy::Deadline(f64::INFINITY),
+                ] {
+                    for reverse in [false, true] {
+                        let mut session = Session::new(&schemes, *seed, n)
+                            .map_err(|e| e.to_string())?;
+                        let mut channel = FaultChannel::new(
+                            FaultPlan::default(),
+                            *seed,
+                            p,
+                            LinkModel::gigabit(),
+                        );
+                        let mut events = Vec::new();
+                        for m in msgs.iter().cloned() {
+                            events.extend(channel.feed(m));
+                        }
+                        if reverse {
+                            events.reverse();
+                        }
+                        let mut ex = session.begin_exchange(1, policy);
+                        for ev in events {
+                            ex.offer(ev);
+                        }
+                        if !ex.is_complete() {
+                            return Err(format!("{policy:?}: round did not complete"));
+                        }
+                        let out = ex.finish().map_err(|e| e.to_string())?;
+                        if out.average != want {
+                            return Err(format!(
+                                "{policy:?} (reverse={reverse}) diverged from WaitAll"
+                            ));
+                        }
+                        if out.received != p || out.expected != p {
+                            return Err(format!("{policy:?}: delivery {:?}", (out.received, out.expected)));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- scenario: uniform drop under quorum ------------------------------------
+
+#[test]
+fn uniform_drop_quorum_degrades_gracefully() {
+    let report = run_scenario(ClusterScenario {
+        workers: 8,
+        rounds: 40,
+        plan: FaultPlan::new().drop_prob(0.10),
+        policy: RoundPolicy::Quorum(5),
+        ..ClusterScenario::default()
+    })
+    .unwrap();
+    let received: u64 = report.delivery.iter().map(|d| d.received as u64).sum();
+    let expected: u64 = report.delivery.iter().map(|d| d.expected as u64).sum();
+    assert!(report.comm.dropped_msgs > 0, "10% drop fired nothing in 320 messages");
+    assert!(received < expected);
+    assert_eq!(
+        received + report.comm.dropped_msgs + report.comm.late_msgs,
+        expected,
+        "every expected message must be attributed: folded, dropped, or late"
+    );
+    // the fold scales by 1/|received|, so training still converges
+    assert_eq!(report.rounds_failed, 0);
+    assert!(report.final_eval_loss < 0.02, "{}", report.final_eval_loss);
+    // dropped bits were attributed
+    assert!(report.comm.dropped_bits > 0);
+}
+
+// ---- scenario: delay = dropped-now, late-later ------------------------------
+
+#[test]
+fn delayed_message_is_stale_on_release() {
+    let report = run_scenario(ClusterScenario {
+        rounds: 6,
+        plan: FaultPlan::new().delay_at(1, 0, 2),
+        ..ClusterScenario::default()
+    })
+    .unwrap();
+    // round 0: worker 1's message is withheld (tombstone = dropped)
+    assert_eq!(report.delivery[0], ndq::train::RoundDelivery { received: 3, expected: 4 });
+    // round 2: the stale round-0 message arrives and is rejected as late
+    assert_eq!(report.comm.dropped_msgs, 1);
+    assert_eq!(report.comm.late_msgs, 1);
+    assert!(report.comm.late_bits > 0);
+    // every other round is full
+    for (r, d) in report.delivery.iter().enumerate() {
+        if r != 0 {
+            assert_eq!((d.received, d.expected), (4, 4), "round {r}");
+        }
+    }
+    assert_eq!(report.rounds_failed, 0);
+}
+
+// ---- scenario: duplicates never poison the fold -----------------------------
+
+#[test]
+fn duplicate_counted_once_in_fold() {
+    let n = 500;
+    let schemes = vec![Scheme::Dithered { delta: 0.5 }; 3];
+    let gs = correlated(n, 3, 7);
+    let msgs = make_msgs(&schemes, &gs, 7, 0);
+
+    let mut clean = Session::new(&schemes, 7, n).unwrap();
+    let want = clean.decode_round(&msgs).unwrap();
+
+    let mut session = Session::new(&schemes, 7, n).unwrap();
+    let mut channel = FaultChannel::new(
+        FaultPlan::new().duplicate_at(1, 0),
+        7,
+        3,
+        LinkModel::gigabit(),
+    );
+    let mut ex = session.begin_exchange(0, RoundPolicy::WaitAll);
+    let mut total_events = 0;
+    for m in msgs {
+        for ev in channel.feed(m) {
+            total_events += 1;
+            ex.offer(ev);
+        }
+    }
+    assert_eq!(total_events, 4, "duplicate fault must emit two copies");
+    let out = ex.finish().unwrap();
+    assert_eq!(out.average, want, "duplicate changed the aggregate");
+    assert_eq!(out.received, 3);
+    assert_eq!(session.stats().duplicate_msgs, 1);
+    assert!(session.stats().duplicate_bits > 0);
+    assert_eq!(session.stats().messages, 3, "ledger counts each worker once");
+}
+
+// ---- scenario: disconnect shrinks later rounds ------------------------------
+
+#[test]
+fn disconnect_shrinks_expected_from_next_round() {
+    let report = run_scenario(ClusterScenario {
+        rounds: 6,
+        plan: FaultPlan::new().disconnect_at(3, 2),
+        ..ClusterScenario::default()
+    })
+    .unwrap();
+    let de: Vec<(u32, u32)> = report.delivery.iter().map(|d| (d.received, d.expected)).collect();
+    // rounds 0-1 full; round 2 sees the tombstone (expected still counts the
+    // worker at round start); rounds 3+ exclude it entirely
+    assert_eq!(de[0], (4, 4));
+    assert_eq!(de[1], (4, 4));
+    assert_eq!(de[2], (3, 4));
+    for (r, &d) in de.iter().enumerate().skip(3) {
+        assert_eq!(d, (3, 3), "round {r}");
+    }
+    assert_eq!(report.comm.disconnects, 1);
+    assert_eq!(report.rounds_failed, 0);
+    assert!(report.final_eval_loss < 0.02);
+}
+
+// ---- NDQSG: bootstrap-missing is typed, never mis-decoded -------------------
+
+#[test]
+fn ndqsg_bootstrap_missing_is_typed_error() {
+    let n = 400;
+    let schemes = vec![
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+    ];
+    let gs = correlated(n, 3, 11);
+    let msgs = make_msgs(&schemes, &gs, 11, 0);
+
+    let mut session = Session::new(&schemes, 11, n).unwrap();
+    // the lone P1 worker's message is dropped on the link
+    let mut channel = FaultChannel::new(
+        FaultPlan::new().drop_at(0, 0),
+        11,
+        3,
+        LinkModel::gigabit(),
+    );
+    let mut ex = session.begin_exchange(0, RoundPolicy::Quorum(2));
+    for m in msgs {
+        for ev in channel.feed(m) {
+            ex.offer(ev);
+        }
+    }
+    assert!(ex.is_complete(), "quorum of 2 valid P2 messages was reached");
+    let err = ex.finish().unwrap_err();
+    match err {
+        ExchangeError::NdqsgBootstrapMissing { round, queued_p2 } => {
+            assert_eq!(round, 0);
+            assert_eq!(queued_p2, 2);
+        }
+        other => panic!("wanted NdqsgBootstrapMissing, got {other:?}"),
+    }
+    // the queued-then-failed P2 bits are attributed as rejected
+    assert_eq!(session.stats().rejected_msgs, 2);
+    assert_eq!(session.stats().dropped_msgs, 1);
+    // the session recovers: the next round with full delivery succeeds
+    // (WaitAll here — under Quorum(2) the third arrival would count late)
+    let gs2 = correlated(n, 3, 12);
+    let msgs2 = make_msgs(&schemes, &gs2, 11, 1);
+    let mut channel2 = FaultChannel::new(FaultPlan::default(), 11, 3, LinkModel::gigabit());
+    let mut ex = session.begin_exchange(1, RoundPolicy::WaitAll);
+    for m in msgs2 {
+        for ev in channel2.feed(m) {
+            ex.offer(ev);
+        }
+    }
+    let out = ex.finish().unwrap();
+    assert_eq!(out.received, 3);
+}
+
+#[test]
+fn ndqsg_bootstrap_failure_survivable_in_harness() {
+    // the scenario engine records the failed round and keeps training
+    let report = run_scenario(ClusterScenario {
+        workers: 3, // worker 0 is the only P1 under the half-split rule
+        rounds: 10,
+        scheme_p2: Some(Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 }),
+        plan: FaultPlan::new().drop_at(0, 4),
+        policy: RoundPolicy::Quorum(2),
+        ..ClusterScenario::default()
+    })
+    .unwrap();
+    assert_eq!(report.rounds_failed, 1);
+    assert_eq!(report.delivery[4].received, 0);
+    assert_eq!(report.delivery[4].expected, 3);
+    assert!(report.final_eval_loss < 0.05, "{}", report.final_eval_loss);
+}
+
+// ---- deadline + straggler interplay -----------------------------------------
+
+#[test]
+fn deadline_infinity_never_rejects_and_tight_deadline_does() {
+    let mk = |deadline: f64| {
+        run_scenario(ClusterScenario {
+            rounds: 8,
+            plan: FaultPlan::new().straggle(1, 1_000_000.0),
+            policy: RoundPolicy::Deadline(deadline),
+            ..ClusterScenario::default()
+        })
+        .unwrap()
+    };
+    let inf = mk(f64::INFINITY);
+    assert_eq!(inf.comm.late_msgs, 0);
+    assert!(inf.delivery.iter().all(|d| d.received == 4));
+
+    let tight = mk(0.05);
+    assert_eq!(tight.comm.late_msgs, 8, "straggler late every round");
+    assert!(tight.delivery.iter().all(|d| d.received == 3 && d.expected == 4));
+}
+
+// ---- fault decisions vs. worker identity ------------------------------------
+
+#[test]
+fn scripted_fault_hits_exactly_its_target() {
+    // one corrupt byte for worker 2 at round 3 only: the ledger shows one
+    // CRC rejection and every other (worker, round) folds
+    let report = run_scenario(ClusterScenario {
+        rounds: 6,
+        plan: FaultPlan::new().corrupt_at(2, 3),
+        ..ClusterScenario::default()
+    })
+    .unwrap();
+    assert_eq!(report.comm.rejected_msgs, 1);
+    assert!(report.comm.rejected_bits > 0);
+    assert_eq!(report.delivery[3], ndq::train::RoundDelivery { received: 3, expected: 4 });
+    let folded: u64 = report.delivery.iter().map(|d| d.received as u64).sum();
+    assert_eq!(folded, 6 * 4 - 1);
+}

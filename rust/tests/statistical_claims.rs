@@ -1,0 +1,309 @@
+//! The paper's statistical claims as executable assertions.
+//!
+//! What separates DQSG/NDQSG from QSGD-style quantizers (Thm. 1, Lemma 3,
+//! Thms. 5-6) is the *shape* of the reconstruction error: subtractive
+//! dithering makes `(g~ - g)/kappa` exactly uniform on [-Δ/2, Δ/2],
+//! independent of the gradient — so quantized training behaves like plain
+//! SG plus bounded iid noise. This suite measures those properties on the
+//! real encode → wire bytes → decode path:
+//!
+//! 1. Kolmogorov–Smirnov: the normalized error's empirical CDF matches the
+//!    uniform CDF at n ≥ 10^5 samples (α = 0.01 band).
+//! 2. Input-independence: the error is uncorrelated with the gradient, and
+//!    its variance does not depend on |g| — while QSGD's demonstrably does
+//!    (the contrast that motivates dithering).
+//! 3. Variance bound: per-element error variance ≤ Δ²/12 (1 + tol).
+//! 4. NDQSG ≤ DQSG: same error variance at the same fine step while the
+//!    `CommStats` ledger bills strictly fewer payload bits per round
+//!    (Thms. 5-6 / Fig. 6).
+//!
+//! Sample sizes: the default ("quick", what `scripts/tier1.sh` runs) uses
+//! 120k samples per scheme; `NDQ_STAT_MODE=full` raises that to 1M for
+//! local deep runs. Everything is seeded — the verdicts are deterministic.
+
+use ndq::comm::{Session, WorkerMsg};
+use ndq::prng::{DitherStream, Xoshiro256};
+use ndq::quant::{GradQuantizer, Scheme};
+use ndq::testing::{ks_statistic_uniform, pearson};
+
+/// Per-scheme sample budget: quick (tier-1) vs full (local deep runs).
+fn sample_budget() -> usize {
+    match std::env::var("NDQ_STAT_MODE").as_deref() {
+        Ok("full") => 1_000_000,
+        _ => 120_000,
+    }
+}
+
+const CHUNK: usize = 20_000;
+
+/// The normalized step Δ of a dithered scheme (the uniform error support
+/// is [-Δ/2, Δ/2]).
+fn delta_of(scheme: &Scheme) -> f32 {
+    match scheme {
+        Scheme::Dithered { delta } => *delta,
+        Scheme::DitheredPartitioned { delta, .. } => *delta,
+        Scheme::Nested { d1, .. } => *d1,
+        _ => panic!("not a dithered scheme"),
+    }
+}
+
+/// Per-coordinate kappa for one message: single-scale schemes broadcast
+/// scales[0]; partitioned DQSG maps each coordinate to its partition's
+/// scale (K near-equal chunks, first n%K one longer — the codec's layout).
+fn per_coord_kappa(scheme: &Scheme, scales: &[f32], n: usize) -> Vec<f32> {
+    match scheme {
+        Scheme::DitheredPartitioned { k, .. } => {
+            let k = (*k).min(n.max(1));
+            assert_eq!(scales.len(), k);
+            let base = n / k;
+            let rem = n % k;
+            let mut out = Vec::with_capacity(n);
+            for (i, &s) in scales.iter().enumerate() {
+                let len = base + usize::from(i < rem);
+                out.extend(std::iter::repeat(s).take(len));
+            }
+            out
+        }
+        _ => {
+            assert_eq!(scales.len(), 1);
+            vec![scales[0]; n]
+        }
+    }
+}
+
+/// Collect (gradient, normalized error) pairs for `scheme` over enough
+/// encode/decode round trips to reach the sample budget. NDQSG decodes
+/// against side information y = g + z with |z| safely inside the coarse
+/// bin (Thm. 6's exact-decoding regime — the operating point of Alg. 2).
+fn error_samples(scheme: Scheme, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let budget = sample_budget();
+    let mut gs = Vec::with_capacity(budget);
+    let mut errs = Vec::with_capacity(budget);
+    let mut rng = Xoshiro256::new(seed);
+    let mut q = scheme.build();
+    let stream = DitherStream::new(seed ^ 0xD17, 0);
+    let mut round = 0u64;
+    while gs.len() < budget {
+        let g: Vec<f32> = (0..CHUNK).map(|_| rng.next_normal() * 0.25).collect();
+        let msg = q.encode(&g, &mut stream.round(round));
+        let side_owner;
+        let side = if q.needs_side_info() {
+            let Scheme::Nested { d1, ratio, alpha } = scheme else { unreachable!() };
+            let kappa = g.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let zmax = 0.4 * (d1 * ratio as f32 - d1) / (2.0 * alpha) * kappa;
+            side_owner = g
+                .iter()
+                .map(|&x| x + (rng.next_f32() * 2.0 - 1.0) * zmax)
+                .collect::<Vec<f32>>();
+            Some(&side_owner[..])
+        } else {
+            None
+        };
+        let recon = q.decode(&msg, &mut stream.round(round), side).unwrap();
+        let kappas = per_coord_kappa(&scheme, &msg.scales().unwrap(), g.len());
+        for ((&gi, &ri), &ki) in g.iter().zip(&recon).zip(&kappas) {
+            gs.push(gi as f64);
+            errs.push((ri - gi) as f64 / ki as f64);
+        }
+        round += 1;
+    }
+    gs.truncate(budget);
+    errs.truncate(budget);
+    (gs, errs)
+}
+
+fn dithered_schemes() -> Vec<Scheme> {
+    vec![
+        Scheme::Dithered { delta: 1.0 },
+        Scheme::Dithered { delta: 0.5 },
+        Scheme::Dithered { delta: 1.0 / 3.0 },
+        Scheme::DitheredPartitioned { delta: 0.5, k: 8 },
+        Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+    ]
+}
+
+// ---- claim 1: the error is uniform on [-Δ/2, Δ/2] ---------------------------
+
+#[test]
+fn error_cdf_is_uniform_ks() {
+    for scheme in dithered_schemes() {
+        let delta = delta_of(&scheme) as f64;
+        let (_, mut errs) = error_samples(scheme, 0xA11CE);
+        let n = errs.len();
+        assert!(n >= 100_000, "budget too small for the KS band");
+        // support check first: Thm. 1 bounds the error pointwise
+        let tol = 1e-4 * delta;
+        assert!(
+            errs.iter().all(|e| e.abs() <= delta / 2.0 + tol),
+            "{scheme:?}: error escaped [-Δ/2, Δ/2]"
+        );
+        let d = ks_statistic_uniform(&mut errs, -delta / 2.0, delta / 2.0);
+        // conservative acceptance band (~alpha = 5e-4): a genuinely
+        // non-uniform error (e.g. QSGD's) lands an order of magnitude above
+        let band = 1.95 / (n as f64).sqrt();
+        assert!(
+            d < band,
+            "{scheme:?}: KS statistic {d:.5} outside the uniform band {band:.5}"
+        );
+    }
+}
+
+// ---- claim 2: the error is independent of the input -------------------------
+
+/// Split per-element error variance by |g| halves (below/above median).
+fn variance_by_magnitude(gs: &[f64], errs: &[f64]) -> (f64, f64) {
+    let mut mags: Vec<f64> = gs.iter().map(|g| g.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = mags[mags.len() / 2];
+    let (mut lo, mut hi) = ((0f64, 0usize), (0f64, 0usize));
+    for (&g, &e) in gs.iter().zip(errs) {
+        if g.abs() < median {
+            lo = (lo.0 + e * e, lo.1 + 1);
+        } else {
+            hi = (hi.0 + e * e, hi.1 + 1);
+        }
+    }
+    (lo.0 / lo.1 as f64, hi.0 / hi.1 as f64)
+}
+
+#[test]
+fn error_uncorrelated_with_gradient() {
+    for scheme in dithered_schemes() {
+        let (gs, errs) = error_samples(scheme, 0xBEA7);
+        let n = gs.len() as f64;
+        let r = pearson(&gs, &errs);
+        // 99.9% band for the sample correlation of independent pairs
+        let band = 3.3 / n.sqrt();
+        assert!(
+            r.abs() < band.max(0.01),
+            "{scheme:?}: corr(g, err) = {r:.5} — error depends on the input"
+        );
+        // second moment: conditional variance flat across |g|
+        let (lo, hi) = variance_by_magnitude(&gs, &errs);
+        let ratio = lo / hi;
+        assert!(
+            (0.9..=1.1).contains(&ratio),
+            "{scheme:?}: var(err | small g)/var(err | large g) = {ratio:.3}"
+        );
+    }
+}
+
+#[test]
+fn qsgd_error_depends_on_input_unlike_dqsg() {
+    // the contrast claim: QSGD's stochastic-rounding error variance grows
+    // with |g| (zero at grid points, maximal mid-bin) — dithering removes
+    // exactly this input-dependence
+    let budget = sample_budget();
+    let mut rng = Xoshiro256::new(0xC0417);
+    let mut q = Scheme::Qsgd { m: 1 }.build();
+    let stream = DitherStream::new(5, 0);
+    let (mut gs, mut errs) = (Vec::new(), Vec::new());
+    let mut round = 0u64;
+    while gs.len() < budget {
+        let g: Vec<f32> = (0..CHUNK).map(|_| rng.next_normal() * 0.25).collect();
+        let msg = q.encode(&g, &mut stream.round(round));
+        let recon = q.decode(&msg, &mut stream.round(round), None).unwrap();
+        let kappa = msg.scales().unwrap()[0];
+        for (&gi, &ri) in g.iter().zip(&recon) {
+            gs.push(gi as f64);
+            errs.push((ri - gi) as f64 / kappa as f64);
+        }
+        round += 1;
+    }
+    let (lo, hi) = variance_by_magnitude(&gs, &errs);
+    assert!(
+        lo / hi < 0.6,
+        "QSGD conditional variance ratio {:.3} — expected strong |g| dependence",
+        lo / hi
+    );
+}
+
+// ---- claim 3: per-element variance ≤ Δ²/12 ----------------------------------
+
+#[test]
+fn error_variance_within_delta_sq_over_12() {
+    for scheme in dithered_schemes() {
+        let delta = delta_of(&scheme) as f64;
+        let (_, errs) = error_samples(scheme, 0x5EED);
+        let n = errs.len() as f64;
+        let mean = errs.iter().sum::<f64>() / n;
+        let var = errs.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>() / n;
+        let bound = delta * delta / 12.0;
+        assert!(
+            var <= bound * 1.02,
+            "{scheme:?}: var {var:.6} exceeds Δ²/12 = {bound:.6}"
+        );
+        assert!(
+            var >= bound * 0.95,
+            "{scheme:?}: var {var:.6} implausibly below Δ²/12 = {bound:.6} — \
+             the dither is not exercising the full cell"
+        );
+        assert!(mean.abs() < 3.3 * (bound / n).sqrt() + 1e-6, "{scheme:?}: biased ({mean})");
+    }
+}
+
+// ---- claim 4: NDQSG hits the DQSG bound at strictly fewer bits --------------
+
+#[test]
+fn ndqsg_matches_dqsg_variance_at_fewer_bits() {
+    let d1 = 1.0f32 / 3.0;
+    let nested = Scheme::Nested { d1, ratio: 3, alpha: 1.0 };
+    let dqsg = Scheme::Dithered { delta: d1 };
+
+    // (a) Thms. 5-6: equal error variance at the same fine step
+    let (_, errs_n) = error_samples(nested, 0xF16);
+    let (_, errs_d) = error_samples(dqsg, 0xF16 ^ 1);
+    let var = |e: &[f64]| e.iter().map(|x| x * x).sum::<f64>() / e.len() as f64;
+    let (vn, vd) = (var(&errs_n), var(&errs_d));
+    let bound = (d1 as f64) * (d1 as f64) / 12.0;
+    assert!(vn <= bound * 1.02, "NDQSG var {vn:.6} above the DQSG bound {bound:.6}");
+    let ratio = vn / vd;
+    assert!(
+        (ratio - 1.0).abs() < 0.05,
+        "NDQSG/DQSG variance ratio {ratio:.4} — Thm. 6 says 1 at alpha = 1"
+    );
+
+    // (b) the ledger: an NDQSG mix bills strictly fewer payload bits per
+    // round than all-DQSG at the same fine step, with identical gradients
+    let n = 30_000;
+    let mut rng = Xoshiro256::new(33);
+    let base: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.2).collect();
+    let gs: Vec<Vec<f32>> = (0..4)
+        .map(|_| base.iter().map(|&b| b + rng.next_normal() * 0.005).collect())
+        .collect();
+    let make = |schemes: &[Scheme]| -> Vec<WorkerMsg> {
+        gs.iter()
+            .enumerate()
+            .map(|(p, g)| {
+                let mut q = schemes[p].build();
+                let stream = DitherStream::new(9, p as u32);
+                WorkerMsg {
+                    worker: p,
+                    round: 0,
+                    loss: 0.0,
+                    wire: q.encode(g, &mut stream.round(0)),
+                }
+            })
+            .collect()
+    };
+    let all_dqsg = vec![dqsg; 4];
+    let mixed = vec![dqsg, dqsg, nested, nested];
+    let mut s_dqsg = Session::new(&all_dqsg, 9, n).unwrap();
+    s_dqsg.decode_round(&make(&all_dqsg)).unwrap();
+    let mut s_mixed = Session::new(&mixed, 9, n).unwrap();
+    s_mixed.decode_round(&make(&mixed)).unwrap();
+    let (bits_dqsg, bits_mixed) = (
+        s_dqsg.stats().total_raw_bits,
+        s_mixed.stats().total_raw_bits,
+    );
+    assert!(
+        bits_mixed < bits_dqsg,
+        "mixed round {bits_mixed} bits !< all-DQSG round {bits_dqsg} bits"
+    );
+    // per-coordinate rates: log2(3) vs log2(7) ⇒ the mixed round saves
+    // ~2 × (log2 7 - log2 3) / (4 log2 7) ≈ 21% — require at least 15%
+    assert!(
+        bits_mixed < bits_dqsg * 0.85,
+        "saving too small: {bits_mixed} vs {bits_dqsg}"
+    );
+}

@@ -39,7 +39,18 @@ cargo build --release
 echo "== cargo build --release --examples --benches =="
 cargo build --release --examples --benches
 
-echo "== cargo test -q =="
-cargo test -q
+echo "== cargo test -q (statistical suite in quick mode) =="
+NDQ_STAT_MODE="${NDQ_STAT_MODE:-quick}" cargo test -q
+
+# Fault-injected scenario smoke: drive the scenario engine end to end with
+# a nonzero fault plan (drops + a straggler + one corrupt byte) through the
+# real CLI. Needs no artifacts; fails the gate if the cluster layer cannot
+# complete a degraded run.
+echo "== ndq cluster fault smoke =="
+cargo run --release --quiet -- cluster \
+    --workers 8 --rounds 20 \
+    --scheme dqsg:0.333333 --scheme-p2 nested:0.333333:3:1.0 \
+    --fault-plan "drop:0.15;straggle:w2x6;corrupt:w1@r3" \
+    --round-policy quorum:5
 
 echo "tier-1 gate passed"
