@@ -37,12 +37,7 @@ fn session_tour() -> ndq::Result<()> {
         .map(|(p, scheme)| {
             let mut q = scheme.build();
             let stream = DitherStream::new(run_seed, p as u32);
-            WorkerMsg {
-                worker: p,
-                round,
-                loss: 0.0,
-                wire: q.encode(&grad, &mut stream.round(round)),
-            }
+            WorkerMsg::new(p, round, 0.0, q.encode(&grad, &mut stream.round(round)))
         })
         .collect();
 

@@ -1,12 +1,61 @@
-//! §Perf: coding-layer throughput — base-k packing vs adaptive arithmetic
-//! coding, and the dither PRNG fill rate (the three non-compute costs on
-//! the wire path).
+//! §Perf: coding-layer throughput — base-k packing vs the on-wire entropy
+//! coders (Huffman + adaptive arithmetic), the adaptive model's
+//! cumulative-count structure (Fenwick vs the old linear scan), and the
+//! dither PRNG fill rate: the non-compute costs on the wire path.
 
 mod common;
 
-use ndq::coding::{arithmetic, pack, BitReader, BitWriter};
+use ndq::coding::arithmetic::{self, AdaptiveModel};
+use ndq::coding::{huffman, pack, BitReader, BitWriter};
 use ndq::prng::{DitherStream, Xoshiro256};
 use ndq::stats::bench::Bench;
+
+/// The pre-Fenwick `AdaptiveModel::range`/`find`: O(alphabet) linear scans
+/// per symbol. Kept here (bench-only) as the baseline the tree replaced.
+struct LinearModel {
+    freq: Vec<u64>,
+    total: u64,
+}
+
+impl LinearModel {
+    fn new(alphabet: usize) -> Self {
+        Self {
+            freq: vec![1; alphabet],
+            total: alphabet as u64,
+        }
+    }
+
+    fn range(&self, s: usize) -> (u64, u64, u64) {
+        let mut lo = 0u64;
+        for &f in &self.freq[..s] {
+            lo += f;
+        }
+        (lo, lo + self.freq[s], self.total)
+    }
+
+    fn find(&self, target: u64) -> (usize, u64, u64) {
+        let mut lo = 0u64;
+        for (s, &f) in self.freq.iter().enumerate() {
+            if target < lo + f {
+                return (s, lo, lo + f);
+            }
+            lo += f;
+        }
+        unreachable!()
+    }
+
+    fn update(&mut self, s: usize) {
+        self.freq[s] += 32;
+        self.total += 32;
+        if self.total > (1 << 16) {
+            self.total = 0;
+            for f in &mut self.freq {
+                *f = (*f >> 1).max(1);
+                self.total += *f;
+            }
+        }
+    }
+}
 
 fn main() -> ndq::Result<()> {
     let mut b = Bench::new();
@@ -58,6 +107,67 @@ fn main() -> ndq::Result<()> {
         arithmetic::decode(&mut rd, 3, n).unwrap()
     });
     println!("    -> {:.1} M sym/s", r.throughput(n as f64) / 1e6);
+
+    // Huffman on the same stream: the third on-wire codec
+    let r = b.run("huffman_encode/266610", || {
+        let mut w = BitWriter::new();
+        huffman::encode(&symbols, 3, &mut w);
+        w
+    });
+    println!("    -> {:.1} M sym/s", r.throughput(n as f64) / 1e6);
+
+    let mut w = BitWriter::new();
+    huffman::encode(&symbols, 3, &mut w);
+    let hcoded = w.into_bytes();
+    let r = b.run("huffman_decode/266610", || {
+        let mut rd = BitReader::new(&hcoded);
+        huffman::decode(&mut rd, 3, n).unwrap()
+    });
+    println!("    -> {:.1} M sym/s", r.throughput(n as f64) / 1e6);
+
+    // adaptive-model cumulative counts at the 4096-symbol ceiling: the
+    // Fenwick tree vs the old per-symbol linear scan it replaced (the win
+    // that makes large-alphabet aac lanes affordable)
+    let k = 4096usize;
+    let lookups = 30_000usize;
+    let big: Vec<u32> = (0..lookups).map(|_| rng.next_below(k as u32)).collect();
+    let r_lin = b.run("aac_model_linear/k4096", || {
+        let mut model = LinearModel::new(k);
+        let mut acc = 0u64;
+        for &s in &big {
+            let (lo, hi, total) = model.range(s as usize);
+            let (f, _, _) = model.find((lo + hi) / 2 % total);
+            acc = acc.wrapping_add(f as u64);
+            model.update(s as usize);
+        }
+        acc
+    });
+    println!("    -> {:.2} M lookups/s", r_lin.throughput(lookups as f64) / 1e6);
+    let r_fen = b.run("aac_model_fenwick/k4096", || {
+        let mut model = AdaptiveModel::new(k);
+        let mut acc = 0u64;
+        for &s in &big {
+            let (lo, hi, total) = model.range(s as usize);
+            let (f, _, _) = model.find((lo + hi) / 2 % total);
+            acc = acc.wrapping_add(f as u64);
+            model.update(s as usize);
+        }
+        acc
+    });
+    println!(
+        "    -> {:.2} M lookups/s ({:.1}x vs linear scan)",
+        r_fen.throughput(lookups as f64) / 1e6,
+        r_lin.median_ns / r_fen.median_ns
+    );
+
+    // end-to-end aac at the large alphabet (dominated by model queries)
+    let big_n = 30_000usize;
+    let r = b.run("aac_encode/k4096/30000", || {
+        let mut w = BitWriter::new();
+        arithmetic::encode(&big, k, &mut w);
+        w
+    });
+    println!("    -> {:.2} M sym/s", r.throughput(big_n as f64) / 1e6);
 
     // dither generation (Philox fill)
     let mut buf = vec![0f32; n];

@@ -18,58 +18,130 @@ const THREE_Q: u64 = 3 * QUARTER;
 const MAX_TOTAL: u64 = 1 << 16;
 const INCREMENT: u64 = 32;
 
+/// Largest alphabet the adaptive model supports: the initial flat model
+/// must satisfy `total <= MAX_TOTAL` for the coder's precision invariant.
+/// Codec negotiation rejects `aac` for wider-alphabet schemes instead of
+/// hitting the internal assert.
+pub const MAX_ALPHABET: usize = 4096;
+
 /// Adaptive order-0 frequency model over a small alphabet.
+///
+/// Cumulative counts live in a Fenwick (binary indexed) tree, so the two
+/// per-symbol queries — `range` (encode side) and `find` (decode side) —
+/// cost O(log alphabet) instead of the O(alphabet) linear scans the first
+/// implementation used. At the 4096-symbol ceiling that is a ~100x cut in
+/// cumulative-count work per symbol (`benches/perf_coding.rs` measures
+/// both); the *coded bit stream is unchanged*, because the tree is just a
+/// different view of the same `freq`/`total` state.
 #[derive(Debug, Clone)]
 pub struct AdaptiveModel {
     freq: Vec<u64>,
+    /// Fenwick tree over `freq` (1-based; `fen[i]` covers a power-of-two
+    /// window ending at element `i - 1`).
+    fen: Vec<u64>,
+    /// Largest power of two <= alphabet (the `find` descent start mask).
+    top_bit: usize,
     total: u64,
 }
 
 impl AdaptiveModel {
     pub fn new(alphabet: usize) -> Self {
-        assert!(alphabet >= 1 && alphabet <= 4096);
-        Self {
+        assert!(alphabet >= 1 && alphabet <= MAX_ALPHABET);
+        let mut m = Self {
             freq: vec![1; alphabet],
+            fen: Vec::new(),
+            top_bit: 1usize << (usize::BITS - 1 - alphabet.leading_zeros()),
             total: alphabet as u64,
+        };
+        m.rebuild();
+        m
+    }
+
+    /// Rebuild the Fenwick tree from `freq` (startup + rescale).
+    fn rebuild(&mut self) {
+        self.fen.clear();
+        self.fen.resize(self.freq.len() + 1, 0);
+        for i in 1..self.fen.len() {
+            self.fen[i] += self.freq[i - 1];
+            let parent = i + (i & i.wrapping_neg());
+            if parent < self.fen.len() {
+                let carry = self.fen[i];
+                self.fen[parent] += carry;
+            }
         }
+    }
+
+    /// Sum of `freq[0..s]`.
+    #[inline]
+    fn prefix(&self, mut s: usize) -> u64 {
+        let mut sum = 0u64;
+        while s > 0 {
+            sum += self.fen[s];
+            s &= s - 1;
+        }
+        sum
     }
 
     /// (cum_lo, cum_hi, total) for symbol s.
-    fn range(&self, s: usize) -> (u64, u64, u64) {
-        let mut lo = 0u64;
-        for &f in &self.freq[..s] {
-            lo += f;
-        }
+    pub fn range(&self, s: usize) -> (u64, u64, u64) {
+        let lo = self.prefix(s);
         (lo, lo + self.freq[s], self.total)
     }
 
-    /// Find the symbol whose cumulative range contains `target`.
-    fn find(&self, target: u64) -> (usize, u64, u64) {
-        let mut lo = 0u64;
-        for (s, &f) in self.freq.iter().enumerate() {
-            if target < lo + f {
-                return (s, lo, lo + f);
+    /// Find the symbol whose cumulative range contains `target`
+    /// (`target < total`); returns `(s, cum_lo, cum_hi)`.
+    pub fn find(&self, target: u64) -> (usize, u64, u64) {
+        debug_assert!(target < self.total, "target {target} >= total {}", self.total);
+        // Fenwick descent: largest s with prefix(s) <= target.
+        let mut s = 0usize;
+        let mut rem = target;
+        let mut bit = self.top_bit;
+        while bit > 0 {
+            let next = s + bit;
+            if next < self.fen.len() && self.fen[next] <= rem {
+                rem -= self.fen[next];
+                s = next;
             }
-            lo += f;
+            bit >>= 1;
         }
-        unreachable!("target {target} >= total {}", self.total)
+        let lo = target - rem;
+        (s, lo, lo + self.freq[s])
     }
 
-    fn update(&mut self, s: usize) {
+    /// Current cumulative total (the coder's divisor).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn update(&mut self, s: usize) {
         self.freq[s] += INCREMENT;
         self.total += INCREMENT;
+        {
+            let mut i = s + 1;
+            while i < self.fen.len() {
+                self.fen[i] += INCREMENT;
+                i += i & i.wrapping_neg();
+            }
+        }
         if self.total > MAX_TOTAL {
             self.total = 0;
             for f in &mut self.freq {
                 *f = (*f >> 1).max(1);
                 self.total += *f;
             }
+            self.rebuild();
         }
     }
 }
 
 /// Encode a symbol stream (alphabet known to both ends) into `w`.
 pub fn encode(symbols: &[u32], alphabet: usize, w: &mut BitWriter) {
+    encode_iter(symbols.iter().copied(), alphabet, w);
+}
+
+/// Single-pass core over any symbol stream — lets the signed entry point
+/// fuse the `+m` offset instead of materializing a symbol copy.
+fn encode_iter<I: Iterator<Item = u32>>(symbols: I, alphabet: usize, w: &mut BitWriter) {
     let mut model = AdaptiveModel::new(alphabet);
     let mut low: u64 = 0;
     let mut high: u64 = TOP - 1;
@@ -84,7 +156,7 @@ pub fn encode(symbols: &[u32], alphabet: usize, w: &mut BitWriter) {
         }
     }
 
-    for &s in symbols {
+    for s in symbols {
         let (c_lo, c_hi, total) = model.range(s as usize);
         let span = high - low + 1;
         high = low + span * c_hi / total - 1;
@@ -117,63 +189,115 @@ pub fn encode(symbols: &[u32], alphabet: usize, w: &mut BitWriter) {
     }
 }
 
-/// Decode `n` symbols produced by [`encode`] with the same alphabet.
-pub fn decode(r: &mut BitReader, alphabet: usize, n: usize) -> crate::Result<Vec<u32>> {
-    let mut model = AdaptiveModel::new(alphabet);
-    let mut low: u64 = 0;
-    let mut high: u64 = TOP - 1;
-    let mut code: u64 = 0;
+/// Streaming decoder for a stream produced by [`encode`]: primes the
+/// 32-bit code register at construction, then yields one symbol per
+/// [`AacSource::next_symbol`] — the wire-v3 decode path for `codec = aac`
+/// frames. Holds O(alphabet) state (the adaptive model), never O(n).
+///
+/// Reading past the written stream is legal (pads with zeros): the final
+/// bits of the code word are unconstrained by construction, which is what
+/// lets byte-aligned frame payloads truncate the trailing partial byte.
+pub struct AacSource<'r, 'b> {
+    r: &'r mut BitReader<'b>,
+    model: AdaptiveModel,
+    low: u64,
+    high: u64,
+    code: u64,
+    remaining: usize,
+}
 
-    // Reading past the written stream is legal (pad with zeros): the final
-    // bits of the code word are unconstrained by construction.
-    let next_bit = |r: &mut BitReader| -> u64 {
-        match r.read_bit() {
+impl<'r, 'b> AacSource<'r, 'b> {
+    pub fn new(r: &'r mut BitReader<'b>, alphabet: usize, n: usize) -> Self {
+        let mut src = Self {
+            r,
+            model: AdaptiveModel::new(alphabet),
+            low: 0,
+            high: TOP - 1,
+            code: 0,
+            remaining: n,
+        };
+        if n > 0 {
+            for _ in 0..CODE_BITS {
+                src.code = (src.code << 1) | src.next_bit();
+            }
+        }
+        src
+    }
+
+    #[inline]
+    fn next_bit(&mut self) -> u64 {
+        match self.r.read_bit() {
             Ok(b) => b as u64,
             Err(_) => 0,
         }
-    };
-
-    for _ in 0..CODE_BITS {
-        code = (code << 1) | next_bit(r);
     }
 
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        let span = high - low + 1;
-        let total = model.total;
-        let target = ((code - low + 1) * total - 1) / span;
-        let (s, c_lo, c_hi) = model.find(target);
-        out.push(s as u32);
-        high = low + span * c_hi / total - 1;
-        low += span * c_lo / total;
+    /// Symbols left to yield.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// Next symbol in [0, alphabet); errors once all `n` are consumed.
+    #[inline]
+    pub fn next_symbol(&mut self) -> crate::Result<u32> {
+        anyhow::ensure!(self.remaining > 0, "symbol stream exhausted");
+        self.remaining -= 1;
+        let span = self.high - self.low + 1;
+        let total = self.model.total();
+        // clamp: on a well-formed stream target < total always holds; a
+        // corrupt register must yield garbage, not an out-of-range lookup
+        let target = ((self.code.wrapping_sub(self.low).wrapping_add(1))
+            .wrapping_mul(total)
+            .wrapping_sub(1)
+            / span)
+            .min(total - 1);
+        let (s, c_lo, c_hi) = self.model.find(target);
+        self.high = self.low + span * c_hi / total - 1;
+        self.low += span * c_lo / total;
         loop {
-            if high < HALF {
+            if self.high < HALF {
                 // nothing
-            } else if low >= HALF {
-                low -= HALF;
-                high -= HALF;
-                code -= HALF;
-            } else if low >= QUARTER && high < THREE_Q {
-                low -= QUARTER;
-                high -= QUARTER;
-                code -= QUARTER;
+            } else if self.low >= HALF {
+                self.low -= HALF;
+                self.high -= HALF;
+                self.code -= HALF;
+            } else if self.low >= QUARTER && self.high < THREE_Q {
+                self.low -= QUARTER;
+                self.high -= QUARTER;
+                self.code -= QUARTER;
             } else {
                 break;
             }
-            low <<= 1;
-            high = (high << 1) | 1;
-            code = (code << 1) | next_bit(r);
+            self.low <<= 1;
+            self.high = (self.high << 1) | 1;
+            self.code = (self.code << 1) | self.next_bit();
         }
-        model.update(s);
+        self.model.update(s);
+        Ok(s as u32)
+    }
+}
+
+/// Decode `n` symbols produced by [`encode`] with the same alphabet.
+pub fn decode(r: &mut BitReader, alphabet: usize, n: usize) -> crate::Result<Vec<u32>> {
+    let mut src = AacSource::new(r, alphabet, n);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(src.next_symbol()?);
     }
     Ok(out)
 }
 
+/// Encode a signed index stream in [-m, m] (fused offset into the packer
+/// alphabet [0, 2m], no intermediate symbol vector) — the wire-v3
+/// `codec = aac` index lane.
+pub fn encode_signed(q: &[i32], m: i32, w: &mut BitWriter) {
+    encode_iter(q.iter().map(move |&x| (x + m) as u32), (2 * m + 1) as usize, w);
+}
+
 /// Convenience: encoded size in bits for a signed index stream in [-m, m].
 pub fn encoded_bits_signed(q: &[i32], m: i32) -> usize {
-    let sym: Vec<u32> = q.iter().map(|&x| (x + m) as u32).collect();
     let mut w = BitWriter::new();
-    encode(&sym, (2 * m + 1) as usize, &mut w);
+    encode_signed(q, m, &mut w);
     w.len_bits()
 }
 
@@ -245,6 +369,40 @@ mod tests {
         let bits = roundtrip(&sym, 5);
         let h = Histogram::from_symbols(&sym, 5).total_bits();
         assert!((bits as f64) < h * 1.02);
+    }
+
+    #[test]
+    fn fenwick_model_is_self_consistent() {
+        // range() and find() must stay exact inverses across updates and
+        // rescales: for every symbol s with range (lo, hi, total), find(t)
+        // returns (s, lo, hi) for t in {lo, hi-1}; ranges tile [0, total).
+        let mut rng = Xoshiro256::new(13);
+        for alphabet in [1usize, 2, 3, 5, 64, 1000, 4096] {
+            let mut model = AdaptiveModel::new(alphabet);
+            // enough updates to cross the MAX_TOTAL rescale at least once
+            let updates = if alphabet >= 1000 { 3000 } else { 2500 };
+            for step in 0..updates {
+                if step % 97 == 0 {
+                    let mut cum = 0u64;
+                    for s in 0..alphabet {
+                        let (lo, hi, total) = model.range(s);
+                        assert_eq!(lo, cum, "k={alphabet} s={s}: lo");
+                        assert!(hi > lo, "k={alphabet} s={s}: empty range");
+                        assert_eq!(total, model.total(), "k={alphabet}: total");
+                        for t in [lo, hi - 1] {
+                            assert_eq!(
+                                model.find(t),
+                                (s, lo, hi),
+                                "k={alphabet} s={s} t={t}: find != range^-1"
+                            );
+                        }
+                        cum = hi;
+                    }
+                    assert_eq!(cum, model.total(), "k={alphabet}: ranges must tile");
+                }
+                model.update(rng.next_below(alphabet as u32) as usize);
+            }
+        }
     }
 
     #[test]

@@ -52,10 +52,19 @@ impl Histogram {
     }
 }
 
-/// Entropy in bits/symbol of a signed index stream in [-m, m].
+/// Entropy in bits/symbol of a signed index stream in [-m, m], computed
+/// by counting in place — no materialized symbol copy (this runs on the
+/// worker encode path for every message).
 pub fn signed_stream_entropy(q: &[i32], m: i32) -> f64 {
-    let sym: Vec<u32> = q.iter().map(|&x| (x + m) as u32).collect();
-    Histogram::from_symbols(&sym, (2 * m + 1) as usize).entropy_bits()
+    let mut counts = vec![0u64; (2 * m + 1) as usize];
+    for &x in q {
+        counts[(x + m) as usize] += 1;
+    }
+    Histogram {
+        counts,
+        total: q.len() as u64,
+    }
+    .entropy_bits()
 }
 
 #[cfg(test)]

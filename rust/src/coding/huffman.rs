@@ -85,8 +85,17 @@ pub fn canonical_codes(lens: &[u8]) -> Vec<(u32, u8)> {
 
 /// Encode: header (code lengths, 5 bits each) + codewords.
 pub fn encode(symbols: &[u32], alphabet: usize, w: &mut BitWriter) {
+    encode_iter(symbols.iter().copied(), alphabet, w);
+}
+
+/// Two-pass core over a re-iterable symbol stream — lets the signed entry
+/// point fuse the `+m` offset instead of materializing a symbol copy.
+fn encode_iter<I>(symbols: I, alphabet: usize, w: &mut BitWriter)
+where
+    I: Iterator<Item = u32> + Clone,
+{
     let mut freqs = vec![0u64; alphabet];
-    for &s in symbols {
+    for s in symbols.clone() {
         freqs[s as usize] += 1;
     }
     let lens = code_lengths(&freqs);
@@ -94,7 +103,7 @@ pub fn encode(symbols: &[u32], alphabet: usize, w: &mut BitWriter) {
     for &l in &lens {
         w.push_bits(l as u64, 5);
     }
-    for &s in symbols {
+    for s in symbols {
         let (code, len) = codes[s as usize];
         // emit MSB-first
         for i in (0..len).rev() {
@@ -103,45 +112,94 @@ pub fn encode(symbols: &[u32], alphabet: usize, w: &mut BitWriter) {
     }
 }
 
-/// Decode `n` symbols written by [`encode`].
-pub fn decode(r: &mut BitReader, alphabet: usize, n: usize) -> crate::Result<Vec<u32>> {
-    let mut lens = vec![0u8; alphabet];
-    for l in lens.iter_mut() {
-        *l = r.read_bits(5)? as u8;
-    }
-    let codes = canonical_codes(&lens);
-    // build (len, code) -> symbol lookup
-    let mut by_len: Vec<Vec<(u32, u32)>> = vec![Vec::new(); MAX_CODE_LEN + 1];
-    for (s, &(code, len)) in codes.iter().enumerate() {
-        if len > 0 {
-            by_len[len as usize].push((code, s as u32));
+/// Streaming decoder for a stream written by [`encode`]: reads the
+/// code-length header at construction, then yields one symbol per
+/// [`HuffmanSource::next_symbol`] by walking the canonical code — the
+/// wire-v3 decode path for `codec = huffman` frames. Holds O(alphabet)
+/// state (the transmitted code table), never O(n).
+pub struct HuffmanSource<'r, 'b> {
+    r: &'r mut BitReader<'b>,
+    /// (code, symbol) pairs per code length, sorted by code.
+    by_len: Vec<Vec<(u32, u32)>>,
+    remaining: usize,
+}
+
+impl<'r, 'b> HuffmanSource<'r, 'b> {
+    /// Read the `alphabet * 5`-bit code-length header from `r` and build
+    /// the decode table. The transmitted lengths are validated against
+    /// [`MAX_CODE_LEN`] *before* canonical code assignment runs, so a
+    /// hostile header cannot drive the code constructor out of range.
+    pub fn new(r: &'r mut BitReader<'b>, alphabet: usize, n: usize) -> crate::Result<Self> {
+        let mut lens = vec![0u8; alphabet];
+        for l in lens.iter_mut() {
+            *l = r.read_bits(5)? as u8;
+            anyhow::ensure!(
+                (*l as usize) <= MAX_CODE_LEN,
+                "huffman: header claims a {l}-bit code (corrupt stream)"
+            );
         }
+        let codes = canonical_codes(&lens);
+        let mut by_len: Vec<Vec<(u32, u32)>> = vec![Vec::new(); MAX_CODE_LEN + 1];
+        for (s, &(code, len)) in codes.iter().enumerate() {
+            if len > 0 {
+                by_len[len as usize].push((code, s as u32));
+            }
+        }
+        for v in &mut by_len {
+            v.sort();
+        }
+        Ok(Self {
+            r,
+            by_len,
+            remaining: n,
+        })
     }
-    for v in &mut by_len {
-        v.sort();
+
+    /// Symbols left to yield.
+    pub fn remaining(&self) -> usize {
+        self.remaining
     }
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
+
+    /// Next symbol; errors on underflow, codes absent from the table, or
+    /// when all `n` symbols have been consumed.
+    #[inline]
+    pub fn next_symbol(&mut self) -> crate::Result<u32> {
+        anyhow::ensure!(self.remaining > 0, "symbol stream exhausted");
         let mut code = 0u32;
         let mut len = 0usize;
         loop {
-            code = (code << 1) | r.read_bit()? as u32;
+            code = (code << 1) | self.r.read_bit()? as u32;
             len += 1;
             anyhow::ensure!(len <= MAX_CODE_LEN, "huffman: code too long (corrupt stream)");
-            if let Ok(idx) = by_len[len].binary_search_by_key(&code, |&(c, _)| c) {
-                out.push(by_len[len][idx].1);
-                break;
+            if let Ok(idx) = self.by_len[len].binary_search_by_key(&code, |&(c, _)| c) {
+                self.remaining -= 1;
+                return Ok(self.by_len[len][idx].1);
             }
         }
+    }
+}
+
+/// Decode `n` symbols written by [`encode`].
+pub fn decode(r: &mut BitReader, alphabet: usize, n: usize) -> crate::Result<Vec<u32>> {
+    let mut src = HuffmanSource::new(r, alphabet, n)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(src.next_symbol()?);
     }
     Ok(out)
 }
 
+/// Encode a signed index stream in [-m, m] (fused offset into the packer
+/// alphabet [0, 2m], no intermediate symbol vector) — the wire-v3
+/// `codec = huffman` index lane.
+pub fn encode_signed(q: &[i32], m: i32, w: &mut BitWriter) {
+    encode_iter(q.iter().map(move |&x| (x + m) as u32), (2 * m + 1) as usize, w);
+}
+
 /// Encoded size in bits for a signed index stream in [-m, m].
 pub fn encoded_bits_signed(q: &[i32], m: i32) -> usize {
-    let sym: Vec<u32> = q.iter().map(|&x| (x + m) as u32).collect();
     let mut w = BitWriter::new();
-    encode(&sym, (2 * m + 1) as usize, &mut w);
+    encode_signed(q, m, &mut w);
     w.len_bits()
 }
 

@@ -13,7 +13,14 @@
 //!   paper), the "compressed bits" encoder. Decoder included; round-trip
 //!   tested.
 //! * [`elias`]   — Elias-gamma codes for headers/lengths.
-//! * [`crc`]     — CRC-32 (zlib-compatible), the wire-v2 frame checksum.
+//! * [`crc`]     — CRC-32 (zlib-compatible), the wire frame checksum.
+//!
+//! Since wire v3 the entropy coders are not just accounting devices: a
+//! message's index lanes can actually ship Huffman- or AAC-coded (the
+//! [`PayloadCodec`] byte in the message header says which), and the decode
+//! hot path streams coded symbols through a [`SymbolSource`] — one
+//! abstraction over base-k unpacking, canonical-Huffman tree walks, and
+//! adaptive arithmetic decoding.
 
 pub mod arithmetic;
 pub mod bitio;
@@ -24,3 +31,238 @@ pub mod huffman;
 pub mod pack;
 
 pub use bitio::{BitReader, BitWriter};
+
+/// How a message's index lanes are encoded on the wire (the codec byte of
+/// the wire-v3 message header). Scale factors and the sign/f32 lanes of
+/// schemes without an index alphabet (one-bit, baseline) are always raw —
+/// only the base-(2m+1) symbol streams are entropy-coded.
+///
+/// All three codecs are lossless over the same index stream, so a receiver
+/// decodes any of them to bit-identical gradients; the codec byte changes
+/// *transmitted size only*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum PayloadCodec {
+    /// Fixed-rate base-k packing (Table 1's "raw bits").
+    #[default]
+    Raw = 0,
+    /// Two-pass canonical Huffman: per-frame code-length header + codewords.
+    Huffman = 1,
+    /// Order-0 adaptive arithmetic coding (the paper's ACC, Table 2).
+    Aac = 2,
+}
+
+impl PayloadCodec {
+    /// Parse a wire discriminant; unknown bytes are a protocol error.
+    pub fn from_u8(v: u8) -> crate::Result<PayloadCodec> {
+        Ok(match v {
+            0 => PayloadCodec::Raw,
+            1 => PayloadCodec::Huffman,
+            2 => PayloadCodec::Aac,
+            _ => anyhow::bail!("unknown payload codec {v} on the wire"),
+        })
+    }
+
+    /// Parse CLI/config syntax: `raw` | `huffman` | `aac`.
+    pub fn parse(s: &str) -> crate::Result<PayloadCodec> {
+        Ok(match s {
+            "raw" => PayloadCodec::Raw,
+            "huffman" => PayloadCodec::Huffman,
+            "aac" => PayloadCodec::Aac,
+            _ => anyhow::bail!("unknown codec `{s}` (raw|huffman|aac)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PayloadCodec::Raw => "raw",
+            PayloadCodec::Huffman => "huffman",
+            PayloadCodec::Aac => "aac",
+        }
+    }
+
+    /// Whether this codec can carry a `(2m + 1)`-symbol index alphabet:
+    /// `aac` is bounded by the adaptive model's precision invariant
+    /// ([`arithmetic::MAX_ALPHABET`]); raw and huffman have no practical
+    /// limit at this crate's alphabets. Checked at codec negotiation so an
+    /// unsupported scheme/codec pair is a setup error, not a panic mid-run.
+    pub fn supports_alphabet(&self, alphabet: usize) -> bool {
+        match self {
+            PayloadCodec::Aac => alphabet <= arithmetic::MAX_ALPHABET,
+            PayloadCodec::Raw | PayloadCodec::Huffman => true,
+        }
+    }
+}
+
+/// Write a signed index lane in [-m, m] with the given codec. The inverse
+/// of [`SymbolSource`]; both ends must agree on `(codec, m, n)`.
+///
+/// `aac` requires `2m + 1 <= `[`arithmetic::MAX_ALPHABET`] — codec
+/// negotiation ([`PayloadCodec::supports_alphabet`]) rejects wider schemes
+/// before any encoder runs.
+pub fn write_indices_coded(
+    w: &mut BitWriter,
+    codec: PayloadCodec,
+    q: &[i32],
+    m: i32,
+) {
+    let k = (2 * m + 1) as u32;
+    match codec {
+        PayloadCodec::Raw => pack::pack_base_k_signed(q, m, k, w),
+        PayloadCodec::Huffman => huffman::encode_signed(q, m, w),
+        PayloadCodec::Aac => arithmetic::encode_signed(q, m, w),
+    }
+}
+
+/// Streaming symbol decoder over any [`PayloadCodec`]: yields the `n`
+/// alphabet-`k` symbols of one frame's index lane, one at a time, without
+/// materializing the stream — the allocation-free `decode_frame_into` hot
+/// path pulls from this while writing reconstructions straight into the
+/// caller's output slice.
+///
+/// Per-frame decoder state is O(alphabet), never O(n): the base-k unpacker
+/// buffers one u64 group, the Huffman source holds the transmitted code
+/// table, and the AAC source holds the adaptive frequency model.
+pub enum SymbolSource<'r, 'b> {
+    Raw(pack::SymbolUnpacker<'r, 'b>),
+    Huffman(huffman::HuffmanSource<'r, 'b>),
+    Aac(arithmetic::AacSource<'r, 'b>),
+}
+
+impl<'r, 'b> SymbolSource<'r, 'b> {
+    /// Position `r` at the head of the index lane (right after the raw
+    /// scale block). Huffman reads its code-length header here; AAC primes
+    /// its code register.
+    pub fn new(
+        r: &'r mut BitReader<'b>,
+        codec: PayloadCodec,
+        k: u32,
+        n: usize,
+    ) -> crate::Result<SymbolSource<'r, 'b>> {
+        Ok(match codec {
+            PayloadCodec::Raw => SymbolSource::Raw(pack::SymbolUnpacker::new(r, k, n)),
+            PayloadCodec::Huffman => {
+                SymbolSource::Huffman(huffman::HuffmanSource::new(r, k as usize, n)?)
+            }
+            PayloadCodec::Aac => {
+                // typed error, not the model's internal assert: the frame
+                // header (CRC-valid but attacker-forgeable) controls k here
+                anyhow::ensure!(
+                    (k as usize) <= arithmetic::MAX_ALPHABET,
+                    "aac index lane with a {k}-symbol alphabet exceeds the \
+                     adaptive model's {} limit",
+                    arithmetic::MAX_ALPHABET
+                );
+                SymbolSource::Aac(arithmetic::AacSource::new(r, k as usize, n))
+            }
+        })
+    }
+
+    /// Next symbol in [0, k); errors on bit-stream underflow, corrupt
+    /// codewords, or when all `n` symbols have been consumed.
+    #[inline]
+    pub fn next_symbol(&mut self) -> crate::Result<u32> {
+        match self {
+            SymbolSource::Raw(s) => s.next_symbol(),
+            SymbolSource::Huffman(s) => s.next_symbol(),
+            SymbolSource::Aac(s) => s.next_symbol(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256;
+
+    #[test]
+    fn codec_u8_and_cli_roundtrip() {
+        for c in [PayloadCodec::Raw, PayloadCodec::Huffman, PayloadCodec::Aac] {
+            assert_eq!(PayloadCodec::from_u8(c as u8).unwrap(), c);
+            assert_eq!(PayloadCodec::parse(c.label()).unwrap(), c);
+        }
+        assert!(PayloadCodec::from_u8(3).is_err());
+        assert!(PayloadCodec::from_u8(255).is_err());
+        assert!(PayloadCodec::parse("gzip").is_err());
+        assert_eq!(PayloadCodec::default(), PayloadCodec::Raw);
+    }
+
+    #[test]
+    fn symbol_source_roundtrips_every_codec() {
+        let mut rng = Xoshiro256::new(31);
+        for m in [1i32, 2, 4] {
+            let k = (2 * m + 1) as u32;
+            for n in [0usize, 1, 39, 40, 41, 3000] {
+                let q: Vec<i32> = (0..n)
+                    .map(|_| rng.next_below(k) as i32 - m)
+                    .collect();
+                for codec in [PayloadCodec::Raw, PayloadCodec::Huffman, PayloadCodec::Aac] {
+                    let mut w = BitWriter::new();
+                    write_indices_coded(&mut w, codec, &q, m);
+                    let bytes = w.into_bytes();
+                    let mut r = BitReader::new(&bytes);
+                    let mut src = SymbolSource::new(&mut r, codec, k, n).unwrap();
+                    for (i, &want) in q.iter().enumerate() {
+                        let got = pack::symbol_to_signed(src.next_symbol().unwrap(), m);
+                        assert_eq!(got, want, "{codec:?} m={m} n={n} at {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_streams_roundtrip_all_codecs() {
+        // all-zero indices, single live symbol, maximum skew, empty stream
+        let m = 2i32;
+        let k = (2 * m + 1) as u32;
+        let mut skew = vec![0i32; 5000];
+        for i in 0..5 {
+            skew[i * 997] = if i % 2 == 0 { m } else { -m };
+        }
+        let streams: Vec<Vec<i32>> = vec![
+            vec![0; 4096],
+            vec![-m; 1000],
+            skew,
+            Vec::new(),
+            vec![1],
+        ];
+        for q in &streams {
+            for codec in [PayloadCodec::Raw, PayloadCodec::Huffman, PayloadCodec::Aac] {
+                let mut w = BitWriter::new();
+                write_indices_coded(&mut w, codec, q, m);
+                let bytes = w.into_bytes();
+                let mut r = BitReader::new(&bytes);
+                let mut src = SymbolSource::new(&mut r, codec, k, q.len()).unwrap();
+                let got: Vec<i32> = (0..q.len())
+                    .map(|_| pack::symbol_to_signed(src.next_symbol().unwrap(), m))
+                    .collect();
+                assert_eq!(&got, q, "{codec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn entropy_codecs_beat_raw_on_skewed_streams() {
+        // the whole point of shipping coded payloads: an all-but-zero
+        // index stream transmits far below the fixed base-k rate
+        let mut q = vec![0i32; 50_000];
+        let mut rng = Xoshiro256::new(7);
+        for i in 0..1000 {
+            q[(rng.next_below(50_000)) as usize] = if i % 2 == 0 { 1 } else { -1 };
+        }
+        let size = |codec| {
+            let mut w = BitWriter::new();
+            write_indices_coded(&mut w, codec, &q, 1);
+            w.len_bits()
+        };
+        let raw = size(PayloadCodec::Raw);
+        let huff = size(PayloadCodec::Huffman);
+        let aac = size(PayloadCodec::Aac);
+        // huffman is floor-limited at 1 bit/symbol (vs the packer's 1.6)
+        assert!(huff < raw * 7 / 10, "huffman {huff} vs raw {raw}");
+        // aac has no such floor: far below both on a near-constant stream
+        assert!(aac < huff / 2, "aac {aac} should crush huffman {huff} on skew");
+        assert!(aac < raw / 4, "aac {aac} vs raw {raw}");
+    }
+}

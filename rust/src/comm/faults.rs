@@ -292,6 +292,12 @@ pub struct ChannelEvent {
     /// (straggle factors and seeded jitter included) — what the `Deadline`
     /// round policy compares against.
     pub arrival_s: f64,
+    /// Encode-time bit accounting for the message these bytes came from —
+    /// part of the sender's envelope, captured before the link touched the
+    /// bytes, so the receiver's ledger never re-decodes a payload (a
+    /// corrupted delivery keeps the original message's metrics; rejected
+    /// messages are billed by framed size, not by these).
+    pub metrics: crate::quant::BitMetrics,
     pub payload: Delivery,
 }
 
@@ -346,6 +352,7 @@ impl FaultChannel {
     /// receiver sees *now* (0, 1 or 2 — delay parks the message instead).
     pub fn feed(&mut self, msg: WorkerMsg) -> Vec<ChannelEvent> {
         let (worker, round, loss) = (msg.worker, msg.round, msg.loss);
+        let metrics = msg.metrics;
         let bits = msg.wire.framed_bits() as u64;
         let arrival_s = self.arrival(worker, round, bits);
         match self.plan.fault_for(self.seed, worker, round) {
@@ -359,6 +366,7 @@ impl FaultChannel {
                         round,
                         loss,
                         arrival_s,
+                        metrics,
                         payload: Delivery::Lost { bits, fault: Fault::Disconnect },
                     }]
                 } else {
@@ -370,6 +378,7 @@ impl FaultChannel {
                 round,
                 loss,
                 arrival_s,
+                metrics,
                 payload: Delivery::Lost { bits, fault: Fault::Drop },
             }],
             Some(Fault::Delay { rounds }) => {
@@ -391,6 +400,7 @@ impl FaultChannel {
                     loss,
                     // the copy trails the original on the link
                     arrival_s: arrival_s * 1.5,
+                    metrics,
                     payload: Delivery::Bytes(bytes.clone()),
                 };
                 vec![
@@ -399,6 +409,7 @@ impl FaultChannel {
                         round,
                         loss,
                         arrival_s,
+                        metrics,
                         payload: Delivery::Bytes(bytes),
                     },
                     dup,
@@ -424,6 +435,7 @@ impl FaultChannel {
                 round,
                 loss,
                 arrival_s,
+                metrics,
                 payload: Delivery::Bytes(msg.wire.into_bytes()),
             }],
         }
@@ -445,6 +457,7 @@ impl FaultChannel {
                     round: msg.round,
                     loss: msg.loss,
                     arrival_s: self.arrival(msg.worker, msg.round, bits),
+                    metrics: msg.metrics,
                     payload: Delivery::Bytes(msg.wire.into_bytes()),
                 });
             } else {
@@ -467,12 +480,7 @@ mod tests {
         let mut q = Scheme::Dithered { delta: 1.0 }.build();
         let stream = DitherStream::new(3, worker as u32);
         let g: Vec<f32> = (0..64).map(|i| (i as f32 * 0.1).sin()).collect();
-        WorkerMsg {
-            worker,
-            round,
-            loss: 0.5,
-            wire: q.encode(&g, &mut stream.round(round)),
-        }
+        WorkerMsg::new(worker, round, 0.5, q.encode(&g, &mut stream.round(round)))
     }
 
     #[test]

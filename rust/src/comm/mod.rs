@@ -45,12 +45,14 @@ pub use self::session::{
 };
 pub use self::stats::CommStats;
 
-use crate::quant::WireMsg;
+use crate::quant::{BitMetrics, WireMsg};
 
 /// A worker's per-round result message — exactly what crosses the
 /// "network": the framed wire bytes plus the routing envelope (worker id +
-/// round counter, which key the shared-seed dither stream) and the scalar
-/// training loss piggybacked for reporting.
+/// round counter, which key the shared-seed dither stream), the scalar
+/// training loss piggybacked for reporting, and the [`BitMetrics`] the
+/// encoder captured while it still held the index stream (what the ledger
+/// records — the receiver never re-decodes a payload to account it).
 #[derive(Debug, Clone)]
 pub struct WorkerMsg {
     pub worker: usize,
@@ -58,5 +60,24 @@ pub struct WorkerMsg {
     /// counter the *encoder* keyed its dither stream with.
     pub round: u64,
     pub loss: f32,
+    /// Encode-time bit accounting for `wire`.
+    pub metrics: BitMetrics,
     pub wire: WireMsg,
+}
+
+impl WorkerMsg {
+    /// Wrap a wire message in its routing envelope, carrying the metrics
+    /// the encoder attached — or, for a message re-parsed from raw bytes
+    /// (which cannot carry any), conservative header-derived metrics with
+    /// the affected frames flagged as fallbacks.
+    pub fn new(worker: usize, round: u64, loss: f32, wire: WireMsg) -> WorkerMsg {
+        let metrics = BitMetrics::for_wire(&wire);
+        WorkerMsg {
+            worker,
+            round,
+            loss,
+            metrics,
+            wire,
+        }
+    }
 }

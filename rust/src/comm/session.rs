@@ -129,11 +129,19 @@ impl std::error::Error for ExchangeError {}
 ///
 /// `schemes[p]` is the scheme worker `p` negotiated at setup; P1 = workers
 /// whose scheme does not need side info, P2 = workers whose scheme does
-/// (NDQSG). Wire-v2 negotiation: one codec config per wire scheme id for
+/// (NDQSG). Wire negotiation: one quantizer config per wire scheme id for
 /// the whole run — two workers using the same scheme with *different*
 /// parameters is rejected at construction (the registry could not tell
 /// their frames apart from the header alone); use distinct schemes per
 /// group, as Alg. 2 does.
+///
+/// The *payload codec* (raw / huffman / aac index lanes, wire v3) needs no
+/// per-worker table: each message's header byte says how its lanes are
+/// coded, every codec is lossless over the same index stream, and the
+/// per-frame decoders dispatch on it — so a round may legally mix codecs
+/// across workers and still fold to the bit-identical aggregate (pinned by
+/// the cross-codec equivalence tests). The ledger's `transmitted` lane is
+/// the only thing a codec changes.
 pub struct Session {
     registry: SchemeRegistry,
     /// The scheme id worker p negotiated; messages must match.
@@ -216,7 +224,7 @@ impl Session {
             in_p1,
             streams,
             n_params,
-            stats: CommStats::new(false),
+            stats: CommStats::new(),
             dead: vec![false; workers],
             avg: vec![0f32; n_params],
             count: 0,
@@ -280,11 +288,6 @@ impl Session {
     /// Record one server -> workers broadcast (bits).
     pub fn record_broadcast(&mut self, bits: f64) {
         self.stats.record_broadcast(bits);
-    }
-
-    /// Turn the per-message AAC measurement on/off (Table-2 runs).
-    pub fn set_measure_aac(&mut self, on: bool) {
-        self.stats.measure_aac = on;
     }
 
     /// Hand a retired average buffer back for reuse (optional — the next
@@ -376,7 +379,8 @@ impl Session {
              decode cannot supply — use a synchronous round",
             wire.scheme
         );
-        self.stats.record_upload(wire);
+        let metrics = crate::quant::BitMetrics::for_wire(wire);
+        self.stats.record_upload(wire.framed_bits(), &metrics);
         let mut gen = self.streams[worker].round(round);
         self.registry
             .decode_into(wire, &mut gen, None, &mut self.decode_buf)?;
@@ -446,7 +450,8 @@ impl Session {
         );
         self.seen[msg.worker] = true;
         self.msgs_seen += 1;
-        self.stats.record_upload(&msg.wire);
+        self.stats
+            .record_upload(msg.wire.framed_bits(), &msg.metrics);
 
         if self.in_p1[msg.worker] {
             // P1: decode now (order-free), fold as soon as canonical
@@ -689,10 +694,14 @@ impl Exchange<'_> {
                     return;
                 }
                 self.accepted_from[w] = true;
+                // ledger metrics travel on the event envelope (captured at
+                // encode time, before the link touched the bytes) — the
+                // re-parsed message itself cannot carry them
                 self.accepted.push(WorkerMsg {
                     worker: w,
                     round: ev.round,
                     loss: ev.loss,
+                    metrics: ev.metrics,
                     wire,
                 });
                 self.resolve(w);
@@ -810,12 +819,7 @@ mod tests {
                 let mut q = schemes[p].build();
                 let stream = DitherStream::new(run_seed, p as u32);
                 let wire = q.encode(g, &mut stream.round(round));
-                WorkerMsg {
-                    worker: p,
-                    round,
-                    loss: 0.0,
-                    wire,
-                }
+                WorkerMsg::new(p, round, 0.0, wire)
             })
             .collect()
     }
@@ -931,12 +935,7 @@ mod tests {
         let wire = evil.encode(&gs[0], &mut DitherStream::new(4, 0).round(0));
         let mut agg = session.begin_round();
         let err = agg
-            .push(WorkerMsg {
-                worker: 0,
-                round: 0,
-                loss: 0.0,
-                wire,
-            })
+            .push(WorkerMsg::new(0, 0, 0.0, wire))
             .unwrap_err()
             .to_string();
         assert!(err.contains("negotiated"), "{err}");
@@ -946,12 +945,7 @@ mod tests {
         let wire = q.encode(&[1.0f32; 32], &mut DitherStream::new(4, 0).round(0));
         let mut agg = session.begin_round();
         let err = agg
-            .push(WorkerMsg {
-                worker: 0,
-                round: 0,
-                loss: 0.0,
-                wire,
-            })
+            .push(WorkerMsg::new(0, 0, 0.0, wire))
             .unwrap_err()
             .to_string();
         assert!(err.contains("expected 64"), "{err}");
@@ -999,12 +993,7 @@ mod tests {
         let global_id = 37u32;
         let wire = q.encode(&g, &mut DitherStream::new(8, global_id).round(0));
         let mut keyed = Session::with_stream_keys(&scheme, 8, 400, &[global_id]).unwrap();
-        let msg = WorkerMsg {
-            worker: 0,
-            round: 0,
-            loss: 0.0,
-            wire,
-        };
+        let msg = WorkerMsg::new(0, 0, 0.0, wire);
         let good = keyed.decode_round(&[msg.clone()]).unwrap();
         let kappa = crate::tensor::linf_norm(&g);
         for (a, b) in g.iter().zip(&good) {

@@ -1,16 +1,24 @@
 //! Communication accounting: the paper's core metric.
 //!
-//! Every [`crate::quant::WireMsg`] that crosses the worker->server channel
-//! is tallied here: raw bits (Table 1), order-0 entropy of the index stream
-//! (Table 2's limit), the full framed wire size (v2 headers + checksum
-//! included), and — when `measure_aac` is on — the *actual* adaptive
-//! arithmetic coder output (Table 2's achieved number, "within 5%").
+//! Every message that crosses the worker->server channel is tallied here
+//! from the [`BitMetrics`] its *encoder* captured: transmitted payload
+//! bits (the on-wire truth under the negotiated codec), the base-k raw
+//! equivalent (Table 1), the order-0 entropy limit (Table 2's limit), the
+//! actual AAC size when measured (exact whenever the codec is `aac`), and
+//! the full framed wire size (v3 headers + checksum included).
+//!
+//! [`CommStats::record_upload`] does **no payload work** — it adds five
+//! numbers. The previous implementation re-parsed and re-allocated every
+//! frame's entire index stream (twice: entropy + AAC) for every worker
+//! message of every round, and silently booked frames whose re-decode
+//! failed at their raw size; metric derivation failures now surface in the
+//! typed [`CommStats::metric_fallback_frames`] counter instead.
 //!
 //! Uplink recording is owned by [`super::Session`]: every message accepted
 //! by `push`/`decode_message` is tallied there, so the three aggregation
 //! paths cannot drift apart in what they count.
 
-use crate::quant::WireMsg;
+use crate::quant::BitMetrics;
 use crate::stats::Running;
 
 #[derive(Debug, Default, Clone)]
@@ -19,19 +27,27 @@ pub struct CommStats {
     pub raw: Running,
     pub entropy: Running,
     pub aac: Running,
+    /// Payload bits actually shipped under the negotiated codec.
+    pub transmitted: Running,
     /// Full framed message size (headers + payload + checksum), in bits.
     pub framed: Running,
     /// Total uplink bits across all workers and rounds.
     pub total_raw_bits: f64,
     pub total_entropy_bits: f64,
     pub total_aac_bits: f64,
+    pub total_transmitted_bits: f64,
     pub total_framed_bits: f64,
     /// Broadcast (server -> workers) bits per round.
     pub bcast: Running,
     pub total_bcast_bits: f64,
     pub messages: u64,
-    /// Whether to run the (more expensive) AAC on every message.
-    pub measure_aac: bool,
+    /// Frames whose ledger entry fell back to payload-size accounting
+    /// because per-lane metrics were not derivable (malformed index lane,
+    /// or a message that reached the ledger without its encode-time
+    /// envelope). Nonzero values mean the entropy/raw lanes above are
+    /// partly conservative estimates — previously this condition was
+    /// silently swallowed into the raw number.
+    pub metric_fallback_frames: u64,
 
     // ---- fault ledger -------------------------------------------------
     // Messages that crossed (or tried to cross) the link but never folded
@@ -56,33 +72,38 @@ pub struct CommStats {
 }
 
 impl CommStats {
-    pub fn new(measure_aac: bool) -> Self {
+    pub fn new() -> Self {
         Self {
             raw: Running::new(),
             entropy: Running::new(),
             aac: Running::new(),
+            transmitted: Running::new(),
             framed: Running::new(),
             bcast: Running::new(),
-            measure_aac,
             ..Default::default()
         }
     }
 
-    pub fn record_upload(&mut self, msg: &WireMsg) {
-        let raw = msg.raw_bits() as f64;
+    /// Tally one accepted uplink message from its encode-time metrics and
+    /// framed size. Pure arithmetic: the payload is never touched.
+    pub fn record_upload(&mut self, framed_bits: usize, m: &BitMetrics) {
+        let raw = m.raw_bits as f64;
         self.raw.push(raw);
         self.total_raw_bits += raw;
-        let framed = msg.framed_bits() as f64;
+        let tx = m.transmitted_bits as f64;
+        self.transmitted.push(tx);
+        self.total_transmitted_bits += tx;
+        let framed = framed_bits as f64;
         self.framed.push(framed);
         self.total_framed_bits += framed;
-        let ent = msg.entropy_bits();
-        self.entropy.push(ent);
-        self.total_entropy_bits += ent;
-        if self.measure_aac {
-            let a = msg.aac_bits() as f64;
+        self.entropy.push(m.entropy_bits);
+        self.total_entropy_bits += m.entropy_bits;
+        if let Some(a) = m.aac_bits {
+            let a = a as f64;
             self.aac.push(a);
             self.total_aac_bits += a;
         }
+        self.metric_fallback_frames += m.fallback_frames as u64;
         self.messages += 1;
     }
 
@@ -135,7 +156,12 @@ impl CommStats {
         self.aac.mean() / 1000.0
     }
 
-    /// Mean full-frame Kbits per message (wire-v2 headers included).
+    /// Mean Kbits per message actually shipped under the negotiated codec.
+    pub fn kbits_per_msg_transmitted(&self) -> f64 {
+        self.transmitted.mean() / 1000.0
+    }
+
+    /// Mean full-frame Kbits per message (wire headers included).
     pub fn kbits_per_msg_framed(&self) -> f64 {
         self.framed.mean() / 1000.0
     }
@@ -149,7 +175,8 @@ mod tests {
 
     #[test]
     fn accounting_matches_messages() {
-        let mut stats = CommStats::new(true);
+        use crate::quant::PayloadCodec;
+        let mut stats = CommStats::new();
         let mut q = Scheme::Dithered { delta: 1.0 }.build();
         // gradient-like stream large enough for the adaptive model's ramp-up
         // to amortize (Table-2-sized messages are >= 266k coordinates)
@@ -157,19 +184,26 @@ mod tests {
         let g: Vec<f32> = (0..50_000).map(|_| rng.next_normal() * 0.1).collect();
         let stream = DitherStream::new(0, 0);
         for round in 0..5 {
-            let msg = q.encode(&g, &mut stream.round(round));
-            stats.record_upload(&msg);
+            let msg = q.encode_coded(&g, &mut stream.round(round), PayloadCodec::Aac);
+            let metrics = *msg.carried_metrics().expect("encode attaches metrics");
+            stats.record_upload(msg.framed_bits(), &metrics);
         }
         assert_eq!(stats.messages, 5);
+        assert_eq!(stats.metric_fallback_frames, 0);
         assert!(stats.total_raw_bits > 0.0);
-        // framed > raw (headers + checksum), but only by a fixed overhead
-        assert!(stats.total_framed_bits > stats.total_raw_bits);
+        // framed > transmitted (headers + checksum), but only by a fixed
+        // per-message overhead (plus <8 bits byte-alignment slack)
+        assert!(stats.total_framed_bits > stats.total_transmitted_bits);
         let per_msg_overhead =
-            (stats.total_framed_bits - stats.total_raw_bits) / stats.messages as f64;
+            (stats.total_framed_bits - stats.total_transmitted_bits) / stats.messages as f64;
         assert!(per_msg_overhead <= 8.0 * 64.0, "overhead {per_msg_overhead} bits");
         // raw >= entropy for a compressible stream; AAC close to entropy
         assert!(stats.total_raw_bits >= stats.total_entropy_bits * 0.99);
         let ratio = stats.total_aac_bits / stats.total_entropy_bits;
         assert!(ratio < 1.05, "aac/entropy = {ratio}");
+        // codec = aac: the aac ledger IS the transmitted ledger
+        assert_eq!(stats.total_aac_bits, stats.total_transmitted_bits);
+        // and the coded wire genuinely shipped fewer bits than base-k
+        assert!(stats.total_transmitted_bits < stats.total_raw_bits);
     }
 }

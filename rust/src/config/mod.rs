@@ -3,7 +3,7 @@
 //! describes (models, workers, optimizer, batch split, quantizer per group).
 
 use crate::comm::{FaultPlan, RoundPolicy};
-use crate::quant::Scheme;
+use crate::quant::{PayloadCodec, Scheme};
 use crate::sim::LinkModel;
 use std::collections::BTreeMap;
 
@@ -67,6 +67,9 @@ pub struct TrainConfig {
     /// classic single-blob layout; >1 splits the flat gradient into that
     /// many framed tensors, each with its own scale).
     pub tensor_frames: usize,
+    /// Wire-v3 index-lane codec for every uplink message (`raw` ships
+    /// base-k packed lanes; `huffman`/`aac` ship entropy-coded lanes).
+    pub codec: PayloadCodec,
     /// Deterministic fault schedule applied between workers and server
     /// (`None` = perfect network, the historical behaviour).
     pub fault_plan: Option<FaultPlan>,
@@ -95,6 +98,7 @@ impl Default for TrainConfig {
             eval_examples: 1024,
             quantize_broadcast: false,
             tensor_frames: 1,
+            codec: PayloadCodec::Raw,
             fault_plan: None,
             round_policy: RoundPolicy::WaitAll,
             link: LinkModel::default(),
@@ -162,6 +166,7 @@ impl TrainConfig {
                     self.tensor_frames = v.parse()?;
                     anyhow::ensure!(self.tensor_frames >= 1, "tensor_frames must be >= 1");
                 }
+                "codec" => self.codec = PayloadCodec::parse(v)?,
                 "fault_plan" => {
                     self.fault_plan = if v == "none" {
                         None
@@ -221,6 +226,21 @@ mod tests {
         c.apply_kv(&kv).unwrap();
         assert_eq!(c.tensor_frames, 4);
         kv.insert("tensor_frames".to_string(), "0".to_string());
+        assert!(c.apply_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn codec_key() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.codec, PayloadCodec::Raw);
+        let mut kv = BTreeMap::new();
+        kv.insert("codec".to_string(), "aac".to_string());
+        c.apply_kv(&kv).unwrap();
+        assert_eq!(c.codec, PayloadCodec::Aac);
+        kv.insert("codec".to_string(), "huffman".to_string());
+        c.apply_kv(&kv).unwrap();
+        assert_eq!(c.codec, PayloadCodec::Huffman);
+        kv.insert("codec".to_string(), "gzip".to_string());
         assert!(c.apply_kv(&kv).is_err());
     }
 

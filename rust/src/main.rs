@@ -23,7 +23,7 @@ use ndq::cli::Args;
 use ndq::comm::{FaultPlan, RoundPolicy};
 use ndq::config::{OptKind, TrainConfig};
 use ndq::prng::DitherStream;
-use ndq::quant::{frame_slices, GradQuantizer, Scheme};
+use ndq::quant::{frame_slices, GradQuantizer, PayloadCodec, Scheme};
 use ndq::sim::LinkModel;
 use ndq::testing::cluster::{ClusterHarness, ClusterScenario};
 
@@ -70,6 +70,7 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
         .opt("seed", "42", "run seed (dither + data)")
         .opt("eval-every", "50", "evaluate every N rounds")
         .opt("tensor-frames", "1", "wire-v2 per-tensor frames per uplink message")
+        .opt("codec", "raw", "wire-v3 index-lane codec: raw|huffman|aac")
         .opt("fault-plan", "none", "fault spec, e.g. drop:0.1;straggle:w2x8 (none = perfect link)")
         .opt("round-policy", "waitall", "waitall|quorum:K|deadline:SECS")
         .opt("link", "gigabit", "simulated link: gigabit|10g|LAT_S:BW_BPS")
@@ -95,6 +96,7 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
     cfg.eval_every = args.get_usize("eval-every")?;
     cfg.tensor_frames = args.get_usize("tensor-frames")?;
     anyhow::ensure!(cfg.tensor_frames >= 1, "--tensor-frames must be >= 1");
+    cfg.codec = PayloadCodec::parse(&args.get("codec"))?;
     let plan = args.get("fault-plan");
     cfg.fault_plan = if plan == "none" {
         None
@@ -109,10 +111,11 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
     trainer.verbose = !args.get_flag("quiet");
     let report = trainer.run()?;
     println!(
-        "\n{}  final_acc={:.3}  eval_loss={:.4}\n  uplink: {:.1} Kbit/msg raw, {:.1} Kbit/msg entropy-limit\n  wall: {:.1}s",
+        "\n{}  final_acc={:.3}  eval_loss={:.4}\n  uplink: {:.1} Kbit/msg transmitted ({:.1} raw-equivalent, {:.1} entropy-limit)\n  wall: {:.1}s",
         report.config_label,
         report.final_accuracy,
         report.final_eval_loss,
+        report.comm.kbits_per_msg_transmitted(),
         report.comm.kbits_per_msg_raw(),
         report.comm.kbits_per_msg_entropy(),
         report.wall_secs
@@ -154,6 +157,7 @@ fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
     .opt("rounds", "30", "rounds to run")
     .opt("scheme", "dqsg:0.333333", "P1 scheme (see `ndq train --help`)")
     .opt("scheme-p2", "none", "scheme for the second worker half (NDQSG mixes)")
+    .opt("codec", "raw", "wire-v3 index-lane codec: raw|huffman|aac")
     .opt("seed", "42", "scenario seed (gradients + dither + fault decisions)")
     .opt("fault-plan", "none", "fault spec, e.g. drop:0.1;straggle:w2x8")
     .opt("round-policy", "waitall", "waitall|quorum:K|deadline:SECS")
@@ -178,17 +182,20 @@ fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
         },
         policy: RoundPolicy::parse(&args.get("round-policy"))?,
         link: LinkModel::parse(&args.get("link"))?,
+        codec: PayloadCodec::parse(&args.get("codec"))?,
         lr: args.get_f32("lr")?,
         ..ClusterScenario::default()
     };
     let report = ClusterHarness::new(sc)?.run()?;
     println!(
         "{}\n  rounds: {} run, {} failed\n  final synthetic loss: {:.6}\n  \
-         uplink: {:.1} Kbit/msg raw ({} messages folded)\n  fingerprint: {:016x}",
+         uplink: {:.1} Kbit/msg transmitted, {:.1} raw-equivalent ({} messages folded)\n  \
+         fingerprint: {:016x}",
         report.config_label,
         report.delivery.len(),
         report.rounds_failed,
         report.final_eval_loss,
+        report.comm.kbits_per_msg_transmitted(),
         report.comm.kbits_per_msg_raw(),
         report.comm.messages,
         report.fingerprint(),
@@ -231,15 +238,17 @@ fn cmd_quantize(argv: Vec<String>) -> ndq::Result<()> {
         .opt("n", "266610", "gradient length (default = FC-300-100)")
         .opt("seed", "0", "rng seed")
         .opt("frames", "1", "wire-v2 per-tensor frames per message")
+        .opt("codec", "raw", "wire-v3 index-lane codec: raw|huffman|aac")
         .parse_from(argv)?;
     let n = args.get_usize("n")?;
     let frames = args.get_usize("frames")?;
     anyhow::ensure!(frames >= 1, "--frames must be >= 1");
+    let codec = PayloadCodec::parse(&args.get("codec"))?;
     let mut rng = ndq::prng::Xoshiro256::new(args.get_u64("seed")?);
     let g: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.1).collect();
     println!(
-        "{:<22} {:>12} {:>12} {:>12} {:>12} {:>12}",
-        "scheme", "raw Kbit", "framed Kbit", "H Kbit", "AAC Kbit", "rmse"
+        "{:<22} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "scheme", "tx Kbit", "raw Kbit", "framed Kbit", "H Kbit", "AAC Kbit", "rmse"
     );
     for scheme in [
         Scheme::Baseline,
@@ -253,7 +262,7 @@ fn cmd_quantize(argv: Vec<String>) -> ndq::Result<()> {
         let mut q = scheme.build();
         let stream = DitherStream::new(1, 0);
         let slices = frame_slices(&g, frames);
-        let msg = q.encode_tensors(&slices, &mut stream.round(0));
+        let msg = q.encode_tensors_coded(&slices, &mut stream.round(0), codec);
         let recon = if q.needs_side_info() {
             // side info: the gradient plus small noise, as in Alg. 2
             let y: Vec<f32> = g.iter().map(|&x| x + 0.001 * rng.next_normal()).collect();
@@ -262,10 +271,12 @@ fn cmd_quantize(argv: Vec<String>) -> ndq::Result<()> {
             q.decode(&msg, &mut stream.round(0), None)?
         };
         let rmse = (ndq::tensor::sq_dist(&g, &recon) / n as f64).sqrt();
+        let metrics = msg.carried_metrics().copied().unwrap_or_default();
         println!(
-            "{:<22} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.6}",
+            "{:<22} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.6}",
             scheme.label(),
-            msg.raw_bits() as f64 / 1000.0,
+            metrics.transmitted_bits as f64 / 1000.0,
+            metrics.raw_bits as f64 / 1000.0,
             msg.framed_bits() as f64 / 1000.0,
             msg.entropy_bits() / 1000.0,
             msg.aac_bits() as f64 / 1000.0,

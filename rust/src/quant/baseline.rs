@@ -1,7 +1,7 @@
 //! Baseline: unquantized f32 gradients (32 bits/coordinate on the wire).
 
-use super::{Frame, GradQuantizer, SchemeId};
-use crate::coding::{BitReader, BitWriter};
+use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use crate::coding::BitReader;
 use crate::prng::DitherGen;
 
 #[derive(Debug, Clone, Default)]
@@ -20,10 +20,11 @@ impl GradQuantizer for BaselineQuantizer {
         &mut self,
         g: &[f32],
         _dither: &mut DitherGen,
-        w: &mut BitWriter,
+        sink: &mut FrameSink,
     ) -> (i32, usize) {
+        // full-precision coordinates are incompressible: always raw
         for &v in g {
-            w.push_f32(v);
+            sink.put_raw_f32(v);
         }
         (0, 0)
     }

@@ -12,8 +12,8 @@
 //! By Thm. 1 the error (g - g~)/kappa is U[-Delta/2, Delta/2], independent
 //! of g — the property the convergence analysis (Thm. 4/5) rests on.
 
-use super::{Frame, GradQuantizer, SchemeId};
-use crate::coding::{pack, BitReader, BitWriter};
+use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use crate::coding::{pack, BitReader, SymbolSource};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
 
@@ -93,13 +93,13 @@ impl GradQuantizer for DitheredQuantizer {
         &mut self,
         g: &[f32],
         dither: &mut DitherGen,
-        w: &mut BitWriter,
+        sink: &mut FrameSink,
     ) -> (i32, usize) {
         let mut u = Vec::new();
         let mut indices = Vec::with_capacity(g.len());
         let kappa = self.quantize_into(g, dither, &mut u, &mut indices);
-        super::write_scales(w, &[kappa]);
-        pack::pack_base_k_signed(&indices, self.m, self.alphabet(), w);
+        sink.put_scales(&[kappa]);
+        sink.put_indices(&indices, self.m);
         (self.m, 1)
     }
 
@@ -129,7 +129,7 @@ impl GradQuantizer for DitheredQuantizer {
         // regenerated dither lands in `out` first, then each element is
         // combined in place (u_i -> kappa * (Delta q_i - u_i)): no scratch
         dither.fill_dither(self.delta / 2.0, out);
-        let mut sy = pack::SymbolUnpacker::new(&mut r, self.alphabet(), frame.n);
+        let mut sy = SymbolSource::new(&mut r, frame.codec, self.alphabet(), frame.n)?;
         for v in out.iter_mut() {
             let q = pack::symbol_to_signed(sy.next_symbol()?, self.m);
             *v = kappa * (self.delta * q as f32 - *v);

@@ -12,7 +12,7 @@
 //! | TernGrad       | [`terngrad`] | [6] |
 //! | one-bit SGD    | [`onebit`]   | [1], with error feedback |
 //!
-//! # Wire format v2
+//! # Wire format v3
 //!
 //! A [`WireMsg`] is the exact byte sequence a network transport would
 //! carry. It is framed: one message holds one or more per-tensor frames so
@@ -21,17 +21,27 @@
 //! dither and, for NDQSG, the Alg.-2 side information) — decoded values are
 //! never smuggled next to the payload.
 //!
+//! New in v3: the message header carries a [`PayloadCodec`] byte and frame
+//! index lanes actually *ship entropy-coded* when the negotiated codec is
+//! `huffman` or `aac` — the Table-2 numbers are no longer a counterfactual,
+//! they are the transmitted payload. Scale factors and the lanes of
+//! schemes without an index alphabet (baseline f32s, one-bit signs — near
+//! incompressible, see the paper's Table 2) stay raw under every codec.
+//!
 //! Message layout (all multi-byte integers little-endian, byte-aligned):
 //!
 //! ```text
 //! offset  size  field
 //! ------  ----  -----------------------------------------------------------
 //!      0     2  magic  0x4E 0x51  ("NQ")
-//!      2     1  version (currently 2)
+//!      2     1  version (currently 3)
 //!      3     1  scheme id (see `SchemeId`; validated by the receiver)
-//!      4     4  frame count (u32)
-//!      8     …  frames, back to back (see below)
-//!   last     4  CRC-32 (IEEE/zlib) over every preceding byte
+//!      4     1  payload codec (see `PayloadCodec`; 0 raw, 1 huffman, 2 aac)
+//!      5     4  frame count (u32)
+//!      9     …  frames, back to back (see below)
+//!   last     4  CRC-32 (IEEE/zlib) over every preceding byte — the coded
+//!               payload is covered, so corruption of coded lanes is
+//!               rejected before any entropy decoder runs
 //! ```
 //!
 //! Each frame:
@@ -45,26 +55,43 @@
 //!     12     4  n_scales     (u32)  f32 scale factors at the payload head
 //!     16     8  payload_bits (u64)  meaningful bits in the payload
 //!     24     …  payload: ceil(payload_bits / 8) bytes —
-//!                 n_scales × 32-bit raw-f32 scales, then the index stream
-//!                 (base-(2m+1) packed for m ≥ 1; sign bits for one-bit;
-//!                 raw f32 coordinates for baseline), LSB-first bit order
+//!                 n_scales × 32-bit raw-f32 scales, then the index lane in
+//!                 the message codec (base-(2m+1) packed for `raw`;
+//!                 canonical-Huffman header+codewords for `huffman`; an
+//!                 adaptive-arithmetic code stream for `aac`) — or sign
+//!                 bits for one-bit / raw f32 coordinates for baseline,
+//!                 always raw. LSB-first bit order
 //! ```
 //!
 //! The receiver ([`WireMsg::parse`]) validates magic, version, scheme id,
-//! frame bounds and the trailing checksum before any codec runs; codecs
-//! additionally validate the frame header against their configuration, so a
-//! sender cannot steer the server onto a different decode path than the one
-//! negotiated (see [`SchemeRegistry`]).
+//! codec byte, frame bounds and the trailing checksum before any codec
+//! runs; codecs additionally validate the frame header against their
+//! configuration, so a sender cannot steer the server onto a different
+//! decode path than the one negotiated (see [`SchemeRegistry`]).
 //!
 //! ## Bit accounting
 //!
-//! * [`WireMsg::raw_bits`] — sum of frame `payload_bits`: scales + packed
-//!   indices, the Table-1 metric (framing headers excluded so the numbers
-//!   stay comparable with the paper's ideal-rate accounting).
-//! * [`WireMsg::framed_bits`] — total message size including headers and
-//!   checksum: what the socket would actually carry.
-//! * [`WireMsg::entropy_bits`] / [`WireMsg::aac_bits`] — Table-2 metrics,
-//!   re-derived from the payload on request (see `indices()` / `scales()`).
+//! Every metric is captured **once, at encode time** in a [`BitMetrics`]
+//! carried alongside the bytes (never serialized) — the ledger records
+//! what the encoder measured while it had the index stream in hand, and
+//! [`crate::comm::CommStats`] performs zero payload re-decodes:
+//!
+//! * `transmitted_bits` — sum of frame `payload_bits` as actually shipped
+//!   under the negotiated codec (framing headers excluded; the full socket
+//!   cost is [`WireMsg::framed_bits`]).
+//! * `raw_bits` — the fixed-rate base-k equivalent (Table 1), whatever
+//!   codec shipped; equals `transmitted_bits` when the codec is `raw`.
+//! * `entropy_bits` — order-0 entropy limit of the index stream plus raw
+//!   lane bits (Table 2's limit).
+//! * `aac_bits` — the actual adaptive-arithmetic size (Table 2's achieved
+//!   number); exact and equal to `transmitted_bits` when the codec is
+//!   `aac`.
+//!
+//! [`WireMsg::derive_metrics`] re-derives the same numbers from payload
+//! bytes alone (used by diagnostics and by the regression tests that pin
+//! encode-time metrics against the payload truth); frames whose lanes fail
+//! to decode are counted in `BitMetrics::fallback_frames` instead of being
+//! silently booked at their raw size.
 
 pub mod baseline;
 pub mod dithered;
@@ -76,15 +103,18 @@ pub mod terngrad;
 
 use std::collections::BTreeMap;
 
-use crate::coding::{arithmetic, crc, entropy, pack, BitReader, BitWriter};
+use crate::coding::{arithmetic, crc, entropy, pack, BitReader, BitWriter, SymbolSource};
 use crate::prng::DitherGen;
+
+pub use crate::coding::PayloadCodec;
 
 /// Wire magic: `"NQ"`.
 pub const WIRE_MAGIC: [u8; 2] = *b"NQ";
 /// Current wire protocol version.
-pub const WIRE_VERSION: u8 = 2;
-/// Message header size: magic(2) + version(1) + scheme(1) + frame count(4).
-pub const MSG_HEADER_BYTES: usize = 8;
+pub const WIRE_VERSION: u8 = 3;
+/// Message header size:
+/// magic(2) + version(1) + scheme(1) + codec(1) + frame count(4).
+pub const MSG_HEADER_BYTES: usize = 9;
 /// Frame header size: n(8) + m(4) + n_scales(4) + payload_bits(8).
 pub const FRAME_HEADER_BYTES: usize = 24;
 /// Trailing CRC-32 size.
@@ -94,6 +124,16 @@ pub const CHECKSUM_BYTES: usize = 4;
 /// bound keeps hostile headers from driving `2 * m + 1` arithmetic or
 /// alphabet-sized allocations anywhere near overflow.
 pub const MAX_FRAME_M: i32 = 1 << 20;
+/// Parse-time bound on how many symbols an `aac` index lane may claim per
+/// payload bit. Raw and Huffman lanes spend >= 1 bit per symbol, but the
+/// adaptive arithmetic coder compresses a degenerate stream below that —
+/// bounded by its probability clamp: the smallest wire alphabet is 3
+/// (2m + 1, m >= 1), whose max model probability `1 - 2/MAX_TOTAL` costs
+/// `-log2(1 - 2^-15) ~ 1/22713` bits per symbol. 2^15 sits above that
+/// ceiling (legitimate frames always pass) while keeping hostile
+/// `n` claims — and thus the payload-derived stats accessors' work —
+/// proportional to the actual message size.
+pub const MAX_AAC_SYMBOLS_PER_BIT: usize = 1 << 15;
 
 /// Scheme discriminants on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -135,6 +175,9 @@ pub struct Frame {
     pub n_scales: usize,
     /// Meaningful bits in the payload.
     pub payload_bits: usize,
+    /// Index-lane codec (copied from the message header so per-frame
+    /// decoders need no side channel back to the message).
+    pub codec: PayloadCodec,
     /// Byte offset of the payload within `WireMsg::bytes`.
     payload_off: usize,
 }
@@ -155,8 +198,14 @@ impl Frame {
 pub struct WireMsg {
     /// Scheme id from the message header.
     pub scheme: SchemeId,
+    /// Index-lane codec from the message header.
+    pub codec: PayloadCodec,
     bytes: Vec<u8>,
     frames: Vec<Frame>,
+    /// Encode-time bit accounting; `None` for messages re-parsed from raw
+    /// transport bytes (the metrics travel on [`crate::comm::WorkerMsg`] /
+    /// [`crate::comm::ChannelEvent`], never inside the bytes).
+    metrics: Option<BitMetrics>,
 }
 
 impl WireMsg {
@@ -179,6 +228,7 @@ impl WireMsg {
             bytes[2]
         );
         let scheme = SchemeId::from_u8(bytes[3])?;
+        let codec = PayloadCodec::from_u8(bytes[4])?;
         let body_len = bytes.len() - CHECKSUM_BYTES;
         let want = u32::from_le_bytes([
             bytes[body_len],
@@ -191,7 +241,7 @@ impl WireMsg {
             want == got,
             "checksum mismatch: trailer says {want:#010x}, bytes hash to {got:#010x}"
         );
-        let n_frames = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let n_frames = u32::from_le_bytes([bytes[5], bytes[6], bytes[7], bytes[8]]) as usize;
         let mut frames = Vec::with_capacity(n_frames.min(4096));
         let mut off = MSG_HEADER_BYTES;
         for f in 0..n_frames {
@@ -211,15 +261,26 @@ impl WireMsg {
                 payload_len <= body_len && payload_off <= body_len - payload_len,
                 "frame {f} payload truncated (want {payload_len} bytes)"
             );
-            // Structural sanity on attacker-controlled header fields: every
-            // scheme spends >= 1 payload bit per coordinate and 32 bits per
-            // scale, and m is bounded — so header-driven allocations in the
-            // codecs/stats accessors stay linear in the actual message size
-            // (and sum(n) over frames can never overflow a usize).
-            anyhow::ensure!(
-                n <= payload_bits,
-                "frame {f} claims {n} coordinates in {payload_bits} payload bits"
-            );
+            // Structural sanity on attacker-controlled header fields: raw
+            // lanes (m = 0), base-k packing, and Huffman codewords all
+            // spend >= 1 payload bit per coordinate; an `aac` lane can dip
+            // below 1 bit/symbol but never below the model's probability
+            // clamp (see MAX_AAC_SYMBOLS_PER_BIT). Scales cost 32 bits
+            // each and m is bounded — so header-driven allocations in the
+            // codecs/stats accessors stay proportional to the actual
+            // message size (and sum(n) over frames cannot overflow).
+            if codec == PayloadCodec::Aac && m >= 1 {
+                // multiplicative form: payload_bits = 0 admits only n = 0
+                anyhow::ensure!(
+                    n <= payload_bits.saturating_mul(MAX_AAC_SYMBOLS_PER_BIT),
+                    "frame {f} claims {n} coordinates in {payload_bits} aac payload bits"
+                );
+            } else {
+                anyhow::ensure!(
+                    n <= payload_bits,
+                    "frame {f} claims {n} coordinates in {payload_bits} payload bits"
+                );
+            }
             anyhow::ensure!(
                 n_scales.checked_mul(32).is_some_and(|b| b <= payload_bits),
                 "frame {f} claims {n_scales} scales in {payload_bits} payload bits"
@@ -233,6 +294,7 @@ impl WireMsg {
                 m,
                 n_scales,
                 payload_bits,
+                codec,
                 payload_off,
             });
             off = payload_off + payload_len;
@@ -244,8 +306,10 @@ impl WireMsg {
         );
         Ok(WireMsg {
             scheme,
+            codec,
             bytes,
             frames,
+            metrics: None,
         })
     }
 
@@ -275,10 +339,19 @@ impl WireMsg {
         self.frames.iter().map(|f| f.n).sum()
     }
 
-    /// Raw wire size in bits (Table 1 metric): scale + index payload bits,
-    /// framing excluded. See the module docs for the rationale.
-    pub fn raw_bits(&self) -> usize {
+    /// Transmitted payload size in bits: sum of frame `payload_bits` under
+    /// the message's codec, framing excluded. Equals the Table-1 raw
+    /// metric when `codec == Raw`; for coded messages this is the
+    /// entropy-coded wire truth the ledger records as `transmitted`.
+    pub fn transmitted_bits(&self) -> usize {
         self.frames.iter().map(|f| f.payload_bits).sum()
+    }
+
+    /// Historical alias for [`WireMsg::transmitted_bits`] (the two were the
+    /// same thing until wire v3 put entropy-coded lanes on the wire). The
+    /// codec-independent Table-1 raw metric lives in `BitMetrics::raw_bits`.
+    pub fn raw_bits(&self) -> usize {
+        self.transmitted_bits()
     }
 
     /// Full framed size in bits — what a socket would carry, including
@@ -287,11 +360,20 @@ impl WireMsg {
         self.bytes.len() * 8
     }
 
+    /// Encode-time bit accounting, present only on messages built by an
+    /// encoder in this process (a parsed message cannot carry any — see
+    /// [`WireMsg::derive_metrics`] / [`BitMetrics::from_frame_headers`]).
+    pub fn carried_metrics(&self) -> Option<&BitMetrics> {
+        self.metrics.as_ref()
+    }
+
     /// Debug/stats accessor: the signed index stream, re-derived from the
-    /// payload alone (never cached at encode time). One-bit frames yield
-    /// their sign bits as 0/1; baseline frames contribute nothing.
+    /// payload alone (never cached at encode time) through the same
+    /// codec-dispatched [`SymbolSource`] the decoders stream from. One-bit
+    /// frames yield their sign bits as 0/1; baseline frames contribute
+    /// nothing.
     pub fn indices(&self) -> crate::Result<Vec<i32>> {
-        let mut out = Vec::with_capacity(self.n());
+        let mut out = Vec::new();
         for i in 0..self.frames.len() {
             self.frame_indices(i, &mut out)?;
         }
@@ -306,8 +388,11 @@ impl WireMsg {
         }
         if f.m >= 1 {
             let k = (2 * f.m + 1) as u32;
-            let syms = pack::unpack_base_k(&mut r, k, f.n)?;
-            out.extend(syms.into_iter().map(|s| pack::symbol_to_signed(s, f.m)));
+            let mut src = SymbolSource::new(&mut r, f.codec, k, f.n)?;
+            out.reserve(f.n.min(f.payload_bits.saturating_add(1)));
+            for _ in 0..f.n {
+                out.push(pack::symbol_to_signed(src.next_symbol()?, f.m));
+            }
         } else if self.scheme == SchemeId::OneBit {
             for _ in 0..f.n {
                 out.push(r.read_bit()? as i32);
@@ -329,65 +414,171 @@ impl WireMsg {
         Ok(out)
     }
 
-    /// Order-0 entropy of the index stream plus incompressible scale bits
-    /// (Table 2's "resulting bit stream … after entropy coding" limit).
-    /// Frames with no index alphabet (baseline, one-bit) count at their raw
-    /// payload size, as in the paper's accounting.
-    pub fn entropy_bits(&self) -> f64 {
-        let mut total = 0f64;
+    /// Re-derive the full [`BitMetrics`] from payload bytes alone — the
+    /// counterfactual accounting path. `measure_aac` controls whether the
+    /// (expensive) arithmetic coder is actually run on non-`aac` messages
+    /// to fill `aac_bits`; on an `aac` message the lane is re-coded either
+    /// way so the derived number stays the payload truth.
+    ///
+    /// This is **not** on any per-round path: the ledger consumes the
+    /// encode-time metrics. It exists for offline diagnostics (`ndq
+    /// quantize`, the Table-2 benches) and for the regression tests pinning
+    /// `carried == derived`. A frame whose index lane fails to decode is
+    /// booked at its raw payload size *and counted* in `fallback_frames` —
+    /// the old accessors silently swallowed that decode error.
+    pub fn derive_metrics(&self, measure_aac: bool) -> BitMetrics {
+        let mut m = BitMetrics::default();
+        let mut entropy_raw_bits = 0u64;
+        let mut idx: Vec<i32> = Vec::new();
         for (i, f) in self.frames.iter().enumerate() {
+            m.transmitted_bits += f.payload_bits as u64;
             if f.m == 0 {
-                total += f.payload_bits as f64;
+                // raw lane (baseline f32s / one-bit signs): counted at
+                // payload size in every ledger lane, as the paper does
+                m.raw_bits += f.payload_bits as u64;
+                entropy_raw_bits += f.payload_bits as u64;
+                m.aac_bits = Some(m.aac_bits.unwrap_or(0) + f.payload_bits as u64);
                 continue;
             }
-            let mut idx = Vec::with_capacity(f.n);
+            idx.clear();
             match self.frame_indices(i, &mut idx) {
                 Ok(()) => {
-                    total += entropy::signed_stream_entropy(&idx, f.m) * idx.len() as f64
-                        + 32.0 * f.n_scales as f64;
+                    let k = (2 * f.m + 1) as u32;
+                    m.raw_bits +=
+                        (pack::packed_bits(f.n, k) + 32 * f.n_scales) as u64;
+                    entropy_raw_bits += 32 * f.n_scales as u64;
+                    m.entropy_bits +=
+                        entropy::signed_stream_entropy(&idx, f.m) * idx.len() as f64;
+                    if measure_aac || self.codec == PayloadCodec::Aac {
+                        m.aac_bits = Some(
+                            m.aac_bits.unwrap_or(0)
+                                + (arithmetic::encoded_bits_signed(&idx, f.m)
+                                    + 32 * f.n_scales) as u64,
+                        );
+                    }
                 }
-                Err(_) => total += f.payload_bits as f64,
+                Err(_) => {
+                    m.raw_bits += f.payload_bits as u64;
+                    entropy_raw_bits += f.payload_bits as u64;
+                    m.aac_bits = Some(m.aac_bits.unwrap_or(0) + f.payload_bits as u64);
+                    m.fallback_frames += 1;
+                }
             }
         }
-        total
+        m.entropy_bits += entropy_raw_bits as f64;
+        if !measure_aac && self.codec != PayloadCodec::Aac {
+            m.aac_bits = None;
+        }
+        m
     }
 
-    /// Actual adaptive-arithmetic-coded size in bits (what ACC achieves).
+    /// Order-0 entropy of the index stream plus incompressible scale bits
+    /// (Table 2's "resulting bit stream … after entropy coding" limit).
+    /// Served from the encode-time metrics when carried, re-derived from
+    /// the payload otherwise. Frames with no index alphabet (baseline,
+    /// one-bit) count at their raw payload size, as in the paper's
+    /// accounting.
+    pub fn entropy_bits(&self) -> f64 {
+        match &self.metrics {
+            Some(m) => m.entropy_bits,
+            None => self.derive_metrics(false).entropy_bits,
+        }
+    }
+
+    /// Actual adaptive-arithmetic-coded size in bits (what ACC achieves):
+    /// the transmitted size when `codec == Aac`, the measured
+    /// counterfactual otherwise.
     pub fn aac_bits(&self) -> usize {
-        let mut total = 0usize;
-        for (i, f) in self.frames.iter().enumerate() {
-            if f.m == 0 {
-                total += f.payload_bits;
-                continue;
-            }
-            let mut idx = Vec::with_capacity(f.n);
-            match self.frame_indices(i, &mut idx) {
-                Ok(()) => {
-                    total += arithmetic::encoded_bits_signed(&idx, f.m) + 32 * f.n_scales;
-                }
-                Err(_) => total += f.payload_bits,
+        match &self.metrics {
+            Some(BitMetrics { aac_bits: Some(a), .. }) => *a as usize,
+            // a zero-frame message derives no per-frame aac term: 0 bits
+            _ => self.derive_metrics(true).aac_bits.unwrap_or(0) as usize,
+        }
+    }
+}
+
+/// Per-message bit accounting, captured **once at encode time** while the
+/// encoder still holds the index stream — the fix for the per-round
+/// re-decode `CommStats` used to perform on every worker message. Carried
+/// next to the wire bytes on [`crate::comm::WorkerMsg`] and
+/// [`crate::comm::ChannelEvent`]; never serialized.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BitMetrics {
+    /// Actual payload bits shipped under the negotiated codec (scales +
+    /// index/sign/f32 lanes; framing excluded).
+    pub transmitted_bits: u64,
+    /// Fixed-rate base-k equivalent — the Table-1 metric, independent of
+    /// which codec shipped.
+    pub raw_bits: u64,
+    /// Order-0 entropy limit of the index stream + raw lane bits (Table
+    /// 2's limit).
+    pub entropy_bits: f64,
+    /// Actual adaptive-arithmetic size (Table 2's achieved number):
+    /// `Some` — and exactly `transmitted_bits` — whenever the message
+    /// shipped with `codec == aac`; `None` when it was not measured.
+    pub aac_bits: Option<u64>,
+    /// Frames whose metrics had to fall back to payload-size accounting
+    /// because the index lane was not derivable (malformed lane, or a
+    /// parsed message that lost its encode-time metrics). Surfaced in the
+    /// ledger as `CommStats::metric_fallback_frames` instead of being
+    /// silently folded into the raw number.
+    pub fallback_frames: u32,
+}
+
+impl BitMetrics {
+    /// The metrics the ledger should use for `wire`: the encoder's carried
+    /// accounting when present, else the conservative header-derived
+    /// fallback ([`BitMetrics::from_frame_headers`]). The single policy
+    /// point shared by every path that bills a message.
+    pub fn for_wire(wire: &WireMsg) -> BitMetrics {
+        wire.carried_metrics()
+            .copied()
+            .unwrap_or_else(|| BitMetrics::from_frame_headers(wire))
+    }
+
+    /// Conservative metrics for a message that reached the ledger without
+    /// encode-time accounting (re-parsed bytes whose envelope was lost):
+    /// every lane is booked at the transmitted payload size, and each
+    /// index-bearing frame is flagged as a fallback.
+    pub fn from_frame_headers(wire: &WireMsg) -> BitMetrics {
+        let mut m = BitMetrics::default();
+        for f in wire.frames() {
+            m.transmitted_bits += f.payload_bits as u64;
+            m.raw_bits += f.payload_bits as u64;
+            m.entropy_bits += f.payload_bits as f64;
+            if f.m >= 1 {
+                m.fallback_frames += 1;
             }
         }
-        total
+        m
     }
 }
 
 /// Incremental encoder for a framed [`WireMsg`].
 pub struct WireMsgBuilder {
     scheme: SchemeId,
+    codec: PayloadCodec,
     bytes: Vec<u8>,
     frames: Vec<Frame>,
 }
 
 impl WireMsgBuilder {
+    /// Builder for a raw-codec message (the historical layout).
     pub fn new(scheme: SchemeId) -> Self {
+        Self::with_codec(scheme, PayloadCodec::Raw)
+    }
+
+    /// Builder for a message whose index lanes ship under `codec`.
+    pub fn with_codec(scheme: SchemeId, codec: PayloadCodec) -> Self {
         let mut bytes = Vec::with_capacity(64);
         bytes.extend_from_slice(&WIRE_MAGIC);
         bytes.push(WIRE_VERSION);
         bytes.push(scheme as u8);
+        bytes.push(codec as u8);
         bytes.extend_from_slice(&0u32.to_le_bytes()); // frame count, patched in finish()
         Self {
             scheme,
+            codec,
             bytes,
             frames: Vec::new(),
         }
@@ -410,20 +601,115 @@ impl WireMsgBuilder {
             m,
             n_scales,
             payload_bits,
+            codec: self.codec,
             payload_off,
         });
     }
 
     /// Patch the frame count, append the checksum, and seal the message.
-    pub fn finish(mut self) -> WireMsg {
+    pub fn finish(self) -> WireMsg {
+        self.finish_with_metrics(None)
+    }
+
+    /// Seal the message and attach encode-time [`BitMetrics`] (what
+    /// [`GradQuantizer::encode_tensors_coded`] does after the frame sink
+    /// accumulated them).
+    pub fn finish_with_metrics(mut self, metrics: Option<BitMetrics>) -> WireMsg {
         let count = self.frames.len() as u32;
-        self.bytes[4..8].copy_from_slice(&count.to_le_bytes());
+        self.bytes[5..9].copy_from_slice(&count.to_le_bytes());
         let crc = crc::checksum(&self.bytes);
         self.bytes.extend_from_slice(&crc.to_le_bytes());
         WireMsg {
             scheme: self.scheme,
+            codec: self.codec,
             bytes: self.bytes,
             frames: self.frames,
+            metrics,
+        }
+    }
+}
+
+/// Accumulates the per-message [`BitMetrics`] while frames are encoded.
+#[derive(Default)]
+struct MetricsAcc {
+    raw: u64,
+    entropy_raw: u64,
+    entropy_coded: f64,
+    aac: u64,
+}
+
+impl MetricsAcc {
+    /// `bits` of an incompressible raw lane (scales, baseline f32s,
+    /// one-bit signs): every ledger lane pays face value.
+    fn raw_lane(&mut self, bits: u64) {
+        self.raw += bits;
+        self.entropy_raw += bits;
+        self.aac += bits;
+    }
+
+    fn finish(self, codec: PayloadCodec, transmitted_bits: u64) -> BitMetrics {
+        BitMetrics {
+            transmitted_bits,
+            raw_bits: self.raw,
+            entropy_bits: self.entropy_coded + self.entropy_raw as f64,
+            aac_bits: (codec == PayloadCodec::Aac).then_some(self.aac),
+            fallback_frames: 0,
+        }
+    }
+}
+
+/// What a scheme's [`GradQuantizer::encode_frame`] writes through: a bit
+/// writer for the frame payload plus the negotiated index-lane codec and
+/// the running [`BitMetrics`] accumulator. Scales and raw lanes go through
+/// [`FrameSink::put_scales`] / [`FrameSink::put_raw_f32`] /
+/// [`FrameSink::put_raw_bit`]; the quantized index stream goes through
+/// [`FrameSink::put_indices`], which performs the codec dispatch *and*
+/// captures all bit metrics in the same pass — no later re-decode.
+pub struct FrameSink<'a> {
+    w: &'a mut BitWriter,
+    codec: PayloadCodec,
+    acc: &'a mut MetricsAcc,
+}
+
+impl FrameSink<'_> {
+    /// The negotiated index-lane codec (schemes normally don't care — the
+    /// sink dispatches — but it is visible for completeness).
+    pub fn codec(&self) -> PayloadCodec {
+        self.codec
+    }
+
+    /// Write the standard payload prefix: scales as raw f32 bits.
+    pub fn put_scales(&mut self, scales: &[f32]) {
+        for &s in scales {
+            self.w.push_f32(s);
+        }
+        self.acc.raw_lane(32 * scales.len() as u64);
+    }
+
+    /// Raw 32-bit lane element (baseline coordinates).
+    pub fn put_raw_f32(&mut self, v: f32) {
+        self.w.push_f32(v);
+        self.acc.raw_lane(32);
+    }
+
+    /// Raw single-bit lane element (one-bit signs).
+    pub fn put_raw_bit(&mut self, b: bool) {
+        self.w.push_bit(b);
+        self.acc.raw_lane(1);
+    }
+
+    /// Encode the signed index lane (`q[i]` in `[-m, m]`) under the
+    /// negotiated codec and record its raw-equivalent, entropy-limit and —
+    /// when shipping `aac` — exact coded sizes.
+    pub fn put_indices(&mut self, q: &[i32], m: i32) {
+        let k = (2 * m + 1) as u32;
+        self.acc.raw += pack::packed_bits(q.len(), k) as u64;
+        self.acc.entropy_coded +=
+            entropy::signed_stream_entropy(q, m) * q.len() as f64;
+        let before = self.w.len_bits();
+        crate::coding::write_indices_coded(self.w, self.codec, q, m);
+        if self.codec == PayloadCodec::Aac {
+            self.acc.aac += (self.w.len_bits() - before) as u64;
         }
     }
 }
@@ -459,8 +745,10 @@ pub trait GradQuantizer: Send {
     fn id(&self) -> SchemeId;
 
     /// Quantize + serialize one tensor into one frame: write the payload
-    /// through `w`, return `(m, n_scales)` for the frame header.
-    fn encode_frame(&mut self, g: &[f32], dither: &mut DitherGen, w: &mut BitWriter)
+    /// through the sink (scales + raw lanes verbatim, index lanes under
+    /// the sink's negotiated codec), return `(m, n_scales)` for the frame
+    /// header.
+    fn encode_frame(&mut self, g: &[f32], dither: &mut DitherGen, sink: &mut FrameSink)
         -> (i32, usize);
 
     /// The decode primitive: parse + dequantize one frame from its payload
@@ -472,12 +760,15 @@ pub trait GradQuantizer: Send {
     /// already-decoded SGs).
     ///
     /// Buffer-reuse contract: implementations perform **no heap
-    /// allocation** — dither is generated directly into `out` (then
-    /// combined in place) and symbols are pulled from a streaming
-    /// [`pack::SymbolUnpacker`], so a server decoding millions of frames
-    /// reuses the same scratch for every message of every round. `out` may
-    /// hold garbage on entry and is fully overwritten on success; on error
-    /// its contents are unspecified.
+    /// allocation proportional to the tensor size** — dither is generated
+    /// directly into `out` (then combined in place) and symbols are pulled
+    /// from a streaming [`SymbolSource`] (base-k unpacking, Huffman tree
+    /// walks, or arithmetic decoding, per the frame's codec byte), so a
+    /// server decoding millions of frames reuses the same scratch for
+    /// every message of every round; coded lanes add only O(alphabet)
+    /// decoder state per frame. `out` may hold garbage on entry and is
+    /// fully overwritten on success; on error its contents are
+    /// unspecified.
     fn decode_frame_into(
         &self,
         frame: &Frame,
@@ -506,21 +797,55 @@ pub trait GradQuantizer: Send {
     /// their per-message frame cursor here.
     fn begin_message(&mut self) {}
 
-    /// Quantize + serialize a flat gradient as a single-frame message.
+    /// Quantize + serialize a flat gradient as a single-frame raw-codec
+    /// message.
     fn encode(&mut self, g: &[f32], dither: &mut DitherGen) -> WireMsg {
         self.encode_tensors(&[g], dither)
     }
 
-    /// Quantize + serialize per-tensor gradients as one framed message.
+    /// Quantize + serialize a flat gradient as a single-frame message
+    /// whose index lanes ship under `codec`.
+    fn encode_coded(
+        &mut self,
+        g: &[f32],
+        dither: &mut DitherGen,
+        codec: PayloadCodec,
+    ) -> WireMsg {
+        self.encode_tensors_coded(&[g], dither, codec)
+    }
+
+    /// Quantize + serialize per-tensor gradients as one framed raw-codec
+    /// message.
     fn encode_tensors(&mut self, tensors: &[&[f32]], dither: &mut DitherGen) -> WireMsg {
+        self.encode_tensors_coded(tensors, dither, PayloadCodec::Raw)
+    }
+
+    /// Quantize + serialize per-tensor gradients as one framed message
+    /// whose index lanes ship under `codec`, capturing the full
+    /// [`BitMetrics`] in the same pass (carried on the returned message —
+    /// the ledger never re-decodes a payload).
+    fn encode_tensors_coded(
+        &mut self,
+        tensors: &[&[f32]],
+        dither: &mut DitherGen,
+        codec: PayloadCodec,
+    ) -> WireMsg {
         self.begin_message();
-        let mut b = WireMsgBuilder::new(self.id());
+        let mut b = WireMsgBuilder::with_codec(self.id(), codec);
+        let mut acc = MetricsAcc::default();
+        let mut transmitted = 0u64;
         for g in tensors {
             let mut w = BitWriter::new();
-            let (m, n_scales) = self.encode_frame(g, dither, &mut w);
+            let mut sink = FrameSink {
+                w: &mut w,
+                codec,
+                acc: &mut acc,
+            };
+            let (m, n_scales) = self.encode_frame(g, dither, &mut sink);
+            transmitted += w.len_bits() as u64;
             b.push_frame(g.len(), m, n_scales, w);
         }
-        b.finish()
+        b.finish_with_metrics(Some(acc.finish(codec, transmitted)))
     }
 
     /// Parse + dequantize a whole message into a caller-owned flat buffer
@@ -624,13 +949,6 @@ pub trait GradQuantizer: Send {
     }
 }
 
-/// Write the standard payload prefix: scales as raw f32 bits.
-pub(crate) fn write_scales(w: &mut BitWriter, scales: &[f32]) {
-    for &s in scales {
-        w.push_f32(s);
-    }
-}
-
 /// Scheme configuration — parseable from CLI strings, buildable to a boxed
 /// quantizer. This is the config-system entry point used by the trainer,
 /// benches and examples.
@@ -685,6 +1003,39 @@ impl Scheme {
     /// Whether this scheme's decoder needs Alg.-2 side information.
     pub fn needs_side_info(&self) -> bool {
         matches!(self, Scheme::Nested { .. })
+    }
+
+    /// The index alphabet size `2m + 1` this scheme's frames carry
+    /// (0 for schemes with no index lane: baseline, one-bit). Delegates to
+    /// the quantizer constructors so negotiation can never drift from the
+    /// `m` the encoders actually put in frame headers.
+    pub fn alphabet(&self) -> u32 {
+        match *self {
+            Scheme::Baseline | Scheme::OneBit => 0,
+            Scheme::Dithered { delta } | Scheme::DitheredPartitioned { delta, .. } => {
+                dithered::DitheredQuantizer::new(delta).alphabet()
+            }
+            Scheme::Qsgd { m } => stochastic::QsgdQuantizer::new(m).alphabet(),
+            Scheme::Terngrad => 3,
+            // NestedQuantizer::new asserts ratio odd >= 3, so the alphabet
+            // is the ratio itself by construction
+            Scheme::Nested { ratio, .. } => ratio,
+        }
+    }
+
+    /// Codec negotiation: reject scheme/codec pairs the coders cannot
+    /// carry (today: `aac` beyond the adaptive model's alphabet ceiling)
+    /// at setup, instead of panicking inside an encoder mid-run.
+    pub fn validate_codec(&self, codec: PayloadCodec) -> crate::Result<()> {
+        let k = self.alphabet();
+        anyhow::ensure!(
+            k == 0 || codec.supports_alphabet(k as usize),
+            "{} cannot ship `{}`-coded payloads: its {k}-symbol alphabet \
+             exceeds the codec's limit",
+            self.label(),
+            codec.label()
+        );
+        Ok(())
     }
 
     /// Parse CLI syntax, e.g. `baseline`, `dqsg:0.5`, `dqsg:0.5:part8`,
@@ -1070,6 +1421,200 @@ mod tests {
         assert!(reg.contains(SchemeId::Baseline));
         assert!(reg.contains(SchemeId::Terngrad));
         assert!(reg.contains(SchemeId::OneBit));
+    }
+
+    fn all_test_schemes() -> Vec<Scheme> {
+        vec![
+            Scheme::Baseline,
+            Scheme::Dithered { delta: 0.5 },
+            Scheme::DitheredPartitioned { delta: 0.5, k: 7 },
+            Scheme::Qsgd { m: 2 },
+            Scheme::Terngrad,
+            Scheme::OneBit,
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        ]
+    }
+
+    #[test]
+    fn aac_codec_negotiation_rejects_wide_alphabets() {
+        // the adaptive model caps at 4096 symbols: negotiation must turn
+        // that into a setup error, not an encoder panic mid-run
+        let wide = Scheme::Qsgd { m: 4000 }; // alphabet 8001
+        let err = wide.validate_codec(PayloadCodec::Aac).unwrap_err().to_string();
+        assert!(err.contains("8001"), "{err}");
+        assert!(wide.validate_codec(PayloadCodec::Raw).is_ok());
+        assert!(wide.validate_codec(PayloadCodec::Huffman).is_ok());
+        // 2 * 2047 + 1 = 4095 still fits
+        assert!(Scheme::Qsgd { m: 2047 }.validate_codec(PayloadCodec::Aac).is_ok());
+        // schemes without an index lane are codec-agnostic
+        assert!(Scheme::Baseline.validate_codec(PayloadCodec::Aac).is_ok());
+        assert!(Scheme::OneBit.validate_codec(PayloadCodec::Aac).is_ok());
+        // alphabet() agrees with what the quantizers put in frame headers
+        assert_eq!(Scheme::Dithered { delta: 1.0 }.alphabet(), 3);
+        assert_eq!(Scheme::Dithered { delta: 1.0 / 3.0 }.alphabet(), 7);
+        assert_eq!(Scheme::Nested { d1: 0.25, ratio: 3, alpha: 1.0 }.alphabet(), 3);
+        assert_eq!(Scheme::Terngrad.alphabet(), 3);
+    }
+
+    #[test]
+    fn coded_payloads_roundtrip_for_all_schemes_and_degenerate_gradients() {
+        // every scheme × codec × degenerate gradient shape: the decoded
+        // reconstruction must be bit-identical to the raw-codec decode of
+        // the same (gradient, dither), and coded metrics must carry
+        let mut rng = crate::prng::Xoshiro256::new(44);
+        let normal: Vec<f32> = (0..1500).map(|_| rng.next_normal() * 0.2).collect();
+        let mut skew = vec![0f32; 2000];
+        for i in 0..20 {
+            skew[i * 97] = if i % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        let gradients: Vec<Vec<f32>> = vec![
+            normal.clone(),
+            vec![0.0; 1000],      // all-zero -> single-symbol index stream
+            vec![0.25; 777],      // constant
+            skew,                 // maximum-skew indices
+            vec![0.5],            // single element
+            Vec::new(),           // empty tensor -> empty frame
+        ];
+        for g in &gradients {
+            let y: Vec<f32> = g.iter().map(|&x| x * 0.999).collect();
+            for scheme in all_test_schemes() {
+                let side_needed = scheme.needs_side_info();
+                let mut reference: Option<Vec<f32>> = None;
+                for codec in [PayloadCodec::Raw, PayloadCodec::Huffman, PayloadCodec::Aac] {
+                    let mut q = scheme.build();
+                    let stream = DitherStream::new(5, 1);
+                    let msg = q.encode_coded(g, &mut stream.round(3), codec);
+                    assert_eq!(msg.codec, codec, "{scheme:?}");
+                    let metrics = *msg.carried_metrics().unwrap();
+                    assert_eq!(
+                        metrics.transmitted_bits as usize,
+                        msg.transmitted_bits(),
+                        "{scheme:?}/{codec:?}: metrics vs frame headers"
+                    );
+                    // wire truth survives a byte-level round trip
+                    let parsed = WireMsg::parse(msg.bytes().to_vec())
+                        .unwrap_or_else(|e| panic!("{scheme:?}/{codec:?}/n={}: {e}", g.len()));
+                    let dec = scheme.build();
+                    let side = side_needed.then_some(&y[..]);
+                    let recon = dec
+                        .decode(&parsed, &mut stream.round(3), side)
+                        .unwrap_or_else(|e| panic!("{scheme:?}/{codec:?}/n={}: {e}", g.len()));
+                    match &reference {
+                        None => reference = Some(recon),
+                        Some(want) => assert_eq!(
+                            want, &recon,
+                            "{scheme:?}/{codec:?}/n={}: codec changed the decode",
+                            g.len()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aac_codec_ships_fewer_bits_and_bills_exactly() {
+        // the headline: a skewed gradient's aac payload is far below the
+        // base-k rate, and the carried aac metric equals the payload truth
+        let mut rng = crate::prng::Xoshiro256::new(9);
+        let g: Vec<f32> = (0..60_000).map(|_| rng.next_normal() * 0.05).collect();
+        let mut q = Scheme::Dithered { delta: 1.0 }.build();
+        let stream = DitherStream::new(2, 0);
+        let raw = q.encode_coded(&g, &mut stream.round(0), PayloadCodec::Raw);
+        let aac = q.encode_coded(&g, &mut stream.round(0), PayloadCodec::Aac);
+        let huff = q.encode_coded(&g, &mut stream.round(0), PayloadCodec::Huffman);
+        let rm = raw.carried_metrics().unwrap();
+        let am = aac.carried_metrics().unwrap();
+        let hm = huff.carried_metrics().unwrap();
+        // same indices -> same raw-equivalent and entropy metrics
+        assert_eq!(rm.raw_bits, am.raw_bits);
+        assert_eq!(rm.entropy_bits, am.entropy_bits);
+        assert_eq!(rm.raw_bits, hm.raw_bits);
+        // raw codec: transmitted == raw metric; aac: ledger = wire truth
+        assert_eq!(rm.transmitted_bits, rm.raw_bits);
+        assert_eq!(am.aac_bits, Some(am.transmitted_bits));
+        assert!(rm.aac_bits.is_none(), "raw encode must not pay for AAC");
+        // the win is real on a compressible stream
+        assert!(
+            (am.transmitted_bits as f64) < 0.8 * rm.transmitted_bits as f64,
+            "aac {} vs raw {}",
+            am.transmitted_bits,
+            rm.transmitted_bits
+        );
+        assert!(hm.transmitted_bits < rm.transmitted_bits);
+        // aac within a few percent of the entropy limit on this stream
+        let ratio = am.transmitted_bits as f64 / am.entropy_bits;
+        assert!(ratio < 1.05, "aac/entropy = {ratio}");
+    }
+
+    #[test]
+    fn parsed_message_metrics_fall_back_typed_not_silently() {
+        // a parsed coded message carries no metrics; WorkerMsg-level
+        // consumers must get conservative numbers WITH the typed fallback
+        // counter, not a silent raw-size booking
+        let mut q = Scheme::Dithered { delta: 0.5 }.build();
+        let stream = DitherStream::new(7, 0);
+        let g = vec![0.1f32; 500];
+        let msg = q.encode_coded(&g, &mut stream.round(0), PayloadCodec::Huffman);
+        let parsed = WireMsg::parse(msg.bytes().to_vec()).unwrap();
+        assert!(parsed.carried_metrics().is_none());
+        let fb = BitMetrics::from_frame_headers(&parsed);
+        assert_eq!(fb.transmitted_bits as usize, parsed.transmitted_bits());
+        assert_eq!(fb.raw_bits, fb.transmitted_bits);
+        assert_eq!(fb.fallback_frames, 1, "index-bearing frame must be flagged");
+        // m = 0 messages are exact from headers: no fallback
+        let mut b = Scheme::Baseline.build();
+        let bmsg = b.encode(&g, &mut stream.round(0));
+        let bparsed = WireMsg::parse(bmsg.bytes().to_vec()).unwrap();
+        assert_eq!(BitMetrics::from_frame_headers(&bparsed).fallback_frames, 0);
+    }
+
+    #[test]
+    fn parse_bounds_hostile_aac_coordinate_claims() {
+        // an aac lane may legitimately dip below 1 bit/symbol, but a
+        // CRC-valid header cannot claim more than the coder's floor allows
+        // — that bound is what keeps the stats accessors' work
+        // proportional to the actual message size
+        let mut b = WireMsgBuilder::with_codec(SchemeId::Dithered, PayloadCodec::Aac);
+        let mut w = BitWriter::new();
+        w.push_f32(1.0);
+        w.push_bits(0b10, 2); // 34-bit payload
+        b.push_frame(8, 1, 1, w);
+        let good = b.finish().into_bytes();
+        assert!(WireMsg::parse(good.clone()).is_ok());
+        // n at the bound passes, n beyond it is rejected
+        let payload_bits = 34usize;
+        for (n, ok) in [
+            (payload_bits * MAX_AAC_SYMBOLS_PER_BIT, true),
+            (payload_bits * MAX_AAC_SYMBOLS_PER_BIT + 1, false),
+            (usize::MAX >> 1, false),
+        ] {
+            let mut bad = good.clone();
+            bad[MSG_HEADER_BYTES..MSG_HEADER_BYTES + 8]
+                .copy_from_slice(&(n as u64).to_le_bytes());
+            let body = bad.len() - CHECKSUM_BYTES;
+            let patched = crc::checksum(&bad[..body]).to_le_bytes();
+            bad[body..].copy_from_slice(&patched);
+            assert_eq!(WireMsg::parse(bad).is_ok(), ok, "n = {n}");
+        }
+    }
+
+    #[test]
+    fn derive_metrics_counts_undecodable_frames() {
+        // a structurally valid frame whose index lane runs out of bits is
+        // booked at payload size AND counted — the old entropy_bits()
+        // silently swallowed this
+        let mut b = WireMsgBuilder::new(SchemeId::Dithered);
+        let mut w = BitWriter::new();
+        w.push_f32(1.0);
+        w.push_bits(0x3FF, 64); // one base-3 group = 40 symbols max
+        b.push_frame(50, 1, 1, w); // claims 50 symbols: lane underflows
+        let msg = b.finish();
+        let parsed = WireMsg::parse(msg.bytes().to_vec()).unwrap();
+        assert!(parsed.indices().is_err(), "lane must underflow");
+        let d = parsed.derive_metrics(true);
+        assert_eq!(d.fallback_frames, 1);
+        assert_eq!(d.raw_bits, d.transmitted_bits);
     }
 
     #[test]

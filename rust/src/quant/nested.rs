@@ -17,8 +17,8 @@
 //! failure probability and shows the error variance equals DQSG's when
 //! alpha = 1 or alpha = sqrt(1 - Delta1^2 / 12 sigma_z^2).
 
-use super::{Frame, GradQuantizer, SchemeId};
-use crate::coding::{pack, BitReader, BitWriter};
+use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use crate::coding::{pack, BitReader, SymbolSource};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
 
@@ -99,7 +99,7 @@ impl GradQuantizer for NestedQuantizer {
         &mut self,
         g: &[f32],
         dither: &mut DitherGen,
-        w: &mut BitWriter,
+        sink: &mut FrameSink,
     ) -> (i32, usize) {
         let kappa = linf_norm(g);
         let inv_kappa = 1.0 / kappa;
@@ -115,8 +115,8 @@ impl GradQuantizer for NestedQuantizer {
                 ((s * inv_d1).round() as i32).clamp(-self.m, self.m)
             })
             .collect();
-        super::write_scales(w, &[kappa]);
-        pack::pack_base_k_signed(&indices, self.m, self.ratio, w);
+        sink.put_scales(&[kappa]);
+        sink.put_indices(&indices, self.m);
         (self.m, 1)
     }
 
@@ -152,7 +152,7 @@ impl GradQuantizer for NestedQuantizer {
         // regenerated dither lands in `out`, then eq. (7) runs in place
         // against the streamed symbols and the side information y
         dither.fill_dither(self.d1 / 2.0, out);
-        let mut sy = pack::SymbolUnpacker::new(&mut r, self.ratio, frame.n);
+        let mut sy = SymbolSource::new(&mut r, frame.codec, self.ratio, frame.n)?;
         for (v, &yi) in out.iter_mut().zip(y) {
             let s = self.d1 * pack::symbol_to_signed(sy.next_symbol()?, self.m) as f32;
             let yn = yi * inv_kappa;

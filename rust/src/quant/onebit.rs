@@ -12,8 +12,8 @@
 //! by its position in the message (tensor order must stay stable across
 //! rounds — it does: layer order is fixed).
 
-use super::{Frame, GradQuantizer, SchemeId};
-use crate::coding::{BitReader, BitWriter};
+use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use crate::coding::BitReader;
 use crate::prng::DitherGen;
 
 #[derive(Debug, Clone, Default)]
@@ -54,7 +54,7 @@ impl GradQuantizer for OneBitQuantizer {
         &mut self,
         g: &[f32],
         _dither: &mut DitherGen,
-        w: &mut BitWriter,
+        sink: &mut FrameSink,
     ) -> (i32, usize) {
         let lane = self.cursor;
         self.cursor += 1;
@@ -88,10 +88,12 @@ impl GradQuantizer for OneBitQuantizer {
         let mean_pos = if n_pos > 0 { (sum_pos / n_pos as f64) as f32 } else { 0.0 };
         let mean_neg = if n_neg > 0 { (sum_neg / n_neg as f64) as f32 } else { 0.0 };
 
-        super::write_scales(w, &[mean_pos, mean_neg]);
+        sink.put_scales(&[mean_pos, mean_neg]);
+        // the near-incompressible sign stream (Table 2) always ships raw,
+        // whatever codec the message negotiated
         for (i, &vi) in v.iter().enumerate() {
             let bit = vi >= 0.0;
-            w.push_bit(bit);
+            sink.put_raw_bit(bit);
             // error feedback: residual carries what the bit didn't
             residual[i] = vi - if bit { mean_pos } else { mean_neg };
         }

@@ -8,8 +8,8 @@
 //! partition count from the header instead of trusting out-of-band config.
 
 use super::dithered::DitheredQuantizer;
-use super::{Frame, GradQuantizer, SchemeId};
-use crate::coding::{pack, BitReader, BitWriter};
+use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use crate::coding::{pack, BitReader, SymbolSource};
 use crate::prng::DitherGen;
 
 #[derive(Debug, Clone)]
@@ -65,7 +65,7 @@ impl GradQuantizer for PartitionedDithered {
         &mut self,
         g: &[f32],
         dither: &mut DitherGen,
-        w: &mut BitWriter,
+        sink: &mut FrameSink,
     ) -> (i32, usize) {
         let mut u_buf = Vec::new();
         let mut indices = Vec::with_capacity(g.len());
@@ -78,8 +78,10 @@ impl GradQuantizer for PartitionedDithered {
                 .quantize_into(&g[lo..hi], dither, &mut u_buf, &mut indices);
             scales.push(kappa);
         }
-        super::write_scales(w, &scales);
-        pack::pack_base_k_signed(&indices, self.inner.m(), self.inner.alphabet(), w);
+        sink.put_scales(&scales);
+        // the index lane spans all partitions: one coded stream, so the
+        // entropy coders see the whole tensor's symbol statistics
+        sink.put_indices(&indices, self.inner.m());
         (self.inner.m(), scales.len())
     }
 
@@ -122,7 +124,7 @@ impl GradQuantizer for PartitionedDithered {
         for _ in 0..parts {
             r.read_f32()?; // hop over the scale block
         }
-        let mut sy = pack::SymbolUnpacker::new(&mut r, self.inner.alphabet(), frame.n);
+        let mut sy = SymbolSource::new(&mut r, frame.codec, self.inner.alphabet(), frame.n)?;
         let m = self.inner.m();
         let delta = self.inner.delta();
         for (lo, hi) in self.bounds_iter(frame.n) {

@@ -9,8 +9,8 @@
 //! The variance penalty relative to DQSG (2x for uniform inputs, §2.1.1) is
 //! what the paper's Fig. 5 / Table 3 comparisons measure.
 
-use super::{Frame, GradQuantizer, SchemeId};
-use crate::coding::{pack, BitReader, BitWriter};
+use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use crate::coding::{pack, BitReader, SymbolSource};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
 
@@ -47,7 +47,7 @@ impl GradQuantizer for QsgdQuantizer {
         &mut self,
         g: &[f32],
         dither: &mut DitherGen,
-        w: &mut BitWriter,
+        sink: &mut FrameSink,
     ) -> (i32, usize) {
         let kappa = linf_norm(g);
         let inv_kappa = 1.0 / kappa;
@@ -61,8 +61,8 @@ impl GradQuantizer for QsgdQuantizer {
             .zip(&u)
             .map(|(&gi, &ui)| (((gi * inv_kappa + ui) * inv_delta).round() as i32).clamp(-m, m))
             .collect();
-        super::write_scales(w, &[kappa]);
-        pack::pack_base_k_signed(&indices, self.m, self.alphabet(), w);
+        sink.put_scales(&[kappa]);
+        sink.put_indices(&indices, self.m);
         (self.m, 1)
     }
 
@@ -91,7 +91,7 @@ impl GradQuantizer for QsgdQuantizer {
         let kappa = r.read_f32()?;
         // half-dithered: reconstruction is kappa * Delta * q; dither NOT
         // subtracted (Lemma 2 — this is what distinguishes QSGD from DQSG).
-        let mut sy = pack::SymbolUnpacker::new(&mut r, self.alphabet(), frame.n);
+        let mut sy = SymbolSource::new(&mut r, frame.codec, self.alphabet(), frame.n)?;
         for v in out.iter_mut() {
             *v = kappa * self.delta * pack::symbol_to_signed(sy.next_symbol()?, self.m) as f32;
         }

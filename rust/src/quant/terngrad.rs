@@ -3,8 +3,8 @@
 //! s = max |clip(x)|, reconstruction s * q. Clipping at c·sigma (c = 2.5,
 //! the paper's recommended layer-wise clipping factor).
 
-use super::{Frame, GradQuantizer, SchemeId};
-use crate::coding::{pack, BitReader, BitWriter};
+use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use crate::coding::{pack, BitReader, SymbolSource};
 use crate::prng::DitherGen;
 use crate::tensor::mean_var;
 
@@ -42,7 +42,7 @@ impl GradQuantizer for TerngradQuantizer {
         &mut self,
         g: &[f32],
         dither: &mut DitherGen,
-        w: &mut BitWriter,
+        sink: &mut FrameSink,
     ) -> (i32, usize) {
         let (_, var) = mean_var(g);
         let c = (self.clip_sigmas as f64 * var.sqrt()) as f32;
@@ -77,8 +77,8 @@ impl GradQuantizer for TerngradQuantizer {
                 }
             })
             .collect();
-        super::write_scales(w, &[s]);
-        pack::pack_base_k_signed(&indices, 1, 3, w);
+        sink.put_scales(&[s]);
+        sink.put_indices(&indices, 1);
         (1, 1)
     }
 
@@ -104,7 +104,7 @@ impl GradQuantizer for TerngradQuantizer {
         );
         let mut r = BitReader::new(payload);
         let s = r.read_f32()?;
-        let mut sy = pack::SymbolUnpacker::new(&mut r, 3, frame.n);
+        let mut sy = SymbolSource::new(&mut r, frame.codec, 3, frame.n)?;
         for v in out.iter_mut() {
             *v = s * pack::symbol_to_signed(sy.next_symbol()?, 1) as f32;
         }

@@ -23,7 +23,7 @@
 use crate::comm::{ExchangeError, FaultChannel, FaultPlan, RoundPolicy, Session, WorkerMsg};
 use crate::prng::philox::splitmix64;
 use crate::prng::{DitherStream, Xoshiro256};
-use crate::quant::{GradQuantizer, Scheme};
+use crate::quant::{GradQuantizer, PayloadCodec, Scheme};
 use crate::sim::LinkModel;
 use crate::train::trainer::{EvalPoint, RoundDelivery, TrainReport};
 
@@ -42,6 +42,8 @@ pub struct ClusterScenario {
     pub plan: FaultPlan,
     pub policy: RoundPolicy,
     pub link: LinkModel,
+    /// Wire-v3 index-lane codec every worker encodes under.
+    pub codec: PayloadCodec,
     /// SGD step on the synthetic quadratic (contraction factor `1 - lr`).
     pub lr: f32,
     /// Per-worker gradient noise std, relative to the shared signal.
@@ -62,6 +64,7 @@ impl Default for ClusterScenario {
             plan: FaultPlan::default(),
             policy: RoundPolicy::WaitAll,
             link: LinkModel::gigabit(),
+            codec: PayloadCodec::Raw,
             lr: 0.25,
             noise: 0.05,
             eval_every: 10,
@@ -76,10 +79,16 @@ impl ClusterScenario {
             None => self.scheme.label(),
         };
         let faults = if self.plan.is_empty() { "clean" } else { "faulty" };
+        let codec = if self.codec == PayloadCodec::Raw {
+            String::new()
+        } else {
+            format!(" codec={}", self.codec.label())
+        };
         format!(
-            "cluster {} P={} policy={} link={}",
+            "cluster {} P={}{} policy={} faults={}",
             scheme,
             self.workers,
+            codec,
             self.policy.label(),
             faults,
         )
@@ -95,6 +104,10 @@ impl ClusterHarness {
     pub fn new(sc: ClusterScenario) -> crate::Result<ClusterHarness> {
         anyhow::ensure!(sc.workers >= 1, "at least one worker");
         anyhow::ensure!(sc.n_params >= 1 && sc.rounds >= 1, "non-empty scenario");
+        sc.scheme.validate_codec(sc.codec)?;
+        if let Some(s2) = sc.scheme_p2 {
+            s2.validate_codec(sc.codec)?;
+        }
         Ok(ClusterHarness { sc })
     }
 
@@ -157,13 +170,8 @@ impl ClusterHarness {
                     *gi = (xi - ti) + sc.noise * noise.next_normal();
                 }
                 let (q, stream) = &mut encoders[w];
-                let wire = q.encode(&grad, &mut stream.round(round as u64));
-                events.extend(channel.feed(WorkerMsg {
-                    worker: w,
-                    round: round as u64,
-                    loss: loss_now,
-                    wire,
-                }));
+                let wire = q.encode_coded(&grad, &mut stream.round(round as u64), sc.codec);
+                events.extend(channel.feed(WorkerMsg::new(w, round as u64, loss_now, wire)));
             }
             let mut ex = session.begin_exchange(round as u64, sc.policy);
             for ev in events {

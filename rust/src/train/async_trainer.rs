@@ -82,6 +82,7 @@ impl AsyncTrainer {
             "async trainer runs a single scheme for all workers (scheme_p2 is \
              a synchronous Alg.-2 group split)"
         );
+        cfg.scheme.validate_codec(cfg.codec)?;
         let service = ComputeService::start(std::path::Path::new(&cfg.artifacts_dir))?;
         let worker_speed = (0..cfg.workers)
             .map(|p| 1.0 + 0.5 * (p as f64 / cfg.workers.max(1) as f64)) // up to 1.5x slower
@@ -226,7 +227,7 @@ impl AsyncTrainer {
             // session records the bits, regenerates the dither from its own
             // seed copy, and hands back its reused decode buffer
             let msg = quantizers[ev.worker]
-                .encode(&grad, &mut streams[ev.worker].round(ev.wstep));
+                .encode_coded(&grad, &mut streams[ev.worker].round(ev.wstep), cfg.codec);
 
             // apply the fault plan to the uplink (keyed worker × wstep)
             match plan.as_ref().and_then(|p| p.fault_for(seed, ev.worker, ev.wstep)) {

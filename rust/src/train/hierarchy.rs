@@ -22,7 +22,7 @@
 
 use crate::comm::{FaultChannel, FaultPlan, RoundPolicy, Session, WorkerMsg};
 use crate::prng::DitherStream;
-use crate::quant::{GradQuantizer, Scheme};
+use crate::quant::{GradQuantizer, PayloadCodec, Scheme};
 use crate::sim::LinkModel;
 use crate::tensor;
 
@@ -60,9 +60,11 @@ impl Hierarchy {
 pub struct HierarchyRound {
     /// The root's final average gradient estimate.
     pub average: Vec<f32>,
-    /// Total uplink bits on the leaf tier (workers -> leaders).
+    /// Total uplink payload bits actually transmitted on the leaf tier
+    /// (workers -> leaders) under the configured codec.
     pub leaf_bits: usize,
-    /// Total uplink bits on the root tier (leaders -> root).
+    /// Total uplink payload bits actually transmitted on the root tier
+    /// (leaders -> root) under the configured codec.
     pub root_bits: usize,
     /// What a flat (single-tier) all-DQSG deployment would have cost.
     pub flat_dqsg_bits: usize,
@@ -96,6 +98,8 @@ pub struct HierarchyAggregator {
     /// Optional leaf-tier fault injection (one channel per group; fault
     /// decisions key on the worker's *local* index within its group).
     leaf_faults: Option<LeafFaults>,
+    /// Wire-v3 index-lane codec both tiers encode under.
+    codec: PayloadCodec,
 }
 
 struct LeafFaults {
@@ -152,7 +156,24 @@ impl HierarchyAggregator {
             root_encoders,
             flat_encoders,
             leaf_faults: None,
+            codec: PayloadCodec::Raw,
         })
+    }
+
+    /// Ship both tiers' index lanes under `codec` (default raw). The
+    /// decoded aggregates are bit-identical either way — only the
+    /// transmitted bits change.
+    pub fn with_codec(mut self, codec: PayloadCodec) -> crate::Result<Self> {
+        for s in [
+            self.h.leaf_dqsg,
+            self.h.leaf_nested,
+            self.h.root_dqsg,
+            self.h.root_nested,
+        ] {
+            s.validate_codec(codec)?;
+        }
+        self.codec = codec;
+        Ok(self)
     }
 
     /// Inject faults on the leaf tier: the same `plan` is applied inside
@@ -201,7 +222,7 @@ impl HierarchyAggregator {
         let leaf_before: f64 = self
             .leaf_sessions
             .iter()
-            .map(|s| s.stats().total_raw_bits)
+            .map(|s| s.stats().total_transmitted_bits)
             .sum();
 
         // ---- leaf tier: streaming Alg. 2 inside each group ----
@@ -212,17 +233,16 @@ impl HierarchyAggregator {
             for (w, grad) in group.iter().enumerate() {
                 let global = g * self.h.per_group + w;
                 let (q, stream) = &mut self.leaf_encoders[global];
-                let wire = q.encode(grad, &mut stream.round(round));
+                let wire = q.encode_coded(grad, &mut stream.round(round), self.codec);
                 // flat comparison is a hypothetical deployment: it never
-                // crosses a session, so it is tallied by hand here
+                // crosses a session, so it is tallied by hand here — under
+                // the SAME codec, so hierarchy-vs-flat compares like with
+                // like on the wire
                 let (qf, sf) = &mut self.flat_encoders[global];
-                flat_dqsg_bits += qf.encode(grad, &mut sf.round(round)).raw_bits();
-                msgs.push(WorkerMsg {
-                    worker: w,
-                    round,
-                    loss: 0.0,
-                    wire,
-                });
+                flat_dqsg_bits += qf
+                    .encode_coded(grad, &mut sf.round(round), self.codec)
+                    .transmitted_bits();
+                msgs.push(WorkerMsg::new(w, round, 0.0, wire));
             }
             let session = &mut self.leaf_sessions[g];
             match &mut self.leaf_faults {
@@ -267,28 +287,23 @@ impl HierarchyAggregator {
         let leaf_after: f64 = self
             .leaf_sessions
             .iter()
-            .map(|s| s.stats().total_raw_bits)
+            .map(|s| s.stats().total_transmitted_bits)
             .sum();
         let leaf_bits = (leaf_after - leaf_before) as usize;
 
         // ---- root tier: leaders' averages, nested against the root ----
-        let root_before = self.root_session.stats().total_raw_bits;
+        let root_before = self.root_session.stats().total_transmitted_bits;
         let mut agg = self.root_session.begin_round();
         for (g, gavg) in group_avgs.iter().enumerate() {
             let Some(gavg) = gavg else { continue };
             let (q, stream) = &mut self.root_encoders[g];
-            let wire = q.encode(gavg, &mut stream.round(round));
-            agg.push(WorkerMsg {
-                worker: g,
-                round,
-                loss: 0.0,
-                wire,
-            })?;
+            let wire = q.encode_coded(gavg, &mut stream.round(round), self.codec);
+            agg.push(WorkerMsg::new(g, round, 0.0, wire))?;
         }
         let root_avg = agg
             .finish()
             .map_err(|e| anyhow::anyhow!("root tier, round {round}: {e}"))?;
-        let root_bits = (self.root_session.stats().total_raw_bits - root_before) as usize;
+        let root_bits = (self.root_session.stats().total_transmitted_bits - root_before) as usize;
 
         // hand the group buffers back to their sessions' scratch pools
         for (g, avg) in group_avgs.into_iter().enumerate() {

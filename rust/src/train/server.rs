@@ -71,12 +71,7 @@ mod tests {
                 let mut q = schemes[p].build();
                 let stream = DitherStream::new(run_seed, p as u32);
                 let wire = q.encode(g, &mut stream.round(round));
-                WorkerMsg {
-                    worker: p,
-                    round,
-                    loss: 0.0,
-                    wire,
-                }
+                WorkerMsg::new(p, round, 0.0, wire)
             })
             .collect()
     }
@@ -167,12 +162,7 @@ mod tests {
         for order in orders {
             let shuffled: Vec<WorkerMsg> = order
                 .iter()
-                .map(|&i| WorkerMsg {
-                    worker: msgs[i].worker,
-                    round: msgs[i].round,
-                    loss: msgs[i].loss,
-                    wire: msgs[i].wire.clone(),
-                })
+                .map(|&i| msgs[i].clone())
                 .collect();
             let mut server2 = Server::new(&schemes, 21, n).unwrap();
             let got = server2.decode_round(&shuffled).unwrap();
@@ -218,12 +208,7 @@ mod tests {
         let patched_crc = crc::checksum(&bytes[..body]).to_le_bytes();
         bytes[body..].copy_from_slice(&patched_crc);
         let tampered = WireMsg::parse(bytes).unwrap();
-        let msgs2 = vec![WorkerMsg {
-            worker: 0,
-            round: 1,
-            loss: 0.0,
-            wire: tampered,
-        }];
+        let msgs2 = vec![WorkerMsg::new(0, 1, 0.0, tampered)];
         let mut server2 = Server::new(&schemes, 5, 500).unwrap();
         let dirty = server2.decode_round(&msgs2).unwrap();
         assert_ne!(clean, dirty);
@@ -238,12 +223,7 @@ mod tests {
         let stream = DitherStream::new(5, 0);
         let mut evil = Scheme::Terngrad.build();
         let wire = evil.encode(&g, &mut stream.round(0));
-        let msgs = vec![WorkerMsg {
-            worker: 0,
-            round: 0,
-            loss: 0.0,
-            wire,
-        }];
+        let msgs = vec![WorkerMsg::new(0, 0, 0.0, wire)];
         let mut server = Server::new(&schemes, 5, 64).unwrap();
         let err = server.decode_round(&msgs).unwrap_err().to_string();
         assert!(err.contains("negotiated"), "{err}");
@@ -297,11 +277,13 @@ mod tests {
 
         let reframed: Vec<WorkerMsg> = msgs
             .iter()
-            .map(|m| WorkerMsg {
-                worker: m.worker,
-                round: m.round,
-                loss: m.loss,
-                wire: WireMsg::parse(m.wire.bytes().to_vec()).unwrap(),
+            .map(|m| {
+                WorkerMsg::new(
+                    m.worker,
+                    m.round,
+                    m.loss,
+                    WireMsg::parse(m.wire.bytes().to_vec()).unwrap(),
+                )
             })
             .collect();
         let mut server2 = Server::new(&schemes, 9, 200).unwrap();

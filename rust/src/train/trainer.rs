@@ -71,6 +71,10 @@ impl TrainReport {
                 "kbits_entropy_per_msg",
                 json::num(self.comm.kbits_per_msg_entropy()),
             ),
+            (
+                "kbits_transmitted_per_msg",
+                json::num(self.comm.kbits_per_msg_transmitted()),
+            ),
             ("rounds_failed", json::num(self.rounds_failed as f64)),
             (
                 "msgs_received",
@@ -147,6 +151,8 @@ impl TrainReport {
             self.comm.messages,
             self.comm.total_raw_bits.to_bits(),
             self.comm.total_entropy_bits.to_bits(),
+            self.comm.total_transmitted_bits.to_bits(),
+            self.comm.metric_fallback_frames,
             self.comm.total_framed_bits.to_bits(),
             self.comm.total_bcast_bits.to_bits(),
             self.comm.dropped_msgs,
@@ -235,6 +241,11 @@ impl Trainer {
                 _ => cfg.scheme,
             })
             .collect();
+        // codec negotiation: a scheme/codec pair the coders cannot carry
+        // is a setup error, never a mid-run panic
+        for s in &schemes {
+            s.validate_codec(cfg.codec)?;
+        }
 
         Ok(Self {
             n_params: info.n_params,
@@ -265,6 +276,9 @@ impl Trainer {
             "{} {} P={} opt={:?}",
             self.cfg.model, base, self.cfg.workers, self.cfg.opt
         );
+        if self.cfg.codec != crate::quant::PayloadCodec::Raw {
+            label.push_str(&format!(" codec={}", self.cfg.codec.label()));
+        }
         if self.cfg.round_policy != crate::comm::RoundPolicy::WaitAll {
             label.push_str(&format!(" policy={}", self.cfg.round_policy.label()));
         }
@@ -335,6 +349,7 @@ impl Trainer {
                         scheme: self.schemes[p],
                         run_seed: cfg.seed,
                         tensor_frames: cfg.tensor_frames,
+                        codec: cfg.codec,
                         task: self.task.clone(),
                     },
                     self.compute.clone(),

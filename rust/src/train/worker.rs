@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use crate::data::{Batch, ImageDataset, TokenDataset};
 use crate::prng::DitherStream;
-use crate::quant::{GradQuantizer, Scheme};
+use crate::quant::{GradQuantizer, PayloadCodec, Scheme};
 use crate::runtime::ComputeHandle;
 
 // The message type lives with the rest of the exchange machinery in
@@ -48,6 +48,8 @@ pub struct WorkerCfg {
     /// Wire-v2 framing: split the flat gradient into this many per-tensor
     /// frames per message (1 = single-frame, the classic layout).
     pub tensor_frames: usize,
+    /// Wire-v3 index-lane codec every uplink message ships under.
+    pub codec: PayloadCodec,
     pub task: TaskData,
 }
 
@@ -145,11 +147,6 @@ fn run_round(
         }
     };
     let slices = crate::quant::frame_slices(&grad, cfg.tensor_frames);
-    let wire = quantizer.encode_tensors(&slices, &mut dither.round(round));
-    Ok(WorkerMsg {
-        worker: cfg.id,
-        round,
-        loss,
-        wire,
-    })
+    let wire = quantizer.encode_tensors_coded(&slices, &mut dither.round(round), cfg.codec);
+    Ok(WorkerMsg::new(cfg.id, round, loss, wire))
 }

@@ -1,0 +1,209 @@
+//! Cross-codec equivalence + ledger-truth acceptance suite for wire v3.
+//!
+//! Pins the three contract points of shipping entropy-coded payloads:
+//!
+//! 1. **Fold invariance** — a session decodes raw, huffman and aac
+//!    messages over the same (gradient, dither) to bit-identical
+//!    aggregates, including rounds that *mix* codecs across workers and
+//!    NDQSG (Alg. 2) scheme mixes.
+//! 2. **Ledger = wire truth** — with `codec = aac`, the session's
+//!    `total_aac_bits` equals the transmitted payload bits exactly, sits
+//!    within 2% of the entropy limit on gradient-like streams, and the
+//!    `transmitted` lane shows the real on-wire saving against base-k.
+//! 3. **Encode-time metrics** — the ledger the session accumulates from
+//!    carried [`ndq::quant::BitMetrics`] equals what the old re-decode
+//!    path (now `WireMsg::derive_metrics`) reconstructs from payload
+//!    bytes, with zero fallbacks — the regression pin that let
+//!    `CommStats` stop re-decoding every message of every round.
+
+use ndq::comm::{Session, WorkerMsg};
+use ndq::prng::DitherStream;
+use ndq::quant::{GradQuantizer, PayloadCodec, Scheme};
+use ndq::testing::cluster::{run_scenario, ClusterScenario};
+
+fn correlated(n: usize, workers: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = ndq::prng::Xoshiro256::new(seed);
+    let base: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.2).collect();
+    (0..workers)
+        .map(|_| base.iter().map(|&b| b + rng.next_normal() * 0.01).collect())
+        .collect()
+}
+
+fn encode_round(
+    schemes: &[Scheme],
+    gs: &[Vec<f32>],
+    run_seed: u64,
+    round: u64,
+    codecs: &[PayloadCodec],
+) -> Vec<WorkerMsg> {
+    gs.iter()
+        .enumerate()
+        .map(|(p, g)| {
+            let mut q = schemes[p].build();
+            let stream = DitherStream::new(run_seed, p as u32);
+            let wire = q.encode_coded(g, &mut stream.round(round), codecs[p % codecs.len()]);
+            WorkerMsg::new(p, round, 0.0, wire)
+        })
+        .collect()
+}
+
+#[test]
+fn aac_run_ledger_is_wire_truth_and_folds_match_raw() {
+    let n = 20_000;
+    let workers = 4;
+    let rounds = 3u64;
+    let schemes = vec![Scheme::Dithered { delta: 1.0 / 3.0 }; workers];
+
+    let mut s_raw = Session::new(&schemes, 11, n).unwrap();
+    let mut s_aac = Session::new(&schemes, 11, n).unwrap();
+    let mut wire_payload_bits = 0u64;
+    for round in 0..rounds {
+        let gs = correlated(n, workers, 100 + round);
+        let raw_msgs = encode_round(&schemes, &gs, 11, round, &[PayloadCodec::Raw]);
+        let aac_msgs = encode_round(&schemes, &gs, 11, round, &[PayloadCodec::Aac]);
+        // the transmitted ledger must equal what the frame headers say
+        // actually crossed the wire
+        for m in &aac_msgs {
+            wire_payload_bits += m.wire.transmitted_bits() as u64;
+        }
+        let a_raw = s_raw.decode_round(&raw_msgs).unwrap();
+        let a_aac = s_aac.decode_round(&aac_msgs).unwrap();
+        assert_eq!(a_raw, a_aac, "round {round}: aac fold diverged from raw");
+    }
+
+    let st = s_aac.stats();
+    assert_eq!(st.metric_fallback_frames, 0);
+    // ledger = wire truth, to the bit
+    assert_eq!(st.total_transmitted_bits, wire_payload_bits as f64);
+    assert_eq!(st.total_aac_bits, st.total_transmitted_bits);
+    // within 2% of the entropy limit on these gradient streams
+    let ratio = st.total_aac_bits / st.total_entropy_bits;
+    assert!((0.98..1.02).contains(&ratio), "aac/entropy = {ratio}");
+    // and the win against fixed-rate base-k is real and recorded
+    assert!(
+        st.total_transmitted_bits < st.total_raw_bits,
+        "coded wire must ship fewer bits than the base-k equivalent"
+    );
+    // the raw-codec session bills transmitted == raw (same indices)
+    let rt = s_raw.stats();
+    assert_eq!(rt.total_transmitted_bits, rt.total_raw_bits);
+    assert_eq!(rt.total_raw_bits, st.total_raw_bits, "Table-1 metric is codec-free");
+    assert_eq!(rt.total_entropy_bits, st.total_entropy_bits);
+}
+
+#[test]
+fn mixed_codec_rounds_fold_identically_including_ndqsg() {
+    let n = 3000;
+    let mixes: Vec<Vec<Scheme>> = vec![
+        vec![Scheme::Dithered { delta: 1.0 / 3.0 }; 3],
+        vec![
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+        ],
+    ];
+    for schemes in mixes {
+        let gs = correlated(n, schemes.len(), 7);
+        let mut uniform = Session::new(&schemes, 3, n).unwrap();
+        let want = uniform
+            .decode_round(&encode_round(&schemes, &gs, 3, 0, &[PayloadCodec::Raw]))
+            .unwrap();
+        // one codec per worker, round-robin: raw, huffman, aac, raw, ...
+        let mixed_msgs = encode_round(
+            &schemes,
+            &gs,
+            3,
+            0,
+            &[PayloadCodec::Raw, PayloadCodec::Huffman, PayloadCodec::Aac],
+        );
+        let mut mixed = Session::new(&schemes, 3, n).unwrap();
+        let got = mixed.decode_round(&mixed_msgs).unwrap();
+        assert_eq!(want, got, "{}-worker mixed-codec round diverged", schemes.len());
+        // arrival order still immaterial with mixed codecs
+        let mut agg_session = Session::new(&schemes, 3, n).unwrap();
+        let mut agg = agg_session.begin_round();
+        for m in mixed_msgs.iter().rev() {
+            agg.push(m.clone()).unwrap();
+        }
+        assert_eq!(agg.finish().unwrap(), want);
+    }
+}
+
+#[test]
+fn session_ledger_equals_rederived_payload_metrics() {
+    // encode-time accounting (what the session records) == the old
+    // decode-the-payload accounting, message for message
+    let n = 5000;
+    let schemes = vec![
+        Scheme::Dithered { delta: 0.5 },
+        Scheme::Qsgd { m: 2 },
+        Scheme::Terngrad,
+        Scheme::OneBit,
+    ];
+    for codec in [PayloadCodec::Raw, PayloadCodec::Huffman, PayloadCodec::Aac] {
+        let gs = correlated(n, schemes.len(), 21);
+        let msgs = encode_round(&schemes, &gs, 5, 0, &[codec]);
+        let mut session = Session::new(&schemes, 5, n).unwrap();
+        session.decode_round(&msgs).unwrap();
+        let st = session.stats();
+
+        let mut raw = 0u64;
+        let mut transmitted = 0u64;
+        let mut entropy = 0f64;
+        let mut aac = 0f64;
+        for m in &msgs {
+            // re-derive from the parsed wire bytes alone — the path the
+            // ledger no longer runs per round
+            let reparsed = ndq::quant::WireMsg::parse(m.wire.bytes().to_vec()).unwrap();
+            let d = reparsed.derive_metrics(codec == PayloadCodec::Aac);
+            assert_eq!(d.fallback_frames, 0);
+            raw += d.raw_bits;
+            transmitted += d.transmitted_bits;
+            entropy += d.entropy_bits;
+            if let Some(a) = d.aac_bits {
+                aac += a as f64;
+            }
+        }
+        assert_eq!(st.total_raw_bits, raw as f64, "{codec:?}: raw ledger");
+        assert_eq!(
+            st.total_transmitted_bits, transmitted as f64,
+            "{codec:?}: transmitted ledger"
+        );
+        assert_eq!(st.total_entropy_bits, entropy, "{codec:?}: entropy ledger");
+        if codec == PayloadCodec::Aac {
+            assert_eq!(st.total_aac_bits, aac, "aac ledger");
+        }
+        assert_eq!(st.metric_fallback_frames, 0);
+    }
+}
+
+#[test]
+fn cluster_training_is_codec_invariant_but_cheaper_on_the_wire() {
+    // end to end through the scenario engine: same seed, raw vs aac —
+    // identical training trajectory, smaller transmitted ledger
+    let base = ClusterScenario {
+        workers: 4,
+        n_params: 1500,
+        rounds: 12,
+        eval_every: 4,
+        ..ClusterScenario::default()
+    };
+    let raw = run_scenario(ClusterScenario { codec: PayloadCodec::Raw, ..base.clone() }).unwrap();
+    let aac = run_scenario(ClusterScenario { codec: PayloadCodec::Aac, ..base.clone() }).unwrap();
+
+    assert_eq!(raw.history.len(), aac.history.len());
+    for (a, b) in raw.history.iter().zip(&aac.history) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "round {}", a.round);
+        assert_eq!(a.eval_loss.to_bits(), b.eval_loss.to_bits(), "round {}", a.round);
+    }
+    assert_eq!(raw.final_eval_loss.to_bits(), aac.final_eval_loss.to_bits());
+    assert_eq!(raw.delivery, aac.delivery);
+    // identical Table-1/entropy ledgers, strictly cheaper wire
+    assert_eq!(raw.comm.total_raw_bits, aac.comm.total_raw_bits);
+    assert_eq!(raw.comm.total_entropy_bits, aac.comm.total_entropy_bits);
+    assert!(aac.comm.total_transmitted_bits < raw.comm.total_transmitted_bits);
+    assert_eq!(aac.comm.total_aac_bits, aac.comm.total_transmitted_bits);
+    assert_eq!(aac.comm.metric_fallback_frames, 0);
+}

@@ -24,12 +24,7 @@ fn make_msgs(schemes: &[Scheme], gs: &[Vec<f32>], run_seed: u64, round: u64) -> 
         .map(|(p, g)| {
             let mut q = schemes[p].build();
             let stream = DitherStream::new(run_seed, p as u32);
-            WorkerMsg {
-                worker: p,
-                round,
-                loss: 0.25,
-                wire: q.encode(g, &mut stream.round(round)),
-            }
+            WorkerMsg::new(p, round, 0.25, q.encode(g, &mut stream.round(round)))
         })
         .collect()
 }

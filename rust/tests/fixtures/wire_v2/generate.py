@@ -1,10 +1,12 @@
 #!/usr/bin/env python3
-"""Golden wire-v2 fixture generator.
+"""Golden wire-v3 fixture generator.
 
 Bit-exact Python replica of the Rust encode pipeline (Philox4x32-10 dither,
-f32 quantization, base-k packing, wire-v2 framing, CRC-32) used to produce
-the checked-in `.hex` snapshots that `tests/wire_v2_conformance.rs` pins the
-byte layout against. Regenerate with:
+f32 quantization, base-k packing, canonical-Huffman and adaptive-arithmetic
+index-lane coding, wire-v3 framing with the payload-codec header byte,
+CRC-32) used to produce the checked-in `.hex` snapshots that
+`tests/wire_v2_conformance.rs` pins the byte layout against. Regenerate
+with:
 
     python3 rust/tests/fixtures/wire_v2/generate.py
 
@@ -146,6 +148,149 @@ def pack_base_k_signed(indices, m, k, w):
         w.push_bits(v, bits)
 
 
+# --- coding/huffman.rs (canonical Huffman, exact tie-break replica) ---------
+
+MAX_CODE_LEN = 24
+
+
+def huffman_code_lengths(freqs):
+    n = len(freqs)
+    live = [s for s in range(n) if freqs[s] > 0]
+    lens = [0] * n
+    if len(live) == 0:
+        return lens
+    if len(live) == 1:
+        lens[live[0]] = 1
+        return lens
+    # heap-free Huffman mirroring the Rust merge loop: stable sort
+    # descending by weight, pop the two smallest (list tail), push merged
+    nodes = [[freqs[s], [s]] for s in live]
+    while len(nodes) > 1:
+        nodes.sort(key=lambda nd: -nd[0])  # stable, like sort_by_key(Reverse)
+        a = nodes.pop()
+        b = nodes.pop()
+        for s in a[1] + b[1]:
+            lens[s] += 1
+        nodes.append([a[0] + b[0], a[1] + b[1]])
+    if any(l > MAX_CODE_LEN for l in lens):
+        bits = max(1, math.ceil(math.log2(len(live))))
+        for s in live:
+            lens[s] = bits
+    return lens
+
+
+def huffman_canonical_codes(lens):
+    order = sorted((s for s in range(len(lens)) if lens[s] > 0),
+                   key=lambda s: (lens[s], s))
+    codes = [(0, 0)] * len(lens)
+    code, prev_len = 0, 0
+    for s in order:
+        code <<= lens[s] - prev_len
+        codes[s] = (code, lens[s])
+        prev_len = lens[s]
+        code += 1
+    return codes
+
+
+def huffman_encode_signed(q, m, w):
+    symbols = [x + m for x in q]
+    alphabet = 2 * m + 1
+    freqs = [0] * alphabet
+    for s in symbols:
+        freqs[s] += 1
+    lens = huffman_code_lengths(freqs)
+    codes = huffman_canonical_codes(lens)
+    for l in lens:
+        w.push_bits(l, 5)
+    for s in symbols:
+        code, ln = codes[s]
+        for i in range(ln - 1, -1, -1):  # MSB-first
+            w.push_bit((code >> i) & 1 == 1)
+
+
+# --- coding/arithmetic.rs (order-0 adaptive arithmetic coder) ---------------
+
+AAC_CODE_BITS = 32
+AAC_TOP = 1 << AAC_CODE_BITS
+AAC_HALF = AAC_TOP // 2
+AAC_QUARTER = AAC_TOP // 4
+AAC_THREE_Q = 3 * AAC_QUARTER
+AAC_MAX_TOTAL = 1 << 16
+AAC_INCREMENT = 32
+
+
+class AacModel:
+    def __init__(self, alphabet):
+        self.freq = [1] * alphabet
+        self.total = alphabet
+
+    def range(self, s):
+        lo = sum(self.freq[:s])
+        return lo, lo + self.freq[s], self.total
+
+    def update(self, s):
+        self.freq[s] += AAC_INCREMENT
+        self.total += AAC_INCREMENT
+        if self.total > AAC_MAX_TOTAL:
+            self.total = 0
+            for i, f in enumerate(self.freq):
+                self.freq[i] = max(f >> 1, 1)
+                self.total += self.freq[i]
+
+
+def aac_encode_signed(q, m, w):
+    symbols = [x + m for x in q]
+    alphabet = 2 * m + 1
+    model = AacModel(alphabet)
+    low, high, pending = 0, AAC_TOP - 1, 0
+
+    def emit(bit):
+        nonlocal pending
+        w.push_bit(bit)
+        while pending > 0:
+            w.push_bit(not bit)
+            pending -= 1
+
+    for s in symbols:
+        c_lo, c_hi, total = model.range(s)
+        span = high - low + 1
+        high = low + span * c_hi // total - 1
+        low = low + span * c_lo // total
+        while True:
+            if high < AAC_HALF:
+                emit(False)
+            elif low >= AAC_HALF:
+                emit(True)
+                low -= AAC_HALF
+                high -= AAC_HALF
+            elif low >= AAC_QUARTER and high < AAC_THREE_Q:
+                pending += 1
+                low -= AAC_QUARTER
+                high -= AAC_QUARTER
+            else:
+                break
+            low <<= 1
+            high = (high << 1) | 1
+        model.update(s)
+    pending += 1
+    if low < AAC_QUARTER:
+        emit(False)
+    else:
+        emit(True)
+
+
+CODEC_RAW, CODEC_HUFFMAN, CODEC_AAC = 0, 1, 2
+
+
+def write_indices_coded(w, codec, indices, m):
+    if codec == CODEC_RAW:
+        pack_base_k_signed(indices, m, 2 * m + 1, w)
+    elif codec == CODEC_HUFFMAN:
+        huffman_encode_signed(indices, m, w)
+    else:
+        aac_encode_signed(indices, m, w)
+
+
 # --- f32 helpers ------------------------------------------------------------
 
 def rha(x):
@@ -188,12 +333,12 @@ def dq_indices(g, delta, m, dither):
     return kappa, idx
 
 
-def enc_dithered(g, delta, m):
+def enc_dithered(g, delta, m, codec=CODEC_RAW):
     d = DitherGen()
     kappa, idx = dq_indices(g, delta, m, d)
     w = BitWriter()
     w.push_f32(kappa)
-    pack_base_k_signed(idx, m, 2 * m + 1, w)
+    write_indices_coded(w, codec, idx, m)
     return w, m, 1
 
 
@@ -276,7 +421,7 @@ def enc_onebit(g):
     return w, 0, 2
 
 
-def enc_nested(g, d1, ratio, alpha):
+def enc_nested(g, d1, ratio, alpha, codec=CODEC_RAW):
     d = DitherGen()
     m = (ratio - 1) // 2
     kappa = linf(g)
@@ -292,17 +437,18 @@ def enc_nested(g, d1, ratio, alpha):
         idx.append(max(-m, min(m, rha(np.float32(s) * inv_d1))))
     w = BitWriter()
     w.push_f32(kappa)
-    pack_base_k_signed(idx, m, ratio, w)
+    write_indices_coded(w, codec, idx, m)
     return w, m, 1
 
 
 # --- wire-v2 framing (src/quant/mod.rs) -------------------------------------
 
-def frame_message(scheme_id, frames):
+def frame_message(scheme_id, frames, codec=CODEC_RAW):
     """frames: list of (n, m, n_scales, BitWriter)."""
     out = bytearray(b"NQ")
-    out.append(2)              # version
+    out.append(3)              # version
     out.append(scheme_id)
+    out.append(codec)          # payload codec byte (wire v3)
     out += struct.pack("<I", len(frames))
     for n, m, n_scales, w in frames:
         out += struct.pack("<Q", n)
@@ -315,12 +461,12 @@ def frame_message(scheme_id, frames):
     return bytes(out)
 
 
-def emit(name, scheme_id, enc):
+def emit(name, scheme_id, enc, codec=CODEC_RAW):
     w, m, n_scales = enc
-    msg = frame_message(scheme_id, [(len(G), m, n_scales, w)])
+    msg = frame_message(scheme_id, [(len(G), m, n_scales, w)], codec)
     path = OUT_DIR / f"{name}.hex"
     path.write_text(msg.hex() + "\n")
-    print(f"{name:10s} {len(msg):4d} bytes  {msg.hex()}")
+    print(f"{name:14s} {len(msg):4d} bytes  {msg.hex()}")
 
 
 def main():
@@ -331,6 +477,10 @@ def main():
     emit("terngrad", 4, enc_terngrad(G))
     emit("onebit", 5, enc_onebit(G))
     emit("nested", 6, enc_nested(G, 0.25, 3, 1.0))
+    # codec-byte variants: same gradient/dither, entropy-coded index lanes
+    emit("dqsg_huffman", 1, enc_dithered(G, 1.0, 1, CODEC_HUFFMAN), CODEC_HUFFMAN)
+    emit("dqsg_aac", 1, enc_dithered(G, 1.0, 1, CODEC_AAC), CODEC_AAC)
+    emit("nested_aac", 6, enc_nested(G, 0.25, 3, 1.0, CODEC_AAC), CODEC_AAC)
 
 
 if __name__ == "__main__":

@@ -122,12 +122,7 @@ fn make_msgs(
             let stream = DitherStream::new(run_seed, p as u32);
             let slices = frame_slices(g, tensor_frames);
             let wire = q.encode_tensors(&slices, &mut stream.round(round));
-            WorkerMsg {
-                worker: p,
-                round,
-                loss: 0.0,
-                wire,
-            }
+            WorkerMsg::new(p, round, 0.0, wire)
         })
         .collect()
 }

@@ -277,12 +277,7 @@ fn ndqsg_matches_dqsg_variance_at_fewer_bits() {
             .map(|(p, g)| {
                 let mut q = schemes[p].build();
                 let stream = DitherStream::new(9, p as u32);
-                WorkerMsg {
-                    worker: p,
-                    round: 0,
-                    loss: 0.0,
-                    wire: q.encode(g, &mut stream.round(0)),
-                }
+                WorkerMsg::new(p, 0, 0.0, q.encode(g, &mut stream.round(0)))
             })
             .collect()
     };

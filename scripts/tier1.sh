@@ -53,4 +53,37 @@ cargo run --release --quiet -- cluster \
     --fault-plan "drop:0.15;straggle:w2x6;corrupt:w1@r3" \
     --round-policy quorum:5
 
+# Entropy-coded wire smoke: the same degraded cluster must fold identically
+# when every worker ships aac-coded payloads (cross-codec equivalence is
+# pinned by tests; this exercises it through the real CLI).
+echo "== ndq cluster aac-codec smoke =="
+cargo run --release --quiet -- cluster \
+    --workers 8 --rounds 20 --codec aac \
+    --scheme dqsg:0.333333 --scheme-p2 nested:0.333333:3:1.0 \
+    --fault-plan "drop:0.15;straggle:w2x6;corrupt:w1@r3" \
+    --round-policy quorum:5
+
+# Wire-path bench smoke in quick mode: perf_coding always runs (no
+# artifacts needed); table2_entropy_bits self-skips when artifacts are
+# absent. Each run's results are appended to BENCH_wire.json as one
+# JSON-lines record (the rows inside are stats::bench::to_json /
+# save_json output), so the perf trajectory accrues across commits.
+echo "== wire bench smoke (quick mode) =="
+# stale results from an earlier run must not be re-attributed to this
+# commit when a bench self-skips (e.g. table2 without artifacts)
+rm -f target/ndq-bench/perf_coding.json target/ndq-bench/table2.json
+NDQ_BENCH_FAST=1 cargo bench --bench perf_coding
+NDQ_BENCH_FAST=1 cargo bench --bench table2_entropy_bits
+mkdir -p target/ndq-bench
+BENCH_TS="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
+GIT_REV="$(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
+for f in perf_coding table2; do
+    if [[ -f "target/ndq-bench/$f.json" ]]; then
+        printf '{"ts":"%s","rev":"%s","bench":"%s","results":%s}\n' \
+            "$BENCH_TS" "$GIT_REV" "$f" "$(cat "target/ndq-bench/$f.json")" \
+            >> target/ndq-bench/BENCH_wire.json
+        echo "appended $f to target/ndq-bench/BENCH_wire.json"
+    fi
+done
+
 echo "tier-1 gate passed"
