@@ -43,9 +43,83 @@ pub use self::faults::{ChannelEvent, Delivery, Fault, FaultChannel, FaultPlan};
 pub use self::session::{
     Exchange, ExchangeError, RoundAggregator, RoundOutcome, RoundPolicy, Session,
 };
-pub use self::stats::CommStats;
+pub use self::stats::{CommStats, SpecLane};
 
-use crate::quant::{BitMetrics, WireMsg};
+use crate::quant::{BitMetrics, PayloadCodec, Scheme, WireMsg};
+
+/// What every worker of a round encodes under: the negotiated scheme pair
+/// (P1, and optionally a second-half P2 scheme for Alg.-2 mixes) plus the
+/// wire-v3 payload codec. A `RoundSpec` flows leader -> workers at round
+/// start (inside [`crate::train::worker::WorkerCmd::Round`]) and is applied
+/// to the receiving [`Session`] via [`Session::apply_spec`] — the wire-v3
+/// header already carries scheme + codec per message, so per-round spec
+/// changes need **no wire-format bump**; the session merely re-keys its
+/// negotiation table and bills the round's bits under the spec's ledger
+/// lane ([`CommStats::per_spec`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundSpec {
+    /// Scheme for P1 workers (and all workers when `scheme_p2` is unset).
+    pub scheme: Scheme,
+    /// Scheme for the second worker half (NDQSG group splits, Alg. 2).
+    pub scheme_p2: Option<Scheme>,
+    /// Index-lane codec every uplink of the round ships under.
+    pub codec: PayloadCodec,
+}
+
+impl RoundSpec {
+    /// A single-scheme raw-codec spec.
+    pub fn uniform(scheme: Scheme) -> RoundSpec {
+        RoundSpec {
+            scheme,
+            scheme_p2: None,
+            codec: PayloadCodec::Raw,
+        }
+    }
+
+    /// The scheme worker `p` of `workers` encodes under — the same
+    /// "second half is P2" split the trainers have always used.
+    pub fn worker_scheme(&self, p: usize, workers: usize) -> Scheme {
+        match self.scheme_p2 {
+            Some(s2) if p >= workers / 2 => s2,
+            _ => self.scheme,
+        }
+    }
+
+    /// The full per-worker scheme table for a `workers`-wide round.
+    pub fn worker_schemes(&self, workers: usize) -> Vec<Scheme> {
+        (0..workers).map(|p| self.worker_scheme(p, workers)).collect()
+    }
+
+    /// Codec negotiation for both groups — a spec the coders cannot carry
+    /// is a setup error, never a mid-round panic.
+    pub fn validate(&self) -> crate::Result<()> {
+        self.scheme.validate_codec(self.codec)?;
+        if let Some(s2) = self.scheme_p2 {
+            s2.validate_codec(self.codec)?;
+        }
+        Ok(())
+    }
+
+    /// Re-parameterize both groups to a `k`-level alphabet (see
+    /// [`Scheme::with_levels`]) and re-validate against the codec.
+    pub fn with_levels(&self, k: u32) -> crate::Result<RoundSpec> {
+        let spec = RoundSpec {
+            scheme: self.scheme.with_levels(k)?,
+            scheme_p2: self.scheme_p2.map(|s| s.with_levels(k)).transpose()?,
+            codec: self.codec,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Ledger-lane key: scheme(+scheme_p2)@codec.
+    pub fn label(&self) -> String {
+        match self.scheme_p2 {
+            Some(s2) => format!("{}+{}@{}", self.scheme.label(), s2.label(), self.codec.label()),
+            None => format!("{}@{}", self.scheme.label(), self.codec.label()),
+        }
+    }
+}
 
 /// A worker's per-round result message — exactly what crosses the
 /// "network": the framed wire bytes plus the routing envelope (worker id +

@@ -35,7 +35,7 @@
 //! [`crate::quant::GradQuantizer::decode_frame_into`]).
 
 use super::faults::{ChannelEvent, Delivery, Fault};
-use super::{CommStats, WorkerMsg};
+use super::{CommStats, RoundSpec, WorkerMsg};
 use crate::prng::DitherStream;
 use crate::quant::{GradQuantizer, Scheme, SchemeId, SchemeRegistry, WireMsg};
 
@@ -152,6 +152,13 @@ pub struct Session {
     streams: Vec<DitherStream>,
     n_params: usize,
     stats: CommStats,
+    /// Ledger lane every accepted upload is billed under — the label of
+    /// the spec currently negotiated (see [`Session::apply_spec`]).
+    spec_label: String,
+    /// The [`RoundSpec`] the current negotiation table was built from
+    /// (`None` until the first [`Session::apply_spec`] — constructor-built
+    /// sessions are keyed by a raw scheme table instead).
+    current_spec: Option<RoundSpec>,
     /// Workers the fault channel has permanently disconnected: excluded
     /// from every later round's `expected` count (persists across rounds).
     dead: Vec<bool>,
@@ -225,6 +232,8 @@ impl Session {
             streams,
             n_params,
             stats: CommStats::new(),
+            spec_label: schemes_label(schemes),
+            current_spec: None,
             dead: vec![false; workers],
             avg: vec![0f32; n_params],
             count: 0,
@@ -244,6 +253,62 @@ impl Session {
     /// Number of negotiated workers.
     pub fn workers(&self) -> usize {
         self.worker_ids.len()
+    }
+
+    /// Re-key the negotiation table for a new per-worker scheme table
+    /// without touching anything that persists across specs: the
+    /// per-worker dither streams (keyed by `(run_seed, worker)` — scheme-
+    /// independent by Alg. 1), the [`CommStats`] ledger, dead-worker
+    /// tracking, and every pooled decode buffer. Accepted uploads are
+    /// billed under `label`'s ledger lane from here on.
+    ///
+    /// Must be called between rounds (the next `begin_round` /
+    /// `begin_exchange` resets any abandoned round state anyway) — this is
+    /// how per-round adaptive quantization re-negotiates without
+    /// reallocating the session.
+    pub fn set_schemes(&mut self, schemes: &[Scheme], label: &str) -> crate::Result<()> {
+        anyhow::ensure!(
+            schemes.len() == self.worker_ids.len(),
+            "spec covers {} workers, session negotiated {}",
+            schemes.len(),
+            self.worker_ids.len()
+        );
+        self.registry = SchemeRegistry::from_schemes(schemes)?;
+        self.worker_ids.clear();
+        self.worker_ids.extend(schemes.iter().map(|s| s.id()));
+        self.in_p1.clear();
+        self.in_p1.extend(schemes.iter().map(|s| !s.needs_side_info()));
+        self.p1_workers.clear();
+        self.p1_workers
+            .extend((0..schemes.len()).filter(|&p| self.in_p1[p]));
+        self.p2_workers.clear();
+        self.p2_workers
+            .extend((0..schemes.len()).filter(|&p| !self.in_p1[p]));
+        self.spec_label.clear();
+        self.spec_label.push_str(label);
+        self.current_spec = None;
+        Ok(())
+    }
+
+    /// Apply a [`RoundSpec`]: validate scheme/codec negotiation, then
+    /// re-key via [`Session::set_schemes`] under the spec's ledger label.
+    /// A no-op when `spec` is already the active negotiation (the fixed-
+    /// policy fast path pays nothing per round).
+    pub fn apply_spec(&mut self, spec: &RoundSpec) -> crate::Result<()> {
+        if self.current_spec.as_ref() == Some(spec) {
+            return Ok(());
+        }
+        spec.validate()?;
+        let schemes = spec.worker_schemes(self.worker_ids.len());
+        self.set_schemes(&schemes, &spec.label())?;
+        self.current_spec = Some(*spec);
+        Ok(())
+    }
+
+    /// The [`RoundSpec`] currently negotiated, when the session is driven
+    /// by specs (see [`Session::apply_spec`]).
+    pub fn current_spec(&self) -> Option<&RoundSpec> {
+        self.current_spec.as_ref()
     }
 
     /// Gradient dimensionality every message must carry.
@@ -380,7 +445,8 @@ impl Session {
             wire.scheme
         );
         let metrics = crate::quant::BitMetrics::for_wire(wire);
-        self.stats.record_upload(wire.framed_bits(), &metrics);
+        self.stats
+            .record_upload_for(&self.spec_label, wire.framed_bits(), &metrics);
         let mut gen = self.streams[worker].round(round);
         self.registry
             .decode_into(wire, &mut gen, None, &mut self.decode_buf)?;
@@ -451,7 +517,7 @@ impl Session {
         self.seen[msg.worker] = true;
         self.msgs_seen += 1;
         self.stats
-            .record_upload(msg.wire.framed_bits(), &msg.metrics);
+            .record_upload_for(&self.spec_label, msg.wire.framed_bits(), &msg.metrics);
 
         if self.in_p1[msg.worker] {
             // P1: decode now (order-free), fold as soon as canonical
@@ -788,6 +854,24 @@ impl Exchange<'_> {
     }
 }
 
+/// Default ledger label for a constructor-built (spec-less) session: the
+/// distinct scheme labels of the negotiation table, joined in worker order.
+fn schemes_label(schemes: &[Scheme]) -> String {
+    let mut label = String::new();
+    let mut seen: Vec<String> = Vec::new();
+    for s in schemes {
+        let l = s.label();
+        if !seen.contains(&l) {
+            if !label.is_empty() {
+                label.push('+');
+            }
+            label.push_str(&l);
+            seen.push(l);
+        }
+    }
+    label
+}
+
 /// Running mean: avg_{k+1} = avg_k + (g - avg_k) / (k+1).
 ///
 /// This exact update (and the canonical fold order above) is what the
@@ -981,6 +1065,58 @@ mod tests {
             .unwrap();
         assert_eq!(via_session, direct);
         assert_eq!(session.stats().messages, 1);
+    }
+
+    #[test]
+    fn apply_spec_rekeys_without_losing_session_state() {
+        use crate::quant::PayloadCodec;
+        let n = 800;
+        let base = crate::comm::RoundSpec {
+            scheme: Scheme::Dithered { delta: 1.0 },
+            scheme_p2: Some(Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 }),
+            codec: PayloadCodec::Raw,
+        };
+        let mut session = Session::new(&base.worker_schemes(4), 13, n).unwrap();
+        for (round, k) in [(0u64, 3u32), (1, 7), (2, 3)] {
+            let spec = base.with_levels(k).unwrap();
+            session.apply_spec(&spec).unwrap();
+            assert_eq!(session.current_spec(), Some(&spec));
+            let schemes = spec.worker_schemes(4);
+            let gs = correlated(n, 4, 900 + round);
+            let msgs: Vec<WorkerMsg> = gs
+                .iter()
+                .enumerate()
+                .map(|(p, g)| {
+                    let mut q = schemes[p].build();
+                    let stream = DitherStream::new(13, p as u32);
+                    WorkerMsg::new(p, round, 0.0, q.encode(g, &mut stream.round(round)))
+                })
+                .collect();
+            // a fresh session built directly from the re-leveled schemes
+            // must agree bit-for-bit: re-keying == rebuilding
+            let mut fresh = Session::new(&schemes, 13, n).unwrap();
+            let want = fresh.decode_round(&msgs).unwrap();
+            let got = session.decode_round(&msgs).unwrap();
+            assert_eq!(got, want, "re-keyed session diverged at k={k}");
+            session.recycle(got);
+        }
+        // ledger: one lane per distinct spec, lanes sum to the totals
+        let stats = session.stats();
+        assert_eq!(stats.messages, 12);
+        assert_eq!(stats.per_spec.len(), 2, "{:?}", stats.per_spec.keys());
+        let lane_msgs: u64 = stats.per_spec.values().map(|l| l.messages).sum();
+        assert_eq!(lane_msgs, stats.messages);
+        let lane_tx: f64 = stats.per_spec.values().map(|l| l.transmitted_bits).sum();
+        assert_eq!(lane_tx, stats.total_transmitted_bits);
+        // a message under the retired spec is now rejected (negotiation moved)
+        let old = base.with_levels(7).unwrap().worker_schemes(4);
+        let g = correlated(n, 1, 99).remove(0);
+        let mut q = old[0].build();
+        let wire = q.encode(&g, &mut DitherStream::new(13, 0).round(3));
+        let mut agg = session.begin_round();
+        // k=7 DQSG frames still carry SchemeId::Dithered, so the scheme-id
+        // gate passes and the frame-level m check must refuse instead
+        assert!(agg.push(WorkerMsg::new(0, 3, 0.0, wire)).is_err());
     }
 
     #[test]

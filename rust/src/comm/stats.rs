@@ -18,8 +18,25 @@
 //! by `push`/`decode_message` is tallied there, so the three aggregation
 //! paths cannot drift apart in what they count.
 
+use std::collections::BTreeMap;
+
 use crate::quant::BitMetrics;
 use crate::stats::Running;
+
+/// One [`RoundSpec`](super::RoundSpec) lane of the ledger: what a run's
+/// messages cost under one particular scheme/codec negotiation. Mixed-level
+/// runs (per-round adaptive quantization) bill every message into the lane
+/// of the spec it was encoded under, so the ledger stays exact per spec:
+/// each lane equals the sum of its messages' encode-time
+/// [`BitMetrics`] and the lanes sum to the run totals.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct SpecLane {
+    pub messages: u64,
+    /// Payload bits actually shipped under the lane's codec.
+    pub transmitted_bits: f64,
+    /// Fixed-rate base-k equivalent (Table 1), whatever codec shipped.
+    pub raw_bits: f64,
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct CommStats {
@@ -41,6 +58,12 @@ pub struct CommStats {
     pub bcast: Running,
     pub total_bcast_bits: f64,
     pub messages: u64,
+    /// Per-[`RoundSpec`](super::RoundSpec) ledger lanes, keyed by the
+    /// spec's label. Populated by [`CommStats::record_upload_for`] (what a
+    /// [`super::Session`] calls for every accepted upload); uploads
+    /// recorded through the label-less [`CommStats::record_upload`] go to
+    /// the totals only.
+    pub per_spec: BTreeMap<String, SpecLane>,
     /// Frames whose ledger entry fell back to payload-size accounting
     /// because per-lane metrics were not derivable (malformed index lane,
     /// or a message that reached the ledger without its encode-time
@@ -105,6 +128,17 @@ impl CommStats {
         }
         self.metric_fallback_frames += m.fallback_frames as u64;
         self.messages += 1;
+    }
+
+    /// [`CommStats::record_upload`], additionally billed into the ledger
+    /// lane of the [`RoundSpec`](super::RoundSpec) labelled `spec` — the
+    /// per-spec accounting that keeps mixed-level runs ledger-exact.
+    pub fn record_upload_for(&mut self, spec: &str, framed_bits: usize, m: &BitMetrics) {
+        self.record_upload(framed_bits, m);
+        let lane = self.per_spec.entry(spec.to_string()).or_default();
+        lane.messages += 1;
+        lane.transmitted_bits += m.transmitted_bits as f64;
+        lane.raw_bits += m.raw_bits as f64;
     }
 
     pub fn record_broadcast(&mut self, bits: f64) {
@@ -205,5 +239,40 @@ mod tests {
         assert_eq!(stats.total_aac_bits, stats.total_transmitted_bits);
         // and the coded wire genuinely shipped fewer bits than base-k
         assert!(stats.total_transmitted_bits < stats.total_raw_bits);
+    }
+
+    #[test]
+    fn per_spec_lanes_sum_to_totals() {
+        use crate::quant::PayloadCodec;
+        let mut stats = CommStats::new();
+        let mut rng = crate::prng::Xoshiro256::new(7);
+        let g: Vec<f32> = (0..4_000).map(|_| rng.next_normal() * 0.1).collect();
+        let stream = DitherStream::new(0, 0);
+        for (round, (scheme, label)) in [
+            (Scheme::Dithered { delta: 1.0 }, "k3"),
+            (Scheme::Dithered { delta: 1.0 }, "k3"),
+            (Scheme::Dithered { delta: 1.0 / 3.0 }, "k7"),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mut q = scheme.build();
+            let msg = q.encode_coded(&g, &mut stream.round(round as u64), PayloadCodec::Raw);
+            let m = *msg.carried_metrics().unwrap();
+            stats.record_upload_for(label, msg.framed_bits(), &m);
+        }
+        assert_eq!(stats.per_spec.len(), 2);
+        assert_eq!(stats.per_spec["k3"].messages, 2);
+        assert_eq!(stats.per_spec["k7"].messages, 1);
+        let lane_msgs: u64 = stats.per_spec.values().map(|l| l.messages).sum();
+        let lane_tx: f64 = stats.per_spec.values().map(|l| l.transmitted_bits).sum();
+        let lane_raw: f64 = stats.per_spec.values().map(|l| l.raw_bits).sum();
+        assert_eq!(lane_msgs, stats.messages);
+        assert_eq!(lane_tx, stats.total_transmitted_bits);
+        assert_eq!(lane_raw, stats.total_raw_bits);
+        // the two lanes genuinely differ (7-level costs more than 3-level)
+        assert!(
+            stats.per_spec["k7"].transmitted_bits > stats.per_spec["k3"].transmitted_bits / 2.0
+        );
     }
 }

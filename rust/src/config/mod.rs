@@ -2,9 +2,10 @@
 //! simple `key = value` config files, mirroring what the paper's §4 setup
 //! describes (models, workers, optimizer, batch split, quantizer per group).
 
-use crate::comm::{FaultPlan, RoundPolicy};
+use crate::comm::{FaultPlan, RoundPolicy, RoundSpec};
 use crate::quant::{PayloadCodec, Scheme};
 use crate::sim::LinkModel;
+use crate::train::engine::LevelPolicy;
 use std::collections::BTreeMap;
 
 /// Optimizer choice (paper uses SGD and Adam, lr decay 0.98/epoch).
@@ -70,6 +71,11 @@ pub struct TrainConfig {
     /// Wire-v3 index-lane codec for every uplink message (`raw` ships
     /// base-k packed lanes; `huffman`/`aac` ship entropy-coded lanes).
     pub codec: PayloadCodec,
+    /// Per-round quantization-level controller (`fixed` keeps the
+    /// configured scheme every round — the historical behaviour;
+    /// `schedule:R=K,…` / `norm-adaptive:KMIN:KMAX` re-level the round's
+    /// [`RoundSpec`] on the fly).
+    pub levels_policy: LevelPolicy,
     /// Deterministic fault schedule applied between workers and server
     /// (`None` = perfect network, the historical behaviour).
     pub fault_plan: Option<FaultPlan>,
@@ -99,6 +105,7 @@ impl Default for TrainConfig {
             quantize_broadcast: false,
             tensor_frames: 1,
             codec: PayloadCodec::Raw,
+            levels_policy: LevelPolicy::Fixed,
             fault_plan: None,
             round_policy: RoundPolicy::WaitAll,
             link: LinkModel::default(),
@@ -118,6 +125,17 @@ impl TrainConfig {
         } else {
             // largest power of two <= req (divides 32)
             1 << (usize::BITS - 1 - req.leading_zeros())
+        }
+    }
+
+    /// The round-0 negotiation: the configured scheme pair + codec as a
+    /// [`RoundSpec`] — what a `fixed` levels policy ships every round and
+    /// what adaptive policies re-level from.
+    pub fn base_spec(&self) -> RoundSpec {
+        RoundSpec {
+            scheme: self.scheme,
+            scheme_p2: self.scheme_p2,
+            codec: self.codec,
         }
     }
 
@@ -167,6 +185,7 @@ impl TrainConfig {
                     anyhow::ensure!(self.tensor_frames >= 1, "tensor_frames must be >= 1");
                 }
                 "codec" => self.codec = PayloadCodec::parse(v)?,
+                "levels_policy" => self.levels_policy = LevelPolicy::parse(v)?,
                 "fault_plan" => {
                     self.fault_plan = if v == "none" {
                         None
@@ -242,6 +261,36 @@ mod tests {
         assert_eq!(c.codec, PayloadCodec::Huffman);
         kv.insert("codec".to_string(), "gzip".to_string());
         assert!(c.apply_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn levels_policy_key() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.levels_policy, LevelPolicy::Fixed);
+        let mut kv = BTreeMap::new();
+        // the value itself contains '=' — the key=value splitter must only
+        // split on the first one (config files pass this through verbatim)
+        kv.insert(
+            "levels_policy".to_string(),
+            "schedule:0=15,10=3".to_string(),
+        );
+        c.apply_kv(&kv).unwrap();
+        assert_eq!(
+            c.levels_policy,
+            LevelPolicy::Schedule(vec![(0, 15), (10, 3)])
+        );
+        kv.insert("levels_policy".to_string(), "norm-adaptive:3:15".to_string());
+        c.apply_kv(&kv).unwrap();
+        assert_eq!(
+            c.levels_policy,
+            LevelPolicy::NormAdaptive { k_min: 3, k_max: 15 }
+        );
+        kv.insert("levels_policy".to_string(), "sometimes".to_string());
+        assert!(c.apply_kv(&kv).is_err());
+        // base_spec mirrors the scheme pair + codec
+        let spec = c.base_spec();
+        assert_eq!(spec.scheme, c.scheme);
+        assert_eq!(spec.codec, c.codec);
     }
 
     #[test]

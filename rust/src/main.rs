@@ -26,6 +26,7 @@ use ndq::prng::DitherStream;
 use ndq::quant::{frame_slices, GradQuantizer, PayloadCodec, Scheme};
 use ndq::sim::LinkModel;
 use ndq::testing::cluster::{ClusterHarness, ClusterScenario};
+use ndq::train::LevelPolicy;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -71,6 +72,11 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
         .opt("eval-every", "50", "evaluate every N rounds")
         .opt("tensor-frames", "1", "wire-v2 per-tensor frames per uplink message")
         .opt("codec", "raw", "wire-v3 index-lane codec: raw|huffman|aac")
+        .opt(
+            "levels-policy",
+            "fixed",
+            "per-round levels: fixed|schedule:R0=K0,R1=K1,..|norm-adaptive:KMIN:KMAX",
+        )
         .opt("fault-plan", "none", "fault spec, e.g. drop:0.1;straggle:w2x8 (none = perfect link)")
         .opt("round-policy", "waitall", "waitall|quorum:K|deadline:SECS")
         .opt("link", "gigabit", "simulated link: gigabit|10g|LAT_S:BW_BPS")
@@ -97,6 +103,7 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
     cfg.tensor_frames = args.get_usize("tensor-frames")?;
     anyhow::ensure!(cfg.tensor_frames >= 1, "--tensor-frames must be >= 1");
     cfg.codec = PayloadCodec::parse(&args.get("codec"))?;
+    cfg.levels_policy = LevelPolicy::parse(&args.get("levels-policy"))?;
     let plan = args.get("fault-plan");
     cfg.fault_plan = if plan == "none" {
         None
@@ -121,6 +128,7 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
         report.wall_secs
     );
     print_fault_summary(&report);
+    print_spec_lanes(&report);
     let out = args.get("report");
     if !out.is_empty() {
         std::fs::write(&out, report.to_json().to_string())?;
@@ -158,12 +166,22 @@ fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
     .opt("scheme", "dqsg:0.333333", "P1 scheme (see `ndq train --help`)")
     .opt("scheme-p2", "none", "scheme for the second worker half (NDQSG mixes)")
     .opt("codec", "raw", "wire-v3 index-lane codec: raw|huffman|aac")
+    .opt(
+        "levels-policy",
+        "fixed",
+        "per-round levels: fixed|schedule:R0=K0,R1=K1,..|norm-adaptive:KMIN:KMAX",
+    )
     .opt("seed", "42", "scenario seed (gradients + dither + fault decisions)")
     .opt("fault-plan", "none", "fault spec, e.g. drop:0.1;straggle:w2x8")
     .opt("round-policy", "waitall", "waitall|quorum:K|deadline:SECS")
     .opt("link", "gigabit", "simulated link: gigabit|10g|LAT_S:BW_BPS")
     .opt("lr", "0.25", "step size on the synthetic quadratic")
     .opt("report", "", "write the JSON report to this path")
+    .opt(
+        "bench-append",
+        "",
+        "append one JSON-line perf record (rounds/sec, kbits/round, final loss) to this file",
+    )
     .parse_from(argv)?;
 
     let p2 = args.get("scheme-p2");
@@ -183,6 +201,7 @@ fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
         policy: RoundPolicy::parse(&args.get("round-policy"))?,
         link: LinkModel::parse(&args.get("link"))?,
         codec: PayloadCodec::parse(&args.get("codec"))?,
+        levels_policy: LevelPolicy::parse(&args.get("levels-policy"))?,
         lr: args.get_f32("lr")?,
         ..ClusterScenario::default()
     };
@@ -201,11 +220,67 @@ fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
         report.fingerprint(),
     );
     print_fault_summary(&report);
+    print_spec_lanes(&report);
     let out = args.get("report");
     if !out.is_empty() {
         std::fs::write(&out, report.to_json().to_string())?;
         println!("report written to {out}");
     }
+    let bench = args.get("bench-append");
+    if !bench.is_empty() {
+        append_bench_line(&bench, &report)?;
+        println!("bench line appended to {bench}");
+    }
+    Ok(())
+}
+
+/// Per-spec ledger lanes — the per-round level plan made visible: one line
+/// per distinct RoundSpec the run negotiated (only printed for mixed runs).
+fn print_spec_lanes(report: &ndq::train::TrainReport) {
+    if report.comm.per_spec.len() <= 1 {
+        return;
+    }
+    println!("  ledger lanes (per negotiated spec):");
+    for (label, lane) in &report.comm.per_spec {
+        println!(
+            "    {label:<40} {:>6} msgs  {:>10.1} Kbit tx  {:>10.1} Kbit raw-equiv",
+            lane.messages,
+            lane.transmitted_bits / 1000.0,
+            lane.raw_bits / 1000.0,
+        );
+    }
+}
+
+/// Append one JSON-line perf record for the cross-PR training-perf
+/// trajectory (`BENCH_train.json` at the repo root — see scripts/tier1.sh).
+fn append_bench_line(path: &str, report: &ndq::train::TrainReport) -> ndq::Result<()> {
+    use std::io::Write as _;
+    let rounds_run = report.delivery.len().max(1);
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let rev = std::env::var("NDQ_BENCH_REV").unwrap_or_else(|_| "unknown".into());
+    // a run that never reached an eval point has final_loss = NaN, which
+    // is not a JSON token — emit null so one degraded run cannot poison
+    // the whole JSON-lines trajectory file
+    let final_loss = if report.final_eval_loss.is_finite() {
+        format!("{:.6}", report.final_eval_loss)
+    } else {
+        "null".to_string()
+    };
+    let line = format!(
+        "{{\"ts\":{ts},\"rev\":\"{rev}\",\"label\":\"{}\",\"rounds_per_sec\":{:.3},\"transmitted_kbits_per_round\":{:.3},\"final_loss\":{final_loss},\"fingerprint\":\"{:016x}\"}}\n",
+        report.config_label.replace('"', "'"),
+        rounds_run as f64 / report.wall_secs.max(1e-9),
+        report.comm.total_transmitted_bits / 1000.0 / rounds_run as f64,
+        report.fingerprint(),
+    );
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    f.write_all(line.as_bytes())?;
     Ok(())
 }
 

@@ -1038,6 +1038,56 @@ impl Scheme {
         Ok(())
     }
 
+    /// Re-parameterize this scheme to a `k`-level index alphabet (`k` odd,
+    /// >= 3) — the per-round "levels dial" of the paper's
+    /// levels-vs-training-time trade-off, exercised by
+    /// [`crate::train::engine::LevelPolicy`]:
+    ///
+    /// * DQSG / partitioned DQSG: `M = (k-1)/2`, `Delta = 1/M` (the
+    ///   partition count is preserved);
+    /// * QSGD: `M = (k-1)/2`;
+    /// * NDQSG: the nested ratio becomes `k` (fine step `d1` and shrinkage
+    ///   `alpha` preserved) — `k` IS the wire alphabet for nested frames;
+    /// * TernGrad: only `k == 3` is representable;
+    /// * Baseline / one-bit carry no index alphabet and are rejected.
+    ///
+    /// The returned scheme's [`Scheme::alphabet`] is exactly `k`, so codec
+    /// negotiation ([`Scheme::validate_codec`]) composes: re-level first,
+    /// then validate against the payload codec.
+    pub fn with_levels(&self, k: u32) -> crate::Result<Scheme> {
+        anyhow::ensure!(
+            k >= 3 && k % 2 == 1,
+            "quantization levels must be odd and >= 3 (got {k}); the wire \
+             alphabet is symmetric around zero"
+        );
+        let m = ((k - 1) / 2) as f32;
+        let scheme = match *self {
+            Scheme::Baseline => {
+                anyhow::bail!("baseline ships raw f32s — it has no quantization-level dial")
+            }
+            Scheme::OneBit => {
+                anyhow::bail!("one-bit SGD ships sign bits — it has no quantization-level dial")
+            }
+            Scheme::Terngrad => {
+                anyhow::ensure!(k == 3, "TernGrad is a fixed 3-level scheme (got k={k})");
+                Scheme::Terngrad
+            }
+            Scheme::Dithered { .. } => Scheme::Dithered { delta: 1.0 / m },
+            Scheme::DitheredPartitioned { k: parts, .. } => {
+                Scheme::DitheredPartitioned { delta: 1.0 / m, k: parts }
+            }
+            Scheme::Qsgd { .. } => Scheme::Qsgd { m: m as i32 },
+            Scheme::Nested { d1, alpha, .. } => Scheme::Nested { d1, ratio: k, alpha },
+        };
+        debug_assert_eq!(scheme.alphabet(), k);
+        Ok(scheme)
+    }
+
+    /// Whether [`Scheme::with_levels`] can re-parameterize this scheme.
+    pub fn has_level_dial(&self) -> bool {
+        !matches!(self, Scheme::Baseline | Scheme::OneBit)
+    }
+
     /// Parse CLI syntax, e.g. `baseline`, `dqsg:0.5`, `dqsg:0.5:part8`,
     /// `qsgd:2`, `terngrad`, `onebit`, `nested:0.3333:3:1.0`.
     pub fn parse(s: &str) -> crate::Result<Scheme> {
@@ -1186,6 +1236,50 @@ mod tests {
             Scheme::Nested { ratio: 3, .. }
         ));
         assert!(Scheme::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn with_levels_reparameterizes_every_dialed_scheme() {
+        for k in [3u32, 7, 15, 31] {
+            for base in [
+                Scheme::Dithered { delta: 1.0 },
+                Scheme::DitheredPartitioned { delta: 0.5, k: 4 },
+                Scheme::Qsgd { m: 1 },
+                Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            ] {
+                let s = base.with_levels(k).unwrap();
+                assert_eq!(s.alphabet(), k, "{base:?} -> {s:?}");
+                assert_eq!(s.id(), base.id(), "re-leveling must not change the wire id");
+                // the re-leveled scheme builds a working quantizer
+                let q = s.build();
+                assert_eq!(q.id(), s.id());
+            }
+        }
+        // partition count survives re-leveling
+        assert_eq!(
+            Scheme::DitheredPartitioned { delta: 1.0, k: 8 }
+                .with_levels(7)
+                .unwrap(),
+            Scheme::DitheredPartitioned { delta: 1.0 / 3.0, k: 8 }
+        );
+        // nested keeps its fine step and shrinkage
+        assert_eq!(
+            Scheme::Nested { d1: 0.25, ratio: 3, alpha: 0.5 }
+                .with_levels(9)
+                .unwrap(),
+            Scheme::Nested { d1: 0.25, ratio: 9, alpha: 0.5 }
+        );
+        // terngrad only at its native 3 levels
+        assert!(Scheme::Terngrad.with_levels(3).is_ok());
+        assert!(Scheme::Terngrad.with_levels(5).is_err());
+        // no dial at all
+        assert!(Scheme::Baseline.with_levels(3).is_err());
+        assert!(Scheme::OneBit.with_levels(3).is_err());
+        assert!(!Scheme::Baseline.has_level_dial());
+        assert!(Scheme::Qsgd { m: 2 }.has_level_dial());
+        // even / degenerate k rejected
+        assert!(Scheme::Dithered { delta: 1.0 }.with_levels(4).is_err());
+        assert!(Scheme::Dithered { delta: 1.0 }.with_levels(1).is_err());
     }
 
     #[test]

@@ -58,9 +58,17 @@ impl Default for Bench {
 
 impl Bench {
     pub fn new() -> Self {
-        // Allow CI-style quick runs: NDQ_BENCH_FAST=1 trims budgets.
+        // Allow CI-style quick runs: NDQ_BENCH_FAST=1 trims budgets. The
+        // env var is only *read* here; fast mode is otherwise a plain
+        // constructor parameter (`with_fast`) so tests never have to
+        // mutate process-global env state (set_var races parallel tests).
+        Self::with_fast(std::env::var("NDQ_BENCH_FAST").is_ok())
+    }
+
+    /// Harness with fast mode chosen explicitly (no env read).
+    pub fn with_fast(fast: bool) -> Self {
         let mut b = Self::default();
-        if std::env::var("NDQ_BENCH_FAST").is_ok() {
+        if fast {
             b.warmup_secs = 0.05;
             b.sample_secs = 0.2;
             b.samples = 7;
@@ -146,8 +154,9 @@ mod tests {
 
     #[test]
     fn harness_measures_something_sane() {
-        std::env::set_var("NDQ_BENCH_FAST", "1");
-        let mut b = Bench::new();
+        // explicit fast mode: no set_var (process-global env mutation is
+        // racy under cargo's parallel test threads)
+        let mut b = Bench::with_fast(true);
         b.warmup_secs = 0.01;
         b.sample_secs = 0.05;
         b.samples = 5;

@@ -20,12 +20,13 @@
 //! workers (they share `x - x*`), which is the regime NDQSG's Alg.-2 side
 //! information needs.
 
-use crate::comm::{ExchangeError, FaultChannel, FaultPlan, RoundPolicy, Session, WorkerMsg};
+use crate::comm::{FaultChannel, FaultPlan, RoundPolicy, RoundSpec, Session, WorkerMsg};
 use crate::prng::philox::splitmix64;
 use crate::prng::{DitherStream, Xoshiro256};
 use crate::quant::{GradQuantizer, PayloadCodec, Scheme};
 use crate::sim::LinkModel;
-use crate::train::trainer::{EvalPoint, RoundDelivery, TrainReport};
+use crate::train::engine::{EventSource, LevelPolicy, RoundDriver, RoundFold};
+use crate::train::trainer::TrainReport;
 
 /// Everything that defines a scenario. `Default` is a healthy 4-worker
 /// DQSG cluster on a perfect gigabit link.
@@ -44,6 +45,8 @@ pub struct ClusterScenario {
     pub link: LinkModel,
     /// Wire-v3 index-lane codec every worker encodes under.
     pub codec: PayloadCodec,
+    /// Per-round quantization-level controller (`fixed` = historical).
+    pub levels_policy: LevelPolicy,
     /// SGD step on the synthetic quadratic (contraction factor `1 - lr`).
     pub lr: f32,
     /// Per-worker gradient noise std, relative to the shared signal.
@@ -65,6 +68,7 @@ impl Default for ClusterScenario {
             policy: RoundPolicy::WaitAll,
             link: LinkModel::gigabit(),
             codec: PayloadCodec::Raw,
+            levels_policy: LevelPolicy::Fixed,
             lr: 0.25,
             noise: 0.05,
             eval_every: 10,
@@ -84,14 +88,29 @@ impl ClusterScenario {
         } else {
             format!(" codec={}", self.codec.label())
         };
+        let levels = if self.levels_policy.is_fixed() {
+            String::new()
+        } else {
+            format!(" levels={}", self.levels_policy.label())
+        };
         format!(
-            "cluster {} P={}{} policy={} faults={}",
+            "cluster {} P={}{}{} policy={} faults={}",
             scheme,
             self.workers,
             codec,
+            levels,
             self.policy.label(),
             faults,
         )
+    }
+
+    /// The round-0 negotiation this scenario re-levels from.
+    pub fn base_spec(&self) -> RoundSpec {
+        RoundSpec {
+            scheme: self.scheme,
+            scheme_p2: self.scheme_p2,
+            codec: self.codec,
+        }
     }
 }
 
@@ -104,10 +123,14 @@ impl ClusterHarness {
     pub fn new(sc: ClusterScenario) -> crate::Result<ClusterHarness> {
         anyhow::ensure!(sc.workers >= 1, "at least one worker");
         anyhow::ensure!(sc.n_params >= 1 && sc.rounds >= 1, "non-empty scenario");
-        sc.scheme.validate_codec(sc.codec)?;
-        if let Some(s2) = sc.scheme_p2 {
-            s2.validate_codec(sc.codec)?;
-        }
+        // validates codec negotiation for the base spec AND every spec the
+        // level policy can emit — scenario errors surface at build time
+        RoundDriver::new(
+            sc.base_spec(),
+            sc.levels_policy.clone(),
+            sc.policy,
+            sc.workers,
+        )?;
         Ok(ClusterHarness { sc })
     }
 
@@ -120,12 +143,11 @@ impl ClusterHarness {
         let t0 = std::time::Instant::now();
         let sc = self.sc.clone();
         // worker group assignment identical to the trainer: second half P2
-        let schemes: Vec<Scheme> = (0..sc.workers)
-            .map(|p| match sc.scheme_p2 {
-                Some(s2) if p >= sc.workers / 2 => s2,
-                _ => sc.scheme,
-            })
-            .collect();
+        // (the split lives in RoundSpec, shared with every other driver)
+        let base = sc.base_spec();
+        let schemes: Vec<Scheme> = base.worker_schemes(sc.workers);
+        let mut driver =
+            RoundDriver::new(base, sc.levels_policy.clone(), sc.policy, sc.workers)?;
         let mut session = Session::new(&schemes, sc.seed, sc.n_params)?;
         let mut encoders: Vec<(Box<dyn GradQuantizer>, DitherStream)> = (0..sc.workers)
             .map(|p| (schemes[p].build(), DitherStream::new(sc.seed, p as u32)))
@@ -145,14 +167,21 @@ impl ClusterHarness {
             (0.5 * s / sc.n_params as f64) as f32
         };
 
-        let mut history: Vec<EvalPoint> = Vec::new();
-        let mut delivery: Vec<RoundDelivery> = Vec::with_capacity(sc.rounds);
-        let mut rounds_failed = 0usize;
         let mut grad = vec![0f32; sc.n_params];
 
         for round in 0..sc.rounds {
             if session.live_workers() == 0 {
                 break; // everyone disconnected
+            }
+            // round plan: re-level per the policy; encoders rebuild (and
+            // the session re-keys) only when the spec actually changes
+            let spec = driver.spec_for_round(round)?;
+            if session.current_spec() != Some(&spec) {
+                session.apply_spec(&spec)?;
+                let ws = spec.worker_schemes(sc.workers);
+                for (p, (q, _)) in encoders.iter_mut().enumerate() {
+                    *q = ws[p].build();
+                }
             }
             let loss_now = eval(&x);
             // delayed releases first, then this round's uplinks in worker
@@ -170,64 +199,42 @@ impl ClusterHarness {
                     *gi = (xi - ti) + sc.noise * noise.next_normal();
                 }
                 let (q, stream) = &mut encoders[w];
-                let wire = q.encode_coded(&grad, &mut stream.round(round as u64), sc.codec);
+                let wire = q.encode_coded(&grad, &mut stream.round(round as u64), spec.codec);
                 events.extend(channel.feed(WorkerMsg::new(w, round as u64, loss_now, wire)));
             }
-            let mut ex = session.begin_exchange(round as u64, sc.policy);
-            for ev in events {
-                ex.offer(ev);
-            }
-            let expected = ex.expected() as u32;
-            let train_loss = match ex.finish() {
-                Ok(out) => {
-                    delivery.push(RoundDelivery {
-                        received: out.received as u32,
-                        expected,
-                    });
-                    for (xi, gi) in x.iter_mut().zip(&out.average) {
+            let fold =
+                driver.fold_events(&mut session, round as u64, EventSource::Batch(events))?;
+            let train_loss = match fold {
+                RoundFold::Stepped {
+                    average,
+                    train_loss,
+                    ..
+                } => {
+                    for (xi, gi) in x.iter_mut().zip(&average) {
                         *xi -= sc.lr * gi;
                     }
                     session.record_broadcast(32.0 * sc.n_params as f64);
-                    session.recycle(out.average);
-                    out.mean_loss
+                    session.recycle(average);
+                    train_loss
                 }
-                Err(e @ ExchangeError::Decode { .. }) => return Err(e.into()),
-                Err(_) => {
-                    // survivable degraded round: no step, but the eval
-                    // schedule below still runs (x is simply unchanged)
-                    rounds_failed += 1;
-                    delivery.push(RoundDelivery { received: 0, expected });
-                    f32::NAN
-                }
+                // survivable degraded round: no step, but the eval
+                // schedule below still runs (x is simply unchanged)
+                RoundFold::Skipped => f32::NAN,
             };
             let want_eval = (sc.eval_every > 0 && (round + 1) % sc.eval_every == 0)
                 || round + 1 == sc.rounds;
             if want_eval {
-                history.push(EvalPoint {
-                    round: round + 1,
-                    train_loss,
-                    eval_loss: eval(&x),
-                    accuracy: f64::NAN,
-                    cum_raw_bits_per_worker: session.stats().total_raw_bits
-                        / sc.workers as f64,
-                });
+                driver.record_eval(round + 1, train_loss, eval(&x), f64::NAN, session.stats());
             }
         }
 
-        let last = history.last().copied();
-        Ok(TrainReport {
-            config_label: sc.label(),
-            final_accuracy: f64::NAN,
-            final_eval_loss: last.map(|h| h.eval_loss).unwrap_or(f32::NAN),
-            history,
-            comm: session.stats().clone(),
-            rounds: sc.rounds,
-            rounds_failed,
-            delivery,
-            workers: sc.workers,
-            n_params: sc.n_params,
-            wall_secs: t0.elapsed().as_secs_f64(),
-        })
+        Ok(driver.into_report(
+            sc.label(),
+            session.stats().clone(),
+            sc.rounds,
+            sc.n_params,
+            t0.elapsed().as_secs_f64(),
+        ))
     }
 }
 
@@ -265,6 +272,25 @@ mod tests {
         let report = run_scenario(sc).unwrap();
         assert!(report.final_eval_loss < 0.02, "{}", report.final_eval_loss);
         assert_eq!(report.rounds_failed, 0);
+    }
+
+    #[test]
+    fn level_schedule_bills_per_spec_and_converges() {
+        let sc = ClusterScenario {
+            levels_policy: LevelPolicy::parse("schedule:0=15,10=7,20=3").unwrap(),
+            ..ClusterScenario::default()
+        };
+        let report = run_scenario(sc).unwrap();
+        assert_eq!(report.rounds_failed, 0);
+        assert!(report.final_eval_loss < 0.05, "{}", report.final_eval_loss);
+        // three distinct specs, each with 10 rounds x 4 workers, and the
+        // lanes sum exactly to the ledger totals
+        assert_eq!(report.comm.per_spec.len(), 3, "{:?}", report.comm.per_spec.keys());
+        for lane in report.comm.per_spec.values() {
+            assert_eq!(lane.messages, 40);
+        }
+        let lane_tx: f64 = report.comm.per_spec.values().map(|l| l.transmitted_bits).sum();
+        assert_eq!(lane_tx, report.comm.total_transmitted_bits);
     }
 
     #[test]

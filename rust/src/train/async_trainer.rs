@@ -19,7 +19,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::comm::{Fault, FaultPlan, Session};
+use crate::comm::{Fault, FaultPlan, RoundPolicy, RoundSpec, Session};
 use crate::config::TrainConfig;
 use crate::quant::WireMsg;
 use crate::data::{Batch, ImageDataset, ImageKind};
@@ -27,7 +27,8 @@ use crate::opt;
 use crate::prng::DitherStream;
 use crate::quant::GradQuantizer;
 use crate::runtime::ComputeService;
-use crate::train::trainer::{EvalPoint, TrainReport};
+use crate::train::engine::RoundDriver;
+use crate::train::trainer::TrainReport;
 
 /// Async run statistics beyond the shared report.
 #[derive(Debug, Clone, Default)]
@@ -113,6 +114,19 @@ impl AsyncTrainer {
         // there — constructed once, scratch reused for every update
         let schemes = vec![cfg.scheme; cfg.workers];
         let mut session = Session::new(&schemes, cfg.seed, info.n_params)?;
+        // The shared round driver: here it owns the level-policy spec plan
+        // (keyed by the *nominal* round `updates / P`, the async notion of
+        // global progress), the norm observations that drive
+        // `norm-adaptive` (fed per applied update), the learning curve, and
+        // report assembly. Async has no synchronous exchange, so the round
+        // policy slot is the driver's WaitAll default and its delivery
+        // ledger stays empty — exactly as this trainer has always reported.
+        let mut driver = RoundDriver::new(
+            cfg.base_spec(),
+            cfg.levels_policy.clone(),
+            RoundPolicy::WaitAll,
+            cfg.workers,
+        )?;
         // worker-side state: encoder quantizers + the workers' own copies
         // of the shared-seed streams (Alg. 1's two-sided seed table)
         let mut quantizers: Vec<Box<dyn GradQuantizer>> =
@@ -181,7 +195,10 @@ impl AsyncTrainer {
         }
 
         let mut stats = AsyncStats::default();
-        let mut history = Vec::new();
+        // the spec planned for the current nominal round — re-planned only
+        // when `updates / P` actually advances, so norm oscillations within
+        // a round can never thrash the session/quantizer re-keying
+        let mut planned: Option<(usize, RoundSpec)> = None;
         let total_updates = cfg.rounds * cfg.workers; // comparable work budget
         let mut staleness_sum = 0usize;
         let mut train_loss = f32::NAN;
@@ -223,11 +240,32 @@ impl AsyncTrainer {
             let (loss, grad) = h.grad_image(&cfg.model, &snap, batch.x, batch.y, b)?;
             train_loss = loss;
 
+            // round plan: the level policy keys on the nominal round
+            // (applied updates / P), planned once per nominal round. When
+            // the spec changes, the session re-keys its negotiation table
+            // and every worker-side encoder rebuilds — the wstep-keyed
+            // dither streams survive untouched.
+            let nominal = stats.updates / cfg.workers;
+            let spec = match planned {
+                Some((r, s)) if r == nominal => s,
+                _ => {
+                    let s = driver.spec_for_round(nominal)?;
+                    if session.current_spec() != Some(&s) {
+                        session.apply_spec(&s)?;
+                        let scheme = s.worker_scheme(0, cfg.workers); // uniform: no P2 in async
+                        for q in quantizers.iter_mut() {
+                            *q = scheme.build();
+                        }
+                    }
+                    planned = Some((nominal, s));
+                    s
+                }
+            };
             // encode -> wire -> decode with the wstep-keyed dither; the
             // session records the bits, regenerates the dither from its own
             // seed copy, and hands back its reused decode buffer
             let msg = quantizers[ev.worker]
-                .encode_coded(&grad, &mut streams[ev.worker].round(ev.wstep), cfg.codec);
+                .encode_coded(&grad, &mut streams[ev.worker].round(ev.wstep), spec.codec);
 
             // apply the fault plan to the uplink (keyed worker × wstep)
             match plan.as_ref().and_then(|p| p.fault_for(seed, ev.worker, ev.wstep)) {
@@ -262,6 +300,9 @@ impl AsyncTrainer {
                 Some(Fault::Delay { .. }) | None => {} // latency added at dispatch
             }
             let recon = session.decode_message(ev.worker, ev.wstep, &msg)?;
+            // feed the decoded gradient's norm to the adaptive level plan
+            // (async's per-update analogue of the folded round average)
+            driver.observe_fold(&recon[..]);
 
             // apply immediately, scaled (in place — the buffer is the
             // session's scratch, no per-update allocation) to keep the
@@ -288,47 +329,37 @@ impl AsyncTrainer {
             let eval_stride = cfg.eval_every.max(1) * cfg.workers;
             if cfg.eval_every > 0 && stats.updates % eval_stride == 0 {
                 let (eval_loss, acc) = self.evaluate(&ds, &info, &params)?;
-                history.push(EvalPoint {
-                    round: stats.updates / cfg.workers,
+                driver.record_eval(
+                    stats.updates / cfg.workers,
                     train_loss,
                     eval_loss,
-                    accuracy: acc,
-                    cum_raw_bits_per_worker: session.stats().total_raw_bits / cfg.workers as f64,
-                });
+                    acc,
+                    session.stats(),
+                );
             }
         }
         let (eval_loss, acc) = self.evaluate(&ds, &info, &params)?;
-        history.push(EvalPoint {
-            round: cfg.rounds,
-            train_loss,
-            eval_loss,
-            accuracy: acc,
-            cum_raw_bits_per_worker: session.stats().total_raw_bits / cfg.workers as f64,
-        });
+        driver.record_eval(cfg.rounds, train_loss, eval_loss, acc, session.stats());
         stats.mean_staleness = staleness_sum as f64 / stats.updates.max(1) as f64;
 
-        Ok((
-            TrainReport {
-                config_label: format!(
-                    "{} {} P={} async(s<={})",
-                    cfg.model,
-                    cfg.scheme.label(),
-                    cfg.workers,
-                    self.max_staleness
-                ),
-                final_accuracy: acc,
-                final_eval_loss: eval_loss,
-                history,
-                comm: session.stats().clone(),
-                rounds: cfg.rounds,
-                rounds_failed: 0,
-                delivery: Vec::new(),
-                workers: cfg.workers,
-                n_params: info.n_params,
-                wall_secs: t0.elapsed().as_secs_f64(),
-            },
-            stats,
-        ))
+        let mut label = format!(
+            "{} {} P={} async(s<={})",
+            cfg.model,
+            cfg.scheme.label(),
+            cfg.workers,
+            self.max_staleness
+        );
+        if !cfg.levels_policy.is_fixed() {
+            label.push_str(&format!(" levels={}", cfg.levels_policy.label()));
+        }
+        let report = driver.into_report(
+            label,
+            session.stats().clone(),
+            cfg.rounds,
+            info.n_params,
+            t0.elapsed().as_secs_f64(),
+        );
+        Ok((report, stats))
     }
 
     fn evaluate(

@@ -1,0 +1,625 @@
+//! The round-plan engine: ONE driver for the spawn/collect/fold/step/eval
+//! round skeleton that the synchronous trainer, the async trainer, the
+//! hierarchical aggregator, and the cluster harness all used to duplicate —
+//! plus the per-round **level policy** that makes the paper's
+//! levels-vs-training-time trade-off a first-class dial.
+//!
+//! # Level policies
+//!
+//! The paper's convergence section studies "the trade off between the
+//! number of quantization levels and the training time"; DQ-SGD (Yan et
+//! al., 2021) shows that *adjusting* the quantization over the course of
+//! training cuts communication at matched accuracy. A [`LevelPolicy`]
+//! decides, at every round, how many index levels `k` the round's
+//! [`RoundSpec`] quantizes to:
+//!
+//! * `fixed` — the configured scheme as-is (the historical behaviour, and
+//!   bit-identical to it);
+//! * `schedule:R0=K0,R1=K1,…` — piecewise-constant round schedule: from
+//!   round `Ri` (inclusive) every worker re-levels to `Ki` levels;
+//! * `norm-adaptive:KMIN:KMAX` — a DQ-SGD-style rule driven by the folded
+//!   gradient norm: round `r` uses `M_r = clamp(ceil(rho_r * M_max), M_min,
+//!   M_max)` half-levels where `rho_r = |g_{r-1}|_2 / |g_0|_2` is the decay
+//!   of the folded gradient relative to the first successful round. As the
+//!   gradient shrinks, fewer levels (hence fewer bits) suffice for the same
+//!   absolute resolution. Deterministic: `rho` is a pure function of the
+//!   folded averages, which are themselves bit-reproducible.
+//!
+//! Every spec a policy can emit is validated against the payload codec at
+//! [`RoundDriver::new`] — a schedule that visits an alphabet the codec
+//! cannot carry fails at setup, never mid-run.
+//!
+//! # The driver
+//!
+//! [`RoundDriver`] owns the cross-trainer round bookkeeping: the per-round
+//! spec plan, the policy-aware exchange loop ([`RoundDriver::fold_events`])
+//! and the perfect-link streaming fold ([`RoundDriver::fold_messages`]),
+//! delivery/failed-round accounting, the learning-curve history
+//! ([`RoundDriver::record_eval`] — cumulative raw *and* transmitted bit
+//! lanes), and final [`TrainReport`] assembly. The trainers keep only what
+//! is genuinely theirs: worker processes and optimizer steps (sync),
+//! virtual-time event simulation (async), tiered sessions (hierarchy), and
+//! the synthetic quadratic (cluster).
+
+use crate::comm::{
+    ChannelEvent, CommStats, ExchangeError, RoundOutcome, RoundPolicy, RoundSpec, Session,
+    WorkerMsg,
+};
+use crate::train::trainer::{EvalPoint, RoundDelivery, TrainReport};
+
+/// Per-round quantization-level controller (see module docs).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum LevelPolicy {
+    /// The configured scheme every round (historical behaviour).
+    #[default]
+    Fixed,
+    /// Piecewise-constant `(from_round, levels)` schedule, ascending by
+    /// round; rounds before the first breakpoint use the base scheme.
+    Schedule(Vec<(usize, u32)>),
+    /// DQ-SGD-style norm-driven rule bounded to odd `k` in
+    /// `[k_min, k_max]`.
+    NormAdaptive { k_min: u32, k_max: u32 },
+}
+
+impl LevelPolicy {
+    /// Parse CLI/config syntax:
+    /// `fixed` | `schedule:R0=K0,R1=K1,…` | `norm-adaptive:KMIN:KMAX`.
+    pub fn parse(s: &str) -> crate::Result<LevelPolicy> {
+        if s == "fixed" {
+            return Ok(LevelPolicy::Fixed);
+        }
+        if let Some(body) = s.strip_prefix("schedule:") {
+            let mut points = Vec::new();
+            for part in body.split(',') {
+                let (r, k) = part.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("schedule point `{part}` is not ROUND=LEVELS")
+                })?;
+                points.push((r.trim().parse::<usize>()?, k.trim().parse::<u32>()?));
+            }
+            anyhow::ensure!(!points.is_empty(), "empty level schedule");
+            anyhow::ensure!(
+                points.windows(2).all(|w| w[0].0 < w[1].0),
+                "schedule rounds must be strictly ascending"
+            );
+            return Ok(LevelPolicy::Schedule(points));
+        }
+        if let Some(body) = s.strip_prefix("norm-adaptive:") {
+            let (lo, hi) = body
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("norm-adaptive needs KMIN:KMAX"))?;
+            let (k_min, k_max) = (lo.parse::<u32>()?, hi.parse::<u32>()?);
+            anyhow::ensure!(k_min <= k_max, "norm-adaptive: KMIN must be <= KMAX");
+            // the rule plans in half-level (M) space, so the bounds must be
+            // representable there — an even bound would silently plan
+            // below/outside [KMIN, KMAX]
+            anyhow::ensure!(
+                k_min >= 3 && k_min % 2 == 1 && k_max % 2 == 1,
+                "norm-adaptive bounds must be odd level counts >= 3 \
+                 (got {k_min}:{k_max})"
+            );
+            return Ok(LevelPolicy::NormAdaptive { k_min, k_max });
+        }
+        anyhow::bail!(
+            "unknown levels policy `{s}` (fixed | schedule:R0=K0,R1=K1,… | \
+             norm-adaptive:KMIN:KMAX)"
+        )
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            LevelPolicy::Fixed => "fixed".into(),
+            LevelPolicy::Schedule(points) => {
+                let body: Vec<String> =
+                    points.iter().map(|(r, k)| format!("{r}={k}")).collect();
+                format!("schedule:{}", body.join(","))
+            }
+            LevelPolicy::NormAdaptive { k_min, k_max } => {
+                format!("norm-adaptive:{k_min}:{k_max}")
+            }
+        }
+    }
+
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, LevelPolicy::Fixed)
+    }
+
+    /// The level count for `round`, given the norm observations so far
+    /// (`None` = keep the base scheme). Pure: same inputs, same plan.
+    pub fn k_for(&self, round: usize, norm0: Option<f64>, last_norm: Option<f64>) -> Option<u32> {
+        match self {
+            LevelPolicy::Fixed => None,
+            LevelPolicy::Schedule(points) => points
+                .iter()
+                .rev()
+                .find(|(r, _)| *r <= round)
+                .map(|(_, k)| *k),
+            LevelPolicy::NormAdaptive { k_min, k_max } => {
+                let m_min = (*k_min as i64 - 1) / 2;
+                let m_max = (*k_max as i64 - 1) / 2;
+                let m = match (norm0, last_norm) {
+                    (Some(n0), Some(ln)) if n0 > 0.0 => {
+                        let rho = (ln / n0).clamp(0.0, 1.0);
+                        ((rho * m_max as f64).ceil() as i64).clamp(m_min, m_max)
+                    }
+                    // nothing folded yet: start at full resolution
+                    _ => m_max,
+                };
+                Some((2 * m + 1) as u32)
+            }
+        }
+    }
+
+    /// Every level count this policy can ever emit — derived with the SAME
+    /// half-level (M-space) arithmetic as [`LevelPolicy::k_for`], so eager
+    /// validation covers exactly the runtime plan (a directly-constructed
+    /// `NormAdaptive` with even bounds still validates what `k_for` would
+    /// really emit, e.g. `k_min = 2` reaches `k = 1` and fails at setup).
+    /// Shared by [`RoundDriver::new`] and
+    /// [`crate::train::hierarchy::HierarchyAggregator::with_level_policy`].
+    pub(crate) fn reachable_ks(&self) -> Vec<u32> {
+        match self {
+            LevelPolicy::Fixed => Vec::new(),
+            LevelPolicy::Schedule(points) => points.iter().map(|(_, k)| *k).collect(),
+            LevelPolicy::NormAdaptive { k_min, k_max } => {
+                let m_min = (*k_min as i64 - 1) / 2;
+                let m_max = (*k_max as i64 - 1) / 2;
+                (m_min..=m_max).map(|m| (2 * m + 1) as u32).collect()
+            }
+        }
+    }
+}
+
+/// The norm observations that drive `norm-adaptive`: the first successful
+/// fold anchors `norm0`, every fold updates `last`. One shared type (used
+/// by [`RoundDriver`] and the hierarchical aggregator) so the observation
+/// rule feeding [`LevelPolicy::k_for`] cannot drift between drivers.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NormAnchor {
+    /// L2 norm of the first successful fold.
+    pub norm0: Option<f64>,
+    /// L2 norm of the latest successful fold.
+    pub last: Option<f64>,
+}
+
+impl NormAnchor {
+    /// Record one folded gradient (f64 L2 accumulated in index order —
+    /// deterministic, so the level plan is a pure function of the folds).
+    pub fn observe(&mut self, fold: &[f32]) {
+        let norm = l2_norm(fold);
+        if self.norm0.is_none() {
+            self.norm0 = Some(norm);
+        }
+        self.last = Some(norm);
+    }
+}
+
+/// How a driven round ended.
+#[derive(Debug)]
+pub enum RoundFold {
+    /// A valid aggregate was produced: take an optimizer step.
+    Stepped {
+        /// Mean gradient over the folded set (hand back via
+        /// [`Session::recycle`] after stepping).
+        average: Vec<f32>,
+        /// Mean training loss over the folded messages.
+        train_loss: f32,
+        /// Messages folded.
+        received: u32,
+    },
+    /// A survivable degraded round (nothing valid arrived / NDQSG
+    /// bootstrap missing): already counted in `rounds_failed`, no step.
+    Skipped,
+}
+
+/// Where a policy round's events come from.
+pub enum EventSource<'a> {
+    /// A fully-materialized batch: every event is offered (post-completion
+    /// arrivals bill as late in the ledger), then the round finishes —
+    /// the single-threaded harness/hierarchy semantics.
+    Batch(Vec<ChannelEvent>),
+    /// A live stream pulled until the [`RoundPolicy`] completes the round —
+    /// the threaded trainer semantics.
+    Stream(&'a mut dyn FnMut() -> crate::Result<ChannelEvent>),
+}
+
+/// One policy exchange, classified: survivable failures are data, protocol
+/// bugs are errors.
+pub struct ExchangeRun {
+    /// Live workers the round could have heard from.
+    pub expected: usize,
+    /// `Ok` = aggregate; `Err` = survivable degraded round (`Empty` /
+    /// `NdqsgBootstrapMissing`). A `Decode` failure never lands here — it
+    /// returns as a hard error from [`run_exchange`].
+    pub outcome: Result<RoundOutcome, ExchangeError>,
+}
+
+/// Drive one policy-aware exchange on `session` and classify the result —
+/// the single offer-loop shared by every tier and trainer (the logic that
+/// used to be duplicated across `Trainer::run`, `HierarchyAggregator::
+/// round`, and the cluster harness).
+pub fn run_exchange(
+    session: &mut Session,
+    round: u64,
+    policy: RoundPolicy,
+    source: EventSource<'_>,
+) -> crate::Result<ExchangeRun> {
+    let mut ex = session.begin_exchange(round, policy);
+    match source {
+        EventSource::Batch(events) => {
+            for ev in events {
+                ex.offer(ev);
+            }
+        }
+        EventSource::Stream(next) => {
+            while !ex.is_complete() {
+                ex.offer(next()?);
+            }
+        }
+    }
+    let expected = ex.expected();
+    match ex.finish() {
+        Ok(out) => Ok(ExchangeRun {
+            expected,
+            outcome: Ok(out),
+        }),
+        Err(e @ ExchangeError::Decode { .. }) => Err(e.into()),
+        Err(e) => Ok(ExchangeRun {
+            expected,
+            outcome: Err(e),
+        }),
+    }
+}
+
+/// The shared round driver (see module docs). Construct once per run,
+/// consume with [`RoundDriver::into_report`].
+pub struct RoundDriver {
+    base: RoundSpec,
+    levels: LevelPolicy,
+    policy: RoundPolicy,
+    workers: usize,
+    current: RoundSpec,
+    /// Folded-gradient norms driving the `norm-adaptive` plan.
+    anchor: NormAnchor,
+    /// Per-worker loss slots: summed in worker order so the reported train
+    /// loss (like the aggregate itself) is arrival-order-invariant.
+    losses: Vec<f32>,
+    delivery: Vec<RoundDelivery>,
+    rounds_failed: usize,
+    history: Vec<EvalPoint>,
+}
+
+impl RoundDriver {
+    /// Validates the base spec and — eagerly — every spec the level policy
+    /// can emit, so codec/alphabet mismatches fail at setup.
+    pub fn new(
+        base: RoundSpec,
+        levels: LevelPolicy,
+        policy: RoundPolicy,
+        workers: usize,
+    ) -> crate::Result<RoundDriver> {
+        anyhow::ensure!(workers >= 1, "at least one worker");
+        base.validate()?;
+        for k in levels.reachable_ks() {
+            base.with_levels(k).map_err(|e| {
+                anyhow::anyhow!("levels policy `{}` is unrealizable: {e}", levels.label())
+            })?;
+        }
+        Ok(RoundDriver {
+            current: base,
+            base,
+            levels,
+            policy,
+            workers,
+            anchor: NormAnchor::default(),
+            losses: vec![0f32; workers],
+            delivery: Vec::new(),
+            rounds_failed: 0,
+            history: Vec::new(),
+        })
+    }
+
+    /// The spec every worker (and the session) must use for `round`,
+    /// per the level policy. Call once at round start, apply via
+    /// [`Session::apply_spec`], and ship to workers in their round command.
+    pub fn spec_for_round(&mut self, round: usize) -> crate::Result<RoundSpec> {
+        self.current = match self.levels.k_for(round, self.anchor.norm0, self.anchor.last) {
+            None => self.base,
+            Some(k) => self.base.with_levels(k)?,
+        };
+        Ok(self.current)
+    }
+
+    /// The spec most recently planned by [`RoundDriver::spec_for_round`].
+    pub fn current_spec(&self) -> &RoundSpec {
+        &self.current
+    }
+
+    /// The configured round policy.
+    pub fn round_policy(&self) -> RoundPolicy {
+        self.policy
+    }
+
+    /// The level policy driving the spec plan.
+    pub fn level_policy(&self) -> &LevelPolicy {
+        &self.levels
+    }
+
+    /// Rounds that produced no aggregate so far.
+    pub fn rounds_failed(&self) -> usize {
+        self.rounds_failed
+    }
+
+    /// Per-round delivery records so far.
+    pub fn delivery(&self) -> &[RoundDelivery] {
+        &self.delivery
+    }
+
+    /// Feed a folded gradient into the norm observations that drive the
+    /// `norm-adaptive` policy. The fold entry points below do this
+    /// automatically; only drivers with their own fold (async per-update,
+    /// hierarchy root) call it directly.
+    pub fn observe_fold(&mut self, average: &[f32]) {
+        self.anchor.observe(average);
+    }
+
+    /// Perfect-link streaming fold: pull exactly `workers` messages from
+    /// `next`, push each into the session aggregator as it arrives, and
+    /// finish in canonical order. The synchronous-trainer fast path.
+    pub fn fold_messages(
+        &mut self,
+        session: &mut Session,
+        mut next: impl FnMut() -> crate::Result<WorkerMsg>,
+    ) -> crate::Result<RoundFold> {
+        let mut agg = session.begin_round();
+        for _ in 0..self.workers {
+            let msg = next()?;
+            let (worker, loss) = (msg.worker, msg.loss);
+            agg.push(msg)?; // validates worker identity before we index
+            self.losses[worker] = loss;
+        }
+        let train_loss = self.losses.iter().sum::<f32>() / self.workers as f32;
+        let average = agg.finish()?;
+        self.delivery.push(RoundDelivery {
+            received: self.workers as u32,
+            expected: self.workers as u32,
+        });
+        self.observe_fold(&average);
+        Ok(RoundFold::Stepped {
+            average,
+            train_loss,
+            received: self.workers as u32,
+        })
+    }
+
+    /// Policy-aware fold over channel events (the fault-channel path),
+    /// recording delivery and failed rounds uniformly.
+    pub fn fold_events(
+        &mut self,
+        session: &mut Session,
+        round: u64,
+        source: EventSource<'_>,
+    ) -> crate::Result<RoundFold> {
+        let run = run_exchange(session, round, self.policy, source)?;
+        match run.outcome {
+            Ok(out) => {
+                self.delivery.push(RoundDelivery {
+                    received: out.received as u32,
+                    expected: run.expected as u32,
+                });
+                self.observe_fold(&out.average);
+                Ok(RoundFold::Stepped {
+                    average: out.average,
+                    train_loss: out.mean_loss,
+                    received: out.received as u32,
+                })
+            }
+            Err(_) => {
+                self.rounds_failed += 1;
+                self.delivery.push(RoundDelivery {
+                    received: 0,
+                    expected: run.expected as u32,
+                });
+                Ok(RoundFold::Skipped)
+            }
+        }
+    }
+
+    /// Append one learning-curve point, billing both cumulative uplink
+    /// lanes (raw-equivalent and transmitted) per worker from the ledger.
+    pub fn record_eval(
+        &mut self,
+        round: usize,
+        train_loss: f32,
+        eval_loss: f32,
+        accuracy: f64,
+        stats: &CommStats,
+    ) {
+        self.history.push(EvalPoint {
+            round,
+            train_loss,
+            eval_loss,
+            accuracy,
+            cum_raw_bits_per_worker: stats.total_raw_bits / self.workers as f64,
+            cum_transmitted_bits_per_worker: stats.total_transmitted_bits
+                / self.workers as f64,
+        });
+    }
+
+    /// The learning curve so far.
+    pub fn history(&self) -> &[EvalPoint] {
+        &self.history
+    }
+
+    /// Consume the driver into the final report (final accuracy/loss are
+    /// the last recorded eval point, as every trainer has always done).
+    pub fn into_report(
+        self,
+        config_label: String,
+        comm: CommStats,
+        rounds: usize,
+        n_params: usize,
+        wall_secs: f64,
+    ) -> TrainReport {
+        let last = self.history.last().copied();
+        TrainReport {
+            config_label,
+            final_accuracy: last.map(|h| h.accuracy).unwrap_or(f64::NAN),
+            final_eval_loss: last.map(|h| h.eval_loss).unwrap_or(f32::NAN),
+            history: self.history,
+            comm,
+            rounds,
+            rounds_failed: self.rounds_failed,
+            delivery: self.delivery,
+            workers: self.workers,
+            n_params,
+            wall_secs,
+        }
+    }
+}
+
+/// L2 norm with f64 accumulation in index order — deterministic, so the
+/// `norm-adaptive` plan is a pure function of the folded averages.
+fn l2_norm(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{PayloadCodec, Scheme};
+
+    fn base() -> RoundSpec {
+        RoundSpec {
+            scheme: Scheme::Dithered { delta: 1.0 / 3.0 },
+            scheme_p2: None,
+            codec: PayloadCodec::Raw,
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for s in ["fixed", "schedule:0=15,10=7,20=3", "norm-adaptive:3:15"] {
+            let p = LevelPolicy::parse(s).unwrap();
+            assert_eq!(p.label(), s);
+        }
+        assert_eq!(LevelPolicy::parse("fixed").unwrap(), LevelPolicy::Fixed);
+        assert_eq!(
+            LevelPolicy::parse("schedule:0=7,5=3").unwrap(),
+            LevelPolicy::Schedule(vec![(0, 7), (5, 3)])
+        );
+        assert_eq!(
+            LevelPolicy::parse("norm-adaptive:3:15").unwrap(),
+            LevelPolicy::NormAdaptive { k_min: 3, k_max: 15 }
+        );
+        for bad in [
+            "bogus",
+            "schedule:",
+            "schedule:5",
+            "schedule:5=7,5=3",   // not ascending
+            "schedule:9=7,3=15",  // not ascending
+            "norm-adaptive:15:3", // inverted bounds
+            "norm-adaptive:7",
+            "norm-adaptive:2:15", // even KMIN would plan k=1 at full decay
+            "norm-adaptive:4:15", // even KMIN would plan below the clamp
+            "norm-adaptive:3:14", // even KMAX is not an odd alphabet
+            "norm-adaptive:1:15", // k=1 carries no information
+        ] {
+            assert!(LevelPolicy::parse(bad).is_err(), "`{bad}` parsed");
+        }
+    }
+
+    #[test]
+    fn directly_built_even_bounds_still_fail_at_driver_setup() {
+        // parse() rejects even bounds, but NormAdaptive can be constructed
+        // directly; reachable_ks plans in the same M-space as k_for, so
+        // the k=1 this policy would emit at full decay is caught at new()
+        let p = LevelPolicy::NormAdaptive { k_min: 2, k_max: 15 };
+        assert!(p.reachable_ks().contains(&1));
+        assert!(RoundDriver::new(
+            base(),
+            p,
+            crate::comm::RoundPolicy::WaitAll,
+            2
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn schedule_plans_piecewise_constant() {
+        let p = LevelPolicy::parse("schedule:5=7,10=3").unwrap();
+        assert_eq!(p.k_for(0, None, None), None); // before the first point
+        assert_eq!(p.k_for(4, None, None), None);
+        assert_eq!(p.k_for(5, None, None), Some(7));
+        assert_eq!(p.k_for(9, None, None), Some(7));
+        assert_eq!(p.k_for(10, None, None), Some(3));
+        assert_eq!(p.k_for(1000, None, None), Some(3));
+    }
+
+    #[test]
+    fn norm_adaptive_tracks_gradient_decay() {
+        let p = LevelPolicy::NormAdaptive { k_min: 3, k_max: 15 };
+        // nothing folded yet: full resolution
+        assert_eq!(p.k_for(0, None, None), Some(15));
+        // no decay: still full resolution
+        assert_eq!(p.k_for(1, Some(10.0), Some(10.0)), Some(15));
+        // gradient at 1/7 of its initial norm: one half-level survives
+        assert_eq!(p.k_for(9, Some(7.0), Some(1.0)), Some(3));
+        // halfway decay lands in between, never outside the bounds
+        let k = p.k_for(5, Some(10.0), Some(5.0)).unwrap();
+        assert!((3..=15).contains(&k) && k % 2 == 1, "k={k}");
+        assert_eq!(p.k_for(5, Some(10.0), Some(0.0)), Some(3));
+        assert_eq!(p.k_for(5, Some(10.0), Some(1e9)), Some(15));
+    }
+
+    #[test]
+    fn driver_validates_unrealizable_policies_at_setup() {
+        // one-bit has no level dial: any non-fixed policy must fail at new()
+        let spec = RoundSpec::uniform(Scheme::OneBit);
+        assert!(RoundDriver::new(
+            spec,
+            LevelPolicy::parse("schedule:0=3").unwrap(),
+            crate::comm::RoundPolicy::WaitAll,
+            2,
+        )
+        .is_err());
+        // fixed stays fine — no dial is exercised
+        assert!(RoundDriver::new(
+            spec,
+            LevelPolicy::Fixed,
+            crate::comm::RoundPolicy::WaitAll,
+            2
+        )
+        .is_ok());
+        // an alphabet beyond the aac model ceiling fails eagerly too
+        let aac = RoundSpec {
+            codec: PayloadCodec::Aac,
+            ..base()
+        };
+        let huge = LevelPolicy::Schedule(vec![(0, 65_535)]);
+        assert!(RoundDriver::new(aac, huge, crate::comm::RoundPolicy::WaitAll, 2).is_err());
+    }
+
+    #[test]
+    fn driver_spec_plan_follows_schedule() {
+        let mut d = RoundDriver::new(
+            base(),
+            LevelPolicy::parse("schedule:0=15,2=3").unwrap(),
+            crate::comm::RoundPolicy::WaitAll,
+            4,
+        )
+        .unwrap();
+        assert_eq!(
+            d.spec_for_round(0).unwrap().scheme,
+            Scheme::Dithered { delta: 1.0 / 7.0 }
+        );
+        assert_eq!(
+            d.spec_for_round(1).unwrap().scheme,
+            Scheme::Dithered { delta: 1.0 / 7.0 }
+        );
+        assert_eq!(
+            d.spec_for_round(2).unwrap().scheme,
+            Scheme::Dithered { delta: 1.0 }
+        );
+        assert_eq!(d.current_spec().scheme, Scheme::Dithered { delta: 1.0 });
+    }
+}

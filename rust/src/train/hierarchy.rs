@@ -25,6 +25,7 @@ use crate::prng::DitherStream;
 use crate::quant::{GradQuantizer, PayloadCodec, Scheme};
 use crate::sim::LinkModel;
 use crate::tensor;
+use crate::train::engine::{run_exchange, EventSource, LevelPolicy, NormAnchor};
 
 /// Static two-tier topology description.
 #[derive(Debug, Clone)]
@@ -100,6 +101,15 @@ pub struct HierarchyAggregator {
     leaf_faults: Option<LeafFaults>,
     /// Wire-v3 index-lane codec both tiers encode under.
     codec: PayloadCodec,
+    /// Per-round quantization-level controller applied to *both* tiers
+    /// (fixed = the configured hierarchy, the historical behaviour).
+    levels: LevelPolicy,
+    /// Level count the sessions/encoders are currently keyed to
+    /// (`None` = the base hierarchy's own schemes).
+    current_k: Option<u32>,
+    /// Norm observations driving `norm-adaptive` (from the root average) —
+    /// the engine's shared observation rule.
+    anchor: NormAnchor,
 }
 
 struct LeafFaults {
@@ -157,7 +167,86 @@ impl HierarchyAggregator {
             flat_encoders,
             leaf_faults: None,
             codec: PayloadCodec::Raw,
+            levels: LevelPolicy::Fixed,
+            current_k: None,
+            anchor: NormAnchor::default(),
         })
+    }
+
+    /// The four tier schemes at `k` levels (`None` = the base hierarchy).
+    fn tier_schemes(&self, k: Option<u32>) -> crate::Result<(Scheme, Scheme, Scheme, Scheme)> {
+        Ok(match k {
+            None => (
+                self.h.leaf_dqsg,
+                self.h.leaf_nested,
+                self.h.root_dqsg,
+                self.h.root_nested,
+            ),
+            Some(k) => (
+                self.h.leaf_dqsg.with_levels(k)?,
+                self.h.leaf_nested.with_levels(k)?,
+                self.h.root_dqsg.with_levels(k)?,
+                self.h.root_nested.with_levels(k)?,
+            ),
+        })
+    }
+
+    /// Re-level both tiers per round (the same [`LevelPolicy`] dial the
+    /// flat trainers expose): every spec the policy can emit is validated
+    /// here against the currently-configured codec, and
+    /// [`HierarchyAggregator::with_codec`] re-validates the stored policy
+    /// against a new codec — the two builders compose in either order.
+    pub fn with_level_policy(mut self, levels: LevelPolicy) -> crate::Result<Self> {
+        for k in levels.reachable_ks() {
+            let (ld, ln, rd, rn) = self.tier_schemes(Some(k))?;
+            for s in [ld, ln, rd, rn] {
+                s.validate_codec(self.codec)?;
+            }
+        }
+        self.levels = levels;
+        Ok(self)
+    }
+
+    /// Re-key both tiers' sessions and encoders to `k` levels. Dither
+    /// streams, ledger totals, and pooled buffers all survive — only the
+    /// negotiation tables and the boxed quantizers rebuild, and only when
+    /// `k` actually changes.
+    fn apply_levels(&mut self, k: Option<u32>) -> crate::Result<()> {
+        if k == self.current_k {
+            return Ok(());
+        }
+        let (ld, ln, rd, rn) = self.tier_schemes(k)?;
+        let group_schemes: Vec<Scheme> = (0..self.h.per_group)
+            .map(|w| if w == 0 { ld } else { ln })
+            .collect();
+        let leaf_label = if self.h.per_group > 1 {
+            format!("leaf:{}+{}@{}", ld.label(), ln.label(), self.codec.label())
+        } else {
+            format!("leaf:{}@{}", ld.label(), self.codec.label())
+        };
+        for session in self.leaf_sessions.iter_mut() {
+            session.set_schemes(&group_schemes, &leaf_label)?;
+        }
+        for (i, (q, _)) in self.leaf_encoders.iter_mut().enumerate() {
+            *q = group_schemes[i % self.h.per_group].build();
+        }
+        for (q, _) in self.flat_encoders.iter_mut() {
+            *q = ld.build();
+        }
+        let root_schemes: Vec<Scheme> = (0..self.h.groups)
+            .map(|g| if g == 0 { rd } else { rn })
+            .collect();
+        let root_label = if self.h.groups > 1 {
+            format!("root:{}+{}@{}", rd.label(), rn.label(), self.codec.label())
+        } else {
+            format!("root:{}@{}", rd.label(), self.codec.label())
+        };
+        self.root_session.set_schemes(&root_schemes, &root_label)?;
+        for (g, (q, _)) in self.root_encoders.iter_mut().enumerate() {
+            *q = root_schemes[g].build();
+        }
+        self.current_k = k;
+        Ok(())
     }
 
     /// Ship both tiers' index lanes under `codec` (default raw). The
@@ -171,6 +260,14 @@ impl HierarchyAggregator {
             self.h.root_nested,
         ] {
             s.validate_codec(codec)?;
+        }
+        // a level policy installed *before* this call must stay realizable
+        // under the new codec — builder order is free, never a mid-run trap
+        for k in self.levels.reachable_ks() {
+            let (ld, ln, rd, rn) = self.tier_schemes(Some(k))?;
+            for s in [ld, ln, rd, rn] {
+                s.validate_codec(codec)?;
+            }
         }
         self.codec = codec;
         Ok(self)
@@ -212,6 +309,10 @@ impl HierarchyAggregator {
         round: u64,
     ) -> crate::Result<HierarchyRound> {
         anyhow::ensure!(grads.len() == self.h.groups, "group count mismatch");
+        // round plan: both tiers re-level per the policy (validated at
+        // `with_level_policy`, so this cannot fail on a planned k)
+        let k = self.levels.k_for(round as usize, self.anchor.norm0, self.anchor.last);
+        self.apply_levels(k)?;
         let mut flat_dqsg_bits = 0usize;
         let mut group_avgs: Vec<Option<Vec<f32>>> = Vec::with_capacity(self.h.groups);
         let mut leaf_received = 0usize;
@@ -257,24 +358,22 @@ impl HierarchyAggregator {
                 }
                 Some(lf) => {
                     // the group's uplinks cross the faulty link; the leader
-                    // aggregates whatever survives under the round policy
+                    // aggregates whatever survives under the round policy —
+                    // the engine's shared offer/classify loop (a Decode
+                    // failure is a protocol bug and aborts the round)
                     let ch = &mut lf.channels[g];
                     let mut events = ch.flush(round);
                     for m in msgs {
                         events.extend(ch.feed(m));
                     }
-                    let mut ex = session.begin_exchange(round, lf.policy);
-                    for ev in events {
-                        ex.offer(ev);
-                    }
-                    leaf_expected += ex.expected();
-                    match ex.finish() {
+                    let run =
+                        run_exchange(session, round, lf.policy, EventSource::Batch(events))
+                            .map_err(|e| anyhow::anyhow!("group {g}: {e}"))?;
+                    leaf_expected += run.expected;
+                    match run.outcome {
                         Ok(out) => {
                             leaf_received += out.received;
                             group_avgs.push(Some(out.average));
-                        }
-                        Err(e @ crate::comm::ExchangeError::Decode { .. }) => {
-                            anyhow::bail!("group {g}: {e}")
                         }
                         // survivable (empty / NDQSG bootstrap missing):
                         // this leader contributes nothing to the root
@@ -304,6 +403,8 @@ impl HierarchyAggregator {
             .finish()
             .map_err(|e| anyhow::anyhow!("root tier, round {round}: {e}"))?;
         let root_bits = (self.root_session.stats().total_transmitted_bits - root_before) as usize;
+        // feed the root estimate's norm to the adaptive level plan
+        self.anchor.observe(&root_avg);
 
         // hand the group buffers back to their sessions' scratch pools
         for (g, avg) in group_avgs.into_iter().enumerate() {
@@ -426,6 +527,56 @@ mod tests {
         let h = Hierarchy::paper_default(2, 2);
         let grads = correlated_grads(2, 3, 100, 4);
         assert!(aggregate_round(&h, &grads, 0, 0).is_err());
+    }
+
+    #[test]
+    fn level_schedule_releases_bits_and_still_tracks_mean() {
+        let h = Hierarchy::paper_default(3, 3);
+        let grads = correlated_grads(3, 3, 4000, 11);
+        let mut agg = HierarchyAggregator::new(&h, 6, 4000)
+            .unwrap()
+            .with_level_policy(LevelPolicy::parse("schedule:0=7,2=3").unwrap())
+            .unwrap();
+        let fine = agg.round(&grads, 0).unwrap();
+        let fine2 = agg.round(&grads, 1).unwrap();
+        let coarse = agg.round(&grads, 2).unwrap();
+        // same k, same gradients, same dither round? No — dither is keyed
+        // by round, so only the bit *rate* is comparable: k=7 rounds cost
+        // more than the k=3 round on both tiers
+        assert!(coarse.leaf_bits < fine.leaf_bits, "{} vs {}", coarse.leaf_bits, fine.leaf_bits);
+        assert!(coarse.leaf_bits < fine2.leaf_bits);
+        assert!(coarse.root_bits < fine.root_bits);
+        // every round still aggregates sanely (the k=3 round pays the
+        // coarse-lattice variance — Thm. 4's levels-vs-error trade-off)
+        let want = true_mean(&grads);
+        for (r, bound) in [(&fine, 0.1), (&fine2, 0.1), (&coarse, 0.35)] {
+            let rmse = (tensor::sq_dist(&r.average, &want) / want.len() as f64).sqrt();
+            assert!(rmse < bound, "rmse {rmse} (bound {bound})");
+            assert_eq!(r.leaf_received, 9);
+        }
+        // the ledger carries one lane per distinct leaf spec
+        let lanes: std::collections::BTreeSet<String> = agg
+            .leaf_sessions
+            .iter()
+            .flat_map(|s| s.stats().per_spec.keys().cloned())
+            .collect();
+        assert_eq!(lanes.len(), 2, "{lanes:?}");
+        // an unrealizable policy (one-bit has no dial) fails at setup
+        let mut bad = Hierarchy::paper_default(2, 2);
+        bad.leaf_dqsg = Scheme::OneBit;
+        assert!(HierarchyAggregator::new(&bad, 0, 100)
+            .unwrap()
+            .with_level_policy(LevelPolicy::parse("schedule:0=3").unwrap())
+            .is_err());
+        // builder order is free: installing the policy FIRST and the codec
+        // second still validates the combination (8191 levels exceed the
+        // aac model ceiling) — setup error, never a mid-run panic
+        assert!(HierarchyAggregator::new(&Hierarchy::paper_default(2, 2), 0, 100)
+            .unwrap()
+            .with_level_policy(LevelPolicy::Schedule(vec![(0, 8191)]))
+            .unwrap()
+            .with_codec(PayloadCodec::Aac)
+            .is_err());
     }
 
     #[test]

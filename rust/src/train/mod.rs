@@ -7,12 +7,16 @@
 //! * [`worker`]  — worker thread: data shard -> gradient -> encode -> send
 //! * [`server`]  — thin facade over [`crate::comm::Session`] (the decode +
 //!   Alg.-2 aggregation logic itself lives in `comm`)
-//! * [`trainer`] — the round loop, optimizer, eval, reporting
+//! * [`engine`]  — the shared round driver (spec plan / fold / delivery /
+//!   history) plus the per-round [`engine::LevelPolicy`] levels dial
+//! * [`trainer`] — worker processes, optimizer steps, eval — driving rounds
+//!   through the engine
 //!
 //! Communication accounting ([`CommStats`]) and the wire message type live
 //! in [`crate::comm`] and are re-exported here for convenience.
 
 pub mod async_trainer;
+pub mod engine;
 pub mod hierarchy;
 pub mod server;
 pub mod trainer;
@@ -20,4 +24,5 @@ pub mod worker;
 
 pub use crate::comm::CommStats;
 pub use async_trainer::AsyncTrainer;
+pub use engine::{LevelPolicy, RoundDriver};
 pub use trainer::{RoundDelivery, TrainReport, Trainer};

@@ -7,13 +7,14 @@
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use crate::comm::{ChannelEvent, ExchangeError, FaultChannel, RoundPolicy, Session};
+use crate::comm::{ChannelEvent, FaultChannel, RoundPolicy, Session};
 use crate::config::{OptKind, TrainConfig};
 use crate::data::{Batch, ImageDataset, ImageKind, TokenDataset};
 use crate::opt;
 use crate::quant::Scheme;
 use crate::runtime::{ComputeHandle, ComputeService};
 use crate::sim::LinkModel;
+use crate::train::engine::{EventSource, RoundDriver, RoundFold};
 use crate::train::worker::{TaskData, Worker, WorkerCmd, WorkerMsg};
 use crate::train::CommStats;
 use crate::util::json::{self, Json};
@@ -26,8 +27,12 @@ pub struct EvalPoint {
     pub eval_loss: f32,
     /// Classification accuracy in [0,1]; NaN for LM tasks.
     pub accuracy: f64,
-    /// Cumulative uplink raw bits per worker up to this round.
+    /// Cumulative uplink raw-equivalent (base-k) bits per worker up to this
+    /// round — the Table-1 accounting lane.
     pub cum_raw_bits_per_worker: f64,
+    /// Cumulative uplink bits per worker *actually shipped* under the
+    /// negotiated codec (the wire-v3 headline lane) up to this round.
+    pub cum_transmitted_bits_per_worker: f64,
 }
 
 /// How many messages a round actually heard vs. could have heard.
@@ -98,6 +103,28 @@ impl TrainReport {
                     ("late_bits", json::num(self.comm.late_bits as f64)),
                 ]),
             ),
+            (
+                "per_spec",
+                Json::Obj(
+                    self.comm
+                        .per_spec
+                        .iter()
+                        .map(|(label, lane)| {
+                            (
+                                label.clone(),
+                                json::obj(vec![
+                                    ("messages", json::num(lane.messages as f64)),
+                                    (
+                                        "transmitted_kbits",
+                                        json::num(lane.transmitted_bits / 1000.0),
+                                    ),
+                                    ("raw_kbits", json::num(lane.raw_bits / 1000.0)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
             ("wall_secs", json::num(self.wall_secs)),
             (
                 "history",
@@ -111,6 +138,10 @@ impl TrainReport {
                                 ("eval_loss", json::num(h.eval_loss as f64)),
                                 ("accuracy", json::num(h.accuracy)),
                                 ("cum_raw_bits", json::num(h.cum_raw_bits_per_worker)),
+                                (
+                                    "cum_transmitted_bits",
+                                    json::num(h.cum_transmitted_bits_per_worker),
+                                ),
                             ])
                         })
                         .collect(),
@@ -142,6 +173,7 @@ impl TrainReport {
             h.u64((p.eval_loss as f64).to_bits());
             h.u64(p.accuracy.to_bits());
             h.u64(p.cum_raw_bits_per_worker.to_bits());
+            h.u64(p.cum_transmitted_bits_per_worker.to_bits());
         }
         for d in &self.delivery {
             h.u64(d.received as u64);
@@ -166,6 +198,15 @@ impl TrainReport {
             self.comm.disconnects,
         ] {
             h.u64(v);
+        }
+        // per-spec ledger lanes (BTreeMap: deterministic label order) — a
+        // mixed-level run whose rounds were billed to different specs must
+        // fingerprint differently from a fixed run with equal totals
+        for (label, lane) in &self.comm.per_spec {
+            h.bytes(label.as_bytes());
+            h.u64(lane.messages);
+            h.u64(lane.transmitted_bits.to_bits());
+            h.u64(lane.raw_bits.to_bits());
         }
         h.finish()
     }
@@ -234,18 +275,12 @@ impl Trainer {
 
         // Worker group assignment (Alg. 2): when scheme_p2 is set, the
         // first half of the workers use `scheme` (P1), the second half
-        // `scheme_p2` (P2). Otherwise everyone uses `scheme`.
-        let schemes: Vec<Scheme> = (0..cfg.workers)
-            .map(|p| match cfg.scheme_p2 {
-                Some(s2) if p >= cfg.workers / 2 => s2,
-                _ => cfg.scheme,
-            })
-            .collect();
-        // codec negotiation: a scheme/codec pair the coders cannot carry
-        // is a setup error, never a mid-run panic
-        for s in &schemes {
-            s.validate_codec(cfg.codec)?;
-        }
+        // `scheme_p2` (P2). Otherwise everyone uses `scheme`. The same
+        // split lives in RoundSpec so per-round re-negotiation and the
+        // setup path can never disagree.
+        let base = cfg.base_spec();
+        base.validate()?;
+        let schemes = base.worker_schemes(cfg.workers);
 
         Ok(Self {
             n_params: info.n_params,
@@ -281,6 +316,9 @@ impl Trainer {
         }
         if self.cfg.round_policy != crate::comm::RoundPolicy::WaitAll {
             label.push_str(&format!(" policy={}", self.cfg.round_policy.label()));
+        }
+        if !self.cfg.levels_policy.is_fixed() {
+            label.push_str(&format!(" levels={}", self.cfg.levels_policy.label()));
         }
         if self.cfg.fault_plan.is_some() {
             label.push_str(" faults=on");
@@ -360,12 +398,15 @@ impl Trainer {
 
         let mut session = Session::new(&self.schemes, cfg.seed, self.n_params)?;
         let mut optimizer = opt::build(cfg.opt, cfg.lr);
-        let mut history = Vec::new();
-        let mut delivery: Vec<RoundDelivery> = Vec::with_capacity(cfg.rounds);
-        let mut rounds_failed = 0usize;
-        // per-worker loss slots: summed in worker order so the reported
-        // train loss (like the aggregate itself) is arrival-order-invariant
-        let mut losses = vec![0f32; cfg.workers];
+        // The shared round driver owns the spec plan (level policy), the
+        // fold/classify skeleton, delivery + failed-round accounting, and
+        // the learning-curve history.
+        let mut driver = RoundDriver::new(
+            cfg.base_spec(),
+            cfg.levels_policy.clone(),
+            cfg.round_policy,
+            cfg.workers,
+        )?;
 
         // With a fault plan or a non-WaitAll policy, worker messages route
         // through a FaultChannel interposer: the trainer then consumes
@@ -419,6 +460,11 @@ impl Trainer {
             if policy_mode && session.live_workers() == 0 {
                 break; // every worker disconnected: nothing left to train
             }
+            // round plan: the level policy picks this round's spec; the
+            // session re-keys (a no-op under a fixed policy) and every live
+            // worker receives the spec inside its round command
+            let spec = driver.spec_for_round(round)?;
+            session.apply_spec(&spec)?;
             // leader: broadcast round start (params are logically replicated)
             for w in &workers {
                 if policy_mode && session.is_dead(w.id) {
@@ -428,37 +474,23 @@ impl Trainer {
                     .send(WorkerCmd::Round {
                         round: round as u64,
                         params: Arc::clone(&self.params),
+                        spec,
                     })
                     .map_err(|_| anyhow::anyhow!("worker {} died", w.id))?;
             }
 
-            let (train_loss, avg) = if let Some(ev_rx) = &ev_rx {
+            let fold = if let Some(ev_rx) = &ev_rx {
                 // ---- policy round: events through the fault link ----
-                let mut ex = session.begin_exchange(round as u64, cfg.round_policy);
-                while !ex.is_complete() {
-                    let ev = ev_rx
+                let mut next = || -> crate::Result<ChannelEvent> {
+                    ev_rx
                         .recv()
-                        .map_err(|_| anyhow::anyhow!("fault link closed"))??;
-                    ex.offer(ev);
-                }
-                let expected = ex.expected() as u32;
-                match ex.finish() {
-                    Ok(out) => {
-                        delivery.push(RoundDelivery {
-                            received: out.received as u32,
-                            expected,
-                        });
-                        (out.mean_loss, out.average)
-                    }
-                    Err(e @ ExchangeError::Decode { .. }) => return Err(e.into()),
-                    Err(_) => {
-                        // survivable degraded round (nothing valid arrived /
-                        // NDQSG bootstrap missing): no step this round
-                        rounds_failed += 1;
-                        delivery.push(RoundDelivery { received: 0, expected });
-                        continue;
-                    }
-                }
+                        .map_err(|_| anyhow::anyhow!("fault link closed"))?
+                };
+                driver.fold_events(
+                    &mut session,
+                    round as u64,
+                    EventSource::Stream(&mut next),
+                )?
             } else {
                 // ---- fast path: perfect network, streaming aggregation ----
                 // synchronous barrier = the recv count: the session decodes
@@ -466,20 +498,19 @@ impl Trainer {
                 // replicas (and reruns) stay bit-identical under any
                 // reordering — and records every message's bits on accept.
                 let rx = msg_rx.as_ref().expect("fast path owns the receiver");
-                let mut agg = session.begin_round();
-                for _ in 0..cfg.workers {
-                    let msg = rx.recv().map_err(|_| anyhow::anyhow!("workers gone"))??;
-                    let (worker, loss) = (msg.worker, msg.loss);
-                    agg.push(msg)?; // validates worker identity before we index
-                    losses[worker] = loss;
-                }
-                let train_loss = losses.iter().sum::<f32>() / cfg.workers as f32;
-                let avg = agg.finish()?;
-                delivery.push(RoundDelivery {
-                    received: cfg.workers as u32,
-                    expected: cfg.workers as u32,
-                });
-                (train_loss, avg)
+                driver.fold_messages(&mut session, || -> crate::Result<WorkerMsg> {
+                    rx.recv().map_err(|_| anyhow::anyhow!("workers gone"))?
+                })?
+            };
+            let (train_loss, avg) = match fold {
+                RoundFold::Stepped {
+                    average,
+                    train_loss,
+                    ..
+                } => (train_loss, average),
+                // survivable degraded round (nothing valid arrived / NDQSG
+                // bootstrap missing): no step this round
+                RoundFold::Skipped => continue,
             };
             // broadcast: full-precision averaged gradient (paper's setting)
             session.record_broadcast(32.0 * self.n_params as f64);
@@ -500,13 +531,7 @@ impl Trainer {
                 || round + 1 == cfg.rounds;
             if want_eval {
                 let (eval_loss, acc) = self.evaluate()?;
-                history.push(EvalPoint {
-                    round: round + 1,
-                    train_loss,
-                    eval_loss,
-                    accuracy: acc,
-                    cum_raw_bits_per_worker: session.stats().total_raw_bits / cfg.workers as f64,
-                });
+                driver.record_eval(round + 1, train_loss, eval_loss, acc, session.stats());
                 if self.verbose {
                     println!(
                         "round {:>5}  train_loss {:.4}  eval_loss {:.4}  acc {:.3}  kbits/msg {:.1}",
@@ -534,20 +559,13 @@ impl Trainer {
             w.shutdown();
         }
 
-        let last = history.last().copied();
-        Ok(TrainReport {
-            config_label: self.label(),
-            final_accuracy: last.map(|h| h.accuracy).unwrap_or(f64::NAN),
-            final_eval_loss: last.map(|h| h.eval_loss).unwrap_or(f32::NAN),
-            history,
-            comm: session.stats().clone(),
-            rounds: cfg.rounds,
-            rounds_failed,
-            delivery,
-            workers: cfg.workers,
-            n_params: self.n_params,
-            wall_secs: t0.elapsed().as_secs_f64(),
-        })
+        Ok(driver.into_report(
+            self.label(),
+            session.stats().clone(),
+            cfg.rounds,
+            self.n_params,
+            t0.elapsed().as_secs_f64(),
+        ))
     }
 
     /// Direct access to current parameters (for examples/inspection).

@@ -15,12 +15,19 @@ use crate::runtime::ComputeHandle;
 
 // The message type lives with the rest of the exchange machinery in
 // `comm`; re-exported here because workers are its producers.
-pub use crate::comm::WorkerMsg;
+pub use crate::comm::{RoundSpec, WorkerMsg};
 
 /// Commands from the server/trainer to a worker.
 pub enum WorkerCmd {
-    /// Run round `round` against the given (logically replicated) params.
-    Round { round: u64, params: Arc<Vec<f32>> },
+    /// Run round `round` against the given (logically replicated) params,
+    /// encoding under `spec` — the per-round negotiation the leader's
+    /// level policy planned. Workers re-key their quantizer only when the
+    /// spec actually changes, so fixed-policy runs pay nothing.
+    Round {
+        round: u64,
+        params: Arc<Vec<f32>>,
+        spec: RoundSpec,
+    },
     Shutdown,
 }
 
@@ -48,7 +55,8 @@ pub struct WorkerCfg {
     /// Wire-v2 framing: split the flat gradient into this many per-tensor
     /// frames per message (1 = single-frame, the classic layout).
     pub tensor_frames: usize,
-    /// Wire-v3 index-lane codec every uplink message ships under.
+    /// Wire-v3 index-lane codec at setup; each round's actual codec rides
+    /// in the round command's [`RoundSpec`].
     pub codec: PayloadCodec,
     pub task: TaskData,
 }
@@ -98,12 +106,22 @@ fn worker_loop(
     cmd_rx: mpsc::Receiver<WorkerCmd>,
     out: mpsc::Sender<crate::Result<WorkerMsg>>,
 ) {
-    let mut quantizer = cfg.scheme.build();
+    // encoder state for the currently-negotiated scheme; re-built only
+    // when a round command carries a different spec (the per-round levels
+    // dial). The dither stream is keyed (seed, worker) — scheme-free — so
+    // it survives every re-negotiation, as Alg. 1 requires.
+    let mut scheme = cfg.scheme;
+    let mut quantizer = scheme.build();
     let dither = DitherStream::new(cfg.run_seed, cfg.id as u32);
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
             WorkerCmd::Shutdown => break,
-            WorkerCmd::Round { round, params } => {
+            WorkerCmd::Round { round, params, spec } => {
+                let want = spec.worker_scheme(cfg.id, cfg.workers);
+                if want != scheme {
+                    scheme = want;
+                    quantizer = scheme.build();
+                }
                 let res = run_round(
                     &cfg,
                     &compute,
@@ -111,6 +129,7 @@ fn worker_loop(
                     &dither,
                     round,
                     &params,
+                    spec.codec,
                 );
                 // Drop our params reference BEFORE sending the result: the
                 // mpsc send synchronizes-with the leader's recv, so once the
@@ -132,6 +151,7 @@ fn run_round(
     dither: &DitherStream,
     round: u64,
     params: &Arc<Vec<f32>>,
+    codec: PayloadCodec,
 ) -> crate::Result<WorkerMsg> {
     let b = cfg.per_worker_batch;
     let (loss, grad) = match &cfg.task {
@@ -147,6 +167,6 @@ fn run_round(
         }
     };
     let slices = crate::quant::frame_slices(&grad, cfg.tensor_frames);
-    let wire = quantizer.encode_tensors_coded(&slices, &mut dither.round(round), cfg.codec);
+    let wire = quantizer.encode_tensors_coded(&slices, &mut dither.round(round), codec);
     Ok(WorkerMsg::new(cfg.id, round, loss, wire))
 }

@@ -6,9 +6,9 @@
 //! implementation, deliberately duplicated here so refactors of the
 //! production path cannot silently move the goalposts.
 
-use ndq::comm::{Session, WorkerMsg};
+use ndq::comm::{RoundSpec, Session, WorkerMsg};
 use ndq::prng::{DitherStream, Xoshiro256};
-use ndq::quant::{frame_slices, GradQuantizer, Scheme, SchemeId, SchemeRegistry};
+use ndq::quant::{frame_slices, GradQuantizer, PayloadCodec, Scheme, SchemeId, SchemeRegistry};
 
 // ---------------------------------------------------------------------------
 // Reference implementation: the pre-session batch decoder.
@@ -257,6 +257,86 @@ fn prop_partial_round_matches_reference_subset_semantics() {
             assert_permutation_matches(&mut session, &sub_msgs, &order, &reference);
         }
     }
+}
+
+#[test]
+fn prop_mixed_spec_rounds_fold_bit_identically_and_ledger_stays_exact() {
+    // The round-plan engine's session contract: a run whose rounds ship
+    // under DIFFERENT RoundSpecs (re-leveled alphabets, different codecs)
+    // must still fold every round bit-identically to the verbatim
+    // reference under any arrival permutation, and the per-spec ledger
+    // lanes must equal the sum of the encode-time BitMetrics of exactly
+    // the messages billed to each spec.
+    let base = RoundSpec {
+        scheme: Scheme::Dithered { delta: 1.0 / 3.0 },
+        scheme_p2: Some(Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 }),
+        codec: PayloadCodec::Raw,
+    };
+    let workers = 5;
+    let n = 1200;
+    let specs: Vec<RoundSpec> = vec![
+        base.with_levels(3).unwrap(),
+        base.with_levels(7).unwrap(),
+        RoundSpec { codec: PayloadCodec::Huffman, ..base.with_levels(15).unwrap() },
+        base.with_levels(7).unwrap(), // revisit an earlier spec
+    ];
+    let mut session = Session::new(&base.worker_schemes(workers), 31, n).unwrap();
+    let mut rng = Xoshiro256::new(0xD44);
+    // expected per-spec sums, accumulated from encode-time metrics
+    let mut expect: std::collections::BTreeMap<String, (u64, f64, f64)> =
+        std::collections::BTreeMap::new();
+    const PERMS: usize = 6;
+
+    for (round, spec) in specs.iter().enumerate() {
+        let round = round as u64;
+        session.apply_spec(spec).unwrap();
+        let schemes = spec.worker_schemes(workers);
+        let gs = correlated_grads(n, workers, 7000 + round);
+        let msgs: Vec<WorkerMsg> = gs
+            .iter()
+            .enumerate()
+            .map(|(p, g)| {
+                let mut q = schemes[p].build();
+                let stream = DitherStream::new(31, p as u32);
+                let wire = q.encode_coded(g, &mut stream.round(round), spec.codec);
+                WorkerMsg::new(p, round, 0.0, wire)
+            })
+            .collect();
+        let reference = RefServer::new(&schemes, 31, n).decode_round(&msgs).unwrap();
+        for _ in 0..PERMS {
+            let order = shuffled(msgs.len(), &mut rng);
+            assert_permutation_matches(&mut session, &msgs, &order, &reference);
+        }
+        // every permutation re-billed the round's messages into this
+        // spec's lane
+        let lane = expect.entry(spec.label()).or_insert((0, 0.0, 0.0));
+        for m in &msgs {
+            lane.0 += PERMS as u64;
+            lane.1 += PERMS as f64 * m.metrics.transmitted_bits as f64;
+            lane.2 += PERMS as f64 * m.metrics.raw_bits as f64;
+        }
+    }
+
+    let stats = session.stats();
+    assert_eq!(stats.per_spec.len(), 3, "{:?}", stats.per_spec.keys());
+    for (label, (msgs, tx, raw)) in &expect {
+        let lane = stats
+            .per_spec
+            .get(label)
+            .unwrap_or_else(|| panic!("no ledger lane for spec `{label}`"));
+        assert_eq!(lane.messages, *msgs, "{label}");
+        assert_eq!(lane.transmitted_bits, *tx, "{label}");
+        assert_eq!(lane.raw_bits, *raw, "{label}");
+    }
+    // and the lanes sum to the ledger totals exactly
+    let lane_msgs: u64 = stats.per_spec.values().map(|l| l.messages).sum();
+    let lane_tx: f64 = stats.per_spec.values().map(|l| l.transmitted_bits).sum();
+    assert_eq!(lane_msgs, stats.messages);
+    assert_eq!(lane_tx, stats.total_transmitted_bits);
+    // the huffman-coded 15-level round genuinely shipped below its
+    // raw-equivalent rate
+    let coded = &stats.per_spec[&specs[2].label()];
+    assert!(coded.transmitted_bits < coded.raw_bits);
 }
 
 #[test]

@@ -63,6 +63,19 @@ cargo run --release --quiet -- cluster \
     --fault-plan "drop:0.15;straggle:w2x6;corrupt:w1@r3" \
     --round-policy quorum:5
 
+# Round-plan engine smoke: an adaptive level schedule (15 -> 7 -> 3 levels,
+# huffman-coded lanes) through the real CLI, with its per-spec ledger lanes
+# and deterministic fingerprint. The run appends one JSON-line perf record
+# (rounds/sec, transmitted kbits/round, final loss) to the repo-root
+# BENCH_train.json so the training-path perf trajectory accrues across PRs.
+echo "== ndq cluster adaptive-levels smoke =="
+GIT_REV="$(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
+NDQ_BENCH_REV="$GIT_REV" cargo run --release --quiet -- cluster \
+    --workers 8 --rounds 30 --codec huffman \
+    --scheme dqsg:0.333333 --scheme-p2 nested:0.333333:3:1.0 \
+    --levels-policy "schedule:0=15,10=7,20=3" \
+    --bench-append ../BENCH_train.json
+
 # Wire-path bench smoke in quick mode: perf_coding always runs (no
 # artifacts needed); table2_entropy_bits self-skips when artifacts are
 # absent. Each run's results are appended to BENCH_wire.json as one
