@@ -389,6 +389,7 @@ impl FaultChannel {
                     round,
                     loss,
                     arrival_s,
+                    metrics,
                     payload: Delivery::Lost { bits, fault: Fault::Delay { rounds } },
                 }]
             }
@@ -427,6 +428,7 @@ impl FaultChannel {
                     round,
                     loss,
                     arrival_s,
+                    metrics,
                     payload: Delivery::Bytes(bytes),
                 }]
             }
@@ -591,6 +593,36 @@ mod tests {
         let ev = ch.feed(clean);
         let Delivery::Bytes(b) = &ev[0].payload else { panic!() };
         assert_eq!(*b, want);
+    }
+
+    #[test]
+    fn every_fault_path_carries_encode_time_metrics() {
+        // The ledger bills from the sender's encode-time BitMetrics carried
+        // on the event envelope — never by re-decoding a payload. Every
+        // fault arm (and the delay-release path) must forward them intact.
+        let plan = FaultPlan::new()
+            .drop_at(0, 0)
+            .corrupt_at(1, 0)
+            .duplicate_at(2, 0)
+            .delay_at(3, 0, 2)
+            .disconnect_at(4, 0);
+        let mut ch = FaultChannel::new(plan, 11, 6, LinkModel::gigabit());
+        for w in 0..6 {
+            let m = msg(w, 0);
+            let want = m.metrics;
+            assert!(want.transmitted_bits > 0, "test message must carry metrics");
+            for ev in ch.feed(m) {
+                assert_eq!(
+                    ev.metrics, want,
+                    "worker {w}: fault path must keep encode-time metrics"
+                );
+            }
+        }
+        // the delay-parked copy re-emerges with its original metrics too
+        let want = msg(3, 0).metrics;
+        for ev in ch.flush(u64::MAX) {
+            assert_eq!(ev.metrics, want, "released delayed message lost metrics");
+        }
     }
 
     #[test]

@@ -30,12 +30,19 @@
 //!   by a [`FaultChannel`], and consumed by the policy-aware [`Exchange`]
 //!   round front end ([`Session::begin_exchange`]) under a [`RoundPolicy`]
 //!   (`WaitAll` / `Quorum(k)` / `Deadline(t)`).
+//! * [`net`] — the real-socket transport (`ndq serve` / `ndq worker`):
+//!   TCP or Unix-domain streams carrying CRC-framed envelopes —
+//!   `RoundSpec` broadcasts down, `WorkerMsg` uplinks (wire bytes + the
+//!   encode-time [`BitMetrics`] envelope) up — reassembled with pooled
+//!   read buffers into the same [`ChannelEvent`] fold the in-process
+//!   trainers use.
 //!
 //! The decode hot path is allocation-free per frame: payloads decode
 //! through [`crate::quant::GradQuantizer::decode_frame_into`] into pooled
 //! buffers that the session reuses across messages *and* rounds.
 
 pub mod faults;
+pub mod net;
 mod session;
 mod stats;
 

@@ -1,0 +1,860 @@
+//! Real-socket transport for the gradient exchange: TCP and Unix-domain
+//! streams carrying CRC-framed envelopes between an `ndq serve` leader and
+//! `ndq worker --connect` peers.
+//!
+//! The exchange stack was already a bytes-in/bytes-out boundary — workers
+//! produce CRC-checksummed [`crate::quant::WireMsg`] payloads, the leader
+//! folds [`crate::comm::ChannelEvent`]s — so this module only adds the
+//! plumbing that was simulated before:
+//!
+//! * [`NetAddr`] / [`NetListener`] / [`NetStream`] — one address grammar
+//!   (`tcp:HOST:PORT` | `uds:PATH`) over both socket families, with
+//!   connect-retry (workers may start before the leader binds) and
+//!   per-connection read timeouts (the backpressure knob the leader ties
+//!   to its round policy).
+//! * The **envelope protocol**: every message is one frame
+//!   `magic "NV" | kind u8 | len u32 LE | body | crc32 LE` (checksum over
+//!   header + body, via the same [`crate::coding::crc`] the wire format
+//!   uses). Frames are reassembled with `read_exact` through a pooled
+//!   buffer ([`FrameReader`]) — partial writes and slow reads are handled
+//!   by construction, and a flipped byte anywhere in the frame fails the
+//!   checksum instead of desyncing the stream.
+//! * [`NetMsg`] — the five message kinds of the leader/worker protocol
+//!   (`Hello`, `Start`, `Round`, `Grad`, `Bye`). `Round` carries the
+//!   [`RoundSpec`] **binarily** (f32 parameters bit-exact, never through a
+//!   formatted label), so per-round re-leveling over the wire plans the
+//!   exact same schemes as the in-process trainer. `Grad` carries the
+//!   sender's encode-time [`BitMetrics`] next to the wire bytes — a
+//!   re-parsed [`crate::quant::WireMsg`] cannot carry metrics itself, and
+//!   the ledger must never re-decode a payload to bill it.
+//!
+//! Determinism note: the leader folds socket uploads through the same
+//! seeded [`crate::comm::FaultChannel`] virtual clock the in-process
+//! harness uses (wall-clock receive times are reported separately as
+//! transport diagnostics), which is what makes a loopback multi-process
+//! run fingerprint-identical to the in-process trainer.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::coding::crc;
+use crate::comm::RoundSpec;
+use crate::quant::{BitMetrics, PayloadCodec, Scheme};
+
+/// Envelope magic (`"NV"`), distinct from the wire-v3 payload magic `"NQ"`.
+pub const NET_MAGIC: [u8; 2] = *b"NV";
+/// Envelope protocol version carried in `Hello`.
+pub const NET_VERSION: u32 = 1;
+/// Envelope header: magic(2) + kind(1) + body length(4).
+pub const NET_HEADER_BYTES: usize = 7;
+/// Parse-time cap on a claimed body length: large enough for a baseline
+/// f32 broadcast of any model in this repo, small enough that a corrupted
+/// or hostile length field cannot drive an allocation anywhere near memory
+/// exhaustion.
+pub const MAX_BODY_BYTES: usize = 1 << 30;
+
+// ---------------------------------------------------------------------------
+// addresses + sockets
+// ---------------------------------------------------------------------------
+
+/// A transport endpoint: `tcp:HOST:PORT` or `uds:PATH`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetAddr {
+    Tcp(String),
+    Uds(PathBuf),
+}
+
+impl NetAddr {
+    /// Parse the CLI grammar: `tcp:HOST:PORT` | `uds:PATH`.
+    pub fn parse(s: &str) -> crate::Result<NetAddr> {
+        if let Some(hostport) = s.strip_prefix("tcp:") {
+            anyhow::ensure!(
+                hostport.contains(':'),
+                "tcp address `{hostport}` is not HOST:PORT"
+            );
+            return Ok(NetAddr::Tcp(hostport.to_string()));
+        }
+        if let Some(path) = s.strip_prefix("uds:") {
+            anyhow::ensure!(!path.is_empty(), "empty uds socket path");
+            return Ok(NetAddr::Uds(PathBuf::from(path)));
+        }
+        anyhow::bail!("unknown address `{s}` (tcp:HOST:PORT | uds:PATH)")
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            NetAddr::Tcp(hp) => format!("tcp:{hp}"),
+            NetAddr::Uds(p) => format!("uds:{}", p.display()),
+        }
+    }
+}
+
+/// A bound listener over either socket family.
+pub enum NetListener {
+    Tcp(TcpListener),
+    Uds(UnixListener),
+}
+
+impl NetListener {
+    /// Bind `addr`. A stale Unix socket file from a previous run is
+    /// removed first (binding over it would otherwise fail forever).
+    pub fn bind(addr: &NetAddr) -> crate::Result<NetListener> {
+        match addr {
+            NetAddr::Tcp(hp) => Ok(NetListener::Tcp(
+                TcpListener::bind(hp.as_str())
+                    .map_err(|e| anyhow::anyhow!("binding tcp:{hp}: {e}"))?,
+            )),
+            NetAddr::Uds(path) => {
+                let _ = std::fs::remove_file(path);
+                Ok(NetListener::Uds(UnixListener::bind(path).map_err(|e| {
+                    anyhow::anyhow!("binding uds:{}: {e}", path.display())
+                })?))
+            }
+        }
+    }
+
+    /// The actual bound address — what peers should dial. Matters after
+    /// binding `tcp:HOST:0`, where the OS picks the port.
+    pub fn local_addr(&self) -> crate::Result<NetAddr> {
+        Ok(match self {
+            NetListener::Tcp(l) => NetAddr::Tcp(l.local_addr()?.to_string()),
+            NetListener::Uds(l) => NetAddr::Uds(
+                l.local_addr()?
+                    .as_pathname()
+                    .map(PathBuf::from)
+                    .unwrap_or_default(),
+            ),
+        })
+    }
+
+    /// Block for the next connection.
+    pub fn accept(&self) -> crate::Result<NetStream> {
+        Ok(match self {
+            NetListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true).ok();
+                NetStream::Tcp(s)
+            }
+            NetListener::Uds(l) => {
+                let (s, _) = l.accept()?;
+                NetStream::Uds(s)
+            }
+        })
+    }
+}
+
+/// One connected stream over either socket family. `Read`/`Write`
+/// delegate to the underlying socket; use [`NetStream::try_clone`] to
+/// split into a reader half and a writer half.
+pub enum NetStream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl NetStream {
+    /// Connect once.
+    pub fn connect(addr: &NetAddr) -> crate::Result<NetStream> {
+        Ok(match addr {
+            NetAddr::Tcp(hp) => {
+                let s = TcpStream::connect(hp.as_str())
+                    .map_err(|e| anyhow::anyhow!("connecting tcp:{hp}: {e}"))?;
+                s.set_nodelay(true).ok();
+                NetStream::Tcp(s)
+            }
+            NetAddr::Uds(path) => NetStream::Uds(UnixStream::connect(path).map_err(|e| {
+                anyhow::anyhow!("connecting uds:{}: {e}", path.display())
+            })?),
+        })
+    }
+
+    /// Connect with retry until `timeout` elapses — workers routinely
+    /// start before the leader has bound its socket.
+    pub fn connect_retry(addr: &NetAddr, timeout: Duration) -> crate::Result<NetStream> {
+        let t0 = std::time::Instant::now();
+        loop {
+            match NetStream::connect(addr) {
+                Ok(s) => return Ok(s),
+                Err(e) => {
+                    if t0.elapsed() >= timeout {
+                        return Err(anyhow::anyhow!(
+                            "{} unreachable after {:.1}s: {e}",
+                            addr.label(),
+                            timeout.as_secs_f64()
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Clone the underlying socket handle (reader/writer split).
+    pub fn try_clone(&self) -> crate::Result<NetStream> {
+        Ok(match self {
+            NetStream::Tcp(s) => NetStream::Tcp(s.try_clone()?),
+            NetStream::Uds(s) => NetStream::Uds(s.try_clone()?),
+        })
+    }
+
+    /// Per-connection read timeout — the leader's backpressure knob: a
+    /// peer that stays silent past the deadline is treated as dead
+    /// instead of stalling the round forever. `None` blocks indefinitely.
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> crate::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_read_timeout(dur)?,
+            NetStream::Uds(s) => s.set_read_timeout(dur)?,
+        }
+        Ok(())
+    }
+
+    /// Shut down both directions (unblocks a reader on the other half).
+    pub fn shutdown(&self) {
+        match self {
+            NetStream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            NetStream::Uds(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            NetStream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            NetStream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            NetStream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// envelope framing
+// ---------------------------------------------------------------------------
+
+/// Write one framed envelope: header, body, trailing CRC-32 over
+/// header + body. `write_all` loops over partial writes by contract.
+pub fn write_envelope(w: &mut impl Write, kind: u8, body: &[u8]) -> crate::Result<()> {
+    anyhow::ensure!(body.len() <= MAX_BODY_BYTES, "envelope body too large");
+    let mut header = [0u8; NET_HEADER_BYTES];
+    header[..2].copy_from_slice(&NET_MAGIC);
+    header[2] = kind;
+    header[3..7].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    let mut sum = crc::checksum(&header);
+    sum = crc::update(sum, body);
+    w.write_all(&header)?;
+    w.write_all(body)?;
+    w.write_all(&sum.to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Pooled frame reassembler: one reusable body buffer per connection, so
+/// a leader decoding thousands of rounds allocates only when a message
+/// outgrows every previous one. `read_exact` loops over however many
+/// partial reads the kernel serves.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Read one envelope; returns `(kind, body)`. Errors on EOF,
+    /// bad magic, an oversized length claim, or a checksum mismatch.
+    pub fn read<'a>(&'a mut self, r: &mut impl Read) -> crate::Result<(u8, &'a [u8])> {
+        let mut header = [0u8; NET_HEADER_BYTES];
+        r.read_exact(&mut header)
+            .map_err(|e| anyhow::anyhow!("reading envelope header: {e}"))?;
+        anyhow::ensure!(
+            header[..2] == NET_MAGIC,
+            "bad envelope magic {:#04x}{:02x} (want \"NV\")",
+            header[0],
+            header[1]
+        );
+        let kind = header[2];
+        let len = u32::from_le_bytes(header[3..7].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            len <= MAX_BODY_BYTES,
+            "envelope claims {len} body bytes (cap {MAX_BODY_BYTES})"
+        );
+        self.buf.resize(len, 0);
+        r.read_exact(&mut self.buf)
+            .map_err(|e| anyhow::anyhow!("reading {len}-byte envelope body: {e}"))?;
+        let mut trailer = [0u8; 4];
+        r.read_exact(&mut trailer)
+            .map_err(|e| anyhow::anyhow!("reading envelope checksum: {e}"))?;
+        let want = u32::from_le_bytes(trailer);
+        let mut sum = crc::checksum(&header);
+        sum = crc::update(sum, &self.buf);
+        anyhow::ensure!(
+            want == sum,
+            "envelope checksum mismatch: trailer says {want:#010x}, frame hashes to {sum:#010x}"
+        );
+        Ok((kind, &self.buf))
+    }
+
+    /// Read + decode one protocol message.
+    pub fn read_msg(&mut self, r: &mut impl Read) -> crate::Result<NetMsg> {
+        let (kind, body) = self.read(r)?;
+        NetMsg::decode(kind, body)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// protocol messages
+// ---------------------------------------------------------------------------
+
+const KIND_HELLO: u8 = 1;
+const KIND_START: u8 = 2;
+const KIND_ROUND: u8 = 3;
+const KIND_GRAD: u8 = 4;
+const KIND_BYE: u8 = 5;
+
+/// The leader/worker protocol. Lifecycle:
+/// worker `Hello` -> leader `Start` -> per round (leader `Round` ->
+/// worker `Grad`) -> leader `Bye`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetMsg {
+    /// Worker's opening handshake.
+    Hello { version: u32 },
+    /// Leader's task assignment: the worker's identity plus everything it
+    /// needs to derive its task shard and dither stream from the run seed.
+    Start {
+        assigned_id: u32,
+        workers: u32,
+        n_params: u64,
+        rounds: u64,
+        seed: u64,
+        /// Per-worker gradient-noise std of the synthetic quadratic.
+        noise: f32,
+    },
+    /// Per-round broadcast: the negotiated spec (the re-leveling dial) and
+    /// the replicated parameters.
+    Round {
+        round: u64,
+        spec: RoundSpec,
+        params: Vec<f32>,
+    },
+    /// A worker's uplink: the CRC-framed wire bytes plus the envelope
+    /// fields a re-parsed `WireMsg` cannot carry (loss, encode-time
+    /// metrics).
+    Grad {
+        worker: u32,
+        round: u64,
+        loss: f32,
+        metrics: BitMetrics,
+        wire: Vec<u8>,
+    },
+    /// Orderly shutdown (either direction).
+    Bye,
+}
+
+impl NetMsg {
+    pub fn kind(&self) -> u8 {
+        match self {
+            NetMsg::Hello { .. } => KIND_HELLO,
+            NetMsg::Start { .. } => KIND_START,
+            NetMsg::Round { .. } => KIND_ROUND,
+            NetMsg::Grad { .. } => KIND_GRAD,
+            NetMsg::Bye => KIND_BYE,
+        }
+    }
+
+    /// Serialize the body (everything after the envelope header).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            NetMsg::Hello { version } => put_u32(&mut out, *version),
+            NetMsg::Start {
+                assigned_id,
+                workers,
+                n_params,
+                rounds,
+                seed,
+                noise,
+            } => {
+                put_u32(&mut out, *assigned_id);
+                put_u32(&mut out, *workers);
+                put_u64(&mut out, *n_params);
+                put_u64(&mut out, *rounds);
+                put_u64(&mut out, *seed);
+                put_f32(&mut out, *noise);
+            }
+            NetMsg::Round { round, spec, params } => {
+                put_u64(&mut out, *round);
+                put_spec(&mut out, spec);
+                put_u64(&mut out, params.len() as u64);
+                for &p in params {
+                    put_f32(&mut out, p);
+                }
+            }
+            NetMsg::Grad {
+                worker,
+                round,
+                loss,
+                metrics,
+                wire,
+            } => {
+                put_u32(&mut out, *worker);
+                put_u64(&mut out, *round);
+                put_f32(&mut out, *loss);
+                put_u64(&mut out, metrics.transmitted_bits);
+                put_u64(&mut out, metrics.raw_bits);
+                put_f64(&mut out, metrics.entropy_bits);
+                match metrics.aac_bits {
+                    Some(b) => {
+                        out.push(1);
+                        put_u64(&mut out, b);
+                    }
+                    None => out.push(0),
+                }
+                put_u32(&mut out, metrics.fallback_frames);
+                put_u64(&mut out, wire.len() as u64);
+                out.extend_from_slice(wire);
+            }
+            NetMsg::Bye => {}
+        }
+        out
+    }
+
+    /// Write this message as one framed envelope.
+    pub fn write_to(&self, w: &mut impl Write) -> crate::Result<()> {
+        write_envelope(w, self.kind(), &self.encode())
+    }
+
+    /// Decode a body by envelope kind.
+    pub fn decode(kind: u8, body: &[u8]) -> crate::Result<NetMsg> {
+        let mut c = Cur { b: body, p: 0 };
+        let msg = match kind {
+            KIND_HELLO => NetMsg::Hello { version: c.u32()? },
+            KIND_START => NetMsg::Start {
+                assigned_id: c.u32()?,
+                workers: c.u32()?,
+                n_params: c.u64()?,
+                rounds: c.u64()?,
+                seed: c.u64()?,
+                noise: c.f32()?,
+            },
+            KIND_ROUND => {
+                let round = c.u64()?;
+                let spec = get_spec(&mut c)?;
+                let n = c.u64()? as usize;
+                anyhow::ensure!(
+                    n.checked_mul(4).is_some_and(|b| b <= c.remaining()),
+                    "round broadcast claims {n} params in {} bytes",
+                    c.remaining()
+                );
+                let mut params = Vec::with_capacity(n);
+                for _ in 0..n {
+                    params.push(c.f32()?);
+                }
+                NetMsg::Round { round, spec, params }
+            }
+            KIND_GRAD => {
+                let worker = c.u32()?;
+                let round = c.u64()?;
+                let loss = c.f32()?;
+                let transmitted_bits = c.u64()?;
+                let raw_bits = c.u64()?;
+                let entropy_bits = c.f64()?;
+                let aac_bits = match c.u8()? {
+                    0 => None,
+                    1 => Some(c.u64()?),
+                    v => anyhow::bail!("bad aac flag {v}"),
+                };
+                let fallback_frames = c.u32()?;
+                let n = c.u64()? as usize;
+                anyhow::ensure!(
+                    n <= c.remaining(),
+                    "grad claims {n} wire bytes, {} remain",
+                    c.remaining()
+                );
+                NetMsg::Grad {
+                    worker,
+                    round,
+                    loss,
+                    metrics: BitMetrics {
+                        transmitted_bits,
+                        raw_bits,
+                        entropy_bits,
+                        aac_bits,
+                        fallback_frames,
+                    },
+                    wire: c.bytes(n)?.to_vec(),
+                }
+            }
+            KIND_BYE => NetMsg::Bye,
+            other => anyhow::bail!("unknown envelope kind {other}"),
+        };
+        anyhow::ensure!(
+            c.remaining() == 0,
+            "{} trailing bytes after envelope body",
+            c.remaining()
+        );
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scheme / spec serialization (binary — f32 fields travel bit-exact, so
+// a re-leveled spec decodes to the *identical* Scheme value on the peer)
+// ---------------------------------------------------------------------------
+
+const SCHEME_BASELINE: u8 = 0;
+const SCHEME_DITHERED: u8 = 1;
+const SCHEME_DITHERED_PART: u8 = 2;
+const SCHEME_QSGD: u8 = 3;
+const SCHEME_TERNGRAD: u8 = 4;
+const SCHEME_ONEBIT: u8 = 5;
+const SCHEME_NESTED: u8 = 6;
+
+fn put_scheme(out: &mut Vec<u8>, s: &Scheme) {
+    match *s {
+        Scheme::Baseline => out.push(SCHEME_BASELINE),
+        Scheme::Dithered { delta } => {
+            out.push(SCHEME_DITHERED);
+            put_f32(out, delta);
+        }
+        Scheme::DitheredPartitioned { delta, k } => {
+            out.push(SCHEME_DITHERED_PART);
+            put_f32(out, delta);
+            put_u64(out, k as u64);
+        }
+        Scheme::Qsgd { m } => {
+            out.push(SCHEME_QSGD);
+            put_u32(out, m as u32);
+        }
+        Scheme::Terngrad => out.push(SCHEME_TERNGRAD),
+        Scheme::OneBit => out.push(SCHEME_ONEBIT),
+        Scheme::Nested { d1, ratio, alpha } => {
+            out.push(SCHEME_NESTED);
+            put_f32(out, d1);
+            put_u32(out, ratio);
+            put_f32(out, alpha);
+        }
+    }
+}
+
+fn get_scheme(c: &mut Cur) -> crate::Result<Scheme> {
+    Ok(match c.u8()? {
+        SCHEME_BASELINE => Scheme::Baseline,
+        SCHEME_DITHERED => Scheme::Dithered { delta: c.f32()? },
+        SCHEME_DITHERED_PART => Scheme::DitheredPartitioned {
+            delta: c.f32()?,
+            k: c.u64()? as usize,
+        },
+        SCHEME_QSGD => Scheme::Qsgd { m: c.u32()? as i32 },
+        SCHEME_TERNGRAD => Scheme::Terngrad,
+        SCHEME_ONEBIT => Scheme::OneBit,
+        SCHEME_NESTED => Scheme::Nested {
+            d1: c.f32()?,
+            ratio: c.u32()?,
+            alpha: c.f32()?,
+        },
+        other => anyhow::bail!("unknown scheme tag {other} in round broadcast"),
+    })
+}
+
+fn put_spec(out: &mut Vec<u8>, spec: &RoundSpec) {
+    put_scheme(out, &spec.scheme);
+    match &spec.scheme_p2 {
+        Some(s2) => {
+            out.push(1);
+            put_scheme(out, s2);
+        }
+        None => out.push(0),
+    }
+    out.push(spec.codec as u8);
+}
+
+fn get_spec(c: &mut Cur) -> crate::Result<RoundSpec> {
+    let scheme = get_scheme(c)?;
+    let scheme_p2 = match c.u8()? {
+        0 => None,
+        1 => Some(get_scheme(c)?),
+        v => anyhow::bail!("bad scheme_p2 flag {v}"),
+    };
+    let codec = PayloadCodec::from_u8(c.u8()?)?;
+    Ok(RoundSpec {
+        scheme,
+        scheme_p2,
+        codec,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// little-endian primitives
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over an envelope body.
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.p
+    }
+
+    fn bytes(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "envelope body truncated: want {n} bytes, {} remain",
+            self.remaining()
+        );
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> crate::Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serves at most one byte per `write` call — exercises the partial-
+    /// write path `write_all` must absorb.
+    struct TrickleWriter(Vec<u8>);
+
+    impl Write for TrickleWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if buf.is_empty() {
+                return Ok(0);
+            }
+            self.0.push(buf[0]);
+            Ok(1)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Serves at most one byte per `read` call — the slow-read path the
+    /// frame reassembly must absorb.
+    struct TrickleReader<'a> {
+        data: &'a [u8],
+        pos: usize,
+    }
+
+    impl Read for TrickleReader<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() || buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    fn sample_msgs() -> Vec<NetMsg> {
+        vec![
+            NetMsg::Hello { version: NET_VERSION },
+            NetMsg::Start {
+                assigned_id: 3,
+                workers: 8,
+                n_params: 2000,
+                rounds: 30,
+                seed: 0xDEAD_BEEF_0042,
+                noise: 0.05,
+            },
+            NetMsg::Round {
+                round: 17,
+                spec: RoundSpec {
+                    scheme: Scheme::Dithered { delta: 1.0 / 3.0 },
+                    scheme_p2: Some(Scheme::Nested {
+                        d1: 1.0 / 3.0,
+                        ratio: 3,
+                        alpha: 0.7,
+                    }),
+                    codec: PayloadCodec::Huffman,
+                },
+                params: vec![0.125, -1.0 / 3.0, f32::MIN_POSITIVE, -0.0],
+            },
+            NetMsg::Grad {
+                worker: 5,
+                round: 17,
+                loss: 0.042,
+                metrics: BitMetrics {
+                    transmitted_bits: 12345,
+                    raw_bits: 20000,
+                    entropy_bits: 9876.5,
+                    aac_bits: Some(11111),
+                    fallback_frames: 2,
+                },
+                wire: vec![0xAB; 37],
+            },
+            NetMsg::Bye,
+        ]
+    }
+
+    #[test]
+    fn envelope_roundtrip_survives_partial_writes_and_slow_reads() {
+        // every message, written one byte at a time, read one byte at a
+        // time, must reassemble bit-identically — f32 fields included
+        for msg in sample_msgs() {
+            let mut w = TrickleWriter(Vec::new());
+            msg.write_to(&mut w).unwrap();
+            let mut r = TrickleReader { data: &w.0, pos: 0 };
+            let mut fr = FrameReader::new();
+            let back = fr.read_msg(&mut r).unwrap();
+            assert_eq!(back, msg);
+            // nothing left on the stream
+            assert!(fr.read_msg(&mut r).is_err(), "EOF must error, not hang");
+        }
+    }
+
+    #[test]
+    fn pooled_reader_handles_back_to_back_frames() {
+        let mut bytes = Vec::new();
+        for msg in sample_msgs() {
+            msg.write_to(&mut bytes).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(bytes);
+        let mut fr = FrameReader::new();
+        for want in sample_msgs() {
+            assert_eq!(fr.read_msg(&mut cursor).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn corruption_anywhere_in_the_frame_fails_the_checksum() {
+        let msg = NetMsg::Grad {
+            worker: 1,
+            round: 2,
+            loss: 0.5,
+            metrics: BitMetrics::default(),
+            wire: vec![7; 16],
+        };
+        let mut clean = Vec::new();
+        msg.write_to(&mut clean).unwrap();
+        // flip one byte at every position that leaves framing intact
+        // (header magic/length corruption errors differently but still
+        // errors; body corruption must be caught by the CRC)
+        for idx in NET_HEADER_BYTES..clean.len() {
+            let mut bad = clean.clone();
+            bad[idx] ^= 0x5A;
+            let mut cursor = std::io::Cursor::new(bad);
+            assert!(
+                FrameReader::new().read_msg(&mut cursor).is_err(),
+                "flipped byte {idx} went unnoticed"
+            );
+        }
+        // truncation mid-body errors instead of hanging
+        let mut cursor = std::io::Cursor::new(clean[..clean.len() - 9].to_vec());
+        assert!(FrameReader::new().read_msg(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn hostile_length_claims_are_capped() {
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&NET_MAGIC);
+        frame.push(KIND_BYE);
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(frame);
+        let err = FrameReader::new()
+            .read_msg(&mut cursor)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn addr_grammar_parses_and_rejects() {
+        assert_eq!(
+            NetAddr::parse("tcp:127.0.0.1:7070").unwrap(),
+            NetAddr::Tcp("127.0.0.1:7070".into())
+        );
+        assert_eq!(
+            NetAddr::parse("uds:/tmp/ndq.sock").unwrap(),
+            NetAddr::Uds(PathBuf::from("/tmp/ndq.sock"))
+        );
+        assert_eq!(NetAddr::parse("uds:/tmp/a.sock").unwrap().label(), "uds:/tmp/a.sock");
+        for bad in ["", "udp:1.2.3.4:5", "tcp:nocolon", "uds:"] {
+            assert!(NetAddr::parse(bad).is_err(), "`{bad}` parsed");
+        }
+    }
+
+    #[test]
+    fn spec_serialization_is_bit_exact_for_every_scheme() {
+        let schemes = [
+            Scheme::Baseline,
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::DitheredPartitioned { delta: 0.2, k: 8 },
+            Scheme::Qsgd { m: 7 },
+            Scheme::Terngrad,
+            Scheme::OneBit,
+            Scheme::Nested { d1: 1.0 / 7.0, ratio: 5, alpha: 0.9 },
+        ];
+        for s in schemes {
+            for p2 in [None, Some(Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 })] {
+                for codec in [PayloadCodec::Raw, PayloadCodec::Huffman, PayloadCodec::Aac] {
+                    let spec = RoundSpec { scheme: s, scheme_p2: p2, codec };
+                    let mut out = Vec::new();
+                    put_spec(&mut out, &spec);
+                    let mut c = Cur { b: &out, p: 0 };
+                    assert_eq!(get_spec(&mut c).unwrap(), spec);
+                    assert_eq!(c.remaining(), 0);
+                }
+            }
+        }
+    }
+}

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train      run a distributed training round loop (the paper's Alg. 1/2)
 //!   cluster    run the fault-injected scenario engine (no artifacts needed)
+//!   serve      lead a cluster scenario over real sockets (TCP or UDS)
+//!   worker     join an `ndq serve` leader as a socket peer
 //!   info       summarize the artifact manifest
 //!   quantize   encode/decode a synthetic gradient with every scheme
 //!
@@ -14,18 +16,21 @@
 //!             --fault-plan "drop:0.1" --round-policy quorum:5
 //!   ndq cluster --workers 8 --fault-plan "drop:0.15;straggle:w2x6" \
 //!               --round-policy quorum:5
+//!   ndq serve --bind uds:/tmp/ndq.sock --workers 4 &
+//!   for i in 1 2 3 4; do ndq worker --connect uds:/tmp/ndq.sock & done
 //!   ndq quantize --n 100000
 
 // Config assembly is deliberately field-by-field from parsed CLI args.
 #![allow(clippy::field_reassign_with_default)]
 
 use ndq::cli::Args;
+use ndq::comm::net::NetAddr;
 use ndq::comm::{FaultPlan, RoundPolicy};
 use ndq::config::{OptKind, TrainConfig};
 use ndq::prng::DitherStream;
 use ndq::quant::{frame_slices, GradQuantizer, PayloadCodec, Scheme};
 use ndq::sim::LinkModel;
-use ndq::testing::cluster::{ClusterHarness, ClusterScenario};
+use ndq::testing::cluster::{ClusterHarness, ClusterScenario, ServeOptions};
 use ndq::train::LevelPolicy;
 
 fn main() {
@@ -45,12 +50,14 @@ fn real_main() -> ndq::Result<()> {
     match sub.as_str() {
         "train" => cmd_train(argv),
         "cluster" => cmd_cluster(argv),
+        "serve" => cmd_serve(argv),
+        "worker" => cmd_worker(argv),
         "info" => cmd_info(argv),
         "quantize" => cmd_quantize(argv),
         _ => {
             println!(
                 "ndq — Nested Dithered Quantization distributed trainer\n\n\
-                 USAGE: ndq <train|cluster|info|quantize> [options]\n\
+                 USAGE: ndq <train|cluster|serve|worker|info|quantize> [options]\n\
                  Run `ndq <subcommand> --help` for options."
             );
             Ok(())
@@ -155,38 +162,38 @@ fn print_fault_summary(report: &ndq::train::TrainReport) {
     );
 }
 
-fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
-    let args = Args::new(
-        "ndq cluster",
-        "fault-injected cluster scenario engine (synthetic task, no artifacts)",
-    )
-    .opt("workers", "4", "number of workers P")
-    .opt("n", "2000", "gradient dimensionality")
-    .opt("rounds", "30", "rounds to run")
-    .opt("scheme", "dqsg:0.333333", "P1 scheme (see `ndq train --help`)")
-    .opt("scheme-p2", "none", "scheme for the second worker half (NDQSG mixes)")
-    .opt("codec", "raw", "wire-v3 index-lane codec: raw|huffman|aac")
-    .opt(
-        "levels-policy",
-        "fixed",
-        "per-round levels: fixed|schedule:R0=K0,R1=K1,..|norm-adaptive:KMIN:KMAX",
-    )
-    .opt("seed", "42", "scenario seed (gradients + dither + fault decisions)")
-    .opt("fault-plan", "none", "fault spec, e.g. drop:0.1;straggle:w2x8")
-    .opt("round-policy", "waitall", "waitall|quorum:K|deadline:SECS")
-    .opt("link", "gigabit", "simulated link: gigabit|10g|LAT_S:BW_BPS")
-    .opt("lr", "0.25", "step size on the synthetic quadratic")
-    .opt("report", "", "write the JSON report to this path")
-    .opt(
-        "bench-append",
-        "",
-        "append one JSON-line perf record (rounds/sec, kbits/round, final loss) to this file",
-    )
-    .parse_from(argv)?;
+/// The scenario flags shared verbatim by `ndq cluster` and `ndq serve` —
+/// same spelling and defaults, so a serve/cluster pair diffed in the
+/// socket-loopback smoke is configured by identical command lines.
+fn cluster_opts(args: Args) -> Args {
+    args.opt("workers", "4", "number of workers P")
+        .opt("n", "2000", "gradient dimensionality")
+        .opt("rounds", "30", "rounds to run")
+        .opt("scheme", "dqsg:0.333333", "P1 scheme (see `ndq train --help`)")
+        .opt("scheme-p2", "none", "scheme for the second worker half (NDQSG mixes)")
+        .opt("codec", "raw", "wire-v3 index-lane codec: raw|huffman|aac")
+        .opt(
+            "levels-policy",
+            "fixed",
+            "per-round levels: fixed|schedule:R0=K0,R1=K1,..|norm-adaptive:KMIN:KMAX",
+        )
+        .opt("seed", "42", "scenario seed (gradients + dither + fault decisions)")
+        .opt("fault-plan", "none", "fault spec, e.g. drop:0.1;straggle:w2x8")
+        .opt("round-policy", "waitall", "waitall|quorum:K|deadline:SECS")
+        .opt("link", "gigabit", "simulated link: gigabit|10g|LAT_S:BW_BPS")
+        .opt("lr", "0.25", "step size on the synthetic quadratic")
+        .opt("report", "", "write the JSON report to this path")
+        .opt(
+            "bench-append",
+            "",
+            "append one JSON-line perf record (rounds/sec, kbits/round, final loss) to this file",
+        )
+}
 
+fn scenario_from_args(args: &Args) -> ndq::Result<ClusterScenario> {
     let p2 = args.get("scheme-p2");
     let plan = args.get("fault-plan");
-    let sc = ClusterScenario {
+    Ok(ClusterScenario {
         workers: args.get_usize("workers")?,
         n_params: args.get_usize("n")?,
         rounds: args.get_usize("rounds")?,
@@ -204,8 +211,12 @@ fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
         levels_policy: LevelPolicy::parse(&args.get("levels-policy"))?,
         lr: args.get_f32("lr")?,
         ..ClusterScenario::default()
-    };
-    let report = ClusterHarness::new(sc)?.run()?;
+    })
+}
+
+/// Shared tail for `cluster` and `serve`: summary, fault/lane detail, and
+/// the optional report/bench sinks.
+fn finish_cluster_report(args: &Args, report: &ndq::train::TrainReport) -> ndq::Result<()> {
     println!(
         "{}\n  rounds: {} run, {} failed\n  final synthetic loss: {:.6}\n  \
          uplink: {:.1} Kbit/msg transmitted, {:.1} raw-equivalent ({} messages folded)\n  \
@@ -219,8 +230,8 @@ fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
         report.comm.messages,
         report.fingerprint(),
     );
-    print_fault_summary(&report);
-    print_spec_lanes(&report);
+    print_fault_summary(report);
+    print_spec_lanes(report);
     let out = args.get("report");
     if !out.is_empty() {
         std::fs::write(&out, report.to_json().to_string())?;
@@ -228,9 +239,65 @@ fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
     }
     let bench = args.get("bench-append");
     if !bench.is_empty() {
-        append_bench_line(&bench, &report)?;
+        append_bench_line(&bench, report)?;
         println!("bench line appended to {bench}");
     }
+    Ok(())
+}
+
+fn cmd_cluster(argv: Vec<String>) -> ndq::Result<()> {
+    let args = cluster_opts(Args::new(
+        "ndq cluster",
+        "fault-injected cluster scenario engine (synthetic task, no artifacts)",
+    ))
+    .parse_from(argv)?;
+    let report = ClusterHarness::new(scenario_from_args(&args)?)?.run()?;
+    finish_cluster_report(&args, &report)
+}
+
+fn cmd_serve(argv: Vec<String>) -> ndq::Result<()> {
+    let args = cluster_opts(Args::new(
+        "ndq serve",
+        "lead a cluster scenario over real sockets (same flags + fingerprint as `ndq cluster`)",
+    ))
+    .opt("bind", "tcp:127.0.0.1:4680", "listen address: tcp:HOST:PORT | uds:PATH")
+    .opt(
+        "io-timeout",
+        "30",
+        "seconds to wait on a peer (handshake read / per-round collection) before tombstoning it",
+    )
+    .parse_from(argv)?;
+    let sc = scenario_from_args(&args)?;
+    let addr = NetAddr::parse(&args.get("bind"))?;
+    let opts = ServeOptions {
+        io_timeout: std::time::Duration::from_secs_f64(args.get_f32("io-timeout")? as f64),
+    };
+    println!(
+        "serving {} workers on {} ({} rounds)",
+        sc.workers,
+        addr.label(),
+        sc.rounds
+    );
+    let report = ndq::testing::cluster::serve_scenario(sc, &addr, opts)?;
+    finish_cluster_report(&args, &report)
+}
+
+fn cmd_worker(argv: Vec<String>) -> ndq::Result<()> {
+    let args = Args::new(
+        "ndq worker",
+        "join an `ndq serve` leader and serve rounds until it says bye",
+    )
+    .opt("connect", "tcp:127.0.0.1:4680", "leader address: tcp:HOST:PORT | uds:PATH")
+    .opt(
+        "timeout",
+        "30",
+        "seconds to keep retrying the initial connect (workers may start before the leader)",
+    )
+    .parse_from(argv)?;
+    let addr = NetAddr::parse(&args.get("connect"))?;
+    let timeout = std::time::Duration::from_secs_f64(args.get_f32("timeout")? as f64);
+    let served = ndq::testing::cluster::worker_connect(&addr, timeout)?;
+    println!("worker done: {served} rounds served");
     Ok(())
 }
 

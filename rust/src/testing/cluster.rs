@@ -20,10 +20,17 @@
 //! workers (they share `x - x*`), which is the regime NDQSG's Alg.-2 side
 //! information needs.
 
-use crate::comm::{FaultChannel, FaultPlan, RoundPolicy, RoundSpec, Session, WorkerMsg};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::comm::net::{FrameReader, NetAddr, NetListener, NetMsg, NetStream, NET_VERSION};
+use crate::comm::{
+    ChannelEvent, Delivery, Fault, FaultChannel, FaultPlan, RoundPolicy, RoundSpec, Session,
+    WorkerMsg,
+};
 use crate::prng::philox::splitmix64;
 use crate::prng::{DitherStream, Xoshiro256};
-use crate::quant::{GradQuantizer, PayloadCodec, Scheme};
+use crate::quant::{BitMetrics, GradQuantizer, PayloadCodec, Scheme, WireMsg};
 use crate::sim::LinkModel;
 use crate::train::engine::{EventSource, LevelPolicy, RoundDriver, RoundFold};
 use crate::train::trainer::TrainReport;
@@ -114,6 +121,51 @@ impl ClusterScenario {
     }
 }
 
+/// The synthetic distributed least-squares task, factored out so the
+/// in-process harness and the socket workers compute **bit-identical**
+/// losses and gradients from the same `(seed, n_params, noise)` triple.
+/// Worker `w`'s round-`r` gradient is `(x - x*) + noise · ε(seed, w, r)`
+/// — correlated across workers through the shared `x - x*` term, which is
+/// the regime NDQSG's Alg.-2 side information needs.
+pub struct QuadTask {
+    x_star: Vec<f32>,
+    noise: f32,
+    seed: u64,
+}
+
+impl QuadTask {
+    pub fn new(seed: u64, n_params: usize, noise: f32) -> QuadTask {
+        // the quadratic: minimize 0.5 |x - x*|^2 / n from x = 0
+        let mut init = Xoshiro256::new(seed ^ 0x7A26_57A7);
+        let x_star: Vec<f32> = (0..n_params).map(|_| init.next_normal() * 0.5).collect();
+        QuadTask { x_star, noise, seed }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.x_star.len()
+    }
+
+    pub fn eval(&self, x: &[f32]) -> f32 {
+        let s: f64 = x
+            .iter()
+            .zip(&self.x_star)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        (0.5 * s / self.x_star.len() as f64) as f32
+    }
+
+    /// Worker `w`'s round-`round` stochastic gradient at `x`, written into
+    /// `grad`. The noise stream is keyed by `(seed, w, round)` alone, so
+    /// any process that knows the triple reproduces it exactly.
+    pub fn grad_into(&self, w: usize, round: u64, x: &[f32], grad: &mut [f32]) {
+        let mut noise =
+            Xoshiro256::new(splitmix64(self.seed ^ ((w as u64) << 32) ^ round));
+        for (gi, (&xi, &ti)) in grad.iter_mut().zip(x.iter().zip(&self.x_star)) {
+            *gi = (xi - ti) + self.noise * noise.next_normal();
+        }
+    }
+}
+
 /// The engine. Build once, [`ClusterHarness::run`] to completion.
 pub struct ClusterHarness {
     sc: ClusterScenario,
@@ -154,19 +206,8 @@ impl ClusterHarness {
             .collect();
         let mut channel = FaultChannel::new(sc.plan.clone(), sc.seed, sc.workers, sc.link);
 
-        // the quadratic: minimize 0.5 |x - x*|^2 / n from x = 0
-        let mut init = Xoshiro256::new(sc.seed ^ 0x7A26_57A7);
-        let x_star: Vec<f32> = (0..sc.n_params).map(|_| init.next_normal() * 0.5).collect();
+        let task = QuadTask::new(sc.seed, sc.n_params, sc.noise);
         let mut x = vec![0f32; sc.n_params];
-        let eval = |x: &[f32]| -> f32 {
-            let s: f64 = x
-                .iter()
-                .zip(&x_star)
-                .map(|(&a, &b)| ((a - b) as f64).powi(2))
-                .sum();
-            (0.5 * s / sc.n_params as f64) as f32
-        };
-
         let mut grad = vec![0f32; sc.n_params];
 
         for round in 0..sc.rounds {
@@ -183,7 +224,7 @@ impl ClusterHarness {
                     *q = ws[p].build();
                 }
             }
-            let loss_now = eval(&x);
+            let loss_now = task.eval(&x);
             // delayed releases first, then this round's uplinks in worker
             // order — the arrival order is immaterial (the exchange folds
             // canonically) but fixing it keeps the ledger bit-stable
@@ -192,12 +233,7 @@ impl ClusterHarness {
                 if session.is_dead(w) {
                     continue; // tombstone already processed
                 }
-                let mut noise = Xoshiro256::new(splitmix64(
-                    sc.seed ^ ((w as u64) << 32) ^ round as u64,
-                ));
-                for (gi, (&xi, &ti)) in grad.iter_mut().zip(x.iter().zip(&x_star)) {
-                    *gi = (xi - ti) + sc.noise * noise.next_normal();
-                }
+                task.grad_into(w, round as u64, &x, &mut grad);
                 let (q, stream) = &mut encoders[w];
                 let wire = q.encode_coded(&grad, &mut stream.round(round as u64), spec.codec);
                 events.extend(channel.feed(WorkerMsg::new(w, round as u64, loss_now, wire)));
@@ -224,7 +260,13 @@ impl ClusterHarness {
             let want_eval = (sc.eval_every > 0 && (round + 1) % sc.eval_every == 0)
                 || round + 1 == sc.rounds;
             if want_eval {
-                driver.record_eval(round + 1, train_loss, eval(&x), f64::NAN, session.stats());
+                driver.record_eval(
+                    round + 1,
+                    train_loss,
+                    task.eval(&x),
+                    f64::NAN,
+                    session.stats(),
+                );
             }
         }
 
@@ -241,6 +283,403 @@ impl ClusterHarness {
 /// One-shot convenience.
 pub fn run_scenario(sc: ClusterScenario) -> crate::Result<TrainReport> {
     ClusterHarness::new(sc)?.run()
+}
+
+/// Transport knobs for [`serve_scenario`] that have no in-process
+/// analogue.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Wall-clock bound on each handshake read and on each round's upload
+    /// collection window — the per-connection backpressure valve. This is
+    /// transport plumbing only: *billing* deadlines stay virtual, inside
+    /// the scenario's [`RoundPolicy`], so a slow real network changes when
+    /// the leader gives up on a peer but never moves the fingerprint of
+    /// the rounds it completes.
+    pub io_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What a connection's reader thread forwards to the round loop.
+enum Upload {
+    Grad {
+        worker: usize,
+        round: u64,
+        loss: f32,
+        metrics: BitMetrics,
+        wire: Vec<u8>,
+    },
+    /// EOF, framing error, or protocol violation: the peer is gone.
+    Dead { worker: usize },
+}
+
+fn spawn_reader(worker: usize, mut stream: NetStream, tx: mpsc::Sender<Upload>) {
+    let _ = std::thread::Builder::new()
+        .name(format!("ndq-read-{worker}"))
+        .spawn(move || {
+            // pooled per-connection read buffer: one FrameReader reused
+            // across every envelope this peer ever sends
+            let mut reader = FrameReader::new();
+            loop {
+                match reader.read_msg(&mut stream) {
+                    Ok(NetMsg::Grad {
+                        worker: w,
+                        round,
+                        loss,
+                        metrics,
+                        wire,
+                    }) => {
+                        if tx
+                            .send(Upload::Grad {
+                                worker: w as usize,
+                                round,
+                                loss,
+                                metrics,
+                                wire,
+                            })
+                            .is_err()
+                        {
+                            return; // leader is done listening
+                        }
+                    }
+                    // Bye, EOF, a bad CRC, or a non-Grad kind mid-run all
+                    // mean the same thing to the round loop
+                    _ => {
+                        let _ = tx.send(Upload::Dead { worker });
+                        return;
+                    }
+                }
+            }
+        });
+}
+
+/// The socket leader (`ndq serve`): the [`ClusterHarness`] round loop with
+/// real peers on the other side of a [`NetListener`] instead of in-process
+/// encoders. Accepts exactly `sc.workers` connections, handshakes each
+/// (`Hello`/`Start`), then per round broadcasts `Round{spec, params}` and
+/// collects one `Grad` per live worker — feeding the uploads through the
+/// same leader-side [`FaultChannel`] (virtual clock, seeded jitter) and
+/// the same [`RoundDriver`] fold in the same worker order, so a loopback
+/// run is **fingerprint-identical** to [`run_scenario`] on the same
+/// scenario. Peers that vanish mid-run (EOF, timeout past the
+/// [`ServeOptions::io_timeout`] valve, write failure) are billed as
+/// first-class [`Fault::Disconnect`] tombstones, exactly like a scripted
+/// disconnect.
+pub fn serve_scenario(
+    sc: ClusterScenario,
+    addr: &NetAddr,
+    opts: ServeOptions,
+) -> crate::Result<TrainReport> {
+    serve_listener(sc, NetListener::bind(addr)?, opts)
+}
+
+/// [`serve_scenario`] with a listener the caller already bound — the
+/// ephemeral-port pattern (`tcp:127.0.0.1:0` +
+/// [`NetListener::local_addr`]) needs the bound address *before* the
+/// accept loop starts.
+pub fn serve_listener(
+    sc: ClusterScenario,
+    listener: NetListener,
+    opts: ServeOptions,
+) -> crate::Result<TrainReport> {
+    // identical build-time validation to the in-process engine
+    ClusterHarness::new(sc.clone())?;
+    let t0 = Instant::now();
+
+    let (tx, rx) = mpsc::channel::<Upload>();
+    let mut conns: Vec<Option<NetStream>> = Vec::with_capacity(sc.workers);
+    for slot in 0..sc.workers {
+        let mut stream = listener.accept()?;
+        stream.set_read_timeout(Some(opts.io_timeout))?;
+        let mut reader = FrameReader::new();
+        match reader.read_msg(&mut stream)? {
+            NetMsg::Hello { version } => anyhow::ensure!(
+                version == NET_VERSION,
+                "worker {slot} speaks protocol v{version}, leader speaks v{NET_VERSION}"
+            ),
+            other => anyhow::bail!(
+                "worker {slot}: expected hello, got message kind {}",
+                other.kind()
+            ),
+        }
+        NetMsg::Start {
+            assigned_id: slot as u32,
+            workers: sc.workers as u32,
+            n_params: sc.n_params as u64,
+            rounds: sc.rounds as u64,
+            seed: sc.seed,
+            noise: sc.noise,
+        }
+        .write_to(&mut stream)?;
+        // the reader thread owns blocking reads from here on; the round
+        // loop bounds its waits via rx.recv_timeout instead
+        stream.set_read_timeout(None)?;
+        spawn_reader(slot, stream.try_clone()?, tx.clone());
+        conns.push(Some(stream));
+    }
+    drop(tx); // rx disconnects once every reader thread has exited
+
+    let base = sc.base_spec();
+    let schemes: Vec<Scheme> = base.worker_schemes(sc.workers);
+    let mut driver = RoundDriver::new(base, sc.levels_policy.clone(), sc.policy, sc.workers)?;
+    let mut session = Session::new(&schemes, sc.seed, sc.n_params)?;
+    let mut channel = FaultChannel::new(sc.plan.clone(), sc.seed, sc.workers, sc.link);
+    let task = QuadTask::new(sc.seed, sc.n_params, sc.noise);
+    let mut x = vec![0f32; sc.n_params];
+
+    for round in 0..sc.rounds {
+        if session.live_workers() == 0 {
+            break; // everyone disconnected
+        }
+        let spec = driver.spec_for_round(round)?;
+        if session.current_spec() != Some(&spec) {
+            session.apply_spec(&spec)?;
+        }
+
+        // broadcast the round plan + replicated params to live peers; a
+        // failed write means the peer is gone (tombstoned below)
+        let mut awaiting = vec![false; sc.workers];
+        for w in 0..sc.workers {
+            if session.is_dead(w) {
+                continue; // tombstone already processed
+            }
+            awaiting[w] = true;
+            if let Some(conn) = conns[w].as_mut() {
+                let msg = NetMsg::Round {
+                    round: round as u64,
+                    spec,
+                    params: x.clone(),
+                };
+                if msg.write_to(conn).is_err() {
+                    conns[w] = None;
+                }
+            }
+        }
+
+        // collect one upload per awaited peer, bounded by the wall-clock
+        // valve; stale rounds and duplicate uplinks are transport noise
+        let mut pending: Vec<Option<(f32, BitMetrics, Vec<u8>)>> = vec![None; sc.workers];
+        let mut outstanding = (0..sc.workers)
+            .filter(|&w| awaiting[w] && conns[w].is_some())
+            .count();
+        let deadline = Instant::now() + opts.io_timeout;
+        while outstanding > 0 {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(left) {
+                Ok(Upload::Grad {
+                    worker,
+                    round: r,
+                    loss,
+                    metrics,
+                    wire,
+                }) => {
+                    if worker < sc.workers
+                        && r == round as u64
+                        && awaiting[worker]
+                        && pending[worker].is_none()
+                    {
+                        pending[worker] = Some((loss, metrics, wire));
+                        outstanding -= 1;
+                    }
+                }
+                Ok(Upload::Dead { worker }) => {
+                    if worker < sc.workers && conns[worker].is_some() {
+                        conns[worker] = None;
+                        if awaiting[worker] && pending[worker].is_none() {
+                            outstanding -= 1;
+                        }
+                    }
+                }
+                Err(_) => break, // valve expired, or every reader exited
+            }
+        }
+
+        // identical event assembly to the in-process engine: delayed
+        // releases first, then this round's uplinks in worker order,
+        // through the same virtual-clock fault channel
+        let mut events = channel.flush(round as u64);
+        for w in 0..sc.workers {
+            if session.is_dead(w) {
+                continue;
+            }
+            match pending[w].take() {
+                Some((loss, metrics, bytes)) => {
+                    let bits = bytes.len() as u64 * 8;
+                    match WireMsg::parse(bytes) {
+                        Ok(wire) => events.extend(channel.feed(WorkerMsg {
+                            worker: w,
+                            round: round as u64,
+                            loss,
+                            metrics,
+                            wire,
+                        })),
+                        // framing garbage from a live peer: bill it like
+                        // a corrupted delivery, don't kill the run
+                        Err(_) => events.push(ChannelEvent {
+                            worker: w,
+                            round: round as u64,
+                            loss,
+                            arrival_s: 0.0,
+                            metrics,
+                            payload: Delivery::Lost {
+                                bits,
+                                fault: Fault::Corrupt,
+                            },
+                        }),
+                    }
+                }
+                None => {
+                    // socket-dead or past the valve: a first-class
+                    // disconnect, billed exactly like a scripted one
+                    conns[w] = None;
+                    events.push(ChannelEvent {
+                        worker: w,
+                        round: round as u64,
+                        loss: f32::NAN,
+                        arrival_s: 0.0,
+                        metrics: BitMetrics::default(),
+                        payload: Delivery::Lost {
+                            bits: 0,
+                            fault: Fault::Disconnect,
+                        },
+                    });
+                }
+            }
+        }
+
+        let fold = driver.fold_events(&mut session, round as u64, EventSource::Batch(events))?;
+        let train_loss = match fold {
+            RoundFold::Stepped {
+                average,
+                train_loss,
+                ..
+            } => {
+                for (xi, gi) in x.iter_mut().zip(&average) {
+                    *xi -= sc.lr * gi;
+                }
+                session.record_broadcast(32.0 * sc.n_params as f64);
+                session.recycle(average);
+                train_loss
+            }
+            RoundFold::Skipped => f32::NAN,
+        };
+        let want_eval = (sc.eval_every > 0 && (round + 1) % sc.eval_every == 0)
+            || round + 1 == sc.rounds;
+        if want_eval {
+            driver.record_eval(
+                round + 1,
+                train_loss,
+                task.eval(&x),
+                f64::NAN,
+                session.stats(),
+            );
+        }
+    }
+
+    for conn in conns.iter_mut().filter_map(Option::as_mut) {
+        let _ = NetMsg::Bye.write_to(conn);
+        conn.shutdown();
+    }
+
+    Ok(driver.into_report(
+        sc.label(),
+        session.stats().clone(),
+        sc.rounds,
+        sc.n_params,
+        t0.elapsed().as_secs_f64(),
+    ))
+}
+
+/// The socket peer (`ndq worker --connect`): dials the leader (retrying
+/// until `connect_timeout` — workers may start before the leader binds),
+/// handshakes, then serves rounds until `Bye`. Everything the peer needs —
+/// task shard, dither stream, per-round quantizer — derives from the
+/// `Start` envelope, and the round math is [`QuadTask`], so its uplinks
+/// are bit-identical to what the in-process harness would have encoded.
+/// Returns the number of rounds served.
+pub fn worker_connect(addr: &NetAddr, connect_timeout: Duration) -> crate::Result<u64> {
+    let mut stream = NetStream::connect_retry(addr, connect_timeout)?;
+    NetMsg::Hello {
+        version: NET_VERSION,
+    }
+    .write_to(&mut stream)?;
+    let mut reader = FrameReader::new();
+    let (id, workers, n_params, seed, noise) = match reader.read_msg(&mut stream)? {
+        NetMsg::Start {
+            assigned_id,
+            workers,
+            n_params,
+            seed,
+            noise,
+            ..
+        } => (
+            assigned_id as usize,
+            workers as usize,
+            n_params as usize,
+            seed,
+            noise,
+        ),
+        other => anyhow::bail!("expected start, got message kind {}", other.kind()),
+    };
+
+    let task = QuadTask::new(seed, n_params, noise);
+    let mut dither = DitherStream::new(seed, id as u32);
+    let mut grad = vec![0f32; n_params];
+    // rebuilt only when the broadcast spec changes — the same
+    // rebuild-on-change rule as the in-process encoders
+    let mut current: Option<(RoundSpec, Box<dyn GradQuantizer>)> = None;
+    let mut served = 0u64;
+    loop {
+        match reader.read_msg(&mut stream)? {
+            NetMsg::Round {
+                round,
+                spec,
+                params,
+            } => {
+                anyhow::ensure!(
+                    params.len() == n_params,
+                    "leader resized the model mid-run ({} -> {})",
+                    n_params,
+                    params.len()
+                );
+                let stale = match &current {
+                    Some((s, _)) => *s != spec,
+                    None => true,
+                };
+                if stale {
+                    spec.validate()?;
+                    current = Some((spec, spec.worker_scheme(id, workers).build()));
+                }
+                let (_, q) = current.as_mut().expect("spec installed above");
+                let loss = task.eval(&params);
+                task.grad_into(id, round, &params, &mut grad);
+                let wire = q.encode_coded(&grad, &mut dither.round(round), spec.codec);
+                let msg = WorkerMsg::new(id, round, loss, wire);
+                NetMsg::Grad {
+                    worker: id as u32,
+                    round,
+                    loss,
+                    metrics: msg.metrics,
+                    wire: msg.wire.into_bytes(),
+                }
+                .write_to(&mut stream)?;
+                served += 1;
+            }
+            NetMsg::Bye => break,
+            other => anyhow::bail!("unexpected message kind {} mid-run", other.kind()),
+        }
+    }
+    stream.shutdown();
+    Ok(served)
 }
 
 #[cfg(test)]

@@ -124,8 +124,23 @@ impl LevelPolicy {
     }
 
     /// The level count for `round`, given the norm observations so far
-    /// (`None` = keep the base scheme). Pure: same inputs, same plan.
-    pub fn k_for(&self, round: usize, norm0: Option<f64>, last_norm: Option<f64>) -> Option<u32> {
+    /// (`None` = keep the base scheme) and the level count most recently
+    /// planned (`prev_k`, `None` before the first plan). Pure: same
+    /// inputs, same plan.
+    ///
+    /// A degenerate anchor — `norm0` zero or non-finite, or a non-finite
+    /// `last_norm` — carries no decay information: `rho = ln / n0` would be
+    /// NaN/inf and the `ceil() as i64` saturating cast would silently pin
+    /// `k` to KMIN. The rule instead *holds the previous plan* (clamped
+    /// into the policy's bounds), falling back to full resolution when
+    /// nothing was planned yet.
+    pub fn k_for(
+        &self,
+        round: usize,
+        norm0: Option<f64>,
+        last_norm: Option<f64>,
+        prev_k: Option<u32>,
+    ) -> Option<u32> {
         match self {
             LevelPolicy::Fixed => None,
             LevelPolicy::Schedule(points) => points
@@ -136,13 +151,20 @@ impl LevelPolicy {
             LevelPolicy::NormAdaptive { k_min, k_max } => {
                 let m_min = (*k_min as i64 - 1) / 2;
                 let m_max = (*k_max as i64 - 1) / 2;
+                let hold = || match prev_k {
+                    Some(k) => ((k as i64 - 1) / 2).clamp(m_min, m_max),
+                    None => m_max,
+                };
                 let m = match (norm0, last_norm) {
-                    (Some(n0), Some(ln)) if n0 > 0.0 => {
+                    (Some(n0), Some(ln)) if n0 > 0.0 && n0.is_finite() && ln.is_finite() => {
                         let rho = (ln / n0).clamp(0.0, 1.0);
                         ((rho * m_max as f64).ceil() as i64).clamp(m_min, m_max)
                     }
+                    // zero/non-finite anchor: no usable decay signal —
+                    // hold the previous plan
+                    (Some(_), Some(_)) => hold(),
                     // nothing folded yet: start at full resolution
-                    _ => m_max,
+                    _ => hold(),
                 };
                 Some((2 * m + 1) as u32)
             }
@@ -278,6 +300,9 @@ pub struct RoundDriver {
     policy: RoundPolicy,
     workers: usize,
     current: RoundSpec,
+    /// Level count most recently planned (`None` before the first plan or
+    /// under `fixed`) — what `norm-adaptive` holds on a degenerate anchor.
+    planned_k: Option<u32>,
     /// Folded-gradient norms driving the `norm-adaptive` plan.
     anchor: NormAnchor,
     /// Per-worker loss slots: summed in worker order so the reported train
@@ -310,6 +335,7 @@ impl RoundDriver {
             levels,
             policy,
             workers,
+            planned_k: None,
             anchor: NormAnchor::default(),
             losses: vec![0f32; workers],
             delivery: Vec::new(),
@@ -322,10 +348,14 @@ impl RoundDriver {
     /// per the level policy. Call once at round start, apply via
     /// [`Session::apply_spec`], and ship to workers in their round command.
     pub fn spec_for_round(&mut self, round: usize) -> crate::Result<RoundSpec> {
-        self.current = match self.levels.k_for(round, self.anchor.norm0, self.anchor.last) {
+        let k = self
+            .levels
+            .k_for(round, self.anchor.norm0, self.anchor.last, self.planned_k);
+        self.current = match k {
             None => self.base,
             Some(k) => self.base.with_levels(k)?,
         };
+        self.planned_k = k;
         Ok(self.current)
     }
 
@@ -547,28 +577,60 @@ mod tests {
     #[test]
     fn schedule_plans_piecewise_constant() {
         let p = LevelPolicy::parse("schedule:5=7,10=3").unwrap();
-        assert_eq!(p.k_for(0, None, None), None); // before the first point
-        assert_eq!(p.k_for(4, None, None), None);
-        assert_eq!(p.k_for(5, None, None), Some(7));
-        assert_eq!(p.k_for(9, None, None), Some(7));
-        assert_eq!(p.k_for(10, None, None), Some(3));
-        assert_eq!(p.k_for(1000, None, None), Some(3));
+        assert_eq!(p.k_for(0, None, None, None), None); // before the first point
+        assert_eq!(p.k_for(4, None, None, None), None);
+        assert_eq!(p.k_for(5, None, None, None), Some(7));
+        assert_eq!(p.k_for(9, None, None, None), Some(7));
+        assert_eq!(p.k_for(10, None, None, None), Some(3));
+        assert_eq!(p.k_for(1000, None, None, None), Some(3));
     }
 
     #[test]
     fn norm_adaptive_tracks_gradient_decay() {
         let p = LevelPolicy::NormAdaptive { k_min: 3, k_max: 15 };
         // nothing folded yet: full resolution
-        assert_eq!(p.k_for(0, None, None), Some(15));
+        assert_eq!(p.k_for(0, None, None, None), Some(15));
         // no decay: still full resolution
-        assert_eq!(p.k_for(1, Some(10.0), Some(10.0)), Some(15));
+        assert_eq!(p.k_for(1, Some(10.0), Some(10.0), None), Some(15));
         // gradient at 1/7 of its initial norm: one half-level survives
-        assert_eq!(p.k_for(9, Some(7.0), Some(1.0)), Some(3));
+        assert_eq!(p.k_for(9, Some(7.0), Some(1.0), None), Some(3));
         // halfway decay lands in between, never outside the bounds
-        let k = p.k_for(5, Some(10.0), Some(5.0)).unwrap();
+        let k = p.k_for(5, Some(10.0), Some(5.0), None).unwrap();
         assert!((3..=15).contains(&k) && k % 2 == 1, "k={k}");
-        assert_eq!(p.k_for(5, Some(10.0), Some(0.0)), Some(3));
-        assert_eq!(p.k_for(5, Some(10.0), Some(1e9)), Some(15));
+        assert_eq!(p.k_for(5, Some(10.0), Some(0.0), None), Some(3));
+        assert_eq!(p.k_for(5, Some(10.0), Some(1e9), None), Some(15));
+    }
+
+    #[test]
+    fn norm_adaptive_holds_previous_k_on_degenerate_anchor() {
+        let p = LevelPolicy::NormAdaptive { k_min: 3, k_max: 15 };
+        // a zero or non-finite anchor carries no decay signal: the plan
+        // must hold at the previous k, not NaN-saturate to KMIN
+        for (n0, ln) in [
+            (0.0, 5.0),
+            (f64::NAN, 5.0),
+            (f64::INFINITY, 5.0),
+            (10.0, f64::NAN),
+            (10.0, f64::INFINITY),
+            (0.0, 0.0),
+        ] {
+            assert_eq!(
+                p.k_for(3, Some(n0), Some(ln), Some(7)),
+                Some(7),
+                "n0={n0} ln={ln} must hold prev k"
+            );
+            // with no previous plan, fall back to full resolution
+            assert_eq!(
+                p.k_for(3, Some(n0), Some(ln), None),
+                Some(15),
+                "n0={n0} ln={ln} must fall back to k_max"
+            );
+        }
+        // a held k from outside the bounds is clamped back in
+        assert_eq!(p.k_for(3, Some(0.0), Some(1.0), Some(99)), Some(15));
+        assert_eq!(p.k_for(3, Some(0.0), Some(1.0), Some(1)), Some(3));
+        // a healthy anchor still follows the decay rule regardless of prev
+        assert_eq!(p.k_for(9, Some(7.0), Some(1.0), Some(15)), Some(3));
     }
 
     #[test]

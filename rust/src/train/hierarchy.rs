@@ -311,7 +311,9 @@ impl HierarchyAggregator {
         anyhow::ensure!(grads.len() == self.h.groups, "group count mismatch");
         // round plan: both tiers re-level per the policy (validated at
         // `with_level_policy`, so this cannot fail on a planned k)
-        let k = self.levels.k_for(round as usize, self.anchor.norm0, self.anchor.last);
+        let k = self
+            .levels
+            .k_for(round as usize, self.anchor.norm0, self.anchor.last, self.current_k);
         self.apply_levels(k)?;
         let mut flat_dqsg_bits = 0usize;
         let mut group_avgs: Vec<Option<Vec<f32>>> = Vec::with_capacity(self.h.groups);

@@ -73,6 +73,31 @@ fn same_seed_same_plan_bit_identical_report() {
     assert_ne!(a.fingerprint(), c.fingerprint());
 }
 
+#[test]
+fn report_json_is_parseable_despite_non_finite_fields() {
+    // Every synthetic-task report carries NaN accuracy (and a degraded run
+    // can add NaN train losses); `Json::Num` used to print those as
+    // literal `NaN` — not a JSON token — corrupting `--report` files and
+    // the `--bench-append` trajectory. They must serialize as `null` and
+    // round-trip through the parser.
+    let report = run_scenario(ClusterScenario {
+        workers: 4,
+        rounds: 8,
+        // a plan aggressive enough to fail rounds -> NaN train losses
+        plan: FaultPlan::new().drop_prob(0.9),
+        policy: RoundPolicy::Quorum(4),
+        ..ClusterScenario::default()
+    })
+    .unwrap();
+    assert!(
+        !report.final_accuracy.is_finite() || report.rounds_failed > 0,
+        "scenario no longer produces any non-finite field; pick a harsher one"
+    );
+    let text = report.to_json().to_string();
+    assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+    ndq::util::json::Json::parse(&text).expect("report JSON must re-parse");
+}
+
 // ---- acceptance: no-fault equivalence ---------------------------------------
 
 #[test]

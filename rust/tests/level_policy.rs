@@ -154,6 +154,23 @@ fn constant_schedule_matches_fixed_run_bit_for_bit() {
 }
 
 #[test]
+fn norm_adaptive_degenerate_anchor_holds_previous_plan() {
+    // A zero or non-finite anchor norm used to NaN-poison
+    // `rho = ln / n0`, and the saturating `ceil() as i64` cast silently
+    // pinned k to KMIN. The rule must instead hold the previous plan.
+    let p = LevelPolicy::parse("norm-adaptive:3:15").unwrap();
+    assert_eq!(p.k_for(4, Some(0.0), Some(3.0), Some(7)), Some(7));
+    assert_eq!(p.k_for(4, Some(f64::NAN), Some(3.0), Some(9)), Some(9));
+    assert_eq!(p.k_for(4, Some(f64::INFINITY), Some(3.0), Some(9)), Some(9));
+    assert_eq!(p.k_for(4, Some(10.0), Some(f64::NAN), Some(5)), Some(5));
+    // without a previous plan the rule starts at full resolution — never
+    // the silent KMIN pin
+    assert_eq!(p.k_for(4, Some(0.0), Some(3.0), None), Some(15));
+    // healthy anchors are unaffected by the guard
+    assert_eq!(p.k_for(4, Some(10.0), Some(10.0), Some(3)), Some(15));
+}
+
+#[test]
 fn unrealizable_policy_is_a_setup_error() {
     // one-bit has no level dial
     let sc = ClusterScenario {

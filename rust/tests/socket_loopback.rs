@@ -1,0 +1,304 @@
+//! Socket-transport acceptance suite: the `ndq serve` / `ndq worker`
+//! stack must be a *transparent* replacement for the in-process cluster
+//! harness.
+//!
+//! Pins the PR-6 tentpole claims:
+//! * parity — a loopback multi-worker run over real sockets (UDS and
+//!   TCP) produces a `TrainReport::fingerprint()` **bit-identical** to
+//!   [`run_scenario`] on the same scenario, including under injected
+//!   faults, quorum policies, NDQSG mixes, entropy codecs, and per-round
+//!   re-leveling;
+//! * robustness — the leader survives peers that die mid-run, billing
+//!   them as first-class disconnects instead of hanging or crashing;
+//! * process isolation — the same parity holds for the real binaries
+//!   (`ndq serve` + N `ndq worker` processes vs `ndq cluster`).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ndq::comm::net::{NetAddr, NetListener};
+use ndq::comm::{FaultPlan, RoundPolicy};
+use ndq::quant::{PayloadCodec, Scheme};
+use ndq::testing::cluster::{
+    run_scenario, serve_listener, serve_scenario, worker_connect, ClusterScenario, ServeOptions,
+};
+use ndq::train::LevelPolicy;
+
+/// A collision-free socket path in the test tempdir.
+fn uds_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ndq-{}-{tag}.sock", std::process::id()))
+}
+
+fn opts() -> ServeOptions {
+    ServeOptions {
+        io_timeout: Duration::from_secs(30),
+    }
+}
+
+/// Serve `sc` on `addr` with one in-process thread per worker dialing it,
+/// and return the leader's report.
+fn serve_with_thread_workers(
+    sc: ClusterScenario,
+    addr: NetAddr,
+) -> ndq::Result<ndq::train::TrainReport> {
+    let listener = NetListener::bind(&addr)?;
+    let dial = listener.local_addr()?;
+    let peers: Vec<_> = (0..sc.workers)
+        .map(|_| {
+            let dial = dial.clone();
+            std::thread::spawn(move || worker_connect(&dial, Duration::from_secs(10)))
+        })
+        .collect();
+    let report = serve_listener(sc, listener, opts())?;
+    for p in peers {
+        p.join().expect("worker thread panicked")?;
+    }
+    Ok(report)
+}
+
+fn faulty_scenario() -> ClusterScenario {
+    // every moving part at once: NDQSG mix, huffman codec, a level
+    // schedule, a fault plan with all five fault kinds, and a quorum
+    // policy that tolerates the losses
+    ClusterScenario {
+        workers: 6,
+        n_params: 1500,
+        rounds: 25,
+        seed: 20260808,
+        scheme: Scheme::Dithered { delta: 1.0 / 3.0 },
+        scheme_p2: Some(Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 }),
+        codec: PayloadCodec::Huffman,
+        levels_policy: LevelPolicy::parse("schedule:0=15,10=7,20=3").unwrap(),
+        plan: FaultPlan::new()
+            .drop_at(1, 3)
+            .corrupt_at(2, 5)
+            .duplicate_at(3, 7)
+            .delay_at(4, 9, 2)
+            .disconnect_at(5, 12)
+            .straggle(0, 1.5),
+        policy: RoundPolicy::Quorum(4),
+        eval_every: 5,
+        ..ClusterScenario::default()
+    }
+}
+
+#[test]
+fn uds_loopback_matches_in_process_fingerprint() {
+    let sc = ClusterScenario::default();
+    let want = run_scenario(sc.clone()).unwrap();
+    let addr = NetAddr::Uds(uds_path("clean"));
+    let got = serve_with_thread_workers(sc, addr).unwrap();
+    assert_eq!(
+        got.fingerprint(),
+        want.fingerprint(),
+        "socket transport moved the clean-run fingerprint"
+    );
+    assert_eq!(got.comm.messages, want.comm.messages);
+    assert_eq!(got.rounds_failed, 0);
+    assert_eq!(
+        got.final_eval_loss.to_bits(),
+        want.final_eval_loss.to_bits()
+    );
+}
+
+#[test]
+fn uds_loopback_matches_under_faults_quorum_and_releveling() {
+    let sc = faulty_scenario();
+    let want = run_scenario(sc.clone()).unwrap();
+    // the scenario genuinely exercised the fault machinery
+    assert!(want.comm.faulted_msgs() > 0);
+    assert!(want.comm.per_spec.len() > 1);
+    let addr = NetAddr::Uds(uds_path("faulty"));
+    let got = serve_with_thread_workers(sc, addr).unwrap();
+    assert_eq!(
+        got.fingerprint(),
+        want.fingerprint(),
+        "socket transport moved the faulty-run fingerprint"
+    );
+    assert_eq!(got.delivery, want.delivery);
+    assert_eq!(got.comm.per_spec, want.comm.per_spec);
+    assert_eq!(
+        got.comm.total_transmitted_bits.to_bits(),
+        want.comm.total_transmitted_bits.to_bits()
+    );
+}
+
+#[test]
+fn tcp_ephemeral_port_loopback_matches_too() {
+    let sc = ClusterScenario {
+        workers: 3,
+        rounds: 12,
+        n_params: 800,
+        eval_every: 4,
+        ..ClusterScenario::default()
+    };
+    let want = run_scenario(sc.clone()).unwrap();
+    let got =
+        serve_with_thread_workers(sc, NetAddr::parse("tcp:127.0.0.1:0").unwrap()).unwrap();
+    assert_eq!(got.fingerprint(), want.fingerprint());
+}
+
+#[test]
+fn leader_survives_a_peer_that_dies_mid_run() {
+    let sc = ClusterScenario {
+        workers: 3,
+        rounds: 10,
+        n_params: 500,
+        policy: RoundPolicy::Quorum(2),
+        eval_every: 5,
+        ..ClusterScenario::default()
+    };
+    let addr = NetAddr::Uds(uds_path("dying"));
+    let listener = NetListener::bind(&addr).unwrap();
+    let dial = listener.local_addr().unwrap();
+    // two faithful peers...
+    let peers: Vec<_> = (0..2)
+        .map(|_| {
+            let dial = dial.clone();
+            std::thread::spawn(move || worker_connect(&dial, Duration::from_secs(10)))
+        })
+        .collect();
+    // ...and one that handshakes, then hangs up without a Bye
+    let saboteur = {
+        let dial = dial.clone();
+        std::thread::spawn(move || {
+            use ndq::comm::net::{FrameReader, NetMsg, NetStream, NET_VERSION};
+            let mut s = NetStream::connect_retry(&dial, Duration::from_secs(10)).unwrap();
+            NetMsg::Hello { version: NET_VERSION }.write_to(&mut s).unwrap();
+            let mut r = FrameReader::new();
+            assert!(matches!(
+                r.read_msg(&mut s).unwrap(),
+                NetMsg::Start { .. }
+            ));
+            s.shutdown(); // vanish before the first round
+        })
+    };
+    let report = serve_listener(
+        sc,
+        listener,
+        ServeOptions {
+            io_timeout: Duration::from_secs(5),
+        },
+    )
+    .unwrap();
+    saboteur.join().unwrap();
+    for p in peers {
+        p.join().expect("worker thread panicked").unwrap();
+    }
+    // the dead peer is a first-class disconnect: quorum keeps stepping,
+    // every surviving round hears the other two workers
+    assert_eq!(report.comm.disconnects, 1);
+    assert_eq!(report.rounds_failed, 0);
+    assert!(report
+        .delivery
+        .iter()
+        .skip(1)
+        .all(|d| d.received == 2), "{:?}", report.delivery);
+    assert!(report.final_eval_loss.is_finite());
+}
+
+#[test]
+fn serve_scenario_binds_for_itself_as_documented() {
+    // the plain entry point (what `ndq serve` calls) — bind happens
+    // inside, so workers must retry-connect; cover it once on UDS
+    let sc = ClusterScenario {
+        workers: 2,
+        rounds: 6,
+        n_params: 300,
+        eval_every: 3,
+        ..ClusterScenario::default()
+    };
+    let want = run_scenario(sc.clone()).unwrap();
+    let addr = NetAddr::Uds(uds_path("selfbind"));
+    let peers: Vec<_> = (0..sc.workers)
+        .map(|_| {
+            let dial = addr.clone();
+            std::thread::spawn(move || worker_connect(&dial, Duration::from_secs(10)))
+        })
+        .collect();
+    let got = serve_scenario(sc, &addr, opts()).unwrap();
+    for p in peers {
+        p.join().expect("worker thread panicked").unwrap();
+    }
+    assert_eq!(got.fingerprint(), want.fingerprint());
+}
+
+/// Extract the `fingerprint: <hex>` line a cluster/serve run prints.
+fn fingerprint_of(out: &std::process::Output) -> String {
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "binary failed\nstdout:\n{stdout}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    stdout
+        .lines()
+        .find_map(|l| l.trim().strip_prefix("fingerprint: "))
+        .unwrap_or_else(|| panic!("no fingerprint line in:\n{stdout}"))
+        .to_string()
+}
+
+#[test]
+fn multi_process_serve_matches_cluster_binary() {
+    let bin = env!("CARGO_BIN_EXE_ndq");
+    let sock = uds_path("procs");
+    let scenario_flags = [
+        "--workers", "3",
+        "--n", "600",
+        "--rounds", "8",
+        "--seed", "77",
+        "--scheme", "dqsg:0.333333",
+        "--scheme-p2", "nested:0.333333:3:1.0",
+        "--codec", "huffman",
+        "--round-policy", "quorum:2",
+    ];
+
+    let mut serve = std::process::Command::new(bin)
+        .arg("serve")
+        .args(scenario_flags)
+        .arg("--bind")
+        .arg(format!("uds:{}", sock.display()))
+        .arg("--io-timeout")
+        .arg("30")
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn ndq serve");
+    let workers: Vec<_> = (0..3)
+        .map(|_| {
+            std::process::Command::new(bin)
+                .arg("worker")
+                .arg("--connect")
+                .arg(format!("uds:{}", sock.display()))
+                .arg("--timeout")
+                .arg("30")
+                .stdout(std::process::Stdio::piped())
+                .stderr(std::process::Stdio::piped())
+                .spawn()
+                .expect("spawn ndq worker")
+        })
+        .collect();
+
+    let serve_out = serve.wait_with_output().expect("wait on ndq serve");
+    for w in workers {
+        let out = w.wait_with_output().expect("wait on ndq worker");
+        assert!(
+            out.status.success(),
+            "worker failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+
+    let cluster_out = std::process::Command::new(bin)
+        .arg("cluster")
+        .args(scenario_flags)
+        .output()
+        .expect("run ndq cluster");
+
+    assert_eq!(
+        fingerprint_of(&serve_out),
+        fingerprint_of(&cluster_out),
+        "serve stdout:\n{}",
+        String::from_utf8_lossy(&serve_out.stdout)
+    );
+}

@@ -76,26 +76,57 @@ NDQ_BENCH_REV="$GIT_REV" cargo run --release --quiet -- cluster \
     --levels-policy "schedule:0=15,10=7,20=3" \
     --bench-append ../BENCH_train.json
 
+# Socket-transport smoke: the same degraded NDQSG scenario, once through
+# `ndq cluster` (in-process) and once through `ndq serve` + N real `ndq
+# worker` processes over a Unix-domain socket. The two runs must print the
+# same fingerprint — the loopback multi-process acceptance criterion.
+echo "== ndq socket loopback smoke =="
+SOCK="$(mktemp -u /tmp/ndq-tier1-XXXXXX.sock)"
+SCENARIO_FLAGS=(--workers 4 --rounds 15 \
+    --scheme dqsg:0.333333 --scheme-p2 nested:0.333333:3:1.0 \
+    --codec huffman --fault-plan "drop:0.15;straggle:w2x6;corrupt:w1@r3" \
+    --round-policy quorum:3)
+./target/release/ndq serve "${SCENARIO_FLAGS[@]}" \
+    --bind "uds:$SOCK" --io-timeout 60 > "$SOCK.serve.out" &
+SERVE_PID=$!
+WORKER_PIDS=()
+for _ in 1 2 3 4; do
+    ./target/release/ndq worker --connect "uds:$SOCK" --timeout 60 &
+    WORKER_PIDS+=($!)
+done
+for pid in "${WORKER_PIDS[@]}"; do wait "$pid"; done
+wait "$SERVE_PID"
+./target/release/ndq cluster "${SCENARIO_FLAGS[@]}" > "$SOCK.cluster.out"
+SERVE_FP="$(grep -o 'fingerprint: [0-9a-f]*' "$SOCK.serve.out")"
+CLUSTER_FP="$(grep -o 'fingerprint: [0-9a-f]*' "$SOCK.cluster.out")"
+echo "serve:   $SERVE_FP"
+echo "cluster: $CLUSTER_FP"
+if [[ -z "$SERVE_FP" || "$SERVE_FP" != "$CLUSTER_FP" ]]; then
+    echo "socket loopback fingerprint mismatch" >&2
+    exit 1
+fi
+rm -f "$SOCK" "$SOCK.serve.out" "$SOCK.cluster.out"
+
 # Wire-path bench smoke in quick mode: perf_coding always runs (no
 # artifacts needed); table2_entropy_bits self-skips when artifacts are
-# absent. Each run's results are appended to BENCH_wire.json as one
-# JSON-lines record (the rows inside are stats::bench::to_json /
-# save_json output), so the perf trajectory accrues across commits.
+# absent. Each run's results are appended to the repo-root BENCH_wire.json
+# as one JSON-lines record (the rows inside are stats::bench::to_json /
+# save_json output), so the perf trajectory accrues across PRs alongside
+# BENCH_train.json instead of dying with `target/`.
 echo "== wire bench smoke (quick mode) =="
 # stale results from an earlier run must not be re-attributed to this
 # commit when a bench self-skips (e.g. table2 without artifacts)
 rm -f target/ndq-bench/perf_coding.json target/ndq-bench/table2.json
 NDQ_BENCH_FAST=1 cargo bench --bench perf_coding
 NDQ_BENCH_FAST=1 cargo bench --bench table2_entropy_bits
-mkdir -p target/ndq-bench
 BENCH_TS="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
 GIT_REV="$(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
 for f in perf_coding table2; do
     if [[ -f "target/ndq-bench/$f.json" ]]; then
         printf '{"ts":"%s","rev":"%s","bench":"%s","results":%s}\n' \
             "$BENCH_TS" "$GIT_REV" "$f" "$(cat "target/ndq-bench/$f.json")" \
-            >> target/ndq-bench/BENCH_wire.json
-        echo "appended $f to target/ndq-bench/BENCH_wire.json"
+            >> ../BENCH_wire.json
+        echo "appended $f to BENCH_wire.json"
     fi
 done
 
