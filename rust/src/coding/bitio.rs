@@ -93,6 +93,7 @@ impl<'a> BitReader<'a> {
         self.bytes.len() * 8 - self.pos
     }
 
+    // ndq-lint: allow(panic-path) the ensure! underflow guard bounds pos/8 below bytes.len() before the byte access
     #[inline]
     pub fn read_bit(&mut self) -> crate::Result<bool> {
         anyhow::ensure!(self.pos < self.bytes.len() * 8, "bitreader: out of data");
@@ -102,6 +103,7 @@ impl<'a> BitReader<'a> {
     }
 
     /// Read `n` bits LSB-first (n <= 64).
+    // ndq-lint: allow(panic-path) the ensure! guard bounds pos + n by the bit length, so every pos/8 access stays in range
     #[inline]
     pub fn read_bits(&mut self, n: usize) -> crate::Result<u64> {
         debug_assert!(n <= 64);

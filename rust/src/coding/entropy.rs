@@ -10,6 +10,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    // ndq-lint: allow(panic-path) accounting helper over this process's own symbol streams (already decoded + alphabet-bounded); never fed raw wire bytes
     pub fn from_symbols(symbols: &[u32], alphabet: usize) -> Self {
         let mut counts = vec![0u64; alphabet];
         for &s in symbols {

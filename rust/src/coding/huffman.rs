@@ -162,6 +162,7 @@ impl<'r, 'b> HuffmanSource<'r, 'b> {
 
     /// Next symbol; errors on underflow, codes absent from the table, or
     /// when all `n` symbols have been consumed.
+    // ndq-lint: allow(panic-path) len is ensure!-bounded by MAX_CODE_LEN (by_len spans 0..=MAX_CODE_LEN) and idx comes from a successful binary_search
     #[inline]
     pub fn next_symbol(&mut self) -> crate::Result<u32> {
         anyhow::ensure!(self.remaining > 0, "symbol stream exhausted");

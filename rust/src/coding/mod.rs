@@ -63,6 +63,13 @@ impl PayloadCodec {
         })
     }
 
+    /// This codec's wire discriminant — the inverse of
+    /// [`PayloadCodec::from_u8`]. Lives here, next to the `#[repr(u8)]`
+    /// definition, so framing code never needs a bare `as u8` cast.
+    pub fn wire_byte(self) -> u8 {
+        self as u8
+    }
+
     /// Parse CLI/config syntax: `raw` | `huffman` | `aac`.
     pub fn parse(s: &str) -> crate::Result<PayloadCodec> {
         Ok(match s {

@@ -87,6 +87,7 @@ impl FaultPlan {
     }
 
     /// Whether the plan injects anything at all.
+    // ndq-lint: allow(float-cmp) exact-zero test of never-computed config fields (0.0 is the default, not a rounded result)
     pub fn is_empty(&self) -> bool {
         self.drop_prob == 0.0
             && self.corrupt_prob == 0.0

@@ -172,6 +172,7 @@ impl NetStream {
 
     /// Connect with retry until `timeout` elapses — workers routinely
     /// start before the leader has bound its socket.
+    // ndq-lint: allow(wall-clock) transport backpressure: retry deadline against a real peer, never billed to the ledger
     pub fn connect_retry(addr: &NetAddr, timeout: Duration) -> crate::Result<NetStream> {
         let t0 = std::time::Instant::now();
         loop {
@@ -259,7 +260,7 @@ pub fn write_envelope(w: &mut impl Write, kind: u8, body: &[u8]) -> crate::Resul
     let mut header = [0u8; NET_HEADER_BYTES];
     header[..2].copy_from_slice(&NET_MAGIC);
     header[2] = kind;
-    header[3..7].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    header[3..7].copy_from_slice(&u32::try_from(body.len())?.to_le_bytes());
     let mut sum = crc::checksum(&header);
     sum = crc::update(sum, body);
     w.write_all(&header)?;
@@ -285,6 +286,7 @@ impl FrameReader {
 
     /// Read one envelope; returns `(kind, body)`. Errors on EOF,
     /// bad magic, an oversized length claim, or a checksum mismatch.
+    // ndq-lint: allow(panic-path) header is a fixed NET_HEADER_BYTES stack array; every access is within its constant length
     pub fn read<'a>(&'a mut self, r: &mut impl Read) -> crate::Result<(u8, &'a [u8])> {
         let mut header = [0u8; NET_HEADER_BYTES];
         r.read_exact(&mut header)
@@ -296,7 +298,7 @@ impl FrameReader {
             header[1]
         );
         let kind = header[2];
-        let len = u32::from_le_bytes(header[3..7].try_into().unwrap()) as usize;
+        let len = usize::try_from(u32::from_le_bytes(header[3..7].try_into().unwrap()))?;
         anyhow::ensure!(
             len <= MAX_BODY_BYTES,
             "envelope claims {len} body bytes (cap {MAX_BODY_BYTES})"
@@ -462,7 +464,7 @@ impl NetMsg {
             KIND_ROUND => {
                 let round = c.u64()?;
                 let spec = get_spec(&mut c)?;
-                let n = c.u64()? as usize;
+                let n = usize::try_from(c.u64()?)?;
                 anyhow::ensure!(
                     n.checked_mul(4).is_some_and(|b| b <= c.remaining()),
                     "round broadcast claims {n} params in {} bytes",
@@ -487,7 +489,7 @@ impl NetMsg {
                     v => anyhow::bail!("bad aac flag {v}"),
                 };
                 let fallback_frames = c.u32()?;
-                let n = c.u64()? as usize;
+                let n = usize::try_from(c.u64()?)?;
                 anyhow::ensure!(
                     n <= c.remaining(),
                     "grad claims {n} wire bytes, {} remain",
@@ -532,6 +534,7 @@ const SCHEME_TERNGRAD: u8 = 4;
 const SCHEME_ONEBIT: u8 = 5;
 const SCHEME_NESTED: u8 = 6;
 
+// ndq-lint: allow(naked-cast) encoder side of the bit-exact scheme roundtrip: get_scheme re-checks every field with try_from on decode
 fn put_scheme(out: &mut Vec<u8>, s: &Scheme) {
     match *s {
         Scheme::Baseline => out.push(SCHEME_BASELINE),
@@ -565,9 +568,9 @@ fn get_scheme(c: &mut Cur) -> crate::Result<Scheme> {
         SCHEME_DITHERED => Scheme::Dithered { delta: c.f32()? },
         SCHEME_DITHERED_PART => Scheme::DitheredPartitioned {
             delta: c.f32()?,
-            k: c.u64()? as usize,
+            k: usize::try_from(c.u64()?)?,
         },
-        SCHEME_QSGD => Scheme::Qsgd { m: c.u32()? as i32 },
+        SCHEME_QSGD => Scheme::Qsgd { m: i32::try_from(c.u32()?)? },
         SCHEME_TERNGRAD => Scheme::Terngrad,
         SCHEME_ONEBIT => Scheme::OneBit,
         SCHEME_NESTED => Scheme::Nested {
@@ -588,7 +591,7 @@ fn put_spec(out: &mut Vec<u8>, spec: &RoundSpec) {
         }
         None => out.push(0),
     }
-    out.push(spec.codec as u8);
+    out.push(spec.codec.wire_byte());
 }
 
 fn get_spec(c: &mut Cur) -> crate::Result<RoundSpec> {
@@ -831,6 +834,16 @@ mod tests {
         for bad in ["", "udp:1.2.3.4:5", "tcp:nocolon", "uds:"] {
             assert!(NetAddr::parse(bad).is_err(), "`{bad}` parsed");
         }
+    }
+
+    #[test]
+    fn hostile_scheme_field_errors_instead_of_wrapping() {
+        // a QSGD level count above i32::MAX must be rejected at decode —
+        // the old `as i32` readback silently produced a negative m
+        let mut body = vec![SCHEME_QSGD];
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut c = Cur { b: &body, p: 0 };
+        assert!(get_scheme(&mut c).is_err(), "m > i32::MAX decoded");
     }
 
     #[test]

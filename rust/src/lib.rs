@@ -42,12 +42,16 @@
 // field-by-field reassignment, index loops over parallel slices);
 // correctness lints still apply at full strength in the tier-1 gate.
 #![allow(clippy::field_reassign_with_default, clippy::needless_range_loop)]
+// No module needs unsafe; `ndq lint`'s `unsafe-code` rule mirrors this so
+// the contract is visible in diagnostics, not just at compile time.
+#![forbid(unsafe_code)]
 
 pub mod cli;
 pub mod coding;
 pub mod comm;
 pub mod config;
 pub mod data;
+pub mod lint;
 pub mod opt;
 pub mod prng;
 pub mod quant;

@@ -1,0 +1,542 @@
+//! The per-file rule engine: directive parsing, test-code elision,
+//! function-span tracking, allow resolution, and the path walker.
+//!
+//! # Annotation grammar
+//!
+//! Directives ride in `//` comments and start with `ndq-lint:`:
+//!
+//! * `// ndq-lint: allow(<rule>[, <rule>…]) <reason>` — suppress the named
+//!   rule(s). The reason is **mandatory**; a reasonless allow is itself a
+//!   diagnostic (`bad-allow`), as is naming an unknown rule. Placement:
+//!   a trailing comment covers its own line; a comment on its own line
+//!   covers the next code line; and when the covered line is a `fn`
+//!   header, the allow covers that whole function body. An allow that
+//!   suppresses nothing is a `unused-allow` diagnostic — stale escape
+//!   hatches rot the audit.
+//! * `// ndq-lint: as(<path>)` — scope this file as if it lived at
+//!   `<path>` (e.g. `src/comm/net.rs`). Used by the lint fixtures under
+//!   `tests/lint_fixtures/` to exercise module-scoped rules from outside
+//!   the tree.
+//!
+//! # What is linted
+//!
+//! Rules see a token stream with comments/strings stripped (see
+//! [`crate::lint::lexer`]) and with `#[cfg(test)]` items and `#[test]`
+//! functions elided — test code may unwrap, allocate and read clocks
+//! freely; the contracts apply to shipping code.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::lint::lexer::{self, Tok, TokKind};
+use crate::lint::rules;
+
+/// One lint finding, printable as `path:line: rule: message`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub path: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// A finding as emitted by a rule, before path/allow resolution.
+#[derive(Debug)]
+pub struct RawDiag {
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Span of one `fn` item in the (test-stripped) token stream.
+#[derive(Debug)]
+pub struct FnSpan {
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub header_line: u32,
+    /// Token index of the body `{`.
+    pub open_idx: usize,
+    /// Token index one past the matching `}`.
+    pub end_idx: usize,
+    /// Line of the closing `}`.
+    pub close_line: u32,
+}
+
+/// Everything a rule sees about one file.
+pub struct FileCtx<'a> {
+    /// Normalized module path (`src/comm/net.rs`), honoring `as(…)`.
+    pub module_path: &'a str,
+    /// Significant tokens, test code elided.
+    pub toks: &'a [Tok],
+    /// `fn` spans over `toks`, in source order.
+    pub fns: &'a [FnSpan],
+}
+
+impl FileCtx<'_> {
+    /// Innermost function containing token `idx`, if any.
+    pub fn enclosing_fn(&self, idx: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.open_idx < idx && idx + 1 < f.end_idx)
+            .max_by_key(|f| f.open_idx)
+    }
+}
+
+/// Rule name of the meta-diagnostic for malformed/unjustified directives.
+pub const BAD_ALLOW: &str = "bad-allow";
+/// Rule name of the meta-diagnostic for allows that suppressed nothing.
+pub const UNUSED_ALLOW: &str = "unused-allow";
+
+#[derive(Debug)]
+enum Directive {
+    Allow { rules: Vec<String>, reason: String },
+    As(String),
+}
+
+/// Parse one line-comment body. `None` ⇒ not a lint directive at all;
+/// `Some(Err(msg))` ⇒ malformed directive (reported as `bad-allow`).
+fn parse_directive(text: &str) -> Option<Result<Directive, String>> {
+    let rest = text.trim().strip_prefix("ndq-lint:")?.trim();
+    if let Some(inner) = rest.strip_prefix("allow(") {
+        let Some(close) = inner.find(')') else {
+            return Some(Err("allow(…) is missing its closing parenthesis".into()));
+        };
+        let names: Vec<String> = inner[..close]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if names.is_empty() {
+            return Some(Err("allow(…) names no rule".into()));
+        }
+        let reason = inner[close + 1..].trim().to_string();
+        return Some(Ok(Directive::Allow { rules: names, reason }));
+    }
+    if let Some(inner) = rest.strip_prefix("as(") {
+        let Some(close) = inner.find(')') else {
+            return Some(Err("as(…) is missing its closing parenthesis".into()));
+        };
+        return Some(Ok(Directive::As(inner[..close].trim().to_string())));
+    }
+    Some(Err(format!("unrecognized ndq-lint directive `{rest}`")))
+}
+
+struct AllowEntry {
+    line: u32,
+    rules: Vec<String>,
+    /// Inclusive line range this allow suppresses, resolved after lexing.
+    covers: (u32, u32),
+    used: bool,
+}
+
+/// Map `rust/src/comm/net.rs`-style paths onto the `src/…` module space
+/// the rule scopes are written against (first `src` path component wins).
+fn normalize_path(path: &str) -> String {
+    let norm = path.replace('\\', "/");
+    let comps: Vec<&str> = norm.split('/').collect();
+    for (i, c) in comps.iter().enumerate() {
+        if *c == "src" {
+            return comps[i..].join("/");
+        }
+    }
+    norm
+}
+
+/// Elide `#[cfg(test)]` items and `#[test]` functions from the stream:
+/// the lint contracts bind shipping code, not its tests.
+fn strip_test_code(toks: Vec<Tok>) -> Vec<Tok> {
+    let n = toks.len();
+    let mut drop = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        if !(toks[i].is_punct("#") && i + 1 < n && toks[i + 1].is_punct("[")) {
+            i += 1;
+            continue;
+        }
+        // consume a run of consecutive outer attributes
+        let cluster_start = i;
+        let mut is_test = false;
+        let mut j = i;
+        while j + 1 < n && toks[j].is_punct("#") && toks[j + 1].is_punct("[") {
+            let mut depth = 0i32;
+            let mut k = j + 1;
+            let content_start = j + 2;
+            while k < n {
+                if toks[k].is_punct("[") {
+                    depth += 1;
+                } else if toks[k].is_punct("]") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            let content = &toks[content_start..k.min(n)];
+            if let Some(first) = content.first() {
+                if first.is_ident("test") {
+                    is_test = true;
+                }
+                if first.is_ident("cfg") && content.iter().any(|t| t.is_ident("test")) {
+                    is_test = true;
+                }
+            }
+            j = (k + 1).min(n);
+        }
+        if !is_test {
+            i = j;
+            continue;
+        }
+        // find the end of the attributed item: a `;` outside brackets, or
+        // the matching `}` of its body
+        let mut k = j;
+        let mut pd = 0i32;
+        let mut end = n - 1;
+        while k < n {
+            let t = &toks[k];
+            if t.is_punct("(") || t.is_punct("[") {
+                pd += 1;
+            } else if t.is_punct(")") || t.is_punct("]") {
+                pd -= 1;
+            } else if pd == 0 && t.is_punct(";") {
+                end = k;
+                break;
+            } else if pd == 0 && t.is_punct("{") {
+                let mut bd = 1i32;
+                let mut m = k + 1;
+                while m < n && bd > 0 {
+                    if toks[m].is_punct("{") {
+                        bd += 1;
+                    } else if toks[m].is_punct("}") {
+                        bd -= 1;
+                    }
+                    m += 1;
+                }
+                end = m - 1;
+                break;
+            }
+            k += 1;
+        }
+        for d in drop.iter_mut().take(end + 1).skip(cluster_start) {
+            *d = true;
+        }
+        i = end + 1;
+    }
+    toks.into_iter()
+        .zip(drop)
+        .filter(|(_, d)| !d)
+        .map(|(t, _)| t)
+        .collect()
+}
+
+/// Locate every `fn` item body in the stream. Signatures track only
+/// paren/bracket nesting — const-generic brace expressions in signatures
+/// are not supported (and not used in this crate).
+fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let n = toks.len();
+    let mut spans = Vec::new();
+    for i in 0..n {
+        if !toks[i].is_ident("fn") || i + 1 >= n || toks[i + 1].kind != TokKind::Ident {
+            continue;
+        }
+        let mut k = i + 2;
+        let mut pd = 0i32;
+        while k < n {
+            let t = &toks[k];
+            if t.is_punct("(") || t.is_punct("[") {
+                pd += 1;
+            } else if t.is_punct(")") || t.is_punct("]") {
+                pd -= 1;
+            } else if pd == 0 && t.is_punct(";") {
+                // bodyless trait/extern declaration
+                break;
+            } else if pd == 0 && t.is_punct("{") {
+                let mut bd = 1i32;
+                let mut m = k + 1;
+                while m < n && bd > 0 {
+                    if toks[m].is_punct("{") {
+                        bd += 1;
+                    } else if toks[m].is_punct("}") {
+                        bd -= 1;
+                    }
+                    m += 1;
+                }
+                spans.push(FnSpan {
+                    name: toks[i + 1].text.clone(),
+                    header_line: toks[i].line,
+                    open_idx: k,
+                    end_idx: m,
+                    close_line: toks[m - 1].line,
+                });
+                break;
+            }
+            k += 1;
+        }
+    }
+    spans
+}
+
+/// Resolve which lines an allow at comment line `line` covers.
+fn resolve_allow_cover(line: u32, toks: &[Tok], fns: &[FnSpan]) -> (u32, u32) {
+    let target = if toks.iter().any(|t| t.line == line) {
+        line
+    } else {
+        toks.iter()
+            .map(|t| t.line)
+            .filter(|&l| l > line)
+            .min()
+            .unwrap_or(line)
+    };
+    if let Some(f) = fns.iter().find(|f| f.header_line == target) {
+        return (target, f.close_line);
+    }
+    // an allow above an attribute cluster (`#[inline]`, `#[derive(…)]`)
+    // covers the attributed item: hop over the attributes and check
+    // whether a `fn` header is what they decorate
+    let n = toks.len();
+    let Some(mut i) = toks.iter().position(|t| t.line == target) else {
+        return (target, target);
+    };
+    while i + 1 < n && toks[i].is_punct("#") && toks[i + 1].is_punct("[") {
+        let mut depth = 0i32;
+        let mut k = i + 1;
+        while k < n {
+            if toks[k].is_punct("[") {
+                depth += 1;
+            } else if toks[k].is_punct("]") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        i = (k + 1).min(n);
+    }
+    if i < n {
+        if let Some(f) = fns.iter().find(|f| f.header_line == toks[i].line) {
+            return (target, f.close_line);
+        }
+    }
+    (target, target)
+}
+
+/// Lint one file's source. `path` is used for scoping (normalized onto
+/// `src/…`, unless the file carries an `as(…)` directive) and echoed in
+/// diagnostics verbatim.
+pub fn lint_source(path: &str, src: &str) -> Vec<Diagnostic> {
+    let lexed = lexer::lex(src);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut allows: Vec<AllowEntry> = Vec::new();
+    let mut as_path: Option<String> = None;
+
+    let known: Vec<&str> = rules::RULES.iter().map(|r| r.name).collect();
+    for cm in &lexed.comments {
+        match parse_directive(&cm.text) {
+            None => {}
+            Some(Err(msg)) => diags.push(Diagnostic {
+                path: path.to_string(),
+                line: cm.line,
+                rule: BAD_ALLOW,
+                msg,
+            }),
+            Some(Ok(Directive::As(p))) => as_path = Some(p),
+            Some(Ok(Directive::Allow { rules: names, reason })) => {
+                let unknown: Vec<&String> =
+                    names.iter().filter(|r| !known.contains(&r.as_str())).collect();
+                if !unknown.is_empty() {
+                    diags.push(Diagnostic {
+                        path: path.to_string(),
+                        line: cm.line,
+                        rule: BAD_ALLOW,
+                        msg: format!(
+                            "allow names unknown rule(s) {:?} — see `ndq lint --rules`",
+                            unknown
+                        ),
+                    });
+                } else if reason.is_empty() {
+                    diags.push(Diagnostic {
+                        path: path.to_string(),
+                        line: cm.line,
+                        rule: BAD_ALLOW,
+                        msg: format!(
+                            "allow({}) has no reason — every suppression must say why \
+                             the invariant still holds",
+                            names.join(", ")
+                        ),
+                    });
+                } else {
+                    allows.push(AllowEntry {
+                        line: cm.line,
+                        rules: names,
+                        covers: (0, 0),
+                        used: false,
+                    });
+                }
+            }
+        }
+    }
+
+    let module_path = as_path.unwrap_or_else(|| normalize_path(path));
+    let toks = strip_test_code(lexed.toks);
+    let fns = fn_spans(&toks);
+    for a in &mut allows {
+        a.covers = resolve_allow_cover(a.line, &toks, &fns);
+    }
+    let ctx = FileCtx {
+        module_path: &module_path,
+        toks: &toks,
+        fns: &fns,
+    };
+
+    for rule in rules::RULES {
+        if !rule.applies_to(&module_path) {
+            continue;
+        }
+        let mut raw: Vec<RawDiag> = Vec::new();
+        (rule.check)(&ctx, &mut raw);
+        for d in raw {
+            let allow = allows.iter_mut().find(|a| {
+                a.rules.iter().any(|r| r == rule.name)
+                    && a.covers.0 <= d.line
+                    && d.line <= a.covers.1
+            });
+            match allow {
+                Some(a) => a.used = true,
+                None => diags.push(Diagnostic {
+                    path: path.to_string(),
+                    line: d.line,
+                    rule: rule.name,
+                    msg: d.msg,
+                }),
+            }
+        }
+    }
+
+    for a in &allows {
+        if !a.used {
+            diags.push(Diagnostic {
+                path: path.to_string(),
+                line: a.line,
+                rule: UNUSED_ALLOW,
+                msg: format!(
+                    "allow({}) suppressed nothing — remove the stale annotation",
+                    a.rules.join(", ")
+                ),
+            });
+        }
+    }
+
+    diags.sort_by(|x, y| (x.line, x.rule).cmp(&(y.line, y.rule)));
+    diags
+}
+
+/// Result of linting a path set.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// `.rs` files inspected.
+    pub files: usize,
+    /// All diagnostics, in (path, line) order.
+    pub diags: Vec<Diagnostic>,
+}
+
+/// Lint files and directory trees (recursively, `.rs` only). Traversal is
+/// sorted so output order — like everything else in this crate — is a pure
+/// function of the inputs.
+pub fn lint_paths(paths: &[String]) -> crate::Result<LintReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        collect_rs(Path::new(p), &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = LintReport {
+        files: files.len(),
+        diags: Vec::new(),
+    };
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| anyhow::anyhow!("lint: reading {}: {e}", f.display()))?;
+        report.diags.extend(lint_source(&f.to_string_lossy(), &src));
+    }
+    Ok(report)
+}
+
+fn collect_rs(p: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
+    let meta = std::fs::metadata(p)
+        .map_err(|e| anyhow::anyhow!("lint: no such path {}: {e}", p.display()))?;
+    if meta.is_dir() {
+        let mut children: Vec<PathBuf> = Vec::new();
+        for entry in std::fs::read_dir(p)? {
+            children.push(entry?.path());
+        }
+        children.sort();
+        for c in children {
+            collect_rs(&c, out)?;
+        }
+    } else if p.extension().is_some_and(|e| e == "rs") {
+        out.push(p.to_path_buf());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_finds_src_component() {
+        assert_eq!(normalize_path("rust/src/comm/net.rs"), "src/comm/net.rs");
+        assert_eq!(normalize_path("src/lib.rs"), "src/lib.rs");
+        assert_eq!(normalize_path("tests/fixture.rs"), "tests/fixture.rs");
+    }
+
+    #[test]
+    fn fn_spans_and_enclosing() {
+        let lexed = lexer::lex("fn outer() {\n    let x = 1;\n}\nfn two(a: [u8; 4]) -> u8 { a[0] }\n");
+        let toks = lexed.toks;
+        let fns = fn_spans(&toks);
+        assert_eq!(fns.len(), 2);
+        assert_eq!(fns[0].name, "outer");
+        assert_eq!(fns[0].header_line, 1);
+        assert_eq!(fns[0].close_line, 3);
+        assert_eq!(fns[1].name, "two");
+    }
+
+    #[test]
+    fn test_code_is_stripped() {
+        let src = "fn keep() {}\n#[cfg(test)]\nmod tests {\n    fn gone() {}\n}\n#[test]\nfn also_gone() {}\nfn keep2() {}\n";
+        let toks = strip_test_code(lexer::lex(src).toks);
+        let names: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(names.contains(&"keep"));
+        assert!(names.contains(&"keep2"));
+        assert!(!names.contains(&"gone"));
+        assert!(!names.contains(&"also_gone"));
+    }
+
+    #[test]
+    fn directive_parsing() {
+        assert!(parse_directive("plain comment").is_none());
+        match parse_directive("ndq-lint: allow(wall-clock) bench timing only") {
+            Some(Ok(Directive::Allow { rules, reason })) => {
+                assert_eq!(rules, vec!["wall-clock"]);
+                assert_eq!(reason, "bench timing only");
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        match parse_directive(" ndq-lint: as(src/comm/net.rs)") {
+            Some(Ok(Directive::As(p))) => assert_eq!(p, "src/comm/net.rs"),
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert!(matches!(parse_directive("ndq-lint: frobnicate"), Some(Err(_))));
+    }
+}

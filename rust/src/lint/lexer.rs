@@ -1,0 +1,453 @@
+//! A lightweight Rust lexer for the lint pass.
+//!
+//! This is not a full grammar — it is the minimal tokenizer the rule
+//! engine needs to reason about source *mechanically* without being fooled
+//! by surface syntax:
+//!
+//! * comments (line, nested block) are stripped, but line comments are
+//!   kept aside so the engine can parse `ndq-lint:` directives out of them;
+//! * string/char literals are reduced to opaque tokens, so a rule matching
+//!   the identifier `unwrap` can never fire on the *string* `"unwrap"`;
+//! * raw strings (`r"…"`, `r#"…"#`), byte strings and raw identifiers are
+//!   handled, and lifetimes are distinguished from char literals;
+//! * every token carries its 1-based source line for diagnostics.
+//!
+//! The lexer is intentionally forgiving: on malformed input it degrades to
+//! per-character punctuation tokens rather than erroring, because the lint
+//! pass must never be the thing that crashes on a weird-but-compiling file
+//! (rustc is the authority on what parses; we only classify).
+
+/// Token classes the rule engine distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unwrap`, `Instant`, …).
+    Ident,
+    /// Lifetime (`'a`, `'static`) — kept distinct so char-literal logic
+    /// cannot swallow generic code.
+    Lifetime,
+    /// Numeric literal (`42`, `1.0e-3`, `0xff`).
+    Num,
+    /// String literal of any flavor; the content is discarded.
+    Str,
+    /// Char or byte literal; the content is discarded.
+    Char,
+    /// Punctuation, one or two characters (`::`, `==`, `[`, `!`, …).
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    /// Whether this token is the identifier/keyword `s`.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Whether this token is the punctuation `s`.
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+/// A `//` comment body (text after the slashes) with its line — the only
+/// channel `ndq-lint:` directives travel on.
+#[derive(Debug, Clone)]
+pub struct LineComment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lexer output: the significant-token stream plus all line comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<LineComment>,
+}
+
+/// Two-character punctuation sequences lexed as single tokens. Order is
+/// irrelevant (all are length 2); three-character operators (`..=`, `<<=`)
+/// lex as a pair + singleton, which no rule currently cares about.
+const PUNCT2: &[&str] = &[
+    "::", "==", "!=", "<=", ">=", "&&", "||", "->", "=>", "..", "+=", "-=", "*=", "/=", "%=",
+    "^=", "&=", "|=", "<<", ">>",
+];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails; see module docs for the degradation
+/// contract on malformed input.
+pub fn lex(src: &str) -> Lexed {
+    let c: Vec<char> = src.chars().collect();
+    let n = c.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let ch = c[i];
+        if ch == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if ch.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment — captured for directive parsing, then dropped
+        if ch == '/' && i + 1 < n && c[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && c[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(LineComment {
+                line,
+                text: c[start..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        // block comment, nested per Rust
+        if ch == '/' && i + 1 < n && c[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if c[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if c[j] == '/' && j + 1 < n && c[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if c[j] == '*' && j + 1 < n && c[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // plain string literal
+        if ch == '"' {
+            i = skip_quoted(&c, i, &mut line);
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::new(),
+                line,
+            });
+            continue;
+        }
+        // lifetime vs char literal
+        if ch == '\'' {
+            let (j, kind) = skip_char_or_lifetime(&c, i, &mut line);
+            let text = if kind == TokKind::Lifetime {
+                c[i + 1..j].iter().collect()
+            } else {
+                String::new()
+            };
+            out.toks.push(Tok { kind, text, line });
+            i = j;
+            continue;
+        }
+        // identifier / keyword — including r"…" / b"…" / br#"…"# string
+        // prefixes and r#raw identifiers
+        if is_ident_start(ch) {
+            let mut j = i + 1;
+            while j < n && is_ident_continue(c[j]) {
+                j += 1;
+            }
+            let word: String = c[i..j].iter().collect();
+            let next = if j < n { Some(c[j]) } else { None };
+            let raw_capable = word == "r" || word == "br";
+            if raw_capable && (next == Some('"') || next == Some('#')) {
+                if let Some(end) = skip_raw_string(&c, j, &mut line) {
+                    out.toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: String::new(),
+                        line,
+                    });
+                    i = end;
+                    continue;
+                }
+                // `r#ident` raw identifier: re-lex the ident after the hash
+                if next == Some('#') && j + 1 < n && is_ident_start(c[j + 1]) {
+                    let mut k = j + 1;
+                    while k < n && is_ident_continue(c[k]) {
+                        k += 1;
+                    }
+                    out.toks.push(Tok {
+                        kind: TokKind::Ident,
+                        text: c[j + 1..k].iter().collect(),
+                        line,
+                    });
+                    i = k;
+                    continue;
+                }
+            }
+            if word == "b" && next == Some('"') {
+                i = skip_quoted(&c, j, &mut line);
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: String::new(),
+                    line,
+                });
+                continue;
+            }
+            if word == "b" && next == Some('\'') {
+                let (end, _) = skip_char_or_lifetime(&c, j, &mut line);
+                out.toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: String::new(),
+                    line,
+                });
+                i = end;
+                continue;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: word,
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // numeric literal (int, float, hex/oct/bin); `0..n` keeps the dots
+        if ch.is_ascii_digit() {
+            let mut j = i + 1;
+            let mut seen_dot = false;
+            while j < n {
+                let d = c[j];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    j += 1;
+                } else if d == '.' && !seen_dot && j + 1 < n && c[j + 1].is_ascii_digit() {
+                    seen_dot = true;
+                    j += 1;
+                } else if (d == '+' || d == '-')
+                    && seen_dot
+                    && (c[j - 1] == 'e' || c[j - 1] == 'E')
+                {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Num,
+                text: c[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // punctuation: greedy two-char, else one char
+        if i + 1 < n {
+            let two: String = c[i..i + 2].iter().collect();
+            if PUNCT2.contains(&two.as_str()) {
+                out.toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: two,
+                    line,
+                });
+                i += 2;
+                continue;
+            }
+        }
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: ch.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+/// Skip a `"…"` literal starting at the opening quote; returns the index
+/// past the closing quote. Handles escapes and multi-line strings.
+fn skip_quoted(c: &[char], open: usize, line: &mut u32) -> usize {
+    let n = c.len();
+    let mut j = open + 1;
+    while j < n {
+        match c[j] {
+            '\\' => {
+                // an escaped newline (string continuation) still ends a
+                // source line — without this the whole rest of the file
+                // reports off-by-N diagnostics
+                if j + 1 < n && c[j + 1] == '\n' {
+                    *line += 1;
+                }
+                j += 2;
+            }
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            '"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Skip a raw string whose hashes/quote begin at `at` (just past the `r` /
+/// `br` prefix). Returns `None` if this is not actually a raw string
+/// opening (e.g. `r#match`).
+fn skip_raw_string(c: &[char], at: usize, line: &mut u32) -> Option<usize> {
+    let n = c.len();
+    let mut hashes = 0usize;
+    let mut j = at;
+    while j < n && c[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || c[j] != '"' {
+        return None;
+    }
+    j += 1;
+    while j < n {
+        if c[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if c[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && j + 1 + k < n && c[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return Some(j + 1 + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// Disambiguate `'…` into a lifetime or a char literal starting at the
+/// quote; returns (index past the token, kind).
+fn skip_char_or_lifetime(c: &[char], open: usize, line: &mut u32) -> (usize, TokKind) {
+    let n = c.len();
+    // escape ⇒ definitely a char literal
+    if open + 1 < n && c[open + 1] == '\\' {
+        let mut j = open + 2;
+        while j < n && c[j] != '\'' {
+            j += 1;
+        }
+        return ((j + 1).min(n), TokKind::Char);
+    }
+    // `'a'` is a char; `'a` followed by anything else is a lifetime
+    if open + 1 < n && is_ident_start(c[open + 1]) {
+        let mut j = open + 2;
+        while j < n && is_ident_continue(c[j]) {
+            j += 1;
+        }
+        if j < n && c[j] == '\'' && j == open + 2 {
+            return (j + 1, TokKind::Char);
+        }
+        return (j, TokKind::Lifetime);
+    }
+    // non-identifier char literal: `'$'`, `' '`, …
+    let mut j = open + 1;
+    if j < n && c[j] == '\n' {
+        *line += 1;
+    }
+    if j < n {
+        j += 1;
+    }
+    if j < n && c[j] == '\'' {
+        j += 1;
+    }
+    (j, TokKind::Char)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let lx = lex("let s = \"Instant::now()\"; // Instant::now\n/* SystemTime::now */ x");
+        assert!(!lx.toks.iter().any(|t| t.text.contains("Instant")));
+        assert!(!lx.toks.iter().any(|t| t.text.contains("SystemTime")));
+        assert_eq!(lx.comments.len(), 1);
+        assert!(lx.comments[0].text.contains("Instant::now"));
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents() {
+        assert_eq!(texts("r#\"unwrap\"# r\"x\" br#\"y\"#"), vec!["", "", ""]);
+        assert_eq!(texts("r#match x"), vec!["match", "x"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let lx = lex("fn f<'a>(x: &'a str) { let c = 'q'; let d = '\\n'; }");
+        let lifetimes: Vec<_> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .collect();
+        assert_eq!(lifetimes.len(), 2);
+        let chars = lx.toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let lx = lex("for i in 0..n { let x = 1.0e-3; let y = 0xff; }");
+        let nums: Vec<_> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(nums, vec!["0", "1.0e-3", "0xff"]);
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_tokens() {
+        let lx = lex("a\n\"two\nline\"\nb");
+        let a = lx.toks.iter().find(|t| t.text == "a").unwrap();
+        let b = lx.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(a.line, 1);
+        assert_eq!(b.line, 4);
+    }
+
+    #[test]
+    fn escaped_newline_in_string_counts_lines() {
+        // `\` + newline is a string continuation but still a source line
+        let lx = lex("a\n\"one \\\ntwo\"\nb");
+        let b = lx.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 4);
+    }
+
+    #[test]
+    fn two_char_punct() {
+        let lx = lex("a == b != c :: d");
+        let puncts: Vec<_> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(puncts, vec!["==", "!=", "::"]);
+    }
+}

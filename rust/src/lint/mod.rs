@@ -1,0 +1,34 @@
+//! `ndq lint` — repo-invariant static analysis.
+//!
+//! The statistical claims this repo reproduces (DQSG/NDQSG ≡ unquantized
+//! SG + independent bounded noise) are only testable because every run is
+//! a pure function of its seed. That purity rests on conventions that have
+//! already been broken once each: no wall clocks in billed paths, canonical
+//! fold order, panic-free decoding of hostile wire bytes, allocation-free
+//! `*_into` decoders, and no unchecked narrowing on wire lengths. This
+//! module makes those conventions machine-checked.
+//!
+//! Architecture (bottom-up):
+//!
+//! * [`lexer`] — a lightweight Rust tokenizer that strips comments and
+//!   string literals, so rules match code, not prose;
+//! * [`rules`] — the rule registry: each rule is a token-level checker
+//!   plus a module scope (`src/…` path prefixes) tying it to the code
+//!   where its contract is load-bearing;
+//! * [`engine`] — per-file driver: elides `#[cfg(test)]`/`#[test]` code,
+//!   tracks `fn` spans (rules and allows can be function-scoped), resolves
+//!   `// ndq-lint: allow(<rule>) <reason>` annotations (reasons are
+//!   mandatory, stale allows are themselves diagnostics), and walks path
+//!   sets deterministically.
+//!
+//! The pass is wired as a hard tier-1 gate: `ndq lint src` must exit 0
+//! (see `scripts/tier1.sh` and the GitHub workflow), and
+//! `tests/lint_engine.rs` pins both the engine semantics (via seeded
+//! fixtures under `tests/lint_fixtures/`) and the repo-clean invariant.
+
+pub mod engine;
+pub mod lexer;
+pub mod rules;
+
+pub use engine::{lint_paths, lint_source, Diagnostic, LintReport};
+pub use rules::{Rule, RULES};

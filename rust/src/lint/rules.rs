@@ -1,0 +1,391 @@
+//! The repo-invariant rule set.
+//!
+//! Every rule here is grounded in a contract an existing test suite or
+//! ledger depends on (see README "Static invariants"): determinism of
+//! fingerprinted runs, panic-free decoding of hostile wire bytes, and the
+//! allocation-free decode hot path. Rules are lexical — they match token
+//! shapes, not types — so each one is scoped to the modules where the
+//! pattern is load-bearing, and every intentional exception must carry an
+//! `ndq-lint: allow(<rule>) <reason>` annotation.
+
+use crate::lint::engine::{FileCtx, RawDiag};
+
+/// Where a rule applies, in normalized `src/…` module-path space.
+#[derive(Debug, Clone, Copy)]
+pub enum Scope {
+    /// Everywhere the linter looks.
+    Crate,
+    /// Only files whose module path starts with one of these prefixes.
+    Modules(&'static [&'static str]),
+}
+
+/// One lint rule: a name (the `allow(…)` key), a human summary, a module
+/// scope, and a token-level checker.
+pub struct Rule {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub scope: Scope,
+    pub check: fn(&FileCtx, &mut Vec<RawDiag>),
+}
+
+impl Rule {
+    /// Whether this rule runs on a file at `module_path`.
+    pub fn applies_to(&self, module_path: &str) -> bool {
+        match self.scope {
+            Scope::Crate => true,
+            Scope::Modules(prefixes) => prefixes.iter().any(|p| module_path.starts_with(p)),
+        }
+    }
+
+    /// Scope rendered for `ndq lint --rules`.
+    pub fn scope_label(&self) -> String {
+        match self.scope {
+            Scope::Crate => "crate-wide".to_string(),
+            Scope::Modules(prefixes) => prefixes.join(", "),
+        }
+    }
+}
+
+/// Modules whose outputs are fingerprinted or ledger-billed: canonical
+/// iteration order and total float orderings are load-bearing here.
+const DETERMINISM_MODULES: &[&str] = &[
+    "src/comm/",
+    "src/train/",
+    "src/testing/",
+    "src/quant/",
+    "src/coding/",
+    "src/stats/",
+    "src/sim/",
+];
+
+/// Modules that decode wire/envelope bytes: hostile input must surface
+/// typed errors, never panics.
+const DECODE_MODULES: &[&str] = &["src/comm/net.rs", "src/quant/", "src/coding/"];
+
+/// A function is "on the decode path" when its name carries one of these
+/// markers — the lexical approximation of "reachable from hostile bytes".
+const DECODE_FN_MARKERS: &[&str] = &[
+    "decode", "parse", "unpack", "read", "from_", "next_", "indices", "scales",
+];
+
+/// Keywords that can precede `[` without forming an index expression.
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "false", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move",
+    "mut", "pub", "ref", "return", "static", "struct", "super", "trait", "true", "type", "unsafe",
+    "use", "where", "while", "yield",
+];
+
+/// The rule registry, in the order diagnostics are grouped.
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "wall-clock",
+        summary: "no Instant::now/SystemTime::now — virtual-clock billing and fingerprints \
+                  must stay pure; allow only reporting/transport-backpressure timers",
+        scope: Scope::Crate,
+        check: check_wall_clock,
+    },
+    Rule {
+        name: "unordered-iter",
+        summary: "no HashMap/HashSet in fingerprinted or ledger modules — iteration order \
+                  must be canonical (BTreeMap or explicit sort)",
+        scope: Scope::Modules(DETERMINISM_MODULES),
+        check: check_unordered_iter,
+    },
+    Rule {
+        name: "float-cmp",
+        summary: "no partial_cmp or float-literal ==/!= in fold/selection paths — use \
+                  total_cmp (total order, no NaN panic) or an explicit tolerance",
+        scope: Scope::Modules(DETERMINISM_MODULES),
+        check: check_float_cmp,
+    },
+    Rule {
+        name: "panic-path",
+        summary: "no unwrap/expect/panic!/assert!/indexing inside decode-path functions of \
+                  wire modules — hostile bytes must surface typed errors",
+        scope: Scope::Modules(DECODE_MODULES),
+        check: check_panic_path,
+    },
+    Rule {
+        name: "alloc-in-decode",
+        summary: "no Vec::new/vec!/to_vec/collect/with_capacity inside `*_into` decode \
+                  functions — the buffer-reuse contract decodes into caller-owned scratch",
+        scope: Scope::Modules(&["src/comm/", "src/quant/", "src/coding/"]),
+        check: check_alloc_in_decode,
+    },
+    Rule {
+        name: "naked-cast",
+        summary: "no bare `as` narrowing on wire length/count fields in framing code — use \
+                  try_into / try_from so hostile lengths fail typed",
+        scope: Scope::Modules(&["src/comm/net.rs", "src/quant/mod.rs"]),
+        check: check_naked_cast,
+    },
+    Rule {
+        name: "unsafe-code",
+        summary: "no `unsafe` anywhere — mirrors #![forbid(unsafe_code)] so fixtures and \
+                  tooling can't drift from the crate attribute",
+        scope: Scope::Crate,
+        check: check_unsafe_code,
+    },
+];
+
+/// Look up a rule by name (used by `ndq lint --rules` and tests).
+pub fn rule(name: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.name == name)
+}
+
+fn check_wall_clock(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
+    let t = ctx.toks;
+    for i in 0..t.len() {
+        if (t[i].is_ident("Instant") || t[i].is_ident("SystemTime"))
+            && i + 2 < t.len()
+            && t[i + 1].is_punct("::")
+            && t[i + 2].is_ident("now")
+        {
+            out.push(RawDiag {
+                line: t[i].line,
+                msg: format!(
+                    "`{}::now` reads the wall clock; billed/fingerprinted paths must use \
+                     the virtual clock (sim::LinkModel time)",
+                    t[i].text
+                ),
+            });
+        }
+    }
+}
+
+fn check_unordered_iter(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
+    for t in ctx.toks {
+        if t.is_ident("HashMap") || t.is_ident("HashSet") {
+            out.push(RawDiag {
+                line: t.line,
+                msg: format!(
+                    "`{}` iterates in nondeterministic order; fingerprinted/ledger modules \
+                     fold in canonical order — use BTreeMap/BTreeSet or sort explicitly",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// Float literal heuristic: a decimal point or an explicit f32/f64 suffix
+/// (hex literals excluded).
+fn is_float_literal(text: &str) -> bool {
+    !text.starts_with("0x")
+        && (text.contains('.') || text.ends_with("f32") || text.ends_with("f64"))
+}
+
+fn check_float_cmp(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
+    let t = ctx.toks;
+    for i in 0..t.len() {
+        if t[i].is_ident("partial_cmp") {
+            out.push(RawDiag {
+                line: t[i].line,
+                msg: "`partial_cmp` panics or misorders on NaN; fold/selection paths must \
+                      use `total_cmp`"
+                    .to_string(),
+            });
+        }
+        if t[i].is_punct("==") || t[i].is_punct("!=") {
+            let prev_float = i > 0
+                && t[i - 1].kind == crate::lint::lexer::TokKind::Num
+                && is_float_literal(&t[i - 1].text);
+            let next_float = i + 1 < t.len()
+                && t[i + 1].kind == crate::lint::lexer::TokKind::Num
+                && is_float_literal(&t[i + 1].text);
+            if prev_float || next_float {
+                out.push(RawDiag {
+                    line: t[i].line,
+                    msg: format!(
+                        "floating-point `{}` against a literal; compare with an explicit \
+                         tolerance or `total_cmp`",
+                        t[i].text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Whether token `idx` sits inside a function whose name marks it as a
+/// decode-path function.
+fn in_decode_fn(ctx: &FileCtx, idx: usize) -> bool {
+    ctx.enclosing_fn(idx)
+        .map(|f| DECODE_FN_MARKERS.iter().any(|m| f.name.contains(m)))
+        .unwrap_or(false)
+}
+
+fn check_panic_path(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
+    let t = ctx.toks;
+    for i in 0..t.len() {
+        // `.unwrap()` / `.expect(…)`
+        if i > 0
+            && t[i - 1].is_punct(".")
+            && (t[i].is_ident("unwrap") || t[i].is_ident("expect"))
+            && in_decode_fn(ctx, i)
+        {
+            out.push(RawDiag {
+                line: t[i].line,
+                msg: format!(
+                    "`.{}` on a decode path can panic on hostile bytes — return a typed \
+                     error instead",
+                    t[i].text
+                ),
+            });
+            continue;
+        }
+        // panicking macros
+        if i + 1 < t.len()
+            && t[i + 1].is_punct("!")
+            && ["panic", "unreachable", "todo", "unimplemented", "assert", "assert_eq", "assert_ne"]
+                .iter()
+                .any(|m| t[i].is_ident(m))
+            && in_decode_fn(ctx, i)
+        {
+            out.push(RawDiag {
+                line: t[i].line,
+                msg: format!(
+                    "`{}!` on a decode path panics on hostile bytes — use anyhow::ensure!/\
+                     bail! to surface a typed error",
+                    t[i].text
+                ),
+            });
+            continue;
+        }
+        // index expressions: `expr[…]` where expr ends in an identifier,
+        // `)` or `]` (attribute `#[`, `vec![`, array types `&[…]` etc. are
+        // preceded by other punctuation and don't match)
+        if t[i].is_punct("[") && i > 0 && in_decode_fn(ctx, i) {
+            let p = &t[i - 1];
+            let indexes = match p.kind {
+                crate::lint::lexer::TokKind::Ident => {
+                    !NON_INDEX_KEYWORDS.contains(&p.text.as_str())
+                }
+                crate::lint::lexer::TokKind::Punct => p.text == ")" || p.text == "]",
+                _ => false,
+            };
+            if indexes {
+                out.push(RawDiag {
+                    line: t[i].line,
+                    msg: "slice indexing on a decode path panics out of bounds — use `get` \
+                          with a typed error, or allow() stating the bounding invariant"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn check_alloc_in_decode(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
+    let t = ctx.toks;
+    for f in ctx.fns {
+        if !f.name.ends_with("_into") {
+            continue;
+        }
+        for i in f.open_idx..f.end_idx.min(t.len()) {
+            // `Vec::new`, `Vec::with_capacity`, `Box::new`, `String::from`…
+            let ctor = i + 2 < t.len()
+                && ["Vec", "Box", "String", "VecDeque", "BTreeMap", "BTreeSet"]
+                    .iter()
+                    .any(|c| t[i].is_ident(c))
+                && t[i + 1].is_punct("::")
+                && ["new", "with_capacity", "from"].iter().any(|m| t[i + 2].is_ident(m));
+            // `vec![…]`
+            let vec_macro = i + 1 < t.len() && t[i].is_ident("vec") && t[i + 1].is_punct("!");
+            // allocating methods
+            let method = i > 0
+                && t[i - 1].is_punct(".")
+                && ["to_vec", "to_owned", "to_string", "collect"]
+                    .iter()
+                    .any(|m| t[i].is_ident(m));
+            if ctor || vec_macro || method {
+                out.push(RawDiag {
+                    line: t[i].line,
+                    msg: format!(
+                        "heap allocation in `{}` — `*_into` decoders run on the \
+                         allocation-free hot path and must reuse caller-owned buffers",
+                        f.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Integer types a bare `as` cast can silently truncate or re-sign into.
+const NARROWING_TARGETS: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32", "usize"];
+
+fn check_naked_cast(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
+    let t = ctx.toks;
+    for i in 0..t.len() {
+        if t[i].is_ident("as")
+            && i + 1 < t.len()
+            && NARROWING_TARGETS.iter().any(|ty| t[i + 1].is_ident(ty))
+        {
+            out.push(RawDiag {
+                line: t[i].line,
+                msg: format!(
+                    "bare `as {}` can silently truncate a wire length/count — use \
+                     `try_from`/`try_into` or an annotated checked helper",
+                    t[i + 1].text
+                ),
+            });
+        }
+    }
+}
+
+fn check_unsafe_code(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
+    for t in ctx.toks {
+        if t.is_ident("unsafe") {
+            out.push(RawDiag {
+                line: t.line,
+                msg: "`unsafe` is forbidden in this crate (#![forbid(unsafe_code)]); no \
+                      module needs it"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_kebab_case() {
+        let mut names: Vec<&str> = RULES.iter().map(|r| r.name).collect();
+        names.sort();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before);
+        for n in names {
+            assert!(
+                n.chars().all(|c| c.is_ascii_lowercase() || c == '-'),
+                "rule name {n} not kebab-case"
+            );
+        }
+    }
+
+    #[test]
+    fn scopes_resolve() {
+        let wall = rule("wall-clock").unwrap();
+        assert!(wall.applies_to("src/anything.rs"));
+        let panic = rule("panic-path").unwrap();
+        assert!(panic.applies_to("src/comm/net.rs"));
+        assert!(panic.applies_to("src/quant/dithered.rs"));
+        assert!(!panic.applies_to("src/train/trainer.rs"));
+        let cast = rule("naked-cast").unwrap();
+        assert!(cast.applies_to("src/quant/mod.rs"));
+        assert!(!cast.applies_to("src/quant/dithered.rs"));
+    }
+
+    #[test]
+    fn float_literal_heuristic() {
+        assert!(is_float_literal("1.0"));
+        assert!(is_float_literal("1.0e-3"));
+        assert!(is_float_literal("2f64"));
+        assert!(!is_float_literal("42"));
+        assert!(!is_float_literal("0xff"));
+    }
+}

@@ -135,6 +135,17 @@ pub const MAX_FRAME_M: i32 = 1 << 20;
 /// proportional to the actual message size.
 pub const MAX_AAC_SYMBOLS_PER_BIT: usize = 1 << 15;
 
+/// Index alphabet size `2m + 1` as the `u32` the codecs consume — the one
+/// audited choke point for that conversion. On the decode side `m` is
+/// bounded into `[0, MAX_FRAME_M]` by [`WireMsg::parse`]; on the encode
+/// side it is a non-negative half-width from the scheme config, orders of
+/// magnitude below `i32::MAX / 2`.
+// ndq-lint: allow(naked-cast) non-negative m makes 2m+1 positive, so widening to u32 is lossless; single checked conversion point
+pub(crate) fn alphabet_u32(m: i32) -> u32 {
+    debug_assert!(m >= 0, "alphabet half-width must be non-negative, got {m}");
+    (2 * m + 1) as u32
+}
+
 /// Scheme discriminants on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
@@ -161,6 +172,12 @@ impl SchemeId {
             6 => SchemeId::Nested,
             _ => anyhow::bail!("unknown scheme id {v} on the wire"),
         })
+    }
+
+    /// This id's wire discriminant — the inverse of [`SchemeId::from_u8`].
+    // ndq-lint: allow(naked-cast) #[repr(u8)] discriminant readback is lossless by construction
+    pub fn wire_byte(self) -> u8 {
+        self as u8
     }
 }
 
@@ -210,6 +227,7 @@ pub struct WireMsg {
 
 impl WireMsg {
     /// Parse + validate a framed message from raw transport bytes.
+    // ndq-lint: allow(panic-path) every byte access is preceded by an ensure! length guard, and try_into unwraps are on fixed-width subslices; pinned by the hostile-bytes cases in tests/wire_v2_conformance.rs
     pub fn parse(bytes: Vec<u8>) -> crate::Result<WireMsg> {
         anyhow::ensure!(
             bytes.len() >= MSG_HEADER_BYTES + CHECKSUM_BYTES,
@@ -241,7 +259,8 @@ impl WireMsg {
             want == got,
             "checksum mismatch: trailer says {want:#010x}, bytes hash to {got:#010x}"
         );
-        let n_frames = u32::from_le_bytes([bytes[5], bytes[6], bytes[7], bytes[8]]) as usize;
+        let n_frames =
+            usize::try_from(u32::from_le_bytes([bytes[5], bytes[6], bytes[7], bytes[8]]))?;
         let mut frames = Vec::with_capacity(n_frames.min(4096));
         let mut off = MSG_HEADER_BYTES;
         for f in 0..n_frames {
@@ -249,12 +268,13 @@ impl WireMsg {
                 off + FRAME_HEADER_BYTES <= body_len,
                 "frame {f} header truncated"
             );
-            let n = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+            let n = usize::try_from(u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()))?;
             let m = i32::from_le_bytes(bytes[off + 8..off + 12].try_into().unwrap());
             let n_scales =
-                u32::from_le_bytes(bytes[off + 12..off + 16].try_into().unwrap()) as usize;
-            let payload_bits =
-                u64::from_le_bytes(bytes[off + 16..off + 24].try_into().unwrap()) as usize;
+                usize::try_from(u32::from_le_bytes(bytes[off + 12..off + 16].try_into().unwrap()))?;
+            let payload_bits = usize::try_from(u64::from_le_bytes(
+                bytes[off + 16..off + 24].try_into().unwrap(),
+            ))?;
             let payload_off = off + FRAME_HEADER_BYTES;
             let payload_len = payload_bits.div_ceil(8);
             anyhow::ensure!(
@@ -380,6 +400,7 @@ impl WireMsg {
         Ok(out)
     }
 
+    // ndq-lint: allow(panic-path) `i` always comes from iterating self.frames (see indices/derive_metrics), never from wire bytes
     fn frame_indices(&self, i: usize, out: &mut Vec<i32>) -> crate::Result<()> {
         let f = self.frames[i];
         let mut r = BitReader::new(self.frame_payload(i));
@@ -387,7 +408,7 @@ impl WireMsg {
             r.read_f32()?;
         }
         if f.m >= 1 {
-            let k = (2 * f.m + 1) as u32;
+            let k = alphabet_u32(f.m);
             let mut src = SymbolSource::new(&mut r, f.codec, k, f.n)?;
             out.reserve(f.n.min(f.payload_bits.saturating_add(1)));
             for _ in 0..f.n {
@@ -395,7 +416,7 @@ impl WireMsg {
             }
         } else if self.scheme == SchemeId::OneBit {
             for _ in 0..f.n {
-                out.push(r.read_bit()? as i32);
+                out.push(i32::from(r.read_bit()?));
             }
         }
         Ok(())
@@ -443,7 +464,7 @@ impl WireMsg {
             idx.clear();
             match self.frame_indices(i, &mut idx) {
                 Ok(()) => {
-                    let k = (2 * f.m + 1) as u32;
+                    let k = alphabet_u32(f.m);
                     m.raw_bits +=
                         (pack::packed_bits(f.n, k) + 32 * f.n_scales) as u64;
                     entropy_raw_bits += 32 * f.n_scales as u64;
@@ -488,6 +509,7 @@ impl WireMsg {
     /// Actual adaptive-arithmetic-coded size in bits (what ACC achieves):
     /// the transmitted size when `codec == Aac`, the measured
     /// counterfactual otherwise.
+    // ndq-lint: allow(naked-cast) u64 bit totals of in-memory messages fit usize on the 64-bit targets this crate supports; diagnostics accessor, not wire decoding
     pub fn aac_bits(&self) -> usize {
         match &self.metrics {
             Some(BitMetrics { aac_bits: Some(a), .. }) => *a as usize,
@@ -573,8 +595,8 @@ impl WireMsgBuilder {
         let mut bytes = Vec::with_capacity(64);
         bytes.extend_from_slice(&WIRE_MAGIC);
         bytes.push(WIRE_VERSION);
-        bytes.push(scheme as u8);
-        bytes.push(codec as u8);
+        bytes.push(scheme.wire_byte());
+        bytes.push(codec.wire_byte());
         bytes.extend_from_slice(&0u32.to_le_bytes()); // frame count, patched in finish()
         Self {
             scheme,
@@ -585,6 +607,7 @@ impl WireMsgBuilder {
     }
 
     /// Append one per-tensor frame whose payload was written through `w`.
+    // ndq-lint: allow(naked-cast) encoder-side counts of frames this process just built; the decode side re-validates every length
     pub fn push_frame(&mut self, n: usize, m: i32, n_scales: usize, w: BitWriter) {
         let payload_bits = w.len_bits();
         let payload = w.into_bytes();
@@ -614,6 +637,7 @@ impl WireMsgBuilder {
     /// Seal the message and attach encode-time [`BitMetrics`] (what
     /// [`GradQuantizer::encode_tensors_coded`] does after the frame sink
     /// accumulated them).
+    // ndq-lint: allow(naked-cast) frame count of a locally built message; parse re-checks the field against body length
     pub fn finish_with_metrics(mut self, metrics: Option<BitMetrics>) -> WireMsg {
         let count = self.frames.len() as u32;
         self.bytes[5..9].copy_from_slice(&count.to_le_bytes());
@@ -702,7 +726,7 @@ impl FrameSink<'_> {
     /// negotiated codec and record its raw-equivalent, entropy-limit and —
     /// when shipping `aac` — exact coded sizes.
     pub fn put_indices(&mut self, q: &[i32], m: i32) {
-        let k = (2 * m + 1) as u32;
+        let k = alphabet_u32(m);
         self.acc.raw += pack::packed_bits(q.len(), k) as u64;
         self.acc.entropy_coded +=
             entropy::signed_stream_entropy(q, m) * q.len() as f64;
@@ -881,12 +905,16 @@ pub trait GradQuantizer: Send {
         }
         let mut off = 0usize;
         for (i, f) in msg.frames().iter().enumerate() {
+            // slicing is in-bounds: the ensure! guards above pin
+            // out.len() == side.len() == msg.n() == sum of frame n's
+            // ndq-lint: allow(panic-path) frame offsets sum to msg.n(), which the ensure! guards above pin to both buffer lengths
             let frame_side = side.map(|s| &s[off..off + f.n]);
             self.decode_frame_into(
                 f,
                 msg.frame_payload(i),
                 dither,
                 frame_side,
+                // ndq-lint: allow(panic-path) same bound as frame_side: off + f.n <= msg.n() == out.len()
                 &mut out[off..off + f.n],
             )?;
             off += f.n;
@@ -930,6 +958,7 @@ pub trait GradQuantizer: Send {
         let mut out = Vec::with_capacity(msg.frames().len());
         let mut off = 0usize;
         for (i, f) in msg.frames().iter().enumerate() {
+            // ndq-lint: allow(panic-path) the ensure! above pins side.len() == msg.n(), the sum of all frame n's
             let frame_side = side.map(|s| &s[off..off + f.n]);
             let decoded = self.decode_frame(f, msg.frame_payload(i), dither, frame_side)?;
             off += f.n;
@@ -1029,7 +1058,7 @@ impl Scheme {
     pub fn validate_codec(&self, codec: PayloadCodec) -> crate::Result<()> {
         let k = self.alphabet();
         anyhow::ensure!(
-            k == 0 || codec.supports_alphabet(k as usize),
+            k == 0 || codec.supports_alphabet(usize::try_from(k)?),
             "{} cannot ship `{}`-coded payloads: its {k}-symbol alphabet \
              exceeds the codec's limit",
             self.label(),
@@ -1060,7 +1089,8 @@ impl Scheme {
             "quantization levels must be odd and >= 3 (got {k}); the wire \
              alphabet is symmetric around zero"
         );
-        let m = ((k - 1) / 2) as f32;
+        let half = (k - 1) / 2;
+        let m = half as f32;
         let scheme = match *self {
             Scheme::Baseline => {
                 anyhow::bail!("baseline ships raw f32s — it has no quantization-level dial")
@@ -1076,7 +1106,7 @@ impl Scheme {
             Scheme::DitheredPartitioned { k: parts, .. } => {
                 Scheme::DitheredPartitioned { delta: 1.0 / m, k: parts }
             }
-            Scheme::Qsgd { .. } => Scheme::Qsgd { m: m as i32 },
+            Scheme::Qsgd { .. } => Scheme::Qsgd { m: i32::try_from(half)? },
             Scheme::Nested { d1, alpha, .. } => Scheme::Nested { d1, ratio: k, alpha },
         };
         debug_assert_eq!(scheme.alphabet(), k);
@@ -1093,7 +1123,7 @@ impl Scheme {
     pub fn parse(s: &str) -> crate::Result<Scheme> {
         let parts: Vec<&str> = s.split(':').collect();
         let bad = || anyhow::anyhow!("unknown scheme `{s}`");
-        match parts[0] {
+        match parts[0] { // ndq-lint: allow(panic-path) split() always yields at least one (possibly empty) part
             "baseline" => Ok(Scheme::Baseline),
             "dqsg" => {
                 let delta: f32 = parts.get(1).unwrap_or(&"1.0").parse()?;
@@ -1152,7 +1182,7 @@ impl SchemeRegistry {
 
     /// Register the decoder for `scheme`'s wire id.
     pub fn register(&mut self, scheme: Scheme) -> crate::Result<()> {
-        let id = scheme.id() as u8;
+        let id = scheme.id().wire_byte();
         if let Some((existing, _)) = self.entries.get(&id) {
             anyhow::ensure!(
                 *existing == scheme,
@@ -1176,13 +1206,13 @@ impl SchemeRegistry {
 
     /// Whether a codec is registered for `id`.
     pub fn contains(&self, id: SchemeId) -> bool {
-        self.entries.contains_key(&(id as u8))
+        self.entries.contains_key(&id.wire_byte())
     }
 
     /// Look up the codec for a wire id.
     pub fn decoder(&self, id: SchemeId) -> crate::Result<&dyn GradQuantizer> {
         self.entries
-            .get(&(id as u8))
+            .get(&id.wire_byte())
             .map(|(_, q)| q.as_ref())
             .ok_or_else(|| {
                 anyhow::anyhow!("no codec registered for wire scheme {id:?} — refusing to decode")

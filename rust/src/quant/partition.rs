@@ -85,6 +85,7 @@ impl GradQuantizer for PartitionedDithered {
         (self.inner.m(), scales.len())
     }
 
+    // ndq-lint: allow(panic-path) bounds_iter partitions exactly [0, frame.n) and the ensure! above pins out.len() == frame.n
     fn decode_frame_into(
         &self,
         frame: &Frame,

@@ -57,6 +57,7 @@ impl GradQuantizer for TerngradQuantizer {
         for &x in g {
             s = s.max(clip(x).abs());
         }
+        // ndq-lint: allow(float-cmp) max-of-abs is exactly 0.0 iff every element is zero; guard, not a tolerance question
         if s == 0.0 {
             s = 1.0;
         }

@@ -78,6 +78,7 @@ impl Bench {
 
     /// Benchmark `f`, preventing the result from being optimized out by
     /// requiring it to return a value that we black-box.
+    // ndq-lint: allow(wall-clock) benchmark harness measures real elapsed time by definition; results are reporting-only
     pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchResult {
         // Warmup + cost estimate
         let start = Instant::now();
@@ -139,6 +140,7 @@ pub fn print_table_row(label: &str, vals: &[f64]) {
     for v in vals {
         if v.abs() >= 1000.0 {
             print!("{v:>14.1}");
+        // ndq-lint: allow(float-cmp) display formatting: exact zero prints fixed-point, not scientific
         } else if *v != 0.0 && v.abs() < 0.01 {
             print!("{v:>14.2e}");
         } else {

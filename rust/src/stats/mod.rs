@@ -68,10 +68,10 @@ impl Running {
 /// Median and median-absolute-deviation of a sample (robust summary).
 pub fn median_mad(samples: &mut [f64]) -> (f64, f64) {
     assert!(!samples.is_empty());
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let med = percentile_sorted(samples, 50.0);
     let mut devs: Vec<f64> = samples.iter().map(|&x| (x - med).abs()).collect();
-    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    devs.sort_by(|a, b| a.total_cmp(b));
     (med, percentile_sorted(&devs, 50.0))
 }
 
@@ -115,5 +115,16 @@ mod tests {
         assert_eq!(percentile_sorted(&sorted, 0.0), 10.0);
         assert_eq!(percentile_sorted(&sorted, 100.0), 40.0);
         assert!((percentile_sorted(&sorted, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_mad_is_total_ordered_under_nan() {
+        // total_cmp sorts NaN after every finite value instead of
+        // panicking mid-sort — a NaN-polluted sample still yields the
+        // finite median/MAD of the rest
+        let mut v = vec![f64::NAN, 2.0, 1.0, 3.0];
+        let (med, mad) = median_mad(&mut v);
+        assert_eq!(med, 2.5);
+        assert_eq!(mad, 1.0);
     }
 }

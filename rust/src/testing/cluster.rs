@@ -191,6 +191,7 @@ impl ClusterHarness {
     }
 
     /// Drive the scenario to completion and return the report.
+    // ndq-lint: allow(wall-clock) elapsed_secs in the report is operator telemetry; round billing uses FaultChannel's virtual link clock
     pub fn run(&mut self) -> crate::Result<TrainReport> {
         let t0 = std::time::Instant::now();
         let sc = self.sc.clone();
@@ -383,6 +384,7 @@ pub fn serve_scenario(
 /// ephemeral-port pattern (`tcp:127.0.0.1:0` +
 /// [`NetListener::local_addr`]) needs the bound address *before* the
 /// accept loop starts.
+// ndq-lint: allow(wall-clock) transport backpressure (socket deadline valve) + report telemetry; fingerprints stay clock-free
 pub fn serve_listener(
     sc: ClusterScenario,
     listener: NetListener,

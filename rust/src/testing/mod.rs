@@ -88,7 +88,7 @@ pub fn prop_check<T: std::fmt::Debug, G: Gen<T>, P: Fn(&T) -> Result<(), String>
 /// that bound is ≈ 0.005.
 pub fn ks_statistic_uniform(samples: &mut [f64], lo: f64, hi: f64) -> f64 {
     assert!(!samples.is_empty() && hi > lo);
-    samples.sort_by(|a, b| a.partial_cmp(b).expect("non-finite sample"));
+    samples.sort_by(|a, b| a.total_cmp(b));
     let n = samples.len() as f64;
     let width = hi - lo;
     let mut d = 0f64;
@@ -231,6 +231,16 @@ mod tests {
         let mut u: Vec<f64> = (0..100_000).map(|_| rng.next_f32() as f64).collect();
         let d = ks_statistic_uniform(&mut u, 0.0, 1.0);
         assert!(d < 1.63 / (100_000f64).sqrt(), "D={d}");
+    }
+
+    #[test]
+    fn ks_statistic_is_total_ordered_under_nan() {
+        // total_cmp puts NaN after every finite sample instead of
+        // panicking mid-sort; fmax then ignores the NaN term, so the
+        // statistic stays finite
+        let mut v = vec![0.25, f64::NAN, 0.75];
+        let d = ks_statistic_uniform(&mut v, 0.0, 1.0);
+        assert!(d.is_finite(), "D={d}");
     }
 
     #[test]

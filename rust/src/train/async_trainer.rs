@@ -96,6 +96,7 @@ impl AsyncTrainer {
         })
     }
 
+    // ndq-lint: allow(wall-clock) elapsed_secs in the report is operator telemetry; staleness uses virtual worker clocks
     pub fn run(&mut self) -> crate::Result<(TrainReport, AsyncStats)> {
         let t0 = std::time::Instant::now();
         let cfg = &self.cfg;

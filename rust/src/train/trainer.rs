@@ -373,6 +373,7 @@ impl Trainer {
     }
 
     /// Run the full configured training; returns the report.
+    // ndq-lint: allow(wall-clock) elapsed_secs in the report is operator telemetry; bit/time ledgers use the virtual clock
     pub fn run(&mut self) -> crate::Result<TrainReport> {
         let t0 = std::time::Instant::now();
         let cfg = self.cfg.clone();

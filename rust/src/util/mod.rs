@@ -35,6 +35,7 @@ pub fn write_f32_bin(path: &Path, data: &[f32]) -> crate::Result<()> {
 pub struct Stopwatch(std::time::Instant);
 
 impl Stopwatch {
+    // ndq-lint: allow(wall-clock) the Stopwatch type IS the sanctioned wall timer; used for progress lines only
     pub fn start() -> Self {
         Self(std::time::Instant::now())
     }

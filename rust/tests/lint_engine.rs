@@ -1,0 +1,127 @@
+//! End-to-end tests of the `ndq lint` static-analysis pass.
+//!
+//! The corpus under `tests/lint_fixtures/` seeds exactly one kind of
+//! violation per rule (plus clean counterparts and directive-error cases);
+//! every expectation pins the exact rule name *and* line so a drifting
+//! lexer or engine shows up as a precise diff, not a flaky count. The
+//! final tests gate the repo itself: the crate's own `src/` tree must stay
+//! diagnostic-free, and the CLI must fail loudly on a seeded violation.
+
+use ndq::lint::{lint_paths, lint_source, RULES};
+
+fn manifest(rel: &str) -> String {
+    format!("{}/{rel}", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Lint one fixture, reduced to (rule, line) pairs in reporting order.
+fn diags_of(name: &str) -> Vec<(&'static str, u32)> {
+    let path = manifest(&format!("tests/lint_fixtures/{name}"));
+    let src = std::fs::read_to_string(&path).expect("fixture readable");
+    lint_source(&path, &src).into_iter().map(|d| (d.rule, d.line)).collect()
+}
+
+#[test]
+fn every_rule_fires_at_its_seeded_line() {
+    assert_eq!(diags_of("wall_clock_bad.rs"), [("wall-clock", 5)]);
+    assert_eq!(
+        diags_of("unordered_iter_bad.rs"),
+        [("unordered-iter", 3), ("unordered-iter", 5), ("unordered-iter", 6)]
+    );
+    assert_eq!(diags_of("float_cmp_bad.rs"), [("float-cmp", 5), ("float-cmp", 10)]);
+    // line 6 carries both a slice-index and a `.unwrap` finding
+    assert_eq!(
+        diags_of("panic_path_bad.rs"),
+        [("panic-path", 5), ("panic-path", 6), ("panic-path", 6)]
+    );
+    assert_eq!(diags_of("alloc_in_decode_bad.rs"), [("alloc-in-decode", 5)]);
+    assert_eq!(diags_of("naked_cast_bad.rs"), [("naked-cast", 5)]);
+    assert_eq!(diags_of("unsafe_bad.rs"), [("unsafe-code", 4)]);
+}
+
+#[test]
+fn clean_counterparts_stay_clean() {
+    for f in ["clean_decode.rs", "clean_determinism.rs"] {
+        let d = diags_of(f);
+        assert!(d.is_empty(), "{f}: {d:?}");
+    }
+}
+
+#[test]
+fn reasonless_unknown_and_malformed_allows_are_rejected() {
+    assert_eq!(diags_of("bad_allow.rs"), [("bad-allow", 4), ("bad-allow", 8), ("bad-allow", 13)]);
+}
+
+#[test]
+fn stale_allows_are_flagged() {
+    assert_eq!(diags_of("unused_allow.rs"), [("unused-allow", 4)]);
+}
+
+#[test]
+fn reasoned_allows_cover_all_four_placements() {
+    // trailing, own-line, fn-header and above-attribute-cluster allows
+    // each suppress their seeded violation — and none is reported stale
+    let d = diags_of("allowed_ok.rs");
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn cfg_test_items_are_elided() {
+    let d = diags_of("elided_test_code.rs");
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn string_continuations_do_not_shift_line_numbers() {
+    // the fixture's `\`-escaped newline inside a string spans two source
+    // lines; the cast after it must still report line 9, not 8
+    assert_eq!(diags_of("line_numbers.rs"), [("naked-cast", 9)]);
+}
+
+#[test]
+fn repo_src_tree_is_lint_clean() {
+    let report = lint_paths(&[manifest("src")]).expect("src tree lints");
+    assert!(report.files >= 50, "only {} files seen", report.files);
+    assert!(
+        report.diags.is_empty(),
+        "src tree has lint diagnostics:\n{}",
+        report
+            .diags
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn cli_fails_on_violations_and_passes_the_repo() {
+    let bin = env!("CARGO_BIN_EXE_ndq");
+    let bad = std::process::Command::new(bin)
+        .arg("lint")
+        .arg(manifest("tests/lint_fixtures/naked_cast_bad.rs"))
+        .output()
+        .expect("spawn ndq lint");
+    assert!(!bad.status.success(), "seeded violation must fail the gate");
+    let stdout = String::from_utf8_lossy(&bad.stdout);
+    assert!(stdout.contains("naked_cast_bad.rs:5: naked-cast:"), "{stdout}");
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("1 diagnostic(s)"), "{stderr}");
+
+    let clean = std::process::Command::new(bin)
+        .arg("lint")
+        .arg(manifest("src"))
+        .output()
+        .expect("spawn ndq lint");
+    assert!(clean.status.success(), "repo src must lint clean");
+
+    let rules = std::process::Command::new(bin)
+        .arg("lint")
+        .arg("--rules")
+        .output()
+        .expect("spawn ndq lint --rules");
+    assert!(rules.status.success());
+    let listing = String::from_utf8_lossy(&rules.stdout);
+    for r in RULES {
+        assert!(listing.contains(r.name), "--rules listing missing {}", r.name);
+    }
+}

@@ -1,0 +1,7 @@
+// ndq-lint: as(src/quant/fixture.rs)
+// seeded alloc-in-decode violation: a `*_into` decoder that allocates
+
+pub fn unpack_into(out: &mut Vec<u32>, n: usize) {
+    let scratch = vec![0u32; n];
+    out.extend_from_slice(&scratch);
+}

@@ -1,0 +1,29 @@
+// ndq-lint: as(src/comm/net.rs)
+// clean-by-annotation: every seeded violation carries a reasoned allow,
+// exercising all four placements (trailing, own-line, fn header, above
+// an attribute cluster)
+
+use std::time::Instant;
+
+pub fn trailing(t0: Instant) -> f64 {
+    let dt = Instant::now() - t0; // ndq-lint: allow(wall-clock) fixture: trailing placement
+    dt.as_secs_f64()
+}
+
+pub fn own_line(total: u64) -> u32 {
+    // ndq-lint: allow(naked-cast) fixture: own-line placement
+    total as u32
+}
+
+// ndq-lint: allow(panic-path) fixture: fn-header placement covers the body
+pub fn decode_both(bytes: &[u8]) -> u8 {
+    let first = bytes[0];
+    assert!(first < 128);
+    first
+}
+
+// ndq-lint: allow(panic-path) fixture: placement above an attribute cluster
+#[inline]
+pub fn parse_first(bytes: &[u8]) -> u8 {
+    bytes[0]
+}

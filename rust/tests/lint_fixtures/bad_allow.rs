@@ -1,0 +1,16 @@
+// seeded directive errors: reasonless allow, unknown rule, malformed
+
+pub fn f() -> u32 {
+    // ndq-lint: allow(wall-clock)
+    7
+}
+
+// ndq-lint: allow(no-such-rule) the rule name is not in the registry
+pub fn g() -> u32 {
+    8
+}
+
+// ndq-lint: frobnicate
+pub fn h() -> u32 {
+    9
+}

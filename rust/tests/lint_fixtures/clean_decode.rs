@@ -1,0 +1,9 @@
+// ndq-lint: as(src/comm/net.rs)
+// clean counterpart: checked conversions, get-based access, typed errors
+
+pub fn decode_len(bytes: &[u8]) -> Result<usize, String> {
+    let b = bytes.get(..4).ok_or_else(|| "truncated header".to_string())?;
+    let mut raw = [0u8; 4];
+    raw.copy_from_slice(b);
+    usize::try_from(u32::from_le_bytes(raw)).map_err(|e| e.to_string())
+}

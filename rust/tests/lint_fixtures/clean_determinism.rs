@@ -1,0 +1,17 @@
+// ndq-lint: as(src/train/fixture.rs)
+// clean counterpart: canonical containers and total float ordering
+
+use std::collections::BTreeMap;
+
+pub fn largest(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[xs.len() - 1]
+}
+
+pub fn tally(xs: &[u32]) -> BTreeMap<u32, u32> {
+    let mut m = BTreeMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,18 @@
+// ndq-lint: as(src/comm/net.rs)
+// test items may unwrap and index freely: the lint binds shipping code
+
+pub fn decode_first(bytes: &[u8]) -> Option<u8> {
+    bytes.first().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwraps_and_indexes_fine() {
+        assert_eq!(decode_first(&[7]).unwrap(), 7);
+        let v = vec![1u8, 2];
+        assert_eq!(v[0], 1);
+    }
+}

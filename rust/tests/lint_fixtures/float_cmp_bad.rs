@@ -1,0 +1,11 @@
+// ndq-lint: as(src/stats/fixture.rs)
+// seeded float-cmp violations: a partial_cmp sort and a float-literal ==
+
+pub fn smallest(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[0]
+}
+
+pub fn is_zero(x: f32) -> bool {
+    x == 0.0
+}

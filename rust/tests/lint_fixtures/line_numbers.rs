@@ -1,0 +1,10 @@
+// ndq-lint: as(src/comm/net.rs)
+// lexer regression: the string continuation below escapes a newline; the
+// violation after it must still report its true source line
+
+pub const MSG: &str = "a continuation \
+    spanning two source lines";
+
+pub fn frame_len(total: u64) -> u32 {
+    total as u32
+}

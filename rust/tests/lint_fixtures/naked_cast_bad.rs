@@ -1,0 +1,6 @@
+// ndq-lint: as(src/comm/net.rs)
+// seeded naked-cast violation: bare narrowing on a length field
+
+pub fn frame_len(total: u64) -> u32 {
+    total as u32
+}

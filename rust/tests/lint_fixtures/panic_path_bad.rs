@@ -1,0 +1,12 @@
+// ndq-lint: as(src/comm/net.rs)
+// seeded panic-path violations inside a decode-marked function
+
+pub fn decode_header(bytes: &[u8]) -> u32 {
+    assert!(bytes.len() >= 4);
+    let b: [u8; 4] = bytes[..4].try_into().unwrap();
+    u32::from_le_bytes(b)
+}
+
+pub fn plain_first_byte(bytes: &[u8]) -> u8 {
+    bytes[0]
+}

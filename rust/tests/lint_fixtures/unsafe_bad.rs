@@ -1,0 +1,5 @@
+// seeded unsafe-code violation (crate-wide rule; mirrors #![forbid(unsafe_code)])
+
+pub fn first_byte(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,6 @@
+// seeded stale allow: names a real rule but suppresses nothing
+
+pub fn f() -> u32 {
+    // ndq-lint: allow(wall-clock) pretending the next line reads a clock
+    7
+}

@@ -1,0 +1,7 @@
+// seeded wall-clock violation (crate-wide rule)
+use std::time::Instant;
+
+pub fn elapsed_wrong() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,23 +1,31 @@
 #!/usr/bin/env bash
-# Tier-1 gate: formatting, lints, and the full offline test suite.
+# Tier-1 gate: formatting, lints, static analysis, and the full offline
+# test suite.
 #
 #   scripts/tier1.sh            # everything (fmt + clippy + tests)
-#   scripts/tier1.sh --fast     # tests only
+#   scripts/tier1.sh --fast     # skip fmt/clippy (CI runs them as
+#                               # explicit mandatory steps)
 #
-# fmt/clippy run only when the corresponding cargo component is installed,
-# so the gate degrades gracefully on minimal toolchains; the test step is
-# mandatory and mirrors the ROADMAP's tier-1 command exactly.
+# By default fmt/clippy run only when the corresponding cargo component is
+# installed, so the gate degrades gracefully on minimal local toolchains.
+# With NDQ_TIER1_STRICT=1 (what CI sets) a missing component fails the
+# gate instead. `ndq lint`, the tests, the fault/socket smokes, and the
+# bench-append checks are mandatory in every mode.
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 FAST=0
 [[ "${1:-}" == "--fast" ]] && FAST=1
+STRICT="${NDQ_TIER1_STRICT:-0}"
 
 if [[ "$FAST" -eq 0 ]]; then
     if cargo fmt --version >/dev/null 2>&1; then
         echo "== cargo fmt --check =="
         cargo fmt --all -- --check
+    elif [[ "$STRICT" == "1" ]]; then
+        echo "cargo fmt unavailable but NDQ_TIER1_STRICT=1 requires it" >&2
+        exit 1
     else
         echo "== cargo fmt unavailable; skipping format check =="
     fi
@@ -25,6 +33,9 @@ if [[ "$FAST" -eq 0 ]]; then
     if cargo clippy --version >/dev/null 2>&1; then
         echo "== cargo clippy (all targets, -D warnings) =="
         cargo clippy --all-targets -- -D warnings
+    elif [[ "$STRICT" == "1" ]]; then
+        echo "cargo clippy unavailable but NDQ_TIER1_STRICT=1 requires it" >&2
+        exit 1
     else
         echo "== cargo clippy unavailable; skipping lint =="
     fi
@@ -32,6 +43,13 @@ fi
 
 echo "== cargo build --release =="
 cargo build --release
+
+# Repo-invariant static analysis: determinism (no wall clocks, no unordered
+# iteration, total float orderings), panic-free decode of hostile bytes,
+# and the allocation-free `*_into` hot path. Any diagnostic fails the gate;
+# intentional exceptions carry `// ndq-lint: allow(<rule>) <reason>`.
+echo "== ndq lint (repo-invariant static analysis) =="
+./target/release/ndq lint src
 
 # Examples and benches are the exemplar code for the crate's public API —
 # build them too so API migrations can't silently rot them (they are not
@@ -63,18 +81,31 @@ cargo run --release --quiet -- cluster \
     --fault-plan "drop:0.15;straggle:w2x6;corrupt:w1@r3" \
     --round-policy quorum:5
 
+# JSON-lines appended to a trajectory file (newline-terminated records, so
+# `wc -l` counts them); missing file counts as zero.
+count_lines() {
+    if [[ -f "$1" ]]; then wc -l < "$1"; else echo 0; fi
+}
+
 # Round-plan engine smoke: an adaptive level schedule (15 -> 7 -> 3 levels,
 # huffman-coded lanes) through the real CLI, with its per-spec ledger lanes
 # and deterministic fingerprint. The run appends one JSON-line perf record
 # (rounds/sec, transmitted kbits/round, final loss) to the repo-root
-# BENCH_train.json so the training-path perf trajectory accrues across PRs.
+# BENCH_train.json so the training-path perf trajectory accrues across PRs —
+# and the gate fails if the append produced no line.
 echo "== ndq cluster adaptive-levels smoke =="
+TRAIN_BEFORE="$(count_lines ../BENCH_train.json)"
 GIT_REV="$(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
 NDQ_BENCH_REV="$GIT_REV" cargo run --release --quiet -- cluster \
     --workers 8 --rounds 30 --codec huffman \
     --scheme dqsg:0.333333 --scheme-p2 nested:0.333333:3:1.0 \
     --levels-policy "schedule:0=15,10=7,20=3" \
     --bench-append ../BENCH_train.json
+TRAIN_AFTER="$(count_lines ../BENCH_train.json)"
+if [[ "$TRAIN_AFTER" -le "$TRAIN_BEFORE" ]]; then
+    echo "adaptive smoke appended no JSON-line to BENCH_train.json" >&2
+    exit 1
+fi
 
 # Socket-transport smoke: the same degraded NDQSG scenario, once through
 # `ndq cluster` (in-process) and once through `ndq serve` + N real `ndq
@@ -121,13 +152,24 @@ NDQ_BENCH_FAST=1 cargo bench --bench perf_coding
 NDQ_BENCH_FAST=1 cargo bench --bench table2_entropy_bits
 BENCH_TS="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
 GIT_REV="$(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
+WIRE_BEFORE="$(count_lines ../BENCH_wire.json)"
 for f in perf_coding table2; do
     if [[ -f "target/ndq-bench/$f.json" ]]; then
         printf '{"ts":"%s","rev":"%s","bench":"%s","results":%s}\n' \
             "$BENCH_TS" "$GIT_REV" "$f" "$(cat "target/ndq-bench/$f.json")" \
             >> ../BENCH_wire.json
         echo "appended $f to BENCH_wire.json"
+    elif [[ "$f" == "perf_coding" ]]; then
+        # perf_coding needs no artifacts and must always produce results;
+        # only table2 may self-skip (artifact-gated)
+        echo "perf_coding ran but wrote no target/ndq-bench/perf_coding.json" >&2
+        exit 1
     fi
 done
+WIRE_AFTER="$(count_lines ../BENCH_wire.json)"
+if [[ "$WIRE_AFTER" -le "$WIRE_BEFORE" ]]; then
+    echo "wire bench smoke appended no JSON-line to BENCH_wire.json" >&2
+    exit 1
+fi
 
 echo "tier-1 gate passed"
