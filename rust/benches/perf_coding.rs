@@ -6,9 +6,24 @@
 mod common;
 
 use ndq::coding::arithmetic::{self, AdaptiveModel};
-use ndq::coding::{huffman, pack, BitReader, BitWriter};
+use ndq::coding::{huffman, pack, BitReader, BitWriter, DECODE_CHUNK};
 use ndq::prng::{DitherStream, Xoshiro256};
 use ndq::stats::bench::Bench;
+
+/// Drain `n` symbols through the chunked unpacker kernel, the way the
+/// quantizer decode loops do ([`DECODE_CHUNK`] symbols per dispatch).
+fn drain_chunked(src: &mut pack::SymbolUnpacker<'_, '_>, n: usize) -> u32 {
+    let mut chunk = [0u32; DECODE_CHUNK];
+    let mut acc = 0u32;
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(DECODE_CHUNK);
+        src.fill_symbols(&mut chunk[..take]).unwrap();
+        acc = acc.wrapping_add(chunk[take - 1]);
+        left -= take;
+    }
+    acc
+}
 
 /// The pre-Fenwick `AdaptiveModel::range`/`find`: O(alphabet) linear scans
 /// per symbol. Kept here (bench-only) as the baseline the tree replaced.
@@ -86,11 +101,51 @@ fn main() -> ndq::Result<()> {
     let mut w = BitWriter::new();
     pack::pack_base_k(&symbols, 3, &mut w);
     let packed = w.into_bytes();
-    let r = b.run("unpack_base3/266610", || {
+    let r_scalar = b.run("unpack_base3/266610", || {
         let mut rd = BitReader::new(&packed);
         pack::unpack_base_k(&mut rd, 3, n).unwrap()
     });
+    println!("    -> {:.1} M sym/s", r_scalar.throughput(n as f64) / 1e6);
+
+    // monomorphized K3 kernel vs the per-symbol interpreter above — the
+    // specialized decode path the quantizers dispatch to per RoundSpec
+    let r = b.run("unpack_base3_chunked/266610", || {
+        let mut rd = BitReader::new(&packed);
+        let mut src = pack::SymbolUnpacker::new(&mut rd, 3, n);
+        drain_chunked(&mut src, n)
+    });
+    println!(
+        "    -> {:.1} M sym/s ({:.1}x vs per-symbol)",
+        r.throughput(n as f64) / 1e6,
+        r_scalar.median_ns / r.median_ns
+    );
+
+    // pow2 shift/mask lane: k = 16 exercises the other monomorphized family
+    let symbols16: Vec<u32> = (0..n).map(|_| rng.next_below(16)).collect();
+    let r = b.run("pack_base16/266610", || {
+        let mut w = BitWriter::new();
+        pack::pack_base_k(&symbols16, 16, &mut w);
+        w
+    });
     println!("    -> {:.1} M sym/s", r.throughput(n as f64) / 1e6);
+    let mut w16 = BitWriter::new();
+    pack::pack_base_k(&symbols16, 16, &mut w16);
+    let packed16 = w16.into_bytes();
+    let r16_scalar = b.run("unpack_base16/266610", || {
+        let mut rd = BitReader::new(&packed16);
+        pack::unpack_base_k(&mut rd, 16, n).unwrap()
+    });
+    println!("    -> {:.1} M sym/s", r16_scalar.throughput(n as f64) / 1e6);
+    let r = b.run("unpack_base16_chunked/266610", || {
+        let mut rd = BitReader::new(&packed16);
+        let mut src = pack::SymbolUnpacker::new(&mut rd, 16, n);
+        drain_chunked(&mut src, n)
+    });
+    println!(
+        "    -> {:.1} M sym/s ({:.1}x vs per-symbol)",
+        r.throughput(n as f64) / 1e6,
+        r16_scalar.median_ns / r.median_ns
+    );
 
     let r = b.run("aac_encode/266610", || {
         let mut w = BitWriter::new();
@@ -119,11 +174,53 @@ fn main() -> ndq::Result<()> {
     let mut w = BitWriter::new();
     huffman::encode(&symbols, 3, &mut w);
     let hcoded = w.into_bytes();
-    let r = b.run("huffman_decode/266610", || {
+    let r_hwalk = b.run("huffman_decode/266610", || {
         let mut rd = BitReader::new(&hcoded);
         huffman::decode(&mut rd, 3, n).unwrap()
     });
-    println!("    -> {:.1} M sym/s", r.throughput(n as f64) / 1e6);
+    println!("    -> {:.1} M sym/s", r_hwalk.throughput(n as f64) / 1e6);
+
+    // table-driven Huffman decode (TABLE_BITS-wide LUT) vs the per-bit
+    // canonical walk above, chunked the way the quantizer decodes run
+    let r = b.run("huffman_decode_lut/266610", || {
+        let mut rd = BitReader::new(&hcoded);
+        let mut src = huffman::HuffmanSource::new(&mut rd, 3, n).unwrap();
+        let mut chunk = [0u32; DECODE_CHUNK];
+        let mut acc = 0u32;
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(DECODE_CHUNK);
+            src.fill_symbols(&mut chunk[..take]).unwrap();
+            acc = acc.wrapping_add(chunk[take - 1]);
+            left -= take;
+        }
+        acc
+    });
+    println!(
+        "    -> {:.1} M sym/s ({:.1}x vs per-bit walk)",
+        r.throughput(n as f64) / 1e6,
+        r_hwalk.median_ns / r.median_ns
+    );
+
+    // fast encode (precomputed bit-reversed codewords through push_bits)
+    // vs the per-bit emit oracle it replaced
+    let signed: Vec<i32> = symbols.iter().map(|&s| s as i32 - 1).collect();
+    let r_hegen = b.run("huffman_encode_generic/266610", || {
+        let mut w = BitWriter::new();
+        huffman::encode_signed_generic(&signed, 1, &mut w);
+        w
+    });
+    println!("    -> {:.1} M sym/s", r_hegen.throughput(n as f64) / 1e6);
+    let r = b.run("huffman_encode_fast/266610", || {
+        let mut w = BitWriter::new();
+        huffman::encode_signed(&signed, 1, &mut w);
+        w
+    });
+    println!(
+        "    -> {:.1} M sym/s ({:.1}x vs per-bit emit)",
+        r.throughput(n as f64) / 1e6,
+        r_hegen.median_ns / r.median_ns
+    );
 
     // adaptive-model cumulative counts at the 4096-symbol ceiling: the
     // Fenwick tree vs the old per-symbol linear scan it replaced (the win

@@ -6,7 +6,7 @@
 mod common;
 
 use ndq::prng::{DitherStream, Xoshiro256};
-use ndq::quant::{GradQuantizer, Scheme};
+use ndq::quant::{GradQuantizer, KernelMode, PayloadCodec, Scheme};
 use ndq::stats::bench::Bench;
 
 fn main() -> ndq::Result<()> {
@@ -58,6 +58,62 @@ fn main() -> ndq::Result<()> {
             );
         }
     }
+    // generic vs monomorphized decode kernels on the same wire bytes: the
+    // reconstruction is bit-identical either way (pinned by
+    // tests/kernel_differential.rs); only the dispatch differs. The
+    // specialized path is what Scheme::build resolves per RoundSpec.
+    let n = 266_610usize;
+    let g: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.1).collect();
+    println!("\n--- kernel dispatch, n = {n} ---");
+    for (scheme, codec) in [
+        (Scheme::Dithered { delta: 1.0 }, PayloadCodec::Raw), // K3 kernel
+        (Scheme::Dithered { delta: 1.0 }, PayloadCodec::Huffman), // decode LUT
+        (Scheme::Dithered { delta: 1.0 / 7.0 }, PayloadCodec::Raw), // K15 kernel
+        (
+            Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            PayloadCodec::Raw,
+        ),
+    ] {
+        let mut enc = scheme.build();
+        let stream = DitherStream::new(0, 0);
+        let msg = enc.encode_coded(&g, &mut stream.round(0), codec);
+        let y: Vec<f32> = g.iter().map(|&x| x + 0.001).collect();
+        let side = enc.needs_side_info();
+        let generic = scheme.build_with_mode(KernelMode::Generic);
+        let specialized = scheme.build_with_mode(KernelMode::Specialized);
+        let mut out = vec![0f32; n];
+        let label = format!("decode_generic/{}/{}/{n}", scheme.label(), codec.label());
+        let rg = b.run(&label, || {
+            generic
+                .decode_into(
+                    &msg,
+                    &mut stream.round(0),
+                    if side { Some(&y) } else { None },
+                    &mut out,
+                )
+                .unwrap();
+            out[0]
+        });
+        println!("    -> {:.2} ns/elem decode (generic)", rg.median_ns / n as f64);
+        let label = format!("decode_specialized/{}/{}/{n}", scheme.label(), codec.label());
+        let rs = b.run(&label, || {
+            specialized
+                .decode_into(
+                    &msg,
+                    &mut stream.round(0),
+                    if side { Some(&y) } else { None },
+                    &mut out,
+                )
+                .unwrap();
+            out[0]
+        });
+        println!(
+            "    -> {:.2} ns/elem decode (specialized, {:.1}x vs generic)",
+            rs.median_ns / n as f64,
+            rg.median_ns / rs.median_ns
+        );
+    }
+
     b.save("perf_quantizers")?;
     Ok(())
 }

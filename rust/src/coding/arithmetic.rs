@@ -275,6 +275,18 @@ impl<'r, 'b> AacSource<'r, 'b> {
         self.model.update(s);
         Ok(s as u32)
     }
+
+    /// Decode `out.len()` symbols in one call. The arithmetic coder is
+    /// inherently sequential (the model adapts per symbol), so this only
+    /// batches away the per-symbol enum dispatch of the caller — included
+    /// so every `SymbolSource` variant offers the same chunked surface.
+    pub fn fill_symbols(&mut self, out: &mut [u32]) -> crate::Result<()> {
+        anyhow::ensure!(out.len() <= self.remaining, "symbol stream exhausted");
+        for v in out.iter_mut() {
+            *v = self.next_symbol()?;
+        }
+        Ok(())
+    }
 }
 
 /// Decode `n` symbols produced by [`encode`] with the same alphabet.

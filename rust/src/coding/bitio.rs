@@ -36,6 +36,13 @@ impl BitWriter {
         debug_assert!(n <= 64);
         let mut v = v;
         let mut left = n;
+        // byte-aligned fast lane: whole bytes go straight into the buffer
+        while left >= 8 && self.bit_len % 8 == 0 {
+            self.bytes.push((v & 0xFF) as u8);
+            v >>= 8;
+            left -= 8;
+            self.bit_len += 8;
+        }
         while left > 0 {
             let slot = self.bit_len % 8;
             if slot == 0 {
@@ -114,6 +121,12 @@ impl<'a> BitReader<'a> {
         );
         let mut out = 0u64;
         let mut got = 0usize;
+        // byte-aligned fast lane: consume whole bytes at once
+        while self.pos % 8 == 0 && n - got >= 8 {
+            out |= (self.bytes[self.pos / 8] as u64) << got;
+            got += 8;
+            self.pos += 8;
+        }
         while got < n {
             let byte = self.bytes[self.pos / 8] as u64;
             let slot = self.pos % 8;
@@ -124,6 +137,45 @@ impl<'a> BitReader<'a> {
             self.pos += take;
         }
         Ok(out)
+    }
+
+    /// Peek up to `n` bits LSB-first without consuming them, zero-padded
+    /// past the end of the buffer; returns the peeked word and how many of
+    /// the `n` bits were actually available. Lookahead primitive for the
+    /// table-driven Huffman kernel, which inspects a fixed window that may
+    /// straddle the end of a frame payload.
+    // ndq-lint: allow(panic-path) got < avail <= bit length bounds every cursor/8 access below bytes.len()
+    #[inline]
+    pub fn peek_bits_padded(&self, n: usize) -> (u64, usize) {
+        debug_assert!(n <= 57);
+        let avail = (self.bytes.len() * 8 - self.pos).min(n);
+        let mut out = 0u64;
+        let mut got = 0usize;
+        let mut cursor = self.pos;
+        while got < avail {
+            let byte = self.bytes[cursor / 8] as u64;
+            let slot = cursor % 8;
+            let take = (8 - slot).min(avail - got);
+            let mask = (1u64 << take) - 1;
+            out |= ((byte >> slot) & mask) << got;
+            got += take;
+            cursor += take;
+        }
+        (out, avail)
+    }
+
+    /// Advance the cursor over `n` bits previously inspected with
+    /// [`BitReader::peek_bits_padded`]; errors instead of walking past the
+    /// end of the buffer.
+    #[inline]
+    pub fn consume_bits(&mut self, n: usize) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.pos + n <= self.bytes.len() * 8,
+            "bitreader: out of data (consume {n} bits, have {})",
+            self.remaining_bits()
+        );
+        self.pos += n;
+        Ok(())
     }
 
     pub fn read_u32(&mut self) -> crate::Result<u32> {
@@ -179,6 +231,49 @@ mod tests {
             let mut r = BitReader::new(&bytes);
             for (v, n) in expect {
                 assert_eq!(r.read_bits(n).unwrap(), v);
+            }
+        }
+    }
+
+    #[test]
+    fn peek_is_nonconsuming_and_zero_padded() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b1_0110_1011, 9);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        // full window available mid-stream
+        let (v, avail) = r.peek_bits_padded(6);
+        assert_eq!((v, avail), (0b10_1011, 6));
+        assert_eq!(r.bits_read(), 0, "peek must not consume");
+        assert_eq!(r.read_bits(6).unwrap(), 0b10_1011);
+        // 3 bits of real data left in the 10-bit window; rest zero-padded.
+        // bytes.len()*8 = 16, so 16 - 6 = 10 padded positions... no: 9 bits
+        // written but the last byte pads to 16 stored bits; avail counts
+        // stored bits, mirroring read_bits' underflow rule.
+        let (v, avail) = r.peek_bits_padded(12);
+        assert_eq!(avail, 10);
+        assert_eq!(v & 0b111, 0b101);
+        r.consume_bits(10).unwrap();
+        assert!(r.consume_bits(1).is_err(), "consume past end must error");
+    }
+
+    #[test]
+    fn peek_consume_matches_read_bits_over_fuzz() {
+        let mut rng = Xoshiro256::new(7);
+        for _ in 0..50 {
+            let bytes: Vec<u8> = (0..40).map(|_| rng.next_u64() as u8).collect();
+            let mut a = BitReader::new(&bytes);
+            let mut b = BitReader::new(&bytes);
+            while a.remaining_bits() > 0 {
+                let n = 1 + (rng.next_below(24) as usize);
+                let want = n.min(a.remaining_bits());
+                let (peeked, avail) = a.peek_bits_padded(n);
+                assert_eq!(avail, want);
+                let read = b.read_bits(want).unwrap();
+                let mask = if want == 64 { u64::MAX } else { (1u64 << want) - 1 };
+                assert_eq!(peeked & mask, read);
+                a.consume_bits(want).unwrap();
+                assert_eq!(a.bits_read(), b.bits_read());
             }
         }
     }

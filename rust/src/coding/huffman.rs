@@ -103,6 +103,40 @@ where
     for &l in &lens {
         w.push_bits(l as u64, 5);
     }
+    // pre-reverse each codeword so the MSB-first emit order becomes a
+    // single LSB-first `push_bits` per symbol — bit-identical to the
+    // per-bit loop in `encode_iter_generic`, without the per-bit calls
+    let rev: Vec<(u64, usize)> = codes
+        .iter()
+        .map(|&(code, len)| {
+            if len == 0 {
+                (0u64, 0usize)
+            } else {
+                ((code.reverse_bits() >> (32 - len as u32)) as u64, len as usize)
+            }
+        })
+        .collect();
+    for s in symbols {
+        let (code, len) = rev[s as usize];
+        w.push_bits(code, len);
+    }
+}
+
+/// Per-bit emit loop retained as the differential-test oracle (and bench
+/// baseline) for the reversed-codeword fast path in [`encode_iter`].
+fn encode_iter_generic<I>(symbols: I, alphabet: usize, w: &mut BitWriter)
+where
+    I: Iterator<Item = u32> + Clone,
+{
+    let mut freqs = vec![0u64; alphabet];
+    for s in symbols.clone() {
+        freqs[s as usize] += 1;
+    }
+    let lens = code_lengths(&freqs);
+    let codes = canonical_codes(&lens);
+    for &l in &lens {
+        w.push_bits(l as u64, 5);
+    }
     for s in symbols {
         let (code, len) = codes[s as usize];
         // emit MSB-first
@@ -117,11 +151,25 @@ where
 /// [`HuffmanSource::next_symbol`] by walking the canonical code — the
 /// wire-v3 decode path for `codec = huffman` frames. Holds O(alphabet)
 /// state (the transmitted code table), never O(n).
+/// Window width of the table-driven decode fast path: one lookup resolves
+/// any code of <= TABLE_BITS bits (covers every code the quantizer
+/// alphabets produce in practice); longer codes escape to the per-bit walk.
+const TABLE_BITS: usize = 10;
+
+/// Streams shorter than this skip LUT construction — the 1 << TABLE_BITS
+/// table fill would cost more than the decode saves.
+const TABLE_MIN_SYMBOLS: usize = 64;
+
 pub struct HuffmanSource<'r, 'b> {
     r: &'r mut BitReader<'b>,
     /// (code, symbol) pairs per code length, sorted by code.
     by_len: Vec<Vec<(u32, u32)>>,
     remaining: usize,
+    /// Table-driven fast path, indexed by the next TABLE_BITS stream bits
+    /// (LSB-first, i.e. bit-reversed codewords). Entry = `sym << 5 | len`;
+    /// a zero `len` means "escape to the per-bit walk". Empty when the
+    /// stream is too short to amortize construction.
+    table: Vec<u32>,
 }
 
 impl<'r, 'b> HuffmanSource<'r, 'b> {
@@ -148,10 +196,29 @@ impl<'r, 'b> HuffmanSource<'r, 'b> {
         for v in &mut by_len {
             v.sort();
         }
+        // LUT fast path: every index whose low `len` bits equal the
+        // bit-reversed codeword resolves to that symbol in one lookup
+        let mut table = Vec::new();
+        if n >= TABLE_MIN_SYMBOLS {
+            table = vec![0u32; 1 << TABLE_BITS];
+            for (s, &(code, len)) in codes.iter().enumerate() {
+                let len = len as usize;
+                if len == 0 || len > TABLE_BITS {
+                    continue;
+                }
+                let rev = (code.reverse_bits() >> (32 - len as u32)) as usize;
+                let mut idx = rev;
+                while idx < (1 << TABLE_BITS) {
+                    table[idx] = (s as u32) << 5 | len as u32;
+                    idx += 1 << len;
+                }
+            }
+        }
         Ok(Self {
             r,
             by_len,
             remaining: n,
+            table,
         })
     }
 
@@ -178,6 +245,37 @@ impl<'r, 'b> HuffmanSource<'r, 'b> {
             }
         }
     }
+
+    /// Decode `out.len()` symbols through the TABLE_BITS-wide lookup
+    /// table, escaping to the canonical per-bit walk for longer codes and
+    /// near the end of the bit stream — bit-identical to that many
+    /// [`HuffmanSource::next_symbol`] calls (prefix-freeness guarantees
+    /// the LUT and the walk resolve the same codeword).
+    pub fn fill_symbols(&mut self, out: &mut [u32]) -> crate::Result<()> {
+        anyhow::ensure!(out.len() <= self.remaining, "symbol stream exhausted");
+        if self.table.is_empty() {
+            for v in out.iter_mut() {
+                *v = self.next_symbol()?;
+            }
+            return Ok(());
+        }
+        for v in out.iter_mut() {
+            let (window, avail) = self.r.peek_bits_padded(TABLE_BITS);
+            let entry = self.table.get(window as usize).copied().unwrap_or(0);
+            let len = (entry & 0x1F) as usize;
+            if len != 0 && len <= avail {
+                self.r.consume_bits(len)?;
+                self.remaining -= 1;
+                *v = entry >> 5;
+            } else {
+                // long code, absent code, or a window straddling the end
+                // of the buffer: the per-bit walk decides (and reports
+                // underflow / corrupt-stream errors exactly as before)
+                *v = self.next_symbol()?;
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Decode `n` symbols written by [`encode`].
@@ -195,6 +293,12 @@ pub fn decode(r: &mut BitReader, alphabet: usize, n: usize) -> crate::Result<Vec
 /// `codec = huffman` index lane.
 pub fn encode_signed(q: &[i32], m: i32, w: &mut BitWriter) {
     encode_iter(q.iter().map(move |&x| (x + m) as u32), (2 * m + 1) as usize, w);
+}
+
+/// Oracle twin of [`encode_signed`] using the per-bit emit loop — the
+/// differential suite asserts both produce byte-identical streams.
+pub fn encode_signed_generic(q: &[i32], m: i32, w: &mut BitWriter) {
+    encode_iter_generic(q.iter().map(move |&x| (x + m) as u32), (2 * m + 1) as usize, w);
 }
 
 /// Encoded size in bits for a signed index stream in [-m, m].
@@ -266,6 +370,89 @@ mod tests {
         }
         // degenerate: single live symbol
         roundtrip(&[1u32; 500], 3);
+    }
+
+    #[test]
+    fn fast_encode_is_byte_identical_to_per_bit_oracle() {
+        let mut rng = Xoshiro256::new(11);
+        for k in [2usize, 3, 5, 9, 15, 31] {
+            for n in [0usize, 1, 63, 64, 1000] {
+                let m = (k as i32 - 1) / 2;
+                let q: Vec<i32> =
+                    (0..n).map(|_| rng.next_below(k as u32) as i32 - m).collect();
+                let mut fast = BitWriter::new();
+                encode_signed(&q, m, &mut fast);
+                let mut slow = BitWriter::new();
+                encode_signed_generic(&q, m, &mut slow);
+                assert_eq!(fast.len_bits(), slow.len_bits(), "k={k} n={n}");
+                assert_eq!(fast.as_bytes(), slow.as_bytes(), "k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_fill_matches_scalar_walk_for_arbitrary_segmentations() {
+        let mut rng = Xoshiro256::new(21);
+        for k in [2usize, 3, 9, 31] {
+            // below and above the TABLE_MIN_SYMBOLS gate, skewed + uniform
+            for n in [1usize, 63, 64, 65, 2000] {
+                let sym: Vec<u32> = (0..n)
+                    .map(|_| {
+                        if rng.next_f32() < 0.7 { 0 } else { rng.next_below(k as u32) }
+                    })
+                    .collect();
+                let mut w = BitWriter::new();
+                encode(&sym, k, &mut w);
+                let bytes = w.into_bytes();
+
+                let mut r1 = BitReader::new(&bytes);
+                let mut scalar_src = HuffmanSource::new(&mut r1, k, n).unwrap();
+                let scalar: Vec<u32> =
+                    (0..n).map(|_| scalar_src.next_symbol().unwrap()).collect();
+
+                let mut r2 = BitReader::new(&bytes);
+                let mut src = HuffmanSource::new(&mut r2, k, n).unwrap();
+                let mut chunked = vec![0u32; n];
+                let mut lo = 0usize;
+                while lo < n {
+                    let hi = (lo + 1 + rng.next_below(97) as usize).min(n);
+                    src.fill_symbols(&mut chunked[lo..hi]).unwrap();
+                    lo = hi;
+                }
+                assert_eq!(chunked, scalar, "k={k} n={n}");
+                assert_eq!(chunked, sym, "k={k} n={n}");
+                assert_eq!(r1.bits_read(), r2.bits_read(), "k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_fill_handles_long_code_escape_and_truncation() {
+        // a wide, skewed alphabet drives some code lengths past TABLE_BITS
+        // (escape path); the LUT must agree with the walk regardless
+        let mut rng = Xoshiro256::new(31);
+        let k = 2048usize;
+        let n = 4000usize;
+        let sym: Vec<u32> = (0..n)
+            .map(|_| {
+                if rng.next_f32() < 0.9 { rng.next_below(4) } else { rng.next_below(k as u32) }
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        encode(&sym, k, &mut w);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        let mut src = HuffmanSource::new(&mut r, k, n).unwrap();
+        let mut out = vec![0u32; n];
+        src.fill_symbols(&mut out).unwrap();
+        assert_eq!(out, sym);
+        // truncated stream must error, not decode garbage silently
+        let short = &bytes[..bytes.len() / 2];
+        let mut r = BitReader::new(short);
+        if let Ok(mut src) = HuffmanSource::new(&mut r, k, n) {
+            let mut out = vec![0u32; n];
+            assert!(src.fill_symbols(&mut out).is_err());
+        }
     }
 
     #[test]

@@ -32,6 +32,67 @@ pub mod pack;
 
 pub use bitio::{BitReader, BitWriter};
 
+/// Chunk width of the quantizers' alloc-free chunked decode loops: symbols
+/// are pulled [`DECODE_CHUNK`] at a time into a stack buffer, then combined
+/// with the dither lane. Large enough to amortize dispatch, small enough to
+/// keep the buffer on the stack.
+pub const DECODE_CHUNK: usize = 256;
+
+/// Which decode kernels a quantizer streams symbols through — selected
+/// once when the quantizer is built (i.e. once per `RoundSpec` via
+/// `Scheme::build`, which `comm::Session::set_schemes` runs at every spec
+/// change), never per frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Monomorphized chunked kernels: shift/mask or constant-divisor base-k
+    /// lane extraction ([`pack::RawKernel`]), table-driven Huffman decode.
+    /// Bit-identical to `Generic` — pinned by the kernel differential
+    /// suite; specialization never changes bytes on the wire.
+    #[default]
+    Specialized,
+    /// The per-symbol `next_symbol` interpreter: the fallback path and the
+    /// differential-test oracle.
+    Generic,
+}
+
+impl KernelMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelMode::Specialized => "specialized",
+            KernelMode::Generic => "generic",
+        }
+    }
+}
+
+/// Per-quantizer kernel selection: the dispatch mode plus the pre-resolved
+/// raw-lane kernel for the scheme's wire alphabet. Computed once per
+/// `RoundSpec` so the per-frame decode loop carries no dispatch logic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelPlan {
+    pub mode: KernelMode,
+    pub raw: pack::RawKernel,
+}
+
+impl KernelPlan {
+    pub fn new(mode: KernelMode, alphabet: u32) -> KernelPlan {
+        let raw = match mode {
+            KernelMode::Specialized => pack::RawKernel::for_alphabet(alphabet.max(2)),
+            KernelMode::Generic => pack::RawKernel::Generic,
+        };
+        KernelPlan { mode, raw }
+    }
+
+    /// The default plan: specialized kernels for alphabet `k`.
+    pub fn specialized(alphabet: u32) -> KernelPlan {
+        KernelPlan::new(KernelMode::Specialized, alphabet)
+    }
+
+    /// `"specialized/k3"`-style label for reports and the engine banner.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.mode.label(), self.raw.label())
+    }
+}
+
 /// How a message's index lanes are encoded on the wire (the codec byte of
 /// the wire-v3 message header). Scale factors and the sign/f32 lanes of
 /// schemes without an index alphabet (one-bit, baseline) are always raw —
@@ -146,8 +207,24 @@ impl<'r, 'b> SymbolSource<'r, 'b> {
         k: u32,
         n: usize,
     ) -> crate::Result<SymbolSource<'r, 'b>> {
+        SymbolSource::with_plan(r, codec, k, n, KernelPlan::specialized(k))
+    }
+
+    /// [`SymbolSource::new`] with an explicit [`KernelPlan`] — what the
+    /// quantizers pass down so the raw lane honors their per-RoundSpec
+    /// kernel choice. Huffman and AAC sources are plan-independent (the
+    /// Huffman LUT is built from the frame's own transmitted code table).
+    pub fn with_plan(
+        r: &'r mut BitReader<'b>,
+        codec: PayloadCodec,
+        k: u32,
+        n: usize,
+        plan: KernelPlan,
+    ) -> crate::Result<SymbolSource<'r, 'b>> {
         Ok(match codec {
-            PayloadCodec::Raw => SymbolSource::Raw(pack::SymbolUnpacker::new(r, k, n)),
+            PayloadCodec::Raw => {
+                SymbolSource::Raw(pack::SymbolUnpacker::with_kernel(r, k, n, plan.raw))
+            }
             PayloadCodec::Huffman => {
                 SymbolSource::Huffman(huffman::HuffmanSource::new(r, k as usize, n)?)
             }
@@ -173,6 +250,37 @@ impl<'r, 'b> SymbolSource<'r, 'b> {
             SymbolSource::Raw(s) => s.next_symbol(),
             SymbolSource::Huffman(s) => s.next_symbol(),
             SymbolSource::Aac(s) => s.next_symbol(),
+        }
+    }
+
+    /// Decode `out.len()` symbols in one call through each codec's chunked
+    /// kernel — bit-identical to that many [`SymbolSource::next_symbol`]
+    /// calls, with the enum and per-symbol dispatch hoisted out of the
+    /// element loop.
+    pub fn fill_symbols(&mut self, out: &mut [u32]) -> crate::Result<()> {
+        match self {
+            SymbolSource::Raw(s) => s.fill_symbols(out),
+            SymbolSource::Huffman(s) => s.fill_symbols(out),
+            SymbolSource::Aac(s) => s.fill_symbols(out),
+        }
+    }
+
+    /// Oracle twin of [`SymbolSource::fill_symbols`]: the per-symbol
+    /// interpreter loop, kept for differential tests and benches.
+    pub fn fill_symbols_generic(&mut self, out: &mut [u32]) -> crate::Result<()> {
+        for v in out.iter_mut() {
+            *v = self.next_symbol()?;
+        }
+        Ok(())
+    }
+
+    /// Dispatch one chunk through the mode's kernel family — the single
+    /// branch the quantizer decode loops take per [`DECODE_CHUNK`] symbols.
+    #[inline]
+    pub fn fill(&mut self, mode: KernelMode, out: &mut [u32]) -> crate::Result<()> {
+        match mode {
+            KernelMode::Specialized => self.fill_symbols(out),
+            KernelMode::Generic => self.fill_symbols_generic(out),
         }
     }
 }

@@ -11,6 +11,13 @@
 use super::bitio::{BitReader, BitWriter};
 
 /// How many base-k digits fit in a u64 word, and how many bits they take.
+///
+/// The `<=` capacity bound is deliberate: `k^digits` may equal `2^64`
+/// exactly (k ∈ {2, 4, 16, 256, 65536, …}), in which case the largest
+/// group value is `2^64 - 1` and still fits a u64 word. A strict `<`
+/// would under-fill those words by one digit and desynchronize encoder
+/// and decoder; the boundary is pinned by
+/// `symbols_per_word_agree_end_to_end_at_boundary_alphabets` below.
 pub fn group_params(k: u32) -> (usize, usize) {
     assert!(k >= 2, "alphabet must have >= 2 symbols");
     let mut digits = 0usize;
@@ -23,6 +30,56 @@ pub fn group_params(k: u32) -> (usize, usize) {
     (digits, bits)
 }
 
+/// Monomorphized raw-lane decode kernel, selected once per quantizer
+/// construction (i.e. once per `RoundSpec`, not per frame): power-of-two
+/// alphabets extract lanes by shift/mask, the small odd wire alphabets run
+/// constant-divisor group loops (the compiler strength-reduces the
+/// division to a multiply), and everything else falls back to the
+/// runtime-k path — which doubles as the differential-test oracle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RawKernel {
+    /// k = 2^shift: shift/mask lane extraction.
+    Pow2 { shift: u32 },
+    /// Constant-divisor kernels for the odd 2M+1 wire alphabets.
+    K3,
+    K5,
+    K7,
+    K9,
+    K15,
+    /// Runtime-k div/mod — fallback and oracle.
+    Generic,
+}
+
+impl RawKernel {
+    /// Kernel for alphabet `k` (the specialized dispatch table).
+    pub fn for_alphabet(k: u32) -> RawKernel {
+        if k >= 2 && k.is_power_of_two() {
+            RawKernel::Pow2 { shift: k.trailing_zeros() }
+        } else {
+            match k {
+                3 => RawKernel::K3,
+                5 => RawKernel::K5,
+                7 => RawKernel::K7,
+                9 => RawKernel::K9,
+                15 => RawKernel::K15,
+                _ => RawKernel::Generic,
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RawKernel::Pow2 { .. } => "pow2",
+            RawKernel::K3 => "k3",
+            RawKernel::K5 => "k5",
+            RawKernel::K7 => "k7",
+            RawKernel::K9 => "k9",
+            RawKernel::K15 => "k15",
+            RawKernel::Generic => "generic",
+        }
+    }
+}
+
 /// Amortized bits/symbol of the base-k packer (exact rational, as f64).
 pub fn rate_bits_per_symbol(k: u32) -> f64 {
     let (digits, bits) = group_params(k);
@@ -32,6 +89,20 @@ pub fn rate_bits_per_symbol(k: u32) -> f64 {
 /// Pack symbols (each in [0, k)) into the writer in base-k groups.
 pub fn pack_base_k(symbols: &[u32], k: u32, w: &mut BitWriter) {
     let (digits, bits) = group_params(k);
+    // pow2 lane: `v * k + s == (v << shift) | s` exactly (s < k), so the
+    // shift form emits bit-identical groups without the multiply
+    if k.is_power_of_two() {
+        let shift = k.trailing_zeros();
+        for chunk in symbols.chunks(digits) {
+            let mut v: u64 = 0;
+            for &s in chunk.iter().rev() {
+                debug_assert!(s < k, "symbol {s} out of alphabet {k}");
+                v = (v << shift) | s as u64;
+            }
+            w.push_bits(v, bits);
+        }
+        return;
+    }
     for chunk in symbols.chunks(digits) {
         let mut v: u64 = 0;
         // little-endian digit order
@@ -81,10 +152,18 @@ pub struct SymbolUnpacker<'r, 'b> {
     group: u64,
     /// Digits still buffered in `group`.
     in_group: usize,
+    /// Chunked-decode kernel for [`SymbolUnpacker::fill_symbols`].
+    kernel: RawKernel,
 }
 
 impl<'r, 'b> SymbolUnpacker<'r, 'b> {
     pub fn new(r: &'r mut BitReader<'b>, k: u32, n: usize) -> Self {
+        Self::with_kernel(r, k, n, RawKernel::for_alphabet(k))
+    }
+
+    /// Unpacker with an explicit kernel choice — `RawKernel::Generic` is
+    /// the oracle the differential suite runs against.
+    pub fn with_kernel(r: &'r mut BitReader<'b>, k: u32, n: usize, kernel: RawKernel) -> Self {
         let (digits, bits) = group_params(k);
         Self {
             r,
@@ -94,6 +173,7 @@ impl<'r, 'b> SymbolUnpacker<'r, 'b> {
             remaining: n,
             group: 0,
             in_group: 0,
+            kernel,
         }
     }
 
@@ -116,6 +196,82 @@ impl<'r, 'b> SymbolUnpacker<'r, 'b> {
         self.in_group -= 1;
         self.remaining -= 1;
         Ok(s)
+    }
+
+    /// Decode `out.len()` symbols in one call through the monomorphized
+    /// kernel — bit-identical to that many [`SymbolUnpacker::next_symbol`]
+    /// calls (same groups, digit order and error conditions), without the
+    /// per-symbol division/dispatch overhead.
+    pub fn fill_symbols(&mut self, out: &mut [u32]) -> crate::Result<()> {
+        anyhow::ensure!(out.len() <= self.remaining, "symbol stream exhausted");
+        match self.kernel {
+            RawKernel::Pow2 { shift } => self.fill_pow2(out, shift),
+            RawKernel::K3 => self.fill_const::<3>(out),
+            RawKernel::K5 => self.fill_const::<5>(out),
+            RawKernel::K7 => self.fill_const::<7>(out),
+            RawKernel::K9 => self.fill_const::<9>(out),
+            RawKernel::K15 => self.fill_const::<15>(out),
+            RawKernel::Generic => self.fill_generic(out),
+        }
+    }
+
+    /// Shift/mask lane extraction for k = 2^shift.
+    fn fill_pow2(&mut self, out: &mut [u32], shift: u32) -> crate::Result<()> {
+        let mask = (1u64 << shift) - 1;
+        let mut it = out.iter_mut();
+        // drain digits buffered from a previous partial group
+        while self.in_group > 0 {
+            match it.next() {
+                Some(v) => *v = self.next_symbol()?,
+                None => return Ok(()),
+            }
+        }
+        // steady state: whole groups, branch-free lane peel
+        while it.len() >= self.digits && self.remaining >= self.digits {
+            let mut g = self.r.read_bits(self.bits)?;
+            self.remaining -= self.digits;
+            for v in it.by_ref().take(self.digits) {
+                *v = (g & mask) as u32;
+                g >>= shift;
+            }
+        }
+        // tail: short final group via the scalar path
+        for v in it {
+            *v = self.next_symbol()?;
+        }
+        Ok(())
+    }
+
+    /// Constant-divisor group loop: the compiler strength-reduces `% K` /
+    /// `/ K` into multiplies, which is the whole speedup.
+    fn fill_const<const K: u64>(&mut self, out: &mut [u32]) -> crate::Result<()> {
+        let mut it = out.iter_mut();
+        while self.in_group > 0 {
+            match it.next() {
+                Some(v) => *v = self.next_symbol()?,
+                None => return Ok(()),
+            }
+        }
+        while it.len() >= self.digits && self.remaining >= self.digits {
+            let mut g = self.r.read_bits(self.bits)?;
+            self.remaining -= self.digits;
+            for v in it.by_ref().take(self.digits) {
+                *v = (g % K) as u32;
+                g /= K;
+            }
+        }
+        for v in it {
+            *v = self.next_symbol()?;
+        }
+        Ok(())
+    }
+
+    /// Runtime-k chunk loop — the fallback kernel and the oracle.
+    fn fill_generic(&mut self, out: &mut [u32]) -> crate::Result<()> {
+        for v in out.iter_mut() {
+            *v = self.next_symbol()?;
+        }
+        Ok(())
     }
 }
 
@@ -244,6 +400,123 @@ mod tests {
         };
         assert!(got < 100, "truncated stream decoded fully");
         assert!(err.to_string().contains("out of data"), "{err}");
+    }
+
+    #[test]
+    fn group_params_capacity_boundary_exact() {
+        // satellite pin: k^digits may equal 2^64 exactly — the `<=` bound
+        // in group_params is what lets k = 2, 256, 65536 fill whole words
+        for (k, digits, bits) in [
+            (2u32, 64usize, 64usize),
+            (3, 40, 64),
+            (255, 8, 64),
+            (256, 8, 64),
+            (4096, 5, 60),
+            (65536, 4, 64),
+        ] {
+            assert_eq!(group_params(k), (digits, bits), "k={k}");
+        }
+    }
+
+    #[test]
+    fn symbols_per_word_agree_end_to_end_at_boundary_alphabets() {
+        // encoder and decoder derive symbols-per-word independently from
+        // group_params; disagreement at a capacity-boundary alphabet would
+        // silently corrupt every frame. Pin maximality of `digits` and
+        // exercise pack -> {batch, streaming, chunked} decode agreement.
+        let mut rng = Xoshiro256::new(99);
+        for k in [2u32, 3, 255, 256, 4096, 65536] {
+            let (digits, bits) = group_params(k);
+            let kd = (k as u128).pow(digits as u32);
+            assert!(kd <= 1u128 << 64, "k={k}: group overfills u64");
+            assert!(kd * k as u128 > 1u128 << 64, "k={k}: digits not maximal");
+            assert_eq!(bits, 128 - (kd - 1).leading_zeros() as usize, "k={k}");
+            for n in [digits - 1, digits, digits + 1, 3 * digits + 2] {
+                let sym: Vec<u32> = (0..n).map(|_| rng.next_below(k)).collect();
+                let mut w = BitWriter::new();
+                pack_base_k(&sym, k, &mut w);
+                assert_eq!(w.len_bits(), n.div_ceil(digits) * bits, "k={k} n={n}");
+                let bytes = w.into_bytes();
+                let mut r = BitReader::new(&bytes);
+                assert_eq!(unpack_base_k(&mut r, k, n).unwrap(), sym, "k={k} n={n}");
+                let mut r = BitReader::new(&bytes);
+                let mut sy = SymbolUnpacker::new(&mut r, k, n);
+                let mut chunked = vec![0u32; n];
+                sy.fill_symbols(&mut chunked).unwrap();
+                assert_eq!(chunked, sym, "k={k} n={n} chunked");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_fill_matches_scalar_for_every_kernel_and_segmentation() {
+        // every RawKernel variant, every split pattern: fill_symbols must
+        // be bit-identical to per-symbol next_symbol on the same stream
+        let mut rng = Xoshiro256::new(13);
+        for k in [2u32, 3, 4, 5, 7, 8, 9, 15, 16, 21, 255, 256, 4096, 65536] {
+            for n in [0usize, 1, 7, 40, 41, 129, 513] {
+                let sym: Vec<u32> = (0..n).map(|_| rng.next_below(k)).collect();
+                let mut w = BitWriter::new();
+                pack_base_k(&sym, k, &mut w);
+                let bytes = w.into_bytes();
+
+                let mut r1 = BitReader::new(&bytes);
+                let mut scalar_sy = SymbolUnpacker::new(&mut r1, k, n);
+                let scalar: Vec<u32> =
+                    (0..n).map(|_| scalar_sy.next_symbol().unwrap()).collect();
+
+                // chunked, split at random points (partial-group resume)
+                let mut r2 = BitReader::new(&bytes);
+                let mut sy = SymbolUnpacker::new(&mut r2, k, n);
+                let mut chunked = vec![0u32; n];
+                let mut lo = 0usize;
+                while lo < n {
+                    let hi = (lo + 1 + rng.next_below(97) as usize).min(n);
+                    sy.fill_symbols(&mut chunked[lo..hi]).unwrap();
+                    lo = hi;
+                }
+                assert_eq!(chunked, scalar, "k={k} n={n}");
+                assert_eq!(chunked, sym, "k={k} n={n}");
+                assert_eq!(r1.bits_read(), r2.bits_read(), "k={k} n={n}");
+
+                // the explicit Generic kernel (the oracle) agrees too
+                let mut r3 = BitReader::new(&bytes);
+                let mut gen_sy = SymbolUnpacker::with_kernel(&mut r3, k, n, RawKernel::Generic);
+                let mut generic = vec![0u32; n];
+                gen_sy.fill_symbols(&mut generic).unwrap();
+                assert_eq!(generic, sym, "k={k} n={n} generic");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_symbols_guards_overrun_and_truncation() {
+        let sym: Vec<u32> = vec![2; 100];
+        let mut w = BitWriter::new();
+        pack_base_k(&sym, 3, &mut w);
+        let bytes = w.into_bytes();
+        // asking for more than n symbols is an error up front
+        let mut r = BitReader::new(&bytes);
+        let mut sy = SymbolUnpacker::new(&mut r, 3, 100);
+        let mut big = vec![0u32; 101];
+        assert!(sy.fill_symbols(&mut big).is_err());
+        // truncated stream errors instead of yielding garbage
+        let short = &bytes[..bytes.len() / 2];
+        let mut r = BitReader::new(short);
+        let mut sy = SymbolUnpacker::new(&mut r, 3, 100);
+        let mut out = vec![0u32; 100];
+        assert!(sy.fill_symbols(&mut out).is_err());
+    }
+
+    #[test]
+    fn kernel_dispatch_table() {
+        assert_eq!(RawKernel::for_alphabet(2), RawKernel::Pow2 { shift: 1 });
+        assert_eq!(RawKernel::for_alphabet(256), RawKernel::Pow2 { shift: 8 });
+        assert_eq!(RawKernel::for_alphabet(65536), RawKernel::Pow2 { shift: 16 });
+        assert_eq!(RawKernel::for_alphabet(3), RawKernel::K3);
+        assert_eq!(RawKernel::for_alphabet(15), RawKernel::K15);
+        assert_eq!(RawKernel::for_alphabet(21), RawKernel::Generic);
+        assert_eq!(RawKernel::for_alphabet(255), RawKernel::Generic);
     }
 
     #[test]

@@ -453,6 +453,15 @@ impl Session {
         Ok(&mut self.decode_buf)
     }
 
+    /// The decode-kernel dispatch currently active: one `(scheme label,
+    /// kernel label)` row per registered wire scheme. Plans are resolved
+    /// when the quantizers are built — i.e. on every
+    /// [`Session::set_schemes`] / [`Session::apply_spec`], once per
+    /// `RoundSpec`, never per frame.
+    pub fn kernel_summary(&self) -> Vec<(String, String)> {
+        self.registry.kernel_summary()
+    }
+
     // ---- internals ----
 
     fn validate(&self, worker: usize, wire: &WireMsg) -> crate::Result<()> {
@@ -1117,6 +1126,25 @@ mod tests {
         // k=7 DQSG frames still carry SchemeId::Dithered, so the scheme-id
         // gate passes and the frame-level m check must refuse instead
         assert!(agg.push(WorkerMsg::new(0, 3, 0.0, wire)).is_err());
+    }
+
+    #[test]
+    fn kernel_summary_tracks_spec_changes() {
+        use crate::quant::PayloadCodec;
+        let base = crate::comm::RoundSpec {
+            scheme: Scheme::Dithered { delta: 1.0 },
+            scheme_p2: None,
+            codec: PayloadCodec::Raw,
+        };
+        let mut session = Session::new(&base.worker_schemes(2), 5, 100).unwrap();
+        let kernel_of = |s: &Session| s.kernel_summary().remove(0).1;
+        assert_eq!(kernel_of(&session), "specialized/k3");
+        // re-leveling to k=7 re-resolves the plan with the registry rebuild
+        session.apply_spec(&base.with_levels(7).unwrap()).unwrap();
+        assert_eq!(kernel_of(&session), "specialized/k7");
+        // an alphabet outside the monomorphized set reports the fallback
+        session.apply_spec(&base.with_levels(21).unwrap()).unwrap();
+        assert_eq!(kernel_of(&session), "specialized/generic");
     }
 
     #[test]

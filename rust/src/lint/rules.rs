@@ -64,8 +64,10 @@ const DECODE_MODULES: &[&str] = &["src/comm/net.rs", "src/quant/", "src/coding/"
 
 /// A function is "on the decode path" when its name carries one of these
 /// markers — the lexical approximation of "reachable from hostile bytes".
+/// `fill_` covers the chunked kernel entry points (`fill_symbols`,
+/// `fill_pow2`, `fill_const`, …) that decode whole symbol chunks at once.
 const DECODE_FN_MARKERS: &[&str] = &[
-    "decode", "parse", "unpack", "read", "from_", "next_", "indices", "scales",
+    "decode", "parse", "unpack", "read", "from_", "next_", "indices", "scales", "fill_",
 ];
 
 /// Keywords that can precede `[` without forming an index expression.
@@ -109,8 +111,9 @@ pub const RULES: &[Rule] = &[
     Rule {
         name: "alloc-in-decode",
         summary: "no Vec::new/vec!/to_vec/collect/with_capacity inside `*_into` decode \
-                  functions — the buffer-reuse contract decodes into caller-owned scratch",
-        scope: Scope::Modules(&["src/comm/", "src/quant/", "src/coding/"]),
+                  functions or `fill_*` chunk kernels — the buffer-reuse contract decodes \
+                  into caller-owned scratch",
+        scope: Scope::Modules(&["src/comm/", "src/quant/", "src/coding/", "src/prng/"]),
         check: check_alloc_in_decode,
     },
     Rule {
@@ -280,7 +283,9 @@ fn check_panic_path(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
 fn check_alloc_in_decode(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
     let t = ctx.toks;
     for f in ctx.fns {
-        if !f.name.ends_with("_into") {
+        // `*_into` decoders reuse caller buffers; `fill_*` chunk kernels
+        // (symbol unpackers, dither fills) sit inside those hot loops
+        if !(f.name.ends_with("_into") || f.name.starts_with("fill_")) {
             continue;
         }
         for i in f.open_idx..f.end_idx.min(t.len()) {
@@ -378,6 +383,25 @@ mod tests {
         let cast = rule("naked-cast").unwrap();
         assert!(cast.applies_to("src/quant/mod.rs"));
         assert!(!cast.applies_to("src/quant/dithered.rs"));
+        // the chunked-kernel extension: alloc checks cover the dither fill
+        // in prng, but prng stays outside the panic-path (hostile-bytes)
+        // scope — its inputs are locally generated blocks, not wire bytes
+        let alloc = rule("alloc-in-decode").unwrap();
+        assert!(alloc.applies_to("src/prng/mod.rs"));
+        assert!(alloc.applies_to("src/coding/pack.rs"));
+        assert!(!panic.applies_to("src/prng/mod.rs"));
+    }
+
+    #[test]
+    fn decode_markers_cover_fill_kernels() {
+        for name in ["fill_symbols", "fill_pow2", "fill_const", "fill_dither"] {
+            assert!(
+                DECODE_FN_MARKERS.iter().any(|m| name.contains(m)),
+                "{name} should be decode-marked"
+            );
+        }
+        // the enum-dispatch wrapper `fill` is not itself a kernel body
+        assert!(!DECODE_FN_MARKERS.iter().any(|m| "fill".contains(m)));
     }
 
     #[test]

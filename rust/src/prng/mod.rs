@@ -81,16 +81,32 @@ impl DitherGen {
     }
 
     /// Uniform in [-half, half) — the dither distribution U[-Delta/2, Delta/2].
+    ///
+    /// Same fused form as the block path in [`DitherGen::fill_dither`]
+    /// (`lane * (2*half/2^24) - half`), so scalar and chunked generation
+    /// are bit-identical element-for-element.
     #[inline]
     pub fn next_dither(&mut self, half: f32) -> f32 {
-        (self.next_f32() - 0.5) * 2.0 * half
+        (self.next_u32() >> 8) as f32 * (2.0 * half / 16_777_216.0) - half
     }
 
     /// Fill `out` with iid U[-half, half) dither values.
+    ///
+    /// Exactly equivalent to `out.len()` calls of [`DitherGen::next_dither`]:
+    /// the stream is element-indexed and any trailing partial Philox block
+    /// stays buffered, so resumed or arbitrarily-segmented fills yield
+    /// bit-identical sequences (pinned by a property test below).
     pub fn fill_dither(&mut self, half: f32, out: &mut [f32]) {
-        // 4-wide unrolled fill straight from Philox blocks (hot path).
         let scale = 2.0 * half / 16_777_216.0;
-        let mut chunks = out.chunks_exact_mut(4);
+        // drain lanes buffered by a previous partial fill / scalar draw
+        let mut head = 0usize;
+        while self.pos < 4 && head < out.len() {
+            out[head] = (self.buf[self.pos] >> 8) as f32 * scale - half;
+            self.pos += 1;
+            head += 1;
+        }
+        // 4-wide unrolled fill straight from Philox blocks (hot path)
+        let mut chunks = out[head..].chunks_exact_mut(4);
         for c in &mut chunks {
             let b = self.rng.next_block();
             c[0] = (b[0] >> 8) as f32 * scale - half;
@@ -98,11 +114,16 @@ impl DitherGen {
             c[2] = (b[2] >> 8) as f32 * scale - half;
             c[3] = (b[3] >> 8) as f32 * scale - half;
         }
-        for v in chunks.into_remainder() {
-            *v = self.next_dither(half);
+        // trailing partial block: buffer it so the next draw resumes mid-block
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            self.buf = self.rng.next_block();
+            self.pos = 0;
+            for v in rem {
+                *v = (self.buf[self.pos] >> 8) as f32 * scale - half;
+                self.pos += 1;
+            }
         }
-        // keep the buffered path consistent: drop any partially-used block
-        self.pos = 4;
     }
 }
 
@@ -150,6 +171,65 @@ mod tests {
         assert!(mean.abs() < 1e-3, "mean={mean}");
         // var of U[-0.25, 0.25) = 0.25^2 * 4 / 12 = 1/48
         assert!((var - 1.0 / 48.0).abs() < 5e-4, "var={var}");
+    }
+
+    #[test]
+    fn fill_is_bitwise_identical_to_scalar_for_arbitrary_segmentations() {
+        // satellite pin: resumed / partially-filled streams must not
+        // diverge between workers — a fill split at *any* offsets is
+        // bit-identical to per-element `next_dither` draws
+        crate::testing::prop_check(
+            "dither-fill-segmentation",
+            60,
+            |rng: &mut Xoshiro256, size: f64| {
+                let n = 1 + (520.0 * size) as usize;
+                let seed = rng.next_u64();
+                let half = 0.5f32 * (1.0 + rng.next_f32());
+                // random cut points, including empty segments
+                let mut cuts: Vec<usize> = (0..rng.next_below(9))
+                    .map(|_| rng.next_below((n + 1) as u32) as usize)
+                    .collect();
+                cuts.push(n);
+                cuts.sort_unstable();
+                (seed, half, cuts)
+            },
+            |(seed, half, cuts)| {
+                let n = *cuts.last().expect("cuts is non-empty");
+                let mut scalar_gen = DitherStream::new(*seed, 1).round(2);
+                let scalar: Vec<f32> = (0..n).map(|_| scalar_gen.next_dither(*half)).collect();
+                let mut chunked_gen = DitherStream::new(*seed, 1).round(2);
+                let mut chunked = vec![0f32; n];
+                let mut lo = 0usize;
+                for &hi in cuts {
+                    chunked_gen.fill_dither(*half, &mut chunked[lo..hi]);
+                    lo = hi;
+                }
+                for (i, (a, b)) in scalar.iter().zip(&chunked).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("element {i}: scalar {a} != chunked {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fill_interleaves_with_scalar_draws() {
+        // a fill that stops mid-block hands the buffered lanes to the next
+        // scalar draw (and vice versa) without skipping counter values
+        let mut a = DitherStream::new(41, 7).round(9);
+        let mut b = DitherStream::new(41, 7).round(9);
+        let expect: Vec<f32> = (0..23).map(|_| a.next_dither(0.125)).collect();
+        let mut got = vec![0f32; 23];
+        b.fill_dither(0.125, &mut got[..5]);
+        got[5] = b.next_dither(0.125);
+        b.fill_dither(0.125, &mut got[6..22]);
+        got[22] = b.next_dither(0.125);
+        assert_eq!(
+            expect.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! of g — the property the convergence analysis (Thm. 4/5) rests on.
 
 use super::{Frame, FrameSink, GradQuantizer, SchemeId};
-use crate::coding::{pack, BitReader, SymbolSource};
+use crate::coding::{pack, BitReader, KernelMode, KernelPlan, SymbolSource, DECODE_CHUNK};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
 
@@ -21,6 +21,9 @@ use crate::tensor::linf_norm;
 pub struct DitheredQuantizer {
     delta: f32,
     m: i32,
+    /// Decode-kernel selection, resolved once at construction (i.e. once
+    /// per `RoundSpec`), never per frame.
+    pub(crate) plan: KernelPlan,
 }
 
 impl DitheredQuantizer {
@@ -29,7 +32,15 @@ impl DitheredQuantizer {
     pub fn new(delta: f32) -> Self {
         assert!(delta > 0.0 && delta <= 1.0, "Delta must be in (0, 1]");
         let m = (1.0 / delta).round().max(1.0) as i32;
-        Self { delta, m }
+        let plan = KernelPlan::specialized((2 * m + 1) as u32);
+        Self { delta, m, plan }
+    }
+
+    /// Rebuild with an explicit [`KernelMode`] — `Generic` is the oracle
+    /// configuration the differential suite decodes against.
+    pub fn with_kernel_mode(mut self, mode: KernelMode) -> Self {
+        self.plan = KernelPlan::new(mode, self.alphabet());
+        self
     }
 
     pub fn delta(&self) -> f32 {
@@ -129,10 +140,19 @@ impl GradQuantizer for DitheredQuantizer {
         // regenerated dither lands in `out` first, then each element is
         // combined in place (u_i -> kappa * (Delta q_i - u_i)): no scratch
         dither.fill_dither(self.delta / 2.0, out);
-        let mut sy = SymbolSource::new(&mut r, frame.codec, self.alphabet(), frame.n)?;
-        for v in out.iter_mut() {
-            let q = pack::symbol_to_signed(sy.next_symbol()?, self.m);
-            *v = kappa * (self.delta * q as f32 - *v);
+        let mut sy =
+            SymbolSource::with_plan(&mut r, frame.codec, self.alphabet(), frame.n, self.plan)?;
+        // chunked kernel decode: symbols land in a stack buffer, then the
+        // in-place dither combine runs over plain slices — bit-identical
+        // to the per-symbol loop, with the dispatch hoisted per chunk
+        let mut syms = [0u32; DECODE_CHUNK];
+        for chunk in out.chunks_mut(DECODE_CHUNK) {
+            let (buf, _) = syms.split_at_mut(chunk.len());
+            sy.fill(self.plan.mode, buf)?;
+            for (v, &s) in chunk.iter_mut().zip(buf.iter()) {
+                let q = pack::symbol_to_signed(s, self.m);
+                *v = kappa * (self.delta * q as f32 - *v);
+            }
         }
         Ok(())
     }

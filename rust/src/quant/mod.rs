@@ -107,6 +107,7 @@ use crate::coding::{arithmetic, crc, entropy, pack, BitReader, BitWriter, Symbol
 use crate::prng::DitherGen;
 
 pub use crate::coding::PayloadCodec;
+pub use crate::coding::{KernelMode, KernelPlan};
 
 /// Wire magic: `"NQ"`.
 pub const WIRE_MAGIC: [u8; 2] = *b"NQ";
@@ -1001,18 +1002,42 @@ pub enum Scheme {
 
 impl Scheme {
     pub fn build(&self) -> Box<dyn GradQuantizer> {
+        self.build_with_mode(KernelMode::Specialized)
+    }
+
+    /// [`Scheme::build`] with an explicit decode [`KernelMode`]:
+    /// `Specialized` (the default) dispatches the monomorphized chunked
+    /// kernels, `Generic` forces the per-symbol interpreter — the
+    /// differential-test oracle. Both produce bit-identical wire bytes and
+    /// reconstructions (pinned by `tests/kernel_differential.rs`).
+    pub fn build_with_mode(&self, mode: KernelMode) -> Box<dyn GradQuantizer> {
         match *self {
             Scheme::Baseline => Box::new(baseline::BaselineQuantizer),
-            Scheme::Dithered { delta } => Box::new(dithered::DitheredQuantizer::new(delta)),
-            Scheme::DitheredPartitioned { delta, k } => {
-                Box::new(partition::PartitionedDithered::new(delta, k))
+            Scheme::Dithered { delta } => {
+                Box::new(dithered::DitheredQuantizer::new(delta).with_kernel_mode(mode))
             }
-            Scheme::Qsgd { m } => Box::new(stochastic::QsgdQuantizer::new(m)),
-            Scheme::Terngrad => Box::new(terngrad::TerngradQuantizer::new()),
+            Scheme::DitheredPartitioned { delta, k } => {
+                Box::new(partition::PartitionedDithered::new(delta, k).with_kernel_mode(mode))
+            }
+            Scheme::Qsgd { m } => {
+                Box::new(stochastic::QsgdQuantizer::new(m).with_kernel_mode(mode))
+            }
+            Scheme::Terngrad => Box::new(terngrad::TerngradQuantizer::new().with_kernel_mode(mode)),
             Scheme::OneBit => Box::new(onebit::OneBitQuantizer::new()),
             Scheme::Nested { d1, ratio, alpha } => {
-                Box::new(nested::NestedQuantizer::new(d1, ratio, alpha))
+                Box::new(nested::NestedQuantizer::new(d1, ratio, alpha).with_kernel_mode(mode))
             }
+        }
+    }
+
+    /// The decode-kernel plan this scheme's quantizer dispatches through,
+    /// resolved once per `RoundSpec` (via [`Scheme::build`]); `None` for
+    /// schemes with no index lane (baseline, one-bit), whose decode has no
+    /// symbol stream to specialize.
+    pub fn kernel_plan(&self) -> Option<KernelPlan> {
+        match self.alphabet() {
+            0 => None,
+            k => Some(KernelPlan::specialized(k)),
         }
     }
 
@@ -1240,6 +1265,23 @@ impl SchemeRegistry {
     ) -> crate::Result<()> {
         self.decoder(msg.scheme)?.decode_into(msg, dither, side, out)
     }
+
+    /// One `(scheme label, kernel label)` row per registered scheme — the
+    /// dispatch report [`crate::comm::Session::kernel_summary`] and the
+    /// round-driver banner surface. Schemes with no index lane report
+    /// `"none"`.
+    pub fn kernel_summary(&self) -> Vec<(String, String)> {
+        self.entries
+            .values()
+            .map(|(s, _)| {
+                let kernel = s
+                    .kernel_plan()
+                    .map(|p| p.label())
+                    .unwrap_or_else(|| "none".into());
+                (s.label(), kernel)
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -1328,6 +1370,40 @@ mod tests {
             assert_eq!(q.id(), s.id());
             assert_eq!(q.needs_side_info(), s.needs_side_info());
         }
+    }
+
+    #[test]
+    fn kernel_plans_resolve_per_scheme() {
+        // the per-RoundSpec dispatch table: scheme alphabet -> raw kernel
+        assert!(Scheme::Baseline.kernel_plan().is_none());
+        assert!(Scheme::OneBit.kernel_plan().is_none());
+        let label = |s: Scheme| s.kernel_plan().unwrap().label();
+        assert_eq!(label(Scheme::Terngrad), "specialized/k3");
+        assert_eq!(label(Scheme::Dithered { delta: 1.0 }), "specialized/k3");
+        assert_eq!(label(Scheme::Qsgd { m: 2 }), "specialized/k5");
+        assert_eq!(label(Scheme::Dithered { delta: 1.0 / 3.0 }), "specialized/k7");
+        assert_eq!(label(Scheme::Qsgd { m: 7 }), "specialized/k15");
+        assert_eq!(
+            label(Scheme::Nested { d1: 0.2, ratio: 9, alpha: 1.0 }),
+            "specialized/k9"
+        );
+        // alphabets outside the monomorphized set fall back in-plan
+        assert_eq!(label(Scheme::Qsgd { m: 10 }), "specialized/generic");
+        // an explicit Generic build reports the oracle kernel
+        assert_eq!(
+            KernelPlan::new(KernelMode::Generic, 3).label(),
+            "generic/generic"
+        );
+        // registry summary: one row per registered scheme, including "none"
+        let reg = SchemeRegistry::from_schemes(&[
+            Scheme::Dithered { delta: 1.0 },
+            Scheme::OneBit,
+        ])
+        .unwrap();
+        let rows = reg.kernel_summary();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().any(|(s, k)| s == "DQSGD(d=1)" && k == "specialized/k3"));
+        assert!(rows.iter().any(|(s, k)| s == "One-Bit" && k == "none"));
     }
 
     #[test]

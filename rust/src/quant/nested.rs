@@ -18,7 +18,7 @@
 //! alpha = 1 or alpha = sqrt(1 - Delta1^2 / 12 sigma_z^2).
 
 use super::{Frame, FrameSink, GradQuantizer, SchemeId};
-use crate::coding::{pack, BitReader, SymbolSource};
+use crate::coding::{pack, BitReader, KernelMode, KernelPlan, SymbolSource, DECODE_CHUNK};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
 
@@ -30,6 +30,8 @@ pub struct NestedQuantizer {
     alpha: f32,
     /// symbol alphabet half-width = (ratio - 1) / 2
     m: i32,
+    /// Decode-kernel selection, resolved once per `RoundSpec`.
+    pub(crate) plan: KernelPlan,
 }
 
 #[inline]
@@ -52,7 +54,14 @@ impl NestedQuantizer {
             ratio,
             alpha,
             m: ((ratio - 1) / 2) as i32,
+            plan: KernelPlan::specialized(ratio),
         }
+    }
+
+    /// Rebuild with an explicit [`KernelMode`] (oracle = `Generic`).
+    pub fn with_kernel_mode(mut self, mode: KernelMode) -> Self {
+        self.plan = KernelPlan::new(mode, self.ratio);
+        self
     }
 
     pub fn d1(&self) -> f32 {
@@ -152,12 +161,19 @@ impl GradQuantizer for NestedQuantizer {
         // regenerated dither lands in `out`, then eq. (7) runs in place
         // against the streamed symbols and the side information y
         dither.fill_dither(self.d1 / 2.0, out);
-        let mut sy = SymbolSource::new(&mut r, frame.codec, self.ratio, frame.n)?;
-        for (v, &yi) in out.iter_mut().zip(y) {
-            let s = self.d1 * pack::symbol_to_signed(sy.next_symbol()?, self.m) as f32;
-            let yn = yi * inv_kappa;
-            let rr = s - *v - self.alpha * yn;
-            *v = kappa * (yn + self.alpha * (rr - uq(rr, self.d2)));
+        let mut sy = SymbolSource::with_plan(&mut r, frame.codec, self.ratio, frame.n, self.plan)?;
+        let mut syms = [0u32; DECODE_CHUNK];
+        // y.len() == out.len() is ensure!-pinned above, so the two chunk
+        // iterators stay aligned element-for-element
+        for (chunk, ychunk) in out.chunks_mut(DECODE_CHUNK).zip(y.chunks(DECODE_CHUNK)) {
+            let (buf, _) = syms.split_at_mut(chunk.len());
+            sy.fill(self.plan.mode, buf)?;
+            for ((v, &yi), &s) in chunk.iter_mut().zip(ychunk).zip(buf.iter()) {
+                let s = self.d1 * pack::symbol_to_signed(s, self.m) as f32;
+                let yn = yi * inv_kappa;
+                let rr = s - *v - self.alpha * yn;
+                *v = kappa * (yn + self.alpha * (rr - uq(rr, self.d2)));
+            }
         }
         Ok(())
     }

@@ -9,7 +9,7 @@
 
 use super::dithered::DitheredQuantizer;
 use super::{Frame, FrameSink, GradQuantizer, SchemeId};
-use crate::coding::{pack, BitReader, SymbolSource};
+use crate::coding::{pack, BitReader, KernelMode, SymbolSource, DECODE_CHUNK};
 use crate::prng::DitherGen;
 
 #[derive(Debug, Clone)]
@@ -25,6 +25,12 @@ impl PartitionedDithered {
             inner: DitheredQuantizer::new(delta),
             k,
         }
+    }
+
+    /// Rebuild with an explicit [`KernelMode`] (oracle = `Generic`).
+    pub fn with_kernel_mode(mut self, mode: KernelMode) -> Self {
+        self.inner = self.inner.with_kernel_mode(mode);
+        self
     }
 
     /// Effective partition count for an n-element tensor.
@@ -125,14 +131,25 @@ impl GradQuantizer for PartitionedDithered {
         for _ in 0..parts {
             r.read_f32()?; // hop over the scale block
         }
-        let mut sy = SymbolSource::new(&mut r, frame.codec, self.inner.alphabet(), frame.n)?;
+        let mut sy = SymbolSource::with_plan(
+            &mut r,
+            frame.codec,
+            self.inner.alphabet(),
+            frame.n,
+            self.inner.plan,
+        )?;
         let m = self.inner.m();
         let delta = self.inner.delta();
+        let mut syms = [0u32; DECODE_CHUNK];
         for (lo, hi) in self.bounds_iter(frame.n) {
             let kappa = scale_r.read_f32()?;
-            for v in out[lo..hi].iter_mut() {
-                let q = pack::symbol_to_signed(sy.next_symbol()?, m);
-                *v = kappa * (delta * q as f32 - *v);
+            for chunk in out[lo..hi].chunks_mut(DECODE_CHUNK) {
+                let (buf, _) = syms.split_at_mut(chunk.len());
+                sy.fill(self.inner.plan.mode, buf)?;
+                for (v, &sym) in chunk.iter_mut().zip(buf.iter()) {
+                    let q = pack::symbol_to_signed(sym, m);
+                    *v = kappa * (delta * q as f32 - *v);
+                }
             }
         }
         Ok(())

@@ -10,7 +10,7 @@
 //! what the paper's Fig. 5 / Table 3 comparisons measure.
 
 use super::{Frame, FrameSink, GradQuantizer, SchemeId};
-use crate::coding::{pack, BitReader, SymbolSource};
+use crate::coding::{pack, BitReader, KernelMode, KernelPlan, SymbolSource, DECODE_CHUNK};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
 
@@ -18,6 +18,8 @@ use crate::tensor::linf_norm;
 pub struct QsgdQuantizer {
     m: i32,
     delta: f32,
+    /// Decode-kernel selection, resolved once per `RoundSpec`.
+    pub(crate) plan: KernelPlan,
 }
 
 impl QsgdQuantizer {
@@ -26,7 +28,14 @@ impl QsgdQuantizer {
         Self {
             m,
             delta: 1.0 / m as f32,
+            plan: KernelPlan::specialized((2 * m + 1) as u32),
         }
+    }
+
+    /// Rebuild with an explicit [`KernelMode`] (oracle = `Generic`).
+    pub fn with_kernel_mode(mut self, mode: KernelMode) -> Self {
+        self.plan = KernelPlan::new(mode, self.alphabet());
+        self
     }
 
     pub fn alphabet(&self) -> u32 {
@@ -91,9 +100,15 @@ impl GradQuantizer for QsgdQuantizer {
         let kappa = r.read_f32()?;
         // half-dithered: reconstruction is kappa * Delta * q; dither NOT
         // subtracted (Lemma 2 — this is what distinguishes QSGD from DQSG).
-        let mut sy = SymbolSource::new(&mut r, frame.codec, self.alphabet(), frame.n)?;
-        for v in out.iter_mut() {
-            *v = kappa * self.delta * pack::symbol_to_signed(sy.next_symbol()?, self.m) as f32;
+        let mut sy =
+            SymbolSource::with_plan(&mut r, frame.codec, self.alphabet(), frame.n, self.plan)?;
+        let mut syms = [0u32; DECODE_CHUNK];
+        for chunk in out.chunks_mut(DECODE_CHUNK) {
+            let (buf, _) = syms.split_at_mut(chunk.len());
+            sy.fill(self.plan.mode, buf)?;
+            for (v, &s) in chunk.iter_mut().zip(buf.iter()) {
+                *v = kappa * self.delta * pack::symbol_to_signed(s, self.m) as f32;
+            }
         }
         Ok(())
     }

@@ -4,22 +4,33 @@
 //! the paper's recommended layer-wise clipping factor).
 
 use super::{Frame, FrameSink, GradQuantizer, SchemeId};
-use crate::coding::{pack, BitReader, SymbolSource};
+use crate::coding::{pack, BitReader, KernelMode, KernelPlan, SymbolSource, DECODE_CHUNK};
 use crate::prng::DitherGen;
 use crate::tensor::mean_var;
 
 #[derive(Debug, Clone)]
 pub struct TerngradQuantizer {
     clip_sigmas: f32,
+    /// Decode-kernel selection, resolved once per `RoundSpec` (k = 3).
+    pub(crate) plan: KernelPlan,
 }
 
 impl TerngradQuantizer {
     pub fn new() -> Self {
-        Self { clip_sigmas: 2.5 }
+        Self::with_clip(2.5)
     }
 
     pub fn with_clip(clip_sigmas: f32) -> Self {
-        Self { clip_sigmas }
+        Self {
+            clip_sigmas,
+            plan: KernelPlan::specialized(3),
+        }
+    }
+
+    /// Rebuild with an explicit [`KernelMode`] (oracle = `Generic`).
+    pub fn with_kernel_mode(mut self, mode: KernelMode) -> Self {
+        self.plan = KernelPlan::new(mode, 3);
+        self
     }
 }
 
@@ -105,9 +116,14 @@ impl GradQuantizer for TerngradQuantizer {
         );
         let mut r = BitReader::new(payload);
         let s = r.read_f32()?;
-        let mut sy = SymbolSource::new(&mut r, frame.codec, 3, frame.n)?;
-        for v in out.iter_mut() {
-            *v = s * pack::symbol_to_signed(sy.next_symbol()?, 1) as f32;
+        let mut sy = SymbolSource::with_plan(&mut r, frame.codec, 3, frame.n, self.plan)?;
+        let mut syms = [0u32; DECODE_CHUNK];
+        for chunk in out.chunks_mut(DECODE_CHUNK) {
+            let (buf, _) = syms.split_at_mut(chunk.len());
+            sy.fill(self.plan.mode, buf)?;
+            for (v, &sym) in chunk.iter_mut().zip(buf.iter()) {
+                *v = s * pack::symbol_to_signed(sym, 1) as f32;
+            }
         }
         Ok(())
     }

@@ -311,6 +311,26 @@ pub struct RoundDriver {
     delivery: Vec<RoundDelivery>,
     rounds_failed: usize,
     history: Vec<EvalPoint>,
+    /// Decode-kernel dispatch for every spec this driver can plan —
+    /// resolved once at construction (plans are a pure function of the
+    /// spec), surfaced through [`RoundDriver::kernel_plans`].
+    kernel_plans: Vec<(String, String, String)>,
+}
+
+/// One `(spec label, scheme label, kernel label)` row per scheme `spec`
+/// negotiates (P1, then the P2 group when present).
+fn push_kernel_rows(spec: &RoundSpec, out: &mut Vec<(String, String, String)>) {
+    let schemes = match spec.scheme_p2 {
+        Some(p2) => vec![spec.scheme, p2],
+        None => vec![spec.scheme],
+    };
+    for s in schemes {
+        let kernel = s
+            .kernel_plan()
+            .map(|p| p.label())
+            .unwrap_or_else(|| "none".into());
+        out.push((spec.label(), s.label(), kernel));
+    }
 }
 
 impl RoundDriver {
@@ -324,11 +344,16 @@ impl RoundDriver {
     ) -> crate::Result<RoundDriver> {
         anyhow::ensure!(workers >= 1, "at least one worker");
         base.validate()?;
+        let mut kernel_plans = Vec::new();
+        push_kernel_rows(&base, &mut kernel_plans);
         for k in levels.reachable_ks() {
-            base.with_levels(k).map_err(|e| {
+            let spec = base.with_levels(k).map_err(|e| {
                 anyhow::anyhow!("levels policy `{}` is unrealizable: {e}", levels.label())
             })?;
+            push_kernel_rows(&spec, &mut kernel_plans);
         }
+        // schedules may revisit a level; one row per distinct (spec, scheme)
+        kernel_plans.dedup();
         Ok(RoundDriver {
             current: base,
             base,
@@ -341,7 +366,16 @@ impl RoundDriver {
             delivery: Vec::new(),
             rounds_failed: 0,
             history: Vec::new(),
+            kernel_plans,
         })
+    }
+
+    /// The decode-kernel dispatch for every spec this driver can plan:
+    /// `(spec label, scheme label, kernel label)` rows, base spec first,
+    /// then each level the policy can reach, deduplicated. Resolved once
+    /// at construction — the runtime never re-derives a plan per frame.
+    pub fn kernel_plans(&self) -> &[(String, String, String)] {
+        &self.kernel_plans
     }
 
     /// The spec every worker (and the session) must use for `round`,
@@ -683,5 +717,39 @@ mod tests {
             Scheme::Dithered { delta: 1.0 }
         );
         assert_eq!(d.current_spec().scheme, Scheme::Dithered { delta: 1.0 });
+    }
+
+    #[test]
+    fn driver_resolves_kernel_plans_for_every_reachable_spec() {
+        // base (k=7) plus the schedule's k=15 and k=3, in plan order; the
+        // duplicate k=7 row the schedule could produce is deduplicated
+        let d = RoundDriver::new(
+            base(),
+            LevelPolicy::parse("schedule:0=15,2=3").unwrap(),
+            crate::comm::RoundPolicy::WaitAll,
+            4,
+        )
+        .unwrap();
+        let kernels: Vec<&str> = d.kernel_plans().iter().map(|(_, _, k)| k.as_str()).collect();
+        assert_eq!(kernels, ["specialized/k7", "specialized/k15", "specialized/k3"]);
+        // a mixed P1/P2 spec reports one row per scheme group
+        let spec = RoundSpec {
+            scheme: Scheme::Dithered { delta: 1.0 },
+            scheme_p2: Some(Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 }),
+            codec: PayloadCodec::Raw,
+        };
+        let d = RoundDriver::new(spec, LevelPolicy::Fixed, crate::comm::RoundPolicy::WaitAll, 4)
+            .unwrap();
+        assert_eq!(d.kernel_plans().len(), 2);
+        assert!(d.kernel_plans().iter().all(|(_, _, k)| k == "specialized/k3"));
+        // schemes without an index lane report "none", not a bogus kernel
+        let d = RoundDriver::new(
+            RoundSpec::uniform(Scheme::OneBit),
+            LevelPolicy::Fixed,
+            crate::comm::RoundPolicy::WaitAll,
+            2,
+        )
+        .unwrap();
+        assert_eq!(d.kernel_plans()[0].2, "none");
     }
 }

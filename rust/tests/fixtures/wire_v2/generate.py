@@ -91,14 +91,22 @@ class DitherGen:
         half = np.float32(half)
         scale = np.float32(2.0) * half / np.float32(16777216.0)
         out = []
-        for _ in range(n // 4):
+        # drain lanes buffered by a previous partial fill / scalar draw
+        while self.pos < 4 and len(out) < n:
+            out.append(np.float32(self.buf[self.pos] >> 8) * scale - half)
+            self.pos += 1
+        # whole Philox blocks (the Rust chunks_exact_mut(4) hot loop)
+        while n - len(out) >= 4:
             b = self.rng.next_block()
             for j in range(4):
                 out.append(np.float32(b[j] >> 8) * scale - half)
-        for _ in range(n % 4):
-            u = np.float32(self.next_u32() >> 8) * np.float32(1.0 / 16777216.0)
-            out.append((u - np.float32(0.5)) * np.float32(2.0) * half)
-        self.pos = 4
+        # trailing partial block: buffer it so the next draw resumes mid-block
+        if len(out) < n:
+            self.buf = self.rng.next_block()
+            self.pos = 0
+            while len(out) < n:
+                out.append(np.float32(self.buf[self.pos] >> 8) * scale - half)
+                self.pos += 1
         return out
 
 

@@ -1,0 +1,171 @@
+//! Differential fuzz: the monomorphized decode kernels against the
+//! generic interpreters they replaced.
+//!
+//! The specialization contract is *bit-identity*: for every (scheme, k,
+//! codec) cell the fast path must produce the same wire bytes, the same
+//! [`BitMetrics`], and the same reconstruction — down to the f32 bit
+//! pattern — as the per-symbol oracle, under arbitrary tensors and
+//! arbitrary chunk segmentations. Any divergence here would silently
+//! change run fingerprints, so these properties gate tier-1.
+
+use ndq::coding::{
+    arithmetic, huffman, pack, BitReader, BitWriter, KernelMode, KernelPlan, SymbolSource,
+};
+use ndq::prng::{DitherStream, Xoshiro256};
+use ndq::quant::{GradQuantizer, PayloadCodec, Scheme};
+use ndq::testing::{gens, prop_check};
+
+const CODECS: [PayloadCodec; 3] = [PayloadCodec::Raw, PayloadCodec::Huffman, PayloadCodec::Aac];
+
+/// Alphabets covering every monomorphized raw kernel (pow2 at 2/4/8/16,
+/// the const-divisor family at 3/5/7/9/15) plus generic fallbacks (17, 21).
+const KS: [u32; 11] = [2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 21];
+
+/// Every index-lane scheme, chosen so each raw kernel family and the
+/// in-plan generic fallback all appear (see `kernel_plans_resolve_per_scheme`).
+const SCHEMES: [Scheme; 8] = [
+    Scheme::Dithered { delta: 1.0 },                  // k3
+    Scheme::Terngrad,                                 // k3
+    Scheme::Qsgd { m: 2 },                            // k5
+    Scheme::Dithered { delta: 1.0 / 3.0 },            // k7
+    Scheme::Nested { d1: 0.2, ratio: 9, alpha: 1.0 }, // k9 + side info
+    Scheme::Qsgd { m: 7 },                            // k15
+    Scheme::DitheredPartitioned { delta: 1.0, k: 4 }, // k3 through partition bounds
+    Scheme::Qsgd { m: 10 },                           // k21: generic fallback in-plan
+];
+
+/// Drain `n` symbols through `mode`'s kernel in randomly sized chunks.
+fn drain_segmented(
+    src: &mut SymbolSource<'_, '_>,
+    mode: KernelMode,
+    n: usize,
+    rng: &mut Xoshiro256,
+) -> Result<Vec<u32>, String> {
+    let mut out = vec![0u32; n];
+    let mut off = 0usize;
+    while off < n {
+        let take = (1 + rng.next_below(320) as usize).min(n - off);
+        src.fill(mode, &mut out[off..off + take]).map_err(|e| e.to_string())?;
+        off += take;
+    }
+    Ok(out)
+}
+
+#[test]
+fn chunked_symbol_kernels_match_generic_oracle_for_every_cell() {
+    prop_check("symbol-kernel-differential", 24, gens::seed(), |&seed| {
+        let mut rng = Xoshiro256::new(seed);
+        let n = 1 + rng.next_below(700) as usize;
+        for &k in &KS {
+            let symbols: Vec<u32> = (0..n).map(|_| rng.next_below(k)).collect();
+            for codec in CODECS {
+                let mut w = BitWriter::new();
+                match codec {
+                    PayloadCodec::Raw => pack::pack_base_k(&symbols, k, &mut w),
+                    PayloadCodec::Huffman => huffman::encode(&symbols, k as usize, &mut w),
+                    PayloadCodec::Aac => arithmetic::encode(&symbols, k as usize, &mut w),
+                }
+                let bytes = w.into_bytes();
+                let plan = KernelPlan::specialized(k);
+                let cell = format!("k={k} codec={} n={n}", codec.label());
+
+                let mut rs = BitReader::new(&bytes);
+                let mut ss = SymbolSource::with_plan(&mut rs, codec, k, n, plan)
+                    .map_err(|e| format!("{cell}: {e}"))?;
+                let spec = drain_segmented(&mut ss, KernelMode::Specialized, n, &mut rng)
+                    .map_err(|e| format!("{cell}: {e}"))?;
+
+                let mut rg = BitReader::new(&bytes);
+                let mut sg = SymbolSource::with_plan(&mut rg, codec, k, n, plan)
+                    .map_err(|e| format!("{cell}: {e}"))?;
+                let oracle = drain_segmented(&mut sg, KernelMode::Generic, n, &mut rng)
+                    .map_err(|e| format!("{cell}: {e}"))?;
+
+                if oracle != symbols {
+                    return Err(format!("{cell}: generic oracle broke the roundtrip"));
+                }
+                if spec != oracle {
+                    let at = spec.iter().zip(&oracle).position(|(a, b)| a != b);
+                    return Err(format!("{cell}: specialized diverges at index {at:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantizer_decode_is_mode_invariant_for_every_scheme_and_codec() {
+    let tensors = gens::pair(gens::f32_vec(600), gens::seed());
+    prop_check("kernel-mode-differential", 12, tensors, |(g, seed)| {
+        // side info for the nested decoder: any vector of matching length
+        let y: Vec<f32> = g.iter().map(|&x| x * 0.9 + 0.01).collect();
+        for scheme in SCHEMES {
+            for codec in CODECS {
+                let cell =
+                    format!("scheme={} codec={} n={}", scheme.label(), codec.label(), g.len());
+                let mut qs = scheme.build_with_mode(KernelMode::Specialized);
+                let mut qg = scheme.build_with_mode(KernelMode::Generic);
+                let stream = DitherStream::new(*seed, 0);
+
+                // encode never depends on the kernel mode: the wire bytes
+                // and the encode-time metrics must be byte-for-byte equal
+                let ms = qs.encode_coded(g, &mut stream.round(0), codec);
+                let mg = qg.encode_coded(g, &mut stream.round(0), codec);
+                if ms.bytes() != mg.bytes() {
+                    return Err(format!("{cell}: encode bytes differ across kernel modes"));
+                }
+                if ms.carried_metrics() != mg.carried_metrics() {
+                    return Err(format!("{cell}: BitMetrics differ across kernel modes"));
+                }
+
+                // decode the same message through both kernels: bit-equal
+                let side = if scheme.needs_side_info() { Some(&y[..]) } else { None };
+                let mut out_s = vec![0f32; g.len()];
+                let mut out_g = vec![0f32; g.len()];
+                qs.decode_into(&ms, &mut stream.round(0), side, &mut out_s)
+                    .map_err(|e| format!("{cell}: specialized decode: {e}"))?;
+                qg.decode_into(&ms, &mut stream.round(0), side, &mut out_g)
+                    .map_err(|e| format!("{cell}: generic decode: {e}"))?;
+                let diverged = out_s
+                    .iter()
+                    .zip(&out_g)
+                    .position(|(a, b)| a.to_bits() != b.to_bits());
+                if let Some(i) = diverged {
+                    return Err(format!(
+                        "{cell}: decode diverges at {i}: {} vs {}",
+                        out_s[i], out_g[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn huffman_fast_encode_matches_per_bit_oracle() {
+    prop_check("huffman-encode-differential", 32, gens::seed(), |&seed| {
+        let mut rng = Xoshiro256::new(seed);
+        let m = 1 + rng.next_below(10) as i32;
+        let n = 1 + rng.next_below(2000) as usize;
+        let q: Vec<i32> = (0..n)
+            .map(|_| rng.next_below((2 * m + 1) as u32) as i32 - m)
+            .collect();
+        let mut wf = BitWriter::new();
+        huffman::encode_signed(&q, m, &mut wf);
+        let mut wg = BitWriter::new();
+        huffman::encode_signed_generic(&q, m, &mut wg);
+        if wf.len_bits() != wg.len_bits() {
+            return Err(format!(
+                "m={m} n={n}: bit lengths differ ({} vs {})",
+                wf.len_bits(),
+                wg.len_bits()
+            ));
+        }
+        if wf.into_bytes() != wg.into_bytes() {
+            return Err(format!("m={m} n={n}: encoded bytes differ"));
+        }
+        Ok(())
+    });
+}

@@ -34,6 +34,9 @@ fn every_rule_fires_at_its_seeded_line() {
         [("panic-path", 5), ("panic-path", 6), ("panic-path", 6)]
     );
     assert_eq!(diags_of("alloc_in_decode_bad.rs"), [("alloc-in-decode", 5)]);
+    // `fill_*` chunk kernels are held to the same buffer-reuse contract,
+    // including in src/prng/ (the dither fill path)
+    assert_eq!(diags_of("alloc_in_fill_bad.rs"), [("alloc-in-decode", 6)]);
     assert_eq!(diags_of("naked_cast_bad.rs"), [("naked-cast", 5)]);
     assert_eq!(diags_of("unsafe_bad.rs"), [("unsafe-code", 4)]);
 }

@@ -1,0 +1,8 @@
+// ndq-lint: as(src/prng/fixture.rs)
+// seeded alloc-in-decode violation: a `fill_*` chunk kernel that allocates
+// (the dither/symbol fill loops must reuse caller-owned buffers)
+
+pub fn fill_lanes(out: &mut [u32]) {
+    let lanes: Vec<u32> = (0..out.len() as u32).collect();
+    out.copy_from_slice(&lanes);
+}

@@ -13,7 +13,13 @@
 # bench-append checks are mandatory in every mode.
 
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+# Anchor every path to the repo root so the gate works from any cwd (CI
+# invokes it from a subdirectory on purpose). `git -C` is pinned to the
+# script's own directory — the *caller's* cwd may be a different repo.
+if ! ROOT="$(git -C "$(dirname "$0")" rev-parse --show-toplevel 2>/dev/null)"; then
+    ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+fi
+cd "$ROOT/rust"
 
 FAST=0
 [[ "${1:-}" == "--fast" ]] && FAST=1
@@ -94,14 +100,14 @@ count_lines() {
 # BENCH_train.json so the training-path perf trajectory accrues across PRs —
 # and the gate fails if the append produced no line.
 echo "== ndq cluster adaptive-levels smoke =="
-TRAIN_BEFORE="$(count_lines ../BENCH_train.json)"
+TRAIN_BEFORE="$(count_lines "$ROOT/BENCH_train.json")"
 GIT_REV="$(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
 NDQ_BENCH_REV="$GIT_REV" cargo run --release --quiet -- cluster \
     --workers 8 --rounds 30 --codec huffman \
     --scheme dqsg:0.333333 --scheme-p2 nested:0.333333:3:1.0 \
     --levels-policy "schedule:0=15,10=7,20=3" \
-    --bench-append ../BENCH_train.json
-TRAIN_AFTER="$(count_lines ../BENCH_train.json)"
+    --bench-append "$ROOT/BENCH_train.json"
+TRAIN_AFTER="$(count_lines "$ROOT/BENCH_train.json")"
 if [[ "$TRAIN_AFTER" -le "$TRAIN_BEFORE" ]]; then
     echo "adaptive smoke appended no JSON-line to BENCH_train.json" >&2
     exit 1
@@ -138,35 +144,39 @@ if [[ -z "$SERVE_FP" || "$SERVE_FP" != "$CLUSTER_FP" ]]; then
 fi
 rm -f "$SOCK" "$SOCK.serve.out" "$SOCK.cluster.out"
 
-# Wire-path bench smoke in quick mode: perf_coding always runs (no
-# artifacts needed); table2_entropy_bits self-skips when artifacts are
-# absent. Each run's results are appended to the repo-root BENCH_wire.json
-# as one JSON-lines record (the rows inside are stats::bench::to_json /
-# save_json output), so the perf trajectory accrues across PRs alongside
-# BENCH_train.json instead of dying with `target/`.
+# Wire-path bench smoke in quick mode: perf_coding and perf_quantizers
+# always run (no artifacts needed) — their generic-vs-specialized kernel
+# rows record the before/after decode throughput in the same JSON record;
+# table2_entropy_bits self-skips when artifacts are absent. Each run's
+# results are appended to the repo-root BENCH_wire.json as one JSON-lines
+# record (the rows inside are stats::bench::to_json / save_json output),
+# so the perf trajectory accrues across PRs alongside BENCH_train.json
+# instead of dying with `target/`.
 echo "== wire bench smoke (quick mode) =="
 # stale results from an earlier run must not be re-attributed to this
 # commit when a bench self-skips (e.g. table2 without artifacts)
-rm -f target/ndq-bench/perf_coding.json target/ndq-bench/table2.json
+rm -f target/ndq-bench/perf_coding.json target/ndq-bench/perf_quantizers.json \
+    target/ndq-bench/table2.json
 NDQ_BENCH_FAST=1 cargo bench --bench perf_coding
+NDQ_BENCH_FAST=1 cargo bench --bench perf_quantizers
 NDQ_BENCH_FAST=1 cargo bench --bench table2_entropy_bits
 BENCH_TS="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
 GIT_REV="$(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
-WIRE_BEFORE="$(count_lines ../BENCH_wire.json)"
-for f in perf_coding table2; do
+WIRE_BEFORE="$(count_lines "$ROOT/BENCH_wire.json")"
+for f in perf_coding perf_quantizers table2; do
     if [[ -f "target/ndq-bench/$f.json" ]]; then
         printf '{"ts":"%s","rev":"%s","bench":"%s","results":%s}\n' \
             "$BENCH_TS" "$GIT_REV" "$f" "$(cat "target/ndq-bench/$f.json")" \
-            >> ../BENCH_wire.json
+            >> "$ROOT/BENCH_wire.json"
         echo "appended $f to BENCH_wire.json"
-    elif [[ "$f" == "perf_coding" ]]; then
-        # perf_coding needs no artifacts and must always produce results;
-        # only table2 may self-skip (artifact-gated)
-        echo "perf_coding ran but wrote no target/ndq-bench/perf_coding.json" >&2
+    elif [[ "$f" != "table2" ]]; then
+        # perf_coding / perf_quantizers need no artifacts and must always
+        # produce results; only table2 may self-skip (artifact-gated)
+        echo "$f ran but wrote no target/ndq-bench/$f.json" >&2
         exit 1
     fi
 done
-WIRE_AFTER="$(count_lines ../BENCH_wire.json)"
+WIRE_AFTER="$(count_lines "$ROOT/BENCH_wire.json")"
 if [[ "$WIRE_AFTER" -le "$WIRE_BEFORE" ]]; then
     echo "wire bench smoke appended no JSON-line to BENCH_wire.json" >&2
     exit 1
