@@ -46,8 +46,10 @@ use crate::quant::{BitMetrics, PayloadCodec, Scheme};
 
 /// Envelope magic (`"NV"`), distinct from the wire-v3 payload magic `"NQ"`.
 pub const NET_MAGIC: [u8; 2] = *b"NV";
-/// Envelope protocol version carried in `Hello`.
-pub const NET_VERSION: u32 = 1;
+/// Envelope protocol version carried in `Hello`. v2 added the
+/// `error_feedback` flag to `Start` and the NUQSGD scheme tag to the
+/// round-broadcast spec encoding.
+pub const NET_VERSION: u32 = 2;
 /// Envelope header: magic(2) + kind(1) + body length(4).
 pub const NET_HEADER_BYTES: usize = 7;
 /// Parse-time cap on a claimed body length: large enough for a baseline
@@ -353,6 +355,11 @@ pub enum NetMsg {
         seed: u64,
         /// Per-worker gradient-noise std of the synthetic quadratic.
         noise: f32,
+        /// Run every uplink under error feedback: the peer owns an
+        /// [`crate::quant::EfState`] lane set that persists across spec
+        /// rebuilds, keeping loopback runs fingerprint-identical to the
+        /// in-process engine.
+        error_feedback: bool,
     },
     /// Per-round broadcast: the negotiated spec (the re-leveling dial) and
     /// the replicated parameters.
@@ -398,6 +405,7 @@ impl NetMsg {
                 rounds,
                 seed,
                 noise,
+                error_feedback,
             } => {
                 put_u32(&mut out, *assigned_id);
                 put_u32(&mut out, *workers);
@@ -405,6 +413,7 @@ impl NetMsg {
                 put_u64(&mut out, *rounds);
                 put_u64(&mut out, *seed);
                 put_f32(&mut out, *noise);
+                out.push(u8::from(*error_feedback));
             }
             NetMsg::Round { round, spec, params } => {
                 put_u64(&mut out, *round);
@@ -460,6 +469,11 @@ impl NetMsg {
                 rounds: c.u64()?,
                 seed: c.u64()?,
                 noise: c.f32()?,
+                error_feedback: match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    v => anyhow::bail!("bad error-feedback flag {v}"),
+                },
             },
             KIND_ROUND => {
                 let round = c.u64()?;
@@ -533,6 +547,7 @@ const SCHEME_QSGD: u8 = 3;
 const SCHEME_TERNGRAD: u8 = 4;
 const SCHEME_ONEBIT: u8 = 5;
 const SCHEME_NESTED: u8 = 6;
+const SCHEME_NUQSGD: u8 = 7;
 
 // ndq-lint: allow(naked-cast) encoder side of the bit-exact scheme roundtrip: get_scheme re-checks every field with try_from on decode
 fn put_scheme(out: &mut Vec<u8>, s: &Scheme) {
@@ -559,6 +574,10 @@ fn put_scheme(out: &mut Vec<u8>, s: &Scheme) {
             put_u32(out, ratio);
             put_f32(out, alpha);
         }
+        Scheme::Nuqsgd { m } => {
+            out.push(SCHEME_NUQSGD);
+            put_u32(out, m as u32);
+        }
     }
 }
 
@@ -578,6 +597,7 @@ fn get_scheme(c: &mut Cur) -> crate::Result<Scheme> {
             ratio: c.u32()?,
             alpha: c.f32()?,
         },
+        SCHEME_NUQSGD => Scheme::Nuqsgd { m: i32::try_from(c.u32()?)? },
         other => anyhow::bail!("unknown scheme tag {other} in round broadcast"),
     })
 }
@@ -718,6 +738,7 @@ mod tests {
                 rounds: 30,
                 seed: 0xDEAD_BEEF_0042,
                 noise: 0.05,
+                error_feedback: true,
             },
             NetMsg::Round {
                 round: 17,
@@ -856,6 +877,7 @@ mod tests {
             Scheme::Terngrad,
             Scheme::OneBit,
             Scheme::Nested { d1: 1.0 / 7.0, ratio: 5, alpha: 0.9 },
+            Scheme::Nuqsgd { m: 7 },
         ];
         for s in schemes {
             for p2 in [None, Some(Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 })] {

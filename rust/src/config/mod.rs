@@ -71,6 +71,12 @@ pub struct TrainConfig {
     /// Wire-v3 index-lane codec for every uplink message (`raw` ships
     /// base-k packed lanes; `huffman`/`aac` ship entropy-coded lanes).
     pub codec: PayloadCodec,
+    /// Per-worker error-feedback lanes ([`crate::quant::EfState`]): feed
+    /// `v = g + residual` into every encode and carry the un-transmitted
+    /// error into the next round. Requires a scheme whose encode-time
+    /// reconstruction is self-contained
+    /// ([`Scheme::supports_error_feedback`]); validated at setup.
+    pub error_feedback: bool,
     /// Per-round quantization-level controller (`fixed` keeps the
     /// configured scheme every round — the historical behaviour;
     /// `schedule:R=K,…` / `norm-adaptive:KMIN:KMAX` re-level the round's
@@ -105,6 +111,7 @@ impl Default for TrainConfig {
             quantize_broadcast: false,
             tensor_frames: 1,
             codec: PayloadCodec::Raw,
+            error_feedback: false,
             levels_policy: LevelPolicy::Fixed,
             fault_plan: None,
             round_policy: RoundPolicy::WaitAll,
@@ -185,6 +192,7 @@ impl TrainConfig {
                     anyhow::ensure!(self.tensor_frames >= 1, "tensor_frames must be >= 1");
                 }
                 "codec" => self.codec = PayloadCodec::parse(v)?,
+                "error_feedback" => self.error_feedback = v.parse()?,
                 "levels_policy" => self.levels_policy = LevelPolicy::parse(v)?,
                 "fault_plan" => {
                     self.fault_plan = if v == "none" {
@@ -260,6 +268,18 @@ mod tests {
         c.apply_kv(&kv).unwrap();
         assert_eq!(c.codec, PayloadCodec::Huffman);
         kv.insert("codec".to_string(), "gzip".to_string());
+        assert!(c.apply_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn error_feedback_key() {
+        let mut c = TrainConfig::default();
+        assert!(!c.error_feedback);
+        let mut kv = BTreeMap::new();
+        kv.insert("error_feedback".to_string(), "true".to_string());
+        c.apply_kv(&kv).unwrap();
+        assert!(c.error_feedback);
+        kv.insert("error_feedback".to_string(), "maybe".to_string());
         assert!(c.apply_kv(&kv).is_err());
     }
 

@@ -111,8 +111,8 @@ pub const RULES: &[Rule] = &[
     Rule {
         name: "alloc-in-decode",
         summary: "no Vec::new/vec!/to_vec/collect/with_capacity inside `*_into` decode \
-                  functions or `fill_*` chunk kernels — the buffer-reuse contract decodes \
-                  into caller-owned scratch",
+                  functions, `fill_*` chunk kernels or `*_ef` encode lanes — the \
+                  buffer-reuse contract runs both hot paths on caller-owned scratch",
         scope: Scope::Modules(&["src/comm/", "src/quant/", "src/coding/", "src/prng/"]),
         check: check_alloc_in_decode,
     },
@@ -284,8 +284,12 @@ fn check_alloc_in_decode(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
     let t = ctx.toks;
     for f in ctx.fns {
         // `*_into` decoders reuse caller buffers; `fill_*` chunk kernels
-        // (symbol unpackers, dither fills) sit inside those hot loops
-        if !(f.name.ends_with("_into") || f.name.starts_with("fill_")) {
+        // (symbol unpackers, dither fills) sit inside those hot loops; and
+        // `*_ef` encode lanes (per-round error-feedback carries) run every
+        // round on every worker, so they share the same contract — pooled
+        // scratch may resize/clear/push, but never construct fresh buffers
+        if !(f.name.ends_with("_into") || f.name.starts_with("fill_") || f.name.ends_with("_ef"))
+        {
             continue;
         }
         for i in f.open_idx..f.end_idx.min(t.len()) {
@@ -308,8 +312,9 @@ fn check_alloc_in_decode(ctx: &FileCtx, out: &mut Vec<RawDiag>) {
                 out.push(RawDiag {
                     line: t[i].line,
                     msg: format!(
-                        "heap allocation in `{}` — `*_into` decoders run on the \
-                         allocation-free hot path and must reuse caller-owned buffers",
+                        "heap allocation in `{}` — `*_into` decoders and `*_ef` encode \
+                         lanes run on the allocation-free hot path and must reuse \
+                         caller-owned buffers",
                         f.name
                     ),
                 });
@@ -402,6 +407,23 @@ mod tests {
         }
         // the enum-dispatch wrapper `fill` is not itself a kernel body
         assert!(!DECODE_FN_MARKERS.iter().any(|m| "fill".contains(m)));
+    }
+
+    #[test]
+    fn ef_encode_lanes_are_alloc_checked() {
+        // the EF extension: `*_ef` functions share the `*_into` buffer-reuse
+        // contract, while same-shaped functions without the suffix do not
+        let src = "// ndq-lint: as(src/quant/x.rs)\n\
+                   fn carry_ef(out: &mut [f32]) {\n\
+                       let t: Vec<f32> = out.iter().copied().collect();\n\
+                       out.copy_from_slice(&t);\n\
+                   }\n\
+                   fn carry(out: &[f32]) -> Vec<f32> {\n\
+                       out.to_vec()\n\
+                   }\n";
+        let d = crate::lint::lint_source("tests/x.rs", src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!((d[0].rule, d[0].line), ("alloc-in-decode", 3));
     }
 
     #[test]

@@ -72,7 +72,7 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
     let args = Args::new("ndq train", "run distributed training with quantized gradients")
         .opt("model", "fc300", "model: fc300|lenet|cifarnet|transformer_tiny")
         .opt("workers", "4", "number of workers P")
-        .opt("scheme", "dqsg:1.0", "quantizer: baseline|dqsg:D|dqsg:D:partK|qsgd:M|terngrad|onebit|nested:D1:k:a")
+        .opt("scheme", "dqsg:1.0", "quantizer: baseline|dqsg:D|dqsg:D:partK|qsgd:M|nuqsgd:M|terngrad|onebit|nested:D1:k:a")
         .opt("scheme-p2", "none", "scheme for the second worker half (NDQSG runs)")
         .opt("rounds", "200", "training rounds")
         .opt("total-batch", "256", "total batch split across workers")
@@ -92,6 +92,7 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
         .opt("link", "gigabit", "simulated link: gigabit|10g|LAT_S:BW_BPS")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("report", "", "write the JSON report to this path")
+        .flag("ef", "error feedback: carry each worker's quantization residual into its next encode")
         .flag("quiet", "suppress per-eval logging")
         .parse_from(argv)?;
 
@@ -123,6 +124,7 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
     cfg.round_policy = RoundPolicy::parse(&args.get("round-policy"))?;
     cfg.link = LinkModel::parse(&args.get("link"))?;
     cfg.artifacts_dir = args.get("artifacts");
+    cfg.error_feedback = args.get_flag("ef");
 
     let mut trainer = ndq::train::Trainer::new(cfg)?;
     trainer.verbose = !args.get_flag("quiet");
@@ -191,6 +193,7 @@ fn cluster_opts(args: Args) -> Args {
             "",
             "append one JSON-line perf record (rounds/sec, kbits/round, final loss) to this file",
         )
+        .flag("ef", "error feedback: carry each worker's quantization residual into its next encode")
 }
 
 fn scenario_from_args(args: &Args) -> ndq::Result<ClusterScenario> {
@@ -212,6 +215,7 @@ fn scenario_from_args(args: &Args) -> ndq::Result<ClusterScenario> {
         link: LinkModel::parse(&args.get("link"))?,
         codec: PayloadCodec::parse(&args.get("codec"))?,
         levels_policy: LevelPolicy::parse(&args.get("levels-policy"))?,
+        error_feedback: args.get_flag("ef"),
         lr: args.get_f32("lr")?,
         ..ClusterScenario::default()
     })
@@ -440,6 +444,7 @@ fn cmd_quantize(argv: Vec<String>) -> ndq::Result<()> {
         Scheme::Dithered { delta: 1.0 },
         Scheme::Dithered { delta: 0.5 },
         Scheme::Qsgd { m: 1 },
+        Scheme::Nuqsgd { m: 2 },
         Scheme::Terngrad,
         Scheme::OneBit,
         Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },

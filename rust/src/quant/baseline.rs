@@ -1,6 +1,6 @@
 //! Baseline: unquantized f32 gradients (32 bits/coordinate on the wire).
 
-use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use super::{EfScratch, Frame, FrameSink, GradQuantizer, SchemeId};
 use crate::coding::BitReader;
 use crate::prng::DitherGen;
 
@@ -27,6 +27,23 @@ impl GradQuantizer for BaselineQuantizer {
             sink.put_raw_f32(v);
         }
         (0, 0)
+    }
+
+    fn encode_frame_ef(
+        &mut self,
+        v: &[f32],
+        _dither: &mut DitherGen,
+        sink: &mut FrameSink,
+        _scratch: &mut EfScratch,
+        recon: &mut [f32],
+    ) -> crate::Result<(i32, usize)> {
+        // lossless wire: the reconstruction is the input, so the EF lane
+        // stays identically zero
+        for (&vi, r) in v.iter().zip(recon.iter_mut()) {
+            sink.put_raw_f32(vi);
+            *r = vi;
+        }
+        Ok((0, 0))
     }
 
     fn decode_frame_into(

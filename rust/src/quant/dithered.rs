@@ -12,7 +12,7 @@
 //! By Thm. 1 the error (g - g~)/kappa is U[-Delta/2, Delta/2], independent
 //! of g — the property the convergence analysis (Thm. 4/5) rests on.
 
-use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use super::{EfScratch, Frame, FrameSink, GradQuantizer, SchemeId};
 use crate::coding::{pack, BitReader, KernelMode, KernelPlan, SymbolSource, DECODE_CHUNK};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
@@ -112,6 +112,26 @@ impl GradQuantizer for DitheredQuantizer {
         sink.put_scales(&[kappa]);
         sink.put_indices(&indices, self.m);
         (self.m, 1)
+    }
+
+    fn encode_frame_ef(
+        &mut self,
+        v: &[f32],
+        dither: &mut DitherGen,
+        sink: &mut FrameSink,
+        scratch: &mut EfScratch,
+        recon: &mut [f32],
+    ) -> crate::Result<(i32, usize)> {
+        scratch.idx.clear();
+        let kappa = self.quantize_into(v, dither, &mut scratch.u, &mut scratch.idx);
+        sink.put_scales(&[kappa]);
+        sink.put_indices(&scratch.idx, self.m);
+        // the decoder regenerates the same dither and subtracts it, so the
+        // encode-time reconstruction must too: kappa * (Delta q - u)
+        for ((r, &q), &ui) in recon.iter_mut().zip(scratch.idx.iter()).zip(scratch.u.iter()) {
+            *r = kappa * (self.delta * q as f32 - ui);
+        }
+        Ok((self.m, 1))
     }
 
     fn decode_frame_into(

@@ -1,0 +1,376 @@
+//! Error-feedback lanes: the crate's single residual implementation.
+//!
+//! 1-bit SGD (Seide et al. [1]) used to bury its residual inside
+//! `quant/onebit.rs`, which made it the only stateful quantizer and blocked
+//! error feedback for every other scheme. [`EfState`] lifts that state out:
+//! the *worker* owns one residual lane per frame position, feeds
+//! `v = g + residual` into any self-contained scheme's encode, and updates
+//! the lane from the encode-time reconstruction the scheme reports
+//! ([`crate::quant::GradQuantizer::encode_frame_ef`]). The decode side is
+//! untouched — an EF-encoded message is byte-compatible with the plain wire
+//! format of its scheme, so `Session`/`SchemeRegistry` need no new code
+//! path and no wire version bump.
+//!
+//! # Lane semantics
+//!
+//! * Lane `i` belongs to frame position `i` of the worker's message; tensor
+//!   order must stay stable across rounds (it does: layer order is fixed).
+//! * A lane whose frame *length* changes is reset to zero — the residual is
+//!   coordinate-wise and a re-layout invalidates the correspondence. When
+//!   the frame *count* shrinks, trailing lanes are dropped (re-growing
+//!   later starts those positions from zero rather than replaying a stale
+//!   residual — the bug the old one-bit cursor had).
+//! * Residuals are kept in **gradient units**, so the state survives
+//!   `Scheme::with_levels` re-parameterization and `Session::apply_spec`
+//!   re-keying unchanged: every scheme re-normalizes per frame at encode
+//!   time, which makes the identity carry the exact re-leveling rescale
+//!   rule (see README "Error feedback & nonuniform levels").
+//! * Buffers are pooled: after the first round at a given layout, an EF
+//!   encode performs no heap allocation (`apply_ef` and the per-scheme
+//!   `*_ef` encoders are covered by the `alloc-in-decode` lint rule).
+//!
+//! Telescoping invariant (pinned by tests here and in
+//! `tests/error_feedback.rs`): per lane, the sum of transmitted
+//! reconstructions plus the final residual equals the sum of the raw
+//! gradient inputs — un-transmitted error is carried, never dropped.
+
+use super::{FrameSink, GradQuantizer, MetricsAcc, PayloadCodec, WireMsg, WireMsgBuilder};
+use crate::coding::BitWriter;
+use crate::prng::DitherGen;
+
+/// Caller-pooled scratch the per-scheme `encode_frame_ef` implementations
+/// borrow instead of allocating: dither draws, the signed index stream, and
+/// per-partition scales. Owned by [`EfState`] so the pools live exactly as
+/// long as the lanes do.
+#[derive(Debug, Clone, Default)]
+pub struct EfScratch {
+    /// Dither / uniform draws for the frame being encoded.
+    pub(crate) u: Vec<f32>,
+    /// Signed quantization indices for the frame being encoded.
+    pub(crate) idx: Vec<i32>,
+    /// Per-partition scale factors (partitioned DQSG).
+    pub(crate) scales: Vec<f32>,
+}
+
+/// Update one residual lane in place: `lane = v - recon`, where `v` was the
+/// error-compensated encoder input and `recon` is the encode-time
+/// reconstruction the scheme reported. Allocation-free by contract (the
+/// `alloc-in-decode` lint rule covers `*_ef` functions in this module
+/// tree).
+pub fn apply_ef(v: &[f32], recon: &[f32], lane: &mut [f32]) {
+    debug_assert_eq!(v.len(), recon.len());
+    debug_assert_eq!(v.len(), lane.len());
+    for ((l, &vi), &ri) in lane.iter_mut().zip(v).zip(recon) {
+        *l = vi - ri;
+    }
+}
+
+/// Per-worker error-feedback state: one residual lane per frame position,
+/// plus the pooled scratch every EF encode reuses. Lives *outside* the
+/// quantizer, so `RoundSpec` changes that rebuild the `Box<dyn
+/// GradQuantizer>` (re-leveling, codec renegotiation) carry the lanes
+/// across untouched.
+#[derive(Debug, Clone, Default)]
+pub struct EfState {
+    lanes: Vec<Vec<f32>>,
+    v: Vec<f32>,
+    recon: Vec<f32>,
+    scratch: EfScratch,
+}
+
+impl EfState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The residual lanes, one per frame position (for tests and
+    /// diagnostics of the telescoping invariant).
+    pub fn lanes(&self) -> &[Vec<f32>] {
+        &self.lanes
+    }
+
+    /// Lane 0's residual — the common single-tensor case.
+    pub fn residual(&self) -> &[f32] {
+        self.lanes.first().map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// EF-wrapped analogue of
+    /// [`GradQuantizer::encode_tensors_coded`]: for each tensor `i`, feed
+    /// `v = g + lane[i]` into the scheme's EF frame encoder, ship the
+    /// frame, and carry `lane[i] = v - reconstruction` into the next
+    /// round. Frames bill in [`super::BitMetrics`] exactly like the plain
+    /// path — the ledger cannot tell EF messages apart (by design: same
+    /// wire format).
+    ///
+    /// Errors only for schemes whose encode-time reconstruction is
+    /// undefined (NDQSG needs decoder side info); round drivers reject
+    /// those at setup via [`super::Scheme::supports_error_feedback`].
+    pub fn encode_tensors(
+        &mut self,
+        q: &mut dyn GradQuantizer,
+        tensors: &[&[f32]],
+        dither: &mut DitherGen,
+        codec: PayloadCodec,
+    ) -> crate::Result<WireMsg> {
+        q.begin_message();
+        // frame count shrank: drop trailing lanes so a later re-growth
+        // starts from zero instead of a stale residual
+        self.lanes.truncate(tensors.len());
+        let mut b = WireMsgBuilder::with_codec(q.id(), codec);
+        let mut acc = MetricsAcc::default();
+        let mut transmitted = 0u64;
+        for (i, g) in tensors.iter().enumerate() {
+            if self.lanes.len() <= i {
+                self.lanes.push(vec![0f32; g.len()]);
+            }
+            let lane = &mut self.lanes[i];
+            if lane.len() != g.len() {
+                // layout change at this position: the coordinate-wise
+                // correspondence is gone — reset the lane
+                lane.clear();
+                lane.resize(g.len(), 0.0);
+            }
+            self.v.clear();
+            self.v.extend(g.iter().zip(lane.iter()).map(|(&gi, &ri)| gi + ri));
+            self.recon.resize(g.len(), 0.0);
+            let recon = &mut self.recon[..g.len()];
+            let mut w = BitWriter::new();
+            let mut sink = FrameSink {
+                w: &mut w,
+                codec,
+                acc: &mut acc,
+            };
+            let (m, n_scales) =
+                q.encode_frame_ef(&self.v, dither, &mut sink, &mut self.scratch, recon)?;
+            apply_ef(&self.v, recon, lane);
+            transmitted += w.len_bits() as u64;
+            b.push_frame(g.len(), m, n_scales, w);
+        }
+        Ok(b.finish_with_metrics(Some(acc.finish(codec, transmitted))))
+    }
+
+    /// Single-tensor convenience over [`EfState::encode_tensors`].
+    pub fn encode_coded(
+        &mut self,
+        q: &mut dyn GradQuantizer,
+        g: &[f32],
+        dither: &mut DitherGen,
+        codec: PayloadCodec,
+    ) -> crate::Result<WireMsg> {
+        self.encode_tensors(q, &[g], dither, codec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{DitherStream, Xoshiro256};
+    use crate::quant::{frame_slices, Scheme};
+
+    /// Run `rounds` EF rounds of `scheme` over fresh gradients sliced into
+    /// `frames` tensors, checking the telescoping invariant at the end:
+    /// per coordinate, sum(recon) + final residual == sum(inputs).
+    fn assert_telescopes(scheme: Scheme, frames: usize, rounds: u64, seed: u64) {
+        let mut rng = Xoshiro256::new(seed);
+        let n = 300;
+        let mut q = scheme.build();
+        let mut ef = EfState::new();
+        let stream = DitherStream::new(0, 0);
+        let mut total_in = vec![0f64; n];
+        let mut total_out = vec![0f64; n];
+        for round in 0..rounds {
+            let g: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let slices = frame_slices(&g, frames);
+            let msg = ef
+                .encode_tensors(q.as_mut(), &slices, &mut stream.round(round), PayloadCodec::Raw)
+                .unwrap();
+            assert_eq!(msg.frames().len(), frames);
+            let recon = q.decode(&msg, &mut stream.round(round), None).unwrap();
+            for i in 0..n {
+                total_in[i] += g[i] as f64;
+                total_out[i] += recon[i] as f64;
+            }
+        }
+        let flat: Vec<f32> = ef.lanes().iter().flatten().copied().collect();
+        assert_eq!(flat.len(), n);
+        for i in 0..n {
+            let telescoped = total_out[i] + flat[i] as f64;
+            assert!(
+                (telescoped - total_in[i]).abs() < 1e-3,
+                "{scheme:?} telescoping broken at {i}: {telescoped} vs {}",
+                total_in[i]
+            );
+        }
+    }
+
+    #[test]
+    fn error_feedback_telescopes_for_onebit() {
+        // the historical onebit.rs invariant, now carried by the shared lane
+        assert_telescopes(Scheme::OneBit, 1, 30, 7);
+    }
+
+    #[test]
+    fn per_frame_residual_lanes_telescope_independently() {
+        // multi-tensor messages: each frame's error feedback telescopes
+        // over rounds without cross-talk between lanes
+        assert_telescopes(Scheme::OneBit, 3, 20, 9);
+    }
+
+    #[test]
+    fn every_self_contained_scheme_telescopes() {
+        for scheme in [
+            Scheme::Baseline,
+            Scheme::Dithered { delta: 0.5 },
+            Scheme::DitheredPartitioned { delta: 0.5, k: 4 },
+            Scheme::Qsgd { m: 2 },
+            Scheme::Terngrad,
+            Scheme::Nuqsgd { m: 2 },
+        ] {
+            assert_telescopes(scheme, 2, 12, 11);
+        }
+    }
+
+    #[test]
+    fn baseline_under_ef_is_exact() {
+        // f32 frames reconstruct exactly, so the residual stays zero
+        let mut q = Scheme::Baseline.build();
+        let mut ef = EfState::new();
+        let stream = DitherStream::new(3, 0);
+        let g = vec![0.25f32, -1.5, 0.0, 3.0];
+        for round in 0..3 {
+            ef.encode_coded(q.as_mut(), &g, &mut stream.round(round), PayloadCodec::Raw)
+                .unwrap();
+        }
+        assert!(ef.residual().iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn ef_round_zero_matches_plain_encode() {
+        // with zero residual the EF path must produce the plain path's
+        // exact bytes — same quantization core, same dither draws
+        let mut rng = Xoshiro256::new(5);
+        let g: Vec<f32> = (0..257).map(|_| rng.next_normal()).collect();
+        let slices = frame_slices(&g, 3);
+        for scheme in [
+            Scheme::Baseline,
+            Scheme::Dithered { delta: 1.0 / 3.0 },
+            Scheme::DitheredPartitioned { delta: 0.5, k: 4 },
+            Scheme::Qsgd { m: 2 },
+            Scheme::Terngrad,
+            Scheme::OneBit,
+            Scheme::Nuqsgd { m: 2 },
+        ] {
+            for codec in [PayloadCodec::Raw, PayloadCodec::Huffman, PayloadCodec::Aac] {
+                let stream = DitherStream::new(11, 0);
+                let mut q1 = scheme.build();
+                let plain = q1.encode_tensors_coded(&slices, &mut stream.round(0), codec);
+                let mut q2 = scheme.build();
+                let mut ef = EfState::new();
+                let effed = ef
+                    .encode_tensors(q2.as_mut(), &slices, &mut stream.round(0), codec)
+                    .unwrap();
+                assert_eq!(
+                    plain.bytes(),
+                    effed.bytes(),
+                    "{scheme:?}/{codec:?}: EF round 0 diverged from the plain encoder"
+                );
+                assert_eq!(plain.carried_metrics(), effed.carried_metrics());
+            }
+        }
+    }
+
+    #[test]
+    fn nested_is_rejected() {
+        let scheme = Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 };
+        assert!(!scheme.supports_error_feedback());
+        let mut q = scheme.build();
+        let mut ef = EfState::new();
+        let stream = DitherStream::new(0, 0);
+        let err = ef
+            .encode_coded(q.as_mut(), &[0.5, -0.5], &mut stream.round(0), PayloadCodec::Raw)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("error feedback"), "{err}");
+    }
+
+    #[test]
+    fn layout_change_resets_only_the_affected_lanes() {
+        // regression for the old onebit cursor bug: shrink the frame count,
+        // then grow it back — the re-grown lane must start from zero, and a
+        // lane whose length changes must reset instead of misaligning
+        let mut q = Scheme::OneBit.build();
+        let mut ef = EfState::new();
+        let stream = DitherStream::new(2, 0);
+        let mut rng = Xoshiro256::new(13);
+        let g: Vec<f32> = (0..120).map(|_| rng.next_normal()).collect();
+
+        // rounds 0-1: three frames, residuals become nonzero
+        for round in 0..2 {
+            let slices = frame_slices(&g, 3);
+            ef.encode_tensors(q.as_mut(), &slices, &mut stream.round(round), PayloadCodec::Raw)
+                .unwrap();
+        }
+        assert_eq!(ef.lanes().len(), 3);
+        assert!(ef.lanes()[2].iter().any(|&r| r != 0.0));
+
+        // round 2: shrink to two frames — lane 2 must be dropped, and the
+        // two survivors re-layout (40 -> 60 coords) and therefore reset
+        let slices = frame_slices(&g, 2);
+        ef.encode_tensors(q.as_mut(), &slices, &mut stream.round(2), PayloadCodec::Raw)
+            .unwrap();
+        assert_eq!(ef.lanes().len(), 2);
+        assert_eq!(ef.lanes()[0].len(), 60);
+
+        // round 3: grow back to three frames — lane 2 starts from zero: its
+        // first round's residual must telescope against that round alone
+        let slices = frame_slices(&g, 3);
+        let msg = ef
+            .encode_tensors(q.as_mut(), &slices, &mut stream.round(3), PayloadCodec::Raw)
+            .unwrap();
+        let recon = q.decode(&msg, &mut stream.round(3), None).unwrap();
+        for i in 80..120 {
+            let telescoped = recon[i] as f64 + ef.lanes()[2][i - 80] as f64;
+            assert!(
+                (telescoped - g[i] as f64).abs() < 1e-3,
+                "re-grown lane carried stale state at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn lanes_survive_quantizer_rebuilds_across_releveling() {
+        // the tentpole contract: the EF lane lives outside the quantizer,
+        // so a RoundSpec re-leveling (new Box<dyn GradQuantizer>) carries
+        // the residual through unchanged — in gradient units, no rescale
+        let mut rng = Xoshiro256::new(17);
+        let n = 200;
+        let stream = DitherStream::new(4, 0);
+        let mut ef = EfState::new();
+        let mut total_in = vec![0f64; n];
+        let mut total_out = vec![0f64; n];
+        let plan = [3u32, 3, 7, 7, 5, 5];
+        let base = Scheme::Nuqsgd { m: 1 };
+        for (round, &k) in plan.iter().enumerate() {
+            let scheme = base.with_levels(k).unwrap();
+            let mut q = scheme.build(); // fresh quantizer every round
+            let g: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let msg = ef
+                .encode_coded(q.as_mut(), &g, &mut stream.round(round as u64), PayloadCodec::Raw)
+                .unwrap();
+            let recon = q
+                .decode(&msg, &mut stream.round(round as u64), None)
+                .unwrap();
+            for i in 0..n {
+                total_in[i] += g[i] as f64;
+                total_out[i] += recon[i] as f64;
+            }
+        }
+        for i in 0..n {
+            let telescoped = total_out[i] + ef.residual()[i] as f64;
+            assert!(
+                (telescoped - total_in[i]).abs() < 1e-3,
+                "telescoping across re-leveling broken at {i}"
+            );
+        }
+    }
+}

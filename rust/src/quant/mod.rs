@@ -9,8 +9,16 @@
 //! | partitioned DQSG | [`partition`] | eq. (4) trade-off (ours) |
 //! | NDQSG          | [`nested`]   | §3.2, Alg. 2 (ours) |
 //! | QSGD           | [`stochastic`] | [5], = half-dithered (Lemma 2) |
+//! | NUQSGD         | [`nuqsgd`]   | Ramezani-Kebrya et al., log levels |
 //! | TernGrad       | [`terngrad`] | [6] |
-//! | one-bit SGD    | [`onebit`]   | [1], with error feedback |
+//! | one-bit SGD    | [`onebit`]   | [1], sign quantization |
+//!
+//! Every scheme is a **stateless codec**: encode and decode are pure
+//! functions of (input, dither stream, config). Error feedback — the
+//! residual state 1-bit SGD historically carried inside its quantizer —
+//! lives in the worker-owned [`EfState`] lane ([`ef`]), which wraps any
+//! self-contained scheme's encode via [`GradQuantizer::encode_frame_ef`]
+//! without changing its wire format.
 //!
 //! # Wire format v3
 //!
@@ -95,7 +103,9 @@
 
 pub mod baseline;
 pub mod dithered;
+pub mod ef;
 pub mod nested;
+pub mod nuqsgd;
 pub mod onebit;
 pub mod partition;
 pub mod stochastic;
@@ -108,6 +118,7 @@ use crate::prng::DitherGen;
 
 pub use crate::coding::PayloadCodec;
 pub use crate::coding::{KernelMode, KernelPlan};
+pub use ef::{apply_ef, EfScratch, EfState};
 
 /// Wire magic: `"NQ"`.
 pub const WIRE_MAGIC: [u8; 2] = *b"NQ";
@@ -158,6 +169,7 @@ pub enum SchemeId {
     Terngrad = 4,
     OneBit = 5,
     Nested = 6,
+    Nuqsgd = 7,
 }
 
 impl SchemeId {
@@ -171,6 +183,7 @@ impl SchemeId {
             4 => SchemeId::Terngrad,
             5 => SchemeId::OneBit,
             6 => SchemeId::Nested,
+            7 => SchemeId::Nuqsgd,
             _ => anyhow::bail!("unknown scheme id {v} on the wire"),
         })
     }
@@ -776,6 +789,40 @@ pub trait GradQuantizer: Send {
     fn encode_frame(&mut self, g: &[f32], dither: &mut DitherGen, sink: &mut FrameSink)
         -> (i32, usize);
 
+    /// Error-feedback variant of [`Self::encode_frame`]: quantize `v` (the
+    /// gradient plus the worker's carried residual), write the frame
+    /// payload through the sink, and write the **encode-time
+    /// reconstruction** — exactly what the server will decode, down to the
+    /// f32 bit pattern — into `recon` (`recon.len() == v.len()`).
+    /// [`EfState::encode_tensors`] turns that into the lane update
+    /// `residual = v - recon`.
+    ///
+    /// Buffer-reuse contract (enforced by the `alloc-in-decode` lint rule,
+    /// which also covers `*_ef` functions): implementations perform no
+    /// heap allocation — index/dither scratch comes from the caller-pooled
+    /// [`EfScratch`], so a worker encoding thousands of EF rounds reuses
+    /// the same buffers throughout.
+    ///
+    /// The default rejects: a scheme whose reconstruction is undefined at
+    /// encode time (NDQSG needs the decoder's side information) cannot run
+    /// under error feedback. Round drivers reject such schemes at setup
+    /// via [`Scheme::supports_error_feedback`]; this error is the backstop.
+    fn encode_frame_ef(
+        &mut self,
+        v: &[f32],
+        dither: &mut DitherGen,
+        sink: &mut FrameSink,
+        scratch: &mut EfScratch,
+        recon: &mut [f32],
+    ) -> crate::Result<(i32, usize)> {
+        let _ = (v, dither, sink, scratch, recon);
+        anyhow::bail!(
+            "{} cannot run under error feedback: its encode-time reconstruction \
+             is undefined without decoder side information",
+            self.name()
+        )
+    }
+
     /// The decode primitive: parse + dequantize one frame from its payload
     /// bytes alone, writing the reconstruction into the caller-owned `out`
     /// slice (`out.len() == frame.n`, guaranteed by the trait wrappers).
@@ -818,8 +865,9 @@ pub trait GradQuantizer: Send {
     }
 
     /// Called once at the start of every message encode, before the first
-    /// `encode_frame` — stateful schemes (one-bit error feedback) reset
-    /// their per-message frame cursor here.
+    /// `encode_frame`. Schemes are stateless codecs today, so the default
+    /// no-op stands; the hook remains for encoders that need per-message
+    /// setup.
     fn begin_message(&mut self) {}
 
     /// Quantize + serialize a flat gradient as a single-frame raw-codec
@@ -992,9 +1040,13 @@ pub enum Scheme {
     DitheredPartitioned { delta: f32, k: usize },
     /// QSGD with M levels (eq. 1).
     Qsgd { m: i32 },
+    /// NUQSGD: M logarithmic levels `{0, 2^(1-M), …, 1/2, 1}` over an L2
+    /// scale (Ramezani-Kebrya et al.).
+    Nuqsgd { m: i32 },
     /// TernGrad with 2.5-sigma clipping.
     Terngrad,
-    /// 1-bit SGD with error feedback.
+    /// 1-bit SGD: sign quantization (combine with [`EfState`] for the
+    /// classical error-feedback variant).
     OneBit,
     /// NDQSG with nested pair (d1, d2 = ratio*d1) and shrinkage alpha.
     Nested { d1: f32, ratio: u32, alpha: f32 },
@@ -1022,6 +1074,9 @@ impl Scheme {
             Scheme::Qsgd { m } => {
                 Box::new(stochastic::QsgdQuantizer::new(m).with_kernel_mode(mode))
             }
+            Scheme::Nuqsgd { m } => {
+                Box::new(nuqsgd::NuqsgdQuantizer::new(m).with_kernel_mode(mode))
+            }
             Scheme::Terngrad => Box::new(terngrad::TerngradQuantizer::new().with_kernel_mode(mode)),
             Scheme::OneBit => Box::new(onebit::OneBitQuantizer::new()),
             Scheme::Nested { d1, ratio, alpha } => {
@@ -1048,6 +1103,7 @@ impl Scheme {
             Scheme::Dithered { .. } => SchemeId::Dithered,
             Scheme::DitheredPartitioned { .. } => SchemeId::DitheredPartitioned,
             Scheme::Qsgd { .. } => SchemeId::Qsgd,
+            Scheme::Nuqsgd { .. } => SchemeId::Nuqsgd,
             Scheme::Terngrad => SchemeId::Terngrad,
             Scheme::OneBit => SchemeId::OneBit,
             Scheme::Nested { .. } => SchemeId::Nested,
@@ -1057,6 +1113,14 @@ impl Scheme {
     /// Whether this scheme's decoder needs Alg.-2 side information.
     pub fn needs_side_info(&self) -> bool {
         matches!(self, Scheme::Nested { .. })
+    }
+
+    /// Whether this scheme can run under an error-feedback lane
+    /// ([`EfState`]): true for every self-contained scheme, false for
+    /// NDQSG, whose encode-time reconstruction is undefined without the
+    /// decoder's side information. Round drivers check this at setup.
+    pub fn supports_error_feedback(&self) -> bool {
+        !self.needs_side_info()
     }
 
     /// The index alphabet size `2m + 1` this scheme's frames carry
@@ -1070,6 +1134,7 @@ impl Scheme {
                 dithered::DitheredQuantizer::new(delta).alphabet()
             }
             Scheme::Qsgd { m } => stochastic::QsgdQuantizer::new(m).alphabet(),
+            Scheme::Nuqsgd { m } => nuqsgd::NuqsgdQuantizer::new(m).alphabet(),
             Scheme::Terngrad => 3,
             // NestedQuantizer::new asserts ratio odd >= 3, so the alphabet
             // is the ratio itself by construction
@@ -1099,7 +1164,8 @@ impl Scheme {
     ///
     /// * DQSG / partitioned DQSG: `M = (k-1)/2`, `Delta = 1/M` (the
     ///   partition count is preserved);
-    /// * QSGD: `M = (k-1)/2`;
+    /// * QSGD / NUQSGD: `M = (k-1)/2` (uniform vs logarithmic level set
+    ///   over the same `k`-symbol wire alphabet);
     /// * NDQSG: the nested ratio becomes `k` (fine step `d1` and shrinkage
     ///   `alpha` preserved) — `k` IS the wire alphabet for nested frames;
     /// * TernGrad: only `k == 3` is representable;
@@ -1132,6 +1198,7 @@ impl Scheme {
                 Scheme::DitheredPartitioned { delta: 1.0 / m, k: parts }
             }
             Scheme::Qsgd { .. } => Scheme::Qsgd { m: i32::try_from(half)? },
+            Scheme::Nuqsgd { .. } => Scheme::Nuqsgd { m: i32::try_from(half)? },
             Scheme::Nested { d1, alpha, .. } => Scheme::Nested { d1, ratio: k, alpha },
         };
         debug_assert_eq!(scheme.alphabet(), k);
@@ -1144,7 +1211,7 @@ impl Scheme {
     }
 
     /// Parse CLI syntax, e.g. `baseline`, `dqsg:0.5`, `dqsg:0.5:part8`,
-    /// `qsgd:2`, `terngrad`, `onebit`, `nested:0.3333:3:1.0`.
+    /// `qsgd:2`, `nuqsgd:2`, `terngrad`, `onebit`, `nested:0.3333:3:1.0`.
     pub fn parse(s: &str) -> crate::Result<Scheme> {
         let parts: Vec<&str> = s.split(':').collect();
         let bad = || anyhow::anyhow!("unknown scheme `{s}`");
@@ -1161,6 +1228,9 @@ impl Scheme {
             }
             "qsgd" => Ok(Scheme::Qsgd {
                 m: parts.get(1).unwrap_or(&"1").parse()?,
+            }),
+            "nuqsgd" => Ok(Scheme::Nuqsgd {
+                m: parts.get(1).unwrap_or(&"2").parse()?,
             }),
             "terngrad" => Ok(Scheme::Terngrad),
             "onebit" => Ok(Scheme::OneBit),
@@ -1180,6 +1250,7 @@ impl Scheme {
             Scheme::Dithered { delta } => format!("DQSGD(d={delta})"),
             Scheme::DitheredPartitioned { delta, k } => format!("DQSGD(d={delta},K={k})"),
             Scheme::Qsgd { m } => format!("QSGD(M={m})"),
+            Scheme::Nuqsgd { m } => format!("NUQSGD(M={m})"),
             Scheme::Terngrad => "TernGrad".into(),
             Scheme::OneBit => "One-Bit".into(),
             Scheme::Nested { d1, ratio, alpha } => {
@@ -1303,6 +1374,8 @@ mod tests {
         assert_eq!(Scheme::parse("qsgd:2").unwrap(), Scheme::Qsgd { m: 2 });
         assert_eq!(Scheme::parse("terngrad").unwrap(), Scheme::Terngrad);
         assert_eq!(Scheme::parse("onebit").unwrap(), Scheme::OneBit);
+        assert_eq!(Scheme::parse("nuqsgd:3").unwrap(), Scheme::Nuqsgd { m: 3 });
+        assert_eq!(Scheme::parse("nuqsgd").unwrap(), Scheme::Nuqsgd { m: 2 });
         assert!(matches!(
             Scheme::parse("nested:0.333333:3:1.0").unwrap(),
             Scheme::Nested { ratio: 3, .. }
@@ -1317,6 +1390,7 @@ mod tests {
                 Scheme::Dithered { delta: 1.0 },
                 Scheme::DitheredPartitioned { delta: 0.5, k: 4 },
                 Scheme::Qsgd { m: 1 },
+                Scheme::Nuqsgd { m: 1 },
                 Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
             ] {
                 let s = base.with_levels(k).unwrap();
@@ -1364,6 +1438,7 @@ mod tests {
             Scheme::Terngrad,
             Scheme::OneBit,
             Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            Scheme::Nuqsgd { m: 2 },
         ] {
             let q = s.build();
             assert!(!q.name().is_empty());
@@ -1383,6 +1458,8 @@ mod tests {
         assert_eq!(label(Scheme::Qsgd { m: 2 }), "specialized/k5");
         assert_eq!(label(Scheme::Dithered { delta: 1.0 / 3.0 }), "specialized/k7");
         assert_eq!(label(Scheme::Qsgd { m: 7 }), "specialized/k15");
+        assert_eq!(label(Scheme::Nuqsgd { m: 2 }), "specialized/k5");
+        assert_eq!(label(Scheme::Nuqsgd { m: 7 }), "specialized/k15");
         assert_eq!(
             label(Scheme::Nested { d1: 0.2, ratio: 9, alpha: 1.0 }),
             "specialized/k9"
@@ -1416,10 +1493,11 @@ mod tests {
             SchemeId::Terngrad,
             SchemeId::OneBit,
             SchemeId::Nested,
+            SchemeId::Nuqsgd,
         ] {
             assert_eq!(SchemeId::from_u8(id as u8).unwrap(), id);
         }
-        assert!(SchemeId::from_u8(7).is_err());
+        assert!(SchemeId::from_u8(8).is_err());
         assert!(SchemeId::from_u8(255).is_err());
     }
 
@@ -1598,6 +1676,7 @@ mod tests {
                 Scheme::DitheredPartitioned { delta: 0.5, k: 8 },
             ),
             (Scheme::Qsgd { m: 1 }, Scheme::Qsgd { m: 4 }),
+            (Scheme::Nuqsgd { m: 2 }, Scheme::Nuqsgd { m: 3 }),
             (
                 Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
                 Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 0.5 },
@@ -1632,6 +1711,7 @@ mod tests {
             Scheme::Terngrad,
             Scheme::OneBit,
             Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            Scheme::Nuqsgd { m: 2 },
         ]
     }
 
@@ -1646,6 +1726,10 @@ mod tests {
         assert!(wide.validate_codec(PayloadCodec::Huffman).is_ok());
         // 2 * 2047 + 1 = 4095 still fits
         assert!(Scheme::Qsgd { m: 2047 }.validate_codec(PayloadCodec::Aac).is_ok());
+        // the nonuniform grid shares QSGD's wire alphabet and its ceiling
+        assert!(Scheme::Nuqsgd { m: 4000 }.validate_codec(PayloadCodec::Aac).is_err());
+        assert!(Scheme::Nuqsgd { m: 2047 }.validate_codec(PayloadCodec::Aac).is_ok());
+        assert_eq!(Scheme::Nuqsgd { m: 3 }.alphabet(), 7);
         // schemes without an index lane are codec-agnostic
         assert!(Scheme::Baseline.validate_codec(PayloadCodec::Aac).is_ok());
         assert!(Scheme::OneBit.validate_codec(PayloadCodec::Aac).is_ok());
@@ -1833,6 +1917,7 @@ mod tests {
             Scheme::Terngrad,
             Scheme::OneBit,
             Scheme::Nested { d1: 1.0 / 3.0, ratio: 3, alpha: 1.0 },
+            Scheme::Nuqsgd { m: 2 },
         ] {
             let mut q = scheme.build();
             let stream = DitherStream::new(77, 4);

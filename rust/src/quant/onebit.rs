@@ -1,38 +1,28 @@
-//! 1-bit SGD (Seide et al. [1]): sign quantization with error feedback.
+//! 1-bit SGD (Seide et al. [1]): sign quantization.
 //!
-//! The worker quantizes v = g + residual to sign bits and transmits the two
-//! per-tensor conditional means (mean of positives / negatives); the
-//! residual v - reconstruction is carried into the next round, so the
-//! un-transmitted error telescopes rather than accumulating.  The near-
-//! incompressible sign stream (Tables 1-2: one-bit entropy ~ raw) is why
-//! DQSGD beats it 6x after entropy coding despite more raw bits.
+//! The encoder quantizes its input to sign bits and transmits the two
+//! per-tensor conditional means (mean of positives / negatives).  The
+//! near-incompressible sign stream (Tables 1-2: one-bit entropy ~ raw) is
+//! why DQSGD beats it 6x after entropy coding despite more raw bits.
 //!
-//! Error feedback is tracked *per frame position*: when a worker sends
-//! multi-tensor messages, each tensor keeps its own residual lane, indexed
-//! by its position in the message (tensor order must stay stable across
-//! rounds — it does: layer order is fixed).
+//! This codec is deliberately stateless: the error-feedback accumulation
+//! that makes biased sign quantization trainable lives in the worker-owned
+//! [`crate::quant::EfState`] lane, which feeds `v = g + residual` into
+//! [`GradQuantizer::encode_frame_ef`] and carries `v - reconstruction`
+//! into the next round.  Run one-bit without that lane and the quantization
+//! error accumulates instead of telescoping — exactly what the original
+//! paper's error feedback exists to prevent.
 
-use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use super::{EfScratch, Frame, FrameSink, GradQuantizer, SchemeId};
 use crate::coding::BitReader;
 use crate::prng::DitherGen;
 
 #[derive(Debug, Clone, Default)]
-pub struct OneBitQuantizer {
-    /// One residual lane per frame position.
-    residuals: Vec<Vec<f32>>,
-    /// Which lane the next `encode_frame` call uses.
-    cursor: usize,
-}
+pub struct OneBitQuantizer;
 
 impl OneBitQuantizer {
     pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Expose the first frame's residual for tests of the telescoping
-    /// invariant (single-tensor messages use only lane 0).
-    pub fn residual(&self) -> &[f32] {
-        self.residuals.first().map(|v| v.as_slice()).unwrap_or(&[])
+        Self
     }
 }
 
@@ -45,59 +35,53 @@ impl GradQuantizer for OneBitQuantizer {
         SchemeId::OneBit
     }
 
-    fn begin_message(&mut self) {
-        // reset the residual cursor so lane i always belongs to tensor i
-        self.cursor = 0;
-    }
-
     fn encode_frame(
         &mut self,
         g: &[f32],
-        _dither: &mut DitherGen,
+        dither: &mut DitherGen,
         sink: &mut FrameSink,
     ) -> (i32, usize) {
-        let lane = self.cursor;
-        self.cursor += 1;
-        if lane >= self.residuals.len() {
-            self.residuals.push(vec![0f32; g.len()]);
-        }
-        let residual = &mut self.residuals[lane];
-        if residual.len() != g.len() {
-            *residual = vec![0f32; g.len()];
-        }
+        let mut scratch = EfScratch::default();
+        let mut recon = vec![0f32; g.len()];
+        // the EF encoder is the single quantization implementation; it is
+        // infallible for this self-contained scheme
+        self.encode_frame_ef(g, dither, sink, &mut scratch, &mut recon)
+            .expect("one-bit EF encode is infallible")
+    }
 
+    fn encode_frame_ef(
+        &mut self,
+        v: &[f32],
+        _dither: &mut DitherGen,
+        sink: &mut FrameSink,
+        _scratch: &mut EfScratch,
+        recon: &mut [f32],
+    ) -> crate::Result<(i32, usize)> {
         let mut sum_pos = 0f64;
         let mut n_pos = 0u64;
         let mut sum_neg = 0f64;
         let mut n_neg = 0u64;
-        let v: Vec<f32> = g
-            .iter()
-            .zip(residual.iter())
-            .map(|(&gi, &ri)| {
-                let vi = gi + ri;
-                if vi >= 0.0 {
-                    sum_pos += vi as f64;
-                    n_pos += 1;
-                } else {
-                    sum_neg += vi as f64;
-                    n_neg += 1;
-                }
-                vi
-            })
-            .collect();
+        for &vi in v {
+            if vi >= 0.0 {
+                sum_pos += vi as f64;
+                n_pos += 1;
+            } else {
+                sum_neg += vi as f64;
+                n_neg += 1;
+            }
+        }
         let mean_pos = if n_pos > 0 { (sum_pos / n_pos as f64) as f32 } else { 0.0 };
         let mean_neg = if n_neg > 0 { (sum_neg / n_neg as f64) as f32 } else { 0.0 };
 
         sink.put_scales(&[mean_pos, mean_neg]);
         // the near-incompressible sign stream (Table 2) always ships raw,
         // whatever codec the message negotiated
-        for (i, &vi) in v.iter().enumerate() {
+        for (&vi, r) in v.iter().zip(recon.iter_mut()) {
             let bit = vi >= 0.0;
             sink.put_raw_bit(bit);
-            // error feedback: residual carries what the bit didn't
-            residual[i] = vi - if bit { mean_pos } else { mean_neg };
+            *r = if bit { mean_pos } else { mean_neg };
         }
-        (0, 2)
+        Ok((0, 2))
     }
 
     fn decode_frame_into(
@@ -134,7 +118,6 @@ impl GradQuantizer for OneBitQuantizer {
 mod tests {
     use super::*;
     use crate::prng::{DitherStream, Xoshiro256};
-    use crate::quant::frame_slices;
 
     #[test]
     fn roundtrip_and_bit_count() {
@@ -152,63 +135,16 @@ mod tests {
     }
 
     #[test]
-    fn error_feedback_telescopes() {
-        // sum of reconstructions + residual == sum of inputs exactly
-        let mut rng = Xoshiro256::new(7);
-        let n = 512;
+    fn stateless_codec_repeats_exactly() {
+        // without an EF lane the codec has no memory: encoding the same
+        // tensor twice yields byte-identical messages
+        let mut rng = Xoshiro256::new(3);
+        let g: Vec<f32> = (0..256).map(|_| rng.next_normal()).collect();
         let mut q = OneBitQuantizer::new();
         let stream = DitherStream::new(0, 0);
-        let mut total_in = vec![0f64; n];
-        let mut total_out = vec![0f64; n];
-        for round in 0..30 {
-            let g: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
-            let msg = q.encode(&g, &mut stream.round(round));
-            let recon = q.decode(&msg, &mut stream.round(round), None).unwrap();
-            for i in 0..n {
-                total_in[i] += g[i] as f64;
-                total_out[i] += recon[i] as f64;
-            }
-        }
-        for i in 0..n {
-            let telescoped = total_out[i] + q.residual()[i] as f64;
-            assert!(
-                (telescoped - total_in[i]).abs() < 1e-3,
-                "telescoping broken at {i}: {telescoped} vs {}",
-                total_in[i]
-            );
-        }
-    }
-
-    #[test]
-    fn per_frame_residual_lanes_telescope_independently() {
-        // multi-tensor messages: each frame's error feedback must telescope
-        // over rounds without cross-talk between lanes
-        let mut rng = Xoshiro256::new(9);
-        let n = 300;
-        let mut q = OneBitQuantizer::new();
-        let stream = DitherStream::new(0, 0);
-        let mut total_in = vec![0f64; n];
-        let mut total_out = vec![0f64; n];
-        for round in 0..20 {
-            let g: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
-            let slices = frame_slices(&g, 3);
-            let msg = q.encode_tensors(&slices, &mut stream.round(round));
-            assert_eq!(msg.frames().len(), 3);
-            let recon = q.decode(&msg, &mut stream.round(round), None).unwrap();
-            for i in 0..n {
-                total_in[i] += g[i] as f64;
-                total_out[i] += recon[i] as f64;
-            }
-        }
-        let flat_residual: Vec<f32> = q.residuals.iter().flatten().copied().collect();
-        assert_eq!(flat_residual.len(), n);
-        for i in 0..n {
-            let telescoped = total_out[i] + flat_residual[i] as f64;
-            assert!(
-                (telescoped - total_in[i]).abs() < 1e-3,
-                "lane telescoping broken at {i}"
-            );
-        }
+        let a = q.encode(&g, &mut stream.round(0));
+        let b = q.encode(&g, &mut stream.round(1));
+        assert_eq!(a.bytes(), b.bytes());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! partition count from the header instead of trusting out-of-band config.
 
 use super::dithered::DitheredQuantizer;
-use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use super::{EfScratch, Frame, FrameSink, GradQuantizer, SchemeId};
 use crate::coding::{pack, BitReader, KernelMode, SymbolSource, DECODE_CHUNK};
 use crate::prng::DitherGen;
 
@@ -89,6 +89,37 @@ impl GradQuantizer for PartitionedDithered {
         // entropy coders see the whole tensor's symbol statistics
         sink.put_indices(&indices, self.inner.m());
         (self.inner.m(), scales.len())
+    }
+
+    fn encode_frame_ef(
+        &mut self,
+        v: &[f32],
+        dither: &mut DitherGen,
+        sink: &mut FrameSink,
+        scratch: &mut EfScratch,
+        recon: &mut [f32],
+    ) -> crate::Result<(i32, usize)> {
+        scratch.idx.clear();
+        scratch.scales.clear();
+        let delta = self.inner.delta();
+        for (lo, hi) in self.bounds_iter(v.len()) {
+            let kappa = self
+                .inner
+                .quantize_into(&v[lo..hi], dither, &mut scratch.u, &mut scratch.idx);
+            scratch.scales.push(kappa);
+            // reconstruct this partition before the next quantize_into
+            // overwrites the dither buffer (scratch.u holds only [lo, hi))
+            for ((r, &q), &ui) in recon[lo..hi]
+                .iter_mut()
+                .zip(scratch.idx[lo..hi].iter())
+                .zip(scratch.u.iter())
+            {
+                *r = kappa * (delta * q as f32 - ui);
+            }
+        }
+        sink.put_scales(&scratch.scales);
+        sink.put_indices(&scratch.idx, self.inner.m());
+        Ok((self.inner.m(), scratch.scales.len()))
     }
 
     // ndq-lint: allow(panic-path) bounds_iter partitions exactly [0, frame.n) and the ensure! above pins out.len() == frame.n

@@ -9,7 +9,7 @@
 //! The variance penalty relative to DQSG (2x for uniform inputs, §2.1.1) is
 //! what the paper's Fig. 5 / Table 3 comparisons measure.
 
-use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use super::{EfScratch, Frame, FrameSink, GradQuantizer, SchemeId};
 use crate::coding::{pack, BitReader, KernelMode, KernelPlan, SymbolSource, DECODE_CHUNK};
 use crate::prng::DitherGen;
 use crate::tensor::linf_norm;
@@ -58,21 +58,40 @@ impl GradQuantizer for QsgdQuantizer {
         dither: &mut DitherGen,
         sink: &mut FrameSink,
     ) -> (i32, usize) {
-        let kappa = linf_norm(g);
+        let mut scratch = EfScratch::default();
+        let mut recon = vec![0f32; g.len()];
+        // the EF encoder is the single quantization implementation; it is
+        // infallible for this self-contained scheme
+        self.encode_frame_ef(g, dither, sink, &mut scratch, &mut recon)
+            .expect("qsgd EF encode is infallible")
+    }
+
+    fn encode_frame_ef(
+        &mut self,
+        v: &[f32],
+        dither: &mut DitherGen,
+        sink: &mut FrameSink,
+        scratch: &mut EfScratch,
+        recon: &mut [f32],
+    ) -> crate::Result<(i32, usize)> {
+        let kappa = linf_norm(v);
         let inv_kappa = 1.0 / kappa;
         let inv_delta = 1.0 / self.delta;
         let half = self.delta / 2.0;
         let m = self.m;
-        let mut u = vec![0f32; g.len()];
-        dither.fill_dither(half, &mut u);
-        let indices: Vec<i32> = g
-            .iter()
-            .zip(&u)
-            .map(|(&gi, &ui)| (((gi * inv_kappa + ui) * inv_delta).round() as i32).clamp(-m, m))
-            .collect();
+        scratch.u.resize(v.len(), 0.0);
+        dither.fill_dither(half, &mut scratch.u);
+        scratch.idx.clear();
+        scratch.idx.extend(v.iter().zip(scratch.u.iter()).map(
+            |(&gi, &ui)| (((gi * inv_kappa + ui) * inv_delta).round() as i32).clamp(-m, m),
+        ));
         sink.put_scales(&[kappa]);
-        sink.put_indices(&indices, self.m);
-        (self.m, 1)
+        sink.put_indices(&scratch.idx, self.m);
+        // half-dithered reconstruction: the dither is NOT subtracted
+        for (r, &q) in recon.iter_mut().zip(scratch.idx.iter()) {
+            *r = kappa * self.delta * q as f32;
+        }
+        Ok((self.m, 1))
     }
 
     fn decode_frame_into(

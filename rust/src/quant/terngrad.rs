@@ -3,7 +3,7 @@
 //! s = max |clip(x)|, reconstruction s * q. Clipping at c·sigma (c = 2.5,
 //! the paper's recommended layer-wise clipping factor).
 
-use super::{Frame, FrameSink, GradQuantizer, SchemeId};
+use super::{EfScratch, Frame, FrameSink, GradQuantizer, SchemeId};
 use crate::coding::{pack, BitReader, KernelMode, KernelPlan, SymbolSource, DECODE_CHUNK};
 use crate::prng::DitherGen;
 use crate::tensor::mean_var;
@@ -55,7 +55,23 @@ impl GradQuantizer for TerngradQuantizer {
         dither: &mut DitherGen,
         sink: &mut FrameSink,
     ) -> (i32, usize) {
-        let (_, var) = mean_var(g);
+        let mut scratch = EfScratch::default();
+        let mut recon = vec![0f32; g.len()];
+        // the EF encoder is the single quantization implementation; it is
+        // infallible for this self-contained scheme
+        self.encode_frame_ef(g, dither, sink, &mut scratch, &mut recon)
+            .expect("terngrad EF encode is infallible")
+    }
+
+    fn encode_frame_ef(
+        &mut self,
+        v: &[f32],
+        dither: &mut DitherGen,
+        sink: &mut FrameSink,
+        scratch: &mut EfScratch,
+        recon: &mut [f32],
+    ) -> crate::Result<(i32, usize)> {
+        let (_, var) = mean_var(v);
         let c = (self.clip_sigmas as f64 * var.sqrt()) as f32;
         let clip = |x: f32| {
             if c > 0.0 {
@@ -65,33 +81,34 @@ impl GradQuantizer for TerngradQuantizer {
             }
         };
         let mut s = 0f32;
-        for &x in g {
+        for &x in v {
             s = s.max(clip(x).abs());
         }
         // ndq-lint: allow(float-cmp) max-of-abs is exactly 0.0 iff every element is zero; guard, not a tolerance question
         if s == 0.0 {
             s = 1.0;
         }
-        let indices: Vec<i32> = g
-            .iter()
-            .map(|&x| {
-                let xc = clip(x);
-                let p = xc.abs() / s;
-                // worker-private randomness from the per-round stream
-                if dither.next_f32() < p {
-                    if xc >= 0.0 {
-                        1
-                    } else {
-                        -1
-                    }
+        scratch.idx.clear();
+        scratch.idx.extend(v.iter().map(|&x| {
+            let xc = clip(x);
+            let p = xc.abs() / s;
+            // worker-private randomness from the per-round stream
+            if dither.next_f32() < p {
+                if xc >= 0.0 {
+                    1
                 } else {
-                    0
+                    -1
                 }
-            })
-            .collect();
+            } else {
+                0
+            }
+        }));
         sink.put_scales(&[s]);
-        sink.put_indices(&indices, 1);
-        (1, 1)
+        sink.put_indices(&scratch.idx, 1);
+        for (r, &q) in recon.iter_mut().zip(scratch.idx.iter()) {
+            *r = s * q as f32;
+        }
+        Ok((1, 1))
     }
 
     fn decode_frame_into(

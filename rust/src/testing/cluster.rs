@@ -30,7 +30,7 @@ use crate::comm::{
 };
 use crate::prng::philox::splitmix64;
 use crate::prng::{DitherStream, Xoshiro256};
-use crate::quant::{BitMetrics, GradQuantizer, PayloadCodec, Scheme, WireMsg};
+use crate::quant::{BitMetrics, EfState, GradQuantizer, PayloadCodec, Scheme, WireMsg};
 use crate::sim::LinkModel;
 use crate::train::engine::{EventSource, LevelPolicy, RoundDriver, RoundFold};
 use crate::train::trainer::TrainReport;
@@ -54,6 +54,11 @@ pub struct ClusterScenario {
     pub codec: PayloadCodec,
     /// Per-round quantization-level controller (`fixed` = historical).
     pub levels_policy: LevelPolicy,
+    /// Error feedback: every worker owns an [`EfState`] lane set and feeds
+    /// `v = g + residual` into each encode. Rides to socket peers in the
+    /// `Start` envelope, so loopback runs stay fingerprint-identical to
+    /// the in-process engine.
+    pub error_feedback: bool,
     /// SGD step on the synthetic quadratic (contraction factor `1 - lr`).
     pub lr: f32,
     /// Per-worker gradient noise std, relative to the shared signal.
@@ -76,6 +81,7 @@ impl Default for ClusterScenario {
             link: LinkModel::gigabit(),
             codec: PayloadCodec::Raw,
             levels_policy: LevelPolicy::Fixed,
+            error_feedback: false,
             lr: 0.25,
             noise: 0.05,
             eval_every: 10,
@@ -100,12 +106,14 @@ impl ClusterScenario {
         } else {
             format!(" levels={}", self.levels_policy.label())
         };
+        let ef = if self.error_feedback { " ef=on" } else { "" };
         format!(
-            "cluster {} P={}{}{} policy={} faults={}",
+            "cluster {} P={}{}{}{} policy={} faults={}",
             scheme,
             self.workers,
             codec,
             levels,
+            ef,
             self.policy.label(),
             faults,
         )
@@ -175,6 +183,16 @@ impl ClusterHarness {
     pub fn new(sc: ClusterScenario) -> crate::Result<ClusterHarness> {
         anyhow::ensure!(sc.workers >= 1, "at least one worker");
         anyhow::ensure!(sc.n_params >= 1 && sc.rounds >= 1, "non-empty scenario");
+        if sc.error_feedback {
+            for s in [Some(sc.scheme), sc.scheme_p2].into_iter().flatten() {
+                anyhow::ensure!(
+                    s.supports_error_feedback(),
+                    "scheme {} cannot run under error feedback: its encode-time \
+                     reconstruction needs decoder side information",
+                    s.label()
+                );
+            }
+        }
         // validates codec negotiation for the base spec AND every spec the
         // level policy can emit — scenario errors surface at build time
         RoundDriver::new(
@@ -205,6 +223,11 @@ impl ClusterHarness {
         let mut encoders: Vec<(Box<dyn GradQuantizer>, DitherStream)> = (0..sc.workers)
             .map(|p| (schemes[p].build(), DitherStream::new(sc.seed, p as u32)))
             .collect();
+        // EF lanes live outside the encoders: the re-level path below
+        // rebuilds every boxed quantizer, the residuals carry through
+        let mut efs: Option<Vec<EfState>> = sc
+            .error_feedback
+            .then(|| (0..sc.workers).map(|_| EfState::new()).collect());
         let mut channel = FaultChannel::new(sc.plan.clone(), sc.seed, sc.workers, sc.link);
 
         let task = QuadTask::new(sc.seed, sc.n_params, sc.noise);
@@ -236,7 +259,15 @@ impl ClusterHarness {
                 }
                 task.grad_into(w, round as u64, &x, &mut grad);
                 let (q, stream) = &mut encoders[w];
-                let wire = q.encode_coded(&grad, &mut stream.round(round as u64), spec.codec);
+                let wire = match efs.as_mut() {
+                    Some(efs) => efs[w].encode_coded(
+                        q.as_mut(),
+                        &grad,
+                        &mut stream.round(round as u64),
+                        spec.codec,
+                    )?,
+                    None => q.encode_coded(&grad, &mut stream.round(round as u64), spec.codec),
+                };
                 events.extend(channel.feed(WorkerMsg::new(w, round as u64, loss_now, wire)));
             }
             let fold =
@@ -417,6 +448,7 @@ pub fn serve_listener(
             rounds: sc.rounds as u64,
             seed: sc.seed,
             noise: sc.noise,
+            error_feedback: sc.error_feedback,
         }
         .write_to(&mut stream)?;
         // the reader thread owns blocking reads from here on; the round
@@ -615,30 +647,36 @@ pub fn worker_connect(addr: &NetAddr, connect_timeout: Duration) -> crate::Resul
     }
     .write_to(&mut stream)?;
     let mut reader = FrameReader::new();
-    let (id, workers, n_params, seed, noise) = match reader.read_msg(&mut stream)? {
-        NetMsg::Start {
-            assigned_id,
-            workers,
-            n_params,
-            seed,
-            noise,
-            ..
-        } => (
-            assigned_id as usize,
-            workers as usize,
-            n_params as usize,
-            seed,
-            noise,
-        ),
-        other => anyhow::bail!("expected start, got message kind {}", other.kind()),
-    };
+    let (id, workers, n_params, seed, noise, error_feedback) =
+        match reader.read_msg(&mut stream)? {
+            NetMsg::Start {
+                assigned_id,
+                workers,
+                n_params,
+                seed,
+                noise,
+                error_feedback,
+                ..
+            } => (
+                assigned_id as usize,
+                workers as usize,
+                n_params as usize,
+                seed,
+                noise,
+                error_feedback,
+            ),
+            other => anyhow::bail!("expected start, got message kind {}", other.kind()),
+        };
 
     let task = QuadTask::new(seed, n_params, noise);
     let mut dither = DitherStream::new(seed, id as u32);
     let mut grad = vec![0f32; n_params];
     // rebuilt only when the broadcast spec changes — the same
-    // rebuild-on-change rule as the in-process encoders
+    // rebuild-on-change rule as the in-process encoders. The EF lanes (if
+    // the leader asked for them) live outside that rebuild, exactly like
+    // the in-process engine's, so re-leveled rounds carry the residual.
     let mut current: Option<(RoundSpec, Box<dyn GradQuantizer>)> = None;
+    let mut ef = error_feedback.then(EfState::new);
     let mut served = 0u64;
     loop {
         match reader.read_msg(&mut stream)? {
@@ -664,7 +702,12 @@ pub fn worker_connect(addr: &NetAddr, connect_timeout: Duration) -> crate::Resul
                 let (_, q) = current.as_mut().expect("spec installed above");
                 let loss = task.eval(&params);
                 task.grad_into(id, round, &params, &mut grad);
-                let wire = q.encode_coded(&grad, &mut dither.round(round), spec.codec);
+                let wire = match ef.as_mut() {
+                    Some(ef) => {
+                        ef.encode_coded(q.as_mut(), &grad, &mut dither.round(round), spec.codec)?
+                    }
+                    None => q.encode_coded(&grad, &mut dither.round(round), spec.codec),
+                };
                 let msg = WorkerMsg::new(id, round, loss, wire);
                 NetMsg::Grad {
                     worker: id as u32,

@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use crate::comm::{Fault, FaultPlan, RoundPolicy, RoundSpec, Session};
 use crate::config::TrainConfig;
-use crate::quant::WireMsg;
+use crate::quant::{EfState, WireMsg};
 use crate::data::{Batch, ImageDataset, ImageKind};
 use crate::opt;
 use crate::prng::DitherStream;
@@ -132,6 +132,11 @@ impl AsyncTrainer {
         // of the shared-seed streams (Alg. 1's two-sided seed table)
         let mut quantizers: Vec<Box<dyn GradQuantizer>> =
             (0..cfg.workers).map(|_| cfg.scheme.build()).collect();
+        // EF lanes live outside the quantizers (gradient units), so the
+        // re-plan path below can rebuild every encoder without touching them
+        let mut efs: Option<Vec<EfState>> = cfg
+            .error_feedback
+            .then(|| (0..cfg.workers).map(|_| EfState::new()).collect());
         let streams: Vec<DitherStream> = (0..cfg.workers)
             .map(|p| DitherStream::new(cfg.seed, p as u32))
             .collect();
@@ -265,8 +270,16 @@ impl AsyncTrainer {
             // encode -> wire -> decode with the wstep-keyed dither; the
             // session records the bits, regenerates the dither from its own
             // seed copy, and hands back its reused decode buffer
-            let msg = quantizers[ev.worker]
-                .encode_coded(&grad, &mut streams[ev.worker].round(ev.wstep), spec.codec);
+            let msg = match efs.as_mut() {
+                Some(efs) => efs[ev.worker].encode_coded(
+                    quantizers[ev.worker].as_mut(),
+                    &grad,
+                    &mut streams[ev.worker].round(ev.wstep),
+                    spec.codec,
+                )?,
+                None => quantizers[ev.worker]
+                    .encode_coded(&grad, &mut streams[ev.worker].round(ev.wstep), spec.codec),
+            };
 
             // apply the fault plan to the uplink (keyed worker × wstep)
             match plan.as_ref().and_then(|p| p.fault_for(seed, ev.worker, ev.wstep)) {
@@ -352,6 +365,9 @@ impl AsyncTrainer {
         );
         if !cfg.levels_policy.is_fixed() {
             label.push_str(&format!(" levels={}", cfg.levels_policy.label()));
+        }
+        if cfg.error_feedback {
+            label.push_str(" ef=on");
         }
         let report = driver.into_report(
             label,

@@ -22,7 +22,7 @@
 
 use crate::comm::{FaultChannel, FaultPlan, RoundPolicy, Session, WorkerMsg};
 use crate::prng::DitherStream;
-use crate::quant::{GradQuantizer, PayloadCodec, Scheme};
+use crate::quant::{EfState, GradQuantizer, PayloadCodec, Scheme};
 use crate::sim::LinkModel;
 use crate::tensor;
 use crate::train::engine::{run_exchange, EventSource, LevelPolicy, NormAnchor};
@@ -99,6 +99,12 @@ pub struct HierarchyAggregator {
     /// Optional leaf-tier fault injection (one channel per group; fault
     /// decisions key on the worker's *local* index within its group).
     leaf_faults: Option<LeafFaults>,
+    /// Error-feedback lanes per uplink encoder (leaf workers + group
+    /// leaders), present after
+    /// [`HierarchyAggregator::with_error_feedback`]. Residuals are held in
+    /// gradient units, so [`HierarchyAggregator::apply_levels`] rebuilds
+    /// every boxed quantizer around them without touching a lane.
+    efs: Option<HierarchyEf>,
     /// Wire-v3 index-lane codec both tiers encode under.
     codec: PayloadCodec,
     /// Per-round quantization-level controller applied to *both* tiers
@@ -115,6 +121,13 @@ pub struct HierarchyAggregator {
 struct LeafFaults {
     channels: Vec<FaultChannel>,
     policy: RoundPolicy,
+}
+
+struct HierarchyEf {
+    /// One lane set per global leaf worker.
+    leaf: Vec<EfState>,
+    /// One lane set per group leader's uplink.
+    root: Vec<EfState>,
 }
 
 impl HierarchyAggregator {
@@ -166,6 +179,7 @@ impl HierarchyAggregator {
             root_encoders,
             flat_encoders,
             leaf_faults: None,
+            efs: None,
             codec: PayloadCodec::Raw,
             levels: LevelPolicy::Fixed,
             current_k: None,
@@ -247,6 +261,36 @@ impl HierarchyAggregator {
         }
         self.current_k = k;
         Ok(())
+    }
+
+    /// Run every uplink (leaf workers *and* group leaders) under error
+    /// feedback: each encoder gets its own [`EfState`] lane set, fed
+    /// `v = g + residual` and updated from the encode-time reconstruction.
+    /// Lanes survive [`LevelPolicy`] re-leveling — `apply_levels` rebuilds
+    /// the boxed quantizers, the residuals carry through in gradient units.
+    ///
+    /// Rejected when any tier scheme needs decoder side information (the
+    /// paper-default NDQSG tiers): NDQSG's encode-time reconstruction is
+    /// undefined without the group's running average.
+    pub fn with_error_feedback(mut self) -> crate::Result<Self> {
+        for s in [
+            self.h.leaf_dqsg,
+            self.h.leaf_nested,
+            self.h.root_dqsg,
+            self.h.root_nested,
+        ] {
+            anyhow::ensure!(
+                s.supports_error_feedback(),
+                "hierarchy tier scheme {} cannot run under error feedback: its \
+                 encode-time reconstruction needs decoder side information",
+                s.label()
+            );
+        }
+        self.efs = Some(HierarchyEf {
+            leaf: (0..self.h.workers()).map(|_| EfState::new()).collect(),
+            root: (0..self.h.groups).map(|_| EfState::new()).collect(),
+        });
+        Ok(self)
     }
 
     /// Ship both tiers' index lanes under `codec` (default raw). The
@@ -336,7 +380,15 @@ impl HierarchyAggregator {
             for (w, grad) in group.iter().enumerate() {
                 let global = g * self.h.per_group + w;
                 let (q, stream) = &mut self.leaf_encoders[global];
-                let wire = q.encode_coded(grad, &mut stream.round(round), self.codec);
+                let wire = match self.efs.as_mut() {
+                    Some(ef) => ef.leaf[global].encode_coded(
+                        q.as_mut(),
+                        grad,
+                        &mut stream.round(round),
+                        self.codec,
+                    )?,
+                    None => q.encode_coded(grad, &mut stream.round(round), self.codec),
+                };
                 // flat comparison is a hypothetical deployment: it never
                 // crosses a session, so it is tallied by hand here — under
                 // the SAME codec, so hierarchy-vs-flat compares like with
@@ -398,7 +450,15 @@ impl HierarchyAggregator {
         for (g, gavg) in group_avgs.iter().enumerate() {
             let Some(gavg) = gavg else { continue };
             let (q, stream) = &mut self.root_encoders[g];
-            let wire = q.encode_coded(gavg, &mut stream.round(round), self.codec);
+            let wire = match self.efs.as_mut() {
+                Some(ef) => ef.root[g].encode_coded(
+                    q.as_mut(),
+                    gavg,
+                    &mut stream.round(round),
+                    self.codec,
+                )?,
+                None => q.encode_coded(gavg, &mut stream.round(round), self.codec),
+            };
             agg.push(WorkerMsg::new(g, round, 0.0, wire))?;
         }
         let root_avg = agg
@@ -579,6 +639,49 @@ mod tests {
             .unwrap()
             .with_codec(PayloadCodec::Aac)
             .is_err());
+    }
+
+    #[test]
+    fn error_feedback_runs_both_tiers_and_rejects_nested() {
+        // the paper-default topology has NDQSG tiers -> EF is a setup error
+        let err = HierarchyAggregator::new(&Hierarchy::paper_default(2, 2), 0, 100)
+            .unwrap()
+            .with_error_feedback()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("error feedback"), "{err}");
+
+        // an all-self-contained topology runs EF at every uplink, and the
+        // lanes survive a mid-run re-leveling (fresh boxed quantizers)
+        let h = Hierarchy {
+            groups: 2,
+            per_group: 3,
+            leaf_dqsg: Scheme::Nuqsgd { m: 4 },
+            leaf_nested: Scheme::Nuqsgd { m: 4 },
+            root_dqsg: Scheme::Dithered { delta: 1.0 / 3.0 },
+            root_nested: Scheme::Dithered { delta: 1.0 / 3.0 },
+        };
+        let grads = correlated_grads(2, 3, 3000, 21);
+        let mut agg = HierarchyAggregator::new(&h, 8, 3000)
+            .unwrap()
+            .with_level_policy(LevelPolicy::parse("schedule:0=9,2=5").unwrap())
+            .unwrap()
+            .with_error_feedback()
+            .unwrap();
+        let want = true_mean(&grads);
+        // NUQSGD's L2-normalized scale is coarse on 3000-dim frames, so the
+        // per-round bounds are loose — this pins the plumbing (EF at every
+        // uplink across a re-leveling), not the estimator variance
+        for (round, bound) in [(0u64, 0.5), (1, 0.5), (2, 1.0), (3, 1.0)] {
+            let r = agg.round(&grads, round).unwrap();
+            let rmse = (tensor::sq_dist(&r.average, &want) / want.len() as f64).sqrt();
+            assert!(rmse < bound, "round {round}: rmse {rmse} (bound {bound})");
+        }
+        // the residual lanes exist and carried quantization error
+        let ef = agg.efs.as_ref().unwrap();
+        assert_eq!(ef.leaf.len(), 6);
+        assert_eq!(ef.root.len(), 2);
+        assert!(ef.leaf[0].residual().iter().any(|&r| r != 0.0));
     }
 
     #[test]

@@ -280,6 +280,16 @@ impl Trainer {
         // setup path can never disagree.
         let base = cfg.base_spec();
         base.validate()?;
+        if cfg.error_feedback {
+            for s in [Some(cfg.scheme), cfg.scheme_p2].into_iter().flatten() {
+                anyhow::ensure!(
+                    s.supports_error_feedback(),
+                    "scheme {} cannot run under error feedback: its encode-time \
+                     reconstruction needs decoder side information",
+                    s.label()
+                );
+            }
+        }
         let schemes = base.worker_schemes(cfg.workers);
 
         Ok(Self {
@@ -319,6 +329,9 @@ impl Trainer {
         }
         if !self.cfg.levels_policy.is_fixed() {
             label.push_str(&format!(" levels={}", self.cfg.levels_policy.label()));
+        }
+        if self.cfg.error_feedback {
+            label.push_str(" ef=on");
         }
         if self.cfg.fault_plan.is_some() {
             label.push_str(" faults=on");
@@ -389,6 +402,7 @@ impl Trainer {
                         run_seed: cfg.seed,
                         tensor_frames: cfg.tensor_frames,
                         codec: cfg.codec,
+                        error_feedback: cfg.error_feedback,
                         task: self.task.clone(),
                     },
                     self.compute.clone(),

@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use crate::data::{Batch, ImageDataset, TokenDataset};
 use crate::prng::DitherStream;
-use crate::quant::{GradQuantizer, PayloadCodec, Scheme};
+use crate::quant::{EfState, GradQuantizer, PayloadCodec, Scheme};
 use crate::runtime::ComputeHandle;
 
 // The message type lives with the rest of the exchange machinery in
@@ -58,6 +58,10 @@ pub struct WorkerCfg {
     /// Wire-v3 index-lane codec at setup; each round's actual codec rides
     /// in the round command's [`RoundSpec`].
     pub codec: PayloadCodec,
+    /// Error feedback: own an [`EfState`] lane set and feed
+    /// `v = g + residual` into every encode. The trainer validates scheme
+    /// support before spawning workers.
+    pub error_feedback: bool,
     pub task: TaskData,
 }
 
@@ -109,9 +113,12 @@ fn worker_loop(
     // encoder state for the currently-negotiated scheme; re-built only
     // when a round command carries a different spec (the per-round levels
     // dial). The dither stream is keyed (seed, worker) — scheme-free — so
-    // it survives every re-negotiation, as Alg. 1 requires.
+    // it survives every re-negotiation, as Alg. 1 requires. The EF lanes
+    // likewise live OUTSIDE the quantizer: residuals are kept in gradient
+    // units, so a re-leveled rebuild carries them through unchanged.
     let mut scheme = cfg.scheme;
     let mut quantizer = scheme.build();
+    let mut ef = cfg.error_feedback.then(EfState::new);
     let dither = DitherStream::new(cfg.run_seed, cfg.id as u32);
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
@@ -126,6 +133,7 @@ fn worker_loop(
                     &cfg,
                     &compute,
                     quantizer.as_mut(),
+                    ef.as_mut(),
                     &dither,
                     round,
                     &params,
@@ -148,6 +156,7 @@ fn run_round(
     cfg: &WorkerCfg,
     compute: &ComputeHandle,
     quantizer: &mut dyn GradQuantizer,
+    ef: Option<&mut EfState>,
     dither: &DitherStream,
     round: u64,
     params: &Arc<Vec<f32>>,
@@ -167,6 +176,9 @@ fn run_round(
         }
     };
     let slices = crate::quant::frame_slices(&grad, cfg.tensor_frames);
-    let wire = quantizer.encode_tensors_coded(&slices, &mut dither.round(round), codec);
+    let wire = match ef {
+        Some(ef) => ef.encode_tensors(quantizer, &slices, &mut dither.round(round), codec)?,
+        None => quantizer.encode_tensors_coded(&slices, &mut dither.round(round), codec),
+    };
     Ok(WorkerMsg::new(cfg.id, round, loss, wire))
 }

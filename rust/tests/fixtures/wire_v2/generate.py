@@ -449,6 +449,37 @@ def enc_nested(g, d1, ratio, alpha, codec=CODEC_RAW):
     return w, m, 1
 
 
+def enc_nuqsgd(g, m, codec=CODEC_RAW):
+    d = DitherGen()
+    # tensor::l2_norm: f64 left-to-right sum of squares, sqrt, cast to f32
+    acc = 0.0
+    for v in g:
+        fv = float(np.float32(v))
+        acc += fv * fv
+    kappa = np.float32(math.sqrt(acc))
+    inv_kappa = np.float32(1.0) / kappa if kappa > 0 else np.float32(0.0)
+    # levels[0] = 0, levels[j] = 2^(j - m): exact binary powers in f32
+    levels = [np.float32(0.0)] + [np.float32(2.0 ** (j - m)) for j in range(1, m + 1)]
+    u = d.fill_dither(np.float32(0.5), len(g))
+    idx = []
+    for gi, ui in zip(g, u):
+        u01 = np.float32(ui) + np.float32(0.5)
+        r = np.float32(abs(np.float32(gi))) * inv_kappa
+        j = 0
+        while j + 1 <= m and r >= levels[j + 1]:
+            j += 1
+        if j >= m:
+            q = m
+        else:
+            p = (r - levels[j]) / (levels[j + 1] - levels[j])
+            q = j + 1 if u01 < p else j
+        idx.append(-q if np.float32(gi) < 0 else q)
+    w = BitWriter()
+    w.push_f32(kappa)
+    write_indices_coded(w, codec, idx, m)
+    return w, m, 1
+
+
 # --- wire-v2 framing (src/quant/mod.rs) -------------------------------------
 
 def frame_message(scheme_id, frames, codec=CODEC_RAW):
@@ -485,10 +516,12 @@ def main():
     emit("terngrad", 4, enc_terngrad(G))
     emit("onebit", 5, enc_onebit(G))
     emit("nested", 6, enc_nested(G, 0.25, 3, 1.0))
+    emit("nuqsgd", 7, enc_nuqsgd(G, 2))
     # codec-byte variants: same gradient/dither, entropy-coded index lanes
     emit("dqsg_huffman", 1, enc_dithered(G, 1.0, 1, CODEC_HUFFMAN), CODEC_HUFFMAN)
     emit("dqsg_aac", 1, enc_dithered(G, 1.0, 1, CODEC_AAC), CODEC_AAC)
     emit("nested_aac", 6, enc_nested(G, 0.25, 3, 1.0, CODEC_AAC), CODEC_AAC)
+    emit("nuqsgd_huffman", 7, enc_nuqsgd(G, 2, CODEC_HUFFMAN), CODEC_HUFFMAN)
 
 
 if __name__ == "__main__":

@@ -23,7 +23,7 @@ const KS: [u32; 11] = [2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 21];
 
 /// Every index-lane scheme, chosen so each raw kernel family and the
 /// in-plan generic fallback all appear (see `kernel_plans_resolve_per_scheme`).
-const SCHEMES: [Scheme; 8] = [
+const SCHEMES: [Scheme; 10] = [
     Scheme::Dithered { delta: 1.0 },                  // k3
     Scheme::Terngrad,                                 // k3
     Scheme::Qsgd { m: 2 },                            // k5
@@ -32,6 +32,8 @@ const SCHEMES: [Scheme; 8] = [
     Scheme::Qsgd { m: 7 },                            // k15
     Scheme::DitheredPartitioned { delta: 1.0, k: 4 }, // k3 through partition bounds
     Scheme::Qsgd { m: 10 },                           // k21: generic fallback in-plan
+    Scheme::Nuqsgd { m: 2 },                          // k5, log level table
+    Scheme::Nuqsgd { m: 7 },                          // k15, log level table
 ];
 
 /// Drain `n` symbols through `mode`'s kernel in randomly sized chunks.

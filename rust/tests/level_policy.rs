@@ -58,6 +58,43 @@ fn same_seed_same_policy_bit_identical_fingerprint() {
 }
 
 #[test]
+fn error_feedback_runs_are_deterministic_across_releveling() {
+    // The EF lane extension of the determinism pin: residual carries are
+    // worker state *outside* the per-spec encoder rebuilds, so a schedule
+    // that re-levels mid-run must stay bit-identical across repeats with
+    // EF enabled — and the `ef=on` label is part of the fingerprint, so
+    // an EF run can never be mistaken for its EF-off twin.
+    let ef = |levels: LevelPolicy| ClusterScenario {
+        scheme_p2: None, // NDQSG needs side info and cannot run under EF
+        error_feedback: true,
+        ..scenario(levels)
+    };
+    let policy = LevelPolicy::parse("schedule:0=15,10=7,25=3").unwrap();
+    let a = run_scenario(ef(policy.clone())).unwrap();
+    let b = run_scenario(ef(policy.clone())).unwrap();
+    assert_eq!(
+        a.fingerprint(),
+        b.fingerprint(),
+        "same seed + policy + EF must be bit-identical"
+    );
+    assert_eq!(a.comm.per_spec, b.comm.per_spec);
+    assert_eq!(a.final_eval_loss.to_bits(), b.final_eval_loss.to_bits());
+    // three specs visited — the lanes survived two re-levelings en route
+    assert_eq!(a.comm.per_spec.len(), 3, "{:?}", a.comm.per_spec.keys());
+    // EF-off twin: same schedule, different label, different digest
+    let off = run_scenario(ClusterScenario {
+        error_feedback: false,
+        ..ef(policy.clone())
+    })
+    .unwrap();
+    assert!(a.config_label.contains("ef=on"), "{}", a.config_label);
+    assert!(!off.config_label.contains("ef=on"), "{}", off.config_label);
+    assert_ne!(a.fingerprint(), off.fingerprint());
+    // and the EF run still converges on the quadratic
+    assert!(a.final_eval_loss < 0.05, "{}", a.final_eval_loss);
+}
+
+#[test]
 fn adaptive_policies_transmit_strictly_less_than_largest_fixed_k() {
     // the largest k either adaptive run visits is 15; the fixed comparison
     // runs the whole training at that k

@@ -37,6 +37,8 @@ fn every_rule_fires_at_its_seeded_line() {
     // `fill_*` chunk kernels are held to the same buffer-reuse contract,
     // including in src/prng/ (the dither fill path)
     assert_eq!(diags_of("alloc_in_fill_bad.rs"), [("alloc-in-decode", 6)]);
+    // `*_ef` encode lanes (error-feedback carries) are on the same hot path
+    assert_eq!(diags_of("alloc_in_ef_bad.rs"), [("alloc-in-decode", 6)]);
     assert_eq!(diags_of("naked_cast_bad.rs"), [("naked-cast", 5)]);
     assert_eq!(diags_of("unsafe_bad.rs"), [("unsafe-code", 4)]);
 }

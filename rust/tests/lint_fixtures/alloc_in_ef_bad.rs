@@ -1,0 +1,8 @@
+// ndq-lint: as(src/quant/fixture.rs)
+// seeded alloc-in-decode violation: a `*_ef` encode lane that allocates
+// (error-feedback carries run every round and must reuse pooled scratch)
+
+pub fn update_ef(lane: &mut Vec<f32>, v: &[f32]) {
+    let fresh = vec![0f32; v.len()];
+    lane.copy_from_slice(&fresh);
+}

@@ -8,7 +8,9 @@
 
 use ndq::comm::{RoundSpec, Session, WorkerMsg};
 use ndq::prng::{DitherStream, Xoshiro256};
-use ndq::quant::{frame_slices, GradQuantizer, PayloadCodec, Scheme, SchemeId, SchemeRegistry};
+use ndq::quant::{
+    frame_slices, EfState, GradQuantizer, PayloadCodec, Scheme, SchemeId, SchemeRegistry,
+};
 
 // ---------------------------------------------------------------------------
 // Reference implementation: the pre-session batch decoder.
@@ -337,6 +339,87 @@ fn prop_mixed_spec_rounds_fold_bit_identically_and_ledger_stays_exact() {
     // raw-equivalent rate
     let coded = &stats.per_spec[&specs[2].label()];
     assert!(coded.transmitted_bits < coded.raw_bits);
+}
+
+#[test]
+fn prop_mixed_spec_rounds_fold_bit_identically_under_error_feedback() {
+    // The EF extension of the mixed-spec property: each worker owns one
+    // persistent `EfState` whose residual lanes survive every
+    // `apply_spec` re-leveling (identity carry, gradient units), and the
+    // session must still fold every EF-encoded round bit-identically to
+    // the verbatim reference under any arrival permutation. A shadow
+    // replica of the carry recurrence (`lane = (lane + g) - recon`,
+    // recon taken from an independent payload-bytes decode) pins the
+    // telescoping-sum invariant end to end, bit for bit.
+    let base = RoundSpec {
+        scheme: Scheme::Nuqsgd { m: 3 },
+        scheme_p2: None,
+        codec: PayloadCodec::Raw,
+    };
+    let workers = 4;
+    let n = 1100;
+    let specs: Vec<RoundSpec> = vec![
+        base.with_levels(7).unwrap(),
+        base.with_levels(15).unwrap(), // re-leveled mid-run: lanes carry over
+        RoundSpec { codec: PayloadCodec::Huffman, ..base.with_levels(5).unwrap() },
+        base.with_levels(7).unwrap(), // revisit the opening spec
+    ];
+    let mut session = Session::new(&base.worker_schemes(workers), 77, n).unwrap();
+    let mut rng = Xoshiro256::new(0xE55);
+    let mut efs: Vec<EfState> = (0..workers).map(|_| EfState::new()).collect();
+    let mut shadow = vec![vec![0f32; n]; workers];
+
+    for (round, spec) in specs.iter().enumerate() {
+        let round = round as u64;
+        session.apply_spec(spec).unwrap();
+        let schemes = spec.worker_schemes(workers);
+        let gs = correlated_grads(n, workers, 9000 + round);
+        let msgs: Vec<WorkerMsg> = gs
+            .iter()
+            .enumerate()
+            .map(|(p, g)| {
+                let mut q = schemes[p].build();
+                let stream = DitherStream::new(77, p as u32);
+                let wire = efs[p]
+                    .encode_coded(q.as_mut(), g, &mut stream.round(round), spec.codec)
+                    .unwrap();
+                WorkerMsg::new(p, round, 0.0, wire)
+            })
+            .collect();
+        let reference = RefServer::new(&schemes, 77, n).decode_round(&msgs).unwrap();
+        for _ in 0..6 {
+            let order = shuffled(msgs.len(), &mut rng);
+            assert_permutation_matches(&mut session, &msgs, &order, &reference);
+        }
+        // shadow carry: same f32 op order as the EF lane, recon re-derived
+        // from the transport bytes alone
+        let registry = SchemeRegistry::from_schemes(&schemes).unwrap();
+        for (p, msg) in msgs.iter().enumerate() {
+            let stream = DitherStream::new(77, p as u32);
+            let recon = registry
+                .decode(&msg.wire, &mut stream.round(round), None)
+                .unwrap();
+            for ((s, &gi), &ri) in shadow[p].iter_mut().zip(&gs[p]).zip(&recon) {
+                let v = *s + gi;
+                *s = v - ri;
+            }
+        }
+        for (p, ef) in efs.iter().enumerate() {
+            assert_eq!(
+                ef.residual(),
+                &shadow[p][..],
+                "worker {p}: EF lane diverged from the telescoping shadow after {}",
+                spec.label()
+            );
+        }
+    }
+    // the carry is genuinely alive: lossy quantization leaves residue
+    for (p, ef) in efs.iter().enumerate() {
+        assert!(
+            ef.residual().iter().any(|&r| r != 0.0),
+            "worker {p}: residual lane identically zero"
+        );
+    }
 }
 
 #[test]

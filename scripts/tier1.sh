@@ -113,6 +113,42 @@ if [[ "$TRAIN_AFTER" -le "$TRAIN_BEFORE" ]]; then
     exit 1
 fi
 
+# Nonuniform low-bit smoke: EF + NUQSGD (logarithmic level set, huffman
+# lanes, residual carried round to round) against the fixed-k DQSG
+# baseline at matched message count. Both runs append a JSON-line perf
+# record, so the accuracy-vs-bits trajectory in BENCH_train.json gets a
+# nonuniform data point next to the uniform one — and the gate fails if
+# the message counts diverge or the nonuniform run is not actually
+# cheaper on the wire per message.
+echo "== ndq cluster ef+nuqsgd low-bit smoke =="
+EF_BEFORE="$(count_lines "$ROOT/BENCH_train.json")"
+DQ_OUT="$(mktemp)"
+EF_OUT="$(mktemp)"
+NDQ_BENCH_REV="$GIT_REV" cargo run --release --quiet -- cluster \
+    --workers 4 --rounds 25 --scheme dqsg:0.25 \
+    --bench-append "$ROOT/BENCH_train.json" | tee "$DQ_OUT"
+NDQ_BENCH_REV="$GIT_REV" cargo run --release --quiet -- cluster \
+    --workers 4 --rounds 25 --scheme nuqsgd:7 --codec huffman --ef \
+    --bench-append "$ROOT/BENCH_train.json" | tee "$EF_OUT"
+DQ_MSGS="$(grep -o '[0-9]* messages folded' "$DQ_OUT")"
+EF_MSGS="$(grep -o '[0-9]* messages folded' "$EF_OUT")"
+if [[ -z "$EF_MSGS" || "$EF_MSGS" != "$DQ_MSGS" ]]; then
+    echo "ef+nuqsgd message count ($EF_MSGS) != dqsg baseline ($DQ_MSGS)" >&2
+    exit 1
+fi
+DQ_KBIT="$(sed -n 's/.*uplink: \([0-9.]*\) Kbit\/msg transmitted.*/\1/p' "$DQ_OUT")"
+EF_KBIT="$(sed -n 's/.*uplink: \([0-9.]*\) Kbit\/msg transmitted.*/\1/p' "$EF_OUT")"
+if ! awk -v ef="$EF_KBIT" -v dq="$DQ_KBIT" 'BEGIN { exit !(ef + 0 < dq + 0 && ef + 0 > 0) }'; then
+    echo "ef+nuqsgd ($EF_KBIT Kbit/msg) not under dqsg baseline ($DQ_KBIT Kbit/msg)" >&2
+    exit 1
+fi
+rm -f "$DQ_OUT" "$EF_OUT"
+EF_AFTER="$(count_lines "$ROOT/BENCH_train.json")"
+if (( EF_AFTER - EF_BEFORE < 2 )); then
+    echo "ef+nuqsgd smoke appended fewer than 2 JSON-lines to BENCH_train.json" >&2
+    exit 1
+fi
+
 # Socket-transport smoke: the same degraded NDQSG scenario, once through
 # `ndq cluster` (in-process) and once through `ndq serve` + N real `ndq
 # worker` processes over a Unix-domain socket. The two runs must print the
