@@ -1,0 +1,428 @@
+//! The leader -> worker **downlink lane**: how replicated parameters ship
+//! each round.
+//!
+//! The paper spends all its machinery on the uplink (workers quantize
+//! gradients), but the leader's broadcast is the other half of the round's
+//! traffic — historically billed flat at `32 * n_params` bits from two
+//! separate call sites that could (and did) drift. This module owns the
+//! policy, the encoding, and the billing in **one** place:
+//!
+//! * `full` — broadcast the raw f32 parameters (the paper's setting and
+//!   the historical default). Billed at `32 * n_params` payload bits.
+//! * `delta-raw` — broadcast the parameter *delta* since the previous
+//!   round as raw f32s. Same bill as `full` (a delta of equal width costs
+//!   the same), but it exercises the shadow-reconstruction contract the
+//!   quantized lane depends on.
+//! * `delta-quantized:<scheme>` — push the delta through the same
+//!   [`GradQuantizer`]/codec stack the uplink uses, on a dedicated dither
+//!   lane ([`DOWNLINK_DITHER_LANE`], disjoint from every worker's uplink
+//!   lane). Billed from the **encode-time [`BitMetrics`]**, never a
+//!   constant.
+//!
+//! Reconstruction contract: the leader decodes *its own wire bytes* to
+//! advance its shadow copy, exactly as every worker does — so leader and
+//! workers agree bit-for-bit on the worker-visible parameters, and the
+//! in-process [`crate::testing::ClusterHarness`] models the same shadow to
+//! stay fingerprint-identical to a socket run. Under the delta policies
+//! the worker-visible parameters deliberately differ from the leader's
+//! full-precision iterate by the quantization error of the delta; workers
+//! evaluate losses and gradients at the *reconstructed* point.
+
+use crate::comm::Session;
+use crate::prng::DitherStream;
+use crate::quant::{BitMetrics, GradQuantizer, PayloadCodec, Scheme, WireMsg};
+
+/// Dither-stream key of the downlink lane. Worker uplinks key their
+/// streams by worker id (`0..P`); `u32::MAX` can never collide with a
+/// worker id because worker counts are bounded far below it.
+pub const DOWNLINK_DITHER_LANE: u32 = u32::MAX;
+
+/// How the leader ships parameters each round. Grammar (config key
+/// `downlink`, CLI flag `--downlink`):
+/// `full | delta-raw | delta-quantized:<scheme>` — `<scheme>` uses the
+/// same grammar as the uplink `--scheme` flag (e.g.
+/// `delta-quantized:dqsg:0.333333`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum DownlinkPolicy {
+    #[default]
+    Full,
+    DeltaRaw,
+    DeltaQuantized(Scheme),
+}
+
+impl DownlinkPolicy {
+    /// Parse the policy grammar.
+    pub fn parse(s: &str) -> crate::Result<DownlinkPolicy> {
+        match s {
+            "full" => Ok(DownlinkPolicy::Full),
+            "delta-raw" => Ok(DownlinkPolicy::DeltaRaw),
+            _ => {
+                if let Some(spec) = s.strip_prefix("delta-quantized:") {
+                    Ok(DownlinkPolicy::DeltaQuantized(Scheme::parse(spec)?))
+                } else {
+                    anyhow::bail!(
+                        "unknown downlink policy `{s}` \
+                         (full | delta-raw | delta-quantized:<scheme>)"
+                    )
+                }
+            }
+        }
+    }
+
+    /// Human/ledger label; the inverse of the grammar up to scheme
+    /// formatting.
+    pub fn label(&self) -> String {
+        match self {
+            DownlinkPolicy::Full => "full".into(),
+            DownlinkPolicy::DeltaRaw => "delta-raw".into(),
+            DownlinkPolicy::DeltaQuantized(s) => {
+                format!("delta-quantized:{}", s.label())
+            }
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        matches!(self, DownlinkPolicy::Full)
+    }
+
+    /// Setup-time validation: a quantized downlink scheme must be
+    /// self-contained (the broadcast has no Alg.-2 side channel) and must
+    /// be expressible under the run's payload codec.
+    pub fn validate(&self, codec: PayloadCodec) -> crate::Result<()> {
+        if let DownlinkPolicy::DeltaQuantized(s) = self {
+            anyhow::ensure!(
+                !s.needs_side_info(),
+                "downlink scheme {} needs side information the broadcast \
+                 lane cannot carry",
+                s.label()
+            );
+            s.validate_codec(codec)?;
+        }
+        Ok(())
+    }
+}
+
+/// One round's downlink payload, borrowed from the encoder's scratch.
+#[derive(Debug)]
+pub enum DownlinkFrame<'a> {
+    /// Raw replicated parameters (`full`).
+    Full(&'a [f32]),
+    /// Raw parameter delta since the previous round (`delta-raw`).
+    DeltaRaw(&'a [f32]),
+    /// Quantized delta as framed wire bytes (`delta-quantized`).
+    Coded(&'a [u8]),
+}
+
+/// The leader half of the downlink lane: computes the per-round payload,
+/// advances the shared shadow copy by decoding its own bytes, and bills
+/// the session's broadcast ledger — the **single** billing site for
+/// downlink traffic.
+pub struct DownlinkEncoder {
+    policy: DownlinkPolicy,
+    codec: PayloadCodec,
+    quantizer: Option<Box<dyn GradQuantizer>>,
+    stream: DitherStream,
+    /// Worker-visible parameters: what every peer holds after applying
+    /// this round's frame. Equals the true iterate under `full`, the
+    /// reconstructed point under the delta policies.
+    shadow: Vec<f32>,
+    delta: Vec<f32>,
+    recon: Vec<f32>,
+    coded: Vec<u8>,
+}
+
+impl DownlinkEncoder {
+    pub fn new(
+        policy: DownlinkPolicy,
+        codec: PayloadCodec,
+        seed: u64,
+        n_params: usize,
+    ) -> crate::Result<DownlinkEncoder> {
+        policy.validate(codec)?;
+        let quantizer = match &policy {
+            DownlinkPolicy::DeltaQuantized(s) => Some(s.build()),
+            _ => None,
+        };
+        Ok(DownlinkEncoder {
+            policy,
+            codec,
+            quantizer,
+            stream: DitherStream::new(seed, DOWNLINK_DITHER_LANE),
+            shadow: vec![0.0; n_params],
+            delta: vec![0.0; n_params],
+            recon: vec![0.0; n_params],
+            coded: Vec::new(),
+        })
+    }
+
+    pub fn policy(&self) -> &DownlinkPolicy {
+        &self.policy
+    }
+
+    /// Advance one round: compute the payload for the current iterate
+    /// `x`, update the shadow to the worker-visible point, and bill the
+    /// broadcast ledger from what actually goes on the wire.
+    pub fn broadcast(
+        &mut self,
+        round: u64,
+        x: &[f32],
+        session: &mut Session,
+    ) -> crate::Result<DownlinkFrame<'_>> {
+        anyhow::ensure!(
+            x.len() == self.shadow.len(),
+            "downlink iterate holds {} params, lane was sized for {}",
+            x.len(),
+            self.shadow.len()
+        );
+        let raw_bits = 32.0 * x.len() as f64;
+        match self.policy {
+            DownlinkPolicy::Full => {
+                self.shadow.copy_from_slice(x);
+                session.record_broadcast_msg(raw_bits, raw_bits);
+                Ok(DownlinkFrame::Full(&self.shadow))
+            }
+            DownlinkPolicy::DeltaRaw => {
+                for ((d, &xi), s) in
+                    self.delta.iter_mut().zip(x).zip(self.shadow.iter_mut())
+                {
+                    *d = xi - *s;
+                    *s += *d;
+                }
+                session.record_broadcast_msg(raw_bits, raw_bits);
+                Ok(DownlinkFrame::DeltaRaw(&self.delta))
+            }
+            DownlinkPolicy::DeltaQuantized(_) => {
+                for (d, (&xi, &si)) in
+                    self.delta.iter_mut().zip(x.iter().zip(self.shadow.iter()))
+                {
+                    *d = xi - si;
+                }
+                let Some(q) = self.quantizer.as_mut() else {
+                    anyhow::bail!("quantized downlink policy lost its quantizer");
+                };
+                let wire =
+                    q.encode_coded(&self.delta, &mut self.stream.round(round), self.codec);
+                let metrics = BitMetrics::for_wire(&wire);
+                // decode our own bytes so the shadow advances exactly as
+                // every worker's will — encode-time reconstruction would
+                // be bit-identical here, but this path is pinned to the
+                // worker's actual decode
+                q.decode_into(
+                    &wire,
+                    &mut self.stream.round(round),
+                    None,
+                    &mut self.recon,
+                )?;
+                for (s, &r) in self.shadow.iter_mut().zip(self.recon.iter()) {
+                    *s += r;
+                }
+                session.record_broadcast_msg(metrics.transmitted_bits as f64, raw_bits);
+                self.coded = wire.into_bytes();
+                Ok(DownlinkFrame::Coded(&self.coded))
+            }
+        }
+    }
+
+    /// The worker-visible parameters after the last [`Self::broadcast`]:
+    /// where workers evaluate losses and gradients this round.
+    pub fn visible(&self) -> &[f32] {
+        &self.shadow
+    }
+}
+
+/// The worker half: holds the shadow copy and reconstructs the
+/// worker-visible parameters from each round's frame. Used by
+/// `ndq worker` peers; the in-process harness reads the leader encoder's
+/// [`DownlinkEncoder::visible`] instead (same values by construction).
+pub struct DownlinkReceiver {
+    policy: DownlinkPolicy,
+    quantizer: Option<Box<dyn GradQuantizer>>,
+    stream: DitherStream,
+    params: Vec<f32>,
+    recon: Vec<f32>,
+}
+
+impl DownlinkReceiver {
+    pub fn new(
+        policy: DownlinkPolicy,
+        seed: u64,
+        n_params: usize,
+    ) -> crate::Result<DownlinkReceiver> {
+        if let DownlinkPolicy::DeltaQuantized(s) = &policy {
+            anyhow::ensure!(
+                !s.needs_side_info(),
+                "downlink scheme {} needs side information the broadcast \
+                 lane cannot carry",
+                s.label()
+            );
+        }
+        let quantizer = match &policy {
+            DownlinkPolicy::DeltaQuantized(s) => Some(s.build()),
+            _ => None,
+        };
+        Ok(DownlinkReceiver {
+            policy,
+            quantizer,
+            stream: DitherStream::new(seed, DOWNLINK_DITHER_LANE),
+            params: vec![0.0; n_params],
+            recon: vec![0.0; n_params],
+        })
+    }
+
+    /// Apply a `full` broadcast.
+    pub fn apply_full(&mut self, params: &[f32]) -> crate::Result<()> {
+        anyhow::ensure!(
+            matches!(self.policy, DownlinkPolicy::Full),
+            "leader sent a full broadcast under the {} policy",
+            self.policy.label()
+        );
+        anyhow::ensure!(
+            params.len() == self.params.len(),
+            "broadcast carries {} params, lane was sized for {}",
+            params.len(),
+            self.params.len()
+        );
+        self.params.copy_from_slice(params);
+        Ok(())
+    }
+
+    /// Apply a `delta-raw` broadcast.
+    pub fn apply_raw_delta(&mut self, delta: &[f32]) -> crate::Result<()> {
+        anyhow::ensure!(
+            matches!(self.policy, DownlinkPolicy::DeltaRaw),
+            "leader sent a raw delta under the {} policy",
+            self.policy.label()
+        );
+        anyhow::ensure!(
+            delta.len() == self.params.len(),
+            "delta carries {} params, lane was sized for {}",
+            delta.len(),
+            self.params.len()
+        );
+        for (p, &d) in self.params.iter_mut().zip(delta) {
+            *p += d;
+        }
+        Ok(())
+    }
+
+    /// Apply a `delta-quantized` broadcast: parse + decode the wire bytes
+    /// on the shared downlink dither lane and advance the shadow.
+    pub fn apply_coded(&mut self, round: u64, bytes: &[u8]) -> crate::Result<()> {
+        let q = match (&self.policy, &self.quantizer) {
+            (DownlinkPolicy::DeltaQuantized(_), Some(q)) => q,
+            _ => anyhow::bail!(
+                "leader sent a coded delta under the {} policy",
+                self.policy.label()
+            ),
+        };
+        let wire = WireMsg::parse(bytes.to_vec())?;
+        anyhow::ensure!(
+            wire.n() == self.params.len(),
+            "coded delta carries {} params, lane was sized for {}",
+            wire.n(),
+            self.params.len()
+        );
+        q.decode_into(&wire, &mut self.stream.round(round), None, &mut self.recon)?;
+        for (p, &r) in self.params.iter_mut().zip(self.recon.iter()) {
+            *p += r;
+        }
+        Ok(())
+    }
+
+    /// The reconstructed worker-visible parameters.
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_grammar_roundtrips_and_rejects() {
+        assert_eq!(DownlinkPolicy::parse("full").unwrap(), DownlinkPolicy::Full);
+        assert_eq!(
+            DownlinkPolicy::parse("delta-raw").unwrap(),
+            DownlinkPolicy::DeltaRaw
+        );
+        assert_eq!(
+            DownlinkPolicy::parse("delta-quantized:dqsg:0.25").unwrap(),
+            DownlinkPolicy::DeltaQuantized(Scheme::Dithered { delta: 0.25 })
+        );
+        assert_eq!(
+            DownlinkPolicy::parse("delta-quantized:qsgd:4").unwrap(),
+            DownlinkPolicy::DeltaQuantized(Scheme::Qsgd { m: 4 })
+        );
+        for bad in ["", "delta", "delta-quantized", "delta-quantized:bogus", "fullest"] {
+            assert!(DownlinkPolicy::parse(bad).is_err(), "`{bad}` parsed");
+        }
+    }
+
+    #[test]
+    fn quantized_policy_rejects_side_info_schemes() {
+        let p = DownlinkPolicy::DeltaQuantized(Scheme::Nested {
+            d1: 1.0 / 3.0,
+            ratio: 3,
+            alpha: 1.0,
+        });
+        assert!(p.validate(PayloadCodec::Raw).is_err());
+        assert!(DownlinkReceiver::new(p, 1, 4).is_err());
+    }
+
+    #[test]
+    fn leader_shadow_matches_worker_reconstruction_bit_for_bit() {
+        // drive a few rounds of a drifting iterate through the encoder
+        // and an independent receiver; the two shadows must agree exactly
+        let n = 257;
+        let seed = 0xD0DA_2026;
+        for policy in [
+            DownlinkPolicy::Full,
+            DownlinkPolicy::DeltaRaw,
+            DownlinkPolicy::DeltaQuantized(Scheme::Dithered { delta: 1.0 / 3.0 }),
+            DownlinkPolicy::DeltaQuantized(Scheme::Qsgd { m: 4 }),
+        ] {
+            let schemes = vec![Scheme::Baseline; 2];
+            let mut session = Session::new(&schemes, seed, n).unwrap();
+            let mut enc =
+                DownlinkEncoder::new(policy, PayloadCodec::Huffman, seed, n).unwrap();
+            let mut rx = DownlinkReceiver::new(policy, seed, n).unwrap();
+            let mut x = vec![0.0f32; n];
+            for round in 0..5u64 {
+                for (i, xi) in x.iter_mut().enumerate() {
+                    *xi += ((i as f32) * 0.01 - 1.0) * 0.1 / (round as f32 + 1.0);
+                }
+                let frame = enc.broadcast(round, &x, &mut session).unwrap();
+                match frame {
+                    DownlinkFrame::Full(p) => rx.apply_full(p).unwrap(),
+                    DownlinkFrame::DeltaRaw(d) => rx.apply_raw_delta(d).unwrap(),
+                    DownlinkFrame::Coded(b) => rx.apply_coded(round, b).unwrap(),
+                }
+                assert_eq!(
+                    enc.visible(),
+                    rx.params(),
+                    "{}: shadow drift at round {round}",
+                    policy.label()
+                );
+                if policy.is_full() {
+                    assert_eq!(enc.visible(), &x[..]);
+                }
+            }
+            // the billing lane saw exactly one message per round
+            assert_eq!(session.stats().bcast_msgs, 5);
+            assert!(session.stats().total_bcast_bits > 0.0);
+            if let DownlinkPolicy::DeltaQuantized(_) = policy {
+                // quantized downlink must bill fewer bits than raw f32
+                assert!(
+                    session.stats().total_bcast_bits
+                        < session.stats().total_bcast_raw_bits
+                );
+            } else {
+                assert_eq!(
+                    session.stats().total_bcast_bits,
+                    session.stats().total_bcast_raw_bits
+                );
+            }
+        }
+    }
+}

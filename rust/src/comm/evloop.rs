@@ -1,0 +1,98 @@
+//! Readiness-style connection state for the leader's event loop: one
+//! [`PeerSlot`] per connected worker, combining a nonblocking
+//! [`NetStream`], an incremental [`FrameAccum`] reassembler (pooled read
+//! slab), and a buffered outbound queue.
+//!
+//! The repo forbids `unsafe`, so there is no FFI `poll(2)` here: the event
+//! loop sweeps its slots with nonblocking reads/writes, treating
+//! `WouldBlock` as "not ready" and sleeping briefly only when a whole
+//! sweep makes no progress. With loopback sockets and tens-to-hundreds of
+//! peers this costs a bounded O(P) scan per wakeup and needs exactly one
+//! thread — the property the 256-worker scale bench pins.
+//!
+//! Write side: the round broadcast is encoded **once**, framed once, and
+//! appended to every peer's queue; each queue then drains independently
+//! until its socket would block. A slow or stalled peer therefore delays
+//! only itself — its queue simply stays full while every other peer's
+//! broadcast goes out — instead of stalling the fan-out loop on one
+//! blocking `write_all` as the thread-per-peer design did.
+
+use std::io::Write;
+
+use crate::comm::net::{FrameAccum, FramePoll, NetStream};
+
+/// One connection in the event loop: stream + reassembly + write queue.
+pub struct PeerSlot {
+    stream: NetStream,
+    accum: FrameAccum,
+    out: Vec<u8>,
+    sent: usize,
+}
+
+impl PeerSlot {
+    /// Wrap a freshly-accepted stream, switching it to nonblocking mode.
+    /// `read_slab` pre-sizes the frame reassembly buffer so expected-size
+    /// uplinks never grow it mid-round.
+    pub fn new(stream: NetStream, read_slab: usize) -> crate::Result<PeerSlot> {
+        stream.set_nonblocking(true)?;
+        Ok(PeerSlot {
+            stream,
+            accum: FrameAccum::with_capacity(read_slab),
+            out: Vec::new(),
+            sent: 0,
+        })
+    }
+
+    /// Queue pre-framed envelope bytes for this peer. The queue grows if
+    /// the peer is slow; it snaps back to its high-water capacity (no
+    /// dealloc) once drained, so steady-state rounds reuse it in place.
+    pub fn queue(&mut self, framed: &[u8]) {
+        self.out.extend_from_slice(framed);
+    }
+
+    /// Drain the write queue until it empties or the socket would block.
+    /// `Ok(true)` = fully drained; `Ok(false)` = socket full, try again
+    /// next sweep; `Err` = the peer is gone (connection-fatal).
+    pub fn flush_queue(&mut self) -> crate::Result<bool> {
+        loop {
+            if self.sent == self.out.len() {
+                self.out.clear();
+                self.sent = 0;
+                return Ok(true);
+            }
+            match self.stream.write(&self.out[self.sent..]) {
+                Ok(0) => anyhow::bail!("peer closed its read half"),
+                Ok(n) => self.sent += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(anyhow::anyhow!("writing to peer: {e}")),
+            }
+        }
+    }
+
+    /// Bytes queued but not yet accepted by the kernel.
+    pub fn backlog(&self) -> usize {
+        self.out.len() - self.sent
+    }
+
+    /// Pump nonblocking reads toward the next complete envelope.
+    pub fn poll_frame(&mut self) -> crate::Result<FramePoll> {
+        self.accum.poll_frame(&mut self.stream)
+    }
+
+    /// The buffered frame (valid after [`FramePoll::Ready`]).
+    pub fn frame(&self) -> (u8, &[u8]) {
+        self.accum.frame()
+    }
+
+    /// Retire the buffered frame.
+    pub fn consume(&mut self) {
+        self.accum.consume()
+    }
+
+    /// Direct stream access for teardown (`Bye`, shutdown). Callers may
+    /// flip the stream back to blocking for the farewell write.
+    pub fn stream(&mut self) -> &mut NetStream {
+        &mut self.stream
+    }
+}

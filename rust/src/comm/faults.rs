@@ -352,6 +352,15 @@ impl FaultChannel {
     /// Push one worker message through the link. Returns the events the
     /// receiver sees *now* (0, 1 or 2 — delay parks the message instead).
     pub fn feed(&mut self, msg: WorkerMsg) -> Vec<ChannelEvent> {
+        let mut out = Vec::new();
+        self.feed_into(msg, &mut out);
+        out
+    }
+
+    /// [`FaultChannel::feed`] into a caller-owned buffer: appends the
+    /// events (without clearing), so a round loop can collect a whole
+    /// round's deliveries through one reused `Vec`.
+    pub fn feed_into(&mut self, msg: WorkerMsg, out: &mut Vec<ChannelEvent>) {
         let (worker, round, loss) = (msg.worker, msg.round, msg.loss);
         let metrics = msg.metrics;
         let bits = msg.wire.framed_bits() as u64;
@@ -362,37 +371,35 @@ impl FaultChannel {
                     self.disconnected[worker] = true;
                     // one tombstone so the receiver learns the worker died;
                     // everything after is swallowed silently
-                    vec![ChannelEvent {
+                    out.push(ChannelEvent {
                         worker,
                         round,
                         loss,
                         arrival_s,
                         metrics,
                         payload: Delivery::Lost { bits, fault: Fault::Disconnect },
-                    }]
-                } else {
-                    Vec::new()
+                    });
                 }
             }
-            Some(Fault::Drop) => vec![ChannelEvent {
+            Some(Fault::Drop) => out.push(ChannelEvent {
                 worker,
                 round,
                 loss,
                 arrival_s,
                 metrics,
                 payload: Delivery::Lost { bits, fault: Fault::Drop },
-            }],
+            }),
             Some(Fault::Delay { rounds }) => {
                 self.parked.push((round + rounds, msg));
                 // the receiver must not wait for this message this round
-                vec![ChannelEvent {
+                out.push(ChannelEvent {
                     worker,
                     round,
                     loss,
                     arrival_s,
                     metrics,
                     payload: Delivery::Lost { bits, fault: Fault::Delay { rounds } },
-                }]
+                });
             }
             Some(Fault::Duplicate) => {
                 let bytes = msg.wire.into_bytes();
@@ -405,17 +412,15 @@ impl FaultChannel {
                     metrics,
                     payload: Delivery::Bytes(bytes.clone()),
                 };
-                vec![
-                    ChannelEvent {
-                        worker,
-                        round,
-                        loss,
-                        arrival_s,
-                        metrics,
-                        payload: Delivery::Bytes(bytes),
-                    },
-                    dup,
-                ]
+                out.push(ChannelEvent {
+                    worker,
+                    round,
+                    loss,
+                    arrival_s,
+                    metrics,
+                    payload: Delivery::Bytes(bytes),
+                });
+                out.push(dup);
             }
             Some(Fault::Corrupt) => {
                 let mut bytes = msg.wire.into_bytes();
@@ -424,23 +429,23 @@ impl FaultChannel {
                     + (mix(self.seed, worker, round, 0xB17E) as usize)
                         % (bytes.len() - crate::quant::MSG_HEADER_BYTES);
                 bytes[idx] ^= 0x5A;
-                vec![ChannelEvent {
+                out.push(ChannelEvent {
                     worker,
                     round,
                     loss,
                     arrival_s,
                     metrics,
                     payload: Delivery::Bytes(bytes),
-                }]
+                });
             }
-            None => vec![ChannelEvent {
+            None => out.push(ChannelEvent {
                 worker,
                 round,
                 loss,
                 arrival_s,
                 metrics,
                 payload: Delivery::Bytes(msg.wire.into_bytes()),
-            }],
+            }),
         }
     }
 
@@ -450,6 +455,15 @@ impl FaultChannel {
     /// they arrive stale by construction.
     pub fn flush(&mut self, round: u64) -> Vec<ChannelEvent> {
         let mut out = Vec::new();
+        self.flush_into(round, &mut out);
+        out
+    }
+
+    /// [`FaultChannel::flush`] into a caller-owned buffer (appended, not
+    /// cleared). Released events are appended in deterministic
+    /// `(worker, round)` order regardless of parking order.
+    pub fn flush_into(&mut self, round: u64, out: &mut Vec<ChannelEvent>) {
+        let start = out.len();
         let mut i = 0;
         while i < self.parked.len() {
             if self.parked[i].0 <= round {
@@ -467,9 +481,7 @@ impl FaultChannel {
                 i += 1;
             }
         }
-        // deterministic release order regardless of parking order
-        out.sort_by(|a, b| (a.worker, a.round).cmp(&(b.worker, b.round)));
-        out
+        out[start..].sort_unstable_by(|a, b| (a.worker, a.round).cmp(&(b.worker, b.round)));
     }
 }
 

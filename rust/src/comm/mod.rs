@@ -41,11 +41,14 @@
 //! through [`crate::quant::GradQuantizer::decode_frame_into`] into pooled
 //! buffers that the session reuses across messages *and* rounds.
 
+pub mod downlink;
+pub mod evloop;
 pub mod faults;
 pub mod net;
 mod session;
 mod stats;
 
+pub use self::downlink::{DownlinkEncoder, DownlinkFrame, DownlinkPolicy, DownlinkReceiver};
 pub use self::faults::{ChannelEvent, Delivery, Fault, FaultChannel, FaultPlan};
 pub use self::session::{
     Exchange, ExchangeError, RoundAggregator, RoundOutcome, RoundPolicy, Session,

@@ -41,6 +41,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::coding::crc;
+use crate::comm::downlink::DownlinkPolicy;
 use crate::comm::RoundSpec;
 use crate::quant::{BitMetrics, PayloadCodec, Scheme};
 
@@ -48,8 +49,10 @@ use crate::quant::{BitMetrics, PayloadCodec, Scheme};
 pub const NET_MAGIC: [u8; 2] = *b"NV";
 /// Envelope protocol version carried in `Hello`. v2 added the
 /// `error_feedback` flag to `Start` and the NUQSGD scheme tag to the
-/// round-broadcast spec encoding.
-pub const NET_VERSION: u32 = 2;
+/// round-broadcast spec encoding. v3 added the downlink policy field to
+/// `Start` and the `RoundDelta` broadcast kind (quantized parameter
+/// deltas on the leader->worker lane).
+pub const NET_VERSION: u32 = 3;
 /// Envelope header: magic(2) + kind(1) + body length(4).
 pub const NET_HEADER_BYTES: usize = 7;
 /// Parse-time cap on a claimed body length: large enough for a baseline
@@ -146,6 +149,33 @@ impl NetListener {
             }
         })
     }
+
+    /// Switch the listener between blocking and readiness-style accepts.
+    pub fn set_nonblocking(&self, nb: bool) -> crate::Result<()> {
+        match self {
+            NetListener::Tcp(l) => l.set_nonblocking(nb)?,
+            NetListener::Uds(l) => l.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+
+    /// Readiness-style accept: `Ok(None)` when no connection is pending
+    /// (the listener must be nonblocking), `Ok(Some(..))` on a new peer.
+    pub fn try_accept(&self) -> crate::Result<Option<NetStream>> {
+        let res = match self {
+            NetListener::Tcp(l) => l.accept().map(|(s, _)| {
+                s.set_nodelay(true).ok();
+                NetStream::Tcp(s)
+            }),
+            NetListener::Uds(l) => l.accept().map(|(s, _)| NetStream::Uds(s)),
+        };
+        match res {
+            Ok(s) => Ok(Some(s)),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => Ok(None),
+            Err(e) => Err(anyhow::anyhow!("accepting connection: {e}")),
+        }
+    }
 }
 
 /// One connected stream over either socket family. `Read`/`Write`
@@ -213,6 +243,17 @@ impl NetStream {
         Ok(())
     }
 
+    /// Switch the stream between blocking reads/writes and the readiness
+    /// style the leader's event loop runs on: `read`/`write` return
+    /// `WouldBlock` instead of parking the thread.
+    pub fn set_nonblocking(&self, nb: bool) -> crate::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_nonblocking(nb)?,
+            NetStream::Uds(s) => s.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+
     /// Shut down both directions (unblocks a reader on the other half).
     pub fn shutdown(&self) {
         match self {
@@ -270,6 +311,155 @@ pub fn write_envelope(w: &mut impl Write, kind: u8, body: &[u8]) -> crate::Resul
     w.write_all(&sum.to_le_bytes())?;
     w.flush()?;
     Ok(())
+}
+
+/// Append one framed envelope to an in-memory write buffer (the per-peer
+/// outbound queue of the event loop) instead of a socket: same header,
+/// body, and trailing CRC as [`write_envelope`], but the caller decides
+/// when — and how much of — the buffer drains to the wire.
+pub fn append_envelope(out: &mut Vec<u8>, kind: u8, body: &[u8]) -> crate::Result<()> {
+    anyhow::ensure!(body.len() <= MAX_BODY_BYTES, "envelope body too large");
+    let mut header = [0u8; NET_HEADER_BYTES];
+    header[..2].copy_from_slice(&NET_MAGIC);
+    header[2] = kind;
+    header[3..7].copy_from_slice(&u32::try_from(body.len())?.to_le_bytes());
+    let mut sum = crc::checksum(&header);
+    sum = crc::update(sum, body);
+    out.extend_from_slice(&header);
+    out.extend_from_slice(body);
+    out.extend_from_slice(&sum.to_le_bytes());
+    Ok(())
+}
+
+/// What one [`FrameAccum::poll_frame`] pump observed on the stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FramePoll {
+    /// A complete, checksum-verified envelope is buffered; read it with
+    /// [`FrameAccum::frame`], then [`FrameAccum::consume`] it.
+    Ready,
+    /// The socket has no more bytes right now (`WouldBlock`); partial
+    /// frame progress is retained for the next pump.
+    Pending,
+    /// Orderly end of stream at a frame boundary or mid-frame.
+    Eof,
+}
+
+/// Incremental, nonblocking counterpart of [`FrameReader`]: reassembles
+/// one envelope across however many `WouldBlock`-separated reads the
+/// kernel serves, holding partial header/body/trailer progress between
+/// pumps. One accumulator per connection; the body buffer is pooled, so
+/// after the first round a steady-state leader loop reads every frame
+/// without allocating.
+#[derive(Default)]
+pub struct FrameAccum {
+    header: [u8; NET_HEADER_BYTES],
+    hpos: usize,
+    body: Vec<u8>,
+    bpos: usize,
+    trailer: [u8; 4],
+    tpos: usize,
+    ready: bool,
+}
+
+impl FrameAccum {
+    pub fn new() -> FrameAccum {
+        FrameAccum::default()
+    }
+
+    /// Pre-size the body slab so expected-size frames never grow it
+    /// mid-round (the alloc-counting test pins this).
+    pub fn with_capacity(cap: usize) -> FrameAccum {
+        FrameAccum { body: Vec::with_capacity(cap), ..FrameAccum::default() }
+    }
+
+    /// Pump reads from a nonblocking stream until a full frame is
+    /// buffered, the kernel runs dry, or the peer hangs up. Errors are
+    /// protocol-fatal for this connection: bad magic, oversized length
+    /// claim, checksum mismatch, or a hard socket error.
+    // ndq-lint: allow(panic-path) fixed-size stack arrays indexed within their constant lengths; the body slice is resized to `len` before any access
+    pub fn poll_frame(&mut self, r: &mut impl Read) -> crate::Result<FramePoll> {
+        if self.ready {
+            return Ok(FramePoll::Ready);
+        }
+        loop {
+            if self.hpos < NET_HEADER_BYTES {
+                match r.read(&mut self.header[self.hpos..]) {
+                    Ok(0) => return Ok(FramePoll::Eof),
+                    Ok(n) => {
+                        self.hpos += n;
+                        if self.hpos < NET_HEADER_BYTES {
+                            continue;
+                        }
+                        anyhow::ensure!(
+                            self.header[..2] == NET_MAGIC,
+                            "bad envelope magic {:#04x}{:02x} (want \"NV\")",
+                            self.header[0],
+                            self.header[1]
+                        );
+                        let len = usize::try_from(u32::from_le_bytes(
+                            self.header[3..7].try_into().unwrap(),
+                        ))?;
+                        anyhow::ensure!(
+                            len <= MAX_BODY_BYTES,
+                            "envelope claims {len} body bytes (cap {MAX_BODY_BYTES})"
+                        );
+                        self.body.resize(len, 0);
+                        self.bpos = 0;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        return Ok(FramePoll::Pending)
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(anyhow::anyhow!("reading envelope header: {e}")),
+                }
+            } else if self.bpos < self.body.len() {
+                match r.read(&mut self.body[self.bpos..]) {
+                    Ok(0) => return Ok(FramePoll::Eof),
+                    Ok(n) => self.bpos += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        return Ok(FramePoll::Pending)
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(anyhow::anyhow!("reading envelope body: {e}")),
+                }
+            } else if self.tpos < 4 {
+                match r.read(&mut self.trailer[self.tpos..]) {
+                    Ok(0) => return Ok(FramePoll::Eof),
+                    Ok(n) => self.tpos += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        return Ok(FramePoll::Pending)
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(anyhow::anyhow!("reading envelope checksum: {e}")),
+                }
+            } else {
+                let want = u32::from_le_bytes(self.trailer);
+                let mut sum = crc::checksum(&self.header);
+                sum = crc::update(sum, &self.body);
+                anyhow::ensure!(
+                    want == sum,
+                    "envelope checksum mismatch: trailer says {want:#010x}, frame hashes to {sum:#010x}"
+                );
+                self.ready = true;
+                return Ok(FramePoll::Ready);
+            }
+        }
+    }
+
+    /// The buffered frame — valid only after `poll_frame` returned
+    /// [`FramePoll::Ready`] and until [`FrameAccum::consume`].
+    pub fn frame(&self) -> (u8, &[u8]) {
+        (self.header[2], &self.body)
+    }
+
+    /// Retire the buffered frame and arm the accumulator for the next
+    /// one. The body slab keeps its capacity.
+    pub fn consume(&mut self) {
+        self.hpos = 0;
+        self.bpos = 0;
+        self.tpos = 0;
+        self.ready = false;
+    }
 }
 
 /// Pooled frame reassembler: one reusable body buffer per connection, so
@@ -337,6 +527,11 @@ const KIND_START: u8 = 2;
 const KIND_ROUND: u8 = 3;
 const KIND_GRAD: u8 = 4;
 const KIND_BYE: u8 = 5;
+const KIND_DELTA: u8 = 6;
+
+/// Envelope kind of a worker uplink — exported so the leader's event loop
+/// can dispatch on [`FrameAccum::frame`] without a full [`NetMsg`] decode.
+pub const NET_KIND_GRAD: u8 = KIND_GRAD;
 
 /// The leader/worker protocol. Lifecycle:
 /// worker `Hello` -> leader `Start` -> per round (leader `Round` ->
@@ -360,13 +555,26 @@ pub enum NetMsg {
         /// rebuilds, keeping loopback runs fingerprint-identical to the
         /// in-process engine.
         error_feedback: bool,
+        /// Downlink lane policy: how the leader ships parameters each
+        /// round. Under the delta policies the worker keeps a shadow copy
+        /// and reconstructs (see [`crate::comm::downlink`]).
+        downlink: DownlinkPolicy,
     },
-    /// Per-round broadcast: the negotiated spec (the re-leveling dial) and
-    /// the replicated parameters.
+    /// Per-round broadcast under the `full` downlink policy: the
+    /// negotiated spec (the re-leveling dial) and the replicated
+    /// parameters.
     Round {
         round: u64,
         spec: RoundSpec,
         params: Vec<f32>,
+    },
+    /// Per-round broadcast under a delta downlink policy: the negotiated
+    /// spec plus the parameter *delta* since the previous round, raw or
+    /// pushed through the gradient wire format.
+    RoundDelta {
+        round: u64,
+        spec: RoundSpec,
+        delta: DeltaPayload,
     },
     /// A worker's uplink: the CRC-framed wire bytes plus the envelope
     /// fields a re-parsed `WireMsg` cannot carry (loss, encode-time
@@ -382,12 +590,36 @@ pub enum NetMsg {
     Bye,
 }
 
+/// The downlink payload of a [`NetMsg::RoundDelta`]: the parameter delta
+/// either as raw little-endian f32s (`delta-raw`) or as the CRC-framed
+/// [`crate::quant::WireMsg`] bytes the downlink quantizer emitted
+/// (`delta-quantized:<scheme>`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeltaPayload {
+    Raw(Vec<f32>),
+    Coded(Vec<u8>),
+}
+
+/// Borrowed view of a decoded `Grad` envelope body — the event loop's
+/// allocation-free dispatch path. The wire bytes stay inside the frame
+/// accumulator's slab; the caller copies them into a pooled
+/// [`crate::quant::WireScratch`] when it accepts the upload.
+#[derive(Debug, Clone, Copy)]
+pub struct GradView<'a> {
+    pub worker: u32,
+    pub round: u64,
+    pub loss: f32,
+    pub metrics: BitMetrics,
+    pub wire: &'a [u8],
+}
+
 impl NetMsg {
     pub fn kind(&self) -> u8 {
         match self {
             NetMsg::Hello { .. } => KIND_HELLO,
             NetMsg::Start { .. } => KIND_START,
             NetMsg::Round { .. } => KIND_ROUND,
+            NetMsg::RoundDelta { .. } => KIND_DELTA,
             NetMsg::Grad { .. } => KIND_GRAD,
             NetMsg::Bye => KIND_BYE,
         }
@@ -396,8 +628,18 @@ impl NetMsg {
     /// Serialize the body (everything after the envelope header).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize the body into a caller-pooled buffer (cleared first) —
+    /// the event loop encodes each round's broadcast exactly once into a
+    /// reusable buffer and fans the framed bytes out to every peer's
+    /// write queue.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
         match self {
-            NetMsg::Hello { version } => put_u32(&mut out, *version),
+            NetMsg::Hello { version } => put_u32(out, *version),
             NetMsg::Start {
                 assigned_id,
                 workers,
@@ -406,23 +648,24 @@ impl NetMsg {
                 seed,
                 noise,
                 error_feedback,
+                downlink,
             } => {
-                put_u32(&mut out, *assigned_id);
-                put_u32(&mut out, *workers);
-                put_u64(&mut out, *n_params);
-                put_u64(&mut out, *rounds);
-                put_u64(&mut out, *seed);
-                put_f32(&mut out, *noise);
+                put_u32(out, *assigned_id);
+                put_u32(out, *workers);
+                put_u64(out, *n_params);
+                put_u64(out, *rounds);
+                put_u64(out, *seed);
+                put_f32(out, *noise);
                 out.push(u8::from(*error_feedback));
+                put_downlink(out, downlink);
             }
             NetMsg::Round { round, spec, params } => {
-                put_u64(&mut out, *round);
-                put_spec(&mut out, spec);
-                put_u64(&mut out, params.len() as u64);
-                for &p in params {
-                    put_f32(&mut out, p);
-                }
+                append_round_body(out, *round, spec, params);
             }
+            NetMsg::RoundDelta { round, spec, delta } => match delta {
+                DeltaPayload::Raw(d) => append_delta_raw_body(out, *round, spec, d),
+                DeltaPayload::Coded(b) => append_delta_coded_body(out, *round, spec, b),
+            },
             NetMsg::Grad {
                 worker,
                 round,
@@ -430,26 +673,25 @@ impl NetMsg {
                 metrics,
                 wire,
             } => {
-                put_u32(&mut out, *worker);
-                put_u64(&mut out, *round);
-                put_f32(&mut out, *loss);
-                put_u64(&mut out, metrics.transmitted_bits);
-                put_u64(&mut out, metrics.raw_bits);
-                put_f64(&mut out, metrics.entropy_bits);
+                put_u32(out, *worker);
+                put_u64(out, *round);
+                put_f32(out, *loss);
+                put_u64(out, metrics.transmitted_bits);
+                put_u64(out, metrics.raw_bits);
+                put_f64(out, metrics.entropy_bits);
                 match metrics.aac_bits {
                     Some(b) => {
                         out.push(1);
-                        put_u64(&mut out, b);
+                        put_u64(out, b);
                     }
                     None => out.push(0),
                 }
-                put_u32(&mut out, metrics.fallback_frames);
-                put_u64(&mut out, wire.len() as u64);
+                put_u32(out, metrics.fallback_frames);
+                put_u64(out, wire.len() as u64);
                 out.extend_from_slice(wire);
             }
             NetMsg::Bye => {}
         }
-        out
     }
 
     /// Write this message as one framed envelope.
@@ -474,6 +716,7 @@ impl NetMsg {
                     1 => true,
                     v => anyhow::bail!("bad error-feedback flag {v}"),
                 },
+                downlink: get_downlink(&mut c)?,
             },
             KIND_ROUND => {
                 let round = c.u64()?;
@@ -490,38 +733,45 @@ impl NetMsg {
                 }
                 NetMsg::Round { round, spec, params }
             }
-            KIND_GRAD => {
-                let worker = c.u32()?;
+            KIND_DELTA => {
                 let round = c.u64()?;
-                let loss = c.f32()?;
-                let transmitted_bits = c.u64()?;
-                let raw_bits = c.u64()?;
-                let entropy_bits = c.f64()?;
-                let aac_bits = match c.u8()? {
-                    0 => None,
-                    1 => Some(c.u64()?),
-                    v => anyhow::bail!("bad aac flag {v}"),
+                let spec = get_spec(&mut c)?;
+                let delta = match c.u8()? {
+                    DELTA_RAW_TAG => {
+                        let n = usize::try_from(c.u64()?)?;
+                        anyhow::ensure!(
+                            n.checked_mul(4).is_some_and(|b| b <= c.remaining()),
+                            "delta broadcast claims {n} params in {} bytes",
+                            c.remaining()
+                        );
+                        let mut d = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            d.push(c.f32()?);
+                        }
+                        DeltaPayload::Raw(d)
+                    }
+                    DELTA_CODED_TAG => {
+                        let n = usize::try_from(c.u64()?)?;
+                        anyhow::ensure!(
+                            n <= c.remaining(),
+                            "coded delta claims {n} wire bytes, {} remain",
+                            c.remaining()
+                        );
+                        DeltaPayload::Coded(c.bytes(n)?.to_vec())
+                    }
+                    v => anyhow::bail!("bad delta payload tag {v}"),
                 };
-                let fallback_frames = c.u32()?;
-                let n = usize::try_from(c.u64()?)?;
-                anyhow::ensure!(
-                    n <= c.remaining(),
-                    "grad claims {n} wire bytes, {} remain",
-                    c.remaining()
-                );
-                NetMsg::Grad {
-                    worker,
-                    round,
-                    loss,
-                    metrics: BitMetrics {
-                        transmitted_bits,
-                        raw_bits,
-                        entropy_bits,
-                        aac_bits,
-                        fallback_frames,
-                    },
-                    wire: c.bytes(n)?.to_vec(),
-                }
+                NetMsg::RoundDelta { round, spec, delta }
+            }
+            KIND_GRAD => {
+                let v = Self::decode_grad_view(body)?;
+                return Ok(NetMsg::Grad {
+                    worker: v.worker,
+                    round: v.round,
+                    loss: v.loss,
+                    metrics: v.metrics,
+                    wire: v.wire.to_vec(),
+                });
             }
             KIND_BYE => NetMsg::Bye,
             other => anyhow::bail!("unknown envelope kind {other}"),
@@ -532,6 +782,51 @@ impl NetMsg {
             c.remaining()
         );
         Ok(msg)
+    }
+
+    /// Decode a `Grad` body without copying the wire bytes out — the
+    /// event loop's per-upload path. Performs the same validation as
+    /// [`NetMsg::decode`] (including the no-trailing-bytes check) but
+    /// borrows the payload from the caller's frame slab.
+    pub fn decode_grad_view(body: &[u8]) -> crate::Result<GradView<'_>> {
+        let mut c = Cur { b: body, p: 0 };
+        let worker = c.u32()?;
+        let round = c.u64()?;
+        let loss = c.f32()?;
+        let transmitted_bits = c.u64()?;
+        let raw_bits = c.u64()?;
+        let entropy_bits = c.f64()?;
+        let aac_bits = match c.u8()? {
+            0 => None,
+            1 => Some(c.u64()?),
+            v => anyhow::bail!("bad aac flag {v}"),
+        };
+        let fallback_frames = c.u32()?;
+        let n = usize::try_from(c.u64()?)?;
+        anyhow::ensure!(
+            n <= c.remaining(),
+            "grad claims {n} wire bytes, {} remain",
+            c.remaining()
+        );
+        let wire = c.bytes(n)?;
+        anyhow::ensure!(
+            c.remaining() == 0,
+            "{} trailing bytes after envelope body",
+            c.remaining()
+        );
+        Ok(GradView {
+            worker,
+            round,
+            loss,
+            metrics: BitMetrics {
+                transmitted_bits,
+                raw_bits,
+                entropy_bits,
+                aac_bits,
+                fallback_frames,
+            },
+            wire,
+        })
     }
 }
 
@@ -599,6 +894,77 @@ fn get_scheme(c: &mut Cur) -> crate::Result<Scheme> {
         },
         SCHEME_NUQSGD => Scheme::Nuqsgd { m: i32::try_from(c.u32()?)? },
         other => anyhow::bail!("unknown scheme tag {other} in round broadcast"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// borrowed-payload body encoders: the event loop encodes each round's
+// broadcast exactly once into a pooled buffer (no owned Vec<f32> clone per
+// round), frames it with `append_envelope`, and fans the bytes out to
+// every peer's write queue. `NetMsg::encode_into` delegates here so the
+// owned and borrowed paths cannot drift.
+// ---------------------------------------------------------------------------
+
+/// Envelope kind for [`append_round_body`] payloads.
+pub const NET_KIND_ROUND: u8 = KIND_ROUND;
+/// Envelope kind for [`append_delta_raw_body`]/[`append_delta_coded_body`]
+/// payloads.
+pub const NET_KIND_DELTA: u8 = KIND_DELTA;
+
+/// Append a `Round` (full-params broadcast) body to `out`.
+pub fn append_round_body(out: &mut Vec<u8>, round: u64, spec: &RoundSpec, params: &[f32]) {
+    put_u64(out, round);
+    put_spec(out, spec);
+    put_u64(out, params.len() as u64);
+    for &p in params {
+        put_f32(out, p);
+    }
+}
+
+/// Append a `RoundDelta` body with a raw f32 delta payload to `out`.
+pub fn append_delta_raw_body(out: &mut Vec<u8>, round: u64, spec: &RoundSpec, delta: &[f32]) {
+    put_u64(out, round);
+    put_spec(out, spec);
+    out.push(DELTA_RAW_TAG);
+    put_u64(out, delta.len() as u64);
+    for &v in delta {
+        put_f32(out, v);
+    }
+}
+
+/// Append a `RoundDelta` body with a coded (wire-format) delta payload.
+pub fn append_delta_coded_body(out: &mut Vec<u8>, round: u64, spec: &RoundSpec, wire: &[u8]) {
+    put_u64(out, round);
+    put_spec(out, spec);
+    out.push(DELTA_CODED_TAG);
+    put_u64(out, wire.len() as u64);
+    out.extend_from_slice(wire);
+}
+
+const DOWNLINK_FULL: u8 = 0;
+const DOWNLINK_DELTA_RAW: u8 = 1;
+const DOWNLINK_DELTA_QUANTIZED: u8 = 2;
+/// `RoundDelta` payload tags.
+const DELTA_RAW_TAG: u8 = 0;
+const DELTA_CODED_TAG: u8 = 1;
+
+fn put_downlink(out: &mut Vec<u8>, d: &DownlinkPolicy) {
+    match d {
+        DownlinkPolicy::Full => out.push(DOWNLINK_FULL),
+        DownlinkPolicy::DeltaRaw => out.push(DOWNLINK_DELTA_RAW),
+        DownlinkPolicy::DeltaQuantized(s) => {
+            out.push(DOWNLINK_DELTA_QUANTIZED);
+            put_scheme(out, s);
+        }
+    }
+}
+
+fn get_downlink(c: &mut Cur) -> crate::Result<DownlinkPolicy> {
+    Ok(match c.u8()? {
+        DOWNLINK_FULL => DownlinkPolicy::Full,
+        DOWNLINK_DELTA_RAW => DownlinkPolicy::DeltaRaw,
+        DOWNLINK_DELTA_QUANTIZED => DownlinkPolicy::DeltaQuantized(get_scheme(c)?),
+        v => anyhow::bail!("bad downlink policy tag {v}"),
     })
 }
 
@@ -739,6 +1105,37 @@ mod tests {
                 seed: 0xDEAD_BEEF_0042,
                 noise: 0.05,
                 error_feedback: true,
+                downlink: DownlinkPolicy::DeltaQuantized(Scheme::Dithered {
+                    delta: 1.0 / 3.0,
+                }),
+            },
+            NetMsg::Start {
+                assigned_id: 0,
+                workers: 4,
+                n_params: 16,
+                rounds: 5,
+                seed: 7,
+                noise: 0.0,
+                error_feedback: false,
+                downlink: DownlinkPolicy::Full,
+            },
+            NetMsg::RoundDelta {
+                round: 9,
+                spec: RoundSpec {
+                    scheme: Scheme::Qsgd { m: 4 },
+                    scheme_p2: None,
+                    codec: PayloadCodec::Raw,
+                },
+                delta: DeltaPayload::Raw(vec![0.5, -0.25, f32::MIN_POSITIVE, -0.0]),
+            },
+            NetMsg::RoundDelta {
+                round: 10,
+                spec: RoundSpec {
+                    scheme: Scheme::Dithered { delta: 0.25 },
+                    scheme_p2: None,
+                    codec: PayloadCodec::Huffman,
+                },
+                delta: DeltaPayload::Coded(vec![0xC3; 29]),
             },
             NetMsg::Round {
                 round: 17,
@@ -825,6 +1222,120 @@ mod tests {
         // truncation mid-body errors instead of hanging
         let mut cursor = std::io::Cursor::new(clean[..clean.len() - 9].to_vec());
         assert!(FrameReader::new().read_msg(&mut cursor).is_err());
+    }
+
+    /// `Read` shim that serves a fixed byte stream one byte at a time and
+    /// interleaves a `WouldBlock` between every byte — the worst-case
+    /// readiness schedule the nonblocking accumulator must absorb.
+    struct ChoppyReader<'a> {
+        data: &'a [u8],
+        pos: usize,
+        block_next: bool,
+    }
+
+    impl Read for ChoppyReader<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.block_next {
+                self.block_next = false;
+                return Err(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+            }
+            self.block_next = true;
+            if self.pos >= self.data.len() || buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn frame_accum_reassembles_across_wouldblock_boundaries() {
+        let mut bytes = Vec::new();
+        for msg in sample_msgs() {
+            msg.write_to(&mut bytes).unwrap();
+        }
+        let mut r = ChoppyReader { data: &bytes, pos: 0, block_next: false };
+        let mut acc = FrameAccum::new();
+        for want in sample_msgs() {
+            loop {
+                match acc.poll_frame(&mut r).unwrap() {
+                    FramePoll::Ready => break,
+                    FramePoll::Pending => continue,
+                    FramePoll::Eof => panic!("EOF before frame complete"),
+                }
+            }
+            let (kind, body) = acc.frame();
+            assert_eq!(NetMsg::decode(kind, body).unwrap(), want);
+            acc.consume();
+        }
+        // drained stream reports EOF, not Pending, at the frame boundary
+        loop {
+            match acc.poll_frame(&mut r).unwrap() {
+                FramePoll::Eof => break,
+                FramePoll::Pending => continue,
+                FramePoll::Ready => panic!("phantom frame after stream end"),
+            }
+        }
+    }
+
+    #[test]
+    fn frame_accum_catches_corruption_like_the_blocking_reader() {
+        let msg = NetMsg::Grad {
+            worker: 1,
+            round: 2,
+            loss: 0.5,
+            metrics: BitMetrics::default(),
+            wire: vec![7; 16],
+        };
+        let mut clean = Vec::new();
+        msg.write_to(&mut clean).unwrap();
+        for idx in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[idx] ^= 0x5A;
+            let mut cursor = std::io::Cursor::new(bad);
+            let mut acc = FrameAccum::new();
+            let res = loop {
+                match acc.poll_frame(&mut cursor) {
+                    Ok(FramePoll::Ready) => break Ok(()),
+                    Ok(FramePoll::Eof) => break Ok(()), // truncated-looking: caller treats as disconnect
+                    Ok(FramePoll::Pending) => continue,
+                    Err(e) => break Err(e),
+                }
+            };
+            // length-field corruption can legally yield Eof (frame looks
+            // longer than the stream); everything else must hard-error
+            if !(3..7).contains(&idx) {
+                assert!(res.is_err(), "flipped byte {idx} went unnoticed");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_view_matches_owned_decode() {
+        let msg = NetMsg::Grad {
+            worker: 5,
+            round: 17,
+            loss: 0.042,
+            metrics: BitMetrics {
+                transmitted_bits: 12345,
+                raw_bits: 20000,
+                entropy_bits: 9876.5,
+                aac_bits: Some(11111),
+                fallback_frames: 2,
+            },
+            wire: vec![0xAB; 37],
+        };
+        let body = msg.encode();
+        let v = NetMsg::decode_grad_view(&body).unwrap();
+        assert_eq!(v.worker, 5);
+        assert_eq!(v.round, 17);
+        assert_eq!(v.wire, &[0xAB; 37][..]);
+        assert_eq!(v.metrics.transmitted_bits, 12345);
+        // trailing garbage must fail the view decode too
+        let mut long = body.clone();
+        long.push(0);
+        assert!(NetMsg::decode_grad_view(&long).is_err());
     }
 
     #[test]

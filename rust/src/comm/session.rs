@@ -37,7 +37,7 @@
 use super::faults::{ChannelEvent, Delivery, Fault};
 use super::{CommStats, RoundSpec, WorkerMsg};
 use crate::prng::DitherStream;
-use crate::quant::{GradQuantizer, Scheme, SchemeId, SchemeRegistry, WireMsg};
+use crate::quant::{GradQuantizer, Scheme, SchemeId, SchemeRegistry, WireMsg, WireScratch};
 
 /// When a synchronous round is allowed to complete.
 ///
@@ -188,6 +188,17 @@ pub struct Session {
     buf_pool: Vec<Vec<f32>>,
     /// Scratch for P2 and single-message decodes.
     decode_buf: Vec<f32>,
+    /// Pool of retired wire-message backing buffers (byte store + frame
+    /// directory), capped at the worker count. The socket leader parses
+    /// each uplink through [`Session::take_wire_scratch`] and the fold
+    /// hands the buffers back, so steady-state rounds re-parse without
+    /// touching the allocator.
+    wire_pool: Vec<WireScratch>,
+    /// Pooled backing stores for [`Session::begin_exchange`]'s per-round
+    /// state, reclaimed by [`Exchange::finish`].
+    exch_accepted: Vec<WorkerMsg>,
+    exch_accepted_from: Vec<bool>,
+    exch_resolved: Vec<bool>,
 }
 
 impl Session {
@@ -247,6 +258,10 @@ impl Session {
             next_p2: 0,
             buf_pool: Vec::new(),
             decode_buf: vec![0f32; n_params],
+            wire_pool: Vec::new(),
+            exch_accepted: Vec::new(),
+            exch_accepted_from: Vec::new(),
+            exch_resolved: Vec::new(),
         })
     }
 
@@ -355,6 +370,32 @@ impl Session {
         self.stats.record_broadcast(bits);
     }
 
+    /// Record one downlink broadcast with its raw-f32 equivalent (see
+    /// [`CommStats::record_broadcast_msg`]) — the billing entry point the
+    /// [`super::DownlinkEncoder`] uses.
+    pub fn record_broadcast_msg(&mut self, transmitted_bits: f64, raw_bits: f64) {
+        self.stats.record_broadcast_msg(transmitted_bits, raw_bits);
+    }
+
+    /// Take a pooled wire-parse scratch (empty but capacity-bearing once
+    /// the pool has warmed up). Pair with
+    /// [`crate::quant::WireMsg::parse_from_scratch`]; the fold reclaims the
+    /// parsed message's buffers automatically when it retires the message.
+    pub fn take_wire_scratch(&mut self) -> WireScratch {
+        self.wire_pool.pop().unwrap_or_default()
+    }
+
+    /// Retire a wire message's backing buffers into the scratch pool
+    /// (bounded by the worker count — at most one in-flight message per
+    /// peer is ever pooled).
+    fn reclaim_wire(&mut self, wire: WireMsg) {
+        if self.wire_pool.len() < self.worker_ids.len() {
+            let mut scratch = WireScratch::default();
+            wire.reclaim(&mut scratch);
+            self.wire_pool.push(scratch);
+        }
+    }
+
     /// Hand a retired average buffer back for reuse (optional — the next
     /// round allocates one otherwise).
     pub fn recycle(&mut self, mut buf: Vec<f32>) {
@@ -375,13 +416,23 @@ impl Session {
     pub fn begin_exchange(&mut self, round: u64, policy: RoundPolicy) -> Exchange<'_> {
         let expected = self.live_workers();
         let workers = self.worker_ids.len();
+        // per-round state lives in session-owned pools so the steady-state
+        // exchange loop never allocates; `finish` hands the buffers back
+        let mut accepted = std::mem::take(&mut self.exch_accepted);
+        accepted.clear();
+        let mut accepted_from = std::mem::take(&mut self.exch_accepted_from);
+        accepted_from.clear();
+        accepted_from.resize(workers, false);
+        let mut resolved = std::mem::take(&mut self.exch_resolved);
+        resolved.clear();
+        resolved.resize(workers, false);
         Exchange {
             s: self,
             round,
             policy,
-            accepted: Vec::new(),
-            accepted_from: vec![false; workers],
-            resolved: vec![false; workers],
+            accepted,
+            accepted_from,
+            resolved,
             n_resolved: 0,
             expected,
         }
@@ -492,6 +543,9 @@ impl Session {
             // P2: park (taking ownership) until the bootstrap exists
             let w = msg.worker;
             self.queued_p2[w] = Some(msg);
+        } else {
+            // P1 decoded and retired — its wire buffers go back to the pool
+            self.reclaim_wire(msg.wire);
         }
         if self.bootstrap_ready() {
             self.advance_p2()?;
@@ -571,6 +625,7 @@ impl Session {
             match self.queued_p2[w].take() {
                 Some(msg) => {
                     self.decode_p2_and_fold(&msg)?;
+                    self.reclaim_wire(msg.wire);
                     self.next_p2 += 1;
                 }
                 None => break,
@@ -618,6 +673,7 @@ impl Session {
             let w = self.p2_workers[i];
             if let Some(msg) = self.queued_p2[w].take() {
                 self.decode_p2_and_fold(&msg)?;
+                self.reclaim_wire(msg.wire);
             }
         }
         self.next_p2 = self.p2_workers.len();
@@ -784,6 +840,54 @@ impl Exchange<'_> {
         }
     }
 
+    /// Feed one already-parsed, already-CRC-checked message — the socket
+    /// leader's fast path, where the event loop parsed the uplink straight
+    /// out of its frame reassembly buffer (through the session's pooled
+    /// [`WireScratch`]) and there are no transport bytes left to re-parse.
+    ///
+    /// Ledger parity with [`Exchange::offer`] is exact: every lane bills
+    /// `framed_bits` (`8 ×` the wire byte length — the same number the
+    /// byte path computes from `bytes.len()`), and the accept/duplicate/
+    /// late/reject decisions mirror the `Delivery::Bytes` arm minus the
+    /// CRC parse (already done) and the virtual-time deadline (the real
+    /// transport's valve enforces deadlines in wall-clock time instead).
+    pub fn offer_msg(&mut self, msg: WorkerMsg) {
+        let w = msg.worker;
+        let bits = msg.wire.framed_bits() as u64;
+        if w >= self.s.worker_ids.len() {
+            self.s.stats.record_rejected(bits);
+            self.s.reclaim_wire(msg.wire);
+            return;
+        }
+        if msg.round != self.round {
+            // stale: a real-time-delayed uplink from an earlier round —
+            // never folded, the dither key no longer matches the barrier
+            self.s.stats.record_late(bits);
+            self.s.reclaim_wire(msg.wire);
+            return;
+        }
+        if self.accepted_from[w] {
+            self.s.stats.record_duplicate(bits);
+            self.s.reclaim_wire(msg.wire);
+            return;
+        }
+        if self.is_complete() {
+            self.s.stats.record_late(bits);
+            self.s.reclaim_wire(msg.wire);
+            self.resolve(w);
+            return;
+        }
+        if self.s.validate(w, &msg.wire).is_err() {
+            self.s.stats.record_rejected(bits);
+            self.s.reclaim_wire(msg.wire);
+            self.resolve(w);
+            return;
+        }
+        self.accepted_from[w] = true;
+        self.accepted.push(msg);
+        self.resolve(w);
+    }
+
     fn resolve(&mut self, worker: usize) {
         if worker < self.resolved.len() && !self.resolved[worker] {
             self.resolved[worker] = true;
@@ -819,36 +923,51 @@ impl Exchange<'_> {
     /// return the outcome, or a typed [`ExchangeError`] when no safe
     /// aggregate exists.
     pub fn finish(self) -> Result<RoundOutcome, ExchangeError> {
-        let Exchange { s, round, expected, mut accepted, .. } = self;
-        accepted.sort_by_key(|m| m.worker);
+        let Exchange {
+            s,
+            round,
+            expected,
+            mut accepted,
+            accepted_from,
+            resolved,
+            ..
+        } = self;
+        // hand the flag stores straight back — nothing below reads them
+        // (unstable sort: no merge buffer, and per-worker keys are unique)
+        s.exch_accepted_from = accepted_from;
+        s.exch_resolved = resolved;
+        accepted.sort_unstable_by_key(|m| m.worker);
         if accepted.is_empty() {
+            s.exch_accepted = accepted;
             return Err(ExchangeError::Empty { round });
         }
         // NDQSG bootstrap precondition, checked *before* any P2 decode is
         // attempted: queued P2 messages are discarded undecoded (their bits
         // attributed as rejected), never decoded against garbage side info.
+        // `accepted` is nonempty, so no-P1 means every message is P2.
         let has_p1 = accepted.iter().any(|m| s.in_p1[m.worker]);
         if !has_p1 {
-            let queued_p2: Vec<&WorkerMsg> =
-                accepted.iter().filter(|m| !s.in_p1[m.worker]).collect();
-            if !queued_p2.is_empty() {
-                for m in &queued_p2 {
-                    s.stats.record_rejected(m.wire.framed_bits() as u64);
-                }
-                return Err(ExchangeError::NdqsgBootstrapMissing {
-                    round,
-                    queued_p2: queued_p2.len(),
-                });
+            for m in &accepted {
+                s.stats.record_rejected(m.wire.framed_bits() as u64);
             }
+            let queued_p2 = accepted.len();
+            accepted.clear();
+            s.exch_accepted = accepted;
+            return Err(ExchangeError::NdqsgBootstrapMissing { round, queued_p2 });
         }
         let received = accepted.len();
         let mean_loss = accepted.iter().map(|m| m.loss).sum::<f32>() / received as f32;
         s.reset_round();
-        for m in accepted {
-            s.push_msg(m).map_err(|e| ExchangeError::Decode {
-                round,
-                message: e.to_string(),
-            })?;
+        let mut fold_err = None;
+        for m in accepted.drain(..) {
+            if let Err(e) = s.push_msg(m) {
+                fold_err = Some(e.to_string());
+                break;
+            }
+        }
+        s.exch_accepted = accepted;
+        if let Some(message) = fold_err {
+            return Err(ExchangeError::Decode { round, message });
         }
         let average = s.finish_round().map_err(|e| ExchangeError::Decode {
             round,

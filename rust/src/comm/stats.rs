@@ -57,6 +57,14 @@ pub struct CommStats {
     /// Broadcast (server -> workers) bits per round.
     pub bcast: Running,
     pub total_bcast_bits: f64,
+    /// Downlink ledger lane: broadcast messages recorded, and the
+    /// raw-f32 equivalent (`32 * n_params` per broadcast) of those
+    /// payloads — the denominator that makes a quantized downlink's
+    /// savings visible (`total_bcast_bits < total_bcast_raw_bits`).
+    /// Billed from encode-time [`BitMetrics`] by the single
+    /// [`crate::comm::DownlinkEncoder`] billing site.
+    pub bcast_msgs: u64,
+    pub total_bcast_raw_bits: f64,
     pub messages: u64,
     /// Per-[`RoundSpec`](super::RoundSpec) ledger lanes, keyed by the
     /// spec's label. Populated by [`CommStats::record_upload_for`] (what a
@@ -135,7 +143,14 @@ impl CommStats {
     /// per-spec accounting that keeps mixed-level runs ledger-exact.
     pub fn record_upload_for(&mut self, spec: &str, framed_bits: usize, m: &BitMetrics) {
         self.record_upload(framed_bits, m);
-        let lane = self.per_spec.entry(spec.to_string()).or_default();
+        // get_mut-first: `entry` would clone the label into a fresh String
+        // on every message — a per-upload heap allocation in the leader's
+        // steady-state loop. Only a never-seen spec (once per re-level)
+        // pays the insertion.
+        let lane = match self.per_spec.get_mut(spec) {
+            Some(lane) => lane,
+            None => self.per_spec.entry(spec.to_string()).or_default(),
+        };
         lane.messages += 1;
         lane.transmitted_bits += m.transmitted_bits as f64;
         lane.raw_bits += m.raw_bits as f64;
@@ -144,6 +159,16 @@ impl CommStats {
     pub fn record_broadcast(&mut self, bits: f64) {
         self.bcast.push(bits);
         self.total_bcast_bits += bits;
+    }
+
+    /// Tally one downlink broadcast: `transmitted_bits` is what actually
+    /// went on the wire (encode-time metrics under a quantized policy,
+    /// `32 * n_params` under `full`/`delta-raw`), `raw_bits` the raw-f32
+    /// equivalent of the same payload.
+    pub fn record_broadcast_msg(&mut self, transmitted_bits: f64, raw_bits: f64) {
+        self.record_broadcast(transmitted_bits);
+        self.bcast_msgs += 1;
+        self.total_bcast_raw_bits += raw_bits;
     }
 
     pub fn record_dropped(&mut self, bits: u64) {

@@ -2,7 +2,7 @@
 //! simple `key = value` config files, mirroring what the paper's §4 setup
 //! describes (models, workers, optimizer, batch split, quantizer per group).
 
-use crate::comm::{FaultPlan, RoundPolicy, RoundSpec};
+use crate::comm::{DownlinkPolicy, FaultPlan, RoundPolicy, RoundSpec};
 use crate::quant::{PayloadCodec, Scheme};
 use crate::sim::LinkModel;
 use crate::train::engine::LevelPolicy;
@@ -61,9 +61,12 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Number of synthetic eval examples.
     pub eval_examples: usize,
-    /// Whether the server re-broadcasts the averaged gradient quantized
-    /// (paper assumes full-precision broadcast; kept for ablations).
-    pub quantize_broadcast: bool,
+    /// How the server ships parameters back each round
+    /// (`full | delta-raw | delta-quantized:<scheme>`): the paper assumes
+    /// a full-precision broadcast; the delta policies quantize the
+    /// downlink through the same wire stack as the uplink (see
+    /// [`crate::comm::downlink`]).
+    pub downlink: DownlinkPolicy,
     /// Wire-v2 framing: per-tensor frames per uplink message (1 = the
     /// classic single-blob layout; >1 splits the flat gradient into that
     /// many framed tensors, each with its own scale).
@@ -108,7 +111,7 @@ impl Default for TrainConfig {
             seed: 42,
             eval_every: 50,
             eval_examples: 1024,
-            quantize_broadcast: false,
+            downlink: DownlinkPolicy::Full,
             tensor_frames: 1,
             codec: PayloadCodec::Raw,
             error_feedback: false,
@@ -186,7 +189,7 @@ impl TrainConfig {
                 "seed" => self.seed = v.parse()?,
                 "eval_every" => self.eval_every = v.parse()?,
                 "eval_examples" => self.eval_examples = v.parse()?,
-                "quantize_broadcast" => self.quantize_broadcast = v.parse()?,
+                "downlink" => self.downlink = DownlinkPolicy::parse(v)?,
                 "tensor_frames" => {
                     self.tensor_frames = v.parse()?;
                     anyhow::ensure!(self.tensor_frames >= 1, "tensor_frames must be >= 1");
@@ -335,6 +338,27 @@ mod tests {
         assert!(c.fault_plan.is_none());
         assert_eq!(c.round_policy, RoundPolicy::WaitAll);
         kv.insert("round_policy".to_string(), "sometimes".to_string());
+        assert!(c.apply_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn downlink_key() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.downlink, DownlinkPolicy::Full);
+        let mut kv = BTreeMap::new();
+        kv.insert("downlink".to_string(), "delta-raw".to_string());
+        c.apply_kv(&kv).unwrap();
+        assert_eq!(c.downlink, DownlinkPolicy::DeltaRaw);
+        kv.insert(
+            "downlink".to_string(),
+            "delta-quantized:dqsg:0.25".to_string(),
+        );
+        c.apply_kv(&kv).unwrap();
+        assert_eq!(
+            c.downlink,
+            DownlinkPolicy::DeltaQuantized(Scheme::Dithered { delta: 0.25 })
+        );
+        kv.insert("downlink".to_string(), "sometimes".to_string());
         assert!(c.apply_kv(&kv).is_err());
     }
 

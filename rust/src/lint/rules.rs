@@ -113,7 +113,13 @@ pub const RULES: &[Rule] = &[
         summary: "no Vec::new/vec!/to_vec/collect/with_capacity inside `*_into` decode \
                   functions, `fill_*` chunk kernels or `*_ef` encode lanes — the \
                   buffer-reuse contract runs both hot paths on caller-owned scratch",
-        scope: Scope::Modules(&["src/comm/", "src/quant/", "src/coding/", "src/prng/"]),
+        scope: Scope::Modules(&[
+            "src/comm/",
+            "src/quant/",
+            "src/coding/",
+            "src/prng/",
+            "src/testing/",
+        ]),
         check: check_alloc_in_decode,
     },
     Rule {
@@ -394,6 +400,10 @@ mod tests {
         let alloc = rule("alloc-in-decode").unwrap();
         assert!(alloc.applies_to("src/prng/mod.rs"));
         assert!(alloc.applies_to("src/coding/pack.rs"));
+        // the event-loop extension: the leader hot loop in src/testing/
+        // carries the same buffer-reuse contract as the codec kernels
+        assert!(alloc.applies_to("src/testing/cluster.rs"));
+        assert!(!panic.applies_to("src/testing/cluster.rs"));
         assert!(!panic.applies_to("src/prng/mod.rs"));
     }
 

@@ -27,7 +27,7 @@
 
 use ndq::cli::Args;
 use ndq::comm::net::NetAddr;
-use ndq::comm::{FaultPlan, RoundPolicy};
+use ndq::comm::{DownlinkPolicy, FaultPlan, RoundPolicy};
 use ndq::config::{OptKind, TrainConfig};
 use ndq::prng::DitherStream;
 use ndq::quant::{frame_slices, GradQuantizer, PayloadCodec, Scheme};
@@ -90,6 +90,11 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
         .opt("fault-plan", "none", "fault spec, e.g. drop:0.1;straggle:w2x8 (none = perfect link)")
         .opt("round-policy", "waitall", "waitall|quorum:K|deadline:SECS")
         .opt("link", "gigabit", "simulated link: gigabit|10g|LAT_S:BW_BPS")
+        .opt(
+            "downlink",
+            "full",
+            "leader->worker parameter lane: full|delta-raw|delta-quantized:<scheme>",
+        )
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("report", "", "write the JSON report to this path")
         .flag("ef", "error feedback: carry each worker's quantization residual into its next encode")
@@ -123,6 +128,7 @@ fn cmd_train(argv: Vec<String>) -> ndq::Result<()> {
     };
     cfg.round_policy = RoundPolicy::parse(&args.get("round-policy"))?;
     cfg.link = LinkModel::parse(&args.get("link"))?;
+    cfg.downlink = DownlinkPolicy::parse(&args.get("downlink"))?;
     cfg.artifacts_dir = args.get("artifacts");
     cfg.error_feedback = args.get_flag("ef");
 
@@ -186,6 +192,11 @@ fn cluster_opts(args: Args) -> Args {
         .opt("fault-plan", "none", "fault spec, e.g. drop:0.1;straggle:w2x8")
         .opt("round-policy", "waitall", "waitall|quorum:K|deadline:SECS")
         .opt("link", "gigabit", "simulated link: gigabit|10g|LAT_S:BW_BPS")
+        .opt(
+            "downlink",
+            "full",
+            "leader->worker parameter lane: full|delta-raw|delta-quantized:<scheme>",
+        )
         .opt("lr", "0.25", "step size on the synthetic quadratic")
         .opt("report", "", "write the JSON report to this path")
         .opt(
@@ -216,6 +227,7 @@ fn scenario_from_args(args: &Args) -> ndq::Result<ClusterScenario> {
         codec: PayloadCodec::parse(&args.get("codec"))?,
         levels_policy: LevelPolicy::parse(&args.get("levels-policy"))?,
         error_feedback: args.get_flag("ef"),
+        downlink: DownlinkPolicy::parse(&args.get("downlink"))?,
         lr: args.get_f32("lr")?,
         ..ClusterScenario::default()
     })
@@ -227,6 +239,7 @@ fn finish_cluster_report(args: &Args, report: &ndq::train::TrainReport) -> ndq::
     println!(
         "{}\n  rounds: {} run, {} failed\n  final synthetic loss: {:.6}\n  \
          uplink: {:.1} Kbit/msg transmitted, {:.1} raw-equivalent ({} messages folded)\n  \
+         downlink: {:.1} Kbit total transmitted, {:.1} raw-equivalent ({} broadcasts)\n  \
          fingerprint: {:016x}",
         report.config_label,
         report.delivery.len(),
@@ -235,6 +248,9 @@ fn finish_cluster_report(args: &Args, report: &ndq::train::TrainReport) -> ndq::
         report.comm.kbits_per_msg_transmitted(),
         report.comm.kbits_per_msg_raw(),
         report.comm.messages,
+        report.comm.total_bcast_bits / 1000.0,
+        report.comm.total_bcast_raw_bits / 1000.0,
+        report.comm.bcast_msgs,
         report.fingerprint(),
     );
     print_fault_summary(report);
@@ -345,10 +361,11 @@ fn append_bench_line(path: &str, report: &ndq::train::TrainReport) -> ndq::Resul
         "null".to_string()
     };
     let line = format!(
-        "{{\"ts\":{ts},\"rev\":\"{rev}\",\"label\":\"{}\",\"rounds_per_sec\":{:.3},\"transmitted_kbits_per_round\":{:.3},\"final_loss\":{final_loss},\"fingerprint\":\"{:016x}\"}}\n",
+        "{{\"ts\":{ts},\"rev\":\"{rev}\",\"label\":\"{}\",\"rounds_per_sec\":{:.3},\"transmitted_kbits_per_round\":{:.3},\"downlink_kbits_per_round\":{:.3},\"final_loss\":{final_loss},\"fingerprint\":\"{:016x}\"}}\n",
         report.config_label.replace('"', "'"),
         rounds_run as f64 / report.wall_secs.max(1e-9),
         report.comm.total_transmitted_bits / 1000.0 / rounds_run as f64,
+        report.comm.total_bcast_bits / 1000.0 / rounds_run as f64,
         report.fingerprint(),
     );
     let mut f = std::fs::OpenOptions::new()

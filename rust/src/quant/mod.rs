@@ -220,6 +220,25 @@ impl Frame {
     }
 }
 
+/// Reusable backing buffers for [`WireMsg::parse_from_scratch`]: the wire
+/// byte store and the parsed frame directory of a previously-decoded
+/// message, retired back to the pool via [`WireMsg::reclaim`]. Keeping the
+/// pair together means one pool object fully amortizes one in-flight
+/// message.
+#[derive(Debug, Default)]
+pub struct WireScratch {
+    bytes: Vec<u8>,
+    frames: Vec<Frame>,
+}
+
+impl WireScratch {
+    /// Pre-size the byte store so the first parse of an `n_params`-sized
+    /// message does not have to grow it mid-loop.
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self { bytes: Vec::with_capacity(bytes), frames: Vec::with_capacity(4) }
+    }
+}
+
 /// A quantized-gradient message exactly as it crosses the network: framed
 /// wire bytes plus a parsed frame directory. Encoders produce it through
 /// [`WireMsgBuilder`]; receivers reconstruct it with [`WireMsg::parse`],
@@ -241,8 +260,35 @@ pub struct WireMsg {
 
 impl WireMsg {
     /// Parse + validate a framed message from raw transport bytes.
-    // ndq-lint: allow(panic-path) every byte access is preceded by an ensure! length guard, and try_into unwraps are on fixed-width subslices; pinned by the hostile-bytes cases in tests/wire_v2_conformance.rs
     pub fn parse(bytes: Vec<u8>) -> crate::Result<WireMsg> {
+        Self::parse_pooled(bytes, Vec::new())
+    }
+
+    /// Parse reusing a caller-pooled buffer pair: `bytes` becomes the
+    /// message's backing store as-is, `frames` is cleared and refilled in
+    /// place so its capacity survives across messages. This is the
+    /// steady-state path of the socket leader's event loop, where a fresh
+    /// frame-directory allocation per upload would show up in the
+    /// alloc-counting regression test (`tests/serve_alloc.rs`).
+    pub fn parse_from_scratch(scratch: &mut WireScratch, payload: &[u8]) -> crate::Result<WireMsg> {
+        let mut bytes = std::mem::take(&mut scratch.bytes);
+        bytes.clear();
+        bytes.extend_from_slice(payload);
+        let frames = std::mem::take(&mut scratch.frames);
+        Self::parse_pooled(bytes, frames)
+    }
+
+    /// Hand a decoded message's buffers back to a [`WireScratch`] pool so
+    /// the next [`WireMsg::parse_from_scratch`] reuses both allocations.
+    pub fn reclaim(self, scratch: &mut WireScratch) {
+        scratch.bytes = self.bytes;
+        scratch.bytes.clear();
+        scratch.frames = self.frames;
+        scratch.frames.clear();
+    }
+
+    // ndq-lint: allow(panic-path) every byte access is preceded by an ensure! length guard, and try_into unwraps are on fixed-width subslices; pinned by the hostile-bytes cases in tests/wire_v2_conformance.rs
+    fn parse_pooled(bytes: Vec<u8>, mut frames: Vec<Frame>) -> crate::Result<WireMsg> {
         anyhow::ensure!(
             bytes.len() >= MSG_HEADER_BYTES + CHECKSUM_BYTES,
             "wire message truncated: {} bytes",
@@ -275,7 +321,8 @@ impl WireMsg {
         );
         let n_frames =
             usize::try_from(u32::from_le_bytes([bytes[5], bytes[6], bytes[7], bytes[8]]))?;
-        let mut frames = Vec::with_capacity(n_frames.min(4096));
+        frames.clear();
+        frames.reserve(n_frames.min(4096));
         let mut off = MSG_HEADER_BYTES;
         for f in 0..n_frames {
             anyhow::ensure!(

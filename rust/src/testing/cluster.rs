@@ -15,18 +15,29 @@
 //! determinism contract `tests/fault_injection.rs` pins via
 //! [`TrainReport::fingerprint`].
 //!
+//! The socket twin ([`serve_scenario`] / [`worker_connect`]) runs the same
+//! round fold over real streams: a single-threaded nonblocking event loop
+//! on the leader (no per-peer reader threads), per-peer write queues so a
+//! slow peer cannot stall the broadcast, and a [`DownlinkEncoder`] lane
+//! that ships parameters `full`, as raw deltas, or quantized through the
+//! same wire format the uplink uses.
+//!
 //! The synthetic task is distributed least squares: worker `w`'s round-`r`
 //! gradient is `(x - x*) + noise · ε(seed, w, r)` — correlated across
 //! workers (they share `x - x*`), which is the regime NDQSG's Alg.-2 side
 //! information needs.
 
-use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::comm::net::{FrameReader, NetAddr, NetListener, NetMsg, NetStream, NET_VERSION};
+use crate::comm::evloop::PeerSlot;
+use crate::comm::net::{
+    append_delta_coded_body, append_delta_raw_body, append_envelope, append_round_body,
+    DeltaPayload, FramePoll, FrameReader, NetAddr, NetListener, NetMsg, NetStream,
+    NET_KIND_DELTA, NET_KIND_GRAD, NET_KIND_ROUND, NET_VERSION,
+};
 use crate::comm::{
-    ChannelEvent, Delivery, Fault, FaultChannel, FaultPlan, RoundPolicy, RoundSpec, Session,
-    WorkerMsg,
+    ChannelEvent, Delivery, DownlinkEncoder, DownlinkFrame, DownlinkPolicy, DownlinkReceiver,
+    Fault, FaultChannel, FaultPlan, RoundPolicy, RoundSpec, Session, WorkerMsg,
 };
 use crate::prng::philox::splitmix64;
 use crate::prng::{DitherStream, Xoshiro256};
@@ -59,6 +70,12 @@ pub struct ClusterScenario {
     /// `Start` envelope, so loopback runs stay fingerprint-identical to
     /// the in-process engine.
     pub error_feedback: bool,
+    /// How the leader ships parameters each round (see
+    /// [`crate::comm::downlink`]). Under the delta policies workers hold a
+    /// shadow copy and evaluate at the *reconstructed* point; the harness
+    /// models the identical shadow via [`DownlinkEncoder::visible`], so
+    /// loopback runs stay fingerprint-identical.
+    pub downlink: DownlinkPolicy,
     /// SGD step on the synthetic quadratic (contraction factor `1 - lr`).
     pub lr: f32,
     /// Per-worker gradient noise std, relative to the shared signal.
@@ -82,6 +99,7 @@ impl Default for ClusterScenario {
             codec: PayloadCodec::Raw,
             levels_policy: LevelPolicy::Fixed,
             error_feedback: false,
+            downlink: DownlinkPolicy::Full,
             lr: 0.25,
             noise: 0.05,
             eval_every: 10,
@@ -107,13 +125,19 @@ impl ClusterScenario {
             format!(" levels={}", self.levels_policy.label())
         };
         let ef = if self.error_feedback { " ef=on" } else { "" };
+        let downlink = if self.downlink.is_full() {
+            String::new()
+        } else {
+            format!(" downlink={}", self.downlink.label())
+        };
         format!(
-            "cluster {} P={}{}{}{} policy={} faults={}",
+            "cluster {} P={}{}{}{}{} policy={} faults={}",
             scheme,
             self.workers,
             codec,
             levels,
             ef,
+            downlink,
             self.policy.label(),
             faults,
         )
@@ -193,6 +217,7 @@ impl ClusterHarness {
                 );
             }
         }
+        sc.downlink.validate(sc.codec)?;
         // validates codec negotiation for the base spec AND every spec the
         // level policy can emit — scenario errors surface at build time
         RoundDriver::new(
@@ -219,6 +244,7 @@ impl ClusterHarness {
         let schemes: Vec<Scheme> = base.worker_schemes(sc.workers);
         let mut driver =
             RoundDriver::new(base, sc.levels_policy.clone(), sc.policy, sc.workers)?;
+        driver.reserve_rounds(sc.rounds);
         let mut session = Session::new(&schemes, sc.seed, sc.n_params)?;
         let mut encoders: Vec<(Box<dyn GradQuantizer>, DitherStream)> = (0..sc.workers)
             .map(|p| (schemes[p].build(), DitherStream::new(sc.seed, p as u32)))
@@ -229,10 +255,14 @@ impl ClusterHarness {
             .error_feedback
             .then(|| (0..sc.workers).map(|_| EfState::new()).collect());
         let mut channel = FaultChannel::new(sc.plan.clone(), sc.seed, sc.workers, sc.link);
+        // the downlink lane: the single billing site for broadcast bits,
+        // and the model of the point workers actually see each round
+        let mut dl = DownlinkEncoder::new(sc.downlink, sc.codec, sc.seed, sc.n_params)?;
 
         let task = QuadTask::new(sc.seed, sc.n_params, sc.noise);
         let mut x = vec![0f32; sc.n_params];
         let mut grad = vec![0f32; sc.n_params];
+        let mut events: Vec<ChannelEvent> = Vec::new();
 
         for round in 0..sc.rounds {
             if session.live_workers() == 0 {
@@ -248,16 +278,21 @@ impl ClusterHarness {
                     *q = ws[p].build();
                 }
             }
-            let loss_now = task.eval(&x);
+            // ship (and bill) the round's broadcast; everything the
+            // workers compute this round happens at the worker-visible
+            // point (= x under `full`, the reconstructed shadow otherwise)
+            dl.broadcast(round as u64, &x, &mut session)?;
+            let visible = dl.visible();
+            let loss_now = task.eval(visible);
             // delayed releases first, then this round's uplinks in worker
             // order — the arrival order is immaterial (the exchange folds
             // canonically) but fixing it keeps the ledger bit-stable
-            let mut events = channel.flush(round as u64);
+            channel.flush_into(round as u64, &mut events);
             for w in 0..sc.workers {
                 if session.is_dead(w) {
                     continue; // tombstone already processed
                 }
-                task.grad_into(w, round as u64, &x, &mut grad);
+                task.grad_into(w, round as u64, visible, &mut grad);
                 let (q, stream) = &mut encoders[w];
                 let wire = match efs.as_mut() {
                     Some(efs) => efs[w].encode_coded(
@@ -268,10 +303,16 @@ impl ClusterHarness {
                     )?,
                     None => q.encode_coded(&grad, &mut stream.round(round as u64), spec.codec),
                 };
-                events.extend(channel.feed(WorkerMsg::new(w, round as u64, loss_now, wire)));
+                channel.feed_into(
+                    WorkerMsg::new(w, round as u64, loss_now, wire),
+                    &mut events,
+                );
             }
-            let fold =
-                driver.fold_events(&mut session, round as u64, EventSource::Batch(events))?;
+            let fold = driver.fold_events(
+                &mut session,
+                round as u64,
+                EventSource::Batch(&mut events),
+            )?;
             let train_loss = match fold {
                 RoundFold::Stepped {
                     average,
@@ -281,7 +322,6 @@ impl ClusterHarness {
                     for (xi, gi) in x.iter_mut().zip(&average) {
                         *xi -= sc.lr * gi;
                     }
-                    session.record_broadcast(32.0 * sc.n_params as f64);
                     session.recycle(average);
                     train_loss
                 }
@@ -321,10 +361,10 @@ pub fn run_scenario(sc: ClusterScenario) -> crate::Result<TrainReport> {
 /// analogue.
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
-    /// Wall-clock bound on each handshake read and on each round's upload
-    /// collection window — the per-connection backpressure valve. This is
-    /// transport plumbing only: *billing* deadlines stay virtual, inside
-    /// the scenario's [`RoundPolicy`], so a slow real network changes when
+    /// Wall-clock bound on the accept/handshake phase and on each round's
+    /// sweep — the per-round backpressure valve. This is transport
+    /// plumbing only: *billing* deadlines stay virtual, inside the
+    /// scenario's [`RoundPolicy`], so a slow real network changes when
     /// the leader gives up on a peer but never moves the fingerprint of
     /// the rounds it completes.
     pub io_timeout: Duration,
@@ -338,71 +378,30 @@ impl Default for ServeOptions {
     }
 }
 
-/// What a connection's reader thread forwards to the round loop.
-enum Upload {
-    Grad {
-        worker: usize,
-        round: u64,
-        loss: f32,
-        metrics: BitMetrics,
-        wire: Vec<u8>,
-    },
-    /// EOF, framing error, or protocol violation: the peer is gone.
-    Dead { worker: usize },
-}
-
-fn spawn_reader(worker: usize, mut stream: NetStream, tx: mpsc::Sender<Upload>) {
-    let _ = std::thread::Builder::new()
-        .name(format!("ndq-read-{worker}"))
-        .spawn(move || {
-            // pooled per-connection read buffer: one FrameReader reused
-            // across every envelope this peer ever sends
-            let mut reader = FrameReader::new();
-            loop {
-                match reader.read_msg(&mut stream) {
-                    Ok(NetMsg::Grad {
-                        worker: w,
-                        round,
-                        loss,
-                        metrics,
-                        wire,
-                    }) => {
-                        if tx
-                            .send(Upload::Grad {
-                                worker: w as usize,
-                                round,
-                                loss,
-                                metrics,
-                                wire,
-                            })
-                            .is_err()
-                        {
-                            return; // leader is done listening
-                        }
-                    }
-                    // Bye, EOF, a bad CRC, or a non-Grad kind mid-run all
-                    // mean the same thing to the round loop
-                    _ => {
-                        let _ = tx.send(Upload::Dead { worker });
-                        return;
-                    }
-                }
-            }
-        });
-}
+/// Backoff while the accept loop waits for the next connection.
+const ACCEPT_IDLE: Duration = Duration::from_millis(1);
+/// Backoff when a sweep pass over every socket made no progress.
+const SWEEP_IDLE: Duration = Duration::from_micros(200);
 
 /// The socket leader (`ndq serve`): the [`ClusterHarness`] round loop with
 /// real peers on the other side of a [`NetListener`] instead of in-process
 /// encoders. Accepts exactly `sc.workers` connections, handshakes each
-/// (`Hello`/`Start`), then per round broadcasts `Round{spec, params}` and
-/// collects one `Grad` per live worker — feeding the uploads through the
-/// same leader-side [`FaultChannel`] (virtual clock, seeded jitter) and
-/// the same [`RoundDriver`] fold in the same worker order, so a loopback
-/// run is **fingerprint-identical** to [`run_scenario`] on the same
-/// scenario. Peers that vanish mid-run (EOF, timeout past the
-/// [`ServeOptions::io_timeout`] valve, write failure) are billed as
-/// first-class [`Fault::Disconnect`] tombstones, exactly like a scripted
-/// disconnect.
+/// (`Hello`/`Start`), then runs a **single-threaded nonblocking event
+/// loop**: per round it encodes the downlink payload once (full params,
+/// raw delta, or quantized delta per [`ClusterScenario::downlink`]),
+/// frames it once, and queues the bytes on every live peer's write buffer
+/// — a slow peer delays only itself, never the broadcast — then sweeps all
+/// sockets, draining write queues and polling [`PeerSlot`] frame
+/// accumulators until every awaited uplink is in or the wall-clock valve
+/// trips. Uploads feed the same [`RoundDriver`] fold in the same worker
+/// order as the in-process engine (through the leader-side
+/// [`FaultChannel`] whenever the scenario scripts faults or bills under a
+/// virtual deadline), so a loopback run is **fingerprint-identical** to
+/// [`run_scenario`] on the same scenario. Peers that vanish mid-run (EOF,
+/// write failure, protocol garbage) are billed as first-class
+/// [`Fault::Disconnect`] tombstones, exactly like a scripted disconnect;
+/// a live peer that merely misses the valve is billed as a dropped
+/// delivery and keeps its connection.
 pub fn serve_scenario(
     sc: ClusterScenario,
     addr: &NetAddr,
@@ -415,7 +414,7 @@ pub fn serve_scenario(
 /// ephemeral-port pattern (`tcp:127.0.0.1:0` +
 /// [`NetListener::local_addr`]) needs the bound address *before* the
 /// accept loop starts.
-// ndq-lint: allow(wall-clock) transport backpressure (socket deadline valve) + report telemetry; fingerprints stay clock-free
+// ndq-lint: allow(wall-clock) transport backpressure (accept/sweep valves, idle backoff) + report telemetry; fingerprints stay clock-free
 pub fn serve_listener(
     sc: ClusterScenario,
     listener: NetListener,
@@ -425,13 +424,31 @@ pub fn serve_listener(
     ClusterHarness::new(sc.clone())?;
     let t0 = Instant::now();
 
-    let (tx, rx) = mpsc::channel::<Upload>();
-    let mut conns: Vec<Option<NetStream>> = Vec::with_capacity(sc.workers);
-    for slot in 0..sc.workers {
-        let mut stream = listener.accept()?;
+    // --- handshake phase: accept + greet every worker ------------------
+    listener.set_nonblocking(true)?;
+    // per-connection read slab: an uplink is one framed WireMsg plus a
+    // small envelope, never larger than the raw gradient itself
+    let read_slab = 8 * sc.n_params + 256;
+    let mut peers: Vec<Option<PeerSlot>> = Vec::with_capacity(sc.workers);
+    let mut hs_reader = FrameReader::new();
+    let accept_deadline = Instant::now() + opts.io_timeout;
+    while peers.len() < sc.workers {
+        let Some(mut stream) = listener.try_accept()? else {
+            anyhow::ensure!(
+                Instant::now() < accept_deadline,
+                "accepted {} of {} workers before the handshake valve expired",
+                peers.len(),
+                sc.workers
+            );
+            std::thread::sleep(ACCEPT_IDLE);
+            continue;
+        };
+        let slot = peers.len();
+        // the handshake is the one blocking exchange per peer (bounded by
+        // the read-timeout valve); the slot flips to nonblocking after
+        stream.set_nonblocking(false)?;
         stream.set_read_timeout(Some(opts.io_timeout))?;
-        let mut reader = FrameReader::new();
-        match reader.read_msg(&mut stream)? {
+        match hs_reader.read_msg(&mut stream)? {
             NetMsg::Hello { version } => anyhow::ensure!(
                 version == NET_VERSION,
                 "worker {slot} speaks protocol v{version}, leader speaks v{NET_VERSION}"
@@ -449,23 +466,39 @@ pub fn serve_listener(
             seed: sc.seed,
             noise: sc.noise,
             error_feedback: sc.error_feedback,
+            downlink: sc.downlink,
         }
         .write_to(&mut stream)?;
-        // the reader thread owns blocking reads from here on; the round
-        // loop bounds its waits via rx.recv_timeout instead
         stream.set_read_timeout(None)?;
-        spawn_reader(slot, stream.try_clone()?, tx.clone());
-        conns.push(Some(stream));
+        peers.push(Some(PeerSlot::new(stream, read_slab)?));
     }
-    drop(tx); // rx disconnects once every reader thread has exited
 
     let base = sc.base_spec();
     let schemes: Vec<Scheme> = base.worker_schemes(sc.workers);
     let mut driver = RoundDriver::new(base, sc.levels_policy.clone(), sc.policy, sc.workers)?;
+    driver.reserve_rounds(sc.rounds);
     let mut session = Session::new(&schemes, sc.seed, sc.n_params)?;
     let mut channel = FaultChannel::new(sc.plan.clone(), sc.seed, sc.workers, sc.link);
+    let mut dl = DownlinkEncoder::new(sc.downlink, sc.codec, sc.seed, sc.n_params)?;
     let task = QuadTask::new(sc.seed, sc.n_params, sc.noise);
     let mut x = vec![0f32; sc.n_params];
+
+    // Scripted faults need the seeded per-(worker, round) fault decisions,
+    // and virtual deadlines need the simulated arrival clock — both live
+    // in the FaultChannel, so those scenarios route every accepted uplink
+    // through it (identical event assembly to the in-process engine).
+    // Clean WaitAll/Quorum runs take the pooled `offer_msg` fast path
+    // instead; both paths bill exactly the framed bits.
+    let virtual_link =
+        !sc.plan.is_empty() || matches!(sc.policy, RoundPolicy::Deadline(_));
+
+    // persistent round buffers: the steady-state loop reuses all of them
+    // (the leader alloc-regression test pins this)
+    let mut events: Vec<ChannelEvent> = Vec::new();
+    let mut msgs: Vec<WorkerMsg> = Vec::new();
+    let mut pending: Vec<Option<WorkerMsg>> = vec![None; sc.workers];
+    let mut body: Vec<u8> = Vec::new();
+    let mut framed: Vec<u8> = Vec::new();
 
     for round in 0..sc.rounds {
         if session.live_workers() == 0 {
@@ -476,121 +509,189 @@ pub fn serve_listener(
             session.apply_spec(&spec)?;
         }
 
-        // broadcast the round plan + replicated params to live peers; a
-        // failed write means the peer is gone (tombstoned below)
-        let mut awaiting = vec![false; sc.workers];
+        // encode the downlink once, frame it once, queue it everywhere;
+        // billing happens inside `broadcast` (the single billing site)
+        body.clear();
+        let kind = match dl.broadcast(round as u64, &x, &mut session)? {
+            DownlinkFrame::Full(p) => {
+                append_round_body(&mut body, round as u64, &spec, p);
+                NET_KIND_ROUND
+            }
+            DownlinkFrame::DeltaRaw(d) => {
+                append_delta_raw_body(&mut body, round as u64, &spec, d);
+                NET_KIND_DELTA
+            }
+            DownlinkFrame::Coded(wire) => {
+                append_delta_coded_body(&mut body, round as u64, &spec, wire);
+                NET_KIND_DELTA
+            }
+        };
+        framed.clear();
+        append_envelope(&mut framed, kind, &body)?;
         for w in 0..sc.workers {
             if session.is_dead(w) {
                 continue; // tombstone already processed
             }
-            awaiting[w] = true;
-            if let Some(conn) = conns[w].as_mut() {
-                let msg = NetMsg::Round {
-                    round: round as u64,
-                    spec,
-                    params: x.clone(),
-                };
-                if msg.write_to(conn).is_err() {
-                    conns[w] = None;
-                }
+            if let Some(peer) = peers[w].as_mut() {
+                peer.queue(&framed);
             }
         }
 
-        // collect one upload per awaited peer, bounded by the wall-clock
-        // valve; stale rounds and duplicate uplinks are transport noise
-        let mut pending: Vec<Option<(f32, BitMetrics, Vec<u8>)>> = vec![None; sc.workers];
-        let mut outstanding = (0..sc.workers)
-            .filter(|&w| awaiting[w] && conns[w].is_some())
-            .count();
+        // delayed virtual releases land ahead of this round's arrivals,
+        // exactly like the in-process engine's event assembly
+        channel.flush_into(round as u64, &mut events);
+
+        // --- the sweep: one thread over every socket -------------------
+        // Drain write queues, poll frame accumulators, and park each
+        // worker's current-round uplink until every awaited peer has
+        // reported, every queued broadcast byte is out, or the valve
+        // trips. Anything that is not this worker's current-round uplink
+        // (stale round, duplicate, misrouted id) is transport noise the
+        // exchange bills on its reject paths.
         let deadline = Instant::now() + opts.io_timeout;
-        while outstanding > 0 {
-            let left = deadline.saturating_duration_since(Instant::now());
-            if left.is_zero() {
-                break;
-            }
-            match rx.recv_timeout(left) {
-                Ok(Upload::Grad {
-                    worker,
-                    round: r,
-                    loss,
-                    metrics,
-                    wire,
-                }) => {
-                    if worker < sc.workers
-                        && r == round as u64
-                        && awaiting[worker]
-                        && pending[worker].is_none()
-                    {
-                        pending[worker] = Some((loss, metrics, wire));
-                        outstanding -= 1;
-                    }
+        loop {
+            let mut outstanding = 0usize;
+            let mut backlog = 0usize;
+            let mut progress = false;
+            for w in 0..sc.workers {
+                let Some(peer) = peers[w].as_mut() else {
+                    continue;
+                };
+                let mut dead = false;
+                match peer.flush_queue() {
+                    Ok(true) => {}
+                    Ok(false) => backlog += 1,
+                    Err(_) => dead = true,
                 }
-                Ok(Upload::Dead { worker }) => {
-                    if worker < sc.workers && conns[worker].is_some() {
-                        conns[worker] = None;
-                        if awaiting[worker] && pending[worker].is_none() {
-                            outstanding -= 1;
+                while !dead {
+                    match peer.poll_frame() {
+                        Ok(FramePoll::Pending) => break,
+                        Ok(FramePoll::Eof) | Err(_) => dead = true,
+                        Ok(FramePoll::Ready) => {
+                            progress = true;
+                            let (fkind, fbody) = peer.frame();
+                            if fkind != NET_KIND_GRAD {
+                                // `Bye` or an unexpected kind mid-run:
+                                // the peer is done uploading either way
+                                dead = true;
+                            } else if let Ok(view) = NetMsg::decode_grad_view(fbody) {
+                                let mut scratch = session.take_wire_scratch();
+                                match WireMsg::parse_from_scratch(&mut scratch, view.wire) {
+                                    Ok(wire) => {
+                                        let msg = WorkerMsg {
+                                            worker: view.worker as usize,
+                                            round: view.round,
+                                            loss: view.loss,
+                                            metrics: view.metrics,
+                                            wire,
+                                        };
+                                        if msg.worker == w
+                                            && msg.round == round as u64
+                                            && pending[w].is_none()
+                                        {
+                                            pending[w] = Some(msg);
+                                        } else {
+                                            msgs.push(msg);
+                                        }
+                                    }
+                                    // framing garbage from a live peer:
+                                    // bill it like a corrupted delivery,
+                                    // don't kill the run
+                                    Err(_) => events.push(ChannelEvent {
+                                        worker: w,
+                                        round: round as u64,
+                                        loss: view.loss,
+                                        arrival_s: 0.0,
+                                        metrics: view.metrics,
+                                        payload: Delivery::Lost {
+                                            bits: view.wire.len() as u64 * 8,
+                                            fault: Fault::Corrupt,
+                                        },
+                                    }),
+                                }
+                                peer.consume();
+                            } else {
+                                // mangled envelope body on an intact
+                                // frame: protocol violation, peer is gone
+                                dead = true;
+                            }
                         }
                     }
                 }
-                Err(_) => break, // valve expired, or every reader exited
+                if dead {
+                    // socket gone: EOF, hard IO/framing error, protocol
+                    // violation. Drop the slot now; the ledger entry is
+                    // decided after the sweep (an already-parked uplink
+                    // still counts for this round, like the old
+                    // reader-thread transport).
+                    peers[w] = None;
+                    progress = true;
+                } else if !session.is_dead(w) && pending[w].is_none() {
+                    outstanding += 1;
+                }
+            }
+            if outstanding == 0 && backlog == 0 {
+                break;
+            }
+            if Instant::now() >= deadline {
+                break;
+            }
+            if !progress {
+                std::thread::sleep(SWEEP_IDLE);
             }
         }
 
-        // identical event assembly to the in-process engine: delayed
-        // releases first, then this round's uplinks in worker order,
-        // through the same virtual-clock fault channel
-        let mut events = channel.flush(round as u64);
+        // --- per-worker resolution, in deterministic worker order ------
         for w in 0..sc.workers {
             if session.is_dead(w) {
                 continue;
             }
             match pending[w].take() {
-                Some((loss, metrics, bytes)) => {
-                    let bits = bytes.len() as u64 * 8;
-                    match WireMsg::parse(bytes) {
-                        Ok(wire) => events.extend(channel.feed(WorkerMsg {
-                            worker: w,
-                            round: round as u64,
-                            loss,
-                            metrics,
-                            wire,
-                        })),
-                        // framing garbage from a live peer: bill it like
-                        // a corrupted delivery, don't kill the run
-                        Err(_) => events.push(ChannelEvent {
-                            worker: w,
-                            round: round as u64,
-                            loss,
-                            arrival_s: 0.0,
-                            metrics,
-                            payload: Delivery::Lost {
-                                bits,
-                                fault: Fault::Corrupt,
-                            },
-                        }),
+                Some(msg) => {
+                    if virtual_link {
+                        channel.feed_into(msg, &mut events);
+                    } else {
+                        msgs.push(msg);
                     }
                 }
-                None => {
-                    // socket-dead or past the valve: a first-class
-                    // disconnect, billed exactly like a scripted one
-                    conns[w] = None;
-                    events.push(ChannelEvent {
-                        worker: w,
-                        round: round as u64,
-                        loss: f32::NAN,
-                        arrival_s: 0.0,
-                        metrics: BitMetrics::default(),
-                        payload: Delivery::Lost {
-                            bits: 0,
-                            fault: Fault::Disconnect,
-                        },
-                    });
-                }
+                // socket-dead with nothing parked: a first-class
+                // disconnect, billed exactly like a scripted one
+                None if peers[w].is_none() => events.push(ChannelEvent {
+                    worker: w,
+                    round: round as u64,
+                    loss: f32::NAN,
+                    arrival_s: 0.0,
+                    metrics: BitMetrics::default(),
+                    payload: Delivery::Lost {
+                        bits: 0,
+                        fault: Fault::Disconnect,
+                    },
+                }),
+                // live socket past the valve: the round gives up on it
+                // (a dropped delivery) but the peer keeps its connection
+                // — its stale uplink will be billed late next round
+                None => events.push(ChannelEvent {
+                    worker: w,
+                    round: round as u64,
+                    loss: f32::NAN,
+                    arrival_s: 0.0,
+                    metrics: BitMetrics::default(),
+                    payload: Delivery::Lost {
+                        bits: 0,
+                        fault: Fault::Drop,
+                    },
+                }),
             }
         }
 
-        let fold = driver.fold_events(&mut session, round as u64, EventSource::Batch(events))?;
+        let fold = driver.fold_events(
+            &mut session,
+            round as u64,
+            EventSource::Mixed {
+                events: &mut events,
+                msgs: &mut msgs,
+            },
+        )?;
         let train_loss = match fold {
             RoundFold::Stepped {
                 average,
@@ -600,7 +701,6 @@ pub fn serve_listener(
                 for (xi, gi) in x.iter_mut().zip(&average) {
                     *xi -= sc.lr * gi;
                 }
-                session.record_broadcast(32.0 * sc.n_params as f64);
                 session.recycle(average);
                 train_loss
             }
@@ -619,9 +719,18 @@ pub fn serve_listener(
         }
     }
 
-    for conn in conns.iter_mut().filter_map(Option::as_mut) {
-        let _ = NetMsg::Bye.write_to(conn);
-        conn.shutdown();
+    // orderly shutdown: drain any still-queued broadcast bytes in
+    // blocking mode first (interleaving `Bye` into a half-written
+    // envelope would corrupt the stream), then say goodbye
+    for peer in peers.iter_mut().flatten() {
+        if peer.stream().set_nonblocking(false).is_err() {
+            continue;
+        }
+        if peer.flush_queue().is_err() {
+            continue;
+        }
+        let _ = NetMsg::Bye.write_to(peer.stream());
+        peer.stream().shutdown();
     }
 
     Ok(driver.into_report(
@@ -636,9 +745,12 @@ pub fn serve_listener(
 /// The socket peer (`ndq worker --connect`): dials the leader (retrying
 /// until `connect_timeout` — workers may start before the leader binds),
 /// handshakes, then serves rounds until `Bye`. Everything the peer needs —
-/// task shard, dither stream, per-round quantizer — derives from the
-/// `Start` envelope, and the round math is [`QuadTask`], so its uplinks
-/// are bit-identical to what the in-process harness would have encoded.
+/// task shard, dither stream, per-round quantizer, downlink shadow —
+/// derives from the `Start` envelope, and the round math is [`QuadTask`],
+/// so its uplinks are bit-identical to what the in-process harness would
+/// have encoded. Under a delta downlink policy the peer reconstructs the
+/// round's parameters into its [`DownlinkReceiver`] shadow and evaluates
+/// there — the same point the leader's [`DownlinkEncoder`] models.
 /// Returns the number of rounds served.
 pub fn worker_connect(addr: &NetAddr, connect_timeout: Duration) -> crate::Result<u64> {
     let mut stream = NetStream::connect_retry(addr, connect_timeout)?;
@@ -647,7 +759,7 @@ pub fn worker_connect(addr: &NetAddr, connect_timeout: Duration) -> crate::Resul
     }
     .write_to(&mut stream)?;
     let mut reader = FrameReader::new();
-    let (id, workers, n_params, seed, noise, error_feedback) =
+    let (id, workers, n_params, seed, noise, error_feedback, downlink) =
         match reader.read_msg(&mut stream)? {
             NetMsg::Start {
                 assigned_id,
@@ -656,6 +768,7 @@ pub fn worker_connect(addr: &NetAddr, connect_timeout: Duration) -> crate::Resul
                 seed,
                 noise,
                 error_feedback,
+                downlink,
                 ..
             } => (
                 assigned_id as usize,
@@ -664,11 +777,13 @@ pub fn worker_connect(addr: &NetAddr, connect_timeout: Duration) -> crate::Resul
                 seed,
                 noise,
                 error_feedback,
+                downlink,
             ),
             other => anyhow::bail!("expected start, got message kind {}", other.kind()),
         };
 
     let task = QuadTask::new(seed, n_params, noise);
+    let mut rx = DownlinkReceiver::new(downlink, seed, n_params)?;
     let mut dither = DitherStream::new(seed, id as u32);
     let mut grad = vec![0f32; n_params];
     // rebuilt only when the broadcast spec changes — the same
@@ -679,49 +794,53 @@ pub fn worker_connect(addr: &NetAddr, connect_timeout: Duration) -> crate::Resul
     let mut ef = error_feedback.then(EfState::new);
     let mut served = 0u64;
     loop {
-        match reader.read_msg(&mut stream)? {
+        let (round, spec) = match reader.read_msg(&mut stream)? {
             NetMsg::Round {
                 round,
                 spec,
                 params,
             } => {
-                anyhow::ensure!(
-                    params.len() == n_params,
-                    "leader resized the model mid-run ({} -> {})",
-                    n_params,
-                    params.len()
-                );
-                let stale = match &current {
-                    Some((s, _)) => *s != spec,
-                    None => true,
-                };
-                if stale {
-                    spec.validate()?;
-                    current = Some((spec, spec.worker_scheme(id, workers).build()));
+                rx.apply_full(&params)?;
+                (round, spec)
+            }
+            NetMsg::RoundDelta { round, spec, delta } => {
+                match delta {
+                    DeltaPayload::Raw(d) => rx.apply_raw_delta(&d)?,
+                    DeltaPayload::Coded(b) => rx.apply_coded(round, &b)?,
                 }
-                let (_, q) = current.as_mut().expect("spec installed above");
-                let loss = task.eval(&params);
-                task.grad_into(id, round, &params, &mut grad);
-                let wire = match ef.as_mut() {
-                    Some(ef) => {
-                        ef.encode_coded(q.as_mut(), &grad, &mut dither.round(round), spec.codec)?
-                    }
-                    None => q.encode_coded(&grad, &mut dither.round(round), spec.codec),
-                };
-                let msg = WorkerMsg::new(id, round, loss, wire);
-                NetMsg::Grad {
-                    worker: id as u32,
-                    round,
-                    loss,
-                    metrics: msg.metrics,
-                    wire: msg.wire.into_bytes(),
-                }
-                .write_to(&mut stream)?;
-                served += 1;
+                (round, spec)
             }
             NetMsg::Bye => break,
             other => anyhow::bail!("unexpected message kind {} mid-run", other.kind()),
+        };
+        let stale = match &current {
+            Some((s, _)) => *s != spec,
+            None => true,
+        };
+        if stale {
+            spec.validate()?;
+            current = Some((spec, spec.worker_scheme(id, workers).build()));
         }
+        let (_, q) = current.as_mut().expect("spec installed above");
+        let params = rx.params();
+        let loss = task.eval(params);
+        task.grad_into(id, round, params, &mut grad);
+        let wire = match ef.as_mut() {
+            Some(ef) => {
+                ef.encode_coded(q.as_mut(), &grad, &mut dither.round(round), spec.codec)?
+            }
+            None => q.encode_coded(&grad, &mut dither.round(round), spec.codec),
+        };
+        let msg = WorkerMsg::new(id, round, loss, wire);
+        NetMsg::Grad {
+            worker: id as u32,
+            round,
+            loss,
+            metrics: msg.metrics,
+            wire: msg.wire.into_bytes(),
+        }
+        .write_to(&mut stream)?;
+        served += 1;
     }
     stream.shutdown();
     Ok(served)
@@ -794,5 +913,29 @@ mod tests {
         assert_eq!(report.comm.late_msgs, 30);
         assert!(report.comm.late_bits > 0);
         assert!(report.final_eval_loss < 0.02);
+    }
+
+    #[test]
+    fn quantized_downlink_bills_fewer_broadcast_bits() {
+        let full = run_scenario(ClusterScenario::default()).unwrap();
+        let sc = ClusterScenario {
+            downlink: DownlinkPolicy::DeltaQuantized(Scheme::Dithered {
+                delta: 1.0 / 3.0,
+            }),
+            ..ClusterScenario::default()
+        };
+        let quant = run_scenario(sc).unwrap();
+        assert_eq!(quant.rounds_failed, 0);
+        assert!(quant.final_eval_loss < 0.1, "{}", quant.final_eval_loss);
+        // one broadcast per round either way, same raw-equivalent lane...
+        assert_eq!(quant.comm.bcast_msgs, full.comm.bcast_msgs);
+        assert_eq!(quant.comm.total_bcast_raw_bits, full.comm.total_bcast_raw_bits);
+        // ...but the quantized lane must ship strictly fewer wire bits
+        assert!(
+            quant.comm.total_bcast_bits < full.comm.total_bcast_bits,
+            "quantized downlink did not reduce broadcast bits: {} vs {}",
+            quant.comm.total_bcast_bits,
+            full.comm.total_bcast_bits
+        );
     }
 }

@@ -237,8 +237,21 @@ pub enum RoundFold {
 pub enum EventSource<'a> {
     /// A fully-materialized batch: every event is offered (post-completion
     /// arrivals bill as late in the ledger), then the round finishes —
-    /// the single-threaded harness/hierarchy semantics.
-    Batch(Vec<ChannelEvent>),
+    /// the single-threaded harness/hierarchy semantics. The buffer is
+    /// drained, not consumed, so the caller's `Vec` keeps its capacity for
+    /// the next round (the event loop's steady state allocates nothing).
+    Batch(&'a mut Vec<ChannelEvent>),
+    /// The socket event loop's pooled path: ledger events (loss
+    /// tombstones, delayed releases, fault-channel deliveries) plus
+    /// already-parsed current-round uplinks. Events are offered first,
+    /// then the messages in buffer order via
+    /// [`crate::comm::Exchange::offer_msg`], whose retired wire buffers
+    /// recycle into the session's scratch pool — the leader's steady
+    /// state allocates nothing. Both buffers are drained, not consumed.
+    Mixed {
+        events: &'a mut Vec<ChannelEvent>,
+        msgs: &'a mut Vec<WorkerMsg>,
+    },
     /// A live stream pulled until the [`RoundPolicy`] completes the round —
     /// the threaded trainer semantics.
     Stream(&'a mut dyn FnMut() -> crate::Result<ChannelEvent>),
@@ -268,8 +281,16 @@ pub fn run_exchange(
     let mut ex = session.begin_exchange(round, policy);
     match source {
         EventSource::Batch(events) => {
-            for ev in events {
+            for ev in events.drain(..) {
                 ex.offer(ev);
+            }
+        }
+        EventSource::Mixed { events, msgs } => {
+            for ev in events.drain(..) {
+                ex.offer(ev);
+            }
+            for m in msgs.drain(..) {
+                ex.offer_msg(m);
             }
         }
         EventSource::Stream(next) => {
@@ -406,6 +427,14 @@ impl RoundDriver {
     /// The level policy driving the spec plan.
     pub fn level_policy(&self) -> &LevelPolicy {
         &self.levels
+    }
+
+    /// Pre-size the per-round bookkeeping (delivery records, learning
+    /// curve) for a run of known length, so a bounded round loop never
+    /// grows them mid-run — the leader alloc-regression test pins this.
+    pub fn reserve_rounds(&mut self, rounds: usize) {
+        self.delivery.reserve(rounds.saturating_sub(self.delivery.len()));
+        self.history.reserve(rounds + 1);
     }
 
     /// Rounds that produced no aggregate so far.

@@ -421,7 +421,7 @@ impl HierarchyAggregator {
                         events.extend(ch.feed(m));
                     }
                     let run =
-                        run_exchange(session, round, lf.policy, EventSource::Batch(events))
+                        run_exchange(session, round, lf.policy, EventSource::Batch(&mut events))
                             .map_err(|e| anyhow::anyhow!("group {g}: {e}"))?;
                     leaf_expected += run.expected;
                     match run.outcome {

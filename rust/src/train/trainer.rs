@@ -7,7 +7,7 @@
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use crate::comm::{ChannelEvent, FaultChannel, RoundPolicy, Session};
+use crate::comm::{ChannelEvent, DownlinkEncoder, FaultChannel, RoundPolicy, Session};
 use crate::config::{OptKind, TrainConfig};
 use crate::data::{Batch, ImageDataset, ImageKind, TokenDataset};
 use crate::opt;
@@ -187,6 +187,8 @@ impl TrainReport {
             self.comm.metric_fallback_frames,
             self.comm.total_framed_bits.to_bits(),
             self.comm.total_bcast_bits.to_bits(),
+            self.comm.bcast_msgs,
+            self.comm.total_bcast_raw_bits.to_bits(),
             self.comm.dropped_msgs,
             self.comm.dropped_bits,
             self.comm.duplicate_msgs,
@@ -280,6 +282,7 @@ impl Trainer {
         // setup path can never disagree.
         let base = cfg.base_spec();
         base.validate()?;
+        cfg.downlink.validate(cfg.codec)?;
         if cfg.error_feedback {
             for s in [Some(cfg.scheme), cfg.scheme_p2].into_iter().flatten() {
                 anyhow::ensure!(
@@ -332,6 +335,9 @@ impl Trainer {
         }
         if self.cfg.error_feedback {
             label.push_str(" ef=on");
+        }
+        if !self.cfg.downlink.is_full() {
+            label.push_str(&format!(" downlink={}", self.cfg.downlink.label()));
         }
         if self.cfg.fault_plan.is_some() {
             label.push_str(" faults=on");
@@ -422,6 +428,12 @@ impl Trainer {
             cfg.round_policy,
             cfg.workers,
         )?;
+        // The downlink lane: the single billing site for broadcast bits,
+        // and — under the delta policies — the model of the parameters the
+        // workers actually see (the reconstructed shadow, not the leader's
+        // full-precision iterate).
+        let mut dl = DownlinkEncoder::new(cfg.downlink, cfg.codec, cfg.seed, self.n_params)?;
+        let mut visible: Arc<Vec<f32>> = Arc::new(vec![0.0; self.n_params]);
 
         // With a fault plan or a non-WaitAll policy, worker messages route
         // through a FaultChannel interposer: the trainer then consumes
@@ -480,7 +492,16 @@ impl Trainer {
             // worker receives the spec inside its round command
             let spec = driver.spec_for_round(round)?;
             session.apply_spec(&spec)?;
-            // leader: broadcast round start (params are logically replicated)
+            // ship (and bill) the round's broadcast; workers compute at the
+            // worker-visible point — the iterate itself under `full`, the
+            // downlink-reconstructed shadow under the delta policies
+            dl.broadcast(round as u64, &self.params, &mut session)?;
+            let frame_params = if cfg.downlink.is_full() {
+                Arc::clone(&self.params)
+            } else {
+                Arc::make_mut(&mut visible).copy_from_slice(dl.visible());
+                Arc::clone(&visible)
+            };
             for w in &workers {
                 if policy_mode && session.is_dead(w.id) {
                     continue;
@@ -488,7 +509,7 @@ impl Trainer {
                 w.cmd
                     .send(WorkerCmd::Round {
                         round: round as u64,
-                        params: Arc::clone(&self.params),
+                        params: Arc::clone(&frame_params),
                         spec,
                     })
                     .map_err(|_| anyhow::anyhow!("worker {} died", w.id))?;
@@ -527,8 +548,6 @@ impl Trainer {
                 // bootstrap missing): no step this round
                 RoundFold::Skipped => continue,
             };
-            // broadcast: full-precision averaged gradient (paper's setting)
-            session.record_broadcast(32.0 * self.n_params as f64);
 
             // identical optimizer step on the replicated parameters
             // (workers dropped their Arc clones before sending — see

@@ -1,0 +1,201 @@
+//! Chaos-proxy acceptance: real socket misbehavior must land in the same
+//! ledger classes the virtual [`FaultChannel`] model predicts.
+//!
+//! A byte-level proxy sits between one worker and the leader and injects
+//! two real transport faults:
+//!
+//! * **delay** — it holds one round's uplink past the leader's sweep
+//!   valve, so the leader gives up on the round (a zero-bit `Drop` entry)
+//!   and then meets the stale frame next round (a `late` entry);
+//! * **disconnect** — mid-run it tears both connections down without a
+//!   `Bye`, which the leader must bill as a first-class `Disconnect`.
+//!
+//! The twin run replays the same story through the *virtual* fault plan
+//! (`drop_at` + `delay_at` + `disconnect_at`) on the in-process harness.
+//! Byte counts legitimately differ (the virtual drop bills the message's
+//! real bits; the valve drop bills zero because no bytes ever arrived),
+//! so the contract is **class counts**: dropped, late, and disconnect
+//! entries match one-for-one.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ndq::comm::net::{
+    append_envelope, FrameAccum, FramePoll, NetAddr, NetListener, NetStream, NET_KIND_GRAD,
+};
+use ndq::comm::{FaultPlan, RoundPolicy};
+use ndq::testing::cluster::{
+    run_scenario, serve_listener, worker_connect, ClusterScenario, ServeOptions,
+};
+
+/// A collision-free socket path in the test tempdir.
+fn uds_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ndq-{}-{tag}.sock", std::process::id()))
+}
+
+const DELAY_ROUND: usize = 2;
+const DISCONNECT_ROUND: usize = 6;
+/// Must exceed the leader's sweep valve (so the delayed frame misses its
+/// round) but stay under two valves (so it lands in the *next* round).
+const PROXY_DELAY: Duration = Duration::from_secs(3);
+const VALVE: Duration = Duration::from_secs(2);
+
+/// Forward framed envelopes front -> back, delaying the `DELAY_ROUND`-th
+/// gradient and vanishing at the `DISCONNECT_ROUND`-th.
+fn uplink_shuttle(mut front: NetStream, back: NetStream) {
+    let mut accum = FrameAccum::new();
+    let mut out: Vec<u8> = Vec::new();
+    let mut grads = 0usize;
+    let mut back_w = back;
+    loop {
+        match accum.poll_frame(&mut front) {
+            Ok(FramePoll::Ready) => {
+                let is_grad = {
+                    let (kind, _) = accum.frame();
+                    kind == NET_KIND_GRAD
+                };
+                if is_grad && grads == DISCONNECT_ROUND {
+                    front.shutdown();
+                    back_w.shutdown();
+                    return;
+                }
+                if is_grad && grads == DELAY_ROUND {
+                    std::thread::sleep(PROXY_DELAY);
+                }
+                out.clear();
+                {
+                    let (kind, body) = accum.frame();
+                    append_envelope(&mut out, kind, body).expect("re-frame");
+                }
+                if back_w.write_all(&out).is_err() {
+                    return;
+                }
+                accum.consume();
+                grads += usize::from(is_grad);
+            }
+            Ok(FramePoll::Pending) => continue,
+            Ok(FramePoll::Eof) | Err(_) => {
+                back_w.shutdown();
+                return;
+            }
+        }
+    }
+}
+
+/// Copy raw downlink bytes back -> front until either side closes.
+fn downlink_shuttle(mut back: NetStream, mut front: NetStream) {
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        match back.read(&mut buf) {
+            Ok(0) => {
+                front.shutdown();
+                return;
+            }
+            Ok(n) => {
+                if front.write_all(&buf[..n]).is_err() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                front.shutdown();
+                return;
+            }
+        }
+    }
+}
+
+fn scenario(plan: FaultPlan) -> ClusterScenario {
+    ClusterScenario {
+        workers: 3,
+        n_params: 400,
+        rounds: 10,
+        policy: RoundPolicy::Quorum(2),
+        eval_every: 5,
+        plan,
+        ..ClusterScenario::default()
+    }
+}
+
+#[test]
+fn proxy_chaos_bills_like_the_virtual_fault_model() {
+    // --- the real run: leader + 2 direct workers + 1 proxied worker ----
+    let back_addr = NetAddr::Uds(uds_path("chaos-back"));
+    let listener = NetListener::bind(&back_addr).unwrap();
+    let dial_back = listener.local_addr().unwrap();
+    let front_addr = NetAddr::Uds(uds_path("chaos-front"));
+    let front_listener = NetListener::bind(&front_addr).unwrap();
+
+    let proxy = {
+        let dial_back = dial_back.clone();
+        std::thread::spawn(move || {
+            let front = front_listener.accept().expect("proxy accept");
+            let back = NetStream::connect_retry(&dial_back, Duration::from_secs(10))
+                .expect("proxy dial leader");
+            let up = {
+                let front_r = front.try_clone().expect("clone front");
+                let back_w = back.try_clone().expect("clone back");
+                std::thread::spawn(move || uplink_shuttle(front_r, back_w))
+            };
+            downlink_shuttle(back, front);
+            up.join().expect("uplink shuttle panicked");
+        })
+    };
+
+    let direct: Vec<_> = (0..2)
+        .map(|_| {
+            let dial = dial_back.clone();
+            std::thread::spawn(move || worker_connect(&dial, Duration::from_secs(10)))
+        })
+        .collect();
+    let proxied = std::thread::spawn(move || {
+        worker_connect(&front_addr, Duration::from_secs(10))
+    });
+
+    let got = serve_listener(
+        scenario(FaultPlan::new()),
+        listener,
+        ServeOptions { io_timeout: VALVE },
+    )
+    .unwrap();
+
+    for p in direct {
+        p.join().expect("worker thread panicked").unwrap();
+    }
+    // the proxied worker loses its connection mid-run: it must error out,
+    // not hang
+    assert!(proxied.join().expect("proxied worker panicked").is_err());
+    proxy.join().expect("proxy panicked");
+
+    // --- the virtual twin: same story, scripted through FaultChannel ---
+    let want = run_scenario(scenario(
+        FaultPlan::new()
+            .drop_at(0, DELAY_ROUND)
+            .delay_at(0, DELAY_ROUND + 1, 1)
+            .disconnect_at(0, DISCONNECT_ROUND),
+    ))
+    .unwrap();
+
+    // class-for-class ledger parity
+    assert_eq!(got.comm.dropped_msgs, want.comm.dropped_msgs);
+    assert_eq!(got.comm.late_msgs, want.comm.late_msgs);
+    assert_eq!(got.comm.disconnects, want.comm.disconnects);
+    assert_eq!(got.comm.dropped_msgs, 1, "valve miss bills exactly one drop");
+    assert_eq!(got.comm.late_msgs, 1, "stale frame bills exactly one late");
+    assert_eq!(got.comm.disconnects, 1);
+    // the valve drop is zero-bit: nothing arrived, nothing to bill
+    assert_eq!(got.comm.dropped_bits, 0);
+
+    // quorum absorbed all of it, on both transports
+    assert_eq!(got.rounds_failed, 0);
+    assert_eq!(want.rounds_failed, 0);
+    assert!(got.final_eval_loss.is_finite());
+    // after the disconnect every surviving round hears the two direct
+    // workers
+    assert!(got
+        .delivery
+        .iter()
+        .skip(DISCONNECT_ROUND)
+        .all(|d| d.received == 2), "{:?}", got.delivery);
+}

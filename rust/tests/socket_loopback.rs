@@ -17,7 +17,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use ndq::comm::net::{NetAddr, NetListener};
-use ndq::comm::{FaultPlan, RoundPolicy};
+use ndq::comm::{DownlinkPolicy, FaultPlan, RoundPolicy};
 use ndq::quant::{PayloadCodec, Scheme};
 use ndq::testing::cluster::{
     run_scenario, serve_listener, serve_scenario, worker_connect, ClusterScenario, ServeOptions,
@@ -120,6 +120,46 @@ fn uds_loopback_matches_under_faults_quorum_and_releveling() {
     assert_eq!(
         got.comm.total_transmitted_bits.to_bits(),
         want.comm.total_transmitted_bits.to_bits()
+    );
+}
+
+#[test]
+fn quantized_downlink_keeps_socket_parity_and_saves_bits() {
+    // the downlink lane over real sockets: workers reconstruct params
+    // from coded deltas, and the result is bit-identical to the
+    // in-process harness running the same policy — while the ledger
+    // shows strictly fewer broadcast bits than the full-precision twin
+    let sc = ClusterScenario {
+        workers: 4,
+        rounds: 15,
+        n_params: 900,
+        eval_every: 5,
+        downlink: DownlinkPolicy::DeltaQuantized(Scheme::Dithered { delta: 1.0 / 3.0 }),
+        ..ClusterScenario::default()
+    };
+    let full = ClusterScenario {
+        downlink: DownlinkPolicy::Full,
+        ..sc.clone()
+    };
+    let want = run_scenario(sc.clone()).unwrap();
+    let addr = NetAddr::Uds(uds_path("downlink"));
+    let got = serve_with_thread_workers(sc, addr).unwrap();
+    assert_eq!(
+        got.fingerprint(),
+        want.fingerprint(),
+        "socket transport moved the quantized-downlink fingerprint"
+    );
+    assert_eq!(
+        got.final_eval_loss.to_bits(),
+        want.final_eval_loss.to_bits()
+    );
+    let full_report = run_scenario(full).unwrap();
+    assert_eq!(got.comm.bcast_msgs, full_report.comm.bcast_msgs);
+    assert!(
+        got.comm.total_bcast_bits < full_report.comm.total_bcast_bits,
+        "quantized downlink must ship fewer bits: {} vs {}",
+        got.comm.total_bcast_bits,
+        full_report.comm.total_bcast_bits
     );
 }
 

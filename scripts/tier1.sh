@@ -149,21 +149,25 @@ if (( EF_AFTER - EF_BEFORE < 2 )); then
     exit 1
 fi
 
-# Socket-transport smoke: the same degraded NDQSG scenario, once through
-# `ndq cluster` (in-process) and once through `ndq serve` + N real `ndq
-# worker` processes over a Unix-domain socket. The two runs must print the
-# same fingerprint — the loopback multi-process acceptance criterion.
-echo "== ndq socket loopback smoke =="
+# Socket-transport smoke at event-loop scale: the degraded NDQSG scenario
+# with the quantized delta downlink, once through `ndq cluster`
+# (in-process) and once through `ndq serve` + 32 real `ndq worker`
+# processes over a Unix-domain socket — one leader thread serving all 32.
+# The two runs must print the same fingerprint, and the serve run appends
+# its JSON-line perf record (rounds/sec + downlink kbits/round) to the
+# repo-root BENCH_wire.json trajectory.
+echo "== ndq socket loopback smoke (32 workers, quantized downlink) =="
 SOCK="$(mktemp -u /tmp/ndq-tier1-XXXXXX.sock)"
-SCENARIO_FLAGS=(--workers 4 --rounds 15 \
+SCENARIO_FLAGS=(--workers 32 --rounds 15 \
     --scheme dqsg:0.333333 --scheme-p2 nested:0.333333:3:1.0 \
     --codec huffman --fault-plan "drop:0.15;straggle:w2x6;corrupt:w1@r3" \
-    --round-policy quorum:3)
-./target/release/ndq serve "${SCENARIO_FLAGS[@]}" \
-    --bind "uds:$SOCK" --io-timeout 60 > "$SOCK.serve.out" &
+    --round-policy quorum:20 --downlink delta-quantized:dqsg:0.333333)
+NDQ_BENCH_REV="$GIT_REV" ./target/release/ndq serve "${SCENARIO_FLAGS[@]}" \
+    --bind "uds:$SOCK" --io-timeout 60 \
+    --bench-append "$ROOT/BENCH_wire.json" > "$SOCK.serve.out" &
 SERVE_PID=$!
 WORKER_PIDS=()
-for _ in 1 2 3 4; do
+for _ in $(seq 32); do
     ./target/release/ndq worker --connect "uds:$SOCK" --timeout 60 &
     WORKER_PIDS+=($!)
 done
@@ -178,11 +182,35 @@ if [[ -z "$SERVE_FP" || "$SERVE_FP" != "$CLUSTER_FP" ]]; then
     echo "socket loopback fingerprint mismatch" >&2
     exit 1
 fi
-rm -f "$SOCK" "$SOCK.serve.out" "$SOCK.cluster.out"
 
-# Wire-path bench smoke in quick mode: perf_coding and perf_quantizers
-# always run (no artifacts needed) — their generic-vs-specialized kernel
-# rows record the before/after decode throughput in the same JSON record;
+# Downlink ledger gate: the quantized-downlink run must ship strictly
+# fewer broadcast bits than a full-precision twin of the same scenario at
+# equal rounds (same broadcast count), or the downlink lane is lying.
+echo "== downlink ledger gate (delta-quantized < full) =="
+FULL_FLAGS=("${SCENARIO_FLAGS[@]}")
+for i in "${!FULL_FLAGS[@]}"; do
+    [[ "${FULL_FLAGS[$i]}" == delta-quantized:* ]] && FULL_FLAGS[$i]="full"
+done
+./target/release/ndq cluster "${FULL_FLAGS[@]}" > "$SOCK.full.out"
+QUANT_KBIT="$(sed -n 's/.*downlink: \([0-9.]*\) Kbit total transmitted.*/\1/p' "$SOCK.serve.out")"
+FULL_KBIT="$(sed -n 's/.*downlink: \([0-9.]*\) Kbit total transmitted.*/\1/p' "$SOCK.full.out")"
+QUANT_BCASTS="$(grep -o '([0-9]* broadcasts)' "$SOCK.serve.out")"
+FULL_BCASTS="$(grep -o '([0-9]* broadcasts)' "$SOCK.full.out")"
+echo "delta-quantized: $QUANT_KBIT Kbit $QUANT_BCASTS | full: $FULL_KBIT Kbit $FULL_BCASTS"
+if [[ -z "$QUANT_BCASTS" || "$QUANT_BCASTS" != "$FULL_BCASTS" ]]; then
+    echo "downlink broadcast counts diverge: $QUANT_BCASTS vs $FULL_BCASTS" >&2
+    exit 1
+fi
+if ! awk -v q="$QUANT_KBIT" -v f="$FULL_KBIT" 'BEGIN { exit !(q + 0 < f + 0 && q + 0 > 0) }'; then
+    echo "quantized downlink ($QUANT_KBIT Kbit) not under full twin ($FULL_KBIT Kbit)" >&2
+    exit 1
+fi
+rm -f "$SOCK" "$SOCK.serve.out" "$SOCK.cluster.out" "$SOCK.full.out"
+
+# Wire-path bench smoke in quick mode: perf_coding, perf_quantizers and
+# perf_serve always run (no artifacts needed) — kernel rows record the
+# before/after decode throughput, and perf_serve's 32/64/256-worker tiers
+# record event-loop scale (rounds/sec + downlink kbits/round);
 # table2_entropy_bits self-skips when artifacts are absent. Each run's
 # results are appended to the repo-root BENCH_wire.json as one JSON-lines
 # record (the rows inside are stats::bench::to_json / save_json output),
@@ -192,14 +220,15 @@ echo "== wire bench smoke (quick mode) =="
 # stale results from an earlier run must not be re-attributed to this
 # commit when a bench self-skips (e.g. table2 without artifacts)
 rm -f target/ndq-bench/perf_coding.json target/ndq-bench/perf_quantizers.json \
-    target/ndq-bench/table2.json
+    target/ndq-bench/perf_serve.json target/ndq-bench/table2.json
 NDQ_BENCH_FAST=1 cargo bench --bench perf_coding
 NDQ_BENCH_FAST=1 cargo bench --bench perf_quantizers
+NDQ_BENCH_FAST=1 cargo bench --bench perf_serve
 NDQ_BENCH_FAST=1 cargo bench --bench table2_entropy_bits
 BENCH_TS="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
 GIT_REV="$(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
 WIRE_BEFORE="$(count_lines "$ROOT/BENCH_wire.json")"
-for f in perf_coding perf_quantizers table2; do
+for f in perf_coding perf_quantizers perf_serve table2; do
     if [[ -f "target/ndq-bench/$f.json" ]]; then
         printf '{"ts":"%s","rev":"%s","bench":"%s","results":%s}\n' \
             "$BENCH_TS" "$GIT_REV" "$f" "$(cat "target/ndq-bench/$f.json")" \
